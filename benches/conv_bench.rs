@@ -1,0 +1,174 @@
+//! Convolution benchmark — paper **Table 3** (three input/kernel configs ×
+//! {GAZELLE In_rot, GAZELLE Out_rot, CHEETAH}) and **Fig. 5** (speedup and
+//! communication vs kernel size r).
+//!
+//! Timing convention follows the paper: the measured span is the server's
+//! linear computation, from receipt of the encrypted input to the obscured
+//! (or rotated-and-summed) products being ready to send; communication is
+//! reported separately as exact serialized bytes.
+//!
+//! Run: `cargo bench --bench conv_bench [-- --sweep] [-- --paper]`
+
+use cheetah::bench_util::{time_fn, BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Layer, Network};
+use cheetah::phe::serial::ciphertext_bytes;
+use cheetah::phe::{Context, Encryptor, Evaluator, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gazelle::{conv, conv_galois_keys, ConvVariant};
+use cheetah::util::fmt_bytes;
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+
+struct Cfg {
+    name: &'static str,
+    c_i: usize,
+    hw: usize,
+    c_o: usize,
+    r: usize,
+}
+
+/// One measurement row: (gazelle_ir_ms, gazelle_or_ms, cheetah_ms, bytes).
+fn run_config(ctx: &Context, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, u64) {
+    let plan = ScalePlan::default_plan();
+    let mut rng = ChaCha20Rng::from_u64_seed(3);
+    let mut srng = SplitMix64::new(4);
+    let enc = Encryptor::new(ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+
+    let mut layer = Layer::conv(cfg.c_o, cfg.r, 1, cfg.r / 2);
+    layer.init_weights(cfg.c_i, cfg.hw, cfg.hw, &mut srng);
+
+    // ---- GAZELLE variants ----
+    let gk = conv_galois_keys(ctx, &enc.sk, cfg.r, cfg.hw, &mut rng);
+    let input_q: Vec<i64> =
+        (0..cfg.c_i * cfg.hw * cfg.hw).map(|_| srng.gen_i64_range(-128, 128)).collect();
+    let mut in_cts: Vec<_> = (0..cfg.c_i)
+        .map(|i| enc.encrypt_slots(&input_q[i * cfg.hw * cfg.hw..(i + 1) * cfg.hw * cfg.hw], &mut rng))
+        .collect();
+    for ct in in_cts.iter_mut() {
+        ev.to_ntt(ct);
+    }
+    let shape = (cfg.c_i, cfg.hw, cfg.hw);
+    let t_ir = time_fn(1, samples, || {
+        let _ = std::hint::black_box(conv(
+            &ev,
+            ConvVariant::InputRotation,
+            &in_cts,
+            &layer,
+            shape,
+            &plan,
+            1.0,
+            &gk,
+        ));
+    });
+    let t_or = time_fn(1, samples, || {
+        let _ = std::hint::black_box(conv(
+            &ev,
+            ConvVariant::OutputRotation,
+            &in_cts,
+            &layer,
+            shape,
+            &plan,
+            1.0,
+            &gk,
+        ));
+    });
+    // GAZELLE s→c bytes: c_o evaluated ciphertexts.
+    let gz_bytes = (cfg.c_o * ciphertext_bytes(&ctx.params, false)) as u64;
+
+    // ---- CHEETAH (single conv layer as a 1-step network) ----
+    let mut net = Network {
+        name: "bench".into(),
+        input_shape: shape,
+        layers: vec![Layer::conv(cfg.c_o, cfg.r, 1, cfg.r / 2)],
+    };
+    net.init_weights(5);
+    let mut runner = CheetahRunner::new(ctx, net, plan, 0.0, 6);
+    runner.run_offline();
+    let input = cheetah::nn::Tensor::from_vec(
+        (0..cfg.c_i * cfg.hw * cfg.hw).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+        cfg.c_i,
+        cfg.hw,
+        cfg.hw,
+    );
+    // Warm + measure: server_online of the conv step only.
+    let mut ch_ms = f64::MAX;
+    let mut ch_bytes = 0u64;
+    for _ in 0..samples.max(2) {
+        let rep = runner.infer(&input);
+        ch_ms = ch_ms.min(rep.steps[0].server_online.as_secs_f64() * 1e3);
+        ch_bytes = rep.steps[0].s2c_bytes;
+    }
+    (t_ir.millis(), t_or.millis(), ch_ms, gz_bytes, ch_bytes)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let params = Params::default_params();
+    let ctx = Context::new(params);
+    let samples = args.get_usize("--samples", 3);
+
+    // Paper Table 3 configs (spatial dims reduced by default so the
+    // rotation variants fit one half-row; --paper uses the printed sizes).
+    let paper = args.has("--paper");
+    let configs = if paper {
+        vec![
+            Cfg { name: "28x28@1, 5x5@5", c_i: 1, hw: 28, c_o: 5, r: 5 },
+            Cfg { name: "16x16@128, 1x1@2", c_i: 128, hw: 16, c_o: 2, r: 1 },
+            Cfg { name: "32x32@2, 3x3@1", c_i: 2, hw: 32, c_o: 1, r: 3 },
+        ]
+    } else {
+        vec![
+            Cfg { name: "28x28@1, 5x5@5", c_i: 1, hw: 28, c_o: 5, r: 5 },
+            Cfg { name: "16x16@16, 1x1@2", c_i: 16, hw: 16, c_o: 2, r: 1 },
+            Cfg { name: "32x32@2, 3x3@1", c_i: 2, hw: 32, c_o: 1, r: 3 },
+        ]
+    };
+
+    let mut t = Table::new(&[
+        "config (in, kernel)",
+        "In_rot (ms)",
+        "Out_rot (ms)",
+        "CHEETAH (ms)",
+        "speedup IR/CH",
+        "speedup OR/CH",
+        "GZ s2c",
+        "CH s2c",
+    ]);
+    for cfg in &configs {
+        let (ir, or, ch, gb, cb) = run_config(&ctx, cfg, samples);
+        t.row(&[
+            cfg.name.into(),
+            format!("{ir:.2}"),
+            format!("{or:.2}"),
+            format!("{ch:.3}"),
+            format!("{:.0}x", ir / ch),
+            format!("{:.0}x", or / ch),
+            fmt_bytes(gb),
+            fmt_bytes(cb),
+        ]);
+    }
+    t.print("Table 3 — convolution benchmark (paper: CHEETAH 66-306x faster)");
+
+    if args.has("--sweep") {
+        // Fig. 5: kernel-size sweep on the paper's three input configs.
+        let mut t = Table::new(&["config", "r", "IR (ms)", "OR (ms)", "CH (ms)", "best-GZ/CH"]);
+        for (name, c_i, hw, c_o) in
+            [("28x28@1 rxr@5", 1usize, 28usize, 5usize), ("16x16@16 rxr@2", 16, 16, 2), ("32x32@2 rxr@1", 2, 32, 1)]
+        {
+            for r in [1usize, 3, 5, 7] {
+                let cfg = Cfg { name, c_i, hw, c_o, r };
+                let (ir, or, ch, _, _) = run_config(&ctx, &cfg, 2);
+                t.row(&[
+                    name.into(),
+                    r.to_string(),
+                    format!("{ir:.2}"),
+                    format!("{or:.2}"),
+                    format!("{ch:.3}"),
+                    format!("{:.0}x", ir.min(or) / ch),
+                ]);
+            }
+        }
+        t.print("Fig. 5 — speedup vs kernel size (paper: 60-400x, growing with r)");
+    }
+}

@@ -1,0 +1,154 @@
+//! End-to-end network benchmark — paper **Table 7** (online/offline time +
+//! communication for Network A, Network B, AlexNet, VGG-16, CHEETAH vs
+//! GAZELLE) and **Fig. 8** (accumulated per-layer breakdown, `--breakdown`).
+//!
+//! Default: scaled-down AlexNet/VGG so the GAZELLE rotation path fits one
+//! half-row per channel and the bench finishes in minutes; `--paper` runs
+//! CHEETAH at full scale (GAZELLE full-scale cost is extrapolated from its
+//! measured per-op costs — see EXPERIMENTS.md).
+//!
+//! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]`
+
+use cheetah::bench_util::{BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Network, NetworkArch, SyntheticDigits, Tensor};
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gazelle::GazelleRunner;
+use cheetah::util::fmt_bytes;
+use cheetah::util::rng::SplitMix64;
+
+fn input_for(net: &Network, seed: u64) -> Tensor {
+    let (c, h, w) = net.input_shape;
+    if c == 1 && h >= 12 {
+        SyntheticDigits::new(h, seed).render(3).image
+    } else {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::from_vec((0..c * h * w).map(|_| rng.gen_f64_range(0.0, 1.0)).collect(), c, h, w)
+    }
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let paper = args.has("--paper");
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+
+    // Spatial scale factors: GAZELLE needs h·w ≤ row_size (2048) per
+    // channel; CHEETAH has no such limit.
+    // GAZELLE's packed conv needs h·w ≤ 2048 per channel and ≥1 pixel after
+    // every pool: AlexNet at 0.2 (45×45), VGG-16 at 32/224 (32×32).
+    let nets: Vec<(NetworkArch, f64, f64)> = vec![
+        // (arch, cheetah_scale, gazelle_scale)
+        (NetworkArch::NetA, 1.0, 1.0),
+        (NetworkArch::NetB, 1.0, 1.0),
+        (NetworkArch::AlexNet, if paper { 1.0 } else { 0.2 }, 0.2),
+        (NetworkArch::Vgg16, if paper { 1.0 } else { 32.0 / 224.0 }, 32.0 / 224.0),
+    ];
+
+    let mut t = Table::new(&[
+        "network",
+        "framework",
+        "online time",
+        "offline time",
+        "online comm",
+        "offline comm",
+        "speedup",
+        "#Perm",
+    ]);
+
+    for (arch, ch_scale, gz_scale) in nets {
+        // ---- CHEETAH ----
+        let net = Network::build_scaled(arch, 21, ch_scale);
+        let name = net.name.clone();
+        let input = input_for(&net, 22);
+        let mut runner = CheetahRunner::new(&ctx, net, plan, 0.05, 23);
+        let t_off0 = std::time::Instant::now();
+        runner.server.refresh_blinding();
+        let ch_offline_time = t_off0.elapsed();
+        let ch_offline_bytes = runner.run_offline();
+        let rep = runner.infer(&input);
+        let ch_online = rep.online_total();
+
+        // ---- GAZELLE (skip full-scale big nets; see header) ----
+        let gz_net = Network::build_scaled(arch, 21, gz_scale);
+        let gz_name = gz_net.name.clone();
+        let gz_input = input_for(&gz_net, 22);
+        let t_gz_off = std::time::Instant::now();
+        let mut gz = GazelleRunner::new(&ctx, gz_net, plan, 24);
+        let gz_offline_time = t_gz_off.elapsed();
+        let gz_rep = gz.infer(&gz_input);
+        let gz_online = gz_rep.online_compute() + gz_rep.gc.garble_time; // garble counted offline by GAZELLE; keep separate below
+        let gz_online_compute = gz_rep.online_compute();
+
+        let scale_note = if (ch_scale - gz_scale).abs() > 1e-9 {
+            format!(" [GZ @ {gz_name}]")
+        } else {
+            String::new()
+        };
+        let _ = gz_online;
+        t.row(&[
+            format!("{name}{scale_note}"),
+            "GAZELLE".into(),
+            format!("{:.0} ms", gz_online_compute.as_secs_f64() * 1e3),
+            format!(
+                "{:.0} ms (+garble {:.0} ms)",
+                gz_offline_time.as_secs_f64() * 1e3,
+                gz_rep.gc.garble_time.as_secs_f64() * 1e3
+            ),
+            fmt_bytes(gz_rep.online_bytes),
+            fmt_bytes(gz_rep.offline_bytes),
+            String::new(),
+            gz_rep.ops.perm.to_string(),
+        ]);
+        t.row(&[
+            name.clone(),
+            "CHEETAH".into(),
+            format!("{:.0} ms", ch_online.as_secs_f64() * 1e3),
+            format!("{:.0} ms", ch_offline_time.as_secs_f64() * 1e3),
+            fmt_bytes(rep.online_bytes()),
+            fmt_bytes(ch_offline_bytes),
+            format!(
+                "{:.0}x",
+                gz_online_compute.as_secs_f64() / ch_online.as_secs_f64().max(1e-9)
+            ),
+            rep.total_ops().perm.to_string(),
+        ]);
+
+        if args.has("--breakdown") && arch == NetworkArch::Vgg16 {
+            let mut bt = Table::new(&[
+                "layer",
+                "CH server (ms)",
+                "CH client (ms)",
+                "CH cumul (ms)",
+                "CH cumul bytes",
+                "GZ cumul (ms)",
+            ]);
+            let mut cum = 0.0f64;
+            let mut cum_b = 0u64;
+            let mut gz_cum = 0.0f64;
+            for (i, s) in rep.steps.iter().enumerate() {
+                cum += (s.server_online + s.client_time).as_secs_f64() * 1e3;
+                cum_b += s.c2s_bytes + s.s2c_bytes;
+                gz_cum += gz_rep
+                    .per_step
+                    .get(i)
+                    .map(|d| d.as_secs_f64() * 1e3)
+                    .unwrap_or(0.0);
+                bt.row(&[
+                    s.name.clone(),
+                    format!("{:.1}", s.server_online.as_secs_f64() * 1e3),
+                    format!("{:.1}", s.client_time.as_secs_f64() * 1e3),
+                    format!("{cum:.1}"),
+                    fmt_bytes(cum_b),
+                    format!("{gz_cum:.1}"),
+                ]);
+            }
+            bt.print("Fig. 8 — VGG-16 accumulated per-layer cost");
+        }
+    }
+
+    t.print(
+        "Table 7 — end-to-end networks (paper: CHEETAH 218x/334x/130x/140x over GAZELLE)",
+    );
+}

@@ -1,0 +1,118 @@
+//! Fully-connected benchmark — paper **Table 4** (matrix-vector product,
+//! five shapes, with #Perm/#Mult/#Add) and **Table 5** (communication).
+//!
+//! Run: `cargo bench --bench fc_bench`
+
+use cheetah::bench_util::{time_fn, BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Layer, Network};
+use cheetah::phe::serial::ciphertext_bytes;
+use cheetah::phe::{Context, Encryptor, Evaluator, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gazelle::{fc, fc_galois_keys, pack_fc_input, FcMethod};
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let samples = args.get_usize("--samples", 5);
+
+    let shapes: [(usize, usize); 5] = [(1, 2048), (2, 1024), (4, 512), (8, 256), (16, 128)];
+
+    let mut t4 = Table::new(&[
+        "n_o x n_i",
+        "method",
+        "#Perm",
+        "#Mult",
+        "#Add",
+        "time (ms)",
+        "speedup",
+    ]);
+    let mut t5 = Table::new(&["n_o x n_i", "GAZELLE (KB)", "CHEETAH (KB)"]);
+
+    for (n_o, n_i) in shapes {
+        let mut rng = ChaCha20Rng::from_u64_seed(7);
+        let mut srng = SplitMix64::new(8);
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let mut layer = Layer::fc(n_o);
+        layer.init_weights(1, 1, n_i, &mut srng);
+        let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
+        let x_q: Vec<i64> = (0..n_i).map(|_| srng.gen_i64_range(-128, 128)).collect();
+
+        // GAZELLE hybrid.
+        let packed = pack_fc_input(&ctx, &x_q, FcMethod::Hybrid);
+        let mut ct = enc.encrypt_slots(&packed, &mut rng);
+        ev.to_ntt(&mut ct);
+        ev.reset_counts();
+        let (outs, _) = fc(&ev, FcMethod::Hybrid, &ct, &layer, n_i, &plan, 1.0, &gk);
+        let gz_counts = ev.counts();
+        let gz_out_cts = outs.len();
+        let t_gz = time_fn(1, samples, || {
+            let _ =
+                std::hint::black_box(fc(&ev, FcMethod::Hybrid, &ct, &layer, n_i, &plan, 1.0, &gk));
+        });
+
+        // CHEETAH single FC step.
+        let mut net = Network {
+            name: "fc".into(),
+            input_shape: (1, 1, n_i),
+            layers: vec![Layer::fc(n_o)],
+        };
+        net.init_weights(9);
+        let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 10);
+        runner.run_offline();
+        let input = cheetah::nn::Tensor::from_flat(
+            (0..n_i).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+        );
+        let mut ch_ms = f64::MAX;
+        let mut ch_ops = Default::default();
+        let mut ch_s2c = 0u64;
+        for _ in 0..samples {
+            let rep = runner.infer(&input);
+            ch_ms = ch_ms.min(rep.steps[0].server_online.as_secs_f64() * 1e3);
+            ch_ops = rep.steps[0].server_ops;
+            ch_s2c = rep.steps[0].s2c_bytes;
+        }
+
+        let label = format!("{n_o}x{n_i}");
+        t4.row(&[
+            label.clone(),
+            "GAZELLE".into(),
+            gz_counts.perm.to_string(),
+            gz_counts.mult.to_string(),
+            gz_counts.add.to_string(),
+            format!("{:.3}", t_gz.millis()),
+            String::new(),
+        ]);
+        t4.row(&[
+            label.clone(),
+            "CHEETAH".into(),
+            ch_ops.perm.to_string(),
+            ch_ops.mult.to_string(),
+            ch_ops.add.to_string(),
+            format!("{ch_ms:.3}"),
+            format!("{:.0}x", t_gz.millis() / ch_ms),
+        ]);
+
+        // Table 5: total online comm for the layer *including the
+        // nonlinearity* (as the paper does): GAZELLE pays GC label/OT
+        // traffic per output, CHEETAH one recovery ciphertext.
+        let gc = cheetah::gc::GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
+        let gc_online_per_relu = 2 * gc.ell * 16 + gc.ell * (16 + 32) + gc.ell.div_ceil(8);
+        let gz_kb = ((ciphertext_bytes(&ctx.params, true)
+            + gz_out_cts * ciphertext_bytes(&ctx.params, false)
+            + n_o * gc_online_per_relu) as f64)
+            / 1024.0;
+        let ch_kb = (ciphertext_bytes(&ctx.params, true)
+            .saturating_mul((n_i * n_o).div_ceil(ctx.params.n))
+            + ch_s2c as usize
+            + ciphertext_bytes(&ctx.params, false)) as f64
+            / 1024.0;
+        t5.row(&[label, format!("{gz_kb:.1}"), format!("{ch_kb:.1}")]);
+    }
+
+    t4.print("Table 4 — matrix-vector product (paper: CHEETAH 294-422x, 0 Perm, 1 Mult)");
+    t5.print("Table 5 — FC communication (paper: CHEETAH 143.1 KB flat; GAZELLE grows with n_o)");
+}

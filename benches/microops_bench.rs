@@ -1,0 +1,80 @@
+//! Micro-op benchmark: the paper's §2.3/§3.1 claim that one `Perm` costs
+//! ~56 `Add`s and ~34 `Mult`s — the observation motivating CHEETAH.
+//!
+//! Run: `cargo bench --bench microops_bench [-- --big-ring]`
+
+use cheetah::bench_util::{time_adaptive, BenchArgs, Table};
+use cheetah::phe::{Context, Encryptor, Evaluator, GaloisKeys, Params};
+use cheetah::util::rng::ChaCha20Rng;
+use std::time::Duration;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let params = if args.has("--big-ring") { Params::big_ring() } else { Params::default_params() };
+    let ctx = Context::new(params);
+    let mut rng = ChaCha20Rng::from_u64_seed(1);
+    let enc = Encryptor::new(&ctx, &mut rng);
+    let ev = Evaluator::new(&ctx);
+    let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+
+    let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 251 - 125).collect();
+    let mut ct_a = enc.encrypt_slots(&vals, &mut rng);
+    let mut ct_b = enc.encrypt_slots(&vals, &mut rng);
+    ev.to_ntt(&mut ct_a);
+    ev.to_ntt(&mut ct_b);
+    let mult_op = ctx.mult_operand(&vals);
+    let add_op = ctx.add_operand(&vals);
+
+    let budget = Duration::from_millis(400);
+    let t_add = time_adaptive(budget, 20_000, || {
+        let _ = std::hint::black_box(ev.add(&ct_a, &ct_b));
+    });
+    let t_add_plain = time_adaptive(budget, 20_000, || {
+        let mut c = ct_a.clone();
+        ev.add_plain(&mut c, &add_op);
+        std::hint::black_box(c);
+    });
+    let t_mult = time_adaptive(budget, 20_000, || {
+        let _ = std::hint::black_box(ev.mult_plain(&ct_a, &mult_op));
+    });
+    let t_perm = time_adaptive(budget, 2_000, || {
+        let _ = std::hint::black_box(ev.rotate_rows(&ct_a, 1, &gk));
+    });
+    let t_dec = time_adaptive(budget, 5_000, || {
+        let _ = std::hint::black_box(enc.decrypt(&ct_a));
+    });
+    let t_enc = time_adaptive(budget, 5_000, || {
+        let mut r = ChaCha20Rng::from_u64_seed(7);
+        let _ = std::hint::black_box(enc.encrypt_slots(&vals, &mut r));
+    });
+
+    let mut t = Table::new(&["op", "median", "samples", "x Add", "paper says"]);
+    let base = t_add.median.as_secs_f64();
+    let rows = [
+        ("Add (ct+ct)", t_add, "1x"),
+        ("AddPlain", t_add_plain, "-"),
+        ("MultPlain", t_mult, "Perm ~ 34x Mult"),
+        ("Perm (rotate+keyswitch)", t_perm, "Perm ~ 56x Add"),
+        ("Decrypt", t_dec, "-"),
+        ("Encrypt", t_enc, "-"),
+    ];
+    for (name, m, note) in rows {
+        t.row(&[
+            name.into(),
+            cheetah::util::fmt_duration(m.median),
+            m.samples.to_string(),
+            format!("{:.1}x", m.median.as_secs_f64() / base),
+            note.into(),
+        ]);
+    }
+    t.print(&format!(
+        "Micro-ops (paper §2.3 claim) — n={}, q≈2^{}",
+        ctx.params.n,
+        ctx.params.q_bits(),
+    ));
+    println!(
+        "\nmeasured: Perm/Add = {:.1}, Perm/Mult = {:.1}  (paper: 56, 34)",
+        t_perm.median.as_secs_f64() / t_add.median.as_secs_f64(),
+        t_perm.median.as_secs_f64() / t_mult.median.as_secs_f64()
+    );
+}

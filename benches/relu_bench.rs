@@ -1,0 +1,169 @@
+//! ReLU benchmark — paper **Table 6** (GC-based GAZELLE vs CHEETAH's
+//! obscure-HE nonlinearity at 1 000 / 10 000 outputs) and **Fig. 6**
+//! (speedup + communication vs output dimension); `--vgg-relu` reproduces
+//! the §5.1 claim (~263 s for a 3.2 M-element GC ReLU) by measurement +
+//! linear extrapolation.
+//!
+//! Run: `cargo bench --bench relu_bench [-- --sweep] [-- --vgg-relu]`
+
+use cheetah::bench_util::{BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::gc::GcRelu;
+use cheetah::phe::{Context, Params};
+use cheetah::util::fmt_bytes;
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+
+/// GC ReLU cost for `dim` elements: (online_ms, garble_ms, online_bytes,
+/// offline_bytes). Large dims are measured on a subsample and scaled
+/// linearly (GC cost is exactly per-element).
+fn gc_cost(relu: &GcRelu, dim: usize, p: u64) -> (f64, f64, u64, u64) {
+    let measure = dim.min(2000);
+    let mut rng = ChaCha20Rng::from_u64_seed(11);
+    let mut srng = SplitMix64::new(12);
+    let sg: Vec<u64> = (0..measure).map(|_| srng.gen_range(p)).collect();
+    let se: Vec<u64> = (0..measure).map(|_| srng.gen_range(p)).collect();
+    let (_, _, rep) = relu.run_batch(&sg, &se, &mut rng);
+    let scale = dim as f64 / measure as f64;
+    (
+        rep.eval_time.as_secs_f64() * 1e3 * scale,
+        rep.garble_time.as_secs_f64() * 1e3 * scale,
+        (rep.online_bytes as f64 * scale) as u64,
+        (rep.offline_bytes as f64 * scale) as u64,
+    )
+}
+
+/// CHEETAH nonlinear cost for `dim` outputs, measured exactly as the paper
+/// defines it (§5.1): given the already-summed scrambled values `y`, the
+/// client computes the polar-indicator recovery — 2 `MultPlain` + 1 `Add`
+/// per output-indexed ciphertext under the server's key — plus the fresh
+/// share subtraction; one-way communication of the recovery ciphertexts.
+/// (Decrypt + block-sum is part of the *linear* benchmark, Table 3/4.)
+fn cheetah_cost(ctx: &Context, dim: usize) -> (f64, u64) {
+    use cheetah::bench_util::time_fn;
+    use cheetah::phe::serial::ciphertext_bytes;
+    use cheetah::phe::{Encryptor, Evaluator};
+    use cheetah::protocol::cheetah::blinding::{client_y_pair, Blind};
+
+    let plan = ScalePlan::default_plan();
+    let mut rng = ChaCha20Rng::from_u64_seed(21);
+    let mut srng = SplitMix64::new(22);
+    let server_enc = Encryptor::new(ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let n = ctx.params.n;
+    let p = ctx.params.p;
+    let n_cts = dim.div_ceil(n);
+
+    // Offline: the server's indicator ciphertexts for `dim` outputs.
+    let mut id1_cts = Vec::new();
+    let mut id2_cts = Vec::new();
+    let blinds: Vec<Blind> = (0..dim).map(|_| Blind::sample(&mut rng)).collect();
+    for c in 0..n_cts {
+        let lo = c * n;
+        let hi = ((c + 1) * n).min(dim);
+        let id1: Vec<i64> = blinds[lo..hi].iter().map(|b| b.indicator(&plan).0).collect();
+        let id2: Vec<i64> = blinds[lo..hi].iter().map(|b| b.indicator(&plan).1).collect();
+        let mut c1 = server_enc.encrypt_slots(&id1, &mut rng);
+        let mut c2 = server_enc.encrypt_slots(&id2, &mut rng);
+        ev.to_ntt(&mut c1);
+        ev.to_ntt(&mut c2);
+        id1_cts.push(c1);
+        id2_cts.push(c2);
+    }
+
+    // The client's scrambled block sums (product scale).
+    let sums: Vec<i64> =
+        (0..dim).map(|_| srng.gen_i64_range(-(1 << 20), 1 << 20)).collect();
+
+    let mut out_rng = ChaCha20Rng::from_u64_seed(23);
+    let m = time_fn(1, 3, || {
+        for c in 0..n_cts {
+            let lo = c * n;
+            let hi = ((c + 1) * n).min(dim);
+            let mut y_req = vec![0i64; hi - lo];
+            let mut relu_y = vec![0i64; hi - lo];
+            for (i, &s) in sums[lo..hi].iter().enumerate() {
+                let (a, b) = client_y_pair(s, &plan);
+                y_req[i] = a;
+                relu_y[i] = b;
+            }
+            let op_y = ctx.mult_operand(&y_req);
+            let op_r = ctx.mult_operand(&relu_y);
+            let mut rec = ev.mult_plain(&id1_cts[c], &op_y);
+            let rec2 = ev.mult_plain(&id2_cts[c], &op_r);
+            ev.add_assign(&mut rec, &rec2);
+            let neg_s1: Vec<u64> = (0..hi - lo).map(|_| out_rng.gen_range(p)).collect();
+            ev.add_plain(&mut rec, &ctx.add_operand_unsigned(&neg_s1));
+            std::hint::black_box(rec);
+        }
+    });
+    let bytes = (n_cts * ciphertext_bytes(&ctx.params, false)) as u64;
+    (m.millis(), bytes)
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let ctx = Context::new(Params::default_params());
+    let relu = GcRelu::new(ctx.params.p, ScalePlan::default_plan().k.frac_bits as usize);
+
+    let mut t = Table::new(&[
+        "output dim",
+        "method",
+        "online (ms)",
+        "offline/garble (ms)",
+        "online bytes",
+        "speedup",
+    ]);
+    for dim in [1000usize, 10000] {
+        let (gc_on, gc_off, gc_ob, _) = gc_cost(&relu, dim, ctx.params.p);
+        let (ch_on, ch_b) = cheetah_cost(&ctx, dim);
+        t.row(&[
+            dim.to_string(),
+            "GAZELLE (GC)".into(),
+            format!("{gc_on:.1}"),
+            format!("{gc_off:.1}"),
+            fmt_bytes(gc_ob),
+            String::new(),
+        ]);
+        t.row(&[
+            dim.to_string(),
+            "CHEETAH".into(),
+            format!("{ch_on:.2}"),
+            "0 (2 fresh ID cts)".into(),
+            fmt_bytes(ch_b),
+            format!("{:.0}x", gc_on / ch_on),
+        ]);
+    }
+    t.print("Table 6 — ReLU online cost (paper: 267x @1k, 1793x @10k)");
+
+    if args.has("--sweep") {
+        let mut t = Table::new(&["dim", "GC online (ms)", "CH online (ms)", "speedup", "GC bytes", "CH bytes"]);
+        for dim in [100usize, 1000, 10_000, 100_000] {
+            let (gc_on, _, gc_ob, _) = gc_cost(&relu, dim, ctx.params.p);
+            let (ch_on, ch_b) = cheetah_cost(&ctx, dim.min(20_000));
+            t.row(&[
+                dim.to_string(),
+                format!("{gc_on:.1}"),
+                format!("{ch_on:.2}"),
+                format!("{:.0}x", gc_on / ch_on),
+                fmt_bytes(gc_ob),
+                fmt_bytes(ch_b),
+            ]);
+        }
+        t.print("Fig. 6 — ReLU speedup & comm vs output dimension");
+    }
+
+    if args.has("--vgg-relu") {
+        // §5.1: "GC takes about 263 seconds to compute a ReLU with 3.2M
+        // inputs" — measure 2k, extrapolate linearly (exact for GC).
+        let dim = 3_200_000usize;
+        let (gc_on, gc_off, gc_ob, gc_fb) = gc_cost(&relu, dim, ctx.params.p);
+        println!(
+            "\n§5.1 VGG ReLU (3.2M elements): GC online {:.1} s (+ garble {:.1} s offline), \
+             online {} offline {}   [paper: ~263 s]",
+            gc_on / 1e3,
+            gc_off / 1e3,
+            fmt_bytes(gc_ob),
+            fmt_bytes(gc_fb)
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Print the paper's analytic tables (Table 1 lineage, Table 2 op-count
+//! complexity) — the fast, no-crypto companion to the measured benches.
+//!
+//! Run: `cargo run --release --example paper_tables`
+
+use cheetah::complexity::{print_table1, print_table2, ConvShape, FcShape};
+
+fn main() {
+    print_table1();
+    // The paper's §3.1 SISO example shape and the Table-4 FC shape.
+    print_table2(
+        ConvShape { c_i: 1, c_o: 5, r: 5, hw: 28 * 28, n: 4096 },
+        FcShape { n_i: 2048, n_o: 1, n: 4096 },
+    );
+    // A VGG-16-interior shape, showing the gap at practical scale.
+    print_table2(
+        ConvShape { c_i: 256, c_o: 256, r: 3, hw: 28 * 28, n: 4096 },
+        FcShape { n_i: 4096, n_o: 1000, n: 4096 },
+    );
+}

@@ -1,0 +1,46 @@
+//! Quickstart: private inference on a 2-layer CNN in ~40 lines.
+//!
+//! The client's digit never leaves its side unencrypted; the server's
+//! weights never leave its side at all; and the linear layers use **zero**
+//! ciphertext permutations (the paper's contribution).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+
+fn main() {
+    // Shared public parameters (ring degree, moduli, fixed-point plan).
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+
+    // The server's model: Network A (1 conv + 2 FC, the paper's §5.2).
+    // Seeded random weights — this example demonstrates the protocol;
+    // `examples/private_digits.rs` runs the trained model.
+    let net = Network::build(NetworkArch::NetA, 7);
+    println!("model: {} ({} params, random weights)", net.name, net.num_params());
+
+    // Both parties (in-process here; examples/serve_mlaas.rs splits them
+    // over TCP). ε = 0.1 is the paper's safe obscuring-noise bound.
+    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.1, 42);
+    let offline_bytes = runner.run_offline();
+    println!("offline: {} of indicator ciphertexts shipped", cheetah::util::fmt_bytes(offline_bytes));
+
+    // The client's private digit.
+    let sample = SyntheticDigits::new(28, 99).render(5);
+    println!("client's secret input: a handwritten '{}'", sample.label);
+
+    let report = runner.infer(&sample.image);
+    println!(
+        "\nprediction: {}   (online: {} compute + {} wire, {} transferred, {} Perms)",
+        report.argmax,
+        cheetah::util::fmt_duration(report.online_compute()),
+        cheetah::util::fmt_duration(report.wire_time),
+        cheetah::util::fmt_bytes(report.online_bytes()),
+        report.total_ops().perm,
+    );
+    assert_eq!(report.total_ops().perm, 0, "CHEETAH is permutation-free");
+    println!("logits: {:?}", report.logits.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
+}

@@ -1,0 +1,93 @@
+//! End-to-end MLaaS serving driver (the repository's E2E validation run;
+//! see EXPERIMENTS.md): starts the coordinator's TCP server hosting the
+//! *trained* Network A, fires concurrent client load at it, and reports
+//! latency percentiles + throughput; then runs the same queries through
+//! the private CHEETAH path and reports the privacy overhead.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_mlaas [-- N_REQS N_CLIENTS]`
+
+use cheetah::coordinator::{BatchPolicy, Client, Server};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::SyntheticDigits;
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::runtime::load_trained_network;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n_reqs: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(200);
+    let n_clients: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(8);
+
+    let net = load_trained_network("artifacts", "netA")?;
+    println!("serving {} on TCP with dynamic batching...", net.name);
+    let server = Server::serve(net, "127.0.0.1:0", BatchPolicy::default())?;
+    let addr = server.addr;
+
+    // ---- plaintext serving path: concurrent clients over TCP ----
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut gen = SyntheticDigits::new(28, 1000 + c as u64);
+            let mut correct = 0usize;
+            let per_client = n_reqs / n_clients;
+            for s in gen.batch(per_client) {
+                let (argmax, _) = client.infer(&s.image.data).unwrap();
+                correct += (argmax == s.label) as usize;
+            }
+            client.bye().unwrap();
+            (correct, per_client)
+        }));
+    }
+    let mut correct = 0;
+    let mut total = 0;
+    for h in handles {
+        let (c, t) = h.join().unwrap();
+        correct += c;
+        total += t;
+    }
+    let wall = t0.elapsed();
+    let s = server.metrics.summary();
+    println!(
+        "\nplaintext path: {total} requests / {n_clients} clients in {:.2}s \
+         → {:.0} req/s, accuracy {correct}/{total}",
+        wall.as_secs_f64(),
+        total as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "latency p50={} p95={} p99={}  (batches: {} @ mean {:.1})",
+        cheetah::util::fmt_duration(s.p50),
+        cheetah::util::fmt_duration(s.p95),
+        cheetah::util::fmt_duration(s.p99),
+        s.batches,
+        s.mean_batch
+    );
+    server.shutdown();
+
+    // ---- private path: same model through CHEETAH ----
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let net = load_trained_network("artifacts", "netA")?;
+    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.1, 9);
+    runner.run_offline();
+    let n_priv = 10.min(n_reqs);
+    let mut gen = SyntheticDigits::new(28, 31337);
+    let t1 = Instant::now();
+    let mut priv_correct = 0;
+    for s in gen.batch(n_priv) {
+        let rep = runner.infer(&s.image);
+        priv_correct += (rep.argmax == s.label) as usize;
+    }
+    let priv_wall = t1.elapsed();
+    println!(
+        "\nprivate (CHEETAH) path: {n_priv} queries in {:.2}s → {:.1} req/s, accuracy {priv_correct}/{n_priv}",
+        priv_wall.as_secs_f64(),
+        n_priv as f64 / priv_wall.as_secs_f64()
+    );
+    println!(
+        "privacy overhead vs plaintext serving: {:.0}x latency",
+        (priv_wall.as_secs_f64() / n_priv as f64) / (wall.as_secs_f64() / total as f64)
+    );
+    Ok(())
+}

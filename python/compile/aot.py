@@ -1,0 +1,109 @@
+"""AOT compile path: train the benchmark networks, lower the L2 graphs
+(with L1 Pallas kernels inlined) to HLO **text**, and write everything to
+``artifacts/``. Runs once at build time (``make artifacts``); Python is
+never on the request path.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version the Rust ``xla`` crate binds) rejects; the text parser
+reassigns ids. See /opt/xla-example/README.md.
+
+Artifacts:
+  netA_noisy.hlo.txt / netB_noisy.hlo.txt — Fig. 7 accuracy path:
+      fn(images f32[B,1,S,S], key u32[2], eps f32[]) -> logits f32[B,10]
+      with trained weights baked in as constants.
+  netA_weights.bin / netB_weights.bin — trained weights (f32 LE, concat),
+      consumed by the Rust serving path (examples/serve_mlaas).
+  obscure_dot.hlo.txt — the L1 block-sum kernel as a standalone module
+      (int32 (1024, 32) → (1024,)), cross-checked by the Rust runtime.
+  relu_recover.hlo.txt — the L1 recovery kernel ((1024,)×3 → (1024,)).
+  manifest.txt — shapes + training metrics for every artifact.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.obscure import obscure_dot, relu_recover
+from .model import ARCHS, forward_noisy, train
+
+BATCH = 32
+SIZE = 28
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_net(arch: str, params, out_dir: str, manifest):
+    def fn(x, key, eps):
+        return (forward_noisy(arch, params, x, key, eps, use_pallas=True),)
+
+    x_spec = jax.ShapeDtypeStruct((BATCH, 1, SIZE, SIZE), jnp.float32)
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    eps_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, key_spec, eps_spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{arch}_noisy.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"{arch}_noisy.hlo.txt inputs=f32[{BATCH},1,{SIZE},{SIZE}],u32[2],f32[] outputs=f32[{BATCH},10]")
+
+    # Raw weights for the Rust serving path.
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).reshape(-1) for p in params])
+    wpath = os.path.join(out_dir, f"{arch}_weights.bin")
+    flat.tofile(wpath)
+    shapes = ";".join("x".join(str(d) for d in p.shape) for p in params)
+    manifest.append(f"{arch}_weights.bin f32le shapes={shapes}")
+
+
+def export_kernels(out_dir: str, manifest):
+    # obscure_dot: (1024, 32) int32 → (1024,)
+    spec = jax.ShapeDtypeStruct((1024, 32), jnp.int32)
+    lowered = jax.jit(lambda p: (obscure_dot(p),)).lower(spec)
+    with open(os.path.join(out_dir, "obscure_dot.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append("obscure_dot.hlo.txt inputs=i32[1024,32] outputs=i32[1024]")
+
+    vspec = jax.ShapeDtypeStruct((1024,), jnp.int32)
+    lowered = jax.jit(lambda y, a, b: (relu_recover(y, a, b),)).lower(vspec, vspec, vspec)
+    with open(os.path.join(out_dir, "relu_recover.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest.append("relu_recover.hlo.txt inputs=i32[1024]x3 outputs=i32[1024]")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    manifest = []
+
+    export_kernels(args.out, manifest)
+    print("kernels exported", flush=True)
+
+    for arch in ARCHS:
+        params, train_acc, test_acc = train(arch, SIZE, steps=args.steps)
+        print(f"{arch}: train_acc={train_acc:.3f} test_acc={test_acc:.3f}", flush=True)
+        if test_acc < 0.8:
+            print(f"WARNING: {arch} test accuracy below 0.8", file=sys.stderr)
+        manifest.append(f"{arch} train_acc={train_acc:.4f} test_acc={test_acc:.4f}")
+        export_net(arch, params, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {len(manifest)} artifact entries to {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Synthetic-digits corpus — a faithful Python port of
+``rust/src/nn/dataset.rs`` (same 5×7 glyph font, same jitter model, same
+SplitMix64 generator) so the JAX-trained weights see the same distribution
+the Rust evaluation pipeline renders.
+"""
+
+import numpy as np
+
+FONT = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110],
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110],
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111],
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110],
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010],
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110],
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110],
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000],
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110],
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100],
+]
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Bit-exact port of rust/src/util/rng.rs::SplitMix64."""
+
+    def __init__(self, seed: int):
+        self.state = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def next_f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def gen_range_f64(self, lo: float, hi: float) -> float:
+        return lo + self.next_f64() * (hi - lo)
+
+
+def render(size: int, label: int, rng: SplitMix64) -> np.ndarray:
+    """Render one digit; mirrors SyntheticDigits::render exactly."""
+    glyph = FONT[label]
+    scale = size * 0.6 / 7.0
+    margin = size * 0.06
+    ox = rng.gen_range_f64(-margin, margin) + size * 0.25
+    oy = rng.gen_range_f64(-margin, margin) + size * 0.15
+    amp = rng.gen_range_f64(0.75, 1.0)
+    noise_lvl = rng.gen_range_f64(0.02, 0.08)
+    img = np.zeros((size, size), dtype=np.float64)
+    for y in range(size):
+        for x in range(size):
+            gy = (y - oy) / scale
+            gx = (x - ox) / (scale * 5.0 / 7.0 * 1.4)
+            v = 0.0
+            if 0.0 <= gy < 7.0 and 0.0 <= gx < 5.0:
+                row = glyph[int(gy)]
+                bit = 4 - int(gx)
+                if (row >> bit) & 1:
+                    v = amp
+            v += rng.gen_range_f64(-noise_lvl, noise_lvl)
+            img[y, x] = min(max(v, 0.0), 1.0)
+    return img
+
+
+def batch(size: int, count: int, seed: int):
+    """Balanced batch (round-robin labels), mirroring SyntheticDigits::batch."""
+    rng = SplitMix64(seed)
+    xs = np.zeros((count, 1, size, size), dtype=np.float32)
+    ys = np.zeros((count,), dtype=np.int32)
+    for i in range(count):
+        label = i % 10
+        xs[i, 0] = render(size, label, rng)
+        ys[i] = label
+    return xs, ys

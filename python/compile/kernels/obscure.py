@@ -1,0 +1,77 @@
+"""L1 Pallas kernels for CHEETAH's client-side hot loops.
+
+Two kernels, both lowered with ``interpret=True`` (CPU PJRT cannot run
+Mosaic custom-calls; see /opt/xla-example/README.md):
+
+* ``obscure_dot`` — the per-block reduction of the decrypted obscured
+  products: given the slot stream ``prods = x' ∘ k' ∘ v + b`` reshaped to
+  ``(n_blocks, block)``, produce the block sums ``y[i] = Σ_t prods[i, t]``.
+  This is the plaintext sum that replaces GAZELLE's rotate-and-sum
+  (paper §3.1 step 3) and the exact mirror of the Rust client's
+  ``block_sums`` hot loop.
+
+* ``relu_recover`` — the polar-indicator recovery (paper Eq. 6):
+  ``out = id1 ∘ y + id2 ∘ relu(y)`` over requantized ``y``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the grid walks blocks of
+rows so each (TILE_B × block) tile sits in VMEM; the reduction maps onto
+the VPU lanes. ``block`` is padded to the 128-lane boundary by the caller.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows of the (n_blocks, block) matrix handled per grid step.
+TILE_B = 256
+
+
+def _obscure_dot_kernel(prods_ref, out_ref):
+    """Sum each row of a (TILE_B, block) tile."""
+    out_ref[...] = jnp.sum(prods_ref[...], axis=1)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def obscure_dot(prods, interpret=True):
+    """Block sums: prods (n_blocks, block) int32/float32 → (n_blocks,).
+
+    n_blocks must be a multiple of TILE_B (callers pad; aot.py exports the
+    padded shape).
+    """
+    n_blocks, block = prods.shape
+    assert n_blocks % TILE_B == 0, f"n_blocks {n_blocks} % {TILE_B} != 0"
+    grid = (n_blocks // TILE_B,)
+    return pl.pallas_call(
+        _obscure_dot_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_B, block), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks,), prods.dtype),
+        interpret=interpret,
+    )(prods)
+
+
+def _relu_recover_kernel(y_ref, id1_ref, id2_ref, out_ref):
+    """Polar-indicator recovery on one tile (Eq. 6)."""
+    y = y_ref[...]
+    relu_y = jnp.maximum(y, 0)
+    out_ref[...] = id1_ref[...] * y + id2_ref[...] * relu_y
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def relu_recover(y, id1, id2, interpret=True):
+    """Recovery: all inputs (n,), n a multiple of TILE_B·... (padded)."""
+    (n,) = y.shape
+    assert n % TILE_B == 0
+    grid = (n // TILE_B,)
+    spec = pl.BlockSpec((TILE_B,), lambda i: (i,))
+    return pl.pallas_call(
+        _relu_recover_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), y.dtype),
+        interpret=interpret,
+    )(y, id1, id2)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the L1 Pallas kernels (the correctness pins).
+
+These are the definitions; the Pallas kernels must match them bit-for-bit
+on integer inputs (hypothesis sweeps shapes/dtypes in python/tests), and
+the Rust client's hot loops must match them on golden vectors.
+"""
+
+import jax.numpy as jnp
+
+
+def obscure_dot_ref(prods):
+    """Block sums of the decrypted obscured products (paper §3.1 step 3)."""
+    return jnp.sum(prods, axis=1)
+
+
+def relu_recover_ref(y, id1, id2):
+    """Polar-indicator recovery (paper Eq. 6): ID1∘y + ID2∘ReLU(y)."""
+    return id1 * y + id2 * jnp.maximum(y, 0)
+
+
+def client_y_pair_ref(y_sum, shift, clamp):
+    """Requantize the block sums to the y-scale and clamp (mirror of the
+    Rust ``client_y_pair``): round-half-up shift then clamp."""
+    half = 1 << (shift - 1)
+    y = (y_sum + half) >> shift
+    y = jnp.clip(y, -clamp, clamp)
+    return y, jnp.maximum(y, 0)

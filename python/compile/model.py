@@ -1,0 +1,235 @@
+"""L2 — JAX forward/backward graphs of the benchmark networks.
+
+Two forward paths:
+
+* ``forward_float`` — plain float inference (training & reference),
+* ``forward_noisy`` — the paper's Fig. 7 experiment: quantized weights and
+  activations per the Rust ``ScalePlan`` (x: 2^7, k: 2^6) with uniform
+  noise ``δ ~ U[-ε, ε]`` added to every linear output and the CHEETAH
+  requantization applied after every ReLU. The block-sum and recovery
+  hot-spots route through the L1 Pallas kernels so the whole stack lowers
+  into one HLO module.
+
+Training is a tiny SGD-with-momentum loop on the synthetic-digits corpus;
+``aot.py`` runs it at build time and bakes the weights into the exported
+HLO as constants (the Rust runtime only feeds images + noise keys).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.obscure import relu_recover
+from .kernels.ref import relu_recover_ref
+
+# Mirrors rust/src/fixed/mod.rs ScalePlan::default_plan().
+X_SCALE = 2.0**7
+K_SCALE = 2.0**6
+Y_SCALE = 2.0**6
+X_MAX = 2.0
+Y_MAX = 3.0
+
+# Network A (DeepSecure): conv 5×5@5/s2 + fc100 + fc10.
+# Network B (MiniONN): conv 5×5@16 + pool + conv 5×5@16 + pool + fc100 + fc10.
+ARCHS = {
+    "netA": {
+        "conv": [(5, 5, 2, 2)],  # (out_ch, kernel, stride, pad)
+        "fc": [100, 10],
+        "pool_after_conv": [False],
+    },
+    "netB": {
+        "conv": [(16, 5, 1, 2), (16, 5, 1, 2)],
+        "fc": [100, 10],
+        "pool_after_conv": [True, True],
+    },
+}
+
+
+def init_params(arch: str, size: int, key):
+    cfg = ARCHS[arch]
+    params = []
+    c_in, h, w = 1, size, size
+    for (c_out, k, stride, pad), pool in zip(cfg["conv"], cfg["pool_after_conv"]):
+        key, sub = jax.random.split(key)
+        fan_in = c_in * k * k
+        wconv = jax.random.uniform(
+            sub, (c_out, c_in, k, k), minval=-1.0, maxval=1.0
+        ) * np.sqrt(2.0 / fan_in)
+        params.append(wconv)
+        h = (h + 2 * pad - k) // stride + 1
+        w = (w + 2 * pad - k) // stride + 1
+        if pool:
+            h //= 2
+            w //= 2
+        c_in = c_out
+    n_in = c_in * h * w
+    for n_out in cfg["fc"]:
+        key, sub = jax.random.split(key)
+        wfc = jax.random.uniform(sub, (n_out, n_in), minval=-1.0, maxval=1.0) * np.sqrt(
+            2.0 / n_in
+        )
+        params.append(wfc)
+        n_in = n_out
+    return params
+
+
+def _conv(x, w, stride, pad):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), [(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def _mean_pool(x):
+    return jax.lax.reduce_window(
+        x, 0.0, jax.lax.add, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+    ) / 4.0
+
+
+def forward_float(arch: str, params, x):
+    """Plain float forward pass: x (B,1,H,W) → logits (B,10)."""
+    cfg = ARCHS[arch]
+    i = 0
+    for (_, _, stride, pad), pool in zip(cfg["conv"], cfg["pool_after_conv"]):
+        x = jax.nn.relu(_conv(x, params[i], stride, pad))
+        if pool:
+            x = _mean_pool(x)
+        i += 1
+    x = x.reshape(x.shape[0], -1)
+    for j, _n_out in enumerate(cfg["fc"]):
+        x = x @ params[i].T
+        if j + 1 < len(cfg["fc"]):
+            x = jax.nn.relu(x)
+        i += 1
+    return x
+
+
+def _quant(v, scale, vmax):
+    return jnp.round(jnp.clip(v, -vmax, vmax) * scale) / scale
+
+
+def _relu_requant(pre, key, eps, use_pallas):
+    """ReLU with the paper's δ-noise and CHEETAH's two-step requantization
+    (linear-output scale → y-scale → activation scale), with the recovery
+    arithmetic routed through the L1 kernel."""
+    noise = jax.random.uniform(key, pre.shape, minval=-eps, maxval=eps)
+    noisy = pre + noise
+    # y at Y_SCALE, clamped at ±Y_MAX (the client's view, v=1 w.l.o.g. —
+    # blinds are exact powers of two so they cancel bit-for-bit).
+    y = jnp.round(jnp.clip(noisy, -Y_MAX, Y_MAX) * Y_SCALE)
+    flat = y.reshape(-1)
+    pad = (-flat.shape[0]) % 256
+    flat = jnp.pad(flat, (0, pad))
+    id1 = jnp.zeros_like(flat)
+    id2 = jnp.ones_like(flat)  # v=+1 → (ID1, ID2) = (0, 1)
+    rec = (
+        relu_recover(flat, id1, id2)
+        if use_pallas
+        else relu_recover_ref(flat, id1, id2)
+    )
+    rec = rec[: y.size].reshape(y.shape)
+    # Back to activation scale, clamped to the representable range.
+    return jnp.clip(rec / Y_SCALE, 0.0, X_MAX)
+
+
+def forward_noisy(arch: str, params, x, key, eps, use_pallas=True):
+    """Quantized + δ-noised forward pass (the Fig. 7 measurement path)."""
+    cfg = ARCHS[arch]
+    qp = [_quant(p, K_SCALE, X_MAX) for p in params]
+    x = _quant(x, X_SCALE, X_MAX)
+    i = 0
+    for (_, _, stride, pad), pool in zip(cfg["conv"], cfg["pool_after_conv"]):
+        key, sub = jax.random.split(key)
+        pre = _conv(x, qp[i], stride, pad)
+        x = _relu_requant(pre, sub, eps, use_pallas)
+        if pool:
+            x = _mean_pool(x)
+        x = _quant(x, X_SCALE, X_MAX)
+        i += 1
+    x = x.reshape(x.shape[0], -1)
+    for j, _n_out in enumerate(cfg["fc"]):
+        key, sub = jax.random.split(key)
+        pre = x @ qp[i].T
+        if j + 1 < len(cfg["fc"]):
+            x = _quant(_relu_requant(pre, sub, eps, use_pallas), X_SCALE, X_MAX)
+        else:
+            noise = jax.random.uniform(sub, pre.shape, minval=-eps, maxval=eps)
+            x = pre + noise
+        i += 1
+    return x
+
+
+@partial(jax.jit, static_argnames=("arch",))
+def _loss(arch, params, x, y):
+    logits = forward_float(arch, params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(logp[jnp.arange(y.shape[0]), y])
+
+
+def train(arch: str, size: int, steps: int = 300, batch_size: int = 256, seed: int = 0):
+    """SGD-with-momentum training on synthetic digits. Returns (params,
+    train-accuracy, test-accuracy)."""
+    from . import digits
+
+    key = jax.random.PRNGKey(seed)
+    params = init_params(arch, size, key)
+    xs, ys = digits.batch(size, batch_size * 4, seed=1000 + seed)
+    xt, yt = digits.batch(size, 500, seed=2000 + seed)
+    xs_j, ys_j = jnp.asarray(xs), jnp.asarray(ys)
+
+    grad_fn = jax.jit(jax.grad(_loss, argnums=1), static_argnames=("arch",))
+    momentum = [jnp.zeros_like(p) for p in params]
+    lr, beta = 0.08, 0.9
+    n = xs.shape[0]
+    for step in range(steps):
+        lo = (step * batch_size) % n
+        xb = xs_j[lo : lo + batch_size]
+        yb = ys_j[lo : lo + batch_size]
+        grads = grad_fn(arch, params, xb, yb)
+        momentum = [beta * m + g for m, g in zip(momentum, grads)]
+        params = [p - lr * m for p, m in zip(params, momentum)]
+
+    def acc(xv, yv):
+        logits = forward_float(arch, params, jnp.asarray(xv))
+        return float(jnp.mean(jnp.argmax(logits, axis=1) == jnp.asarray(yv)))
+
+    params = equalize(arch, params, jnp.asarray(xt[:64]))
+    return params, acc(xs, ys), acc(xt, yt)
+
+
+def equalize(arch: str, params, calib_x, target: float = 1.2):
+    """Activation equalization: rescale each hidden layer so calibration
+    activations stay within `target` (the protocol's clamp-safe range,
+    X_MAX·y_max margins) and push the inverse factor into the next layer —
+    function-preserving by ReLU positive homogeneity (the final logits get
+    one uniform positive factor; argmax unchanged). Mirrors
+    `runtime::equalize_activations` on the Rust side."""
+    cfg = ARCHS[arch]
+    params = [p for p in params]
+    n_linear = len(cfg["conv"]) + len(cfg["fc"])
+    for i in range(n_linear - 1):
+        # Forward through layers 0..=i.
+        x = calib_x
+        j = 0
+        for (_, _, stride, pad), pool in zip(cfg["conv"], cfg["pool_after_conv"]):
+            if j > i:
+                break
+            x = jax.nn.relu(_conv(x, params[j], stride, pad))
+            if pool:
+                x = _mean_pool(x)
+            j += 1
+        if j <= i:
+            x = x.reshape(x.shape[0], -1)
+            while j <= i:
+                x = jax.nn.relu(x @ params[j].T)
+                j += 1
+        m = float(jnp.max(jnp.abs(x)))
+        if m > 0:
+            # Normalize up as well as down: small activations waste
+            # fixed-point resolution (quantization SNR), large ones clamp.
+            s = target / m
+            params[i] = params[i] * s
+            params[i + 1] = params[i + 1] / s
+    return params

@@ -1,0 +1,93 @@
+"""L1 kernel correctness: Pallas (interpret mode) vs the pure-jnp oracle,
+swept over shapes/dtypes/values with hypothesis. This is the CORE
+correctness signal for the compile path."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.obscure import TILE_B, obscure_dot, relu_recover
+from compile.kernels.ref import client_y_pair_ref, obscure_dot_ref, relu_recover_ref
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([8, 25, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dtype=st.sampled_from([np.int32, np.float32]),
+)
+def test_obscure_dot_matches_ref(tiles, block, seed, dtype):
+    rng = np.random.default_rng(seed)
+    n_blocks = tiles * TILE_B
+    if dtype == np.int32:
+        prods = rng.integers(-(2**20), 2**20, size=(n_blocks, block), dtype=np.int64).astype(dtype)
+    else:
+        prods = rng.uniform(-8.0, 8.0, size=(n_blocks, block)).astype(dtype)
+    got = obscure_dot(jnp.asarray(prods))
+    want = obscure_dot_ref(jnp.asarray(prods))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tiles=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    dtype=st.sampled_from([np.int32, np.float32]),
+)
+def test_relu_recover_matches_ref(tiles, seed, dtype):
+    rng = np.random.default_rng(seed)
+    n = tiles * TILE_B
+    if dtype == np.int32:
+        y = rng.integers(-192, 193, size=n, dtype=np.int64).astype(dtype)
+        id1 = rng.choice([0, 2, 4, -2, -4], size=n).astype(dtype)
+        id2 = rng.choice([1, 2, 4, -1, -2, -4], size=n).astype(dtype)
+    else:
+        y = rng.uniform(-3.0, 3.0, size=n).astype(dtype)
+        id1 = rng.uniform(-2.0, 2.0, size=n).astype(dtype)
+        id2 = rng.uniform(-2.0, 2.0, size=n).astype(dtype)
+    got = relu_recover(jnp.asarray(y), jnp.asarray(id1), jnp.asarray(id2))
+    want = relu_recover_ref(jnp.asarray(y), jnp.asarray(id1), jnp.asarray(id2))
+    if dtype == np.int32:
+        # Integer path (the protocol's) must be bit-exact.
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        # Float path may differ by a few ulp (mul-add fusion order).
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_recovery_all_sign_cases():
+    """Paper Eq. 7: recovery equals ReLU(Con+δ) in all four sign cases —
+    golden mirror of the Rust blinding tests (v = ±2^j, exact)."""
+    # (s, j) → v1 = s·2^j at scale 2^4, v2 = s·2^-j at scale 2^1.
+    for s in (1, -1):
+        for j in (-1, 0, 1):
+            for con_times_64 in (80, -80, 0, 1):  # y-scale (2^6) integers
+                v1 = s * (2.0**j)
+                y = np.array([con_times_64 * v1], dtype=np.float32)
+                if s > 0:
+                    id1, id2 = 0.0, 1.0 / v1
+                else:
+                    id1, id2 = 1.0 / v1, -1.0 / v1
+                pad = 256
+                yv = jnp.zeros(pad, jnp.float32).at[0].set(y[0])
+                a = jnp.full(pad, id1, jnp.float32)
+                b = jnp.full(pad, id2, jnp.float32)
+                rec = np.asarray(relu_recover(yv, a, b))[0]
+                want = max(con_times_64, 0)
+                assert rec == pytest.approx(want), f"s={s} j={j} con={con_times_64}"
+
+
+def test_client_y_pair_ref_matches_rust_semantics():
+    """Round-half-up shift + clamp, mirroring rust client_y_pair
+    (shift = x+k+v−y = 11, clamp = y_max·2^y = 192)."""
+    sums = jnp.array([0, 1 << 11, (1 << 11) + (1 << 10), -(1 << 11), 10_000_000], dtype=jnp.int64)
+    y, relu_y = client_y_pair_ref(sums, 11, 192)
+    np.testing.assert_array_equal(np.asarray(y), [0, 1, 2, -1, 192])
+    np.testing.assert_array_equal(np.asarray(relu_y), [0, 1, 2, 0, 192])
+
+
+def test_obscure_dot_rejects_ragged():
+    with pytest.raises(AssertionError):
+        obscure_dot(jnp.zeros((100, 8), jnp.int32))  # not a TILE_B multiple

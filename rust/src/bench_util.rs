@@ -1,0 +1,166 @@
+//! Benchmark harness (the offline registry has no `criterion`; see
+//! DESIGN.md). Provides warmed-up median-of-N timing with MAD spread, and
+//! fixed-width table printing used by every `benches/*` target so the output
+//! mirrors the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// Median over samples.
+    pub median: Duration,
+    /// Median absolute deviation (robust spread).
+    pub mad: Duration,
+    /// Number of samples taken.
+    pub samples: usize,
+}
+
+impl Measurement {
+    pub fn millis(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+    pub fn micros(&self) -> f64 {
+        self.median.as_secs_f64() * 1e6
+    }
+}
+
+/// Time `f` with `warmup` unrecorded runs then `samples` recorded runs;
+/// returns the median and MAD. `f` should include only the work under test.
+pub fn time_fn<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort();
+    Measurement { median, mad: devs[devs.len() / 2], samples: times.len() }
+}
+
+/// Adaptive timing: keep sampling until at least `min_total` wall time or
+/// `max_samples` samples, whichever first (for very fast or very slow ops).
+pub fn time_adaptive<F: FnMut()>(min_total: Duration, max_samples: usize, mut f: F) -> Measurement {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < min_total && times.len() < max_samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    if times.is_empty() {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let median = times[times.len() / 2];
+    let mut devs: Vec<Duration> = times
+        .iter()
+        .map(|&t| if t > median { t - median } else { median - t })
+        .collect();
+    devs.sort();
+    Measurement { median, mad: devs[devs.len() / 2], samples: times.len() }
+}
+
+/// Fixed-width table printer for bench output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self, title: &str) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        println!("\n{title}");
+        println!("{}", "=".repeat(total.min(120)));
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                line.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(total.min(120)));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+}
+
+/// Parse simple `--flag value` / `--flag` CLI args for bench binaries.
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        Self { args: std::env::args().skip(1).collect() }
+    }
+    pub fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.args.iter().position(|a| a == flag).and_then(|i| self.args.get(i + 1)).map(|s| s.as_str())
+    }
+    pub fn get_usize(&self, flag: &str, default: usize) -> usize {
+        self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, flag: &str, default: f64) -> f64 {
+        self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_positive() {
+        let m = time_fn(1, 5, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(m.median.as_nanos() > 0);
+        assert_eq!(m.samples, 5);
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        t.print("test table"); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,148 @@
+//! Dynamic request batcher: collects inference requests until the batch is
+//! full or the linger timer fires, then hands the batch to a scorer — the
+//! standard MLaaS serving pattern (vLLM-style continuous batching,
+//! simplified to fixed windows since CNN inference has no autoregressive
+//! state).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One queued request: input image (flattened) + reply channel.
+pub struct Request {
+    pub input: Vec<f64>,
+    pub enqueued: Instant,
+    pub reply: Sender<Response>,
+}
+
+/// Scored response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub logits: Vec<f64>,
+    pub argmax: usize,
+    pub latency: Duration,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub linger: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 16, linger: Duration::from_millis(2) }
+    }
+}
+
+/// The batcher queue handle (clone to submit from many threads).
+#[derive(Clone)]
+pub struct BatcherHandle {
+    tx: Sender<Request>,
+}
+
+impl BatcherHandle {
+    /// Submit an input and wait for its response.
+    pub fn infer_blocking(&self, input: Vec<f64>) -> Response {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), reply: tx })
+            .expect("batcher gone");
+        rx.recv().expect("batcher dropped reply")
+    }
+}
+
+/// Run the batching loop on the current thread until the handle side hangs
+/// up. `score` maps a batch of inputs to per-input logits.
+pub fn run_batcher<F>(
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+    metrics: Arc<crate::coordinator::metrics::Metrics>,
+    mut score: F,
+) where
+    F: FnMut(&[Vec<f64>]) -> Vec<Vec<f64>>,
+{
+    loop {
+        // Block for the first request of a batch.
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + policy.linger;
+        while batch.len() < policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(_) => break,
+            }
+        }
+        metrics.record_batch(batch.len());
+        let inputs: Vec<Vec<f64>> = batch.iter().map(|r| r.input.clone()).collect();
+        let outputs = score(&inputs);
+        for (req, logits) in batch.into_iter().zip(outputs) {
+            let latency = req.enqueued.elapsed();
+            metrics.record_request(latency);
+            let argmax = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let _ = req.reply.send(Response { logits, argmax, latency });
+        }
+    }
+}
+
+/// Spawn a batcher on a background thread; returns the submit handle.
+pub fn spawn_batcher<F>(
+    policy: BatchPolicy,
+    metrics: Arc<crate::coordinator::metrics::Metrics>,
+    score: F,
+) -> BatcherHandle
+where
+    F: FnMut(&[Vec<f64>]) -> Vec<Vec<f64>> + Send + 'static,
+{
+    let (tx, rx) = channel();
+    std::thread::spawn(move || run_batcher(rx, policy, metrics, score));
+    BatcherHandle { tx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::Metrics;
+
+    #[test]
+    fn batches_and_replies() {
+        let metrics = Arc::new(Metrics::new());
+        let handle = spawn_batcher(
+            BatchPolicy { max_batch: 4, linger: Duration::from_millis(5) },
+            metrics.clone(),
+            |batch| {
+                batch
+                    .iter()
+                    .map(|x| vec![x.iter().sum::<f64>(), 0.0])
+                    .collect()
+            },
+        );
+        let mut threads = Vec::new();
+        for i in 0..8 {
+            let h = handle.clone();
+            threads.push(std::thread::spawn(move || h.infer_blocking(vec![i as f64; 3])));
+        }
+        for (i, t) in threads.into_iter().enumerate() {
+            let resp = t.join().unwrap();
+            assert_eq!(resp.logits[0], (i as f64) * 3.0);
+            assert_eq!(resp.argmax, if i == 0 { 1 } else { 0 });
+        }
+        let s = metrics.summary();
+        assert_eq!(s.requests, 8);
+        assert!(s.batches >= 2, "expected batching, got {} batches", s.batches);
+        assert!(s.mean_batch > 1.0, "no batching happened");
+    }
+}

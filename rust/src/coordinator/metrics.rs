@@ -1,0 +1,98 @@
+//! Serving metrics: latency percentiles and throughput counters.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// A concurrent latency/throughput recorder.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    latencies_us: Vec<u64>,
+    requests: u64,
+    batches: u64,
+    batch_sizes: u64,
+}
+
+/// A point-in-time summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Summary {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.latencies_us.push(latency.as_micros() as u64);
+        g.requests += 1;
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        g.batch_sizes += size as u64;
+    }
+
+    pub fn summary(&self) -> Summary {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pick = |q: f64| -> Duration {
+            if lat.is_empty() {
+                return Duration::ZERO;
+            }
+            let idx = ((lat.len() as f64 - 1.0) * q).round() as usize;
+            Duration::from_micros(lat[idx])
+        };
+        Summary {
+            requests: g.requests,
+            batches: g.batches,
+            mean_batch: if g.batches > 0 { g.batch_sizes as f64 / g.batches as f64 } else { 0.0 },
+            p50: pick(0.50),
+            p95: pick(0.95),
+            p99: pick(0.99),
+            max: pick(1.0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record_request(Duration::from_micros(i * 100));
+        }
+        m.record_batch(4);
+        m.record_batch(8);
+        let s = m.summary();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.mean_batch, 6.0);
+        assert!(s.p50 >= Duration::from_micros(4900) && s.p50 <= Duration::from_micros(5200));
+        assert_eq!(s.max, Duration::from_micros(10000));
+        assert!(s.p99 >= s.p95 && s.p95 >= s.p50);
+    }
+
+    #[test]
+    fn empty_summary_is_zero() {
+        let s = Metrics::new().summary();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99, Duration::ZERO);
+    }
+}

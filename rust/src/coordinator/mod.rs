@@ -1,0 +1,20 @@
+//! The MLaaS coordinator — the serving layer around the private-inference
+//! protocols (paper Fig. 1: client → cloud service hosting the model).
+//!
+//! * [`batcher`] — dynamic request batching (max-batch + linger window),
+//! * [`server`] — framed TCP serving of trained models with per-session
+//!   threads and live metrics,
+//! * [`metrics`] — latency percentiles / throughput counters.
+//!
+//! Two serving paths share this infrastructure: the *plaintext* scorer
+//! (trusted-cloud baseline; runs the PJRT artifacts or the native forward
+//! pass) and the *private* CHEETAH path (`examples/serve_mlaas.rs` drives
+//! both and reports the privacy overhead).
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{BatchPolicy, BatcherHandle, Response};
+pub use metrics::{Metrics, Summary};
+pub use server::{Client, Server};

@@ -1,0 +1,196 @@
+//! The MLaaS TCP server: hosts trained models (from `artifacts/`), routes
+//! framed requests into the dynamic batcher, and reports serving metrics.
+//!
+//! Wire protocol (length-prefixed frames, `transport::write_frame`):
+//! * `0x01` INFER  — payload: f64-LE image pixels → reply `0x81` with
+//!   `argmax (u32)` + logits (f64-LE).
+//! * `0x02` STATS  — reply `0x82` with a text summary.
+//! * `0x03` BYE    — close the session.
+
+use super::batcher::{spawn_batcher, BatcherHandle, BatchPolicy};
+use super::metrics::Metrics;
+use crate::nn::{Network, Tensor};
+use crate::protocol::transport::{read_frame, write_frame};
+use std::io::Write as _;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+pub const TAG_INFER: u8 = 0x01;
+pub const TAG_STATS: u8 = 0x02;
+pub const TAG_BYE: u8 = 0x03;
+pub const TAG_INFER_OK: u8 = 0x81;
+pub const TAG_STATS_OK: u8 = 0x82;
+
+/// A running server handle.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    pub metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    pub sessions: Arc<AtomicU64>,
+}
+
+impl Server {
+    /// Serve `net` (plaintext scoring path) on `addr` with the given batch
+    /// policy; returns once the listener is bound (serving continues on
+    /// background threads).
+    pub fn serve(net: Network, addr: &str, policy: BatchPolicy) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions = Arc::new(AtomicU64::new(0));
+
+        let shape = net.input_shape;
+        let scorer_net = net;
+        let handle = spawn_batcher(policy, metrics.clone(), move |batch| {
+            batch
+                .iter()
+                .map(|flat| {
+                    let t = Tensor::from_vec(flat.clone(), shape.0, shape.1, shape.2);
+                    scorer_net.forward(&t).data
+                })
+                .collect()
+        });
+
+        {
+            let stop = stop.clone();
+            let metrics = metrics.clone();
+            let sessions = sessions.clone();
+            std::thread::spawn(move || {
+                listener.set_nonblocking(true).ok();
+                loop {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            sessions.fetch_add(1, Ordering::Relaxed);
+                            let h = handle.clone();
+                            let m = metrics.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_session(stream, h, m);
+                            });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(1));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            });
+        }
+        Ok(Server { addr: local, metrics, stop, sessions })
+    }
+
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+fn handle_session(
+    mut stream: TcpStream,
+    batcher: BatcherHandle,
+    metrics: Arc<Metrics>,
+) -> std::io::Result<()> {
+    loop {
+        let (tag, payload) = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // peer hung up
+        };
+        match tag {
+            TAG_INFER => {
+                let pixels: Vec<f64> = payload
+                    .chunks_exact(8)
+                    .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                let resp = batcher.infer_blocking(pixels);
+                let mut out = Vec::with_capacity(4 + resp.logits.len() * 8);
+                out.extend_from_slice(&(resp.argmax as u32).to_le_bytes());
+                for l in &resp.logits {
+                    out.extend_from_slice(&l.to_le_bytes());
+                }
+                write_frame(&mut stream, TAG_INFER_OK, &out)?;
+            }
+            TAG_STATS => {
+                let s = metrics.summary();
+                let text = format!(
+                    "requests={} batches={} mean_batch={:.2} p50={:?} p95={:?} p99={:?}",
+                    s.requests, s.batches, s.mean_batch, s.p50, s.p95, s.p99
+                );
+                write_frame(&mut stream, TAG_STATS_OK, text.as_bytes())?;
+            }
+            TAG_BYE => {
+                stream.flush()?;
+                return Ok(());
+            }
+            other => {
+                eprintln!("unknown frame tag {other}");
+                return Ok(());
+            }
+        }
+    }
+}
+
+/// A minimal blocking client for the serving protocol.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Self> {
+        Ok(Self { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn infer(&mut self, pixels: &[f64]) -> std::io::Result<(usize, Vec<f64>)> {
+        let mut payload = Vec::with_capacity(pixels.len() * 8);
+        for p in pixels {
+            payload.extend_from_slice(&p.to_le_bytes());
+        }
+        write_frame(&mut self.stream, TAG_INFER, &payload)?;
+        let (tag, resp) = read_frame(&mut self.stream)?;
+        assert_eq!(tag, TAG_INFER_OK);
+        let argmax = u32::from_le_bytes(resp[..4].try_into().unwrap()) as usize;
+        let logits =
+            resp[4..].chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok((argmax, logits))
+    }
+
+    pub fn stats(&mut self) -> std::io::Result<String> {
+        write_frame(&mut self.stream, TAG_STATS, &[])?;
+        let (tag, resp) = read_frame(&mut self.stream)?;
+        assert_eq!(tag, TAG_STATS_OK);
+        Ok(String::from_utf8_lossy(&resp).into_owned())
+    }
+
+    pub fn bye(&mut self) -> std::io::Result<()> {
+        write_frame(&mut self.stream, TAG_BYE, &[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{NetworkArch, SyntheticDigits};
+
+    #[test]
+    fn serve_and_query_over_tcp() {
+        let net = Network::build(NetworkArch::NetA, 5);
+        let reference = net.clone();
+        let server = Server::serve(net, "127.0.0.1:0", BatchPolicy::default()).unwrap();
+
+        let mut gen = SyntheticDigits::new(28, 17);
+        let mut client = Client::connect(&server.addr).unwrap();
+        for s in gen.batch(6) {
+            let (argmax, logits) = client.infer(&s.image.data).unwrap();
+            let want = reference.forward(&s.image);
+            assert_eq!(argmax, want.argmax());
+            assert_eq!(logits.len(), 10);
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.contains("requests=6"), "{stats}");
+        client.bye().unwrap();
+        server.shutdown();
+        assert!(server.metrics.summary().requests >= 6);
+    }
+}

@@ -1,0 +1,213 @@
+//! Fixed-point encoding and the per-layer scale budget.
+//!
+//! Neural-network values are reals; the PHE plaintext space is `Z_p`
+//! (signed, centered: `±(p−1)/2`). The paper (§2.3) quantizes to 8-bit
+//! signed fixed point and relies on SEAL's encoder "without data overflow";
+//! this module makes that budget explicit and machine-checked.
+//!
+//! ## The scale budget (default `p` ≈ 2^23, signed range ±2^22)
+//!
+//! | quantity                    | scale (frac bits) | max |val| | max int |
+//! |-----------------------------|-------------------|-----------|---------|
+//! | activation / input `x`      | 2^7               | 2.0       | 2^8     |
+//! | weight `k`                  | 2^6               | 2.0       | 2^7     |
+//! | blinding `v` (±{½,1,2})     | 2^4               | 2.0       | 2^5     |
+//! | multiplier `k·v`            | 2^10              | 4.0       | 2^12    |
+//! | element product `x·k·v`     | 2^17              | 8.0       | 2^20    |
+//! | additive noise share `b`    | 2^17              | 8.0       | 2^20    |
+//! | client re-encoded `y`       | 2^6               | 3.0       | 192     |
+//! | indicator `1/v` (`ID2`)     | 2^1               | 2.0       | 4       |
+//! | recovered activation        | 2^7               | 6.0       | 768     |
+//!
+//! Every product stays below ±2^22, so slot arithmetic never wraps except
+//! where the protocol *wants* mod-p wrapping (uniform additive shares).
+//! The block **sums** happen client-side in `i64` after decryption, so they
+//! are unconstrained by `p`.
+//!
+//! **Exactness of the blinding:** the multiplicative blind is drawn as
+//! `v₁ = ±2^j, j ∈ {-1,0,1}` so its inverse `v₂ = ±2^{-j}` is *exactly*
+//! representable in fixed point and `v₁·v₂ = 1` holds with no rounding —
+//! preserving the paper's approximation-free claim (a continuous
+//! `v ∈ ±[0.5,2)` would need a rounded reciprocal and contaminate every
+//! activation by ~1%). The hiding strength is the same as the paper's: the
+//! scrambled magnitude `|y| = |v₁|·|Con+δ|` reveals `|Con+δ|` only up to a
+//! 4× factor, and the sign is hidden by the random sign of `v₁`; the
+//! additive noise δ provides the rest (paper §3.1, Fig. 7).
+
+/// Fixed-point scale: values are represented as `round(x * 2^frac_bits)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Scale {
+    pub frac_bits: u32,
+}
+
+impl Scale {
+    pub const fn new(frac_bits: u32) -> Self {
+        Self { frac_bits }
+    }
+
+    #[inline]
+    pub fn factor(&self) -> f64 {
+        (1u64 << self.frac_bits) as f64
+    }
+
+    /// Quantize a real to this scale.
+    #[inline]
+    pub fn quantize(&self, x: f64) -> i64 {
+        (x * self.factor()).round() as i64
+    }
+
+    /// Dequantize an integer at this scale.
+    #[inline]
+    pub fn dequantize(&self, v: i64) -> f64 {
+        v as f64 / self.factor()
+    }
+
+    /// The scale of a product of two quantities.
+    pub fn mul(&self, other: Scale) -> Scale {
+        Scale::new(self.frac_bits + other.frac_bits)
+    }
+}
+
+/// The protocol-wide scale plan (see module docs). One instance is shared
+/// by client and server; it is public model metadata, not a secret.
+#[derive(Clone, Copy, Debug)]
+pub struct ScalePlan {
+    /// Activations and inputs.
+    pub x: Scale,
+    /// Weights.
+    pub k: Scale,
+    /// Multiplicative blinding factors `v`.
+    pub v: Scale,
+    /// Client's re-encoded post-sum value `y` (the `f_R(y)` multiplier).
+    pub y: Scale,
+    /// Indicator entries (`v2 = 1/v1`).
+    pub id: Scale,
+    /// Max absolute activation value (clamped by quantization).
+    pub x_max: f64,
+    /// Max absolute weight value.
+    pub k_max: f64,
+    /// Clamp bound for the scrambled value `y` (values above it saturate;
+    /// the effective activation clamp is `y_max/|v|` ∈ [y_max/2, 2·y_max]).
+    pub y_max: f64,
+}
+
+impl ScalePlan {
+    /// The default plan matching the table in the module docs.
+    pub fn default_plan() -> Self {
+        Self {
+            x: Scale::new(7),
+            k: Scale::new(6),
+            v: Scale::new(4),
+            y: Scale::new(6),
+            id: Scale::new(1),
+            x_max: 2.0,
+            k_max: 2.0,
+            y_max: 3.0,
+        }
+    }
+
+    /// Scale of the encrypted element-wise product `x·k·v` (and of `b`).
+    pub fn product(&self) -> Scale {
+        self.x.mul(self.k).mul(self.v)
+    }
+
+    /// Scale of the recovered activation `y · id = f(Con+δ)`.
+    pub fn activation_out(&self) -> Scale {
+        self.y.mul(self.id)
+    }
+
+    /// Verify the plan fits a plaintext modulus `p`: every intermediate must
+    /// stay within the signed slot range. Returns the worst-case headroom in
+    /// bits (panics if negative).
+    pub fn check_fits(&self, p: u64) -> f64 {
+        let half = ((p - 1) / 2) as f64;
+        let prod_max = self.x_max * self.k_max * 2.0 * self.product().factor();
+        // product + additive noise share b (same magnitude bound)
+        let linear_max = 2.0 * prod_max;
+        let y_int_max = self.y_max * self.y.factor();
+        let recov_max = self.y_max * 2.0 * self.activation_out().factor();
+        let worst = linear_max.max(y_int_max).max(recov_max);
+        assert!(
+            worst <= half,
+            "scale plan overflows plaintext space: worst {worst} > {half}"
+        );
+        (half / worst).log2()
+    }
+
+    /// Quantize an activation (clamping to `x_max`).
+    pub fn quant_x(&self, x: f64) -> i64 {
+        self.x.quantize(x.clamp(-self.x_max, self.x_max))
+    }
+
+    /// Quantize a weight (clamping to `k_max`).
+    pub fn quant_k(&self, k: f64) -> i64 {
+        self.k.quantize(k.clamp(-self.k_max, self.k_max))
+    }
+}
+
+/// Quantize a float slice to signed integers at scale `s` with clamping
+/// (the paper's §2.3 quantization step).
+pub fn quantize_vec(values: &[f64], s: Scale, max_abs: f64) -> Vec<i64> {
+    values.iter().map(|&x| s.quantize(x.clamp(-max_abs, max_abs))).collect()
+}
+
+/// Dequantize back to floats.
+pub fn dequantize_vec(values: &[i64], s: Scale) -> Vec<f64> {
+    values.iter().map(|&v| s.dequantize(v)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_roundtrip() {
+        let s = Scale::new(8);
+        for x in [0.0, 1.5, -0.75, 1.99] {
+            let q = s.quantize(x);
+            assert!((s.dequantize(q) - x).abs() < 1.0 / 256.0);
+        }
+    }
+
+    #[test]
+    fn default_plan_fits_default_p() {
+        let p = crate::phe::Params::default_params().p;
+        let plan = ScalePlan::default_plan();
+        let headroom = plan.check_fits(p);
+        assert!(headroom >= 0.9, "want ~1 bit headroom, got {headroom}");
+    }
+
+    #[test]
+    #[should_panic(expected = "overflows plaintext space")]
+    fn plan_rejects_tiny_p() {
+        let plan = ScalePlan::default_plan();
+        plan.check_fits(1 << 16);
+    }
+
+    #[test]
+    fn product_scales_compose() {
+        let plan = ScalePlan::default_plan();
+        assert_eq!(plan.product().frac_bits, 7 + 6 + 4);
+        assert_eq!(plan.activation_out().frac_bits, 7);
+        // Activation-out scale must equal the activation-in scale so layers
+        // chain without rescaling ciphertexts.
+        assert_eq!(plan.activation_out(), plan.x);
+    }
+
+    #[test]
+    fn quantize_clamps() {
+        let plan = ScalePlan::default_plan();
+        assert_eq!(plan.quant_x(100.0), plan.quant_x(2.0));
+        assert_eq!(plan.quant_k(-100.0), plan.quant_k(-2.0));
+    }
+
+    #[test]
+    fn vec_helpers() {
+        let s = Scale::new(6);
+        let v = vec![0.5, -1.25, 3.0];
+        let q = quantize_vec(&v, s, 2.0);
+        assert_eq!(q, vec![32, -80, 128]); // 3.0 clamped to 2.0
+        let d = dequantize_vec(&q, s);
+        assert!((d[0] - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,356 @@
+//! Boolean circuit representation and builders.
+//!
+//! Circuits are XOR/AND netlists (NOT is XOR with the constant-one wire),
+//! matching the free-XOR garbling model: XOR gates cost nothing, AND gates
+//! cost one garbled table. The ReLU circuit used by the GAZELLE baseline is
+//! built here; its AND-gate count is the unit the paper's GC costs scale
+//! with.
+
+/// Wire identifier.
+pub type Wire = usize;
+
+/// A gate in topological order. `Xor` is free under free-XOR garbling;
+/// `And` requires a garbled table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Gate {
+    Xor { a: Wire, b: Wire, out: Wire },
+    And { a: Wire, b: Wire, out: Wire },
+}
+
+/// A two-party circuit: garbler inputs, evaluator inputs, one constant-one
+/// wire, gates, outputs.
+#[derive(Clone, Debug)]
+pub struct Circuit {
+    pub n_wires: usize,
+    pub garbler_inputs: Vec<Wire>,
+    pub evaluator_inputs: Vec<Wire>,
+    /// The constant-true wire (fed by the garbler).
+    pub one: Wire,
+    pub gates: Vec<Gate>,
+    pub outputs: Vec<Wire>,
+}
+
+impl Circuit {
+    pub fn num_and_gates(&self) -> usize {
+        self.gates.iter().filter(|g| matches!(g, Gate::And { .. })).count()
+    }
+
+    /// Plaintext evaluation (the correctness oracle for garbling).
+    pub fn eval_plain(&self, garbler_bits: &[bool], evaluator_bits: &[bool]) -> Vec<bool> {
+        let mut vals = vec![false; self.n_wires];
+        vals[self.one] = true;
+        for (w, &b) in self.garbler_inputs.iter().zip(garbler_bits) {
+            vals[*w] = b;
+        }
+        for (w, &b) in self.evaluator_inputs.iter().zip(evaluator_bits) {
+            vals[*w] = b;
+        }
+        for g in &self.gates {
+            match *g {
+                Gate::Xor { a, b, out } => vals[out] = vals[a] ^ vals[b],
+                Gate::And { a, b, out } => vals[out] = vals[a] & vals[b],
+            }
+        }
+        self.outputs.iter().map(|&w| vals[w]).collect()
+    }
+}
+
+/// Incremental circuit builder.
+pub struct Builder {
+    n_wires: usize,
+    garbler_inputs: Vec<Wire>,
+    evaluator_inputs: Vec<Wire>,
+    one: Wire,
+    gates: Vec<Gate>,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        // Wire 0 is the constant-one wire.
+        Self { n_wires: 1, garbler_inputs: vec![], evaluator_inputs: vec![], one: 0, gates: vec![] }
+    }
+
+    fn fresh(&mut self) -> Wire {
+        let w = self.n_wires;
+        self.n_wires += 1;
+        w
+    }
+
+    pub fn garbler_input(&mut self) -> Wire {
+        let w = self.fresh();
+        self.garbler_inputs.push(w);
+        w
+    }
+
+    pub fn evaluator_input(&mut self) -> Wire {
+        let w = self.fresh();
+        self.evaluator_inputs.push(w);
+        w
+    }
+
+    /// `n`-bit garbler input vector (LSB first).
+    pub fn garbler_inputs(&mut self, n: usize) -> Vec<Wire> {
+        (0..n).map(|_| self.garbler_input()).collect()
+    }
+
+    pub fn evaluator_inputs(&mut self, n: usize) -> Vec<Wire> {
+        (0..n).map(|_| self.evaluator_input()).collect()
+    }
+
+    pub fn one(&self) -> Wire {
+        self.one
+    }
+
+    pub fn xor(&mut self, a: Wire, b: Wire) -> Wire {
+        let out = self.fresh();
+        self.gates.push(Gate::Xor { a, b, out });
+        out
+    }
+
+    pub fn and(&mut self, a: Wire, b: Wire) -> Wire {
+        let out = self.fresh();
+        self.gates.push(Gate::And { a, b, out });
+        out
+    }
+
+    pub fn not(&mut self, a: Wire) -> Wire {
+        self.xor(a, self.one)
+    }
+
+    /// OR via De Morgan: 1 AND.
+    pub fn or(&mut self, a: Wire, b: Wire) -> Wire {
+        let na = self.not(a);
+        let nb = self.not(b);
+        let n = self.and(na, nb);
+        self.not(n)
+    }
+
+    /// 2:1 multiplexer: `sel ? t : f` — 1 AND (`f ⊕ sel·(t⊕f)`).
+    pub fn mux(&mut self, sel: Wire, t: Wire, f: Wire) -> Wire {
+        let d = self.xor(t, f);
+        let m = self.and(sel, d);
+        self.xor(m, f)
+    }
+
+    /// Full adder: returns (sum, carry_out) — 1 AND via the standard
+    /// free-XOR trick: carry = c ⊕ ((a⊕c)·(b⊕c)).
+    pub fn full_adder(&mut self, a: Wire, b: Wire, c: Wire) -> (Wire, Wire) {
+        let axc = self.xor(a, c);
+        let bxc = self.xor(b, c);
+        let sum = self.xor(axc, b);
+        let t = self.and(axc, bxc);
+        let carry = self.xor(t, c);
+        (sum, carry)
+    }
+
+    /// Ripple-carry addition of two little-endian vectors; returns
+    /// (sum bits, carry out). `ℓ` AND gates.
+    pub fn add(&mut self, a: &[Wire], b: &[Wire]) -> (Vec<Wire>, Wire) {
+        assert_eq!(a.len(), b.len());
+        let mut c = self.xor(self.one, self.one); // constant zero
+        let mut out = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, nc) = self.full_adder(a[i], b[i], c);
+            out.push(s);
+            c = nc;
+        }
+        (out, c)
+    }
+
+    /// `a - constant` (little-endian), returns (diff, borrow_out).
+    /// Implemented as `a + ~k + 1`; borrow = NOT carry. `ℓ` ANDs.
+    pub fn sub_const(&mut self, a: &[Wire], k: u64) -> (Vec<Wire>, Wire) {
+        let zero = self.xor(self.one, self.one);
+        let notk: Vec<Wire> = (0..a.len())
+            .map(|i| if (k >> i) & 1 == 1 { zero } else { self.one })
+            .collect();
+        // carry-in = 1
+        let mut c = self.one;
+        let mut out = Vec::with_capacity(a.len());
+        for i in 0..a.len() {
+            let (s, nc) = self.full_adder(a[i], notk[i], c);
+            out.push(s);
+            c = nc;
+        }
+        let borrow = self.not(c);
+        (out, borrow)
+    }
+
+    /// `sel ? t : f` bitwise over vectors.
+    pub fn mux_vec(&mut self, sel: Wire, t: &[Wire], f: &[Wire]) -> Vec<Wire> {
+        assert_eq!(t.len(), f.len());
+        t.iter().zip(f).map(|(&ti, &fi)| self.mux(sel, ti, fi)).collect()
+    }
+
+    /// AND every bit with `g`.
+    pub fn gate_vec(&mut self, g: Wire, v: &[Wire]) -> Vec<Wire> {
+        v.iter().map(|&b| self.and(g, b)).collect()
+    }
+
+    pub fn build(self, outputs: Vec<Wire>) -> Circuit {
+        Circuit {
+            n_wires: self.n_wires,
+            garbler_inputs: self.garbler_inputs,
+            evaluator_inputs: self.evaluator_inputs,
+            one: self.one,
+            gates: self.gates,
+            outputs,
+        }
+    }
+}
+
+impl Default for Builder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Little-endian bit decomposition helpers.
+pub fn to_bits(x: u64, n: usize) -> Vec<bool> {
+    (0..n).map(|i| (x >> i) & 1 == 1).collect()
+}
+
+pub fn from_bits(bits: &[bool]) -> u64 {
+    bits.iter().rev().fold(0u64, |acc, &b| (acc << 1) | b as u64)
+}
+
+/// The GAZELLE-style ReLU circuit over additive shares modulo prime `p`
+/// (`ℓ = ⌈log2 p⌉` bits), with built-in fixed-point truncation and mod-p
+/// re-sharing so its outputs feed the next HE layer directly:
+///
+/// 1. `t = s_g + s_e` (ℓ+1-bit),
+/// 2. `t ≥ p ⟹ t -= p` (modular reduction),
+/// 3. `positive = t ≤ (p-1)/2` (sign in centered representation),
+/// 4. `relu = positive ? (t >> shift) : 0` — the truncation requantizes
+///    from the linear-output scale back to the activation scale for free
+///    (bit slicing costs no gates),
+/// 5. output `relu + (p − r) mod p` — a fresh additive re-sharing mod p
+///    with the garbler's mask `r` (second garbler input block).
+///
+/// AND-gate count ≈ 7ℓ — this is what the paper's "GC is costly" claim is
+/// about, and what Table 6 measures.
+pub fn build_relu_mod_p(p: u64, shift: usize) -> Circuit {
+    let ell = 64 - p.leading_zeros() as usize; // bits to hold values < p
+    let mut b = Builder::new();
+    let sg = b.garbler_inputs(ell);
+    let mask = b.garbler_inputs(ell); // (p − r) mod p
+    let se = b.evaluator_inputs(ell);
+
+    // t = sg + se, with carry bit → ℓ+1 bit value.
+    let (mut t, carry) = b.add(&sg, &se);
+    t.push(carry);
+    // Conditional subtract p (t < 2p always).
+    let (sub, borrow) = b.sub_const(&t, p);
+    let not_borrow = b.not(borrow); // t >= p
+    let t_red = b.mux_vec(not_borrow, &sub, &t);
+    let t_red = &t_red[..ell]; // value now < p
+    // positive ⟺ t_red <= (p-1)/2 ⟺ t_red - ((p-1)/2 + 1) borrows.
+    let (_, neg_borrow) = b.sub_const(t_red, (p - 1) / 2 + 1);
+    let positive = neg_borrow;
+    // relu = positive ? (t_red >> shift) : 0 (truncation = bit slice).
+    let zero = b.xor(b.one(), b.one());
+    let mut shifted: Vec<Wire> = t_red[shift..].to_vec();
+    shifted.resize(ell, zero);
+    let relu = b.gate_vec(positive, &shifted);
+    // reshare mod p: out = relu + mask, conditionally subtract p.
+    let (mut t2, carry2) = b.add(&relu, &mask);
+    t2.push(carry2);
+    let (sub2, borrow2) = b.sub_const(&t2, p);
+    let not_borrow2 = b.not(borrow2);
+    let out = b.mux_vec(not_borrow2, &sub2, &t2);
+    b.build(out[..ell].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn adder_correct() {
+        let mut b = Builder::new();
+        let x = b.garbler_inputs(8);
+        let y = b.evaluator_inputs(8);
+        let (s, c) = b.add(&x, &y);
+        let mut outs = s;
+        outs.push(c);
+        let circ = b.build(outs);
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..50 {
+            let a = rng.gen_range(256);
+            let bb = rng.gen_range(256);
+            let out = circ.eval_plain(&to_bits(a, 8), &to_bits(bb, 8));
+            assert_eq!(from_bits(&out), a + bb);
+        }
+    }
+
+    #[test]
+    fn sub_const_and_borrow() {
+        let mut b = Builder::new();
+        let x = b.garbler_inputs(8);
+        let (d, borrow) = b.sub_const(&x, 100);
+        let mut outs = d;
+        outs.push(borrow);
+        let circ = b.build(outs);
+        for a in [0u64, 50, 99, 100, 101, 255] {
+            let out = circ.eval_plain(&to_bits(a, 8), &[]);
+            let diff = from_bits(&out[..8]);
+            let borrow = out[8];
+            assert_eq!(diff, a.wrapping_sub(100) & 0xff);
+            assert_eq!(borrow, a < 100, "borrow wrong for {a}");
+        }
+    }
+
+    #[test]
+    fn mux_selects() {
+        let mut b = Builder::new();
+        let s = b.garbler_input();
+        let t = b.garbler_input();
+        let f = b.garbler_input();
+        let m = b.mux(s, t, f);
+        let circ = b.build(vec![m]);
+        for (s, t, f) in [(false, true, false), (true, true, false), (true, false, true)] {
+            let out = circ.eval_plain(&[s, t, f], &[]);
+            assert_eq!(out[0], if s { t } else { f });
+        }
+    }
+
+    #[test]
+    fn relu_mod_p_circuit_correct() {
+        let p = 8380417u64; // a 23-bit prime like the default plan's
+        let ell = 23;
+        let mut rng = SplitMix64::new(2);
+        for shift in [0usize, 6] {
+            let circ = build_relu_mod_p(p, shift);
+            for _ in 0..40 {
+                // True value x centered in a small range, shared mod p.
+                let x = rng.gen_i64_range(-1_000_000, 1_000_000);
+                let xm = x.rem_euclid(p as i64) as u64;
+                let se = rng.gen_range(p);
+                let sg = (xm + p - se) % p;
+                let r = rng.gen_range(p);
+                let mask = (p - r) % p;
+
+                let mut gin = to_bits(sg, ell);
+                gin.extend(to_bits(mask, ell));
+                let out = circ.eval_plain(&gin, &to_bits(se, ell));
+                let out_val = from_bits(&out);
+                let relu = if x > 0 { (x as u64) >> shift } else { 0 };
+                // Reconstruction: out + r ≡ relu (mod p).
+                assert_eq!((out_val + r) % p, relu, "x={x} shift={shift}");
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_count_is_linear_in_bits() {
+        let p = 8380417u64;
+        let circ = build_relu_mod_p(p, 6);
+        let ands = circ.num_and_gates();
+        // ~7ℓ for ℓ=23 → between 5ℓ and 9ℓ.
+        assert!(
+            (5 * 23..9 * 23 + 10).contains(&ands),
+            "unexpected AND count {ands}"
+        );
+    }
+}

@@ -1,0 +1,310 @@
+//! Yao garbling with free-XOR and point-and-permute.
+//!
+//! * Wire labels are 128-bit; the global offset Δ has LSB 1 so a label's
+//!   LSB is its permute bit (point-and-permute).
+//! * XOR gates are free: `W_out = W_a ⊕ W_b` (Kolesnikov–Schneider).
+//! * AND gates carry a classic 4-row garbled table; rows are keyed by the
+//!   permute bits and encrypted with `H(A ‖ B ‖ gate_id)` where `H` is
+//!   SHA-256 truncated to 128 bits. (No half-gates/row-reduction — the
+//!   paper's baseline predates them; table size 4×16 B per AND. The
+//!   benches report bytes from this real layout.)
+//!
+//! The evaluator's input labels are delivered by a trusted-dealer stand-in
+//! for OT (no big-integer group available offline — see DESIGN.md); OT
+//! bytes are accounted analytically in [`ot_bytes_per_bit`].
+
+use super::circuit::{Circuit, Gate};
+use crate::util::rng::ChaCha20Rng;
+use sha2::{Digest, Sha256};
+
+/// A 128-bit wire label.
+pub type Label = [u8; 16];
+
+/// Modeled OT-extension traffic per evaluator input bit (IKNP-style: one
+/// λ-bit column + two masked labels).
+pub const fn ot_bytes_per_bit() -> usize {
+    16 + 2 * 16
+}
+
+#[inline]
+fn xor_label(a: &Label, b: &Label) -> Label {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a[i] ^ b[i];
+    }
+    out
+}
+
+#[inline]
+fn lsb(l: &Label) -> bool {
+    l[0] & 1 == 1
+}
+
+/// `H(A ‖ B ‖ gate_id)` truncated to 128 bits.
+#[inline]
+fn hash_gate(a: &Label, b: &Label, gid: u64) -> Label {
+    let mut h = Sha256::new();
+    h.update(a);
+    h.update(b);
+    h.update(gid.to_le_bytes());
+    let d = h.finalize();
+    let mut out = [0u8; 16];
+    out.copy_from_slice(&d[..16]);
+    out
+}
+
+/// The garbled form of a circuit: AND-gate tables plus output permute bits.
+pub struct GarbledCircuit {
+    /// One 4-row table per AND gate, in gate order.
+    pub tables: Vec<[Label; 4]>,
+    /// Permute bits of the output wires (decoding information).
+    pub output_perm: Vec<bool>,
+}
+
+impl GarbledCircuit {
+    /// Serialized size in bytes (tables + decode bits) — the offline GC
+    /// transfer the paper's Table 6/7 communication includes.
+    pub fn size_bytes(&self) -> usize {
+        self.tables.len() * 64 + self.output_perm.len().div_ceil(8)
+    }
+}
+
+/// Garbler state: all wire zero-labels plus Δ.
+pub struct Garbler {
+    pub delta: Label,
+    /// Zero-label of every wire.
+    pub w0: Vec<Label>,
+}
+
+impl Garbler {
+    /// Garble `circuit`, returning the garbler state and the tables.
+    pub fn garble(circuit: &Circuit, rng: &mut ChaCha20Rng) -> (Self, GarbledCircuit) {
+        let mut delta = [0u8; 16];
+        rng.fill_bytes(&mut delta);
+        delta[0] |= 1; // permute-bit invariant
+
+        let mut w0 = vec![[0u8; 16]; circuit.n_wires];
+        let mut assigned = vec![false; circuit.n_wires];
+        // Constant-one wire: label for TRUE is w0[one] ⊕ Δ; give it a random
+        // zero-label like any input.
+        let init = |w: usize, w0: &mut Vec<Label>, assigned: &mut Vec<bool>, rng: &mut ChaCha20Rng| {
+            let mut l = [0u8; 16];
+            rng.fill_bytes(&mut l);
+            w0[w] = l;
+            assigned[w] = true;
+        };
+        init(circuit.one, &mut w0, &mut assigned, rng);
+        for &w in circuit.garbler_inputs.iter().chain(circuit.evaluator_inputs.iter()) {
+            init(w, &mut w0, &mut assigned, rng);
+        }
+
+        let mut tables = Vec::with_capacity(circuit.num_and_gates());
+        for (gid, gate) in circuit.gates.iter().enumerate() {
+            match *gate {
+                Gate::Xor { a, b, out } => {
+                    debug_assert!(assigned[a] && assigned[b]);
+                    w0[out] = xor_label(&w0[a], &w0[b]);
+                    assigned[out] = true;
+                }
+                Gate::And { a, b, out } => {
+                    debug_assert!(assigned[a] && assigned[b]);
+                    let mut wo = [0u8; 16];
+                    rng.fill_bytes(&mut wo);
+                    w0[out] = wo;
+                    assigned[out] = true;
+                    let mut table = [[0u8; 16]; 4];
+                    for va in 0..2u8 {
+                        for vb in 0..2u8 {
+                            let la = if va == 1 { xor_label(&w0[a], &delta) } else { w0[a] };
+                            let lb = if vb == 1 { xor_label(&w0[b], &delta) } else { w0[b] };
+                            let row = (lsb(&la) as usize) << 1 | lsb(&lb) as usize;
+                            let vo = va & vb;
+                            let lo =
+                                if vo == 1 { xor_label(&w0[out], &delta) } else { w0[out] };
+                            table[row] = xor_label(&hash_gate(&la, &lb, gid as u64), &lo);
+                        }
+                    }
+                    tables.push(table);
+                }
+            }
+        }
+        let output_perm = circuit.outputs.iter().map(|&w| lsb(&w0[w])).collect();
+        (Self { delta, w0 }, GarbledCircuit { tables, output_perm })
+    }
+
+    /// Label for wire `w` carrying bit `v`.
+    pub fn input_label(&self, w: usize, v: bool) -> Label {
+        if v {
+            xor_label(&self.w0[w], &self.delta)
+        } else {
+            self.w0[w]
+        }
+    }
+}
+
+/// Evaluate a garbled circuit given active input labels.
+/// `garbler_labels` must include the constant-one wire's TRUE label first.
+pub fn evaluate(
+    circuit: &Circuit,
+    garbled: &GarbledCircuit,
+    one_label: Label,
+    garbler_labels: &[Label],
+    evaluator_labels: &[Label],
+) -> Vec<bool> {
+    let mut labels = vec![[0u8; 16]; circuit.n_wires];
+    labels[circuit.one] = one_label;
+    for (w, l) in circuit.garbler_inputs.iter().zip(garbler_labels) {
+        labels[*w] = *l;
+    }
+    for (w, l) in circuit.evaluator_inputs.iter().zip(evaluator_labels) {
+        labels[*w] = *l;
+    }
+    let mut and_idx = 0usize;
+    for (gid, gate) in circuit.gates.iter().enumerate() {
+        match *gate {
+            Gate::Xor { a, b, out } => {
+                labels[out] = xor_label(&labels[a], &labels[b]);
+            }
+            Gate::And { a, b, out } => {
+                let la = labels[a];
+                let lb = labels[b];
+                let row = (lsb(&la) as usize) << 1 | lsb(&lb) as usize;
+                labels[out] =
+                    xor_label(&hash_gate(&la, &lb, gid as u64), &garbled.tables[and_idx][row]);
+                and_idx += 1;
+            }
+        }
+    }
+    circuit
+        .outputs
+        .iter()
+        .zip(&garbled.output_perm)
+        .map(|(&w, &p)| lsb(&labels[w]) ^ p)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gc::circuit::{build_relu_mod_p, from_bits, to_bits, Builder};
+    use crate::util::proptest;
+    use crate::util::rng::{ChaCha20Rng, SplitMix64};
+
+    fn run_garbled(circ: &Circuit, gbits: &[bool], ebits: &[bool], seed: u64) -> Vec<bool> {
+        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let (g, gc) = Garbler::garble(circ, &mut rng);
+        let one = g.input_label(circ.one, true);
+        let glabels: Vec<Label> = circ
+            .garbler_inputs
+            .iter()
+            .zip(gbits)
+            .map(|(&w, &v)| g.input_label(w, v))
+            .collect();
+        let elabels: Vec<Label> = circ
+            .evaluator_inputs
+            .iter()
+            .zip(ebits)
+            .map(|(&w, &v)| g.input_label(w, v))
+            .collect();
+        evaluate(circ, &gc, one, &glabels, &elabels)
+    }
+
+    #[test]
+    fn garbled_and_xor_gates() {
+        let mut b = Builder::new();
+        let x = b.garbler_input();
+        let y = b.evaluator_input();
+        let a = b.and(x, y);
+        let o = b.xor(a, x);
+        let n = b.not(o);
+        let circ = b.build(vec![a, o, n]);
+        for x in [false, true] {
+            for y in [false, true] {
+                let out = run_garbled(&circ, &[x], &[y], 7);
+                assert_eq!(out[0], x & y);
+                assert_eq!(out[1], (x & y) ^ x);
+                assert_eq!(out[2], !((x & y) ^ x));
+            }
+        }
+    }
+
+    #[test]
+    fn garbled_adder_matches_plain() {
+        let mut b = Builder::new();
+        let x = b.garbler_inputs(12);
+        let y = b.evaluator_inputs(12);
+        let (s, c) = b.add(&x, &y);
+        let mut outs = s;
+        outs.push(c);
+        let circ = b.build(outs);
+        proptest::check_with_rng(17, 15, |rng| {
+            let a = rng.gen_range(1 << 12);
+            let bb = rng.gen_range(1 << 12);
+            let out = run_garbled(&circ, &to_bits(a, 12), &to_bits(bb, 12), rng.next_u64());
+            if from_bits(&out) == a + bb {
+                Ok(())
+            } else {
+                Err(format!("{a}+{bb} != {}", from_bits(&out)))
+            }
+        });
+    }
+
+    #[test]
+    fn garbled_relu_mod_p() {
+        let p = 8380417u64;
+        let circ = build_relu_mod_p(p, 0);
+        let ell = 23;
+        let mut rng = SplitMix64::new(5);
+        for trial in 0..10 {
+            let x = rng.gen_i64_range(-100_000, 100_000);
+            let xm = x.rem_euclid(p as i64) as u64;
+            let se = rng.gen_range(p);
+            let sg = (xm + p - se) % p;
+            let r = rng.gen_range(p);
+            let mask = (p - r) % p;
+            let mut gin = to_bits(sg, ell);
+            gin.extend(to_bits(mask, ell));
+            let out = run_garbled(&circ, &gin, &to_bits(se, ell), 100 + trial);
+            let relu = if x > 0 { x as u64 } else { 0 };
+            assert_eq!((from_bits(&out) + r) % p, relu, "x={x}");
+        }
+    }
+
+    #[test]
+    fn xor_gates_cost_no_tables() {
+        let mut b = Builder::new();
+        let x = b.garbler_input();
+        let y = b.evaluator_input();
+        let o1 = b.xor(x, y);
+        let o2 = b.not(o1);
+        let circ = b.build(vec![o2]);
+        let mut rng = ChaCha20Rng::from_u64_seed(1);
+        let (_, gc) = Garbler::garble(&circ, &mut rng);
+        assert_eq!(gc.tables.len(), 0, "free-XOR violated");
+    }
+
+    #[test]
+    fn wrong_labels_garble_output() {
+        let mut b = Builder::new();
+        let x = b.garbler_input();
+        let y = b.evaluator_input();
+        let a = b.and(x, y);
+        let circ = b.build(vec![a]);
+        let mut rng = ChaCha20Rng::from_u64_seed(2);
+        let (g, gc) = Garbler::garble(&circ, &mut rng);
+        let one = g.input_label(circ.one, true);
+        let bogus: Label = [0xAA; 16];
+        // Evaluating with a bogus label must not produce the honest result
+        // deterministically — we just check it doesn't panic and that honest
+        // evaluation still works afterwards.
+        let _ = evaluate(&circ, &gc, one, &[bogus], &[g.input_label(circ.evaluator_inputs[0], true)]);
+        let honest = evaluate(
+            &circ,
+            &gc,
+            one,
+            &[g.input_label(circ.garbler_inputs[0], true)],
+            &[g.input_label(circ.evaluator_inputs[0], true)],
+        );
+        assert_eq!(honest[0], true);
+    }
+}

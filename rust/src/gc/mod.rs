@@ -1,0 +1,20 @@
+//! Yao garbled circuits — the nonlinear-layer engine of the GAZELLE
+//! baseline (and of most prior work in the paper's Table 1).
+//!
+//! * [`circuit`] — XOR/AND netlists, builders, and the mod-p ReLU circuit,
+//! * [`garble`] — free-XOR + point-and-permute garbling over SHA-256,
+//! * [`relu`] — the batched two-party GC ReLU protocol with GAZELLE-style
+//!   offline/online cost accounting.
+//!
+//! CHEETAH's contribution is precisely *avoiding* all of this: its
+//! PHE-based secret-share nonlinearity replaces per-element garbled tables
+//! (≈ 5ℓ AND gates ≈ 7 KiB each) with two plaintext multiplications on an
+//! existing ciphertext (paper §3.1 step 3, Table 6).
+
+pub mod circuit;
+pub mod garble;
+pub mod relu;
+
+pub use circuit::{build_relu_mod_p, Builder, Circuit, Gate};
+pub use garble::{evaluate, Garbler, GarbledCircuit};
+pub use relu::{GcRelu, GcReluReport};

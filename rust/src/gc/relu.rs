@@ -1,0 +1,198 @@
+//! The GC-based ReLU protocol used by the GAZELLE baseline: batched Yao
+//! evaluation of [`build_relu_mod_p`] over additive shares mod p.
+//!
+//! Cost accounting mirrors GAZELLE's phases:
+//! * **offline**: garbling all circuits + transferring tables,
+//! * **online**: label transfer (direct for the garbler's bits; dealer-model
+//!   OT for the evaluator's — bytes accounted analytically) + evaluation +
+//!   returning masked outputs.
+//!
+//! One protocol instance processes a whole activation vector (the paper's
+//! Table 6 measures 1 000 / 10 000 elements; §5.1 quotes ~263 s for the
+//! 3.2 M-element VGG ReLU).
+
+use super::circuit::{build_relu_mod_p, from_bits, to_bits, Circuit};
+use super::garble::{evaluate, ot_bytes_per_bit, Garbler, GarbledCircuit, Label};
+use crate::util::rng::ChaCha20Rng;
+use std::time::{Duration, Instant};
+
+/// Cost/result report for one batched GC ReLU execution.
+#[derive(Clone, Debug, Default)]
+pub struct GcReluReport {
+    pub garble_time: Duration,
+    pub eval_time: Duration,
+    /// Garbled tables + decode info (offline transfer).
+    pub offline_bytes: u64,
+    /// Input labels + OT traffic + masked outputs (online transfer).
+    pub online_bytes: u64,
+    pub and_gates_total: u64,
+}
+
+impl GcReluReport {
+    pub fn merge(&mut self, o: &GcReluReport) {
+        self.garble_time += o.garble_time;
+        self.eval_time += o.eval_time;
+        self.offline_bytes += o.offline_bytes;
+        self.online_bytes += o.online_bytes;
+        self.and_gates_total += o.and_gates_total;
+    }
+}
+
+/// Batched GC ReLU over shares mod `p`, with built-in `>> shift`
+/// requantization and mod-p output re-sharing.
+pub struct GcRelu {
+    pub p: u64,
+    pub ell: usize,
+    pub shift: usize,
+    circuit: Circuit,
+}
+
+impl GcRelu {
+    pub fn new(p: u64, shift: usize) -> Self {
+        let circuit = build_relu_mod_p(p, shift);
+        let ell = 64 - p.leading_zeros() as usize;
+        Self { p, ell, shift, circuit }
+    }
+
+    pub fn and_gates_per_relu(&self) -> usize {
+        self.circuit.num_and_gates()
+    }
+
+    /// Offline bytes per element (tables + decode bits).
+    pub fn offline_bytes_per_relu(&self) -> usize {
+        self.and_gates_per_relu() * 64 + self.ell.div_ceil(8)
+    }
+
+    /// Run the batched protocol: the garbler holds shares `sg` and samples
+    /// masks `r` (its fresh output shares); the evaluator holds shares
+    /// `se`. Returns (evaluator shares, garbler shares, report); both
+    /// output share vectors are mod p and reconstruct to
+    /// `ReLU(x) >> shift`.
+    pub fn run_batch(
+        &self,
+        sg: &[u64],
+        se: &[u64],
+        rng: &mut ChaCha20Rng,
+    ) -> (Vec<u64>, Vec<u64>, GcReluReport) {
+        assert_eq!(sg.len(), se.len());
+        let n = sg.len();
+        let mut report = GcReluReport::default();
+
+        let mut eval_shares = Vec::with_capacity(n);
+        let mut garbler_shares = Vec::with_capacity(n);
+
+        // Offline: garble one circuit instance per element.
+        let mut garbled: Vec<(Garbler, GarbledCircuit, u64)> = Vec::with_capacity(n);
+        let t0 = Instant::now();
+        for _ in 0..n {
+            let (g, gc) = Garbler::garble(&self.circuit, rng);
+            let r = rng.gen_range(self.p);
+            report.offline_bytes += gc.size_bytes() as u64;
+            garbled.push((g, gc, r));
+        }
+        report.garble_time = t0.elapsed();
+        report.and_gates_total = (self.and_gates_per_relu() * n) as u64;
+
+        // Online: transfer labels (garbler direct, evaluator via modeled
+        // OT), evaluate, decode.
+        let t1 = Instant::now();
+        for i in 0..n {
+            let (g, gc, r) = &garbled[i];
+            let mask = (self.p - r) % self.p;
+            let mut gbits = to_bits(sg[i], self.ell);
+            gbits.extend(to_bits(mask, self.ell));
+            let glabels: Vec<Label> = self
+                .circuit
+                .garbler_inputs
+                .iter()
+                .zip(&gbits)
+                .map(|(&w, &v)| g.input_label(w, v))
+                .collect();
+            let ebits = to_bits(se[i], self.ell);
+            let elabels: Vec<Label> = self
+                .circuit
+                .evaluator_inputs
+                .iter()
+                .zip(&ebits)
+                .map(|(&w, &v)| g.input_label(w, v))
+                .collect();
+            report.online_bytes += (glabels.len() * 16) as u64; // direct labels
+            report.online_bytes += (elabels.len() * ot_bytes_per_bit()) as u64; // OT model
+            let one = g.input_label(self.circuit.one, true);
+            let out = evaluate(&self.circuit, gc, one, &glabels, &elabels);
+            eval_shares.push(from_bits(&out));
+            garbler_shares.push(*r);
+            report.online_bytes += (self.ell as u64).div_ceil(8); // masked result back
+        }
+        report.eval_time = t1.elapsed();
+        (eval_shares, garbler_shares, report)
+    }
+
+    /// Reconstruct values from the two output share vectors (mod p).
+    pub fn reconstruct(&self, eval_shares: &[u64], garbler_shares: &[u64]) -> Vec<u64> {
+        eval_shares.iter().zip(garbler_shares).map(|(&a, &b)| (a + b) % self.p).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn batched_relu_correct() {
+        let p = 8380417u64;
+        let relu = GcRelu::new(p, 0);
+        let mut rng = SplitMix64::new(7);
+        let mut crng = ChaCha20Rng::from_u64_seed(8);
+        let n = 16;
+        let xs: Vec<i64> = (0..n).map(|_| rng.gen_i64_range(-500_000, 500_000)).collect();
+        let se: Vec<u64> = (0..n).map(|_| rng.gen_range(p)).collect();
+        let sg: Vec<u64> = xs
+            .iter()
+            .zip(&se)
+            .map(|(&x, &s)| ((x.rem_euclid(p as i64) as u64) + p - s) % p)
+            .collect();
+        let (ev, gv, report) = relu.run_batch(&sg, &se, &mut crng);
+        let rec = relu.reconstruct(&ev, &gv);
+        for i in 0..n {
+            let expect = xs[i].max(0) as u64;
+            assert_eq!(rec[i], expect, "x={}", xs[i]);
+        }
+        assert!(report.offline_bytes > 0 && report.online_bytes > 0);
+        assert_eq!(report.and_gates_total, (relu.and_gates_per_relu() * n) as u64);
+    }
+
+    #[test]
+    fn batched_relu_with_truncation() {
+        let p = 8380417u64;
+        let shift = 6;
+        let relu = GcRelu::new(p, shift);
+        let mut rng = SplitMix64::new(9);
+        let mut crng = ChaCha20Rng::from_u64_seed(10);
+        let xs: Vec<i64> = (0..8).map(|_| rng.gen_i64_range(-100_000, 100_000)).collect();
+        let se: Vec<u64> = (0..8).map(|_| rng.gen_range(p)).collect();
+        let sg: Vec<u64> = xs
+            .iter()
+            .zip(&se)
+            .map(|(&x, &s)| ((x.rem_euclid(p as i64) as u64) + p - s) % p)
+            .collect();
+        let (ev, gv, _) = relu.run_batch(&sg, &se, &mut crng);
+        let rec = relu.reconstruct(&ev, &gv);
+        for i in 0..8 {
+            let expect = (xs[i].max(0) as u64) >> shift;
+            assert_eq!(rec[i], expect, "x={}", xs[i]);
+        }
+    }
+
+    #[test]
+    fn per_relu_cost_is_stable() {
+        let relu = GcRelu::new(8380417, 6);
+        // ~7ℓ AND gates at ℓ=23.
+        let ands = relu.and_gates_per_relu();
+        assert!((100..230).contains(&ands), "AND count {ands}");
+        let mut crng = ChaCha20Rng::from_u64_seed(3);
+        let (_, _, rep) = relu.run_batch(&[0, 1], &[5, 5], &mut crng);
+        assert_eq!(rep.offline_bytes as usize, 2 * relu.offline_bytes_per_relu());
+    }
+}

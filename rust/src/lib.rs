@@ -1,0 +1,39 @@
+//! # CHEETAH — ultra-fast privacy-preserved neural network inference
+//!
+//! A full-system reproduction of *CHEETAH: An Ultra-Fast, Approximation-Free,
+//! and Privacy-Preserved Neural Network Framework based on Joint Obscure
+//! Linear and Nonlinear Computations* (Zhang, Wang, Xin, Wu — 2019).
+//!
+//! The crate is a three-layer stack:
+//!
+//! * **L3 (this crate)** — the MLaaS coordinator and the complete
+//!   cryptographic substrate: a from-scratch BFV-style packed homomorphic
+//!   encryption library ([`phe`]), a Yao garbled-circuit engine ([`gc`], used
+//!   by the GAZELLE baseline), the CHEETAH protocol
+//!   ([`protocol::cheetah`]) and the GAZELLE baseline
+//!   ([`protocol::gazelle`]), plus transport, serving, and benchmarking
+//!   infrastructure.
+//! * **L2 (python/compile, build-time)** — JAX forward graphs of the
+//!   benchmark networks (with the paper's noise-injection experiment),
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels for the
+//!   client-side hot loops (`obscure_dot`, `relu_recover`), lowered into the
+//!   L2 graphs and cross-checked against both a pure-jnp oracle and the Rust
+//!   hot path.
+//!
+//! The [`runtime`] module loads the L2 artifacts through PJRT and executes
+//! them from Rust; Python is never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod bench_util;
+pub mod complexity;
+pub mod coordinator;
+pub mod fixed;
+pub mod gc;
+pub mod nn;
+pub mod phe;
+pub mod protocol;
+pub mod runtime;
+pub mod util;

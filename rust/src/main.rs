@@ -1,0 +1,111 @@
+//! `cheetah` — the leader CLI.
+//!
+//! ```text
+//! cheetah serve  [--addr A] [--model netA] [--max-batch N]   serve a trained model over TCP
+//! cheetah infer  [--model netA] [--eps E] [--label D]        one private inference, verbose report
+//! cheetah tables                                             print the paper's analytic tables
+//! cheetah bench-help                                         how to regenerate every paper table/figure
+//! ```
+
+use cheetah::coordinator::{BatchPolicy, Server};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::SyntheticDigits;
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::runtime::load_trained_network;
+use std::time::Duration;
+
+fn arg(flag: &str, default: &str) -> String {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == flag)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+        .unwrap_or_else(|| default.to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let cmd = std::env::args().nth(1).unwrap_or_else(|| "bench-help".into());
+    match cmd.as_str() {
+        "serve" => {
+            let addr = arg("--addr", "127.0.0.1:7878");
+            let model = arg("--model", "netA");
+            let max_batch: usize = arg("--max-batch", "16").parse()?;
+            let net = load_trained_network("artifacts", &model)?;
+            println!("serving {} on {addr} (max batch {max_batch})", net.name);
+            let server = Server::serve(
+                net,
+                &addr,
+                BatchPolicy { max_batch, linger: Duration::from_millis(2) },
+            )?;
+            println!("listening on {} — Ctrl-C to stop", server.addr);
+            loop {
+                std::thread::sleep(Duration::from_secs(10));
+                let s = server.metrics.summary();
+                if s.requests > 0 {
+                    println!(
+                        "requests={} p50={} p99={} mean_batch={:.1}",
+                        s.requests,
+                        cheetah::util::fmt_duration(s.p50),
+                        cheetah::util::fmt_duration(s.p99),
+                        s.mean_batch
+                    );
+                }
+            }
+        }
+        "infer" => {
+            let model = arg("--model", "netA");
+            let eps: f64 = arg("--eps", "0.1").parse()?;
+            let label: usize = arg("--label", "3").parse()?;
+            let ctx = Context::new(Params::default_params());
+            let net = load_trained_network("artifacts", &model)?;
+            let mut runner = CheetahRunner::new(&ctx, net, ScalePlan::default_plan(), eps, 1);
+            let off = runner.run_offline();
+            let sample = SyntheticDigits::new(28, 5).render(label);
+            let rep = runner.infer(&sample.image);
+            println!("true label {label} → prediction {}", rep.argmax);
+            println!(
+                "online {} compute + {} wire | {} online bytes | {} offline bytes",
+                cheetah::util::fmt_duration(rep.online_compute()),
+                cheetah::util::fmt_duration(rep.wire_time),
+                cheetah::util::fmt_bytes(rep.online_bytes()),
+                cheetah::util::fmt_bytes(off)
+            );
+            for s in &rep.steps {
+                println!(
+                    "  {:>12}: server {:>10} client {:>10} ops(perm/mult/add) {}/{}/{}",
+                    s.name,
+                    cheetah::util::fmt_duration(s.server_online),
+                    cheetah::util::fmt_duration(s.client_time),
+                    s.server_ops.perm + s.client_ops.perm,
+                    s.server_ops.mult + s.client_ops.mult,
+                    s.server_ops.add + s.client_ops.add,
+                );
+            }
+            Ok(())
+        }
+        "tables" => {
+            cheetah::complexity::print_table1();
+            cheetah::complexity::print_table2(
+                cheetah::complexity::ConvShape { c_i: 1, c_o: 5, r: 5, hw: 28 * 28, n: 4096 },
+                cheetah::complexity::FcShape { n_i: 2048, n_o: 1, n: 4096 },
+            );
+            Ok(())
+        }
+        _ => {
+            println!(
+                "cheetah — privacy-preserved NN inference (paper reproduction)\n\n\
+                 subcommands: serve | infer | tables\n\n\
+                 paper artifacts → bench targets:\n\
+                 \x20 Table 1/2  cargo bench --bench complexity_tables\n\
+                 \x20 Table 3    cargo bench --bench conv_bench   (--sweep → Fig. 5)\n\
+                 \x20 Table 4/5  cargo bench --bench fc_bench\n\
+                 \x20 Table 6    cargo bench --bench relu_bench   (--sweep → Fig. 6, --vgg-relu → §5.1)\n\
+                 \x20 Fig. 7     cargo bench --bench accuracy_bench\n\
+                 \x20 Table 7    cargo bench --bench e2e_bench    (--breakdown → Fig. 8)\n\
+                 \x20 §2.3 ratio cargo bench --bench microops_bench"
+            );
+            Ok(())
+        }
+    }
+}

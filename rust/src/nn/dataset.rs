@@ -1,0 +1,165 @@
+//! Synthetic-digits dataset — the offline-environment substitute for MNIST
+//! (see DESIGN.md substitutions). Ten glyph classes rendered procedurally
+//! from a 5×7 segment font, scaled to the target resolution with random
+//! sub-pixel shifts, per-sample amplitude jitter and additive noise.
+//! Deterministic given a seed; train/test splits use disjoint seeds.
+
+use super::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// 5×7 bitmap font for digits 0–9 (rows top-to-bottom, 5-bit rows).
+const FONT: [[u8; 7]; 10] = [
+    [0b01110, 0b10001, 0b10011, 0b10101, 0b11001, 0b10001, 0b01110], // 0
+    [0b00100, 0b01100, 0b00100, 0b00100, 0b00100, 0b00100, 0b01110], // 1
+    [0b01110, 0b10001, 0b00001, 0b00010, 0b00100, 0b01000, 0b11111], // 2
+    [0b11111, 0b00010, 0b00100, 0b00010, 0b00001, 0b10001, 0b01110], // 3
+    [0b00010, 0b00110, 0b01010, 0b10010, 0b11111, 0b00010, 0b00010], // 4
+    [0b11111, 0b10000, 0b11110, 0b00001, 0b00001, 0b10001, 0b01110], // 5
+    [0b00110, 0b01000, 0b10000, 0b11110, 0b10001, 0b10001, 0b01110], // 6
+    [0b11111, 0b00001, 0b00010, 0b00100, 0b01000, 0b01000, 0b01000], // 7
+    [0b01110, 0b10001, 0b10001, 0b01110, 0b10001, 0b10001, 0b01110], // 8
+    [0b01110, 0b10001, 0b10001, 0b01111, 0b00001, 0b00010, 0b01100], // 9
+];
+
+/// One labelled sample.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub image: Tensor,
+    pub label: usize,
+}
+
+/// The synthetic-digits generator.
+pub struct SyntheticDigits {
+    pub size: usize,
+    rng: SplitMix64,
+}
+
+impl SyntheticDigits {
+    /// `size`: square image side (e.g. 28). `seed`: determinism handle.
+    pub fn new(size: usize, seed: u64) -> Self {
+        assert!(size >= 12, "minimum supported image size is 12");
+        Self { size, rng: SplitMix64::new(seed) }
+    }
+
+    /// Render one sample of class `label` with jitter and noise.
+    pub fn render(&mut self, label: usize) -> Sample {
+        assert!(label < 10);
+        let s = self.size;
+        let glyph = &FONT[label];
+        // Random placement: the 5×7 glyph scales to ~60% of the image with
+        // a random offset of up to ±12% of the image size.
+        let scale = s as f64 * 0.6 / 7.0;
+        let margin = s as f64 * 0.06;
+        let ox = self.rng.gen_f64_range(-margin, margin) + s as f64 * 0.25;
+        let oy = self.rng.gen_f64_range(-margin, margin) + s as f64 * 0.15;
+        let amp = self.rng.gen_f64_range(0.75, 1.0);
+        let noise_lvl = self.rng.gen_f64_range(0.02, 0.08);
+
+        let mut img = Tensor::zeros(1, s, s);
+        for y in 0..s {
+            for x in 0..s {
+                // Map pixel to glyph coordinates (bilinear-ish box sample).
+                let gy = (y as f64 - oy) / scale;
+                let gx = (x as f64 - ox) / (scale * 5.0 / 7.0 * 1.4);
+                let mut v = 0.0;
+                if gy >= 0.0 && gy < 7.0 && gx >= 0.0 && gx < 5.0 {
+                    let row = glyph[gy as usize];
+                    let bit = 4 - gx as usize;
+                    if (row >> bit) & 1 == 1 {
+                        v = amp;
+                    }
+                }
+                v += self.rng.gen_f64_range(-noise_lvl, noise_lvl);
+                *img.at_mut(0, y, x) = v.clamp(0.0, 1.0);
+            }
+        }
+        Sample { image: img, label }
+    }
+
+    /// Generate a balanced batch of `count` samples (round-robin labels).
+    pub fn batch(&mut self, count: usize) -> Vec<Sample> {
+        (0..count).map(|i| self.render(i % 10)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = SyntheticDigits::new(28, 5);
+        let mut b = SyntheticDigits::new(28, 5);
+        let sa = a.render(3);
+        let sb = b.render(3);
+        assert_eq!(sa.image.data, sb.image.data);
+        let mut c = SyntheticDigits::new(28, 6);
+        assert_ne!(c.render(3).image.data, sa.image.data);
+    }
+
+    #[test]
+    fn images_in_range_and_nonempty() {
+        let mut g = SyntheticDigits::new(28, 1);
+        for s in g.batch(20) {
+            assert!(s.image.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let ink: f64 = s.image.data.iter().sum();
+            assert!(ink > 5.0, "glyph {label} rendered empty", label = s.label);
+        }
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Nearest-mean classification must beat chance by a wide margin —
+        // sanity that the classes carry signal. Means over 30 renders smear
+        // out the per-sample jitter.
+        let mut g = SyntheticDigits::new(28, 2);
+        let templates: Vec<Tensor> = (0..10)
+            .map(|d| {
+                let mut acc = Tensor::zeros(1, 28, 28);
+                let reps = 30;
+                for _ in 0..reps {
+                    let img = g.render(d).image;
+                    for (a, v) in acc.data.iter_mut().zip(&img.data) {
+                        *a += v / reps as f64;
+                    }
+                }
+                acc
+            })
+            .collect();
+        let mut correct = 0;
+        let total = 100;
+        let mut g2 = SyntheticDigits::new(28, 3);
+        for s in g2.batch(total) {
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f64 = templates[a]
+                        .data
+                        .iter()
+                        .zip(&s.image.data)
+                        .map(|(t, v)| (t - v) * (t - v))
+                        .sum();
+                    let db: f64 = templates[b]
+                        .data
+                        .iter()
+                        .zip(&s.image.data)
+                        .map(|(t, v)| (t - v) * (t - v))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == s.label {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "template accuracy only {correct}/{total}");
+    }
+
+    #[test]
+    fn batch_is_balanced() {
+        let mut g = SyntheticDigits::new(28, 4);
+        let batch = g.batch(30);
+        for d in 0..10 {
+            assert_eq!(batch.iter().filter(|s| s.label == d).count(), 3);
+        }
+    }
+}

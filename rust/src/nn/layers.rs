@@ -1,0 +1,368 @@
+//! Layers and the plaintext reference forward pass (float and quantized).
+//!
+//! The quantized path mirrors exactly what the CHEETAH protocol computes:
+//! activations and weights quantized per the [`crate::fixed::ScalePlan`],
+//! with optional uniform noise `δ ~ U[-ε, ε]` added to every linear output
+//! (the paper's Fig. 7 experiment), and activations clamped to the plan's
+//! representable range.
+
+use super::tensor::Tensor;
+use crate::fixed::ScalePlan;
+use crate::util::rng::SplitMix64;
+
+/// The kind and hyper-parameters of a layer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LayerKind {
+    /// 2-D convolution, `weights[o][i][ky][kx]` flattened, stride, zero-pad.
+    Conv2d { out_channels: usize, kernel: usize, stride: usize, pad: usize },
+    /// ReLU activation.
+    Relu,
+    /// Mean pooling over `size × size` windows with stride `size`.
+    MeanPool { size: usize },
+    /// Fully connected: `weights[o][i]` flattened.
+    Fc { out_features: usize },
+}
+
+/// A layer with (possibly empty) weights.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub kind: LayerKind,
+    /// Row-major weights; empty for Relu/MeanPool.
+    pub weights: Vec<f64>,
+}
+
+impl Layer {
+    pub fn conv(out_channels: usize, kernel: usize, stride: usize, pad: usize) -> Self {
+        Self { kind: LayerKind::Conv2d { out_channels, kernel, stride, pad }, weights: vec![] }
+    }
+    pub fn relu() -> Self {
+        Self { kind: LayerKind::Relu, weights: vec![] }
+    }
+    pub fn mean_pool(size: usize) -> Self {
+        Self { kind: LayerKind::MeanPool { size }, weights: vec![] }
+    }
+    pub fn fc(out_features: usize) -> Self {
+        Self { kind: LayerKind::Fc { out_features }, weights: vec![] }
+    }
+
+    /// Output shape for a given input shape.
+    pub fn out_shape(&self, c: usize, h: usize, w: usize) -> (usize, usize, usize) {
+        match self.kind {
+            LayerKind::Conv2d { out_channels, kernel, stride, pad } => {
+                let oh = (h + 2 * pad - kernel) / stride + 1;
+                let ow = (w + 2 * pad - kernel) / stride + 1;
+                (out_channels, oh, ow)
+            }
+            LayerKind::Relu => (c, h, w),
+            LayerKind::MeanPool { size } => (c, h / size, w / size),
+            LayerKind::Fc { out_features } => (1, 1, out_features),
+        }
+    }
+
+    /// Number of weight parameters for input shape.
+    pub fn num_weights(&self, c: usize, h: usize, w: usize) -> usize {
+        match self.kind {
+            LayerKind::Conv2d { out_channels, kernel, .. } => out_channels * c * kernel * kernel,
+            LayerKind::Fc { out_features } => out_features * c * h * w,
+            _ => 0,
+        }
+    }
+
+    /// Initialize weights with scaled uniform values (He-style fan-in
+    /// scaling so activations stay in the quantization range).
+    pub fn init_weights(&mut self, c: usize, h: usize, w: usize, rng: &mut SplitMix64) {
+        let n = self.num_weights(c, h, w);
+        let fan_in = match self.kind {
+            LayerKind::Conv2d { kernel, .. } => c * kernel * kernel,
+            LayerKind::Fc { .. } => c * h * w,
+            _ => 1,
+        };
+        let bound = (2.0 / fan_in as f64).sqrt();
+        self.weights = (0..n).map(|_| rng.gen_f64_range(-bound, bound)).collect();
+    }
+
+    /// Conv weight accessor: `weights[o][i][ky][kx]`.
+    #[inline]
+    pub fn conv_w(&self, in_channels: usize, kernel: usize, o: usize, i: usize, ky: usize, kx: usize) -> f64 {
+        self.weights[((o * in_channels + i) * kernel + ky) * kernel + kx]
+    }
+
+    /// FC weight accessor: `weights[o][i]`.
+    #[inline]
+    pub fn fc_w(&self, in_features: usize, o: usize, i: usize) -> f64 {
+        self.weights[o * in_features + i]
+    }
+}
+
+/// Float forward pass for one layer.
+pub fn forward_layer(layer: &Layer, input: &Tensor) -> Tensor {
+    match layer.kind {
+        LayerKind::Conv2d { out_channels, kernel, stride, pad } => {
+            let (oc, oh, ow) = layer.out_shape(input.c, input.h, input.w);
+            let mut out = Tensor::zeros(oc, oh, ow);
+            for o in 0..out_channels {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0;
+                        for i in 0..input.c {
+                            for ky in 0..kernel {
+                                for kx in 0..kernel {
+                                    let y = (oy * stride + ky) as isize - pad as isize;
+                                    let x = (ox * stride + kx) as isize - pad as isize;
+                                    acc += layer.conv_w(input.c, kernel, o, i, ky, kx)
+                                        * input.at_padded(i, y, x);
+                                }
+                            }
+                        }
+                        *out.at_mut(o, oy, ox) = acc;
+                    }
+                }
+            }
+            out
+        }
+        LayerKind::Relu => {
+            let mut out = input.clone();
+            for v in out.data.iter_mut() {
+                *v = v.max(0.0);
+            }
+            out
+        }
+        LayerKind::MeanPool { size } => {
+            let (oc, oh, ow) = layer.out_shape(input.c, input.h, input.w);
+            let mut out = Tensor::zeros(oc, oh, ow);
+            let norm = 1.0 / (size * size) as f64;
+            for c in 0..oc {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0.0;
+                        for dy in 0..size {
+                            for dx in 0..size {
+                                acc += input.at(c, oy * size + dy, ox * size + dx);
+                            }
+                        }
+                        *out.at_mut(c, oy, ox) = acc * norm;
+                    }
+                }
+            }
+            out
+        }
+        LayerKind::Fc { out_features } => {
+            let in_features = input.len();
+            let mut out = Tensor::zeros(1, 1, out_features);
+            for o in 0..out_features {
+                let mut acc = 0.0;
+                for (i, &x) in input.data.iter().enumerate() {
+                    acc += layer.fc_w(in_features, o, i) * x;
+                }
+                out.data[o] = acc;
+            }
+            out
+        }
+    }
+}
+
+/// Quantized forward pass for one linear layer with optional per-output
+/// noise δ — the *exact* arithmetic the private protocol performs. Input
+/// and output activations are integers at `plan.x`; weights at `plan.k`.
+/// Returns pre-activation block sums at scale `plan.x · plan.k`.
+pub fn forward_linear_quantized(
+    layer: &Layer,
+    input_q: &[i64],
+    in_shape: (usize, usize, usize),
+    plan: &ScalePlan,
+    epsilon: f64,
+    rng: &mut SplitMix64,
+) -> (Vec<i64>, (usize, usize, usize)) {
+    let (c, h, w) = in_shape;
+    let sum_scale = plan.x.mul(plan.k);
+    let at = |ch: usize, y: isize, x: isize| -> i64 {
+        if y < 0 || x < 0 || y >= h as isize || x >= w as isize {
+            0
+        } else {
+            input_q[(ch * h + y as usize) * w + x as usize]
+        }
+    };
+    match layer.kind {
+        LayerKind::Conv2d { out_channels, kernel, stride, pad } => {
+            let (oc, oh, ow) = layer.out_shape(c, h, w);
+            let mut out = vec![0i64; oc * oh * ow];
+            for o in 0..out_channels {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let mut acc = 0i64;
+                        for i in 0..c {
+                            for ky in 0..kernel {
+                                for kx in 0..kernel {
+                                    let y = (oy * stride + ky) as isize - pad as isize;
+                                    let x = (ox * stride + kx) as isize - pad as isize;
+                                    let kq = plan.quant_k(layer.conv_w(c, kernel, o, i, ky, kx));
+                                    acc += kq * at(i, y, x);
+                                }
+                            }
+                        }
+                        let delta = sum_scale.quantize(rng.gen_f64_range(-epsilon, epsilon));
+                        out[(o * oh + oy) * ow + ox] = acc + delta;
+                    }
+                }
+            }
+            (out, (oc, oh, ow))
+        }
+        LayerKind::Fc { out_features } => {
+            let in_features = input_q.len();
+            let mut out = vec![0i64; out_features];
+            for (o, out_slot) in out.iter_mut().enumerate() {
+                let mut acc = 0i64;
+                for (i, &x) in input_q.iter().enumerate() {
+                    acc += plan.quant_k(layer.fc_w(in_features, o, i)) * x;
+                }
+                let delta = sum_scale.quantize(rng.gen_f64_range(-epsilon, epsilon));
+                *out_slot = acc + delta;
+            }
+            (out, (1, 1, out_features))
+        }
+        _ => panic!("forward_linear_quantized only handles linear layers"),
+    }
+}
+
+/// Quantized nonlinear: ReLU on block sums, requantized back to activation
+/// scale `plan.x` and clamped — mirrors the protocol's recovery hop (the
+/// client re-encodes `y` at `plan.y`, multiplies by `1/v` at `plan.id`).
+pub fn relu_requantize(sums: &[i64], plan: &ScalePlan) -> Vec<i64> {
+    let sum_scale = plan.x.mul(plan.k);
+    sums.iter()
+        .map(|&s| {
+            let real = sum_scale.dequantize(s.max(0));
+            // Two-step requantization identical to the protocol: y at plan.y,
+            // multiplied by an exactly-representable 1/v pair ≈ scale plan.id.
+            let y = plan.y.quantize(real.clamp(0.0, plan.y_max));
+            let back = plan.y.dequantize(y);
+            plan.x.quantize(back.min(plan.x_max))
+        })
+        .collect()
+}
+
+/// Quantized mean-pool on activation integers (shares are pooled the same
+/// way by each party in the protocol). Truncating division — both parties
+/// apply the identical rule.
+pub fn mean_pool_quantized(
+    input_q: &[i64],
+    in_shape: (usize, usize, usize),
+    size: usize,
+) -> (Vec<i64>, (usize, usize, usize)) {
+    let (c, h, w) = in_shape;
+    let (oh, ow) = (h / size, w / size);
+    let mut out = vec![0i64; c * oh * ow];
+    let div = (size * size) as i64;
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0i64;
+                for dy in 0..size {
+                    for dx in 0..size {
+                        acc += input_q[(ch * h + oy * size + dy) * w + ox * size + dx];
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = acc.div_euclid(div);
+            }
+        }
+    }
+    (out, (c, oh, ow))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1×1 kernel with weight 1.0 is the identity.
+        let mut layer = Layer::conv(1, 1, 1, 0);
+        layer.weights = vec![1.0];
+        let input = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        let out = forward_layer(&layer, &input);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn conv_known_values() {
+        // 2×2 input, 3×3 kernel, pad 1, stride 1 → the paper's §3.1 example.
+        let mut layer = Layer::conv(1, 3, 1, 1);
+        layer.weights = (1..=9).map(|v| v as f64).collect(); // k(1,1)..k(3,3)
+        let input = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        let out = forward_layer(&layer, &input);
+        assert_eq!(out.shape(), (1, 2, 2));
+        // Con_1 (output at 0,0): k(2,2)x(1,1)+k(2,3)x(1,2)+k(3,2)x(2,1)+k(3,3)x(2,2)
+        //                       = 5*1 + 6*2 + 8*3 + 9*4 = 77
+        assert_eq!(out.at(0, 0, 0), 77.0);
+        // Con_2 (output at 0,1): k(2,1)*1 + k(2,2)*2 + k(3,1)*3 + k(3,2)*4 = 4+10+21+32 = 67
+        assert_eq!(out.at(0, 0, 1), 4.0 + 10.0 + 21.0 + 32.0);
+    }
+
+    #[test]
+    fn conv_stride_shape() {
+        let layer = Layer::conv(8, 5, 2, 0);
+        assert_eq!(layer.out_shape(1, 28, 28), (8, 12, 12));
+    }
+
+    #[test]
+    fn relu_zeroes_negatives() {
+        let layer = Layer::relu();
+        let input = Tensor::from_flat(vec![-1.0, 2.0, -0.5, 0.0]);
+        let out = forward_layer(&layer, &input);
+        assert_eq!(out.data, vec![0.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn mean_pool_averages() {
+        let layer = Layer::mean_pool(2);
+        let input = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        let out = forward_layer(&layer, &input);
+        assert_eq!(out.data, vec![2.5]);
+    }
+
+    #[test]
+    fn fc_dot_products() {
+        let mut layer = Layer::fc(2);
+        layer.weights = vec![1.0, 0.0, 0.0, /* row 2 */ 0.0, 1.0, 1.0];
+        let input = Tensor::from_flat(vec![3.0, 4.0, 5.0]);
+        let out = forward_layer(&layer, &input);
+        assert_eq!(out.data, vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn quantized_conv_matches_float() {
+        let plan = ScalePlan::default_plan();
+        let mut rng = SplitMix64::new(1);
+        let mut layer = Layer::conv(2, 3, 1, 1);
+        layer.init_weights(1, 4, 4, &mut rng);
+        let input = Tensor::from_vec((0..16).map(|i| (i as f64 - 8.0) / 8.0).collect(), 1, 4, 4);
+        let fl = forward_layer(&layer, &input);
+
+        let input_q: Vec<i64> = input.data.iter().map(|&x| plan.quant_x(x)).collect();
+        let (sums, shape) = forward_linear_quantized(&layer, &input_q, (1, 4, 4), &plan, 0.0, &mut rng);
+        assert_eq!(shape, (2, 4, 4));
+        let sum_scale = plan.x.mul(plan.k);
+        for i in 0..fl.len() {
+            let got = sum_scale.dequantize(sums[i]);
+            assert!((got - fl.data[i]).abs() < 0.1, "i={i} got={got} want={}", fl.data[i]);
+        }
+    }
+
+    #[test]
+    fn relu_requantize_behaviour() {
+        let plan = ScalePlan::default_plan();
+        let sum_scale = plan.x.mul(plan.k);
+        let sums = vec![sum_scale.quantize(1.0), sum_scale.quantize(-1.0), 0];
+        let act = relu_requantize(&sums, &plan);
+        assert_eq!(act[0], plan.x.quantize(1.0));
+        assert_eq!(act[1], 0);
+        assert_eq!(act[2], 0);
+    }
+
+    #[test]
+    fn quantized_mean_pool() {
+        let (out, shape) = mean_pool_quantized(&[4, 8, 12, 16], (1, 2, 2), 2);
+        assert_eq!(out, vec![10]);
+        assert_eq!(shape, (1, 1, 1));
+    }
+}

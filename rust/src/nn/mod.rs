@@ -1,0 +1,17 @@
+//! Neural-network substrate: tensors, layers, the benchmark network zoo
+//! (Network A, Network B, AlexNet, VGG-16), plaintext reference inference
+//! (float and quantized), and the synthetic-digits dataset.
+//!
+//! The plaintext quantized forward pass is the correctness oracle for the
+//! private protocols: CHEETAH must produce the same argmax (and values
+//! within quantization + δ-noise tolerance).
+
+pub mod dataset;
+pub mod layers;
+pub mod network;
+pub mod tensor;
+
+pub use dataset::SyntheticDigits;
+pub use layers::{Layer, LayerKind};
+pub use network::{Network, NetworkArch};
+pub use tensor::Tensor;

@@ -1,0 +1,323 @@
+//! The benchmark network zoo and whole-network inference.
+//!
+//! Architectures match the paper's §5.2 benchmarks:
+//!
+//! * **Network A** (DeepSecure [24]): 1 Conv + 2 FC, ReLU — MNIST-scale.
+//! * **Network B** (MiniONN [23]): 2 Conv + 2 FC, ReLU + mean pooling.
+//! * **AlexNet** [5]: 5 Conv + 3 FC (224×224×3 input).
+//! * **VGG-16** [6]: 13 Conv + 3 FC (224×224×3 input).
+//!
+//! Plus `scaled(f)` variants that shrink spatial dimensions for fast CI
+//! benchmarking while preserving layer structure.
+
+use super::layers::{
+    forward_layer, forward_linear_quantized, mean_pool_quantized, relu_requantize, Layer,
+    LayerKind,
+};
+use super::tensor::Tensor;
+use crate::fixed::ScalePlan;
+use crate::util::rng::SplitMix64;
+
+/// Named benchmark architectures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NetworkArch {
+    NetA,
+    NetB,
+    AlexNet,
+    Vgg16,
+}
+
+impl NetworkArch {
+    pub fn name(&self) -> &'static str {
+        match self {
+            NetworkArch::NetA => "Network A",
+            NetworkArch::NetB => "Network B",
+            NetworkArch::AlexNet => "AlexNet",
+            NetworkArch::Vgg16 => "VGG-16",
+        }
+    }
+
+    pub fn all() -> [NetworkArch; 4] {
+        [NetworkArch::NetA, NetworkArch::NetB, NetworkArch::AlexNet, NetworkArch::Vgg16]
+    }
+}
+
+/// A network: input shape + layer stack (with weights).
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub input_shape: (usize, usize, usize),
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Build a named architecture with seeded random weights.
+    pub fn build(arch: NetworkArch, seed: u64) -> Self {
+        Self::build_scaled(arch, seed, 1.0)
+    }
+
+    /// Build with spatial dimensions scaled by `f` (0 < f ≤ 1). Channel
+    /// counts ≥ 1 are preserved in ratio; layer structure is identical.
+    pub fn build_scaled(arch: NetworkArch, seed: u64, f: f64) -> Self {
+        let s = |v: usize| ((v as f64 * f).round() as usize).max(1);
+        let (input_shape, layers) = match arch {
+            NetworkArch::NetA => (
+                (1, s(28), s(28)),
+                vec![
+                    Layer::conv(5, 5, 2, 2),
+                    Layer::relu(),
+                    Layer::fc(s(100)),
+                    Layer::relu(),
+                    Layer::fc(10),
+                ],
+            ),
+            NetworkArch::NetB => (
+                (1, s(28), s(28)),
+                vec![
+                    Layer::conv(16, 5, 1, 2),
+                    Layer::relu(),
+                    Layer::mean_pool(2),
+                    Layer::conv(16, 5, 1, 2),
+                    Layer::relu(),
+                    Layer::mean_pool(2),
+                    Layer::fc(s(100)),
+                    Layer::relu(),
+                    Layer::fc(10),
+                ],
+            ),
+            NetworkArch::AlexNet => (
+                (3, s(224), s(224)),
+                vec![
+                    Layer::conv(s(96), 11, 4, 2),
+                    Layer::relu(),
+                    Layer::mean_pool(2),
+                    Layer::conv(s(256), 5, 1, 2),
+                    Layer::relu(),
+                    Layer::mean_pool(2),
+                    Layer::conv(s(384), 3, 1, 1),
+                    Layer::relu(),
+                    Layer::conv(s(384), 3, 1, 1),
+                    Layer::relu(),
+                    Layer::conv(s(256), 3, 1, 1),
+                    Layer::relu(),
+                    Layer::mean_pool(2),
+                    Layer::fc(s(4096)),
+                    Layer::relu(),
+                    Layer::fc(s(4096)),
+                    Layer::relu(),
+                    Layer::fc(1000.min(s(1000).max(10))),
+                ],
+            ),
+            NetworkArch::Vgg16 => {
+                let mut ls = Vec::new();
+                let blocks: [(usize, usize); 5] =
+                    [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)];
+                for (ch, reps) in blocks {
+                    for _ in 0..reps {
+                        ls.push(Layer::conv(s(ch), 3, 1, 1));
+                        ls.push(Layer::relu());
+                    }
+                    ls.push(Layer::mean_pool(2));
+                }
+                ls.push(Layer::fc(s(4096)));
+                ls.push(Layer::relu());
+                ls.push(Layer::fc(s(4096)));
+                ls.push(Layer::relu());
+                ls.push(Layer::fc(1000.min(s(1000).max(10))));
+                ((3, s(224), s(224)), ls)
+            }
+        };
+        let mut net = Self {
+            name: format!("{}{}", arch.name(), if f < 1.0 { " (scaled)" } else { "" }),
+            input_shape,
+            layers,
+        };
+        net.init_weights(seed);
+        net
+    }
+
+    /// (Re-)initialize every layer's weights from a seed.
+    pub fn init_weights(&mut self, seed: u64) {
+        let mut rng = SplitMix64::new(seed);
+        let (mut c, mut h, mut w) = self.input_shape;
+        for layer in self.layers.iter_mut() {
+            layer.init_weights(c, h, w, &mut rng);
+            let (nc, nh, nw) = layer.out_shape(c, h, w);
+            c = nc;
+            h = nh;
+            w = nw;
+        }
+    }
+
+    /// Per-layer output shapes.
+    pub fn shapes(&self) -> Vec<(usize, usize, usize)> {
+        let mut shapes = vec![self.input_shape];
+        let (mut c, mut h, mut w) = self.input_shape;
+        for layer in &self.layers {
+            let s = layer.out_shape(c, h, w);
+            shapes.push(s);
+            (c, h, w) = s;
+        }
+        shapes
+    }
+
+    /// Total parameter count.
+    pub fn num_params(&self) -> usize {
+        let mut total = 0;
+        let (mut c, mut h, mut w) = self.input_shape;
+        for layer in &self.layers {
+            total += layer.num_weights(c, h, w);
+            (c, h, w) = layer.out_shape(c, h, w);
+        }
+        total
+    }
+
+    /// Float reference inference.
+    pub fn forward(&self, input: &Tensor) -> Tensor {
+        assert_eq!(input.shape(), self.input_shape, "input shape mismatch");
+        let mut x = input.clone();
+        for layer in &self.layers {
+            x = forward_layer(layer, &x);
+        }
+        x
+    }
+
+    /// Quantized inference with the paper's per-linear-output noise
+    /// `δ ~ U[-ε, ε]` — the plaintext mirror of the private protocol.
+    /// Returns logits at activation scale `plan.x`.
+    pub fn forward_quantized(
+        &self,
+        input: &Tensor,
+        plan: &ScalePlan,
+        epsilon: f64,
+        noise_seed: u64,
+    ) -> Vec<i64> {
+        let mut rng = SplitMix64::new(noise_seed);
+        let mut q: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
+        let mut shape = self.input_shape;
+        let mut i = 0;
+        while i < self.layers.len() {
+            let layer = &self.layers[i];
+            match layer.kind {
+                LayerKind::Conv2d { .. } | LayerKind::Fc { .. } => {
+                    let (sums, new_shape) =
+                        forward_linear_quantized(layer, &q, shape, plan, epsilon, &mut rng);
+                    shape = new_shape;
+                    // Fused linear + ReLU (the protocol always computes them
+                    // jointly); a bare linear at the end stays raw sums
+                    // requantized.
+                    if i + 1 < self.layers.len()
+                        && self.layers[i + 1].kind == LayerKind::Relu
+                    {
+                        q = relu_requantize(&sums, plan);
+                        i += 2;
+                    } else {
+                        let sum_scale = plan.x.mul(plan.k);
+                        q = sums
+                            .iter()
+                            .map(|&s| plan.x.quantize(sum_scale.dequantize(s)))
+                            .collect();
+                        i += 1;
+                    }
+                }
+                LayerKind::MeanPool { size } => {
+                    let (pooled, new_shape) = mean_pool_quantized(&q, shape, size);
+                    q = pooled;
+                    shape = new_shape;
+                    i += 1;
+                }
+                LayerKind::Relu => {
+                    q = q.iter().map(|&v| v.max(0)).collect();
+                    i += 1;
+                }
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_shapes() {
+        let a = Network::build(NetworkArch::NetA, 1);
+        let shapes = a.shapes();
+        assert_eq!(shapes[0], (1, 28, 28));
+        assert_eq!(*shapes.last().unwrap(), (1, 1, 10));
+
+        let b = Network::build(NetworkArch::NetB, 1);
+        assert_eq!(*b.shapes().last().unwrap(), (1, 1, 10));
+        assert_eq!(b.layers.len(), 9);
+    }
+
+    #[test]
+    fn alexnet_vgg_structure() {
+        let alex = Network::build_scaled(NetworkArch::AlexNet, 1, 0.25);
+        let n_conv = alex
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv2d { .. }))
+            .count();
+        let n_fc =
+            alex.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        assert_eq!((n_conv, n_fc), (5, 3), "AlexNet is 5 Conv + 3 FC");
+
+        let vgg = Network::build_scaled(NetworkArch::Vgg16, 1, 0.125);
+        let n_conv =
+            vgg.layers.iter().filter(|l| matches!(l.kind, LayerKind::Conv2d { .. })).count();
+        let n_fc =
+            vgg.layers.iter().filter(|l| matches!(l.kind, LayerKind::Fc { .. })).count();
+        assert_eq!((n_conv, n_fc), (13, 3), "VGG-16 is 13 Conv + 3 FC");
+    }
+
+    #[test]
+    fn full_scale_vgg_dimensions() {
+        let vgg = Network::build(NetworkArch::Vgg16, 1);
+        let shapes = vgg.shapes();
+        // After 5 pool-by-2 stages: 224 → 7; final conv block is 512×7×7.
+        let before_fc = shapes[shapes.len() - 6]; // last pool output
+        assert_eq!(before_fc, (512, 7, 7));
+        assert!(vgg.num_params() > 100_000_000, "VGG-16 has >100M params");
+    }
+
+    #[test]
+    fn forward_runs_small() {
+        let net = Network::build(NetworkArch::NetA, 3);
+        let mut rng = SplitMix64::new(9);
+        let input = Tensor::from_vec(
+            (0..28 * 28).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+            1,
+            28,
+            28,
+        );
+        let out = net.forward(&input);
+        assert_eq!(out.len(), 10);
+        assert!(out.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn quantized_close_to_float_and_noise_matters() {
+        let plan = ScalePlan::default_plan();
+        let net = Network::build(NetworkArch::NetA, 3);
+        let mut rng = SplitMix64::new(10);
+        let input = Tensor::from_vec(
+            (0..28 * 28).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+            1,
+            28,
+            28,
+        );
+        let float_out = net.forward(&input);
+        let q0 = net.forward_quantized(&input, &plan, 0.0, 7);
+        // Same argmax at ε=0 (quantization only).
+        let qmax = q0.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        assert_eq!(qmax, float_out.argmax(), "quantization changed the argmax");
+        // Large ε perturbs outputs.
+        let q_big = net.forward_quantized(&input, &plan, 10.0, 7);
+        assert_ne!(q0, q_big);
+        // ε=0 is deterministic regardless of the noise seed.
+        let q1 = net.forward_quantized(&input, &plan, 0.0, 999);
+        assert_eq!(q0, q1);
+    }
+}

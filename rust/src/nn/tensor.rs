@@ -1,0 +1,115 @@
+//! A minimal channel-major 3-D tensor (`c × h × w`) plus flat views.
+//!
+//! Deliberately simple: the protocols need explicit index arithmetic (slot
+//! packing mirrors these layouts), so a transparent representation beats a
+//! clever one.
+
+/// Dense `f64` tensor with shape `(channels, height, width)`.
+/// A flat vector is represented as `(1, 1, len)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub data: Vec<f64>,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl Tensor {
+    pub fn zeros(c: usize, h: usize, w: usize) -> Self {
+        Self { data: vec![0.0; c * h * w], c, h, w }
+    }
+
+    pub fn from_vec(data: Vec<f64>, c: usize, h: usize, w: usize) -> Self {
+        assert_eq!(data.len(), c * h * w, "shape/data mismatch");
+        Self { data, c, h, w }
+    }
+
+    /// Flat vector constructor.
+    pub fn from_flat(data: Vec<f64>) -> Self {
+        let n = data.len();
+        Self { data, c: 1, h: 1, w: n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.c, self.h, self.w)
+    }
+
+    #[inline]
+    pub fn at(&self, c: usize, y: usize, x: usize) -> f64 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f64 {
+        debug_assert!(c < self.c && y < self.h && x < self.w);
+        &mut self.data[(c * self.h + y) * self.w + x]
+    }
+
+    /// Padded read: zero outside bounds (for "same" convolutions).
+    #[inline]
+    pub fn at_padded(&self, c: usize, y: isize, x: isize) -> f64 {
+        if y < 0 || x < 0 || y >= self.h as isize || x >= self.w as isize {
+            0.0
+        } else {
+            self.at(c, y as usize, x as usize)
+        }
+    }
+
+    /// Index of the maximum element (argmax for classification).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indexing_is_channel_major() {
+        let mut t = Tensor::zeros(2, 3, 4);
+        *t.at_mut(1, 2, 3) = 7.0;
+        assert_eq!(t.data[(1 * 3 + 2) * 4 + 3], 7.0);
+        assert_eq!(t.at(1, 2, 3), 7.0);
+        assert_eq!(t.at(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn padded_reads() {
+        let t = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0], 1, 2, 2);
+        assert_eq!(t.at_padded(0, -1, 0), 0.0);
+        assert_eq!(t.at_padded(0, 0, 2), 0.0);
+        assert_eq!(t.at_padded(0, 1, 1), 4.0);
+    }
+
+    #[test]
+    fn argmax_and_max_abs() {
+        let t = Tensor::from_flat(vec![0.1, -5.0, 3.0, 2.0]);
+        assert_eq!(t.argmax(), 2);
+        assert_eq!(t.max_abs(), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn bad_shape_panics() {
+        Tensor::from_vec(vec![1.0; 5], 1, 2, 3);
+    }
+}

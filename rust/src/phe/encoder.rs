@@ -1,0 +1,187 @@
+//! SEAL-style SIMD batching encoder.
+//!
+//! The plaintext ring `Z_p[X]/(X^n+1)` with `p ≡ 1 (mod 2n)` splits into `n`
+//! slots arranged as a `2 × n/2` matrix; `rotate_rows` cyclically shifts each
+//! half-row and `rotate_columns` swaps the rows. The slot↔coefficient maps
+//! are a negacyclic NTT over `Z_p` composed with the index permutation
+//! induced by the group `⟨3⟩ × ⟨-1⟩ ⊂ Z_{2n}^*`.
+//!
+//! Values are signed, centered in `[-(p-1)/2, (p-1)/2]`.
+
+use super::ntt::NttTables;
+use crate::util::math::reverse_bits;
+
+/// A plaintext polynomial: coefficients modulo `p`, coefficient domain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Plaintext {
+    pub coeffs: Vec<u64>,
+}
+
+/// Batching encoder for a given `(n, p)`.
+pub struct BatchEncoder {
+    pub p: u64,
+    pub n: usize,
+    ntt: NttTables,
+    /// slot index → coefficient index (after the plaintext NTT).
+    index_map: Vec<usize>,
+}
+
+impl BatchEncoder {
+    pub fn new(n: usize, p: u64) -> Self {
+        let ntt = NttTables::new(n, p);
+        let log_n = (n as u64).trailing_zeros();
+        let m = 2 * n as u64;
+        let row_size = n / 2;
+        let mut index_map = vec![0usize; n];
+        let gen: u64 = 3;
+        let mut pos: u64 = 1;
+        for i in 0..row_size {
+            let idx1 = ((pos - 1) >> 1) as usize;
+            let idx2 = ((m - pos - 1) >> 1) as usize;
+            index_map[i] = reverse_bits(idx1 as u64, log_n) as usize;
+            index_map[row_size + i] = reverse_bits(idx2 as u64, log_n) as usize;
+            pos = (pos * gen) & (m - 1);
+        }
+        Self { p, n, ntt, index_map }
+    }
+
+    /// Reduce a signed value into `[0, p)`.
+    #[inline]
+    pub fn to_mod_p(&self, v: i64) -> u64 {
+        let p = self.p as i64;
+        let r = v % p;
+        (if r < 0 { r + p } else { r }) as u64
+    }
+
+    /// Center a residue `[0, p)` into `[-(p-1)/2, (p-1)/2]`.
+    #[inline]
+    pub fn center(&self, v: u64) -> i64 {
+        if v > (self.p - 1) / 2 {
+            v as i64 - self.p as i64
+        } else {
+            v as i64
+        }
+    }
+
+    /// Encode up to `n` signed slot values into a plaintext polynomial.
+    /// Missing slots are zero.
+    pub fn encode(&self, values: &[i64]) -> Plaintext {
+        assert!(values.len() <= self.n, "too many slots ({} > {})", values.len(), self.n);
+        let mut coeffs = vec![0u64; self.n];
+        for (i, &v) in values.iter().enumerate() {
+            coeffs[self.index_map[i]] = self.to_mod_p(v);
+        }
+        self.ntt.inverse(&mut coeffs);
+        Plaintext { coeffs }
+    }
+
+    /// Encode unsigned residues (already in `[0, p)`).
+    pub fn encode_unsigned(&self, values: &[u64]) -> Plaintext {
+        assert!(values.len() <= self.n);
+        let mut coeffs = vec![0u64; self.n];
+        for (i, &v) in values.iter().enumerate() {
+            debug_assert!(v < self.p);
+            coeffs[self.index_map[i]] = v;
+        }
+        self.ntt.inverse(&mut coeffs);
+        Plaintext { coeffs }
+    }
+
+    /// Decode a plaintext into `n` centered signed slot values.
+    pub fn decode(&self, pt: &Plaintext) -> Vec<i64> {
+        let mut buf = pt.coeffs.clone();
+        self.ntt.forward(&mut buf);
+        (0..self.n).map(|i| self.center(buf[self.index_map[i]])).collect()
+    }
+
+    /// Decode into unsigned residues `[0, p)`.
+    pub fn decode_unsigned(&self, pt: &Plaintext) -> Vec<u64> {
+        let mut buf = pt.coeffs.clone();
+        self.ntt.forward(&mut buf);
+        (0..self.n).map(|i| buf[self.index_map[i]]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::params::Params;
+    use crate::util::rng::SplitMix64;
+
+    fn encoder() -> BatchEncoder {
+        let pr = Params::new(1024, 20);
+        BatchEncoder::new(pr.n, pr.p)
+    }
+
+    #[test]
+    fn roundtrip_signed() {
+        let enc = encoder();
+        let mut rng = SplitMix64::new(11);
+        let half = (enc.p as i64 - 1) / 2;
+        let vals: Vec<i64> = (0..enc.n).map(|_| rng.gen_i64_range(-half, half)).collect();
+        let pt = enc.encode(&vals);
+        assert_eq!(enc.decode(&pt), vals);
+    }
+
+    #[test]
+    fn partial_slots_zero_fill() {
+        let enc = encoder();
+        let vals = vec![5i64, -7, 123];
+        let pt = enc.encode(&vals);
+        let dec = enc.decode(&pt);
+        assert_eq!(&dec[..3], &[5, -7, 123]);
+        assert!(dec[3..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn slotwise_addition_is_poly_addition() {
+        // encode(a) + encode(b) (coefficient-wise mod p) == encode(a + b)
+        let enc = encoder();
+        let mut rng = SplitMix64::new(5);
+        let a: Vec<i64> = (0..enc.n).map(|_| rng.gen_i64_range(-1000, 1000)).collect();
+        let b: Vec<i64> = (0..enc.n).map(|_| rng.gen_i64_range(-1000, 1000)).collect();
+        let pa = enc.encode(&a);
+        let pb = enc.encode(&b);
+        let sum_coeffs: Vec<u64> = pa
+            .coeffs
+            .iter()
+            .zip(&pb.coeffs)
+            .map(|(&x, &y)| crate::util::math::add_mod(x, y, enc.p))
+            .collect();
+        let dec = enc.decode(&Plaintext { coeffs: sum_coeffs });
+        let expect: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x + y).collect();
+        assert_eq!(dec, expect);
+    }
+
+    #[test]
+    fn slotwise_mult_is_poly_mult() {
+        // Negacyclic product of encodings == slotwise product of values.
+        let enc = encoder();
+        let mut rng = SplitMix64::new(6);
+        let a: Vec<i64> = (0..enc.n).map(|_| rng.gen_i64_range(-100, 100)).collect();
+        let b: Vec<i64> = (0..enc.n).map(|_| rng.gen_i64_range(-100, 100)).collect();
+        let pa = enc.encode(&a);
+        let pb = enc.encode(&b);
+        // Multiply via the encoder's own NTT (over Z_p).
+        let mut fa = pa.coeffs.clone();
+        let mut fb = pb.coeffs.clone();
+        enc.ntt.forward(&mut fa);
+        enc.ntt.forward(&mut fb);
+        let mut fc: Vec<u64> =
+            fa.iter().zip(&fb).map(|(&x, &y)| crate::util::math::mul_mod(x, y, enc.p)).collect();
+        enc.ntt.inverse(&mut fc);
+        let dec = enc.decode(&Plaintext { coeffs: fc });
+        let expect: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x * y).collect();
+        assert_eq!(dec, expect);
+    }
+
+    #[test]
+    fn index_map_is_permutation() {
+        let enc = encoder();
+        let mut seen = vec![false; enc.n];
+        for &i in &enc.index_map {
+            assert!(!seen[i], "index map not injective");
+            seen[i] = true;
+        }
+    }
+}

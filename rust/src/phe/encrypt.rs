@@ -1,0 +1,202 @@
+//! Symmetric (private-key) BFV encryption, decryption, and noise metering.
+//!
+//! The paper's protocols use private-key BFV on both sides (`[·]_C` and
+//! `[·]_S` denote ciphertexts under the client's and server's keys). Fresh
+//! symmetric ciphertexts are *seed-compressed*: the uniform `c1` component
+//! is regenerated from a 32-byte seed, halving fresh-ciphertext bandwidth
+//! (this matches how SEAL serializes symmetric ciphertexts and is reflected
+//! in the communication accounting).
+
+use super::encoder::Plaintext;
+use super::keys::SecretKey;
+use super::poly::{Form, RnsPoly};
+use super::Context;
+use crate::util::rng::ChaCha20Rng;
+
+/// A BFV ciphertext `(c0, c1)` with `c0 + c1·s = Δ·m + e (mod q)`.
+#[derive(Clone, Debug)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    /// Present iff this is a fresh symmetric encryption whose `c1` is
+    /// derivable from the seed (seed-compressed wire format).
+    pub seed: Option<[u8; 32]>,
+}
+
+impl Ciphertext {
+    pub fn form(&self) -> Form {
+        debug_assert_eq!(self.c0.form, self.c1.form);
+        self.c0.form
+    }
+
+    /// Any in-place evaluation invalidates seed compression.
+    pub fn mark_evaluated(&mut self) {
+        self.seed = None;
+    }
+}
+
+/// Holds a secret key; performs encryption, decryption and noise metering.
+pub struct Encryptor<'a> {
+    pub ctx: &'a Context,
+    pub sk: SecretKey,
+}
+
+impl<'a> Encryptor<'a> {
+    pub fn new(ctx: &'a Context, rng: &mut ChaCha20Rng) -> Self {
+        Self { ctx, sk: SecretKey::generate(ctx, rng) }
+    }
+
+    /// Symmetric encryption: sample uniform `a` from a fresh seed, small
+    /// error `e`, and output `(Δm − a·s − e, a)` in NTT form.
+    pub fn encrypt(&self, pt: &Plaintext, rng: &mut ChaCha20Rng) -> Ciphertext {
+        let ctx = self.ctx;
+        let mut seed = [0u8; 32];
+        rng.fill_bytes(&mut seed);
+        let mut a_rng = ChaCha20Rng::new(&seed, 1);
+        let a = ctx.sample_uniform_ntt(&mut a_rng);
+
+        let mut e = ctx.sample_error(rng);
+        ctx.to_ntt(&mut e);
+
+        let mut c0 = ctx.scale_plain(pt);
+        ctx.to_ntt(&mut c0);
+        // c0 = Δm − a·s − e
+        let mut a_s = a.clone();
+        a_s.mul_assign_pointwise(&self.sk.s_ntt, &ctx.params);
+        c0.sub_assign(&a_s, &ctx.params);
+        c0.sub_assign(&e, &ctx.params);
+
+        Ciphertext { c0, c1: a, seed: Some(seed) }
+    }
+
+    /// Convenience: encode + encrypt signed slot values.
+    pub fn encrypt_slots(&self, values: &[i64], rng: &mut ChaCha20Rng) -> Ciphertext {
+        self.encrypt(&self.ctx.encoder.encode(values), rng)
+    }
+
+    /// Regenerate the `c1` component of a seed-compressed ciphertext.
+    pub fn expand_seed(ctx: &Context, seed: &[u8; 32]) -> RnsPoly {
+        let mut a_rng = ChaCha20Rng::new(seed, 1);
+        ctx.sample_uniform_ntt(&mut a_rng)
+    }
+
+    /// The raw decryption inner product `w = c0 + c1·s` in coefficient form.
+    fn decrypt_inner(&self, ct: &Ciphertext) -> RnsPoly {
+        let ctx = self.ctx;
+        let mut c0 = ct.c0.clone();
+        let mut c1 = ct.c1.clone();
+        ctx.to_ntt(&mut c0);
+        ctx.to_ntt(&mut c1);
+        c1.mul_assign_pointwise(&self.sk.s_ntt, &ctx.params);
+        c0.add_assign(&c1, &ctx.params);
+        ctx.to_coeff(&mut c0);
+        c0
+    }
+
+    /// Decrypt to a plaintext polynomial.
+    pub fn decrypt(&self, ct: &Ciphertext) -> Plaintext {
+        let ctx = self.ctx;
+        let w = self.decrypt_inner(ct);
+        let coeffs =
+            (0..ctx.params.n).map(|j| ctx.params.unscale_from_q(ctx.crt_reconstruct(&w, j))).collect();
+        Plaintext { coeffs }
+    }
+
+    /// Decrypt + decode to centered signed slot values.
+    pub fn decrypt_slots(&self, ct: &Ciphertext) -> Vec<i64> {
+        self.ctx.encoder.decode(&self.decrypt(ct))
+    }
+
+    /// Remaining noise budget in bits: `log2(q/2p) − log2(max|err|)`.
+    /// Returns 0 when decryption is no longer guaranteed correct.
+    pub fn noise_budget(&self, ct: &Ciphertext) -> u32 {
+        let ctx = self.ctx;
+        let q = ctx.params.q();
+        let w = self.decrypt_inner(ct);
+        let pt = Plaintext {
+            coeffs: (0..ctx.params.n)
+                .map(|j| ctx.params.unscale_from_q(ctx.crt_reconstruct(&w, j)))
+                .collect(),
+        };
+        let clean = ctx.scale_plain(&pt);
+        let mut max_err: u128 = 0;
+        for j in 0..ctx.params.n {
+            let a = ctx.crt_reconstruct(&w, j);
+            let b = ctx.crt_reconstruct(&clean, j);
+            let d = if a >= b { a - b } else { b - a };
+            let centered = d.min(q - d);
+            max_err = max_err.max(centered);
+        }
+        let allowance_bits = (127 - (q / (2 * ctx.params.p as u128)).leading_zeros()) as i64;
+        let err_bits = (128 - max_err.leading_zeros()) as i64;
+        (allowance_bits - err_bits).max(0) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::params::Params;
+    use crate::util::proptest;
+
+    fn setup() -> (Context, ChaCha20Rng) {
+        (Context::new(Params::new(1024, 20)), ChaCha20Rng::from_u64_seed(99))
+    }
+
+    #[test]
+    fn encrypt_decrypt_roundtrip() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i - 512).collect();
+        let ct = enc.encrypt_slots(&vals, &mut rng);
+        assert_eq!(enc.decrypt_slots(&ct), vals);
+    }
+
+    #[test]
+    fn fresh_ciphertext_has_budget() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ct = enc.encrypt_slots(&[1, 2, 3], &mut rng);
+        let budget = enc.noise_budget(&ct);
+        // q ≈ 2^90, p ≈ 2^20, fresh noise ≈ 2^7 with s·e terms → plenty left.
+        assert!(budget > 40, "fresh budget only {budget} bits");
+    }
+
+    #[test]
+    fn seed_expansion_matches_c1() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ct = enc.encrypt_slots(&[7, -9], &mut rng);
+        let a = Encryptor::expand_seed(&ctx, &ct.seed.unwrap());
+        assert_eq!(a, ct.c1);
+    }
+
+    #[test]
+    fn wrong_key_garbles() {
+        let (ctx, mut rng) = setup();
+        let enc1 = Encryptor::new(&ctx, &mut rng);
+        let enc2 = Encryptor::new(&ctx, &mut rng);
+        let ct = enc1.encrypt_slots(&[42; 16], &mut rng);
+        let dec = enc2.decrypt_slots(&ct);
+        assert_ne!(&dec[..16], &[42i64; 16][..]);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_values() {
+        let (ctx, _) = setup();
+        let half = ctx.params.max_slot_value();
+        proptest::check_with_rng(2024, 8, |rng| {
+            let mut crng = ChaCha20Rng::from_u64_seed(rng.next_u64());
+            let enc = Encryptor::new(&ctx, &mut crng);
+            let vals: Vec<i64> =
+                (0..ctx.params.n).map(|_| rng.gen_i64_range(-half, half)).collect();
+            let ct = enc.encrypt_slots(&vals, &mut crng);
+            let dec = enc.decrypt_slots(&ct);
+            if dec == vals {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+}

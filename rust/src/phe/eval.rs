@@ -1,0 +1,449 @@
+//! Homomorphic evaluation: Add / AddPlain / MultPlain / Sub / Negate and the
+//! expensive `Perm` (rotation with key switching). Every operation ticks an
+//! [`OpCounts`] so protocols report `#Perm/#Mult/#Add` exactly as the
+//! paper's Tables 2–4 do.
+//!
+//! Convention: server-side linear algebra keeps ciphertexts in **NTT form**
+//! (as GAZELLE does) so `MultPlain` and `Add` are pointwise loops; `Perm`
+//! pays inverse-NTT + digit decomposition + forward NTTs — which is exactly
+//! why the paper measures one `Perm` at 34–56× a `Mult`/`Add`, and why
+//! eliminating `Perm` (CHEETAH's contribution) matters.
+
+use super::encoder::Plaintext;
+use super::keys::{
+    apply_galois_ntt, galois_elt_for_row_swap, galois_elt_for_step, GaloisKeys, KeySwitchKey,
+};
+use super::params::NUM_Q_PRIMES;
+use super::poly::{Form, RnsPoly};
+use super::{Ciphertext, Context};
+use std::cell::RefCell;
+
+/// Operation counters (the paper's cost unit).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    pub add: u64,
+    pub mult: u64,
+    pub perm: u64,
+}
+
+impl OpCounts {
+    pub fn plus(&self, o: &OpCounts) -> OpCounts {
+        OpCounts { add: self.add + o.add, mult: self.mult + o.mult, perm: self.perm + o.perm }
+    }
+}
+
+/// What a plaintext operand is prepared for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OperandKind {
+    /// Centered lift to Z_q — for `MultPlain`.
+    Mult,
+    /// Δ-scaled — for `AddPlain`.
+    Add,
+}
+
+/// A precomputed plaintext operand (NTT form over q). Preparation is the
+/// offline phase; applying it online is a pointwise loop.
+#[derive(Clone, Debug)]
+pub struct PlainOperand {
+    pub poly: RnsPoly,
+    pub kind: OperandKind,
+}
+
+impl Context {
+    /// Prepare a `MultPlain` operand from slot values (offline).
+    pub fn mult_operand(&self, values: &[i64]) -> PlainOperand {
+        self.mult_operand_pt(&self.encoder.encode(values))
+    }
+
+    pub fn mult_operand_pt(&self, pt: &Plaintext) -> PlainOperand {
+        let mut poly = self.lift_centered(pt);
+        self.to_ntt(&mut poly);
+        PlainOperand { poly, kind: OperandKind::Mult }
+    }
+
+    /// Prepare an `AddPlain` operand from slot values (offline).
+    pub fn add_operand(&self, values: &[i64]) -> PlainOperand {
+        self.add_operand_pt(&self.encoder.encode(values))
+    }
+
+    /// Prepare an `AddPlain` operand from unsigned residues mod p
+    /// (used for uniform secret shares).
+    pub fn add_operand_unsigned(&self, values: &[u64]) -> PlainOperand {
+        self.add_operand_pt(&self.encoder.encode_unsigned(values))
+    }
+
+    pub fn add_operand_pt(&self, pt: &Plaintext) -> PlainOperand {
+        let mut poly = self.scale_plain(pt);
+        self.to_ntt(&mut poly);
+        PlainOperand { poly, kind: OperandKind::Add }
+    }
+}
+
+/// Stateless evaluator over a context, with interior-mutable op counters.
+pub struct Evaluator<'a> {
+    pub ctx: &'a Context,
+    counts: RefCell<OpCounts>,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(ctx: &'a Context) -> Self {
+        Self { ctx, counts: RefCell::new(OpCounts::default()) }
+    }
+
+    pub fn counts(&self) -> OpCounts {
+        *self.counts.borrow()
+    }
+
+    pub fn reset_counts(&self) {
+        *self.counts.borrow_mut() = OpCounts::default();
+    }
+
+    /// Convert ciphertext to NTT form (free at the protocol level — done
+    /// once on receipt; not counted as an op, matching GAZELLE's accounting).
+    pub fn to_ntt(&self, ct: &mut Ciphertext) {
+        self.ctx.to_ntt(&mut ct.c0);
+        self.ctx.to_ntt(&mut ct.c1);
+    }
+
+    pub fn to_coeff(&self, ct: &mut Ciphertext) {
+        self.ctx.to_coeff(&mut ct.c0);
+        self.ctx.to_coeff(&mut ct.c1);
+    }
+
+    /// `a += b` (ciphertext addition).
+    pub fn add_assign(&self, a: &mut Ciphertext, b: &Ciphertext) {
+        assert_eq!(a.form(), b.form(), "ciphertext form mismatch in add");
+        a.c0.add_assign(&b.c0, &self.ctx.params);
+        a.c1.add_assign(&b.c1, &self.ctx.params);
+        a.mark_evaluated();
+        self.counts.borrow_mut().add += 1;
+    }
+
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let mut out = a.clone();
+        self.add_assign(&mut out, b);
+        out
+    }
+
+    /// `a -= b`.
+    pub fn sub_assign(&self, a: &mut Ciphertext, b: &Ciphertext) {
+        assert_eq!(a.form(), b.form());
+        a.c0.sub_assign(&b.c0, &self.ctx.params);
+        a.c1.sub_assign(&b.c1, &self.ctx.params);
+        a.mark_evaluated();
+        self.counts.borrow_mut().add += 1;
+    }
+
+    /// `a = -a`.
+    pub fn negate(&self, a: &mut Ciphertext) {
+        a.c0.negate(&self.ctx.params);
+        a.c1.negate(&self.ctx.params);
+        a.mark_evaluated();
+    }
+
+    /// `ct += pt` (plaintext addition; operand must be Δ-scaled and in the
+    /// same form as `ct`).
+    pub fn add_plain(&self, ct: &mut Ciphertext, op: &PlainOperand) {
+        assert_eq!(op.kind, OperandKind::Add, "operand not prepared for AddPlain");
+        assert_eq!(ct.form(), op.poly.form, "form mismatch in add_plain");
+        ct.c0.add_assign(&op.poly, &self.ctx.params);
+        ct.mark_evaluated();
+        self.counts.borrow_mut().add += 1;
+    }
+
+    /// `ct * pt` slot-wise (operand must be centered-lifted, both NTT form).
+    pub fn mult_plain(&self, ct: &Ciphertext, op: &PlainOperand) -> Ciphertext {
+        let mut out = ct.clone();
+        self.mult_plain_assign(&mut out, op);
+        out
+    }
+
+    pub fn mult_plain_assign(&self, ct: &mut Ciphertext, op: &PlainOperand) {
+        assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
+        assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
+        ct.c0.mul_assign_pointwise(&op.poly, &self.ctx.params);
+        ct.c1.mul_assign_pointwise(&op.poly, &self.ctx.params);
+        ct.mark_evaluated();
+        self.counts.borrow_mut().mult += 1;
+    }
+
+    /// Key-switch the automorphed `c1` component back to the base key:
+    /// digit-decompose each RNS residue (base `2^KSK_DIGIT_BITS`) and
+    /// multiply-accumulate against the key-switching key.
+    fn key_switch(&self, c1_auto: &RnsPoly, ksk: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
+        use crate::phe::keys::{digits_per_prime, KSK_DIGIT_BITS};
+        let ctx = self.ctx;
+        let params = &ctx.params;
+        let mut c1_coeff = c1_auto.clone();
+        ctx.to_coeff(&mut c1_coeff);
+        let mut out0 = RnsPoly::zero(params, Form::Ntt);
+        let mut out1 = RnsPoly::zero(params, Form::Ntt);
+        let mask = (1u64 << KSK_DIGIT_BITS) - 1;
+        for j in 0..NUM_Q_PRIMES {
+            for t in 0..digits_per_prime() {
+                // Digit (j, t): bits [Wt, W(t+1)) of the residue mod q_j,
+                // lifted into every prime (digits are < all primes).
+                let mut d = RnsPoly::zero(params, Form::Coeff);
+                for k in 0..params.n {
+                    let digit = (c1_coeff.coeffs[j][k] >> (KSK_DIGIT_BITS * t as u32)) & mask;
+                    for i in 0..NUM_Q_PRIMES {
+                        d.coeffs[i][k] = digit;
+                    }
+                }
+                ctx.to_ntt(&mut d);
+                out0.mac_pointwise(&d, &ksk.pairs[j][t].0, params);
+                out1.mac_pointwise(&d, &ksk.pairs[j][t].1, params);
+            }
+        }
+        (out0, out1)
+    }
+
+    fn apply_galois(&self, ct: &Ciphertext, g: u64, gk: &GaloisKeys) -> Ciphertext {
+        assert_eq!(ct.form(), Form::Ntt, "Perm requires NTT-form ciphertext");
+        let ksk = gk
+            .get(g)
+            .unwrap_or_else(|| panic!("missing Galois key for element {g}"));
+        let c0_auto = apply_galois_ntt(&self.ctx.params, &ct.c0, g);
+        let c1_auto = apply_galois_ntt(&self.ctx.params, &ct.c1, g);
+        let (k0, k1) = self.key_switch(&c1_auto, ksk);
+        let mut c0 = c0_auto;
+        c0.add_assign(&k0, &self.ctx.params);
+        self.counts.borrow_mut().perm += 1;
+        Ciphertext { c0, c1: k1, seed: None }
+    }
+
+    /// `Perm`: rotate each half-row left by `steps` (may be negative).
+    /// Requires the matching Galois key.
+    pub fn rotate_rows(&self, ct: &Ciphertext, steps: i64, gk: &GaloisKeys) -> Ciphertext {
+        let g = galois_elt_for_step(&self.ctx.params, steps);
+        self.apply_galois(ct, g, gk)
+    }
+
+    /// `Perm`: swap the two rows.
+    pub fn rotate_columns(&self, ct: &Ciphertext, gk: &GaloisKeys) -> Ciphertext {
+        let g = galois_elt_for_row_swap(&self.ctx.params);
+        self.apply_galois(ct, g, gk)
+    }
+
+    /// Rotate by an arbitrary step count using the power-of-two key set
+    /// (costs `popcount(steps)` Perms — GAZELLE's composition strategy).
+    pub fn rotate_rows_composed(&self, ct: &Ciphertext, steps: i64, gk: &GaloisKeys) -> Ciphertext {
+        let row = self.ctx.params.row_size() as i64;
+        let mut k = steps.rem_euclid(row) as u64;
+        assert!(k != 0, "zero rotation");
+        let mut out: Option<Ciphertext> = None;
+        let mut bit = 1i64;
+        while k > 0 {
+            if k & 1 == 1 {
+                let src = out.as_ref().unwrap_or(ct);
+                out = Some(self.rotate_rows(src, bit, gk));
+            }
+            k >>= 1;
+            bit <<= 1;
+        }
+        out.unwrap()
+    }
+
+    /// Rotate-and-sum: sum every half-row down to its slot 0 (and slot 0 of
+    /// the second row), in `log2(row_size)` Perm+Add pairs. This is the
+    /// pattern GAZELLE uses to finish a packed inner product — the cost
+    /// CHEETAH's obscure computation removes.
+    pub fn rotate_and_sum_rows(&self, ct: &Ciphertext, gk: &GaloisKeys) -> Ciphertext {
+        let mut acc = ct.clone();
+        let mut step = self.ctx.params.row_size() as i64 / 2;
+        while step >= 1 {
+            let rot = self.rotate_rows(&acc, step, gk);
+            self.add_assign(&mut acc, &rot);
+            step /= 2;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::params::Params;
+    use crate::phe::Encryptor;
+    use crate::util::rng::ChaCha20Rng;
+
+    fn setup() -> (Context, ChaCha20Rng) {
+        (Context::new(Params::new(1024, 20)), ChaCha20Rng::from_u64_seed(5))
+    }
+
+    #[test]
+    fn homomorphic_add() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let a: Vec<i64> = (0..64).collect();
+        let b: Vec<i64> = (0..64).map(|i| 1000 - i).collect();
+        let ca = enc.encrypt_slots(&a, &mut rng);
+        let cb = enc.encrypt_slots(&b, &mut rng);
+        let sum = ev.add(&ca, &cb);
+        let dec = enc.decrypt_slots(&sum);
+        for i in 0..64 {
+            assert_eq!(dec[i], 1000);
+        }
+        assert_eq!(ev.counts().add, 1);
+    }
+
+    #[test]
+    fn homomorphic_mult_plain() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let a: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 101 - 50).collect();
+        let u: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 37 - 18).collect();
+        let mut ca = enc.encrypt_slots(&a, &mut rng);
+        ev.to_ntt(&mut ca);
+        let op = ctx.mult_operand(&u);
+        let prod = ev.mult_plain(&ca, &op);
+        let dec = enc.decrypt_slots(&prod);
+        for i in 0..ctx.params.n {
+            assert_eq!(dec[i], a[i] * u[i], "slot {i}");
+        }
+        assert_eq!(ev.counts().mult, 1);
+        assert!(enc.noise_budget(&prod) > 10, "budget exhausted by MultPlain");
+    }
+
+    #[test]
+    fn homomorphic_add_plain() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let a = vec![10i64, -20, 30];
+        let b = vec![5i64, 5, -5];
+        let mut ca = enc.encrypt_slots(&a, &mut rng);
+        ev.to_ntt(&mut ca);
+        let op = ctx.add_operand(&b);
+        ev.add_plain(&mut ca, &op);
+        let dec = enc.decrypt_slots(&ca);
+        assert_eq!(&dec[..3], &[15, -15, 25]);
+    }
+
+    #[test]
+    fn mult_then_add_plain_exact_mod_p() {
+        // The CHEETAH hop: MultPlain(kv) then AddPlain(b) must be *exact*
+        // in Z_p so the client's block sums are exact.
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let n = ctx.params.n;
+        let x: Vec<i64> = (0..n as i64).map(|i| (i * 7) % 200 - 100).collect();
+        let k: Vec<i64> = (0..n as i64).map(|i| (i * 13) % 64 - 32).collect();
+        let b: Vec<i64> = (0..n as i64).map(|i| (i * 31) % 5000 - 2500).collect();
+        let mut cx = enc.encrypt_slots(&x, &mut rng);
+        ev.to_ntt(&mut cx);
+        let prod = ev.mult_plain(&cx, &ctx.mult_operand(&k));
+        let mut out = prod;
+        ev.add_plain(&mut out, &ctx.add_operand(&b));
+        let dec = enc.decrypt_slots(&out);
+        for i in 0..n {
+            assert_eq!(dec[i], x[i] * k[i] + b[i], "slot {i}");
+        }
+    }
+
+    #[test]
+    fn rotation_rotates_rows_left() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+        let row = ctx.params.row_size();
+        let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
+        let mut ct = enc.encrypt_slots(&vals, &mut rng);
+        ev.to_ntt(&mut ct);
+        let rot = ev.rotate_rows(&ct, 1, &gk);
+        let dec = enc.decrypt_slots(&rot);
+        // Left rotation: slot i of each half-row takes the value of slot i+1.
+        for i in 0..row {
+            assert_eq!(dec[i], vals[(i + 1) % row], "row0 slot {i}");
+            assert_eq!(dec[row + i], vals[row + (i + 1) % row], "row1 slot {i}");
+        }
+        assert_eq!(ev.counts().perm, 1);
+    }
+
+    #[test]
+    fn rotation_negative_and_columns() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+        let row = ctx.params.row_size();
+        let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
+        let mut ct = enc.encrypt_slots(&vals, &mut rng);
+        ev.to_ntt(&mut ct);
+
+        let rot = ev.rotate_rows(&ct, -1, &gk);
+        let dec = enc.decrypt_slots(&rot);
+        for i in 0..row {
+            assert_eq!(dec[i], vals[(i + row - 1) % row]);
+        }
+
+        let swapped = ev.rotate_columns(&ct, &gk);
+        let dec = enc.decrypt_slots(&swapped);
+        for i in 0..row {
+            assert_eq!(dec[i], vals[row + i]);
+            assert_eq!(dec[row + i], vals[i]);
+        }
+    }
+
+    #[test]
+    fn composed_rotation() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+        let row = ctx.params.row_size();
+        let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
+        let mut ct = enc.encrypt_slots(&vals, &mut rng);
+        ev.to_ntt(&mut ct);
+        let steps = 11i64; // 1011b → 3 Perms
+        ev.reset_counts();
+        let rot = ev.rotate_rows_composed(&ct, steps, &gk);
+        assert_eq!(ev.counts().perm, 3);
+        let dec = enc.decrypt_slots(&rot);
+        for i in 0..row {
+            assert_eq!(dec[i], vals[(i + 11) % row]);
+        }
+    }
+
+    #[test]
+    fn rotate_and_sum_computes_row_totals() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+        let row = ctx.params.row_size();
+        let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 17).collect();
+        let mut ct = enc.encrypt_slots(&vals, &mut rng);
+        ev.to_ntt(&mut ct);
+        let summed = ev.rotate_and_sum_rows(&ct, &gk);
+        let dec = enc.decrypt_slots(&summed);
+        let expect0: i64 = vals[..row].iter().sum();
+        let expect1: i64 = vals[row..].iter().sum();
+        assert_eq!(dec[0], expect0);
+        assert_eq!(dec[row], expect1);
+        // log2(row) Perm+Add pairs.
+        assert_eq!(ev.counts().perm, (row as f64).log2() as u64);
+    }
+
+    #[test]
+    fn noise_budget_decreases_monotonically() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+        let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+        let mut ct = enc.encrypt_slots(&[3; 8], &mut rng);
+        ev.to_ntt(&mut ct);
+        let b0 = enc.noise_budget(&ct);
+        let ct2 = ev.mult_plain(&ct, &ctx.mult_operand(&vec![100i64; ctx.params.n]));
+        let b1 = enc.noise_budget(&ct2);
+        let ct3 = ev.rotate_rows(&ct2, 1, &gk);
+        let b2 = enc.noise_budget(&ct3);
+        assert!(b0 > b1, "mult did not consume budget ({b0} -> {b1})");
+        assert!(b1 >= b2, "perm increased budget ({b1} -> {b2})");
+        assert!(b2 > 0, "budget exhausted");
+    }
+}

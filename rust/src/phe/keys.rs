@@ -1,0 +1,286 @@
+//! Secret keys, Galois automorphisms, and key-switching keys.
+//!
+//! `Perm` (slot rotation) applies a Galois automorphism `X → X^g` to the
+//! ciphertext, which re-keys it under `s(X^g)`; a key-switching key (one
+//! small ciphertext pair per RNS digit) converts it back to `s`. This is
+//! the operation the paper measures as 34–56× slower than Mult/Add, and the
+//! one CHEETAH eliminates entirely.
+
+use super::params::{Params, NUM_Q_PRIMES};
+use super::poly::{Form, RnsPoly};
+use super::Context;
+use crate::util::math::pow_mod;
+use crate::util::rng::ChaCha20Rng;
+use std::collections::HashMap;
+
+/// The secret key: a ternary polynomial, cached in both domains.
+pub struct SecretKey {
+    /// NTT form (used for encrypt/decrypt inner products).
+    pub s_ntt: RnsPoly,
+    /// Coefficient form (used to derive automorphed keys).
+    pub s_coeff: RnsPoly,
+}
+
+impl SecretKey {
+    pub fn generate(ctx: &Context, rng: &mut ChaCha20Rng) -> Self {
+        let s_coeff = ctx.sample_ternary(rng);
+        let mut s_ntt = s_coeff.clone();
+        ctx.to_ntt(&mut s_ntt);
+        Self { s_ntt, s_coeff }
+    }
+}
+
+/// Galois element implementing a cyclic left-rotation of each half-row by
+/// `steps` (positive) slots. `steps` must be non-zero mod `n/2`.
+pub fn galois_elt_for_step(params: &Params, steps: i64) -> u64 {
+    let row = params.row_size() as i64;
+    let m = 2 * params.n as u64;
+    let k = steps.rem_euclid(row);
+    assert!(k != 0, "rotation step must be non-zero");
+    pow_mod(3, k as u64, m)
+}
+
+/// Galois element swapping the two rows (SEAL's `rotate_columns`).
+pub fn galois_elt_for_row_swap(params: &Params) -> u64 {
+    2 * params.n as u64 - 1
+}
+
+/// Apply the automorphism `a(X) → a(X^g)` to a coefficient-form poly.
+pub fn apply_galois_coeff(params: &Params, a: &RnsPoly, g: u64) -> RnsPoly {
+    assert_eq!(a.form, Form::Coeff);
+    let n = params.n;
+    let m = 2 * n as u64;
+    let mut out = RnsPoly::zero(params, Form::Coeff);
+    for (i, &q) in params.qs.iter().enumerate() {
+        for j in 0..n {
+            let idx = (j as u64 * g) % m;
+            let c = a.coeffs[i][j];
+            if idx < n as u64 {
+                out.coeffs[i][idx as usize] = c;
+            } else {
+                // X^n = -1 wraps with a sign flip.
+                out.coeffs[i][(idx - n as u64) as usize] = if c == 0 { 0 } else { q - c };
+            }
+        }
+    }
+    out
+}
+
+/// Apply the automorphism to an NTT-form poly: in bit-reversed evaluation
+/// order this is a pure permutation of the evaluations
+/// (`B[i] = A[π_g(i)]` with `π_g` derived from the odd-exponent indexing).
+pub fn apply_galois_ntt(params: &Params, a: &RnsPoly, g: u64) -> RnsPoly {
+    assert_eq!(a.form, Form::Ntt);
+    let n = params.n;
+    let log_n = params.log_n;
+    let m = 2 * n as u64;
+    let mut out = RnsPoly::zero(params, Form::Ntt);
+    // Precompute the permutation once; shared across RNS primes.
+    let mut perm = vec![0usize; n];
+    for (i, pi) in perm.iter_mut().enumerate() {
+        let rb = crate::util::math::reverse_bits(i as u64, log_n);
+        let idx_raw = ((2 * rb + 1) * g) % m;
+        *pi = crate::util::math::reverse_bits((idx_raw - 1) >> 1, log_n) as usize;
+    }
+    for i in 0..NUM_Q_PRIMES {
+        for j in 0..n {
+            out.coeffs[i][j] = a.coeffs[i][perm[j]];
+        }
+    }
+    out
+}
+
+/// Key-switching digit width in bits. Each 45-bit RNS residue splits into
+/// `ceil(45/W)` digits of base `2^W`; finer digits mean more NTTs per Perm
+/// but far lower key-switch noise (≈ `e·2^W·√n` instead of `e·q_j·√n`),
+/// which is required for GAZELLE's Mult-after-Perm pattern to decrypt.
+pub const KSK_DIGIT_BITS: u32 = 15;
+
+/// Digits per RNS prime.
+pub const fn digits_per_prime() -> usize {
+    (45 + KSK_DIGIT_BITS as usize - 1) / KSK_DIGIT_BITS as usize
+}
+
+/// One key-switching key: for each RNS prime `j` and digit `t`, a pair
+/// `(−a·s − e + 2^{Wt}·P_j·s_g,  a)` in NTT form, where `P_j` is the CRT
+/// interpolation constant (`≡ 1 mod q_j`, `≡ 0` elsewhere).
+pub struct KeySwitchKey {
+    /// `pairs[j][t]` for prime `j`, digit `t`.
+    pub pairs: Vec<Vec<(RnsPoly, RnsPoly)>>,
+}
+
+impl KeySwitchKey {
+    /// Generate a key switching key re-keying from `s_from` (NTT form) to
+    /// the context's secret `s`.
+    pub fn generate(
+        ctx: &Context,
+        sk: &SecretKey,
+        s_from_ntt: &RnsPoly,
+        rng: &mut ChaCha20Rng,
+    ) -> Self {
+        let params = &ctx.params;
+        let d = digits_per_prime();
+        let mut pairs = Vec::with_capacity(NUM_Q_PRIMES);
+        for j in 0..NUM_Q_PRIMES {
+            let mut prime_pairs = Vec::with_capacity(d);
+            for t in 0..d {
+                let a = ctx.sample_uniform_ntt(rng);
+                let mut e = ctx.sample_error(rng);
+                ctx.to_ntt(&mut e);
+                // k0 = -(a*s) - e + 2^{Wt}·P_j·s_from
+                let mut k0 = a.clone();
+                k0.mul_assign_pointwise(&sk.s_ntt, params);
+                k0.negate(params);
+                k0.sub_assign(&e, params);
+                // P_j in RNS is the indicator (1 at prime j, 0 elsewhere);
+                // scale the j-th residue of s_from by 2^{Wt} mod q_j.
+                let mut pjs = s_from_ntt.clone();
+                for i in 0..NUM_Q_PRIMES {
+                    if i != j {
+                        for c in pjs.coeffs[i].iter_mut() {
+                            *c = 0;
+                        }
+                    } else {
+                        let shift = crate::util::math::pow_mod(
+                            2,
+                            (KSK_DIGIT_BITS as u64) * t as u64,
+                            params.qs[i],
+                        );
+                        for c in pjs.coeffs[i].iter_mut() {
+                            *c = crate::util::math::mul_mod(*c, shift, params.qs[i]);
+                        }
+                    }
+                }
+                k0.add_assign(&pjs, params);
+                prime_pairs.push((k0, a));
+            }
+            pairs.push(prime_pairs);
+        }
+        Self { pairs }
+    }
+
+    /// Serialized size in bytes (for offline-communication accounting).
+    pub fn serialized_size(params: &Params) -> usize {
+        let poly_bits = params.n * 45 * NUM_Q_PRIMES;
+        NUM_Q_PRIMES * digits_per_prime() * 2 * poly_bits / 8
+    }
+}
+
+/// A set of Galois (rotation) keys, lazily generated per Galois element.
+pub struct GaloisKeys {
+    pub keys: HashMap<u64, KeySwitchKey>,
+}
+
+impl GaloisKeys {
+    /// Generate keys for the power-of-two row rotations plus the row swap —
+    /// the set GAZELLE's rotate-and-sum networks need (arbitrary rotations
+    /// compose from powers of two).
+    pub fn generate_default(ctx: &Context, sk: &SecretKey, rng: &mut ChaCha20Rng) -> Self {
+        let mut elts = vec![galois_elt_for_row_swap(&ctx.params)];
+        let mut step = 1i64;
+        while (step as usize) < ctx.params.row_size() {
+            elts.push(galois_elt_for_step(&ctx.params, step));
+            elts.push(galois_elt_for_step(&ctx.params, -step));
+            step <<= 1;
+        }
+        Self::generate_for(ctx, sk, rng, &elts)
+    }
+
+    /// Generate keys for an explicit set of Galois elements.
+    pub fn generate_for(
+        ctx: &Context,
+        sk: &SecretKey,
+        rng: &mut ChaCha20Rng,
+        elts: &[u64],
+    ) -> Self {
+        let mut keys = HashMap::new();
+        for &g in elts {
+            if keys.contains_key(&g) {
+                continue;
+            }
+            // s(X^g) in NTT form.
+            let s_g = apply_galois_coeff(&ctx.params, &sk.s_coeff, g);
+            let mut s_g_ntt = s_g;
+            ctx.to_ntt(&mut s_g_ntt);
+            keys.insert(g, KeySwitchKey::generate(ctx, sk, &s_g_ntt, rng));
+        }
+        Self { keys }
+    }
+
+    pub fn get(&self, g: u64) -> Option<&KeySwitchKey> {
+        self.keys.get(&g)
+    }
+
+    /// Total serialized size (offline comm accounting).
+    pub fn serialized_size(&self, params: &Params) -> usize {
+        self.keys.len() * KeySwitchKey::serialized_size(params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Context {
+        Context::new(Params::new(1024, 20))
+    }
+
+    #[test]
+    fn galois_elements() {
+        let c = ctx();
+        let g1 = galois_elt_for_step(&c.params, 1);
+        assert_eq!(g1, 3);
+        assert_eq!(galois_elt_for_row_swap(&c.params), 2 * 1024 - 1);
+        // Rotation by row_size-1 == rotation by -1.
+        let gneg = galois_elt_for_step(&c.params, -1);
+        let gpos = galois_elt_for_step(&c.params, c.params.row_size() as i64 - 1);
+        assert_eq!(gneg, gpos);
+    }
+
+    #[test]
+    fn galois_coeff_ntt_agree() {
+        // NTT(auto_coeff(x)) == auto_ntt(NTT(x)) for several elements.
+        let c = ctx();
+        let mut rng = ChaCha20Rng::from_u64_seed(10);
+        let mut x = c.sample_uniform_ntt(&mut rng);
+        c.to_coeff(&mut x);
+        for g in [3u64, 9, 2 * 1024 - 1, pow_mod(3, 17, 2 * 1024)] {
+            let via_coeff = {
+                let mut y = apply_galois_coeff(&c.params, &x, g);
+                c.to_ntt(&mut y);
+                y
+            };
+            let via_ntt = {
+                let mut xn = x.clone();
+                c.to_ntt(&mut xn);
+                apply_galois_ntt(&c.params, &xn, g)
+            };
+            assert_eq!(via_coeff, via_ntt, "mismatch for galois element {g}");
+        }
+    }
+
+    #[test]
+    fn automorphism_composes() {
+        let c = ctx();
+        let mut rng = ChaCha20Rng::from_u64_seed(11);
+        let mut x = c.sample_uniform_ntt(&mut rng);
+        c.to_coeff(&mut x);
+        let m = 2 * c.params.n as u64;
+        let (g1, g2) = (3u64, 27u64);
+        let a = apply_galois_coeff(&c.params, &apply_galois_coeff(&c.params, &x, g1), g2);
+        let b = apply_galois_coeff(&c.params, &x, (g1 * g2) % m);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn default_keys_cover_powers_of_two() {
+        let c = ctx();
+        let mut rng = ChaCha20Rng::from_u64_seed(12);
+        let sk = SecretKey::generate(&c, &mut rng);
+        let gk = GaloisKeys::generate_default(&c, &sk, &mut rng);
+        assert!(gk.get(galois_elt_for_row_swap(&c.params)).is_some());
+        for step in [1i64, 2, 4, 256, -1, -256] {
+            assert!(gk.get(galois_elt_for_step(&c.params, step)).is_some());
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! A from-scratch packed (batched) homomorphic encryption library in the
+//! BFV style — the cryptographic substrate of both CHEETAH and the GAZELLE
+//! baseline.
+//!
+//! Supported operations (exactly the set the paper needs; §2.3):
+//!
+//! * symmetric (private-key) encrypt / decrypt with SIMD batching,
+//! * `Add(ct, ct)`, `AddPlain(ct, pt)`, `Sub`, `Negate`,
+//! * `MultPlain(ct, pt)` — ciphertext × plaintext only; CHEETAH never needs
+//!   ciphertext × ciphertext,
+//! * `Perm` — slot rotations via Galois automorphisms with RNS-decomposition
+//!   key switching (the expensive operation CHEETAH eliminates),
+//! * exact serialized-size accounting (for the paper's communication costs).
+//!
+//! Every evaluator operation increments an [`eval::OpCounts`] so the
+//! protocol layers can report `#Perm / #Mult / #Add` exactly as the paper's
+//! Tables 2–4 do.
+
+pub mod encoder;
+pub mod encrypt;
+pub mod eval;
+pub mod keys;
+pub mod ntt;
+pub mod params;
+pub mod poly;
+pub mod serial;
+
+pub use encoder::{BatchEncoder, Plaintext};
+pub use encrypt::{Ciphertext, Encryptor};
+pub use eval::{Evaluator, OpCounts, PlainOperand};
+pub use keys::{GaloisKeys, SecretKey};
+pub use params::Params;
+pub use poly::{Form, RnsPoly};
+
+use crate::util::math::{inv_mod, mul_mod, sub_mod};
+use crate::util::rng::ChaCha20Rng;
+use ntt::NttTables;
+use params::NUM_Q_PRIMES;
+
+/// Shared precomputed context: parameters, NTT tables for each RNS prime,
+/// the batching encoder, and CRT reconstruction constants.
+pub struct Context {
+    pub params: Params,
+    pub ntt: Vec<NttTables>,
+    pub encoder: BatchEncoder,
+    /// `inv(q0) mod q1` for Garner CRT reconstruction.
+    inv_q0_mod_q1: u64,
+}
+
+impl Context {
+    pub fn new(params: Params) -> Self {
+        let ntt = params.qs.iter().map(|&q| NttTables::new(params.n, q)).collect();
+        let encoder = BatchEncoder::new(params.n, params.p);
+        let inv_q0_mod_q1 = inv_mod(params.qs[0] % params.qs[1], params.qs[1]);
+        Self { params, ntt, encoder, inv_q0_mod_q1 }
+    }
+
+    /// Convert a poly to NTT form in place (no-op if already there).
+    pub fn to_ntt(&self, poly: &mut RnsPoly) {
+        if poly.form == Form::Ntt {
+            return;
+        }
+        for (i, t) in self.ntt.iter().enumerate() {
+            t.forward(&mut poly.coeffs[i]);
+        }
+        poly.form = Form::Ntt;
+    }
+
+    /// Convert a poly to coefficient form in place (no-op if already there).
+    pub fn to_coeff(&self, poly: &mut RnsPoly) {
+        if poly.form == Form::Coeff {
+            return;
+        }
+        for (i, t) in self.ntt.iter().enumerate() {
+            t.inverse(&mut poly.coeffs[i]);
+        }
+        poly.form = Form::Coeff;
+    }
+
+    /// Sample a uniform polynomial directly in NTT form (uniform in either
+    /// domain — the NTT is a bijection).
+    pub fn sample_uniform_ntt(&self, rng: &mut ChaCha20Rng) -> RnsPoly {
+        let mut p = RnsPoly::zero(&self.params, Form::Ntt);
+        for (i, &q) in self.params.qs.iter().enumerate() {
+            for c in p.coeffs[i].iter_mut() {
+                *c = rng.gen_range(q);
+            }
+        }
+        p
+    }
+
+    /// Sample a small error polynomial (centered binomial, σ ≈ 3.2) in
+    /// coefficient form.
+    pub fn sample_error(&self, rng: &mut ChaCha20Rng) -> RnsPoly {
+        let mut p = RnsPoly::zero(&self.params, Form::Coeff);
+        for j in 0..self.params.n {
+            let e = rng.sample_cbd(21);
+            for (i, &q) in self.params.qs.iter().enumerate() {
+                p.coeffs[i][j] = if e < 0 { q - ((-e) as u64) } else { e as u64 };
+            }
+        }
+        p
+    }
+
+    /// Sample a ternary polynomial (the secret distribution) in coeff form.
+    pub fn sample_ternary(&self, rng: &mut ChaCha20Rng) -> RnsPoly {
+        let mut p = RnsPoly::zero(&self.params, Form::Coeff);
+        for j in 0..self.params.n {
+            let t = rng.sample_ternary();
+            for (i, &q) in self.params.qs.iter().enumerate() {
+                p.coeffs[i][j] = if t < 0 { q - 1 } else { t as u64 };
+            }
+        }
+        p
+    }
+
+    /// Garner CRT reconstruction of coefficient `j` of `poly` into `[0, q)`.
+    #[inline]
+    pub fn crt_reconstruct(&self, poly: &RnsPoly, j: usize) -> u128 {
+        debug_assert_eq!(poly.form, Form::Coeff);
+        let (q0, q1) = (self.params.qs[0], self.params.qs[1]);
+        let x0 = poly.coeffs[0][j];
+        let x1 = poly.coeffs[1][j];
+        let t = mul_mod(sub_mod(x1, x0 % q1, q1), self.inv_q0_mod_q1, q1);
+        x0 as u128 + q0 as u128 * t as u128
+    }
+
+    /// Lift a plaintext (mod p, coefficient domain) into an RNS poly over q
+    /// with **centered** lifting: residues above p/2 map to negatives mod q.
+    /// This is the representation used as a `MultPlain` operand.
+    pub fn lift_centered(&self, pt: &Plaintext) -> RnsPoly {
+        let p = self.params.p;
+        let half = p / 2;
+        let mut out = RnsPoly::zero(&self.params, Form::Coeff);
+        for j in 0..self.params.n {
+            let c = pt.coeffs[j];
+            for (i, &q) in self.params.qs.iter().enumerate() {
+                out.coeffs[i][j] = if c > half { q - (p - c) } else { c };
+            }
+        }
+        out
+    }
+
+    /// Scale a plaintext by `Δ = q/p` with exact rounding:
+    /// `round(c·q/p)` per coefficient, in RNS. This is the representation
+    /// used as an `AddPlain` operand and inside `encrypt`.
+    pub fn scale_plain(&self, pt: &Plaintext) -> RnsPoly {
+        let mut out = RnsPoly::zero(&self.params, Form::Coeff);
+        for j in 0..self.params.n {
+            let rns = self.params.scale_to_q(pt.coeffs[j]);
+            for i in 0..NUM_Q_PRIMES {
+                out.coeffs[i][j] = rns[i];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_builds() {
+        let ctx = Context::new(Params::new(1024, 20));
+        assert_eq!(ctx.ntt.len(), NUM_Q_PRIMES);
+        assert_eq!(ctx.encoder.n, 1024);
+    }
+
+    #[test]
+    fn ntt_form_roundtrip() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let mut rng = ChaCha20Rng::from_u64_seed(1);
+        let mut poly = ctx.sample_uniform_ntt(&mut rng);
+        let orig = poly.clone();
+        ctx.to_coeff(&mut poly);
+        assert_eq!(poly.form, Form::Coeff);
+        ctx.to_ntt(&mut poly);
+        assert_eq!(poly, orig);
+    }
+
+    #[test]
+    fn crt_reconstruct_consistent() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let q = ctx.params.q();
+        // Known value: w = 123456789012345 should reconstruct exactly.
+        let w: u128 = 123_456_789_012_345;
+        assert!(w < q);
+        let mut poly = RnsPoly::zero(&ctx.params, Form::Coeff);
+        poly.coeffs[0][0] = (w % ctx.params.qs[0] as u128) as u64;
+        poly.coeffs[1][0] = (w % ctx.params.qs[1] as u128) as u64;
+        assert_eq!(ctx.crt_reconstruct(&poly, 0), w);
+    }
+
+    #[test]
+    fn centered_lift_negatives() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let enc = &ctx.encoder;
+        let pt = enc.encode(&[-1i64]);
+        let lifted = ctx.lift_centered(&pt);
+        // Reconstruct coefficient 0..n and verify each equals the centered
+        // value of the plaintext coefficient mod q.
+        for j in 0..8 {
+            let c = pt.coeffs[j];
+            let w = ctx.crt_reconstruct(&lifted, j);
+            let q = ctx.params.q();
+            let expect = if c > ctx.params.p / 2 {
+                q - (ctx.params.p - c) as u128
+            } else {
+                c as u128
+            };
+            assert_eq!(w, expect);
+        }
+    }
+
+    #[test]
+    fn error_is_small() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let mut rng = ChaCha20Rng::from_u64_seed(2);
+        let e = ctx.sample_error(&mut rng);
+        for j in 0..ctx.params.n {
+            let w = ctx.crt_reconstruct(&e, j);
+            let q = ctx.params.q();
+            let centered = if w > q / 2 { (q - w) as i128 } else { w as i128 };
+            assert!(centered.unsigned_abs() < 64, "error coefficient too large");
+        }
+    }
+}

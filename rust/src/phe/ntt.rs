@@ -1,0 +1,249 @@
+//! Negacyclic number-theoretic transform over a prime field.
+//!
+//! The in-place Cooley–Tukey (decimation-in-time, forward) / Gentleman–Sande
+//! (inverse) pair with ψ-twisting folded into the twiddle tables, i.e. the
+//! transform computes evaluations of `a(X)` at the odd powers of the
+//! primitive `2n`-th root ψ — multiplication in `Z_q[X]/(X^n + 1)` becomes
+//! pointwise multiplication of transforms. Twiddles are stored in
+//! bit-reversed order (Longa–Naehrig / SEAL layout).
+//!
+//! Twiddle factors carry Shoup precomputations so the butterfly uses one
+//! widening multiply and no division (see `mul_mod_shoup`); this is the
+//! hot-path of the whole PHE layer.
+
+use crate::util::math::{inv_mod, pow_mod, primitive_nth_root, reverse_bits};
+
+/// Shoup modular multiplication: computes `a·w mod q` given the
+/// precomputation `w_shoup = floor(w·2^64 / q)`. Requires `w < q`,
+/// `a < 2q`, `q < 2^63`; result `< 2q` (lazy). Caller reduces when needed.
+#[inline(always)]
+pub fn mul_mod_shoup_lazy(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let hi = ((a as u128 * w_shoup as u128) >> 64) as u64;
+    a.wrapping_mul(w).wrapping_sub(hi.wrapping_mul(q))
+}
+
+/// Fully-reduced Shoup multiplication.
+#[inline(always)]
+pub fn mul_mod_shoup(a: u64, w: u64, w_shoup: u64, q: u64) -> u64 {
+    let r = mul_mod_shoup_lazy(a, w, w_shoup, q);
+    if r >= q {
+        r - q
+    } else {
+        r
+    }
+}
+
+/// Precompute the Shoup companion of `w` for modulus `q`.
+#[inline]
+pub fn shoup_precompute(w: u64, q: u64) -> u64 {
+    (((w as u128) << 64) / q as u128) as u64
+}
+
+/// Precomputed NTT tables for one prime modulus and one ring degree.
+pub struct NttTables {
+    pub q: u64,
+    pub n: usize,
+    #[allow(dead_code)]
+    log_n: u32,
+    /// ψ^bitrev(i) for the forward transform.
+    psi_rev: Vec<u64>,
+    psi_rev_shoup: Vec<u64>,
+    /// ψ^{-bitrev(i)} for the inverse transform.
+    psi_inv_rev: Vec<u64>,
+    psi_inv_rev_shoup: Vec<u64>,
+    /// n^{-1} mod q for the inverse scaling.
+    n_inv: u64,
+    n_inv_shoup: u64,
+}
+
+impl NttTables {
+    pub fn new(n: usize, q: u64) -> Self {
+        assert!(n.is_power_of_two());
+        assert_eq!(q % (2 * n as u64), 1, "q must be ≡ 1 mod 2n");
+        let log_n = (n as u64).trailing_zeros();
+        let psi = primitive_nth_root(2 * n as u64, q);
+        let psi_inv = inv_mod(psi, q);
+        let mut psi_rev = vec![0u64; n];
+        let mut psi_inv_rev = vec![0u64; n];
+        for i in 0..n {
+            let r = reverse_bits(i as u64, log_n);
+            psi_rev[i] = pow_mod(psi, r, q);
+            psi_inv_rev[i] = pow_mod(psi_inv, r, q);
+        }
+        let psi_rev_shoup = psi_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let psi_inv_rev_shoup = psi_inv_rev.iter().map(|&w| shoup_precompute(w, q)).collect();
+        let n_inv = inv_mod(n as u64, q);
+        Self {
+            q,
+            n,
+            log_n,
+            psi_rev,
+            psi_rev_shoup,
+            psi_inv_rev,
+            psi_inv_rev_shoup,
+            n_inv,
+            n_inv_shoup: shoup_precompute(n_inv, q),
+        }
+    }
+
+    /// In-place forward negacyclic NTT (coefficient → evaluation,
+    /// bit-reversed evaluation order). Input coefficients `< q`, output `< q`.
+    pub fn forward(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = self.n;
+        let mut m = 1usize;
+        while m < self.n {
+            t >>= 1;
+            for i in 0..m {
+                let w = self.psi_rev[m + i];
+                let ws = self.psi_rev_shoup[m + i];
+                let j1 = 2 * i * t;
+                for j in j1..j1 + t {
+                    // Harvey butterfly with lazy reduction: values stay < 4q
+                    // transiently, normalized to < 2q per level.
+                    let mut u = a[j];
+                    if u >= two_q {
+                        u -= two_q;
+                    }
+                    let v = mul_mod_shoup_lazy(a[j + t], w, ws, q);
+                    a[j] = u + v;
+                    a[j + t] = u + two_q - v;
+                }
+            }
+            m <<= 1;
+        }
+        for x in a.iter_mut() {
+            if *x >= two_q {
+                *x -= two_q;
+            }
+            if *x >= q {
+                *x -= q;
+            }
+        }
+    }
+
+    /// In-place inverse negacyclic NTT (evaluation → coefficient).
+    pub fn inverse(&self, a: &mut [u64]) {
+        debug_assert_eq!(a.len(), self.n);
+        let q = self.q;
+        let two_q = 2 * q;
+        let mut t = 1usize;
+        let mut m = self.n;
+        while m > 1 {
+            let h = m >> 1;
+            let mut j1 = 0usize;
+            for i in 0..h {
+                let w = self.psi_inv_rev[h + i];
+                let ws = self.psi_inv_rev_shoup[h + i];
+                for j in j1..j1 + t {
+                    let u = a[j];
+                    let v = a[j + t];
+                    let mut s = u + v;
+                    if s >= two_q {
+                        s -= two_q;
+                    }
+                    a[j] = s;
+                    a[j + t] = mul_mod_shoup_lazy(u + two_q - v, w, ws, q);
+                }
+                j1 += 2 * t;
+            }
+            t <<= 1;
+            m = h;
+        }
+        for x in a.iter_mut() {
+            *x = mul_mod_shoup(*x, self.n_inv, self.n_inv_shoup, q);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::{add_mod, find_ntt_prime_below, mul_mod, sub_mod};
+    use crate::util::rng::SplitMix64;
+
+    fn naive_negacyclic_mul(a: &[u64], b: &[u64], q: u64) -> Vec<u64> {
+        let n = a.len();
+        let mut out = vec![0u64; n];
+        for i in 0..n {
+            for j in 0..n {
+                let prod = mul_mod(a[i], b[j], q);
+                let k = i + j;
+                if k < n {
+                    out[k] = add_mod(out[k], prod, q);
+                } else {
+                    out[k - n] = sub_mod(out[k - n], prod, q);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn shoup_matches_widening() {
+        let q = find_ntt_prime_below(1 << 45, 2048 * 2);
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..1000 {
+            let a = rng.gen_range(q);
+            let w = rng.gen_range(q);
+            let ws = shoup_precompute(w, q);
+            assert_eq!(mul_mod_shoup(a, w, ws, q), mul_mod(a, w, q));
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for n in [1024usize, 4096] {
+            let q = find_ntt_prime_below(1 << 45, 2 * n as u64);
+            let t = NttTables::new(n, q);
+            let mut rng = SplitMix64::new(42);
+            let orig: Vec<u64> = (0..n).map(|_| rng.gen_range(q)).collect();
+            let mut a = orig.clone();
+            t.forward(&mut a);
+            assert_ne!(a, orig); // transform does something
+            t.inverse(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn pointwise_is_negacyclic_convolution() {
+        let n = 64usize; // small so the naive O(n^2) reference is fast
+        let q = find_ntt_prime_below(1 << 45, 2 * n as u64);
+        let t = NttTables::new(n, q);
+        let mut rng = SplitMix64::new(7);
+        let a: Vec<u64> = (0..n).map(|_| rng.gen_range(q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.gen_range(q)).collect();
+        let expect = naive_negacyclic_mul(&a, &b, q);
+
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        let mut fc: Vec<u64> = fa.iter().zip(&fb).map(|(&x, &y)| mul_mod(x, y, q)).collect();
+        t.inverse(&mut fc);
+        assert_eq!(fc, expect);
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 256usize;
+        let q = find_ntt_prime_below(1 << 45, 2 * n as u64);
+        let t = NttTables::new(n, q);
+        let mut rng = SplitMix64::new(3);
+        let a: Vec<u64> = (0..n).map(|_| rng.gen_range(q)).collect();
+        let b: Vec<u64> = (0..n).map(|_| rng.gen_range(q)).collect();
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| add_mod(x, y, q)).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        let mut fs = sum.clone();
+        t.forward(&mut fa);
+        t.forward(&mut fb);
+        t.forward(&mut fs);
+        for i in 0..n {
+            assert_eq!(fs[i], add_mod(fa[i], fb[i], q));
+        }
+    }
+}

@@ -1,0 +1,160 @@
+//! BFV parameter sets.
+//!
+//! The paper (§2.3, §5) uses SEAL's BFV with a 20-bit plaintext modulus `p`,
+//! a 60-bit ciphertext modulus `q` and "10,000 slots". A power-of-two ring
+//! degree is required for negacyclic-NTT batching, so we use `n = 4096`
+//! (default) or `8192`; and we represent `q` as a 2-prime RNS product
+//! (2 × 45-bit ≈ 90-bit `q`) which gives the plaintext-times-ciphertext
+//! noise headroom that batched `MultPlain` actually needs (see
+//! `fixed/mod.rs` for the full scale-budget arithmetic). The plaintext
+//! modulus defaults to 23 bits: the paper's 20-bit `p` leaves no headroom
+//! for the blinded per-element products `x'∘k'∘v + b` at 8-bit quantization.
+//!
+//! All moduli are NTT-friendly primes `≡ 1 (mod 2n)` found deterministically
+//! at construction time.
+
+use crate::util::math::{find_ntt_prime_below, find_ntt_primes_below, ilog2};
+
+/// Number of RNS primes composing the ciphertext modulus `q`.
+pub const NUM_Q_PRIMES: usize = 2;
+
+/// BFV-style parameter set.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Params {
+    /// Ring degree (power of two). Also the SIMD slot count.
+    pub n: usize,
+    /// `log2(n)`.
+    pub log_n: u32,
+    /// RNS primes whose product is the ciphertext modulus `q`.
+    pub qs: [u64; NUM_Q_PRIMES],
+    /// Plaintext modulus (batching prime).
+    pub p: u64,
+}
+
+impl Params {
+    /// Build a parameter set with ring degree `n` and a plaintext modulus of
+    /// about `plain_bits` bits. Panics if `n` is not a power of two ≥ 1024.
+    pub fn new(n: usize, plain_bits: u32) -> Self {
+        assert!(n.is_power_of_two() && n >= 1024, "ring degree must be a power of two >= 1024");
+        assert!((14..=30).contains(&plain_bits), "plain_bits in 14..=30");
+        let m = 2 * n as u64;
+        let qs_vec = find_ntt_primes_below(1u64 << 45, m, NUM_Q_PRIMES);
+        let qs = [qs_vec[0], qs_vec[1]];
+        let p = find_ntt_prime_below(1u64 << plain_bits, m);
+        assert!(p < qs[1], "plain modulus must be below every q prime");
+        Self { n, log_n: ilog2(n as u64), qs, p }
+    }
+
+    /// Default parameter set used throughout the benchmarks
+    /// (n = 4096, 23-bit p, ~90-bit q).
+    pub fn default_params() -> Self {
+        Self::new(4096, 23)
+    }
+
+    /// Large ring (n = 8192) for paper-scale shapes.
+    pub fn big_ring() -> Self {
+        Self::new(8192, 23)
+    }
+
+    /// Full ciphertext modulus `q = Π qs` as u128.
+    pub fn q(&self) -> u128 {
+        self.qs.iter().map(|&q| q as u128).product()
+    }
+
+    /// log2(q), rounded down.
+    pub fn q_bits(&self) -> u32 {
+        let q = self.q();
+        127 - q.leading_zeros()
+    }
+
+    /// Number of SIMD slots (== n for BFV batching; organized as a 2 × n/2
+    /// matrix for rotations).
+    pub fn slots(&self) -> usize {
+        self.n
+    }
+
+    /// Half-row size (rotation group size).
+    pub fn row_size(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Maximum signed value representable in a slot: `(p-1)/2`.
+    pub fn max_slot_value(&self) -> i64 {
+        ((self.p - 1) / 2) as i64
+    }
+
+    /// Scale a plaintext coefficient `m ∈ [0, p)` to `round(m·q/p) mod q_i`
+    /// for each RNS prime (the BFV Δ-scaling with exact rounding, matching
+    /// SEAL's `multiply_add_plain_with_scaling_variant`).
+    #[inline]
+    pub fn scale_to_q(&self, m: u64) -> [u64; NUM_Q_PRIMES] {
+        debug_assert!(m < self.p);
+        let q = self.q();
+        let scaled = (m as u128 * q + self.p as u128 / 2) / self.p as u128;
+        [
+            (scaled % self.qs[0] as u128) as u64,
+            (scaled % self.qs[1] as u128) as u64,
+        ]
+    }
+
+    /// Round a CRT-reconstructed value `w ∈ [0, q)` back to the plaintext
+    /// domain: `round(w·p/q) mod p`.
+    #[inline]
+    pub fn unscale_from_q(&self, w: u128) -> u64 {
+        let q = self.q();
+        debug_assert!(w < q);
+        let m = ((w * self.p as u128 + q / 2) / q) as u64;
+        m % self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::is_prime;
+
+    #[test]
+    fn default_params_valid() {
+        let pr = Params::default_params();
+        assert_eq!(pr.n, 4096);
+        assert_eq!(pr.log_n, 12);
+        for &q in &pr.qs {
+            assert!(is_prime(q));
+            assert_eq!(q % (2 * pr.n as u64), 1);
+            assert!(q < 1 << 45);
+        }
+        assert!(is_prime(pr.p));
+        assert_eq!(pr.p % (2 * pr.n as u64), 1);
+        assert!(pr.qs[0] != pr.qs[1]);
+        assert!(pr.q_bits() >= 88);
+    }
+
+    #[test]
+    fn scale_roundtrip() {
+        let pr = Params::default_params();
+        let q = pr.q();
+        for m in [0u64, 1, 2, pr.p / 2, pr.p - 1, 12345] {
+            let rns = pr.scale_to_q(m);
+            // CRT-reconstruct via Garner.
+            let (q0, q1) = (pr.qs[0], pr.qs[1]);
+            let inv_q0 = crate::util::math::inv_mod(q0 % q1, q1);
+            let x0 = rns[0];
+            let x1 = rns[1];
+            let t = crate::util::math::mul_mod(
+                crate::util::math::sub_mod(x1, x0 % q1, q1),
+                inv_q0,
+                q1,
+            );
+            let w = x0 as u128 + q0 as u128 * t as u128;
+            assert!(w < q);
+            assert_eq!(pr.unscale_from_q(w), m, "roundtrip failed for {m}");
+        }
+    }
+
+    #[test]
+    fn big_ring_valid() {
+        let pr = Params::big_ring();
+        assert_eq!(pr.n, 8192);
+        assert_eq!(pr.p % (2 * 8192), 1);
+    }
+}

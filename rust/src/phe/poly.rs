@@ -1,0 +1,154 @@
+//! RNS polynomials: elements of `Z_q[X]/(X^n+1)` stored as one residue
+//! vector per RNS prime, in either coefficient or evaluation (NTT) form.
+
+use super::params::{Params, NUM_Q_PRIMES};
+use crate::util::math::{add_mod, mul_mod, sub_mod};
+
+/// Representation form of an [`RnsPoly`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Form {
+    /// Coefficient domain.
+    Coeff,
+    /// Evaluation (NTT) domain, bit-reversed order.
+    Ntt,
+}
+
+/// A polynomial in RNS representation: `coeffs[i][j]` is the `j`-th
+/// coefficient (or evaluation) modulo `qs[i]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RnsPoly {
+    pub coeffs: Vec<Vec<u64>>,
+    pub form: Form,
+}
+
+impl RnsPoly {
+    /// The zero polynomial in the given form.
+    pub fn zero(params: &Params, form: Form) -> Self {
+        Self { coeffs: vec![vec![0u64; params.n]; NUM_Q_PRIMES], form }
+    }
+
+    pub fn n(&self) -> usize {
+        self.coeffs[0].len()
+    }
+
+    /// `self += other` (componentwise; forms must match).
+    pub fn add_assign(&mut self, other: &RnsPoly, params: &Params) {
+        assert_eq!(self.form, other.form, "form mismatch in add");
+        for (i, &q) in params.qs.iter().enumerate() {
+            let (a, b) = (&mut self.coeffs[i], &other.coeffs[i]);
+            for j in 0..a.len() {
+                a[j] = add_mod(a[j], b[j], q);
+            }
+        }
+    }
+
+    /// `self -= other`.
+    pub fn sub_assign(&mut self, other: &RnsPoly, params: &Params) {
+        assert_eq!(self.form, other.form, "form mismatch in sub");
+        for (i, &q) in params.qs.iter().enumerate() {
+            let (a, b) = (&mut self.coeffs[i], &other.coeffs[i]);
+            for j in 0..a.len() {
+                a[j] = sub_mod(a[j], b[j], q);
+            }
+        }
+    }
+
+    /// `self = -self`.
+    pub fn negate(&mut self, params: &Params) {
+        for (i, &q) in params.qs.iter().enumerate() {
+            for c in self.coeffs[i].iter_mut() {
+                *c = if *c == 0 { 0 } else { q - *c };
+            }
+        }
+    }
+
+    /// `self ∘= other` pointwise (both must be in NTT form).
+    pub fn mul_assign_pointwise(&mut self, other: &RnsPoly, params: &Params) {
+        assert_eq!(self.form, Form::Ntt, "pointwise mul requires NTT form");
+        assert_eq!(other.form, Form::Ntt, "pointwise mul requires NTT form");
+        for (i, &q) in params.qs.iter().enumerate() {
+            let (a, b) = (&mut self.coeffs[i], &other.coeffs[i]);
+            for j in 0..a.len() {
+                a[j] = mul_mod(a[j], b[j], q);
+            }
+        }
+    }
+
+    /// `self += a ∘ b` pointwise multiply-accumulate (all NTT form).
+    pub fn mac_pointwise(&mut self, a: &RnsPoly, b: &RnsPoly, params: &Params) {
+        assert!(self.form == Form::Ntt && a.form == Form::Ntt && b.form == Form::Ntt);
+        for (i, &q) in params.qs.iter().enumerate() {
+            let dst = &mut self.coeffs[i];
+            let (x, y) = (&a.coeffs[i], &b.coeffs[i]);
+            for j in 0..dst.len() {
+                dst[j] = add_mod(dst[j], mul_mod(x[j], y[j], q), q);
+            }
+        }
+    }
+
+    /// True if every residue is zero.
+    pub fn is_zero(&self) -> bool {
+        self.coeffs.iter().all(|v| v.iter().all(|&c| c == 0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Params {
+        Params::new(1024, 20)
+    }
+
+    #[test]
+    fn zero_identity() {
+        let pr = params();
+        let z = RnsPoly::zero(&pr, Form::Coeff);
+        assert!(z.is_zero());
+        let mut a = RnsPoly::zero(&pr, Form::Coeff);
+        a.coeffs[0][3] = 17;
+        a.coeffs[1][3] = 17;
+        let b = a.clone();
+        a.add_assign(&z, &pr);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let pr = params();
+        let mut a = RnsPoly::zero(&pr, Form::Coeff);
+        let mut b = RnsPoly::zero(&pr, Form::Coeff);
+        for i in 0..NUM_Q_PRIMES {
+            for j in 0..pr.n {
+                a.coeffs[i][j] = (j as u64 * 7 + 1) % pr.qs[i];
+                b.coeffs[i][j] = (j as u64 * 13 + 5) % pr.qs[i];
+            }
+        }
+        let orig = a.clone();
+        a.add_assign(&b, &pr);
+        a.sub_assign(&b, &pr);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn negate_twice_is_identity() {
+        let pr = params();
+        let mut a = RnsPoly::zero(&pr, Form::Ntt);
+        a.coeffs[0][0] = 5;
+        a.coeffs[1][9] = pr.qs[1] - 1;
+        let orig = a.clone();
+        a.negate(&pr);
+        assert_ne!(a, orig);
+        a.negate(&pr);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    #[should_panic(expected = "form mismatch")]
+    fn form_mismatch_panics() {
+        let pr = params();
+        let mut a = RnsPoly::zero(&pr, Form::Coeff);
+        let b = RnsPoly::zero(&pr, Form::Ntt);
+        a.add_assign(&b, &pr);
+    }
+}

@@ -1,0 +1,235 @@
+//! Blinding material and the polar-indicator recovery (paper §3.1, Eqs. 4–7).
+//!
+//! Per output block `i` the server samples:
+//!
+//! * a multiplicative blind `v₁ᵢ = sᵢ·2^{jᵢ}` with random sign `sᵢ` and
+//!   exponent `jᵢ ∈ {-1,0,1}` — its inverse `v₂ᵢ = sᵢ·2^{-jᵢ}` is exactly
+//!   representable, so `v₁v₂ = 1` with **no rounding** (the paper's
+//!   approximation-free property; see `fixed` module docs),
+//! * an additive noise target `δᵢ ~ U[-ε, ε]`,
+//! * per-tap noise `b_{ij}` with `Σ_j b_{ij} = v₁ᵢ·δᵢ` (antithetic pairs:
+//!   `b` entries are marginally uniform, bounded, and sum exactly),
+//! * the polar indicator pair (Eq. 4):
+//!   `(ID₁ᵢ, ID₂ᵢ) = (0, v₂ᵢ)` if `v₁ᵢ > 0`, `(v₂ᵢ, -v₂ᵢ)` if `v₁ᵢ < 0`.
+//!
+//! The client, holding only `y = v₁·(Con+δ)`, computes
+//! `ID₁·y + ID₂·ReLU(y)` under the server's HE — which equals
+//! `ReLU(Con+δ)` in every sign case (Eq. 7).
+
+use crate::fixed::ScalePlan;
+use crate::util::rng::ChaCha20Rng;
+
+/// One block's blinding factor `v₁ = s·2^j`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blind {
+    /// Sign: +1 or -1.
+    pub s: i8,
+    /// Exponent in {-1, 0, 1}.
+    pub j: i8,
+}
+
+impl Blind {
+    pub fn sample(rng: &mut ChaCha20Rng) -> Self {
+        let s = if rng.gen_range(2) == 0 { 1 } else { -1 };
+        let j = rng.gen_range(3) as i8 - 1;
+        Self { s, j }
+    }
+
+    /// Identity blind (used for the final layer, where the paper's ideal
+    /// functionality reveals the obscured linear result under one shared v).
+    pub fn identity() -> Self {
+        Self { s: 1, j: 0 }
+    }
+
+    /// `v₁` as a fixed-point integer at `plan.v`.
+    pub fn v1_int(&self, plan: &ScalePlan) -> i64 {
+        let base = plan.v.frac_bits as i64 + self.j as i64;
+        debug_assert!(base >= 0);
+        (self.s as i64) * (1i64 << base)
+    }
+
+    /// `v₂ = 1/v₁` as a fixed-point integer at `plan.id`.
+    pub fn v2_int(&self, plan: &ScalePlan) -> i64 {
+        let base = plan.id.frac_bits as i64 - self.j as i64;
+        debug_assert!(base >= 0);
+        (self.s as i64) * (1i64 << base)
+    }
+
+    /// Polar indicator pair (Eq. 4) as fixed-point integers at `plan.id`.
+    pub fn indicator(&self, plan: &ScalePlan) -> (i64, i64) {
+        let v2 = self.v2_int(plan);
+        if self.s > 0 {
+            (0, v2)
+        } else {
+            (v2, -v2)
+        }
+    }
+}
+
+/// Per-tap additive noise summing exactly to `target` per block, with each
+/// entry bounded by `±(bound + |target|)`. Antithetic construction: pairs
+/// `(u, -u)` plus the target folded into the first tap.
+pub fn sample_block_noise(
+    block: usize,
+    target: i64,
+    bound: i64,
+    rng: &mut ChaCha20Rng,
+) -> Vec<i64> {
+    let mut b = vec![0i64; block];
+    let mut i = 1;
+    while i + 1 < block {
+        let u = rng.gen_range(2 * bound as u64 + 1) as i64 - bound;
+        b[i] = u;
+        b[i + 1] = -u;
+        i += 2;
+    }
+    if block > 1 {
+        // Pair tap 0 with the leftover odd tap (if any) so tap 0 is also
+        // marginally random.
+        let u = rng.gen_range(2 * bound as u64 + 1) as i64 - bound;
+        b[0] = u + target;
+        if i < block {
+            b[i] = -u;
+        } else {
+            b[1] -= u; // fold into an existing entry, preserving the sum
+        }
+    } else {
+        b[0] = target;
+    }
+    debug_assert_eq!(b.iter().sum::<i64>(), target);
+    b
+}
+
+/// The client-side scrambled nonlinearity (plaintext mirror of the HE
+/// recovery; also the reference for the L1 Pallas kernel `relu_recover`):
+/// given centered `y` at `plan.y`, returns `(y_clamped, relu(y_clamped))`.
+pub fn client_y_pair(y_int_sum_scale: i64, plan: &ScalePlan) -> (i64, i64) {
+    // Requantize from the product scale (x+k+v) down to plan.y.
+    let shift = (plan.x.frac_bits + plan.k.frac_bits + plan.v.frac_bits) - plan.y.frac_bits;
+    let half = 1i64 << (shift - 1);
+    let y = (y_int_sum_scale + half) >> shift;
+    let clamp = plan.y.quantize(plan.y_max);
+    let y = y.clamp(-clamp, clamp);
+    (y, y.max(0))
+}
+
+/// Plaintext recovery check (Eq. 6/7): `ID₁·y + ID₂·ReLU(y)` at scale
+/// `plan.y + plan.id == plan.x`.
+pub fn recover_plain(y: i64, relu_y: i64, blind: &Blind, plan: &ScalePlan) -> i64 {
+    let (id1, id2) = blind.indicator(plan);
+    id1 * y + id2 * relu_y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+
+    fn plan() -> ScalePlan {
+        ScalePlan::default_plan()
+    }
+
+    #[test]
+    fn blind_inverse_is_exact() {
+        let plan = plan();
+        for s in [1i8, -1] {
+            for j in [-1i8, 0, 1] {
+                let b = Blind { s, j };
+                let v1 = b.v1_int(&plan);
+                let v2 = b.v2_int(&plan);
+                // v1·v2 must equal exactly 1.0 at the combined scale.
+                let one = 1i64 << (plan.v.frac_bits + plan.id.frac_bits);
+                assert_eq!(v1 * v2, one, "s={s} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_all_four_sign_cases() {
+        // Eq. 7: the recovery equals ReLU(Con+δ) in all four cases of
+        // (sign(v1), sign(Con+δ)).
+        let plan = plan();
+        let prod_scale = plan.x.mul(plan.k).mul(plan.v);
+        for s in [1i8, -1] {
+            for j in [-1i8, 0, 1] {
+                for con_val in [1.25f64, -1.25, 0.0, 0.015625, -0.015625, 2.5, -2.5] {
+                    let blind = Blind { s, j };
+                    // y = v1·(Con+δ) at the product scale.
+                    let v1_val = (s as f64) * 2f64.powi(j as i32);
+                    let y_prod = prod_scale.quantize(v1_val * con_val);
+                    let (y, relu_y) = client_y_pair(y_prod, &plan);
+                    let rec = recover_plain(y, relu_y, &blind, &plan);
+                    let got = plan.x.dequantize(rec);
+                    // The client clamps |y| at y_max, so the effective
+                    // pre-activation clamp is y_max/|v1|.
+                    let clamp = plan.y_max / v1_val.abs();
+                    let want = con_val.clamp(-clamp, clamp).max(0.0);
+                    assert!(
+                        (got - want).abs() < 0.05,
+                        "s={s} j={j} con={con_val}: got {got} want {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recovery_exact_for_representable_values() {
+        // With v=±2^j and inputs exactly on the plan.y grid, recovery is
+        // bit-exact (the approximation-free property).
+        let plan = plan();
+        let prod_scale = plan.x.mul(plan.k).mul(plan.v);
+        for s in [1i8, -1] {
+            for j in [-1i8, 0, 1] {
+                let blind = Blind { s, j };
+                let con = 1.25f64; // exactly representable at plan.y
+                let v1_val = (s as f64) * 2f64.powi(j as i32);
+                let y_prod = prod_scale.quantize(v1_val * con);
+                let (y, relu_y) = client_y_pair(y_prod, &plan);
+                let rec = recover_plain(y, relu_y, &blind, &plan);
+                assert_eq!(rec, plan.x.quantize(con), "s={s} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_noise_sums_to_target() {
+        proptest::check_with_rng(31, 100, |rng| {
+            let mut crng = crate::util::rng::ChaCha20Rng::from_u64_seed(rng.next_u64());
+            let block = 1 + rng.gen_range(40) as usize;
+            let target = rng.gen_i64_range(-5000, 5000);
+            let bound = 1 << 18;
+            let b = sample_block_noise(block, target, bound, &mut crng);
+            if b.len() != block {
+                return Err("wrong length".into());
+            }
+            if b.iter().sum::<i64>() != target {
+                return Err(format!("sum {} != target {target}", b.iter().sum::<i64>()));
+            }
+            if b.iter().any(|&x| x.abs() > 2 * bound + target.abs()) {
+                return Err("entry out of bound".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_noise_is_not_constant() {
+        let mut rng = crate::util::rng::ChaCha20Rng::from_u64_seed(8);
+        let b = sample_block_noise(16, 0, 1 << 18, &mut rng);
+        assert!(b.iter().filter(|&&x| x != 0).count() >= 8, "noise looks degenerate: {b:?}");
+    }
+
+    #[test]
+    fn blind_sampling_covers_support() {
+        let mut rng = crate::util::rng::ChaCha20Rng::from_u64_seed(9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            let b = Blind::sample(&mut rng);
+            assert!(b.s == 1 || b.s == -1);
+            assert!((-1..=1).contains(&b.j));
+            seen.insert((b.s, b.j));
+        }
+        assert_eq!(seen.len(), 6, "all 6 blinds should appear");
+    }
+}

@@ -1,0 +1,222 @@
+//! The CHEETAH client: encrypts its expanded activation share, finishes the
+//! obscured linear transformation with plaintext block sums, computes the
+//! scrambled nonlinearity, and recovers the server-encrypted exact ReLU via
+//! the polar indicators (paper §3.1 step 3).
+//!
+//! The client's hot loops — the per-block sum of the decrypted obscured
+//! products and the `ID₁∘y + ID₂∘ReLU(y)` recovery — are exactly what the
+//! L1 Pallas kernels (`obscure_dot`, `relu_recover`) implement for the
+//! accelerated plaintext path; golden vectors tie the two together.
+
+use super::blinding::client_y_pair;
+use super::packing::block_sums;
+use super::spec::ProtocolSpec;
+use crate::fixed::ScalePlan;
+use crate::nn::Tensor;
+use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
+use crate::util::rng::ChaCha20Rng;
+use std::time::{Duration, Instant};
+
+/// The client side of the CHEETAH protocol.
+pub struct CheetahClient<'a> {
+    pub ctx: &'a Context,
+    pub ev: Evaluator<'a>,
+    pub enc: Encryptor<'a>,
+    pub plan: ScalePlan,
+    pub spec: ProtocolSpec,
+    /// Client's additive share (mod p) of the current activation.
+    share: Vec<u64>,
+    /// Indicator ciphertexts per step (received from the server offline).
+    ids: Vec<(Vec<Ciphertext>, Vec<Ciphertext>)>,
+    /// Blinded logits from the last layer (product scale).
+    last_y: Vec<i64>,
+    rng: ChaCha20Rng,
+    pub online: Duration,
+}
+
+impl<'a> CheetahClient<'a> {
+    pub fn new(ctx: &'a Context, spec: ProtocolSpec, plan: ScalePlan, seed: u64) -> Self {
+        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let enc = Encryptor::new(ctx, &mut rng);
+        let n_steps = spec.steps.len();
+        Self {
+            ev: Evaluator::new(ctx),
+            enc,
+            plan,
+            spec,
+            share: Vec::new(),
+            ids: vec![(Vec::new(), Vec::new()); n_steps],
+            last_y: Vec::new(),
+            ctx,
+            rng,
+            online: Duration::ZERO,
+        }
+    }
+
+    /// Install the indicator ciphertexts for step `si` (offline phase).
+    /// They arrive NTT-form ready for the client's `MultPlain`.
+    pub fn install_indicators(&mut self, si: usize, id1: Vec<Ciphertext>, id2: Vec<Ciphertext>) {
+        let mut id1 = id1;
+        let mut id2 = id2;
+        for ct in id1.iter_mut().chain(id2.iter_mut()) {
+            self.ev.to_ntt(ct);
+        }
+        self.ids[si] = (id1, id2);
+    }
+
+    /// Begin a query: quantize the input; the client's share IS the input
+    /// (server share starts at zero).
+    pub fn begin_query(&mut self, input: &Tensor) {
+        let (c, h, w) = self.spec.input_shape;
+        assert_eq!(input.shape(), (c, h, w), "input shape mismatch");
+        let p = self.ctx.params.p;
+        self.share = input
+            .data
+            .iter()
+            .map(|&v| {
+                let q = self.plan.quant_x(v);
+                if q < 0 {
+                    p - ((-q) as u64)
+                } else {
+                    q as u64
+                }
+            })
+            .collect();
+        self.last_y.clear();
+    }
+
+    /// Produce the client→server message for step `si`: the encrypted
+    /// expanded share `[T(share_C)]_C`.
+    pub fn step_send(&mut self, si: usize) -> Vec<Ciphertext> {
+        let t0 = Instant::now();
+        let step = &self.spec.steps[si];
+        let n = self.ctx.params.n;
+        let expanded = step.linear.expand_u64(&self.share);
+        let n_cts = step.linear.num_in_cts(n);
+        let mut out = Vec::with_capacity(n_cts);
+        for c in 0..n_cts {
+            let lo = c * n;
+            let hi = ((c + 1) * n).min(expanded.len());
+            let pt = self.ctx.encoder.encode_unsigned(&expanded[lo..hi]);
+            out.push(self.enc.encrypt(&pt, &mut self.rng));
+        }
+        self.online += t0.elapsed();
+        out
+    }
+
+    /// Consume the server's obscured products. Returns the recovery
+    /// ciphertexts `[ReLU(Con+δ)·(scale) − s₁]_S` for intermediate steps,
+    /// or `None` for the last step (the blinded logits are stored).
+    pub fn step_receive(&mut self, si: usize, out_cts: &[Ciphertext]) -> Option<Vec<Ciphertext>> {
+        let t0 = Instant::now();
+        let step = &self.spec.steps[si];
+        let n = self.ctx.params.n;
+        let len = step.linear.stream_len();
+        let n_cts = step.linear.num_in_cts(n);
+        let channels = step.linear.num_channels();
+        let blocks = step.linear.blocks_per_channel();
+        let block = step.linear.block_len();
+        assert_eq!(out_cts.len(), channels * n_cts, "wrong response ct count");
+
+        // Decrypt + block-sum (the obscure_dot hot loop).
+        let mut y = Vec::with_capacity(channels * blocks);
+        let mut stream: Vec<i64> = Vec::with_capacity(len);
+        for ch in 0..channels {
+            stream.clear();
+            for c in 0..n_cts {
+                let vals = self.enc.decrypt_slots(&out_cts[ch * n_cts + c]);
+                let hi = ((c + 1) * n).min(len) - c * n;
+                stream.extend_from_slice(&vals[..hi]);
+            }
+            y.extend(block_sums(&stream, block, blocks));
+        }
+
+        let last = si == self.spec.last_idx();
+        if last {
+            self.last_y = y;
+            self.online += t0.elapsed();
+            return None;
+        }
+
+        // Scrambled nonlinearity + polar-indicator recovery (relu_recover).
+        let n_out = y.len();
+        let mut y_req = vec![0i64; n_out];
+        let mut relu_y = vec![0i64; n_out];
+        for (i, &yi) in y.iter().enumerate() {
+            let (a, b) = client_y_pair(yi, &self.plan);
+            y_req[i] = a;
+            relu_y[i] = b;
+        }
+
+        let (id1, id2) = &self.ids[si];
+        let n_rec = step.linear.num_recovery_cts(n);
+        assert_eq!(id1.len(), n_rec, "indicators not installed for step {si}");
+        let p = self.ctx.params.p;
+        let mut rec_out = Vec::with_capacity(n_rec);
+        let mut s1 = Vec::with_capacity(n_out);
+        for c in 0..n_rec {
+            let lo = c * n;
+            let hi = ((c + 1) * n).min(n_out);
+            // Eq. 6: Add(Mult([ID1]_S, y), Mult([ID2]_S, ReLU(y))).
+            let op_y = self.ctx.mult_operand(&y_req[lo..hi]);
+            let op_r = self.ctx.mult_operand(&relu_y[lo..hi]);
+            let mut rec = self.ev.mult_plain(&id1[c], &op_y);
+            let rec2 = self.ev.mult_plain(&id2[c], &op_r);
+            self.ev.add_assign(&mut rec, &rec2);
+            // Subtract the client's fresh share s₁ (uniform mod p).
+            let mut neg_s1 = vec![0u64; hi - lo];
+            for slot in neg_s1.iter_mut() {
+                let s = self.rng.gen_range(p);
+                s1.push(s);
+                *slot = (p - s) % p;
+            }
+            let op_s = self.ctx.add_operand_unsigned(&neg_s1);
+            self.ev.add_plain(&mut rec, &op_s);
+            rec_out.push(rec);
+        }
+
+        // The client's next-layer share is s₁ (sum-pooled if the network
+        // pools here, mirroring the server).
+        if let Some(size) = step.pool_after {
+            s1 = super::server::pool_shares(&s1, step.out_shape, size, p);
+        }
+        self.share = s1;
+        self.online += t0.elapsed();
+        Some(rec_out)
+    }
+
+    /// Blinded logits from the last layer, dequantized (product scale; the
+    /// shared last-layer blind is the identity so these are the true logits
+    /// up to quantization + δ).
+    pub fn logits(&self) -> Vec<f64> {
+        let s = self.plan.product();
+        self.last_y.iter().map(|&v| s.dequantize(v)).collect()
+    }
+
+    pub fn argmax(&self) -> usize {
+        self.last_y
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .expect("no logits yet")
+    }
+
+    pub fn share(&self) -> &[u64] {
+        &self.share
+    }
+
+    pub fn set_share(&mut self, share: Vec<u64>) {
+        self.share = share;
+    }
+
+    pub fn take_ops(&self) -> OpCounts {
+        let c = self.ev.counts();
+        self.ev.reset_counts();
+        c
+    }
+
+    pub fn reset_online(&mut self) -> Duration {
+        std::mem::take(&mut self.online)
+    }
+}

@@ -1,0 +1,318 @@
+//! Slot packings for the obscure linear computation (paper §3.1–§3.3).
+//!
+//! The transform `x → x'` lays the input taps of every linear-output
+//! *block* contiguously in SIMD slots, so that after the element-wise
+//! multiply `x'∘k'∘v + b` the **client** can finish each output with a
+//! plain block sum — no ciphertext permutations, ever.
+//!
+//! * [`ConvPacking`]: block = the `c_i·r²` input taps of one output
+//!   position; the spatial packing is shared by all `c_o` output channels
+//!   (the kernel multiplier differs per channel, the ciphertexts don't).
+//! * [`FcPacking`]: block = the whole input vector, one block per output
+//!   neuron (`x'` is the input tiled `n_o` times).
+//!
+//! Blocks may straddle ciphertext boundaries: the client sums *ranges of a
+//! concatenated slot stream*, so no alignment padding is needed.
+
+use crate::nn::layers::{Layer, LayerKind};
+
+/// Where tap `t` of a block comes from in the flat input vector.
+/// `None` encodes zero-padding taps.
+pub type TapSource = Option<usize>;
+
+/// Packing for a convolutional layer.
+#[derive(Clone, Debug)]
+pub struct ConvPacking {
+    pub in_shape: (usize, usize, usize),
+    pub out_shape: (usize, usize, usize),
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Taps per block: `c_i · r²`.
+    pub block: usize,
+    /// Output positions per channel: `oh · ow`.
+    pub n_pos: usize,
+    /// Slot-stream length: `n_pos · block`.
+    pub len: usize,
+}
+
+impl ConvPacking {
+    pub fn new(layer: &Layer, in_shape: (usize, usize, usize)) -> Self {
+        let LayerKind::Conv2d { kernel, stride, pad, .. } = layer.kind else {
+            panic!("ConvPacking requires a Conv2d layer");
+        };
+        let (c, h, w) = in_shape;
+        let out_shape = layer.out_shape(c, h, w);
+        let n_pos = out_shape.1 * out_shape.2;
+        let block = c * kernel * kernel;
+        Self { in_shape, out_shape, kernel, stride, pad, block, n_pos, len: n_pos * block }
+    }
+
+    /// Number of ciphertexts for `n` slots per ciphertext.
+    pub fn num_cts(&self, n: usize) -> usize {
+        self.len.div_ceil(n)
+    }
+
+    /// Source of tap `t` at output position `pos`.
+    #[inline]
+    pub fn tap_source(&self, pos: usize, t: usize) -> TapSource {
+        let (c_i, h, w) = self.in_shape;
+        let ow = self.out_shape.2;
+        let (oy, ox) = (pos / ow, pos % ow);
+        let i = t / (self.kernel * self.kernel);
+        let rem = t % (self.kernel * self.kernel);
+        let (ky, kx) = (rem / self.kernel, rem % self.kernel);
+        debug_assert!(i < c_i);
+        let y = (oy * self.stride + ky) as isize - self.pad as isize;
+        let x = (ox * self.stride + kx) as isize - self.pad as isize;
+        if y < 0 || x < 0 || y >= h as isize || x >= w as isize {
+            None
+        } else {
+            Some((i * h + y as usize) * w + x as usize)
+        }
+    }
+
+    /// The `T` transform: expand a flat input (length `c·h·w`) into the
+    /// slot stream (length `len`). Works on any copyable scalar — in the
+    /// protocol this is applied to plaintext inputs *and* to mod-p shares
+    /// (`T` is linear, so it commutes with secret sharing).
+    pub fn expand<T: Copy + Default>(&self, input: &[T]) -> Vec<T> {
+        let (c, h, w) = self.in_shape;
+        assert_eq!(input.len(), c * h * w, "input length mismatch");
+        let mut out = vec![T::default(); self.len];
+        for pos in 0..self.n_pos {
+            for t in 0..self.block {
+                if let Some(src) = self.tap_source(pos, t) {
+                    out[pos * self.block + t] = input[src];
+                }
+            }
+        }
+        out
+    }
+
+    /// Kernel weights (quantized via `quant`) for output channel `o`, laid
+    /// out over the slot stream and scaled by the per-position blinding
+    /// `v_int[pos]`: slot `pos·block + t` gets `k_q[o][t] · v_int[pos]`.
+    pub fn kv_multiplier(
+        &self,
+        layer: &Layer,
+        o: usize,
+        v_int: &[i64],
+        quant: impl Fn(f64) -> i64,
+    ) -> Vec<i64> {
+        assert_eq!(v_int.len(), self.n_pos);
+        let (c_i, _, _) = self.in_shape;
+        let r = self.kernel;
+        // Quantize the c_i·r² kernel taps for this output channel once.
+        let kq: Vec<i64> = (0..self.block)
+            .map(|t| {
+                let i = t / (r * r);
+                let rem = t % (r * r);
+                quant(layer.conv_w(c_i, r, o, i, rem / r, rem % r))
+            })
+            .collect();
+        let mut out = vec![0i64; self.len];
+        for pos in 0..self.n_pos {
+            for t in 0..self.block {
+                out[pos * self.block + t] = kq[t] * v_int[pos];
+            }
+        }
+        out
+    }
+}
+
+/// Packing for a fully-connected layer.
+#[derive(Clone, Debug)]
+pub struct FcPacking {
+    pub n_i: usize,
+    pub n_o: usize,
+    /// Slot-stream length: `n_o · n_i`.
+    pub len: usize,
+}
+
+impl FcPacking {
+    pub fn new(layer: &Layer, in_len: usize) -> Self {
+        let LayerKind::Fc { out_features } = layer.kind else {
+            panic!("FcPacking requires an Fc layer");
+        };
+        Self { n_i: in_len, n_o: out_features, len: out_features * in_len }
+    }
+
+    pub fn num_cts(&self, n: usize) -> usize {
+        self.len.div_ceil(n)
+    }
+
+    /// Taps per block (the whole input vector).
+    pub fn block_len(&self) -> usize {
+        self.n_i
+    }
+
+    /// `T`: tile the input vector `n_o` times.
+    pub fn expand<T: Copy>(&self, input: &[T]) -> Vec<T> {
+        assert_eq!(input.len(), self.n_i, "input length mismatch");
+        let mut out = Vec::with_capacity(self.len);
+        for _ in 0..self.n_o {
+            out.extend_from_slice(input);
+        }
+        out
+    }
+
+    /// Weight multiplier over the slot stream, scaled by per-output-block
+    /// blinding: slot `o·n_i + j` gets `w_q[o][j] · v_int[o]`.
+    pub fn kv_multiplier(
+        &self,
+        layer: &Layer,
+        v_int: &[i64],
+        quant: impl Fn(f64) -> i64,
+    ) -> Vec<i64> {
+        assert_eq!(v_int.len(), self.n_o);
+        let mut out = vec![0i64; self.len];
+        for o in 0..self.n_o {
+            for j in 0..self.n_i {
+                out[o * self.n_i + j] = quant(layer.fc_w(self.n_i, o, j)) * v_int[o];
+            }
+        }
+        out
+    }
+}
+
+/// Sum contiguous blocks of a concatenated slot stream: block `i` is
+/// `stream[i·block .. (i+1)·block]`. This is the client-side plaintext sum
+/// that replaces GAZELLE's rotate-and-sum — the hot loop mirrored by the
+/// L1 Pallas kernel `obscure_dot`.
+pub fn block_sums(stream: &[i64], block: usize, n_blocks: usize) -> Vec<i64> {
+    assert!(stream.len() >= block * n_blocks, "stream too short");
+    (0..n_blocks).map(|i| stream[i * block..(i + 1) * block].iter().sum()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::ScalePlan;
+    use crate::nn::layers::forward_layer;
+    use crate::nn::Tensor;
+    use crate::util::rng::SplitMix64;
+
+    /// End-to-end packing property: expand ∘ multiply ∘ block-sum ==
+    /// quantized convolution, for random shapes.
+    #[test]
+    fn conv_packing_computes_convolution() {
+        let plan = ScalePlan::default_plan();
+        let mut rng = SplitMix64::new(21);
+        for (c_i, c_o, hw, r, stride, pad) in
+            [(1, 1, 4, 3, 1, 1), (2, 3, 6, 3, 1, 1), (1, 5, 8, 5, 2, 2), (3, 2, 5, 1, 1, 0)]
+        {
+            let mut layer = Layer::conv(c_o, r, stride, pad);
+            layer.init_weights(c_i, hw, hw, &mut rng);
+            let packing = ConvPacking::new(&layer, (c_i, hw, hw));
+            let input = Tensor::from_vec(
+                (0..c_i * hw * hw).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+                c_i,
+                hw,
+                hw,
+            );
+            let float_out = forward_layer(&layer, &input);
+
+            let xq: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
+            let expanded = packing.expand(&xq);
+            let v_one = vec![1i64 << plan.v.frac_bits; packing.n_pos]; // v = 1.0
+            for o in 0..c_o {
+                let kv = packing.kv_multiplier(&layer, o, &v_one, |w| plan.quant_k(w));
+                let prods: Vec<i64> =
+                    expanded.iter().zip(&kv).map(|(&x, &k)| x * k).collect();
+                let sums = block_sums(&prods, packing.block, packing.n_pos);
+                let scale = plan.x.mul(plan.k).mul(plan.v);
+                for pos in 0..packing.n_pos {
+                    let got = scale.dequantize(sums[pos]);
+                    let want = float_out.data[o * packing.n_pos + pos];
+                    assert!(
+                        (got - want).abs() < 0.15,
+                        "conv mismatch: cfg=({c_i},{c_o},{hw},{r}) o={o} pos={pos} got={got} want={want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fc_packing_computes_dot_products() {
+        let plan = ScalePlan::default_plan();
+        let mut rng = SplitMix64::new(22);
+        let (n_i, n_o) = (32, 7);
+        let mut layer = Layer::fc(n_o);
+        layer.init_weights(1, 1, n_i, &mut rng);
+        let packing = FcPacking::new(&layer, n_i);
+        let input: Vec<f64> = (0..n_i).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect();
+        let float_out = forward_layer(&layer, &Tensor::from_flat(input.clone()));
+
+        let xq: Vec<i64> = input.iter().map(|&v| plan.quant_x(v)).collect();
+        let expanded = packing.expand(&xq);
+        let v_one = vec![1i64 << plan.v.frac_bits; n_o];
+        let kv = packing.kv_multiplier(&layer, &v_one, |w| plan.quant_k(w));
+        let prods: Vec<i64> = expanded.iter().zip(&kv).map(|(&x, &k)| x * k).collect();
+        let sums = block_sums(&prods, packing.block_len(), n_o);
+        let scale = plan.x.mul(plan.k).mul(plan.v);
+        for o in 0..n_o {
+            let got = scale.dequantize(sums[o]);
+            assert!((got - float_out.data[o]).abs() < 0.1, "fc mismatch at {o}");
+        }
+    }
+
+    #[test]
+    fn expand_is_linear_mod_p() {
+        // T(a) + T(b) == T(a+b) slot-wise — the property that lets the
+        // protocol run on additive shares.
+        let mut rng = SplitMix64::new(23);
+        let layer = {
+            let mut l = Layer::conv(2, 3, 1, 1);
+            l.init_weights(1, 5, 5, &mut rng);
+            l
+        };
+        let packing = ConvPacking::new(&layer, (1, 5, 5));
+        let p = 8380417u64;
+        let a: Vec<u64> = (0..25).map(|_| rng.gen_range(p)).collect();
+        let b: Vec<u64> = (0..25).map(|_| rng.gen_range(p)).collect();
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| (x + y) % p).collect();
+        let ta = packing.expand(&a);
+        let tb = packing.expand(&b);
+        let tsum = packing.expand(&sum);
+        for i in 0..packing.len {
+            assert_eq!((ta[i] + tb[i]) % p, tsum[i]);
+        }
+    }
+
+    #[test]
+    fn paper_example_block_structure() {
+        // The paper's §3.1 example: 2×2 input, 3×3 kernel (pad 1) → four
+        // blocks of 9 taps; Con_1..Con_4. Verify tap sources match Fig. 4
+        // (Con_1 touches k(2,2),k(2,3),k(3,2),k(3,3) against the 4 inputs).
+        let layer = Layer::conv(1, 3, 1, 1);
+        let packing = ConvPacking::new(&layer, (1, 2, 2));
+        assert_eq!(packing.n_pos, 4);
+        assert_eq!(packing.block, 9);
+        // Output position 0 == Con_1: non-padding taps are exactly the
+        // kernel entries (1,1),(1,2),(2,1),(2,2) [0-indexed] hitting inputs
+        // x(0,0),x(0,1),x(1,0),x(1,1).
+        let live: Vec<(usize, usize)> = (0..9)
+            .filter_map(|t| packing.tap_source(0, t).map(|src| (t, src)))
+            .collect();
+        assert_eq!(live, vec![(4, 0), (5, 1), (7, 2), (8, 3)]);
+    }
+
+    #[test]
+    fn ct_counts() {
+        let layer = Layer::conv(5, 5, 1, 0);
+        let packing = ConvPacking::new(&layer, (1, 28, 28));
+        assert_eq!(packing.block, 25);
+        assert_eq!(packing.n_pos, 24 * 24);
+        assert_eq!(packing.len, 24 * 24 * 25);
+        assert_eq!(packing.num_cts(4096), (24 * 24 * 25usize).div_ceil(4096));
+    }
+
+    #[test]
+    fn block_sum_ranges() {
+        let stream = vec![1i64, 2, 3, 4, 5, 6];
+        assert_eq!(block_sums(&stream, 2, 3), vec![3, 7, 11]);
+        assert_eq!(block_sums(&stream, 3, 2), vec![6, 15]);
+    }
+}

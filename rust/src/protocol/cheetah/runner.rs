@@ -1,0 +1,164 @@
+//! End-to-end CHEETAH inference: drives client and server through every
+//! step, meters exact serialized traffic through the link model, and
+//! produces the per-layer report behind the paper's Table 7 / Fig. 8.
+
+use super::client::CheetahClient;
+use super::server::CheetahServer;
+use super::spec::ProtocolSpec;
+use crate::fixed::ScalePlan;
+use crate::nn::{Network, Tensor};
+use crate::phe::serial::ciphertext_bytes;
+use crate::phe::{Context, OpCounts};
+use crate::protocol::transport::{Dir, LinkModel, MeteredChannel};
+use std::time::Duration;
+
+/// Per-step accounting (one fused linear[+ReLU][+pool] step).
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    pub name: String,
+    pub client_time: Duration,
+    pub server_online: Duration,
+    pub server_offline: Duration,
+    pub c2s_bytes: u64,
+    pub s2c_bytes: u64,
+    pub server_ops: OpCounts,
+    pub client_ops: OpCounts,
+}
+
+/// Whole-query report.
+#[derive(Clone, Debug, Default)]
+pub struct InferenceReport {
+    pub argmax: usize,
+    pub logits: Vec<f64>,
+    pub steps: Vec<StepReport>,
+    /// Offline bytes: indicator ciphertexts shipped ahead of the query.
+    pub offline_bytes: u64,
+    pub offline_time: Duration,
+    /// Modeled wire time for the online traffic.
+    pub wire_time: Duration,
+}
+
+impl InferenceReport {
+    pub fn online_compute(&self) -> Duration {
+        self.steps.iter().map(|s| s.client_time + s.server_online).sum()
+    }
+    pub fn online_total(&self) -> Duration {
+        self.online_compute() + self.wire_time
+    }
+    pub fn online_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.c2s_bytes + s.s2c_bytes).sum()
+    }
+    pub fn total_ops(&self) -> OpCounts {
+        self.steps
+            .iter()
+            .fold(OpCounts::default(), |acc, s| acc.plus(&s.server_ops).plus(&s.client_ops))
+    }
+}
+
+/// An in-process CHEETAH deployment: both parties plus a metered link.
+pub struct CheetahRunner<'a> {
+    pub server: CheetahServer<'a>,
+    pub client: CheetahClient<'a>,
+    pub channel: MeteredChannel,
+}
+
+impl<'a> CheetahRunner<'a> {
+    pub fn new(
+        ctx: &'a Context,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+    ) -> Self {
+        let server = CheetahServer::new(ctx, net, plan, epsilon, seed);
+        let client = CheetahClient::new(ctx, server.spec.clone(), plan, seed.wrapping_add(1));
+        Self { server, client, channel: MeteredChannel::new(LinkModel::gigabit_lan()) }
+    }
+
+    pub fn spec(&self) -> &ProtocolSpec {
+        &self.server.spec
+    }
+
+    /// Ship the offline material (indicator ciphertexts) and return its
+    /// size — the paper's "offline communication".
+    pub fn run_offline(&mut self) -> u64 {
+        let params = &self.server.ctx.params;
+        let mut bytes = 0u64;
+        for si in 0..self.spec().steps.len() {
+            let (id1, id2) = self.server.indicator_cts(si);
+            bytes += ((id1.len() + id2.len()) * ciphertext_bytes(params, true)) as u64;
+            self.client.install_indicators(si, id1.to_vec(), id2.to_vec());
+        }
+        bytes
+    }
+
+    /// Run one private inference end to end.
+    pub fn infer(&mut self, input: &Tensor) -> InferenceReport {
+        let params = &self.server.ctx.params;
+        let fresh = ciphertext_bytes(params, true) as u64;
+        let eval = ciphertext_bytes(params, false) as u64;
+
+        let mut report = InferenceReport {
+            offline_time: self.server.timers.offline,
+            ..Default::default()
+        };
+        self.server.reset_timers();
+        self.client.reset_online();
+        self.server.take_ops();
+        self.client.take_ops();
+        self.channel.reset();
+
+        self.client.begin_query(input);
+        self.server.begin_query();
+
+        let n_steps = self.spec().steps.len();
+        for si in 0..n_steps {
+            let mut step_rep = StepReport {
+                name: format!(
+                    "step{si}:{}",
+                    match &self.spec().steps[si].linear {
+                        super::spec::LinearSpec::Conv(_) => "conv",
+                        super::spec::LinearSpec::Fc(_) => "fc",
+                    }
+                ),
+                ..Default::default()
+            };
+
+            // C → S: encrypted expanded share.
+            let in_cts = self.client.step_send(si);
+            for _ in &in_cts {
+                self.channel.send(Dir::ClientToServer, fresh);
+                step_rep.c2s_bytes += fresh;
+            }
+
+            // S: obscure linear computation.
+            let out_cts = self.server.step_linear(si, &in_cts);
+            for _ in &out_cts {
+                self.channel.send(Dir::ServerToClient, eval);
+                step_rep.s2c_bytes += eval;
+            }
+
+            // C: block sums (+ recovery for intermediate steps).
+            if let Some(rec) = self.client.step_receive(si, &out_cts) {
+                for _ in &rec {
+                    self.channel.send(Dir::ClientToServer, eval);
+                    step_rep.c2s_bytes += eval;
+                }
+                self.server.finish_nonlinear(si, &rec);
+            }
+
+            let t = self.server.reset_timers();
+            step_rep.server_online = t.online;
+            step_rep.server_offline = t.offline;
+            step_rep.client_time = self.client.reset_online();
+            step_rep.server_ops = self.server.take_ops();
+            step_rep.client_ops = self.client.take_ops();
+            report.steps.push(step_rep);
+        }
+
+        report.argmax = self.client.argmax();
+        report.logits = self.client.logits();
+        report.wire_time = self.channel.wire_time;
+        report
+    }
+}

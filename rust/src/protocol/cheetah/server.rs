@@ -1,0 +1,431 @@
+//! The CHEETAH server: holds the model, performs the perm-free obscure
+//! linear computation (paper §3.1–3.3), and finishes the nonlinear step by
+//! decrypting its share of the recovered activation.
+//!
+//! Per query and per fused step `linear [+ReLU] [+pool]`:
+//!
+//! 1. receive `[T(share_C)]_C` — client-encrypted expanded client share,
+//! 2. compute `T(share_S)` locally (shares are mod-p; `T` is linear),
+//! 3. per output channel: `MultPlain` by the blinded kernel `k'∘v`, then
+//!    `AddPlain` of `k'v∘T(share_S) + b` — **zero permutations**,
+//! 4. send the obscured products back; the client block-sums in plaintext,
+//! 5. receive the recovery ciphertexts `[ReLU(Con+δ) − s₁]_S`, decrypt →
+//!    the server's additive share of the next activation,
+//! 6. shares are sum-pooled locally when the network pools (the mean
+//!    divisor was absorbed into this step's weights at preparation time).
+//!
+//! Timing is split into `online` (query-dependent work the paper measures)
+//! and `offline` (weight/blinding material preparation, amortizable).
+
+use super::blinding::{sample_block_noise, Blind};
+use super::spec::{LinearSpec, ProtocolSpec, StepSpec};
+use crate::fixed::ScalePlan;
+
+use crate::nn::Network;
+use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
+use crate::util::rng::ChaCha20Rng;
+use std::time::{Duration, Instant};
+
+/// Per-tap additive-noise magnitude bound (see `fixed` docs: products ≤
+/// ~2^21, noise ≤ 2^17 keeps every slot within ±(p−1)/2).
+pub const NOISE_BOUND: i64 = 1 << 17;
+
+/// Online/offline compute timers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timers {
+    pub online: Duration,
+    pub offline: Duration,
+}
+
+/// Offline material for one step.
+struct PreparedStep {
+    /// Quantized kernel taps per output channel (weights pre-divided by the
+    /// inherited pool divisor): `kq[channel][tap]`.
+    kq: Vec<Vec<i64>>,
+    /// Blinding factor per output index (channel-major).
+    #[allow(dead_code)]
+    blinds: Vec<Blind>,
+    /// `v₁` as fixed-point int per output index.
+    v_int: Vec<i64>,
+    /// Noise targets `v₁·δ` per output index, at the product scale.
+    targets: Vec<i64>,
+    /// Seed for regenerating the per-tap noise stream `b` (not stored:
+    /// regenerating is cheaper than holding `len × channels` words).
+    noise_seed: u64,
+    /// Server-encrypted polar indicators, output-indexed packing
+    /// (transmitted to the client in the offline phase).
+    id1: Vec<Ciphertext>,
+    id2: Vec<Ciphertext>,
+}
+
+/// The server side of the CHEETAH protocol.
+pub struct CheetahServer<'a> {
+    pub ctx: &'a Context,
+    pub ev: Evaluator<'a>,
+    pub enc: Encryptor<'a>,
+    pub plan: ScalePlan,
+    pub spec: ProtocolSpec,
+    pub epsilon: f64,
+    net: Network,
+    steps: Vec<PreparedStep>,
+    /// Server's additive share (mod p) of the current activation.
+    share: Vec<u64>,
+    rng: ChaCha20Rng,
+    pub timers: Timers,
+}
+
+impl<'a> CheetahServer<'a> {
+    /// Prepare the model: quantize weights, sample per-query-independent
+    /// blinding, and encrypt the indicator vectors. (The paper prepares
+    /// v/b/ID offline per query; we re-prepare per `refresh_blinding` call —
+    /// `new` counts as the first offline phase.)
+    pub fn new(
+        ctx: &'a Context,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+    ) -> Self {
+        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let enc = Encryptor::new(ctx, &mut rng);
+        let spec = ProtocolSpec::compile(&net);
+        plan.check_fits(ctx.params.p);
+        let mut server = Self {
+            ev: Evaluator::new(ctx),
+            enc,
+            plan,
+            spec,
+            epsilon,
+            net,
+            steps: Vec::new(),
+            share: Vec::new(),
+            ctx,
+            rng,
+            timers: Timers::default(),
+        };
+        server.refresh_blinding();
+        server
+    }
+
+    /// (Re-)sample all per-query blinding material and re-encrypt the
+    /// indicator ciphertexts — the offline phase.
+    pub fn refresh_blinding(&mut self) {
+        let t0 = Instant::now();
+        let prod_scale = self.plan.product();
+        let mut steps = Vec::with_capacity(self.spec.steps.len());
+        for (si, step) in self.spec.steps.iter().enumerate() {
+            let n_out = step.linear.num_outputs();
+            let last = si == self.spec.last_idx();
+            let kq = self.quantize_weights(step);
+            let mut blinds = Vec::with_capacity(n_out);
+            let mut v_int = Vec::with_capacity(n_out);
+            let mut targets = Vec::with_capacity(n_out);
+            // The last layer uses one shared positive blind (the paper's
+            // ideal functionality reveals the last linear result under a
+            // single v) — we use the identity so logits keep their scale.
+            for _ in 0..n_out {
+                let b = if last { Blind::identity() } else { Blind::sample(&mut self.rng) };
+                let delta = if self.epsilon > 0.0 {
+                    let u = self.rng.gen_range(1 << 24) as f64 / (1u64 << 23) as f64 - 1.0;
+                    prod_scale.quantize(u * self.epsilon)
+                } else {
+                    0
+                };
+                v_int.push(b.v1_int(&self.plan));
+                // target = v1·δ at product scale: v1 is a power of two ⇒
+                // shift δ (sampled at product scale) by j and sign.
+                let shifted = match b.j {
+                    1 => delta * 2,
+                    0 => delta,
+                    _ => delta / 2,
+                };
+                targets.push(shifted * b.s as i64);
+                blinds.push(b);
+            }
+            // Indicator ciphertexts (skipped for the last layer).
+            let (id1, id2) = if last {
+                (Vec::new(), Vec::new())
+            } else {
+                let n = self.ctx.params.n;
+                let mut id1_vals = vec![0i64; n_out];
+                let mut id2_vals = vec![0i64; n_out];
+                for (i, b) in blinds.iter().enumerate() {
+                    let (a, c) = b.indicator(&self.plan);
+                    id1_vals[i] = a;
+                    id2_vals[i] = c;
+                }
+                let n_cts = step.linear.num_recovery_cts(n);
+                let mut id1 = Vec::with_capacity(n_cts);
+                let mut id2 = Vec::with_capacity(n_cts);
+                for c in 0..n_cts {
+                    let lo = c * n;
+                    let hi = ((c + 1) * n).min(n_out);
+                    id1.push(self.enc.encrypt_slots(&id1_vals[lo..hi], &mut self.rng));
+                    id2.push(self.enc.encrypt_slots(&id2_vals[lo..hi], &mut self.rng));
+                }
+                (id1, id2)
+            };
+            steps.push(PreparedStep {
+                kq,
+                blinds,
+                v_int,
+                targets,
+                noise_seed: self.rng.next_u64(),
+                id1,
+                id2,
+            });
+        }
+        self.steps = steps;
+        self.timers.offline += t0.elapsed();
+    }
+
+    /// Quantized kernel taps per channel, with the inherited pool divisor
+    /// folded in (`mean = sum / div` absorbed into the next linear layer).
+    fn quantize_weights(&self, step: &StepSpec) -> Vec<Vec<i64>> {
+        let layer = &self.net.layers[step.layer_idx];
+        let div = step.weight_div;
+        match &step.linear {
+            LinearSpec::Conv(p) => {
+                let (c_i, _, _) = p.in_shape;
+                let r = p.kernel;
+                (0..p.out_shape.0)
+                    .map(|o| {
+                        (0..p.block)
+                            .map(|t| {
+                                let i = t / (r * r);
+                                let rem = t % (r * r);
+                                self.plan
+                                    .quant_k(layer.conv_w(c_i, r, o, i, rem / r, rem % r) / div)
+                            })
+                            .collect()
+                    })
+                    .collect()
+            }
+            LinearSpec::Fc(p) => {
+                // FC: one "channel"; blocks are output neurons, so kq is
+                // indexed per block at multiplier-build time. Store rows.
+                (0..p.n_o)
+                    .map(|o| {
+                        (0..p.n_i)
+                            .map(|j| self.plan.quant_k(layer.fc_w(p.n_i, o, j) / div))
+                            .collect()
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// The indicator ciphertexts for step `si` (offline transmission).
+    pub fn indicator_cts(&self, si: usize) -> (&[Ciphertext], &[Ciphertext]) {
+        (&self.steps[si].id1, &self.steps[si].id2)
+    }
+
+    /// Begin a query: the client holds the whole input, so the server's
+    /// initial share is zero.
+    pub fn begin_query(&mut self) {
+        let (c, h, w) = self.spec.input_shape;
+        self.share = vec![0u64; c * h * w];
+    }
+
+    /// Direct share injection (tests / mid-network entry).
+    pub fn set_share(&mut self, share: Vec<u64>) {
+        self.share = share;
+    }
+
+    pub fn share(&self) -> &[u64] {
+        &self.share
+    }
+
+    /// The obscure linear computation for step `si`. Input: the client's
+    /// encrypted expanded share. Output: channel-major obscured-product
+    /// ciphertexts (`channels × num_in_cts`).
+    pub fn step_linear(&mut self, si: usize, in_cts: &[Ciphertext]) -> Vec<Ciphertext> {
+        let step = &self.spec.steps[si];
+        let prep = &self.steps[si];
+        let n = self.ctx.params.n;
+        let p = self.ctx.params.p;
+        let len = step.linear.stream_len();
+        let n_cts = step.linear.num_in_cts(n);
+        assert_eq!(in_cts.len(), n_cts, "wrong input ciphertext count");
+        let channels = step.linear.num_channels();
+        let blocks = step.linear.blocks_per_channel();
+        let block = step.linear.block_len();
+
+        // Online: convert incoming ciphertexts to NTT form once.
+        let t_on = Instant::now();
+        let mut in_ntt: Vec<Ciphertext> = in_cts.to_vec();
+        for ct in in_ntt.iter_mut() {
+            self.ev.to_ntt(ct);
+        }
+        self.timers.online += t_on.elapsed();
+
+        // The server's expanded share T(share_S); zero for the first layer
+        // of a fresh query (client holds the input).
+        let share_zero = self.share.iter().all(|&s| s == 0);
+        let t_share = Instant::now();
+        let ts: Vec<u64> = if share_zero {
+            Vec::new()
+        } else {
+            step.linear.expand_u64(&self.share)
+        };
+        self.timers.online += t_share.elapsed();
+
+        let mut out = Vec::with_capacity(channels * n_cts);
+        let mut kv_slot = vec![0i64; n];
+        let mut add_slot = vec![0u64; n];
+        for ch in 0..channels {
+            // Regenerate this channel's noise stream b (deterministic).
+            let t_off = Instant::now();
+            let mut nrng = ChaCha20Rng::from_u64_seed(prep.noise_seed ^ (ch as u64) << 32);
+            let mut b_stream: Vec<i64> = Vec::with_capacity(blocks * block);
+            for blk in 0..blocks {
+                let out_idx = ch * blocks + blk;
+                b_stream.extend(sample_block_noise(
+                    block,
+                    prep.targets[out_idx],
+                    NOISE_BOUND,
+                    &mut nrng,
+                ));
+            }
+            self.timers.offline += t_off.elapsed();
+
+            for (c, in_ct) in in_ntt.iter().enumerate() {
+                let lo = c * n;
+                let hi = ((c + 1) * n).min(len);
+                let width = hi - lo;
+
+                // Offline-attributed: the blinded-kernel multiplier k'∘v.
+                let t_off = Instant::now();
+                for (slot, g) in (lo..hi).enumerate() {
+                    let (blk, tap) = (g / block, g % block);
+                    let kq = match &step.linear {
+                        LinearSpec::Conv(_) => prep.kq[ch][tap],
+                        LinearSpec::Fc(_) => prep.kq[blk][tap],
+                    };
+                    kv_slot[slot] = kq * prep.v_int[ch * blocks + blk];
+                }
+                kv_slot[width..].fill(0);
+                let kv_op = self.ctx.mult_operand(&kv_slot[..width.max(1)]);
+                self.timers.offline += t_off.elapsed();
+
+                // The additive operand k'v∘T(share_S) + b. Query-dependent
+                // when the server holds a non-zero share (hidden layers):
+                // online. First layer: offline-attributable (b only).
+                let t_add = Instant::now();
+                for (slot, g) in (lo..hi).enumerate() {
+                    let bb = b_stream[g];
+                    let b_res = if bb < 0 { p - ((-bb) as u64 % p) } else { bb as u64 % p };
+                    add_slot[slot] = if share_zero {
+                        b_res % p
+                    } else {
+                        let kv = kv_slot[slot];
+                        let kv_res =
+                            if kv < 0 { p - ((-kv) as u64 % p) } else { kv as u64 % p };
+                        (crate::util::math::mul_mod(kv_res, ts[g], p) + b_res) % p
+                    };
+                }
+                add_slot[width..].fill(0);
+                let add_op = self.ctx.add_operand_unsigned(&add_slot[..width.max(1)]);
+                if share_zero {
+                    self.timers.offline += t_add.elapsed();
+                } else {
+                    self.timers.online += t_add.elapsed();
+                }
+
+                // Online: the paper's 1 Mult + 1 Add per ciphertext.
+                let t_on = Instant::now();
+                let mut prod = self.ev.mult_plain(in_ct, &kv_op);
+                self.ev.add_plain(&mut prod, &add_op);
+                self.timers.online += t_on.elapsed();
+                out.push(prod);
+            }
+        }
+        out
+    }
+
+    /// Finish the nonlinear step: decrypt the recovery ciphertexts into the
+    /// server's share of the (ReLU'd, requantized) activation, applying the
+    /// share-domain sum-pool when the network pools here.
+    pub fn finish_nonlinear(&mut self, si: usize, rec_cts: &[Ciphertext]) {
+        let step = &self.spec.steps[si];
+        let n = self.ctx.params.n;
+        let n_out = step.linear.num_outputs();
+        assert_eq!(rec_cts.len(), step.linear.num_recovery_cts(n));
+        let t0 = Instant::now();
+        let mut share = Vec::with_capacity(n_out);
+        for (c, ct) in rec_cts.iter().enumerate() {
+            let vals = self.ctx.encoder.decode_unsigned(&self.enc.decrypt(ct));
+            let hi = ((c + 1) * n).min(n_out) - c * n;
+            share.extend_from_slice(&vals[..hi]);
+        }
+        if let Some(size) = step.pool_after {
+            share = pool_shares(&share, step.out_shape, size, self.ctx.params.p);
+        }
+        self.share = share;
+        self.timers.online += t0.elapsed();
+    }
+
+    /// Reset and return evaluator op counters.
+    pub fn take_ops(&self) -> OpCounts {
+        let c = self.ev.counts();
+        self.ev.reset_counts();
+        c
+    }
+
+    pub fn reset_timers(&mut self) -> Timers {
+        std::mem::take(&mut self.timers)
+    }
+}
+
+/// Sum-pool additive shares (mod p) over `size×size` windows — used by both
+/// parties; the mean divisor is folded into the next layer's weights.
+pub fn pool_shares(
+    share: &[u64],
+    shape: (usize, usize, usize),
+    size: usize,
+    p: u64,
+) -> Vec<u64> {
+    let (c, h, w) = shape;
+    assert_eq!(share.len(), c * h * w);
+    let (oh, ow) = (h / size, w / size);
+    let mut out = vec![0u64; c * oh * ow];
+    for ch in 0..c {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = 0u64;
+                for dy in 0..size {
+                    for dx in 0..size {
+                        acc = (acc + share[(ch * h + oy * size + dy) * w + ox * size + dx]) % p;
+                    }
+                }
+                out[(ch * oh + oy) * ow + ox] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_shares_reconstructs_sum() {
+        let p = 8380417u64;
+        let mut rng = crate::util::rng::SplitMix64::new(4);
+        let shape = (2, 4, 4);
+        let total = 32;
+        let a: Vec<u64> = (0..total).map(|_| rng.gen_range(p)).collect();
+        let b: Vec<u64> = (0..total).map(|_| rng.gen_range(p)).collect();
+        let pa = pool_shares(&a, shape, 2, p);
+        let pb = pool_shares(&b, shape, 2, p);
+        // Reconstructed pooled value == pooled reconstructed value.
+        for i in 0..pa.len() {
+            let rec_pool = (pa[i] + pb[i]) % p;
+            // compute pooled (a+b) directly
+            let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| (x + y) % p).collect();
+            let pooled = pool_shares(&sum, shape, 2, p);
+            assert_eq!(rec_pool, pooled[i]);
+        }
+    }
+}

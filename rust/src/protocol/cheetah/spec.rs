@@ -1,0 +1,259 @@
+//! The public protocol specification derived from a network architecture:
+//! layer geometry, packings, fusion (linear+ReLU), pooling, and ciphertext
+//! counts. Both parties hold the spec; only the server holds weights.
+
+use super::packing::{ConvPacking, FcPacking};
+use crate::nn::layers::LayerKind;
+use crate::nn::Network;
+use crate::phe::Params;
+
+/// The linear kernel of one protocol step.
+#[derive(Clone, Debug)]
+pub enum LinearSpec {
+    Conv(ConvPacking),
+    Fc(FcPacking),
+}
+
+impl LinearSpec {
+    /// Slot-stream length of the expanded input `x'`.
+    pub fn stream_len(&self) -> usize {
+        match self {
+            LinearSpec::Conv(p) => p.len,
+            LinearSpec::Fc(p) => p.len,
+        }
+    }
+
+    /// Number of client→server input ciphertexts.
+    pub fn num_in_cts(&self, n: usize) -> usize {
+        self.stream_len().div_ceil(n)
+    }
+
+    /// Output channels that need separate multipliers (1 for FC).
+    pub fn num_channels(&self) -> usize {
+        match self {
+            LinearSpec::Conv(p) => p.out_shape.0,
+            LinearSpec::Fc(_) => 1,
+        }
+    }
+
+    /// Blocks (outputs) per channel.
+    pub fn blocks_per_channel(&self) -> usize {
+        match self {
+            LinearSpec::Conv(p) => p.n_pos,
+            LinearSpec::Fc(p) => p.n_o,
+        }
+    }
+
+    /// Taps per block.
+    pub fn block_len(&self) -> usize {
+        match self {
+            LinearSpec::Conv(p) => p.block,
+            LinearSpec::Fc(p) => p.n_i,
+        }
+    }
+
+    /// Total outputs (`c_o·oh·ow` or `n_o`).
+    pub fn num_outputs(&self) -> usize {
+        self.num_channels() * self.blocks_per_channel()
+    }
+
+    /// Server→client ciphertexts (one stream per channel).
+    pub fn num_out_cts(&self, n: usize) -> usize {
+        self.num_channels() * self.num_in_cts(n)
+    }
+
+    /// Ciphertexts holding the recovery output / ID vectors
+    /// (output-indexed packing).
+    pub fn num_recovery_cts(&self, n: usize) -> usize {
+        self.num_outputs().div_ceil(n)
+    }
+
+    /// Expand a flat share/input into the slot stream (the `T` transform).
+    pub fn expand_u64(&self, input: &[u64]) -> Vec<u64> {
+        match self {
+            LinearSpec::Conv(p) => p.expand(input),
+            LinearSpec::Fc(p) => p.expand(input),
+        }
+    }
+
+    pub fn expand_i64(&self, input: &[i64]) -> Vec<i64> {
+        match self {
+            LinearSpec::Conv(p) => p.expand(input),
+            LinearSpec::Fc(p) => p.expand(input),
+        }
+    }
+}
+
+/// One fused protocol step: linear [+ ReLU] [+ pool-after].
+#[derive(Clone, Debug)]
+pub struct StepSpec {
+    /// Index of the linear layer in the source `Network`.
+    pub layer_idx: usize,
+    pub linear: LinearSpec,
+    /// Fused ReLU (every step except possibly the last).
+    pub relu: bool,
+    /// Mean-pool (as share-domain *sum*-pool; the divisor is absorbed into
+    /// the next layer's weights) applied to the activation after ReLU.
+    pub pool_after: Option<usize>,
+    /// Input shape of this step.
+    pub in_shape: (usize, usize, usize),
+    /// Activation shape after the linear+ReLU (before pooling).
+    pub out_shape: (usize, usize, usize),
+    /// Divisor inherited from preceding pools (weights are pre-divided).
+    pub weight_div: f64,
+}
+
+/// The full protocol spec for a network.
+#[derive(Clone, Debug)]
+pub struct ProtocolSpec {
+    pub steps: Vec<StepSpec>,
+    pub input_shape: (usize, usize, usize),
+}
+
+impl ProtocolSpec {
+    /// Compile a network into protocol steps. Supported patterns:
+    /// `Linear [→ ReLU] [→ MeanPool]` (all four benchmark networks fit).
+    pub fn compile(net: &Network) -> Self {
+        let mut steps = Vec::new();
+        let (mut c, mut h, mut w) = net.input_shape;
+        let mut i = 0;
+        let mut pending_div = 1.0f64;
+        while i < net.layers.len() {
+            let layer = &net.layers[i];
+            match layer.kind {
+                LayerKind::Conv2d { .. } | LayerKind::Fc { .. } => {
+                    let in_shape = (c, h, w);
+                    let linear = match layer.kind {
+                        LayerKind::Conv2d { .. } => {
+                            LinearSpec::Conv(ConvPacking::new(layer, in_shape))
+                        }
+                        _ => LinearSpec::Fc(FcPacking::new(layer, c * h * w)),
+                    };
+                    let out_shape = layer.out_shape(c, h, w);
+                    let mut relu = false;
+                    let mut pool_after = None;
+                    let mut j = i + 1;
+                    if j < net.layers.len() && net.layers[j].kind == LayerKind::Relu {
+                        relu = true;
+                        j += 1;
+                    }
+                    let mut post_shape = out_shape;
+                    if let Some(LayerKind::MeanPool { size }) =
+                        net.layers.get(j).map(|l| l.kind.clone())
+                    {
+                        pool_after = Some(size);
+                        post_shape = (out_shape.0, out_shape.1 / size, out_shape.2 / size);
+                        j += 1;
+                    }
+                    steps.push(StepSpec {
+                        layer_idx: i,
+                        linear,
+                        relu,
+                        pool_after,
+                        in_shape,
+                        out_shape,
+                        weight_div: pending_div,
+                    });
+                    pending_div = pool_after.map(|s| (s * s) as f64).unwrap_or(1.0);
+                    (c, h, w) = post_shape;
+                    i = j;
+                }
+                LayerKind::Relu | LayerKind::MeanPool { .. } => {
+                    panic!("unsupported layer order at index {i}: nonlinear without preceding linear");
+                }
+            }
+        }
+        assert!(!steps.is_empty(), "network has no linear layers");
+        Self { steps, input_shape: net.input_shape }
+    }
+
+    pub fn last_idx(&self) -> usize {
+        self.steps.len() - 1
+    }
+
+    /// Total online communication estimate in bytes (fresh c2s cts, 2-poly
+    /// s2c cts, 2-poly recovery cts) — used for quick capacity planning;
+    /// the benchmarks meter actual serialized bytes.
+    pub fn estimate_online_bytes(&self, params: &Params) -> u64 {
+        use crate::phe::serial::ciphertext_bytes;
+        let n = params.n;
+        let mut total = 0u64;
+        for (idx, s) in self.steps.iter().enumerate() {
+            total += (s.linear.num_in_cts(n) as u64) * ciphertext_bytes(params, true) as u64;
+            total += (s.linear.num_out_cts(n) as u64) * ciphertext_bytes(params, false) as u64;
+            if idx != self.last_idx() {
+                total +=
+                    (s.linear.num_recovery_cts(n) as u64) * ciphertext_bytes(params, false) as u64;
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NetworkArch;
+
+    #[test]
+    fn compile_net_a() {
+        let net = Network::build(NetworkArch::NetA, 1);
+        let spec = ProtocolSpec::compile(&net);
+        assert_eq!(spec.steps.len(), 3); // conv+relu, fc+relu, fc
+        assert!(spec.steps[0].relu && spec.steps[1].relu && !spec.steps[2].relu);
+        assert!(spec.steps.iter().all(|s| s.pool_after.is_none()));
+        assert!(matches!(spec.steps[0].linear, LinearSpec::Conv(_)));
+        assert!(matches!(spec.steps[2].linear, LinearSpec::Fc(_)));
+    }
+
+    #[test]
+    fn compile_net_b_with_pools() {
+        let net = Network::build(NetworkArch::NetB, 1);
+        let spec = ProtocolSpec::compile(&net);
+        assert_eq!(spec.steps.len(), 4);
+        assert_eq!(spec.steps[0].pool_after, Some(2));
+        assert_eq!(spec.steps[1].pool_after, Some(2));
+        // The pool divisor lands on the *next* step's weights.
+        assert_eq!(spec.steps[0].weight_div, 1.0);
+        assert_eq!(spec.steps[1].weight_div, 4.0);
+        assert_eq!(spec.steps[2].weight_div, 4.0);
+        assert_eq!(spec.steps[3].weight_div, 1.0);
+    }
+
+    #[test]
+    fn compile_big_nets() {
+        for arch in [NetworkArch::AlexNet, NetworkArch::Vgg16] {
+            let net = Network::build_scaled(arch, 1, 0.125);
+            let spec = ProtocolSpec::compile(&net);
+            let n_linear = spec.steps.len();
+            assert!(n_linear == 8 || n_linear == 16, "{arch:?}: {n_linear} steps");
+            // Shapes chain.
+            for w in spec.steps.windows(2) {
+                let (c, h, wd) = w[1].in_shape;
+                let (pc, mut ph, mut pw) = w[0].out_shape;
+                if let Some(s) = w[0].pool_after {
+                    ph /= s;
+                    pw /= s;
+                }
+                if matches!(w[1].linear, LinearSpec::Conv(_)) {
+                    assert_eq!((c, h, wd), (pc, ph, pw));
+                } else {
+                    assert_eq!(c * h * wd, pc * ph * pw);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ct_count_accounting() {
+        let net = Network::build(NetworkArch::NetA, 1);
+        let spec = ProtocolSpec::compile(&net);
+        let params = Params::default_params();
+        let s0 = &spec.steps[0];
+        // Conv 5×5@5 stride 2 pad 2 on 28×28: n_pos = 14*14, block = 25.
+        assert_eq!(s0.linear.blocks_per_channel(), 14 * 14);
+        assert_eq!(s0.linear.block_len(), 25);
+        assert_eq!(s0.linear.num_in_cts(params.n), (14 * 14 * 25usize).div_ceil(4096));
+        assert!(spec.estimate_online_bytes(&params) > 0);
+    }
+}

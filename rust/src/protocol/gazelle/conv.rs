@@ -1,0 +1,263 @@
+//! GAZELLE packed convolution: the rotation-based baseline CHEETAH beats.
+//!
+//! Packing: one input channel per ciphertext, spatial positions row-major
+//! in the first half-row (`h·w ≤ n/2`). The convolution is computed with
+//! the diagonal method — each kernel offset `d = dy·w + dx` contributes
+//! `Perm(input, d) ∘ broadcast(k[o][i][d])`, accumulated per output
+//! channel. Two variants, as in the paper's Table 3:
+//!
+//! * **Input rotation (IR)**: rotate each input channel once per offset,
+//!   reuse across output channels. `#Perm = c_i(r²−1)`,
+//!   `#Mult = c_i·c_o·r²`.
+//! * **Output rotation (OR)**: multiply first, rotate per-offset partial
+//!   sums. `#Perm = c_o(r²−1)`, `#Mult = c_i·c_o·r²`.
+//!
+//! Border semantics: offsets index the *flattened* spatial vector with a
+//! zero tail (not per-row zero padding). GAZELLE handles true borders with
+//! extra masking multiplications; our op counts are therefore a slight
+//! *under*-estimate of real GAZELLE cost — conservative in CHEETAH's favor.
+//! The plaintext reference [`conv_flat_reference`] uses identical
+//! semantics, so correctness tests are exact.
+
+use crate::fixed::ScalePlan;
+use crate::nn::layers::Layer;
+use crate::phe::keys::galois_elt_for_step;
+use crate::phe::{Ciphertext, Context, Evaluator, GaloisKeys, SecretKey};
+use crate::util::rng::ChaCha20Rng;
+
+/// Which rotation strategy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvVariant {
+    InputRotation,
+    OutputRotation,
+}
+
+/// The kernel-offset displacements for an `r×r` kernel centred at
+/// `(r/2, r/2)` over a `w`-wide row-major image.
+pub fn kernel_offsets(r: usize, w: usize) -> Vec<i64> {
+    let c = (r / 2) as i64;
+    let mut out = Vec::with_capacity(r * r);
+    for ky in 0..r as i64 {
+        for kx in 0..r as i64 {
+            out.push((ky - c) * w as i64 + (kx - c));
+        }
+    }
+    out
+}
+
+/// Galois elements needed for a conv shape (for offline key generation).
+pub fn needed_galois_elts(ctx: &Context, r: usize, w: usize) -> Vec<u64> {
+    kernel_offsets(r, w)
+        .into_iter()
+        .filter(|&d| d != 0)
+        .map(|d| galois_elt_for_step(&ctx.params, d))
+        .collect()
+}
+
+/// Generate rotation keys for a conv shape.
+pub fn conv_galois_keys(
+    ctx: &Context,
+    sk: &SecretKey,
+    r: usize,
+    w: usize,
+    rng: &mut ChaCha20Rng,
+) -> GaloisKeys {
+    GaloisKeys::generate_for(ctx, sk, rng, &needed_galois_elts(ctx, r, w))
+}
+
+/// GAZELLE convolution: `in_cts[i]` holds input channel `i` (NTT form),
+/// stride 1. Returns one ciphertext per output channel, spatial outputs in
+/// the same slots as the inputs. Quantization: inputs at `plan.x`, weights
+/// at `plan.k` (divided by `weight_div` to absorb preceding mean-pools).
+#[allow(clippy::too_many_arguments)]
+pub fn conv(
+    ev: &Evaluator,
+    variant: ConvVariant,
+    in_cts: &[Ciphertext],
+    layer: &Layer,
+    in_shape: (usize, usize, usize),
+    plan: &ScalePlan,
+    weight_div: f64,
+    gk: &GaloisKeys,
+) -> Vec<Ciphertext> {
+    let ctx = ev.ctx;
+    let (c_i, h, w) = in_shape;
+    assert_eq!(in_cts.len(), c_i, "one ciphertext per input channel");
+    assert!(h * w <= ctx.params.row_size(), "image must fit one half-row");
+    let crate::nn::layers::LayerKind::Conv2d { out_channels, kernel, stride, .. } = layer.kind
+    else {
+        panic!("conv requires Conv2d layer")
+    };
+    assert_eq!(stride, 1, "GAZELLE packed conv path supports stride 1");
+    let offsets = kernel_offsets(kernel, w);
+    let hw = h * w;
+
+    let quant = |v: f64| plan.quant_k(v / weight_div);
+    // Broadcast multiplier for (o, i, tap): kernel coefficient in every
+    // live spatial slot.
+    let broadcast = |o: usize, i: usize, t: usize| -> Vec<i64> {
+        let kq = quant(layer.conv_w(c_i, kernel, o, i, t / kernel, t % kernel));
+        vec![kq; hw]
+    };
+
+    match variant {
+        ConvVariant::InputRotation => {
+            // Rotate each input channel per offset once.
+            let mut rotated: Vec<Vec<Ciphertext>> = Vec::with_capacity(c_i);
+            for ct in in_cts {
+                let mut per_offset = Vec::with_capacity(offsets.len());
+                for &d in &offsets {
+                    if d == 0 {
+                        per_offset.push(ct.clone());
+                    } else {
+                        per_offset.push(ev.rotate_rows(ct, d, gk));
+                    }
+                }
+                rotated.push(per_offset);
+            }
+            (0..out_channels)
+                .map(|o| {
+                    let mut acc: Option<Ciphertext> = None;
+                    for i in 0..c_i {
+                        for (t, _) in offsets.iter().enumerate() {
+                            let op = ctx.mult_operand(&broadcast(o, i, t));
+                            let prod = ev.mult_plain(&rotated[i][t], &op);
+                            match &mut acc {
+                                None => acc = Some(prod),
+                                Some(a) => ev.add_assign(a, &prod),
+                            }
+                        }
+                    }
+                    acc.unwrap()
+                })
+                .collect()
+        }
+        ConvVariant::OutputRotation => {
+            (0..out_channels)
+                .map(|o| {
+                    let mut acc: Option<Ciphertext> = None;
+                    for (t, &d) in offsets.iter().enumerate() {
+                        // Sum over input channels first, then one rotation
+                        // per (o, offset).
+                        let mut partial: Option<Ciphertext> = None;
+                        for (i, ct) in in_cts.iter().enumerate() {
+                            let op = ctx.mult_operand(&broadcast(o, i, t));
+                            let prod = ev.mult_plain(ct, &op);
+                            match &mut partial {
+                                None => partial = Some(prod),
+                                Some(p) => ev.add_assign(p, &prod),
+                            }
+                        }
+                        let mut part = partial.unwrap();
+                        if d != 0 {
+                            part = ev.rotate_rows(&part, d, gk);
+                        }
+                        match &mut acc {
+                            None => acc = Some(part),
+                            Some(a) => ev.add_assign(a, &part),
+                        }
+                    }
+                    acc.unwrap()
+                })
+                .collect()
+        }
+    }
+}
+
+/// The plaintext reference with identical flat-index border semantics.
+pub fn conv_flat_reference(
+    input_q: &[i64],
+    layer: &Layer,
+    in_shape: (usize, usize, usize),
+    plan: &ScalePlan,
+    weight_div: f64,
+) -> Vec<i64> {
+    let (c_i, h, w) = in_shape;
+    let crate::nn::layers::LayerKind::Conv2d { out_channels, kernel, .. } = layer.kind else {
+        panic!("requires Conv2d")
+    };
+    let hw = h * w;
+    let offsets = kernel_offsets(kernel, w);
+    let quant = |v: f64| plan.quant_k(v / weight_div);
+    let mut out = vec![0i64; out_channels * hw];
+    for o in 0..out_channels {
+        for s in 0..hw {
+            let mut acc = 0i64;
+            for i in 0..c_i {
+                for (t, &d) in offsets.iter().enumerate() {
+                    let src = s as i64 + d;
+                    if src >= 0 && (src as usize) < hw {
+                        let kq = quant(layer.conv_w(c_i, kernel, o, i, t / kernel, t % kernel));
+                        acc += kq * input_q[i * hw + src as usize];
+                    }
+                }
+            }
+            out[o * hw + s] = acc;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::{Encryptor, Params};
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn both_variants_match_reference_and_counts() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let plan = ScalePlan::default_plan();
+        let mut rng = ChaCha20Rng::from_u64_seed(31);
+        let mut srng = SplitMix64::new(32);
+        let enc = Encryptor::new(&ctx, &mut rng);
+        let ev = Evaluator::new(&ctx);
+
+        let (c_i, c_o, h, w, r) = (2usize, 3usize, 8usize, 8usize, 3usize);
+        let mut layer = Layer::conv(c_o, r, 1, 1);
+        layer.init_weights(c_i, h, w, &mut srng);
+        let gk = conv_galois_keys(&ctx, &enc.sk, r, w, &mut rng);
+
+        let input_q: Vec<i64> =
+            (0..c_i * h * w).map(|_| srng.gen_i64_range(-128, 128)).collect();
+        let mut in_cts: Vec<Ciphertext> = (0..c_i)
+            .map(|i| enc.encrypt_slots(&input_q[i * h * w..(i + 1) * h * w], &mut rng))
+            .collect();
+        for ct in in_cts.iter_mut() {
+            ev.to_ntt(ct);
+        }
+
+        let reference = conv_flat_reference(&input_q, &layer, (c_i, h, w), &plan, 1.0);
+
+        for (variant, expect_perm) in [
+            (ConvVariant::InputRotation, (c_i * (r * r - 1)) as u64),
+            (ConvVariant::OutputRotation, (c_o * (r * r - 1)) as u64),
+        ] {
+            ev.reset_counts();
+            let out = conv(&ev, variant, &in_cts, &layer, (c_i, h, w), &plan, 1.0, &gk);
+            assert_eq!(out.len(), c_o);
+            let counts = ev.counts();
+            assert_eq!(counts.perm, expect_perm, "{variant:?} perm count");
+            assert_eq!(counts.mult, (c_i * c_o * r * r) as u64, "{variant:?} mult count");
+            for (o, ct) in out.iter().enumerate() {
+                let dec = enc.decrypt_slots(ct);
+                for s in 0..h * w {
+                    assert_eq!(
+                        dec[s],
+                        reference[o * h * w + s],
+                        "{variant:?} o={o} s={s}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn offsets_cover_kernel() {
+        let offs = kernel_offsets(3, 8);
+        assert_eq!(offs.len(), 9);
+        assert_eq!(offs[4], 0); // centre
+        assert_eq!(offs[0], -9); // top-left: -w-1
+        assert_eq!(offs[8], 9);
+    }
+}

@@ -1,0 +1,23 @@
+//! The **GAZELLE** baseline (Juvekar et al., USENIX Security'18) — the
+//! fastest prior framework in the paper's Table 1, reimplemented on the
+//! same PHE substrate so every comparison is apples-to-apples:
+//!
+//! * [`conv`] — rotation-based packed convolution (input-rotation and
+//!   output-rotation variants; Table 3),
+//! * [`fc`] — naive / Halevi–Shoup / hybrid matrix-vector products
+//!   (Tables 2 and 4),
+//! * [`runner`] — the full inference pipeline with GC ReLU between layers
+//!   (Tables 6 and 7, Figs. 6 and 8).
+//!
+//! What the paper's analysis predicts — and these modules measure — is that
+//! every linear layer pays `Perm` operations (each ≈ tens of `Mult`s) and
+//! every nonlinear layer pays per-element garbled tables, both of which
+//! CHEETAH eliminates.
+
+pub mod conv;
+pub mod fc;
+pub mod runner;
+
+pub use conv::{conv, conv_flat_reference, conv_galois_keys, ConvVariant};
+pub use fc::{fc, fc_galois_keys, fc_reference, pack_fc_input, FcMethod};
+pub use runner::{GazelleReport, GazelleRunner};

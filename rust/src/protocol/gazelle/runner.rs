@@ -1,0 +1,406 @@
+//! End-to-end GAZELLE baseline inference: rotation-based HE linear layers
+//! + garbled-circuit ReLU, chained through additive shares mod p — the
+//! system CHEETAH is benchmarked against in Tables 3–7.
+//!
+//! Per fused step:
+//! 1. client packs + encrypts its share (per input channel / FC vector),
+//! 2. server `AddPlain`s its own share, runs the rotation-based linear
+//!    kernel (IR or OR conv, hybrid FC), adds a fresh mask `r`, replies,
+//! 3. client decrypts its linear share; both parties run the batched GC
+//!    ReLU (with built-in truncation) → fresh shares mod p,
+//! 4. mean-pool = share-domain sum-pool (divisor absorbed into the next
+//!    layer's weights), exactly as in the CHEETAH runner for fairness.
+//!
+//! Strided convolutions run at stride 1 and are share-downsampled (GAZELLE
+//! packs strided kernels natively; this costs the baseline nothing extra
+//! here because the stride-1 image already fits the ciphertext).
+
+use super::conv::{conv, conv_galois_keys, ConvVariant};
+use super::fc::{fc, fc_galois_keys, pack_fc_input, FcMethod};
+use crate::fixed::ScalePlan;
+use crate::gc::relu::{GcRelu, GcReluReport};
+use crate::nn::layers::LayerKind;
+use crate::nn::{Network, Tensor};
+use crate::phe::keys::KeySwitchKey;
+use crate::phe::serial::ciphertext_bytes;
+use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, GaloisKeys, OpCounts};
+use crate::protocol::cheetah::server::pool_shares;
+use crate::protocol::cheetah::{LinearSpec, ProtocolSpec};
+use crate::util::rng::ChaCha20Rng;
+use std::time::{Duration, Instant};
+
+/// Per-query report for the GAZELLE baseline.
+#[derive(Clone, Debug, Default)]
+pub struct GazelleReport {
+    pub argmax: usize,
+    pub logits: Vec<f64>,
+    pub server_linear: Duration,
+    pub client_time: Duration,
+    pub gc: GcReluReport,
+    pub online_bytes: u64,
+    pub offline_bytes: u64,
+    pub ops: OpCounts,
+    /// Per-step (linear-layer) online compute, for Fig. 8 breakdowns.
+    pub per_step: Vec<Duration>,
+}
+
+impl GazelleReport {
+    pub fn online_compute(&self) -> Duration {
+        self.server_linear + self.client_time + self.gc.eval_time
+    }
+}
+
+/// In-process GAZELLE deployment (both parties).
+pub struct GazelleRunner<'a> {
+    pub ctx: &'a Context,
+    ev: Evaluator<'a>,
+    client_enc: Encryptor<'a>,
+    plan: ScalePlan,
+    pub spec: ProtocolSpec,
+    net: Network,
+    relu: GcRelu,
+    conv_keys: Vec<Option<GaloisKeys>>,
+    fc_keys: Vec<Option<GaloisKeys>>,
+    rng: ChaCha20Rng,
+}
+
+impl<'a> GazelleRunner<'a> {
+    pub fn new(ctx: &'a Context, net: Network, plan: ScalePlan, seed: u64) -> Self {
+        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let client_enc = Encryptor::new(ctx, &mut rng);
+        let spec = ProtocolSpec::compile(&net);
+        let relu = GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
+        // Offline: rotation keys per step geometry (generated under the
+        // client's key — GAZELLE's server evaluates on client ciphertexts).
+        let mut conv_keys = Vec::new();
+        let mut fc_keys = Vec::new();
+        for step in &spec.steps {
+            match &step.linear {
+                LinearSpec::Conv(p) => {
+                    conv_keys.push(Some(conv_galois_keys(
+                        ctx,
+                        &client_enc.sk,
+                        p.kernel,
+                        p.in_shape.2,
+                        &mut rng,
+                    )));
+                    fc_keys.push(None);
+                }
+                LinearSpec::Fc(p) => {
+                    fc_keys.push(Some(fc_galois_keys(ctx, &client_enc.sk, p.n_i, &mut rng)));
+                    conv_keys.push(None);
+                }
+            }
+        }
+        Self { ctx, ev: Evaluator::new(ctx), client_enc, plan, spec, net, relu, conv_keys, fc_keys, rng }
+    }
+
+    /// Offline communication: rotation keys + garbled tables for every
+    /// intermediate activation.
+    pub fn offline_bytes(&self) -> u64 {
+        let key_bytes: usize = self
+            .conv_keys
+            .iter()
+            .chain(self.fc_keys.iter())
+            .flatten()
+            .map(|gk| gk.keys.len() * KeySwitchKey::serialized_size(&self.ctx.params))
+            .sum();
+        let relu_count: usize = self
+            .spec
+            .steps
+            .iter()
+            .take(self.spec.steps.len() - 1)
+            .map(|s| s.linear.num_outputs())
+            .sum();
+        (key_bytes + relu_count * self.relu.offline_bytes_per_relu()) as u64
+    }
+
+    /// Run one private inference. Mirrors `CheetahRunner::infer`.
+    pub fn infer(&mut self, input: &Tensor) -> GazelleReport {
+        let p = self.ctx.params.p;
+        let plan = self.plan;
+        let mut report = GazelleReport::default();
+        self.ev.reset_counts();
+
+        // Initial shares: client holds the quantized input, server zero.
+        let mut client_share: Vec<u64> = input
+            .data
+            .iter()
+            .map(|&v| {
+                let q = plan.quant_x(v);
+                if q < 0 {
+                    p - (-q) as u64
+                } else {
+                    q as u64
+                }
+            })
+            .collect();
+        let mut server_share: Vec<u64> = vec![0; client_share.len()];
+
+        let fresh = ciphertext_bytes(&self.ctx.params, true) as u64;
+        let eval_sz = ciphertext_bytes(&self.ctx.params, false) as u64;
+        let n_steps = self.spec.steps.len();
+
+        for si in 0..n_steps {
+            let step = self.spec.steps[si].clone();
+            let last = si == n_steps - 1;
+            let step_t0 = Instant::now();
+            // ---- client: pack + encrypt its share ----
+            let t0 = Instant::now();
+            let (in_cts, fc_pack_len): (Vec<Ciphertext>, usize) = match &step.linear {
+                LinearSpec::Conv(cp) => {
+                    let (c_i, h, w) = cp.in_shape;
+                    let hw = h * w;
+                    let cts = (0..c_i)
+                        .map(|i| {
+                            let slots: Vec<i64> =
+                                client_share[i * hw..(i + 1) * hw].iter().map(|&v| v as i64).collect();
+                            let pt = self.ctx.encoder.encode_unsigned(
+                                &slots.iter().map(|&v| v as u64).collect::<Vec<_>>(),
+                            );
+                            self.client_enc.encrypt(&pt, &mut self.rng)
+                        })
+                        .collect();
+                    (cts, 0)
+                }
+                LinearSpec::Fc(_) => {
+                    let x: Vec<i64> = client_share.iter().map(|&v| v as i64).collect();
+                    // pack_fc_input expects signed values; shares are
+                    // residues — pack residues directly (mod-p linearity).
+                    let packed_res: Vec<u64> = pack_fc_input(self.ctx, &x, FcMethod::Hybrid)
+                        .iter()
+                        .map(|&v| v as u64 % p)
+                        .collect();
+                    let pt = self.ctx.encoder.encode_unsigned(&packed_res);
+                    (vec![self.client_enc.encrypt(&pt, &mut self.rng)], packed_res.len())
+                }
+            };
+            report.client_time += t0.elapsed();
+            report.online_bytes += in_cts.len() as u64 * fresh;
+
+            // ---- server: add own share, rotation-based linear, mask ----
+            let t1 = Instant::now();
+            let mut in_ntt = in_cts;
+            for ct in in_ntt.iter_mut() {
+                self.ev.to_ntt(ct);
+            }
+            // AddPlain the server's share, packed identically.
+            match &step.linear {
+                LinearSpec::Conv(cp) => {
+                    let (_, h, w) = cp.in_shape;
+                    let hw = h * w;
+                    for (i, ct) in in_ntt.iter_mut().enumerate() {
+                        let op = self
+                            .ctx
+                            .add_operand_unsigned(&server_share[i * hw..(i + 1) * hw]);
+                        self.ev.add_plain(ct, &op);
+                    }
+                }
+                LinearSpec::Fc(_) => {
+                    let x: Vec<i64> = server_share.iter().map(|&v| v as i64).collect();
+                    let packed: Vec<u64> = pack_fc_input(self.ctx, &x, FcMethod::Hybrid)
+                        .iter()
+                        .map(|&v| v as u64 % p)
+                        .collect();
+                    let _ = fc_pack_len;
+                    let op = self.ctx.add_operand_unsigned(&packed);
+                    self.ev.add_plain(&mut in_ntt[0], &op);
+                }
+            }
+
+            // Linear kernel.
+            let layer = self.net.layers[step.layer_idx].clone();
+            let (out_cts, out_map, out_shape): (Vec<Ciphertext>, Vec<(usize, usize)>, (usize, usize, usize)) =
+                match &step.linear {
+                    LinearSpec::Conv(cp) => {
+                        let (c_i, h, w) = cp.in_shape;
+                        let c_o = cp.out_shape.0;
+                        // GAZELLE picks whichever rotation variant is cheaper.
+                        let variant = if c_i <= c_o {
+                            ConvVariant::InputRotation
+                        } else {
+                            ConvVariant::OutputRotation
+                        };
+                        // Strided conv: run at stride 1, downsample shares.
+                        let mut l1 = layer.clone();
+                        if let LayerKind::Conv2d { ref mut stride, ref mut pad, .. } = l1.kind {
+                            *stride = 1;
+                            *pad = cp.kernel / 2;
+                        }
+                        let outs = conv(
+                            &self.ev,
+                            variant,
+                            &in_ntt,
+                            &l1,
+                            (c_i, h, w),
+                            &plan,
+                            step.weight_div,
+                            self.conv_keys[si].as_ref().unwrap(),
+                        );
+                        let hw = h * w;
+                        let map = (0..c_o * hw).map(|o| (o / hw, o % hw)).collect();
+                        (outs, map, (c_o, h, w))
+                    }
+                    LinearSpec::Fc(fp) => {
+                        let (outs, map) = fc(
+                            &self.ev,
+                            FcMethod::Hybrid,
+                            &in_ntt[0],
+                            &layer,
+                            fp.n_i,
+                            &plan,
+                            step.weight_div,
+                            self.fc_keys[si].as_ref().unwrap(),
+                        );
+                        (outs, map, (1, 1, fp.n_o))
+                    }
+                };
+
+            // Mask with fresh server shares r (skip on the last layer: the
+            // prediction is the protocol output).
+            let mut masked = out_cts;
+            let n_lin = out_map.len();
+            let mut r_share: Vec<u64> = Vec::new();
+            if !last {
+                r_share = (0..n_lin).map(|_| self.rng.gen_range(p)).collect();
+                // Scatter (p - r) into the mapped slots of each output ct.
+                let row_slots = self.ctx.params.n;
+                let mut scatter: Vec<Vec<u64>> =
+                    vec![vec![0u64; row_slots]; masked.len()];
+                for (o, &(ci, slot)) in out_map.iter().enumerate() {
+                    scatter[ci][slot] = (p - r_share[o]) % p;
+                }
+                for (ci, ct) in masked.iter_mut().enumerate() {
+                    let op = self.ctx.add_operand_unsigned(&scatter[ci]);
+                    self.ev.add_plain(ct, &op);
+                }
+            }
+            report.server_linear += t1.elapsed();
+            report.online_bytes += masked.len() as u64 * eval_sz;
+
+            // ---- client: decrypt its linear share ----
+            let t2 = Instant::now();
+            let mut client_lin: Vec<u64> = Vec::with_capacity(n_lin);
+            let decs: Vec<Vec<u64>> = masked
+                .iter()
+                .map(|ct| self.ctx.encoder.decode_unsigned(&self.client_enc.decrypt(ct)))
+                .collect();
+            for &(ci, slot) in &out_map {
+                client_lin.push(decs[ci][slot]);
+            }
+            report.client_time += t2.elapsed();
+
+            if last {
+                // Logits (scale x+k): client reconstructs directly.
+                let scale = plan.x.mul(plan.k);
+                let half = (p - 1) / 2;
+                report.logits = client_lin
+                    .iter()
+                    .map(|&v| {
+                        let c = if v > half { v as i64 - p as i64 } else { v as i64 };
+                        scale.dequantize(c)
+                    })
+                    .collect();
+                report.argmax = report
+                    .logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                report.per_step.push(step_t0.elapsed());
+                break;
+            }
+
+            // ---- GC ReLU over shares (server garbles, client evaluates) ----
+            let server_lin: Vec<u64> = r_share;
+            let (mut c_new, mut s_new, gc_rep) =
+                self.relu.run_batch(&server_lin, &client_lin, &mut self.rng);
+            report.online_bytes += gc_rep.online_bytes;
+            report.gc.merge(&gc_rep);
+
+            // Strided conv downsample (shares, both parties identically).
+            if let LinearSpec::Conv(cp) = &step.linear {
+                if cp.stride > 1 {
+                    let (c_o, h, w) = out_shape;
+                    let (oh, ow) = (cp.out_shape.1, cp.out_shape.2);
+                    let pick = |v: &[u64]| -> Vec<u64> {
+                        let mut out = Vec::with_capacity(c_o * oh * ow);
+                        for ch in 0..c_o {
+                            for y in 0..oh {
+                                for x in 0..ow {
+                                    out.push(v[(ch * h + y * cp.stride) * w + x * cp.stride]);
+                                }
+                            }
+                        }
+                        out
+                    };
+                    c_new = pick(&c_new);
+                    s_new = pick(&s_new);
+                }
+            }
+
+            // Pooling on shares.
+            if let Some(size) = step.pool_after {
+                c_new = pool_shares(&c_new, step.out_shape, size, p);
+                s_new = pool_shares(&s_new, step.out_shape, size, p);
+            }
+            client_share = c_new;
+            server_share = s_new;
+            report.per_step.push(step_t0.elapsed());
+        }
+
+        report.ops = self.ev.counts();
+        report.offline_bytes = self.offline_bytes();
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Layer;
+    use crate::phe::Params;
+    use crate::util::rng::SplitMix64;
+
+    /// Stride-1 conv + ReLU + FC: GAZELLE e2e must agree with the
+    /// flat-semantics plaintext composition.
+    #[test]
+    fn gazelle_e2e_small_net() {
+        let ctx = Context::new(Params::default_params());
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "gz-test".into(),
+            input_shape: (1, 6, 6),
+            layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+        };
+        net.init_weights(71);
+        let netc = net.clone();
+        let mut runner = GazelleRunner::new(&ctx, net, plan, 72);
+
+        let mut srng = SplitMix64::new(73);
+        let input = Tensor::from_vec(
+            (0..36).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+            1,
+            6,
+            6,
+        );
+        let report = runner.infer(&input);
+        assert!(report.ops.perm > 0, "GAZELLE must pay permutations");
+        assert!(report.gc.and_gates_total > 0, "GAZELLE must garble");
+
+        // Reference with identical flat-border semantics.
+        let xq: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
+        let lin = super::super::conv::conv_flat_reference(&xq, &netc.layers[0], (1, 6, 6), &plan, 1.0);
+        let act: Vec<i64> = lin.iter().map(|&v| (v.max(0)) >> plan.k.frac_bits).collect();
+        let logits = super::super::fc::fc_reference(&act, &netc.layers[2], &plan, 1.0);
+        let scale = plan.x.mul(plan.k);
+        for (i, (&got, &want)) in report.logits.iter().zip(&logits).enumerate() {
+            let want_f = scale.dequantize(want);
+            assert!(
+                (got - want_f).abs() < 1e-9,
+                "logit {i}: got {got} want {want_f}"
+            );
+        }
+    }
+}

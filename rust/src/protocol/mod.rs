@@ -1,0 +1,11 @@
+//! Two-party private-inference protocols.
+//!
+//! * [`cheetah`] — the paper's contribution: permutation-free obscure linear
+//!   computation + PHE-based secret-share nonlinear recovery.
+//! * [`gazelle`] — the state-of-the-art baseline the paper compares to:
+//!   rotation-based packed linear algebra + garbled-circuit ReLU.
+//! * [`transport`] — message framing, byte metering and a link cost model.
+
+pub mod cheetah;
+pub mod gazelle;
+pub mod transport;

@@ -1,0 +1,170 @@
+//! Transport between client and server: message framing, byte metering, and
+//! a configurable link cost model (the paper's testbed is two workstations
+//! on Gigabit Ethernet; we measure compute for real and derive wire time
+//! from exact serialized bytes × the link model — see DESIGN.md).
+//!
+//! Two concrete transports:
+//! * [`MeteredChannel`] — in-process, zero-copy, counts every byte and
+//!   models latency/bandwidth (used by all benchmarks),
+//! * TCP framing helpers used by the real client/server binaries
+//!   (`examples/serve_mlaas.rs`).
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Direction of a transfer, for accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    ClientToServer,
+    ServerToClient,
+}
+
+/// A link cost model: RTT and symmetric bandwidth.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    pub rtt: Duration,
+    pub bandwidth_bps: f64,
+}
+
+impl LinkModel {
+    /// The paper's testbed: Gigabit Ethernet, sub-millisecond RTT.
+    pub fn gigabit_lan() -> Self {
+        Self { rtt: Duration::from_micros(200), bandwidth_bps: 1e9 }
+    }
+
+    /// A WAN profile (for the ablation on link sensitivity).
+    pub fn wan() -> Self {
+        Self { rtt: Duration::from_millis(20), bandwidth_bps: 100e6 }
+    }
+
+    /// Wire time for transferring `bytes` in one direction, including half
+    /// an RTT of propagation.
+    pub fn transfer_time(&self, bytes: u64) -> Duration {
+        let serialize = bytes as f64 * 8.0 / self.bandwidth_bps;
+        self.rtt / 2 + Duration::from_secs_f64(serialize)
+    }
+}
+
+/// Accumulated traffic statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrafficStats {
+    pub c2s_bytes: u64,
+    pub s2c_bytes: u64,
+    pub c2s_msgs: u64,
+    pub s2c_msgs: u64,
+    /// Number of communication *rounds* (direction flips).
+    pub rounds: u64,
+}
+
+impl TrafficStats {
+    pub fn total_bytes(&self) -> u64 {
+        self.c2s_bytes + self.s2c_bytes
+    }
+}
+
+/// In-process metered channel: registers transfers (by size) and computes
+/// modeled wire time. The benchmarks pass serialized sizes here rather than
+/// moving real buffers; the TCP mode moves real bytes.
+pub struct MeteredChannel {
+    pub link: LinkModel,
+    stats: TrafficStats,
+    last_dir: Option<Dir>,
+    /// Modeled accumulated wire time (pipelined per message).
+    pub wire_time: Duration,
+}
+
+impl MeteredChannel {
+    pub fn new(link: LinkModel) -> Self {
+        Self { link, stats: TrafficStats::default(), last_dir: None, wire_time: Duration::ZERO }
+    }
+
+    /// Record a transfer of `bytes` in direction `dir`.
+    pub fn send(&mut self, dir: Dir, bytes: u64) {
+        match dir {
+            Dir::ClientToServer => {
+                self.stats.c2s_bytes += bytes;
+                self.stats.c2s_msgs += 1;
+            }
+            Dir::ServerToClient => {
+                self.stats.s2c_bytes += bytes;
+                self.stats.s2c_msgs += 1;
+            }
+        }
+        if self.last_dir != Some(dir) {
+            self.stats.rounds += 1;
+            self.last_dir = Some(dir);
+        }
+        self.wire_time += self.link.transfer_time(bytes);
+    }
+
+    pub fn stats(&self) -> TrafficStats {
+        self.stats
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = TrafficStats::default();
+        self.last_dir = None;
+        self.wire_time = Duration::ZERO;
+    }
+}
+
+/// Length-prefixed message framing over any `Read`/`Write` (TCP mode).
+pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&[tag])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one framed message: `(tag, payload)`.
+pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<(u8, Vec<u8>)> {
+    let mut hdr = [0u8; 5];
+    r.read_exact(&mut hdr)?;
+    let tag = hdr[0];
+    let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn link_model_times() {
+        let l = LinkModel::gigabit_lan();
+        // 1 MB at 1 Gbps ≈ 8 ms + 0.1 ms half-RTT.
+        let t = l.transfer_time(1_000_000);
+        assert!(t > Duration::from_millis(7) && t < Duration::from_millis(10), "{t:?}");
+    }
+
+    #[test]
+    fn metering_accumulates_and_counts_rounds() {
+        let mut ch = MeteredChannel::new(LinkModel::gigabit_lan());
+        ch.send(Dir::ClientToServer, 1000);
+        ch.send(Dir::ClientToServer, 500);
+        ch.send(Dir::ServerToClient, 2000);
+        ch.send(Dir::ClientToServer, 100);
+        let s = ch.stats();
+        assert_eq!(s.c2s_bytes, 1600);
+        assert_eq!(s.s2c_bytes, 2000);
+        assert_eq!(s.total_bytes(), 3600);
+        assert_eq!(s.rounds, 3);
+        assert!(ch.wire_time > Duration::ZERO);
+        ch.reset();
+        assert_eq!(ch.stats().total_bytes(), 0);
+    }
+
+    #[test]
+    fn framing_roundtrip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 7, b"hello world").unwrap();
+        write_frame(&mut buf, 9, &[]).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let (t1, p1) = read_frame(&mut cursor).unwrap();
+        assert_eq!((t1, p1.as_slice()), (7, b"hello world".as_slice()));
+        let (t2, p2) = read_frame(&mut cursor).unwrap();
+        assert_eq!((t2, p2.len()), (9, 0));
+    }
+}

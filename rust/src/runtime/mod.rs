@@ -1,0 +1,275 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from Rust — Python is never
+//! on the request path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+//!
+//! Used by the accuracy benchmark (Fig. 7 — the noisy quantized forward
+//! pass of the trained networks) and by the coordinator's plaintext-scoring
+//! path; the kernel artifacts double as a cross-check that the L1 Pallas
+//! kernels and the Rust client hot loops compute the same function.
+
+use anyhow::{Context as _, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModule {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The artifact registry + PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    modules: HashMap<String, LoadedModule>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf(), modules: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile `<name>.hlo.txt` from the artifacts directory.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.modules.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        self.modules.insert(name.to_string(), LoadedModule { name: name.to_string(), exe });
+        Ok(())
+    }
+
+    /// Execute a loaded module on literal inputs; returns the elements of
+    /// the result tuple (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let module = self
+            .modules
+            .get(name)
+            .with_context(|| format!("module {name} not loaded"))?;
+        let result = module.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        let (elems, _) = result.to_tuple()?.into_iter().fold(
+            (Vec::new(), 0usize),
+            |(mut acc, i), lit| {
+                acc.push(lit);
+                (acc, i + 1)
+            },
+        );
+        Ok(elems)
+    }
+
+    /// Run the `<arch>_noisy` artifact: images (flattened NCHW f32), a PRNG
+    /// key and the noise bound ε → per-image logits.
+    pub fn noisy_forward(
+        &mut self,
+        arch: &str,
+        images: &[f32],
+        batch: usize,
+        size: usize,
+        key: [u32; 2],
+        eps: f32,
+    ) -> Result<Vec<Vec<f32>>> {
+        let name = format!("{arch}_noisy");
+        self.load(&name)?;
+        let x = xla::Literal::vec1(images)
+            .reshape(&[batch as i64, 1, size as i64, size as i64])?;
+        let k = xla::Literal::vec1(&key[..]);
+        let e = xla::Literal::from(eps);
+        let out = self.execute(&name, &[x, k, e])?;
+        let flat = out[0].to_vec::<f32>()?;
+        Ok(flat.chunks(10).map(|c| c.to_vec()).collect())
+    }
+}
+
+/// Load the trained-weights artifact (`<arch>_weights.bin` + manifest
+/// shapes) into a [`crate::nn::Network`].
+pub fn load_trained_network(
+    artifacts_dir: impl AsRef<Path>,
+    arch: &str,
+) -> Result<crate::nn::Network> {
+    use crate::nn::{Layer, Network};
+    let dir = artifacts_dir.as_ref();
+    let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+        .context("read manifest.txt (run `make artifacts`)")?;
+    let shapes_line = manifest
+        .lines()
+        .find(|l| l.starts_with(&format!("{arch}_weights.bin")))
+        .context("weights entry missing from manifest")?;
+    let shapes_str = shapes_line.split("shapes=").nth(1).context("malformed manifest")?;
+    let shapes: Vec<Vec<usize>> = shapes_str
+        .trim()
+        .split(';')
+        .map(|s| s.split('x').map(|d| d.parse().unwrap()).collect())
+        .collect();
+
+    let bytes = std::fs::read(dir.join(format!("{arch}_weights.bin")))?;
+    let floats: Vec<f64> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+        .collect();
+
+    // Architecture mirrors python/compile/model.py::ARCHS.
+    let (input_shape, mut layers): ((usize, usize, usize), Vec<Layer>) = match arch {
+        "netA" => (
+            (1, 28, 28),
+            vec![
+                Layer::conv(5, 5, 2, 2),
+                Layer::relu(),
+                Layer::fc(100),
+                Layer::relu(),
+                Layer::fc(10),
+            ],
+        ),
+        "netB" => (
+            (1, 28, 28),
+            vec![
+                Layer::conv(16, 5, 1, 2),
+                Layer::relu(),
+                Layer::mean_pool(2),
+                Layer::conv(16, 5, 1, 2),
+                Layer::relu(),
+                Layer::mean_pool(2),
+                Layer::fc(100),
+                Layer::relu(),
+                Layer::fc(10),
+            ],
+        ),
+        _ => anyhow::bail!("unknown arch {arch}"),
+    };
+
+    let mut offset = 0usize;
+    let mut shape_idx = 0usize;
+    for layer in layers.iter_mut() {
+        if matches!(layer.kind, crate::nn::LayerKind::Relu | crate::nn::LayerKind::MeanPool { .. })
+        {
+            continue;
+        }
+        let count: usize = shapes[shape_idx].iter().product();
+        layer.weights = floats[offset..offset + count].to_vec();
+        offset += count;
+        shape_idx += 1;
+    }
+    anyhow::ensure!(offset == floats.len(), "weight size mismatch");
+    let mut net = Network { name: format!("{arch} (trained)"), input_shape, layers };
+    equalize_activations(&mut net, 1.2, 32);
+    Ok(net)
+}
+
+/// Activation equalization: rescale each hidden linear layer so calibration
+/// activations stay within `target` (the protocol's clamp-safe range), and
+/// push the inverse factor into the next linear layer — exactly preserving
+/// the float function by ReLU positive homogeneity (the final logits pick
+/// up one uniform positive factor, leaving the argmax unchanged). Standard
+/// deployment-time conditioning for fixed-point inference.
+pub fn equalize_activations(net: &mut crate::nn::Network, target: f64, calib: usize) {
+    use crate::nn::layers::{forward_layer, LayerKind};
+    let mut gen = crate::nn::SyntheticDigits::new(net.input_shape.1.max(12), 2024);
+    let samples: Vec<crate::nn::Tensor> = if net.input_shape.0 == 1 {
+        gen.batch(calib).into_iter().map(|s| s.image).collect()
+    } else {
+        return; // calibration corpus is single-channel
+    };
+    let linear_idxs: Vec<usize> = net
+        .layers
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| matches!(l.kind, LayerKind::Conv2d { .. } | LayerKind::Fc { .. }))
+        .map(|(i, _)| i)
+        .collect();
+    // Iterate hidden linear layers (all but the last).
+    for w in linear_idxs.windows(2) {
+        let (li, next) = (w[0], w[1]);
+        // Max |activation| right after this layer's ReLU across calibration.
+        let mut max_abs = 0f64;
+        for x in &samples {
+            let mut t = x.clone();
+            for l in &net.layers[..=li] {
+                t = forward_layer(l, &t);
+            }
+            max_abs = max_abs.max(t.max_abs());
+        }
+        if max_abs == 0.0 {
+            continue;
+        }
+        // Normalize up as well as down: small activations waste fixed-point
+        // resolution, large ones clamp.
+        let s = target / max_abs;
+        for v in net.layers[li].weights.iter_mut() {
+            *v *= s;
+        }
+        for v in net.layers[next].weights.iter_mut() {
+            *v /= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_ready() -> bool {
+        Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn pjrt_client_starts() {
+        let rt = Runtime::new("artifacts").expect("PJRT client");
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    }
+
+    /// Kernel artifact cross-check: the lowered Pallas obscure_dot must
+    /// match the Rust client's block_sums on the same input.
+    #[test]
+    fn pallas_kernel_matches_rust_hot_loop() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut rt = Runtime::new("artifacts").unwrap();
+        rt.load("obscure_dot").unwrap();
+        let mut rng = crate::util::rng::SplitMix64::new(77);
+        let prods: Vec<i32> =
+            (0..1024 * 32).map(|_| rng.gen_i64_range(-(1 << 20), 1 << 20) as i32).collect();
+        let input = xla::Literal::vec1(&prods).reshape(&[1024, 32]).unwrap();
+        let out = rt.execute("obscure_dot", &[input]).unwrap();
+        let got = out[0].to_vec::<i32>().unwrap();
+        let stream: Vec<i64> = prods.iter().map(|&v| v as i64).collect();
+        let want = crate::protocol::cheetah::packing::block_sums(&stream, 32, 1024);
+        for i in 0..1024 {
+            assert_eq!(got[i] as i64, want[i], "block {i}");
+        }
+    }
+
+    #[test]
+    fn trained_network_loads_and_classifies() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let net = load_trained_network("artifacts", "netA").unwrap();
+        let mut gen = crate::nn::SyntheticDigits::new(28, 123);
+        let mut correct = 0;
+        let total = 40;
+        for s in gen.batch(total) {
+            if net.forward(&s.image).argmax() == s.label {
+                correct += 1;
+            }
+        }
+        assert!(correct * 10 >= total * 7, "trained netA accuracy {correct}/{total}");
+    }
+}

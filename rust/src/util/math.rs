@@ -1,0 +1,235 @@
+//! Modular number theory for the PHE substrate: 64-bit modular arithmetic,
+//! Miller–Rabin primality, NTT-prime search, and primitive roots of unity.
+//!
+//! All moduli used by the library are odd primes below 2^62 so that lazy
+//! (`< 2q`) representations still fit `u64` and products fit `u128`.
+
+/// `(a + b) mod m`, assuming `a, b < m < 2^63`.
+#[inline(always)]
+pub fn add_mod(a: u64, b: u64, m: u64) -> u64 {
+    let s = a + b;
+    if s >= m {
+        s - m
+    } else {
+        s
+    }
+}
+
+/// `(a - b) mod m`, assuming `a, b < m`.
+#[inline(always)]
+pub fn sub_mod(a: u64, b: u64, m: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + m - b
+    }
+}
+
+/// `(a * b) mod m` via 128-bit widening.
+#[inline(always)]
+pub fn mul_mod(a: u64, b: u64, m: u64) -> u64 {
+    ((a as u128 * b as u128) % m as u128) as u64
+}
+
+/// `a^e mod m` (square-and-multiply).
+pub fn pow_mod(mut a: u64, mut e: u64, m: u64) -> u64 {
+    let mut r: u64 = 1 % m;
+    a %= m;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = mul_mod(r, a, m);
+        }
+        a = mul_mod(a, a, m);
+        e >>= 1;
+    }
+    r
+}
+
+/// Modular inverse of `a` mod prime `m` via Fermat's little theorem.
+/// Panics if `a == 0 (mod m)`.
+pub fn inv_mod(a: u64, m: u64) -> u64 {
+    assert!(a % m != 0, "inverse of zero");
+    pow_mod(a, m - 2, m)
+}
+
+/// Deterministic Miller–Rabin for u64 (the standard 12-witness set is
+/// sufficient for all 64-bit integers).
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d & 1 == 0 {
+        d >>= 1;
+        s += 1;
+    }
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let mut x = pow_mod(a, d, n);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = mul_mod(x, x, n);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Find the largest prime `<= hi` congruent to `1 (mod modulus)`.
+/// Used to generate NTT-friendly primes: for ring degree `n` we need
+/// `q ≡ 1 (mod 2n)` so a primitive `2n`-th root of unity exists.
+pub fn find_ntt_prime_below(hi: u64, modulus: u64) -> u64 {
+    // Largest candidate <= hi that is ≡ 1 (mod modulus).
+    let mut c = hi - ((hi - 1) % modulus);
+    while c > modulus {
+        if is_prime(c) {
+            return c;
+        }
+        c -= modulus;
+    }
+    panic!("no NTT prime found below {hi} for modulus {modulus}");
+}
+
+/// Find `count` distinct NTT primes just below `hi`, each ≡ 1 (mod modulus).
+pub fn find_ntt_primes_below(hi: u64, modulus: u64, count: usize) -> Vec<u64> {
+    let mut out = Vec::with_capacity(count);
+    let mut top = hi;
+    for _ in 0..count {
+        let p = find_ntt_prime_below(top, modulus);
+        out.push(p);
+        top = p - 1;
+    }
+    out
+}
+
+/// Find a generator (primitive root) of the multiplicative group mod prime
+/// `p`, by trial over small candidates. `p - 1`'s factorization is obtained
+/// by trial division (fine for our ~62-bit primes with smooth-ish cofactors;
+/// bounded by 10^6 trial + a possible large prime cofactor).
+pub fn primitive_root(p: u64) -> u64 {
+    let phi = p - 1;
+    let factors = distinct_prime_factors(phi);
+    'cand: for g in 2..p {
+        for &f in &factors {
+            if pow_mod(g, phi / f, p) == 1 {
+                continue 'cand;
+            }
+        }
+        return g;
+    }
+    unreachable!("no primitive root for prime {p}");
+}
+
+/// Distinct prime factors of `n` by trial division up to 10^6, plus
+/// Miller–Rabin on the cofactor (our moduli are chosen so the cofactor is
+/// prime or 1; panics otherwise).
+pub fn distinct_prime_factors(mut n: u64) -> Vec<u64> {
+    let mut fs = Vec::new();
+    let mut d = 2u64;
+    while d <= 1_000_000 && d * d <= n {
+        if n % d == 0 {
+            fs.push(d);
+            while n % d == 0 {
+                n /= d;
+            }
+        }
+        d += 1;
+    }
+    if n > 1 {
+        assert!(is_prime(n), "cofactor {n} not prime; unsupported modulus");
+        fs.push(n);
+    }
+    fs
+}
+
+/// A primitive `order`-th root of unity mod prime `p`; requires
+/// `order | p - 1`.
+pub fn primitive_nth_root(order: u64, p: u64) -> u64 {
+    assert_eq!((p - 1) % order, 0, "order must divide p-1");
+    let g = primitive_root(p);
+    let w = pow_mod(g, (p - 1) / order, p);
+    debug_assert_eq!(pow_mod(w, order, p), 1);
+    debug_assert_ne!(pow_mod(w, order / 2, p), 1);
+    w
+}
+
+/// Reverse the low `bits` bits of `x`.
+#[inline]
+pub fn reverse_bits(x: u64, bits: u32) -> u64 {
+    if bits == 0 {
+        0
+    } else {
+        x.reverse_bits() >> (64 - bits)
+    }
+}
+
+/// Integer `floor(log2(n))`; panics on 0.
+#[inline]
+pub fn ilog2(n: u64) -> u32 {
+    assert!(n > 0);
+    63 - n.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_primes() {
+        assert!(is_prime(2));
+        assert!(is_prime(65537));
+        assert!(!is_prime(1));
+        assert!(!is_prime(561)); // Carmichael
+        assert!(is_prime((1u64 << 61) - 1)); // Mersenne prime
+    }
+
+    #[test]
+    fn ntt_prime_search() {
+        let n = 4096u64;
+        let q = find_ntt_prime_below(1 << 45, 2 * n);
+        assert!(is_prime(q));
+        assert_eq!(q % (2 * n), 1);
+        let ps = find_ntt_primes_below(1 << 45, 2 * n, 3);
+        assert_eq!(ps.len(), 3);
+        assert!(ps[0] > ps[1] && ps[1] > ps[2]);
+    }
+
+    #[test]
+    fn roots_of_unity() {
+        let n = 1024u64;
+        let q = find_ntt_prime_below(1 << 30, 2 * n);
+        let w = primitive_nth_root(2 * n, q);
+        assert_eq!(pow_mod(w, 2 * n, q), 1);
+        assert_eq!(pow_mod(w, n, q), q - 1); // w^n = -1 (negacyclic)
+    }
+
+    #[test]
+    fn modular_ops() {
+        let m = 1_000_000_007u64;
+        assert_eq!(add_mod(m - 1, 5, m), 4);
+        assert_eq!(sub_mod(3, 8, m), m - 5);
+        assert_eq!(mul_mod(m - 1, m - 1, m), 1);
+        for a in [1u64, 2, 12345, m - 2] {
+            assert_eq!(mul_mod(a, inv_mod(a, m), m), 1);
+        }
+    }
+
+    #[test]
+    fn bit_reversal() {
+        assert_eq!(reverse_bits(0b001, 3), 0b100);
+        assert_eq!(reverse_bits(0b110, 3), 0b011);
+        for x in 0..64u64 {
+            assert_eq!(reverse_bits(reverse_bits(x, 6), 6), x);
+        }
+    }
+}

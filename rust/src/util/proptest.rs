@@ -1,0 +1,70 @@
+//! Minimal seeded property-testing helper.
+//!
+//! The offline crate registry has no `proptest`, so this module provides the
+//! same methodology in miniature: run a predicate over `cases` randomized
+//! inputs drawn from a seeded generator; on failure, report the case index
+//! and seed so the exact failing input can be replayed deterministically.
+
+use super::rng::SplitMix64;
+
+/// Run `f` on `cases` randomized inputs produced by `gen`. Panics with the
+/// replay seed on the first failure (returning `Err(msg)`).
+pub fn check<T, G, F>(seed: u64, cases: usize, mut gen: G, mut f: F)
+where
+    G: FnMut(&mut SplitMix64) -> T,
+    F: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        // Derive a per-case stream so failures replay independently.
+        let mut rng = SplitMix64::new(seed.wrapping_add(case as u64).wrapping_mul(0x9e37_79b9));
+        let input = gen(&mut rng);
+        if let Err(msg) = f(&input) {
+            panic!(
+                "property failed at case {case} (replay seed {seed}): {msg}\ninput: {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property receives the RNG too (for generating
+/// auxiliary randomness inside the property body).
+pub fn check_with_rng<F>(seed: u64, cases: usize, mut f: F)
+where
+    F: FnMut(&mut SplitMix64) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let mut rng = SplitMix64::new(seed.wrapping_add(case as u64).wrapping_mul(0x9e37_79b9));
+        if let Err(msg) = f(&mut rng) {
+            panic!("property failed at case {case} (replay seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 50, |rng| rng.gen_range(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        check(1, 50, |rng| rng.gen_range(100), |&x| {
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

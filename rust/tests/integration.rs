@@ -1,0 +1,163 @@
+//! Integration tests across the public API: PHE × protocol × GC ×
+//! coordinator × runtime working together (cargo test --test integration).
+
+use cheetah::fixed::ScalePlan;
+use cheetah::gc::GcRelu;
+use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
+use cheetah::phe::{Context, Params};
+use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gazelle::GazelleRunner;
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+
+/// The headline property: CHEETAH and GAZELLE produce consistent
+/// predictions on the same model, with CHEETAH using zero permutations
+/// and no garbled circuits, and GAZELLE paying both.
+#[test]
+fn cheetah_vs_gazelle_same_model() {
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let mut net = Network {
+        name: "shared".into(),
+        input_shape: (1, 8, 8),
+        layers: vec![Layer::conv(3, 3, 1, 1), Layer::relu(), Layer::fc(5)],
+    };
+    net.init_weights(404);
+    let float_net = net.clone();
+
+    let mut ch = CheetahRunner::new(&ctx, net.clone(), plan, 0.0, 405);
+    ch.run_offline();
+    let mut gz = GazelleRunner::new(&ctx, net, plan, 406);
+
+    let mut srng = SplitMix64::new(407);
+    let input = Tensor::from_vec(
+        (0..64).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+        1,
+        8,
+        8,
+    );
+    let ch_rep = ch.infer(&input);
+    let gz_rep = gz.infer(&input);
+    let float_out = float_net.forward(&input);
+
+    // CHEETAH: no Perms, logits close to float.
+    assert_eq!(ch_rep.total_ops().perm, 0);
+    for (i, (&got, &want)) in ch_rep.logits.iter().zip(&float_out.data).enumerate() {
+        assert!((got - want).abs() < 0.15, "cheetah logit {i}: {got} vs {want}");
+    }
+    // GAZELLE: pays Perms + GC, logits close to its flat-border reference
+    // (not identical to float at the borders — see gazelle::conv docs) and
+    // close to CHEETAH's in the interior-dominated logit sums.
+    assert!(gz_rep.ops.perm > 0);
+    assert!(gz_rep.gc.and_gates_total > 0);
+    for (i, (&a, &b)) in ch_rep.logits.iter().zip(&gz_rep.logits).enumerate() {
+        assert!((a - b).abs() < 0.6, "frameworks disagree at logit {i}: {a} vs {b}");
+    }
+}
+
+/// Trained-model path: artifacts → runtime loader → private inference.
+#[test]
+fn trained_model_private_inference() {
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let net = cheetah::runtime::load_trained_network("artifacts", "netA").unwrap();
+    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.05, 500);
+    runner.run_offline();
+    let mut gen = SyntheticDigits::new(28, 501);
+    let mut correct = 0;
+    let total = 8;
+    for s in gen.batch(total) {
+        let rep = runner.infer(&s.image);
+        correct += (rep.argmax == s.label) as usize;
+    }
+    assert!(correct >= total - 1, "trained private accuracy {correct}/{total}");
+}
+
+/// GC ReLU and the CHEETAH nonlinearity agree on the same share values.
+#[test]
+fn gc_and_obscure_relu_agree() {
+    let ctx = Context::new(Params::default_params());
+    let p = ctx.params.p;
+    let relu = GcRelu::new(p, 0);
+    let mut rng = ChaCha20Rng::from_u64_seed(600);
+    let mut srng = SplitMix64::new(601);
+    let xs: Vec<i64> = (0..8).map(|_| srng.gen_i64_range(-100_000, 100_000)).collect();
+    let se: Vec<u64> = (0..8).map(|_| srng.gen_range(p)).collect();
+    let sg: Vec<u64> = xs
+        .iter()
+        .zip(&se)
+        .map(|(&x, &s)| ((x.rem_euclid(p as i64) as u64) + p - s) % p)
+        .collect();
+    let (ev_sh, g_sh, _) = relu.run_batch(&sg, &se, &mut rng);
+    let rec = relu.reconstruct(&ev_sh, &g_sh);
+    for (i, &x) in xs.iter().enumerate() {
+        assert_eq!(rec[i] as i64, x.max(0), "GC relu mismatch at {i}");
+    }
+}
+
+/// The serving stack: batcher + TCP server + client, loaded concurrently.
+#[test]
+fn coordinator_under_concurrent_load() {
+    use cheetah::coordinator::{BatchPolicy, Client, Server};
+    let net = Network::build(NetworkArch::NetA, 700);
+    let reference = net.clone();
+    let server = Server::serve(net, "127.0.0.1:0", BatchPolicy::default()).unwrap();
+    let addr = server.addr;
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let reference = reference.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            let mut gen = SyntheticDigits::new(28, 800 + t);
+            for s in gen.batch(5) {
+                let (argmax, logits) = client.infer(&s.image.data).unwrap();
+                assert_eq!(argmax, reference.forward(&s.image).argmax());
+                assert_eq!(logits.len(), 10);
+            }
+            client.bye().unwrap();
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(server.metrics.summary().requests, 20);
+    server.shutdown();
+}
+
+/// Property: private inference is deterministic given seeds, and the
+/// metered traffic equals the sum of serialized ciphertext sizes.
+#[test]
+fn traffic_accounting_consistent() {
+    let ctx = Context::new(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let mut net = Network {
+        name: "acct".into(),
+        input_shape: (1, 6, 6),
+        layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
+    };
+    net.init_weights(900);
+    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 901);
+    runner.run_offline();
+    let input = Tensor::from_vec((0..36).map(|i| i as f64 / 36.0).collect(), 1, 6, 6);
+    let rep = runner.infer(&input);
+    let n = ctx.params.n;
+    use cheetah::phe::serial::ciphertext_bytes;
+    let expected: u64 = runner
+        .spec()
+        .steps
+        .iter()
+        .enumerate()
+        .map(|(si, s)| {
+            let mut b = (s.linear.num_in_cts(n) * ciphertext_bytes(&ctx.params, true)) as u64;
+            b += (s.linear.num_out_cts(n) * ciphertext_bytes(&ctx.params, false)) as u64;
+            if si != runner.spec().last_idx() {
+                b += (s.linear.num_recovery_cts(n) * ciphertext_bytes(&ctx.params, false)) as u64;
+            }
+            b
+        })
+        .sum();
+    assert_eq!(rep.online_bytes(), expected);
+}
