@@ -15,10 +15,61 @@
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::fixed::ScalePlan;
-use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
-use cheetah::runtime::Runtime;
+use cheetah::nn::{Network, NetworkArch};
 
 const EPS_GRID: [f64; 6] = [0.0, 0.05, 0.1, 0.25, 0.4, 0.5];
+
+/// Trained Net A / Net B rows via the PJRT artifacts (needs the external
+/// `xla` crate, so this path only exists under the `pjrt` feature).
+#[cfg(feature = "pjrt")]
+fn trained_rows(t: &mut Table, samples: usize) {
+    use cheetah::nn::SyntheticDigits;
+    use cheetah::runtime::Runtime;
+    if !std::path::Path::new("artifacts/manifest.txt").exists() {
+        eprintln!("artifacts/ missing — run `make artifacts` for the trained-net rows");
+        return;
+    }
+    let mut rt = Runtime::new("artifacts").expect("PJRT runtime");
+    for arch in ["netA", "netB"] {
+        let mut gen = SyntheticDigits::new(28, 777);
+        let batch = gen.batch(samples);
+        let mut row = vec![format!("{arch} (trained)"), "accuracy".into()];
+        for (ei, &eps) in EPS_GRID.iter().enumerate() {
+            let mut correct = 0usize;
+            for chunk in batch.chunks(32) {
+                if chunk.len() < 32 {
+                    break;
+                }
+                let mut pixels = Vec::with_capacity(32 * 784);
+                for s in chunk {
+                    pixels.extend(s.image.data.iter().map(|&v| v as f32));
+                }
+                let logits = rt
+                    .noisy_forward(arch, &pixels, 32, 28, [42, ei as u32], eps as f32)
+                    .expect("noisy_forward");
+                for (s, l) in chunk.iter().zip(&logits) {
+                    let am = l
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0;
+                    if am == s.label {
+                        correct += 1;
+                    }
+                }
+            }
+            let total = (samples / 32) * 32;
+            row.push(format!("{:.1}%", 100.0 * correct as f64 / total as f64));
+        }
+        t.row(&row);
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn trained_rows(_t: &mut Table, _samples: usize) {
+    eprintln!("built without the `pjrt` feature — trained Net A/B rows skipped");
+}
 
 fn main() {
     let args = BenchArgs::from_env();
@@ -36,46 +87,7 @@ fn main() {
         "0.5",
     ]);
 
-    // ---- Trained Net A / Net B via the PJRT artifacts ----
-    if std::path::Path::new("artifacts/manifest.txt").exists() {
-        let mut rt = Runtime::new("artifacts").expect("PJRT runtime");
-        for arch in ["netA", "netB"] {
-            let mut gen = SyntheticDigits::new(28, 777);
-            let batch = gen.batch(samples);
-            let mut row = vec![format!("{arch} (trained)"), "accuracy".into()];
-            for (ei, &eps) in EPS_GRID.iter().enumerate() {
-                let mut correct = 0usize;
-                for chunk in batch.chunks(32) {
-                    if chunk.len() < 32 {
-                        break;
-                    }
-                    let mut pixels = Vec::with_capacity(32 * 784);
-                    for s in chunk {
-                        pixels.extend(s.image.data.iter().map(|&v| v as f32));
-                    }
-                    let logits = rt
-                        .noisy_forward(arch, &pixels, 32, 28, [42, ei as u32], eps as f32)
-                        .expect("noisy_forward");
-                    for (s, l) in chunk.iter().zip(&logits) {
-                        let am = l
-                            .iter()
-                            .enumerate()
-                            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                            .unwrap()
-                            .0;
-                        if am == s.label {
-                            correct += 1;
-                        }
-                    }
-                }
-                let total = (samples / 32) * 32;
-                row.push(format!("{:.1}%", 100.0 * correct as f64 / total as f64));
-            }
-            t.row(&row);
-        }
-    } else {
-        eprintln!("artifacts/ missing — run `make artifacts` for the trained-net rows");
-    }
+    trained_rows(&mut t, samples);
 
     // ---- AlexNet / VGG-16 noise-propagation proxy ----
     for arch in [NetworkArch::AlexNet, NetworkArch::Vgg16] {

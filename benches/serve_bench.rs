@@ -1,0 +1,150 @@
+//! Secure-serving benchmark: CHEETAH-over-TCP throughput and latency as a
+//! function of concurrent session count and offline blinding-pool depth.
+//!
+//! Each cell starts a fresh `SecureServer` on loopback, connects N
+//! concurrent `CheetahNetClient`s (each session setup pays handshake +
+//! offline indicator transfer — or just the transfer when the pool is
+//! warm), runs Q private inferences per session, and reports:
+//!
+//! * session-setup latency (pool off vs pool on — the offline/online split),
+//! * per-query online latency (server-side p50 over completed queries),
+//! * end-to-end secure throughput in queries/second,
+//! * pool effectiveness (engines prebuilt vs built inline).
+//!
+//! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
+//!       [-- --depth 4] [-- --net netA]`
+//! Default is a small conv+fc model so the sweep finishes quickly; `--net
+//! netA` runs the paper's Network A (28×28) at realistic cost.
+
+use cheetah::bench_util::{BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
+use cheetah::phe::Params;
+use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
+use cheetah::util::rng::SplitMix64;
+use std::time::{Duration, Instant};
+
+fn bench_net(name: &str) -> Network {
+    match name {
+        "netA" => Network::build(NetworkArch::NetA, 17),
+        _ => {
+            let mut net = Network {
+                name: "small-serve".into(),
+                input_shape: (1, 8, 8),
+                layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+            };
+            net.init_weights(17);
+            net
+        }
+    }
+}
+
+fn input_for(net: &Network, seed: u64) -> Tensor {
+    let (c, h, w) = net.input_shape;
+    if c == 1 && h >= 12 {
+        SyntheticDigits::new(h, seed).render(3).image
+    } else {
+        let mut rng = SplitMix64::new(seed);
+        Tensor::from_vec((0..c * h * w).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(), c, h, w)
+    }
+}
+
+fn p50(durations: &mut [Duration]) -> Duration {
+    if durations.is_empty() {
+        return Duration::ZERO;
+    }
+    durations.sort();
+    durations[durations.len() / 2]
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let max_sessions = args.get_usize("--sessions", 4);
+    let queries = args.get_usize("--queries", 2);
+    let depth = args.get_usize("--depth", max_sessions);
+    let net_name = args.get("--net").unwrap_or("small").to_string();
+
+    let ctx = serve::leak_context(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let net = bench_net(&net_name);
+    println!(
+        "secure serving of {} — sessions up to {max_sessions}, {queries} queries/session",
+        net.name
+    );
+
+    let mut t = Table::new(&[
+        "sessions",
+        "pool",
+        "setup p50",
+        "query p50 (server)",
+        "wall",
+        "req/s",
+        "pool built/hits/inline",
+    ]);
+
+    let session_counts: Vec<usize> =
+        [1usize, 2, 4, 8].into_iter().filter(|&s| s <= max_sessions).collect();
+    for pool_on in [false, true] {
+        for &sessions in &session_counts {
+            let pool = if pool_on {
+                PoolConfig { depth, workers: 1 }
+            } else {
+                PoolConfig::disabled()
+            };
+            let cfg = SecureConfig { epsilon: 0.0, workers: sessions.min(4), pool, ..Default::default() };
+            let server = SecureServer::serve(ctx, net.clone(), plan, "127.0.0.1:0", cfg)
+                .expect("bind secure server");
+            if pool_on {
+                // Warm the bank so the measurement sees the offline/online
+                // split rather than a cold-start artifact.
+                server.wait_pool_ready(sessions.min(depth) as u64, Duration::from_secs(60));
+            }
+            let addr = server.addr;
+            let input = input_for(&net, 23);
+
+            let t0 = Instant::now();
+            let mut handles = Vec::new();
+            for s in 0..sessions {
+                let input = input.clone();
+                handles.push(std::thread::spawn(move || {
+                    let t_setup = Instant::now();
+                    let mut client =
+                        CheetahNetClient::connect(ctx, plan, &addr, 9000 + s as u64)
+                            .expect("secure session setup");
+                    let setup = t_setup.elapsed();
+                    for _ in 0..queries {
+                        client.infer(&input).expect("secure inference");
+                    }
+                    client.bye().ok();
+                    setup
+                }));
+            }
+            let mut setups: Vec<Duration> = handles
+                .into_iter()
+                .map(|h| h.join().expect("client thread"))
+                .collect();
+            let wall = t0.elapsed();
+
+            let total = sessions * queries;
+            let m = server.metrics.summary();
+            assert_eq!(m.requests as usize, total, "metered queries mismatch");
+            let ps = server.pool_stats();
+            t.row(&[
+                sessions.to_string(),
+                if pool_on { format!("on (d={depth})") } else { "off".into() },
+                cheetah::util::fmt_duration(p50(&mut setups)),
+                cheetah::util::fmt_duration(m.p50),
+                format!("{:.2}s", wall.as_secs_f64()),
+                format!("{:.2}", total as f64 / wall.as_secs_f64()),
+                format!("{}/{}/{}", ps.produced, ps.pool_hits, ps.inline_builds),
+            ]);
+            server.shutdown();
+        }
+    }
+
+    t.print(&format!(
+        "secure serving ({}) — session setup amortized by the blinding pool; \
+         online latency unchanged",
+        net.name
+    ));
+}

@@ -1,26 +1,37 @@
 //! End-to-end MLaaS serving driver (the repository's E2E validation run;
-//! see EXPERIMENTS.md): starts the coordinator's TCP server hosting the
-//! *trained* Network A, fires concurrent client load at it, and reports
-//! latency percentiles + throughput; then runs the same queries through
-//! the private CHEETAH path and reports the privacy overhead.
+//! see EXPERIMENTS.md): starts both serving paths over real TCP —
 //!
-//! Run: `make artifacts && cargo run --release --example serve_mlaas [-- N_REQS N_CLIENTS]`
+//! 1. the plaintext coordinator (trusted-cloud baseline) under concurrent
+//!    client load, with dynamic batching and latency percentiles, and
+//! 2. the **secure** path: the full CHEETAH protocol served by
+//!    `serve::SecureServer` with a warm blinding pool, driven by concurrent
+//!    `CheetahNetClient`s over real sockets —
+//!
+//! then reports the privacy overhead measured socket-to-socket.
+//!
+//! Uses trained weights when `artifacts/` exists (`make artifacts`), and a
+//! seeded untrained Network A otherwise (the protocol path is identical).
+//!
+//! Run: `cargo run --release --example serve_mlaas [-- N_REQS N_CLIENTS]`
 
 use cheetah::coordinator::{BatchPolicy, Client, Server};
 use cheetah::fixed::ScalePlan;
-use cheetah::nn::SyntheticDigits;
-use cheetah::phe::{Context, Params};
-use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
+use cheetah::phe::Params;
 use cheetah::runtime::load_trained_network;
+use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_reqs: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(200);
     let n_clients: usize = std::env::args().nth(2).and_then(|a| a.parse().ok()).unwrap_or(8);
 
-    let net = load_trained_network("artifacts", "netA")?;
+    let net = load_trained_network("artifacts", "netA").unwrap_or_else(|e| {
+        eprintln!("artifacts unavailable ({e}); using an untrained netA");
+        Network::build(NetworkArch::NetA, 11)
+    });
     println!("serving {} on TCP with dynamic batching...", net.name);
-    let server = Server::serve(net, "127.0.0.1:0", BatchPolicy::default())?;
+    let server = Server::serve(net.clone(), "127.0.0.1:0", BatchPolicy::default())?;
     let addr = server.addr;
 
     // ---- plaintext serving path: concurrent clients over TCP ----
@@ -65,29 +76,79 @@ fn main() -> anyhow::Result<()> {
     );
     server.shutdown();
 
-    // ---- private path: same model through CHEETAH ----
-    let ctx = Context::new(Params::default_params());
+    // ---- secure path: CHEETAH protocol over real sockets ----
     let plan = ScalePlan::default_plan();
-    let net = load_trained_network("artifacts", "netA")?;
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.1, 9);
-    runner.run_offline();
-    let n_priv = 10.min(n_reqs);
-    let mut gen = SyntheticDigits::new(28, 31337);
-    let t1 = Instant::now();
-    let mut priv_correct = 0;
-    for s in gen.batch(n_priv) {
-        let rep = runner.infer(&s.image);
-        priv_correct += (rep.argmax == s.label) as usize;
-    }
-    let priv_wall = t1.elapsed();
+    let ctx = serve::leak_context(Params::default_params());
+    let n_secure_clients = n_clients.clamp(1, 4);
+    let queries_per_client = (10usize.min(n_reqs) / n_secure_clients).max(1);
+    let cfg = SecureConfig {
+        epsilon: 0.1,
+        workers: n_secure_clients,
+        pool: PoolConfig { depth: n_secure_clients, workers: 1 },
+        ..SecureConfig::default()
+    };
     println!(
-        "\nprivate (CHEETAH) path: {n_priv} queries in {:.2}s → {:.1} req/s, accuracy {priv_correct}/{n_priv}",
-        priv_wall.as_secs_f64(),
-        n_priv as f64 / priv_wall.as_secs_f64()
+        "\nsecure path: {n_secure_clients} concurrent CHEETAH sessions × \
+         {queries_per_client} queries (pool depth {})...",
+        cfg.pool.depth
+    );
+    let secure = SecureServer::serve(ctx, net, plan, "127.0.0.1:0", cfg)?;
+    let secure_addr = secure.addr;
+
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_secure_clients {
+        handles.push(std::thread::spawn(move || {
+            let t_setup = Instant::now();
+            let mut client =
+                CheetahNetClient::connect(ctx, plan, &secure_addr, 31337 + c as u64).unwrap();
+            let setup = t_setup.elapsed();
+            let mut gen = SyntheticDigits::new(28, 5000 + c as u64);
+            let mut correct = 0usize;
+            let mut bytes = 0u64;
+            for s in gen.batch(queries_per_client) {
+                let rep = client.infer(&s.image).unwrap();
+                correct += (rep.argmax == s.label) as usize;
+                bytes += rep.c2s_bytes + rep.s2c_bytes;
+            }
+            client.bye().unwrap();
+            (correct, setup, bytes)
+        }));
+    }
+    let mut sec_correct = 0usize;
+    let mut sec_bytes = 0u64;
+    let mut setups = Vec::new();
+    for h in handles {
+        let (c, setup, bytes) = h.join().unwrap();
+        sec_correct += c;
+        sec_bytes += bytes;
+        setups.push(setup);
+    }
+    let sec_wall = t1.elapsed();
+    let sec_total = n_secure_clients * queries_per_client;
+    let sm = secure.metrics.summary();
+    let ps = secure.pool_stats();
+    println!(
+        "secure (CHEETAH over TCP): {sec_total} queries in {:.2}s → {:.2} req/s, \
+         accuracy {sec_correct}/{sec_total}",
+        sec_wall.as_secs_f64(),
+        sec_total as f64 / sec_wall.as_secs_f64()
+    );
+    println!(
+        "secure latency p50={} p99={} | session setup max={} | {} online wire | \
+         pool built={} hits={} inline={}",
+        cheetah::util::fmt_duration(sm.p50),
+        cheetah::util::fmt_duration(sm.p99),
+        cheetah::util::fmt_duration(setups.iter().copied().max().unwrap_or_default()),
+        cheetah::util::fmt_bytes(sec_bytes),
+        ps.produced,
+        ps.pool_hits,
+        ps.inline_builds
     );
     println!(
         "privacy overhead vs plaintext serving: {:.0}x latency",
-        (priv_wall.as_secs_f64() / n_priv as f64) / (wall.as_secs_f64() / total as f64)
+        (sec_wall.as_secs_f64() / sec_total as f64) / (wall.as_secs_f64() / total as f64)
     );
+    secure.shutdown();
     Ok(())
 }

@@ -17,4 +17,4 @@ pub mod server;
 
 pub use batcher::{BatchPolicy, BatcherHandle, Response};
 pub use metrics::{Metrics, Summary};
-pub use server::{Client, Server};
+pub use server::{Client, Server, StoppableListener};

@@ -14,7 +14,8 @@ use crate::protocol::transport::{read_frame, write_frame};
 use std::io::Write as _;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
 
 pub const TAG_INFER: u8 = 0x01;
 pub const TAG_STATS: u8 = 0x02;
@@ -22,12 +23,141 @@ pub const TAG_BYE: u8 = 0x03;
 pub const TAG_INFER_OK: u8 = 0x81;
 pub const TAG_STATS_OK: u8 = 0x82;
 
+/// A TCP listener that blocks in `accept` (no busy-poll) but can be stopped
+/// from another thread: set the stop flag, then [`StoppableListener::wake`]
+/// makes a throw-away self-connection to unblock the pending `accept`.
+/// Shared by the plaintext coordinator and the secure `serve` listener.
+pub struct StoppableListener {
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    pub addr: std::net::SocketAddr,
+}
+
+impl StoppableListener {
+    pub fn bind(addr: &str) -> std::io::Result<Self> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        Ok(Self { listener, stop: Arc::new(AtomicBool::new(false)), addr })
+    }
+
+    /// The shared stop flag; setting it (plus a `wake`) ends the accept loop.
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Blocking accept. Returns `None` once the stop flag is set (the wakeup
+    /// connection itself is swallowed). Transient errors never kill the
+    /// accept loop: a peer that resets before `accept` completes
+    /// (ECONNABORTED/ECONNRESET) is retried immediately, and resource
+    /// exhaustion (EMFILE etc.) backs off briefly and retries — the stop
+    /// flag is rechecked every iteration, so shutdown still works.
+    pub fn accept(&self) -> Option<TcpStream> {
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return None;
+                    }
+                    return Some(stream);
+                }
+                Err(ref e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted
+                            | std::io::ErrorKind::ConnectionAborted
+                            | std::io::ErrorKind::ConnectionReset
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => std::thread::sleep(std::time::Duration::from_millis(50)),
+            }
+        }
+    }
+
+    /// Unblock a pending `accept` on `addr` after its stop flag was set.
+    /// Wildcard binds (`0.0.0.0` / `[::]`) are rewritten to loopback — you
+    /// cannot connect to an unspecified address on every platform.
+    pub fn wake(addr: std::net::SocketAddr) {
+        use std::net::{IpAddr, Ipv4Addr, Ipv6Addr};
+        let mut addr = addr;
+        if addr.ip().is_unspecified() {
+            addr.set_ip(match addr.ip() {
+                IpAddr::V4(_) => IpAddr::V4(Ipv4Addr::LOCALHOST),
+                IpAddr::V6(_) => IpAddr::V6(Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(addr);
+    }
+}
+
+/// Tracked live connections — `(fd clone, thread handle)` pairs with
+/// per-accept reaping — shared by the plaintext and secure servers so the
+/// bookkeeping (and any future fix to it) lives in one place.
+pub struct LiveConns {
+    inner: Mutex<Vec<(TcpStream, JoinHandle<()>)>>,
+}
+
+impl LiveConns {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self { inner: Mutex::new(Vec::new()) })
+    }
+
+    /// Reap finished entries (dropping their fd clones, joining their
+    /// threads), then track a new connection.
+    pub fn track(&self, stream: TcpStream, handle: JoinHandle<()>) {
+        let mut guard = self.inner.lock().unwrap();
+        let mut live = Vec::with_capacity(guard.len() + 1);
+        for (s, h) in guard.drain(..) {
+            if h.is_finished() {
+                let _ = h.join();
+            } else {
+                live.push((s, h));
+            }
+        }
+        live.push((stream, handle));
+        *guard = live;
+    }
+
+    /// Close every tracked socket (unblocking reads), then join every
+    /// thread.
+    pub fn close_and_join(&self) {
+        let conns: Vec<(TcpStream, JoinHandle<()>)> =
+            self.inner.lock().unwrap().drain(..).collect();
+        for (s, _) in &conns {
+            let _ = s.shutdown(std::net::Shutdown::Both);
+        }
+        for (_, h) in conns {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Shared shutdown prologue: set the stop flag, wake the blocking accept,
+/// and join the accept thread. Idempotent.
+pub fn stop_accept_thread(
+    stop: &AtomicBool,
+    addr: std::net::SocketAddr,
+    accept_thread: &Mutex<Option<JoinHandle<()>>>,
+) {
+    stop.store(true, Ordering::SeqCst);
+    StoppableListener::wake(addr);
+    if let Some(h) = accept_thread.lock().unwrap().take() {
+        let _ = h.join();
+    }
+}
+
 /// A running server handle.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     pub sessions: Arc<AtomicU64>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+    live_sessions: Arc<LiveConns>,
 }
 
 impl Server {
@@ -35,11 +165,12 @@ impl Server {
     /// policy; returns once the listener is bound (serving continues on
     /// background threads).
     pub fn serve(net: Network, addr: &str, policy: BatchPolicy) -> std::io::Result<Server> {
-        let listener = TcpListener::bind(addr)?;
-        let local = listener.local_addr()?;
+        let listener = StoppableListener::bind(addr)?;
+        let local = listener.addr;
         let metrics = Arc::new(Metrics::new());
-        let stop = Arc::new(AtomicBool::new(false));
+        let stop = listener.stop_flag();
         let sessions = Arc::new(AtomicU64::new(0));
+        let live_sessions = LiveConns::new();
 
         let shape = net.input_shape;
         let scorer_net = net;
@@ -53,38 +184,42 @@ impl Server {
                 .collect()
         });
 
-        {
-            let stop = stop.clone();
+        let accept_thread = {
             let metrics = metrics.clone();
             let sessions = sessions.clone();
+            let live_sessions = live_sessions.clone();
             std::thread::spawn(move || {
-                listener.set_nonblocking(true).ok();
-                loop {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            sessions.fetch_add(1, Ordering::Relaxed);
-                            let h = handle.clone();
-                            let m = metrics.clone();
-                            std::thread::spawn(move || {
-                                let _ = handle_session(stream, h, m);
-                            });
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(1));
-                        }
-                        Err(_) => return,
-                    }
+                while let Some(stream) = listener.accept() {
+                    sessions.fetch_add(1, Ordering::Relaxed);
+                    let clone = match stream.try_clone() {
+                        Ok(c) => c,
+                        Err(_) => continue,
+                    };
+                    let h = handle.clone();
+                    let m = metrics.clone();
+                    let jh = std::thread::spawn(move || {
+                        let _ = handle_session(stream, h, m);
+                    });
+                    live_sessions.track(clone, jh);
                 }
-            });
-        }
-        Ok(Server { addr: local, metrics, stop, sessions })
+            })
+        };
+        Ok(Server {
+            addr: local,
+            metrics,
+            stop,
+            sessions,
+            accept_thread: Mutex::new(Some(accept_thread)),
+            live_sessions,
+        })
     }
 
+    /// Stop accepting, close every live session socket, and join all
+    /// server-owned threads. Idempotent; safe to call from any thread.
     pub fn shutdown(&self) {
-        self.stop.store(true, Ordering::Relaxed);
+        stop_accept_thread(&self.stop, self.addr, &self.accept_thread);
+        // Closing the sockets unblocks session threads parked in read_frame.
+        self.live_sessions.close_and_join();
     }
 }
 
@@ -192,5 +327,35 @@ mod tests {
         client.bye().unwrap();
         server.shutdown();
         assert!(server.metrics.summary().requests >= 6);
+    }
+
+    /// Shutdown must join the accept/session threads and close live
+    /// sessions even while a client is still connected mid-protocol — no
+    /// leaked threads, no busy-poll keeping the listener alive.
+    #[test]
+    fn shutdown_joins_threads_and_closes_sessions() {
+        let net = Network::build(NetworkArch::NetA, 6);
+        let server = Server::serve(net, "127.0.0.1:0", BatchPolicy::default()).unwrap();
+        let addr = server.addr;
+        // An idle session parked in read_frame.
+        let _client = Client::connect(&addr).unwrap();
+        server.shutdown();
+        server.shutdown(); // idempotent
+        // The listener is gone: new connections are refused.
+        assert!(
+            std::net::TcpStream::connect(addr).is_err(),
+            "listener still accepting after shutdown"
+        );
+    }
+
+    #[test]
+    fn stoppable_listener_wakes_out_of_blocking_accept() {
+        let listener = StoppableListener::bind("127.0.0.1:0").unwrap();
+        let stop = listener.stop_flag();
+        let addr = listener.addr;
+        let t = std::thread::spawn(move || listener.accept().is_none());
+        stop.store(true, Ordering::SeqCst);
+        StoppableListener::wake(addr);
+        assert!(t.join().unwrap(), "accept should return None after stop+wake");
     }
 }

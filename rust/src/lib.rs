@@ -11,8 +11,9 @@
 //!   encryption library ([`phe`]), a Yao garbled-circuit engine ([`gc`], used
 //!   by the GAZELLE baseline), the CHEETAH protocol
 //!   ([`protocol::cheetah`]) and the GAZELLE baseline
-//!   ([`protocol::gazelle`]), plus transport, serving, and benchmarking
-//!   infrastructure.
+//!   ([`protocol::gazelle`]), plus transport, benchmarking infrastructure,
+//!   and two serving paths: the plaintext coordinator ([`coordinator`]) and
+//!   the secure multi-session CHEETAH-over-TCP subsystem ([`serve`]).
 //! * **L2 (python/compile, build-time)** — JAX forward graphs of the
 //!   benchmark networks (with the paper's noise-injection experiment),
 //!   AOT-lowered to HLO text artifacts.
@@ -36,4 +37,5 @@ pub mod nn;
 pub mod phe;
 pub mod protocol;
 pub mod runtime;
+pub mod serve;
 pub mod util;

@@ -1,18 +1,22 @@
 //! `cheetah` — the leader CLI.
 //!
 //! ```text
-//! cheetah serve  [--addr A] [--model netA] [--max-batch N]   serve a trained model over TCP
-//! cheetah infer  [--model netA] [--eps E] [--label D]        one private inference, verbose report
-//! cheetah tables                                             print the paper's analytic tables
-//! cheetah bench-help                                         how to regenerate every paper table/figure
+//! cheetah serve         [--addr A] [--model netA] [--max-batch N]     serve a trained model over TCP (plaintext scoring)
+//! cheetah serve-secure  [--addr A] [--model netA] [--pool-depth N]    serve the CHEETAH protocol over TCP (private inference)
+//!                       [--pool-workers N] [--workers N] [--eps E]
+//!                       [--seed S]  (blinding seed; default: OS entropy)
+//! cheetah infer         [--model netA] [--eps E] [--label D]          one private inference, verbose report
+//! cheetah tables                                                      print the paper's analytic tables
+//! cheetah bench-help                                                  how to regenerate every paper table/figure
 //! ```
 
 use cheetah::coordinator::{BatchPolicy, Server};
 use cheetah::fixed::ScalePlan;
-use cheetah::nn::SyntheticDigits;
+use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
 use cheetah::phe::{Context, Params};
 use cheetah::protocol::cheetah::CheetahRunner;
 use cheetah::runtime::load_trained_network;
+use cheetah::serve::{self, PoolConfig, SecureConfig, SecureServer};
 use std::time::Duration;
 
 fn arg(flag: &str, default: &str) -> String {
@@ -24,7 +28,17 @@ fn arg(flag: &str, default: &str) -> String {
         .unwrap_or_else(|| default.to_string())
 }
 
-fn main() -> anyhow::Result<()> {
+/// Trained weights when `make artifacts` ran, otherwise a seeded random
+/// network of the same architecture (still exercises the full protocol).
+fn model_or_fallback(model: &str) -> Network {
+    load_trained_network("artifacts", model).unwrap_or_else(|e| {
+        eprintln!("artifacts unavailable ({e}); serving an untrained {model}");
+        let arch = if model == "netB" { NetworkArch::NetB } else { NetworkArch::NetA };
+        Network::build(arch, 11)
+    })
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cmd = std::env::args().nth(1).unwrap_or_else(|| "bench-help".into());
     match cmd.as_str() {
         "serve" => {
@@ -49,6 +63,51 @@ fn main() -> anyhow::Result<()> {
                         cheetah::util::fmt_duration(s.p50),
                         cheetah::util::fmt_duration(s.p99),
                         s.mean_batch
+                    );
+                }
+            }
+        }
+        "serve-secure" => {
+            let addr = arg("--addr", "127.0.0.1:7879");
+            let model = arg("--model", "netA");
+            let pool_depth: usize = arg("--pool-depth", "2").parse()?;
+            let pool_workers: usize = arg("--pool-workers", "1").parse()?;
+            let workers: usize = arg("--workers", "2").parse()?;
+            let eps: f64 = arg("--eps", "0.0").parse()?;
+            // Blinding seed: OS entropy unless pinned for reproducibility.
+            let seed_arg = arg("--seed", "");
+            let seed = if seed_arg.is_empty() { None } else { Some(seed_arg.parse()?) };
+            let net = model_or_fallback(&model);
+            let name = net.name.clone();
+            let ctx = serve::leak_context(Params::default_params());
+            let cfg = SecureConfig {
+                epsilon: eps,
+                seed,
+                workers,
+                pool: PoolConfig { depth: pool_depth, workers: pool_workers },
+                ..SecureConfig::default()
+            };
+            let server =
+                SecureServer::serve(ctx, net, ScalePlan::default_plan(), &addr, cfg)?;
+            println!(
+                "secure CHEETAH serving of {name} on {} (ε={eps}, {workers} workers, \
+                 pool depth {pool_depth}×{pool_workers}) — Ctrl-C to stop",
+                server.addr
+            );
+            loop {
+                std::thread::sleep(Duration::from_secs(10));
+                let s = server.metrics.summary();
+                let p = server.pool_stats();
+                if s.requests > 0 || p.produced > 0 {
+                    println!(
+                        "secure queries={} p50={} p99={} sessions={} pool(built={} hits={} inline={})",
+                        s.requests,
+                        cheetah::util::fmt_duration(s.p50),
+                        cheetah::util::fmt_duration(s.p99),
+                        server.session_count(),
+                        p.produced,
+                        p.pool_hits,
+                        p.inline_builds
                     );
                 }
             }
@@ -95,7 +154,7 @@ fn main() -> anyhow::Result<()> {
         _ => {
             println!(
                 "cheetah — privacy-preserved NN inference (paper reproduction)\n\n\
-                 subcommands: serve | infer | tables\n\n\
+                 subcommands: serve | serve-secure | infer | tables\n\n\
                  paper artifacts → bench targets:\n\
                  \x20 Table 1/2  cargo bench --bench complexity_tables\n\
                  \x20 Table 3    cargo bench --bench conv_bench   (--sweep → Fig. 5)\n\
@@ -103,7 +162,8 @@ fn main() -> anyhow::Result<()> {
                  \x20 Table 6    cargo bench --bench relu_bench   (--sweep → Fig. 6, --vgg-relu → §5.1)\n\
                  \x20 Fig. 7     cargo bench --bench accuracy_bench\n\
                  \x20 Table 7    cargo bench --bench e2e_bench    (--breakdown → Fig. 8)\n\
-                 \x20 §2.3 ratio cargo bench --bench microops_bench"
+                 \x20 §2.3 ratio cargo bench --bench microops_bench\n\
+                 \x20 serving    cargo bench --bench serve_bench  (secure TCP throughput/latency)"
             );
             Ok(())
         }

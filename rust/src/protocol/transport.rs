@@ -108,6 +108,59 @@ impl MeteredChannel {
     }
 }
 
+/// Default cap on a single frame's payload. The largest legitimate frames
+/// are secure-serving rounds holding a few dozen ciphertexts (~100 KiB
+/// each); 64 MiB leaves ample headroom while refusing to allocate
+/// attacker-controlled sizes up to 4 GiB from a corrupt length header.
+pub const DEFAULT_MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Frame-level read failure.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Underlying I/O failure; truncated frames surface as `UnexpectedEof`.
+    Io(std::io::Error),
+    /// The length header exceeds the configured maximum — the frame is
+    /// rejected *before* any payload allocation.
+    TooLarge { len: usize, max: usize },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Io(e) => write!(f, "frame i/o error: {e}"),
+            FrameError::TooLarge { len, max } => {
+                write!(f, "frame payload length {len} exceeds maximum {max}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FrameError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FrameError::Io(e) => Some(e),
+            FrameError::TooLarge { .. } => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl From<FrameError> for std::io::Error {
+    fn from(e: FrameError) -> Self {
+        match e {
+            FrameError::Io(io) => io,
+            FrameError::TooLarge { .. } => {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+            }
+        }
+    }
+}
+
 /// Length-prefixed message framing over any `Read`/`Write` (TCP mode).
 pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> std::io::Result<()> {
     w.write_all(&[tag])?;
@@ -116,12 +169,24 @@ pub fn write_frame<W: Write>(w: &mut W, tag: u8, payload: &[u8]) -> std::io::Res
     w.flush()
 }
 
-/// Read one framed message: `(tag, payload)`.
-pub fn read_frame<R: Read>(r: &mut R) -> std::io::Result<(u8, Vec<u8>)> {
+/// Read one framed message with the default payload cap: `(tag, payload)`.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<(u8, Vec<u8>), FrameError> {
+    read_frame_limited(r, DEFAULT_MAX_FRAME_LEN)
+}
+
+/// Read one framed message, rejecting payloads longer than `max_len`
+/// before allocating.
+pub fn read_frame_limited<R: Read>(
+    r: &mut R,
+    max_len: usize,
+) -> Result<(u8, Vec<u8>), FrameError> {
     let mut hdr = [0u8; 5];
     r.read_exact(&mut hdr)?;
     let tag = hdr[0];
     let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+    if len > max_len {
+        return Err(FrameError::TooLarge { len, max: max_len });
+    }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
     Ok((tag, payload))
@@ -166,5 +231,58 @@ mod tests {
         assert_eq!((t1, p1.as_slice()), (7, b"hello world".as_slice()));
         let (t2, p2) = read_frame(&mut cursor).unwrap();
         assert_eq!((t2, p2.len()), (9, 0));
+    }
+
+    #[test]
+    fn truncated_header_is_eof() {
+        let mut cursor = std::io::Cursor::new(vec![7u8, 1, 0]); // 3 of 5 header bytes
+        match read_frame(&mut cursor) {
+            Err(FrameError::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            other => panic!("expected EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_payload_is_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 7, b"hello world").unwrap();
+        buf.truncate(buf.len() - 4); // cut the payload short
+        let mut cursor = std::io::Cursor::new(buf);
+        match read_frame(&mut cursor) {
+            Err(FrameError::Io(e)) => assert_eq!(e.kind(), std::io::ErrorKind::UnexpectedEof),
+            other => panic!("expected EOF, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_frame_rejected_before_allocation() {
+        // A frame claiming a ~4 GiB payload must be rejected by the length
+        // check, not by an allocation attempt.
+        let mut buf = vec![1u8];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(buf);
+        match read_frame_limited(&mut cursor, 1024) {
+            Err(FrameError::TooLarge { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn frame_at_exact_limit_accepted() {
+        let payload = vec![0xabu8; 128];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, 3, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(buf);
+        let (tag, got) = read_frame_limited(&mut cursor, 128).unwrap();
+        assert_eq!((tag, got.len()), (3, 128));
+    }
+
+    #[test]
+    fn frame_error_converts_to_io_error() {
+        let e: std::io::Error = FrameError::TooLarge { len: 10, max: 1 }.into();
+        assert_eq!(e.kind(), std::io::ErrorKind::InvalidData);
     }
 }

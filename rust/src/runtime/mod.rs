@@ -11,27 +11,40 @@
 //! path; the kernel artifacts double as a cross-check that the L1 Pallas
 //! kernels and the Rust client hot loops compute the same function.
 
-use anyhow::{Context as _, Result};
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+// The crate builds in an offline environment with no crate registry, so
+// error plumbing is a plain boxed error rather than `anyhow`, and the
+// PJRT/XLA executor (which needs the external `xla` crate) is gated behind
+// the `pjrt` cargo feature. The trained-weight loader below is pure std
+// and always available.
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::{collections::HashMap, path::PathBuf};
+
+/// Boxed runtime error (artifact loading / PJRT execution).
+pub type Error = Box<dyn std::error::Error + Send + Sync>;
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// A compiled artifact ready to execute.
+#[cfg(feature = "pjrt")]
 pub struct LoadedModule {
     pub name: String,
     exe: xla::PjRtLoadedExecutable,
 }
 
 /// The artifact registry + PJRT client.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
     modules: HashMap<String, LoadedModule>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client rooted at an artifacts directory.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| format!("create PJRT CPU client: {e}"))?;
         Ok(Self { client, dir: artifacts_dir.as_ref().to_path_buf(), modules: HashMap::new() })
     }
 
@@ -46,11 +59,14 @@ impl Runtime {
         }
         let path = self.dir.join(format!("{name}.hlo.txt"));
         let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
+            path.to_str().ok_or("artifact path not utf-8")?,
         )
-        .with_context(|| format!("parse HLO text {path:?} (run `make artifacts`)"))?;
+        .map_err(|e| format!("parse HLO text {path:?} (run `make artifacts`): {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| format!("compile {name}: {e}"))?;
         self.modules.insert(name.to_string(), LoadedModule { name: name.to_string(), exe });
         Ok(())
     }
@@ -61,7 +77,7 @@ impl Runtime {
         let module = self
             .modules
             .get(name)
-            .with_context(|| format!("module {name} not loaded"))?;
+            .ok_or_else(|| format!("module {name} not loaded"))?;
         let result = module.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
         let (elems, _) = result.to_tuple()?.into_iter().fold(
             (Vec::new(), 0usize),
@@ -105,12 +121,12 @@ pub fn load_trained_network(
     use crate::nn::{Layer, Network};
     let dir = artifacts_dir.as_ref();
     let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-        .context("read manifest.txt (run `make artifacts`)")?;
+        .map_err(|e| format!("read manifest.txt (run `make artifacts`): {e}"))?;
     let shapes_line = manifest
         .lines()
         .find(|l| l.starts_with(&format!("{arch}_weights.bin")))
-        .context("weights entry missing from manifest")?;
-    let shapes_str = shapes_line.split("shapes=").nth(1).context("malformed manifest")?;
+        .ok_or("weights entry missing from manifest")?;
+    let shapes_str = shapes_line.split("shapes=").nth(1).ok_or("malformed manifest")?;
     let shapes: Vec<Vec<usize>> = shapes_str
         .trim()
         .split(';')
@@ -149,7 +165,7 @@ pub fn load_trained_network(
                 Layer::fc(10),
             ],
         ),
-        _ => anyhow::bail!("unknown arch {arch}"),
+        _ => return Err(format!("unknown arch {arch}").into()),
     };
 
     let mut offset = 0usize;
@@ -164,7 +180,9 @@ pub fn load_trained_network(
         offset += count;
         shape_idx += 1;
     }
-    anyhow::ensure!(offset == floats.len(), "weight size mismatch");
+    if offset != floats.len() {
+        return Err("weight size mismatch".into());
+    }
     let mut net = Network { name: format!("{arch} (trained)"), input_shape, layers };
     equalize_activations(&mut net, 1.2, 32);
     Ok(net)
@@ -226,6 +244,7 @@ mod tests {
         Path::new("artifacts/manifest.txt").exists()
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_client_starts() {
         let rt = Runtime::new("artifacts").expect("PJRT client");
@@ -234,6 +253,7 @@ mod tests {
 
     /// Kernel artifact cross-check: the lowered Pallas obscure_dot must
     /// match the Rust client's block_sums on the same input.
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pallas_kernel_matches_rust_hot_loop() {
         if !artifacts_ready() {

@@ -1,0 +1,261 @@
+//! Offline precomputation pool — the GAZELLE-style offline/online split
+//! applied to session setup.
+//!
+//! Preparing a CHEETAH serving engine is the expensive, query-independent
+//! part of the protocol: quantize weights, sample the per-block blinding
+//! factors `v₁ = ±2^j` and noise seeds ([`crate::protocol::cheetah::blinding`]),
+//! and encrypt the polar-indicator vectors under the server's key. The pool
+//! runs that work on background threads *ahead of demand* and hands a ready
+//! engine to each new session, so session-setup latency collapses to a
+//! queue pop plus indicator serialization.
+//!
+//! The pool is a bounded channel: workers block (politely, with a stop
+//! check) once `depth` engines are banked, so precomputation never runs
+//! unbounded ahead of demand. `take` never blocks — a cold pool falls back
+//! to building inline, and the hit/miss counters make the two paths
+//! measurable (`benches/serve_bench.rs` reports both).
+
+use crate::fixed::ScalePlan;
+use crate::nn::Network;
+use crate::phe::Context;
+use crate::protocol::cheetah::CheetahServer;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Pool sizing. `depth == 0` or `workers == 0` disables precomputation:
+/// every session builds its engine inline (the measured "pool off" path).
+#[derive(Clone, Copy, Debug)]
+pub struct PoolConfig {
+    /// Engines banked ahead of demand.
+    pub depth: usize,
+    /// Background builder threads.
+    pub workers: usize,
+}
+
+impl PoolConfig {
+    pub fn disabled() -> Self {
+        Self { depth: 0, workers: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.depth > 0 && self.workers > 0
+    }
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { depth: 2, workers: 1 }
+    }
+}
+
+/// Point-in-time pool counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoolStats {
+    /// Engines built by background workers.
+    pub produced: u64,
+    /// Sessions served from the bank.
+    pub pool_hits: u64,
+    /// Sessions that had to build inline (pool cold or disabled).
+    pub inline_builds: u64,
+}
+
+/// Background bank of prepared CHEETAH serving engines.
+pub struct BlindingPool {
+    ctx: &'static Context,
+    net: Network,
+    plan: ScalePlan,
+    epsilon: f64,
+    next_seed: AtomicU64,
+    bank: Mutex<Option<Receiver<CheetahServer<'static>>>>,
+    stop: Arc<AtomicBool>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    produced: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl BlindingPool {
+    /// Start the pool (spawning `cfg.workers` builder threads when enabled).
+    /// Engine seeds are `base_seed, base_seed+1, …` — deterministic but
+    /// distinct per engine, so every session gets fresh blinding material.
+    pub fn start(
+        ctx: &'static Context,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        base_seed: u64,
+        cfg: PoolConfig,
+    ) -> Arc<Self> {
+        let pool = Arc::new(Self {
+            ctx,
+            net,
+            plan,
+            epsilon,
+            next_seed: AtomicU64::new(base_seed),
+            bank: Mutex::new(None),
+            stop: Arc::new(AtomicBool::new(false)),
+            workers: Mutex::new(Vec::new()),
+            produced: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        });
+        if cfg.enabled() {
+            let (tx, rx) = sync_channel(cfg.depth);
+            *pool.bank.lock().unwrap() = Some(rx);
+            let mut handles = pool.workers.lock().unwrap();
+            for _ in 0..cfg.workers {
+                let pool = pool.clone();
+                let tx: SyncSender<CheetahServer<'static>> = tx.clone();
+                handles.push(std::thread::spawn(move || pool.worker_loop(tx)));
+            }
+        }
+        pool
+    }
+
+    fn build(&self) -> CheetahServer<'static> {
+        let seed = self.next_seed.fetch_add(1, Ordering::Relaxed);
+        CheetahServer::new(self.ctx, self.net.clone(), self.plan, self.epsilon, seed)
+    }
+
+    fn worker_loop(&self, tx: SyncSender<CheetahServer<'static>>) {
+        while !self.stop.load(Ordering::SeqCst) {
+            let mut engine = Some(self.build());
+            self.produced.fetch_add(1, Ordering::Relaxed);
+            // Park (with stop checks) until the bank has room.
+            loop {
+                if self.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                match tx.try_send(engine.take().expect("engine consumed twice")) {
+                    Ok(()) => break,
+                    Err(TrySendError::Full(e)) => {
+                        engine = Some(e);
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(TrySendError::Disconnected(_)) => return,
+                }
+            }
+        }
+    }
+
+    /// A ready engine: from the bank when warm, built inline otherwise.
+    /// Never blocks on the background workers.
+    pub fn take(&self) -> CheetahServer<'static> {
+        let banked = {
+            let guard = self.bank.lock().unwrap();
+            guard.as_ref().and_then(|rx| rx.try_recv().ok())
+        };
+        match banked {
+            Some(engine) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                engine
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                self.build()
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            produced: self.produced.load(Ordering::Relaxed),
+            pool_hits: self.hits.load(Ordering::Relaxed),
+            inline_builds: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Block until at least `n` engines have been produced (bench warmup),
+    /// or the timeout expires. Returns whether the target was reached.
+    pub fn wait_until_produced(&self, n: u64, timeout: Duration) -> bool {
+        let t0 = std::time::Instant::now();
+        while self.produced.load(Ordering::Relaxed) < n {
+            if t0.elapsed() > timeout {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        true
+    }
+
+    /// Stop and join the builder threads, dropping any banked engines.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Dropping the receiver makes any in-flight try_send disconnect.
+        self.bank.lock().unwrap().take();
+        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BlindingPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::Layer;
+    use crate::phe::Params;
+
+    fn tiny_net() -> Network {
+        let mut net = Network {
+            name: "pool-test".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::fc(3)],
+        };
+        net.init_weights(1);
+        net
+    }
+
+    #[test]
+    fn disabled_pool_builds_inline() {
+        // default_params: the default ScalePlan's product range needs the
+        // 23-bit plaintext modulus (check_fits panics on smaller p).
+        let ctx = crate::serve::leak_context(Params::default_params());
+        let pool = BlindingPool::start(
+            ctx,
+            tiny_net(),
+            ScalePlan::default_plan(),
+            0.0,
+            100,
+            PoolConfig::disabled(),
+        );
+        let _a = pool.take();
+        let _b = pool.take();
+        let s = pool.stats();
+        assert_eq!(s.pool_hits, 0);
+        assert_eq!(s.inline_builds, 2);
+        assert_eq!(s.produced, 0, "no background workers ⇒ nothing counted as produced");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn warm_pool_serves_hits_with_distinct_seeds() {
+        let ctx = crate::serve::leak_context(Params::default_params());
+        let pool = BlindingPool::start(
+            ctx,
+            tiny_net(),
+            ScalePlan::default_plan(),
+            0.0,
+            200,
+            PoolConfig { depth: 2, workers: 1 },
+        );
+        assert!(pool.wait_until_produced(2, Duration::from_secs(10)), "pool never warmed");
+        let _a = pool.take();
+        let _b = pool.take();
+        let s = pool.stats();
+        assert_eq!(s.pool_hits + s.inline_builds, 2);
+        assert!(s.pool_hits >= 1, "warm pool produced no hits: {s:?}");
+        pool.shutdown();
+        // Shutdown is idempotent and joins workers.
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,262 @@
+//! Session registry and per-session protocol state machines.
+//!
+//! Every connected client gets a session id and a dedicated CHEETAH serving
+//! engine (with its own blinding material and indicator ciphertexts, pulled
+//! from the [`super::precompute::BlindingPool`]). The registry multiplexes
+//! rounds from interleaved clients on one listener: each online frame
+//! carries its session id, the reader routes it to a session-sticky worker,
+//! and the state machine enforces round ordering so a confused (or
+//! malicious) client gets a typed protocol error instead of corrupting
+//! engine state or panicking a worker.
+//!
+//! CHEETAH needs **no client evaluation keys**: the server's obscure linear
+//! computation is `MultPlain`/`AddPlain` only (zero `Perm`s — the paper's
+//! headline), so there are no Galois keys to cache. What the registry caches
+//! instead is the per-session offline material — the prepared engine and its
+//! indicator ciphertexts — so repeat queries on a session pay online cost
+//! only.
+
+use super::wire;
+use crate::coordinator::metrics::Metrics;
+use crate::phe::Ciphertext;
+use crate::protocol::cheetah::CheetahServer;
+use crate::util::rng::ChaCha20Rng;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Where a session is in the per-query round sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Expecting the client's encrypted transformed share for `step`
+    /// (step 0 starts a fresh query).
+    AwaitShares(usize),
+    /// Expecting the nonlinear recovery ciphertexts for `step`.
+    AwaitRecovery(usize),
+}
+
+/// A protocol-ordering or validation failure; the worker converts this into
+/// an `ERROR` frame and retires the session.
+#[derive(Debug)]
+pub struct ProtocolViolation(pub String);
+
+impl std::fmt::Display for ProtocolViolation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "protocol violation: {}", self.0)
+    }
+}
+
+impl std::error::Error for ProtocolViolation {}
+
+/// One client's serving state: engine + state machine + counters.
+pub struct Session {
+    pub id: u64,
+    pub engine: CheetahServer<'static>,
+    pub phase: Phase,
+    query_start: Option<Instant>,
+    pub queries_done: u64,
+}
+
+impl Session {
+    pub fn new(id: u64, engine: CheetahServer<'static>) -> Self {
+        Self { id, engine, phase: Phase::AwaitShares(0), query_start: None, queries_done: 0 }
+    }
+
+    fn expect_shares(&self, step: usize) -> Result<(), ProtocolViolation> {
+        match self.phase {
+            Phase::AwaitShares(s) if s == step => Ok(()),
+            phase => Err(ProtocolViolation(format!(
+                "SHARES for step {step} while in {phase:?}"
+            ))),
+        }
+    }
+
+    /// Handle a `SHARES` round: run the obscure linear computation and
+    /// return the `PRODUCTS` payload. Completing the last step finishes the
+    /// query (recorded in `metrics`) and re-arms the session for the next
+    /// one — the cached offline material is reused.
+    pub fn on_shares(
+        &mut self,
+        step: usize,
+        in_cts: &[Ciphertext],
+        metrics: &Metrics,
+    ) -> Result<Vec<u8>, ProtocolViolation> {
+        self.expect_shares(step)?;
+        let n = self.engine.ctx.params.n;
+        let expected = self.engine.spec.steps[step].linear.num_in_cts(n);
+        if in_cts.len() != expected {
+            return Err(ProtocolViolation(format!(
+                "step {step} expects {expected} input ciphertexts, got {}",
+                in_cts.len()
+            )));
+        }
+        if step == 0 {
+            self.engine.begin_query();
+            self.query_start = Some(Instant::now());
+        }
+        let out = self.engine.step_linear(step, in_cts);
+        if step == self.engine.spec.last_idx() {
+            if let Some(t0) = self.query_start.take() {
+                metrics.record_request(t0.elapsed());
+            }
+            self.queries_done += 1;
+            self.phase = Phase::AwaitShares(0);
+        } else {
+            self.phase = Phase::AwaitRecovery(step);
+        }
+        let mut payload = wire::round_header(self.id, step as u32);
+        wire::encode_cts(&mut payload, &out);
+        Ok(payload)
+    }
+
+    /// Handle a `RECOVERY` round: decrypt the server's share of the exact
+    /// ReLU activation and return the `RECOVERY_OK` payload.
+    pub fn on_recovery(
+        &mut self,
+        step: usize,
+        rec_cts: &[Ciphertext],
+    ) -> Result<Vec<u8>, ProtocolViolation> {
+        match self.phase {
+            Phase::AwaitRecovery(s) if s == step => {}
+            phase => {
+                return Err(ProtocolViolation(format!(
+                    "RECOVERY for step {step} while in {phase:?}"
+                )))
+            }
+        }
+        let n = self.engine.ctx.params.n;
+        let expected = self.engine.spec.steps[step].linear.num_recovery_cts(n);
+        if rec_cts.len() != expected {
+            return Err(ProtocolViolation(format!(
+                "step {step} expects {expected} recovery ciphertexts, got {}",
+                rec_cts.len()
+            )));
+        }
+        self.engine.finish_nonlinear(step, rec_cts);
+        self.phase = Phase::AwaitShares(step + 1);
+        Ok(wire::round_header(self.id, step as u32))
+    }
+}
+
+/// Concurrent session table. Sessions are created at `HELLO`, looked up per
+/// round by id, and removed at `BYE`, protocol error, connection close, or
+/// server shutdown.
+///
+/// Session ids are 64-bit values from a CSPRNG, not a counter: the wire
+/// layer authenticates nobody, so the unguessable id *is* the isolation
+/// boundary between clients — a peer cannot forge rounds (or `BYE`) for a
+/// session it did not create without guessing its id.
+pub struct SessionRegistry {
+    sessions: Mutex<HashMap<u64, Arc<Mutex<Session>>>>,
+    id_rng: Mutex<ChaCha20Rng>,
+}
+
+impl Default for SessionRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SessionRegistry {
+    pub fn new() -> Self {
+        Self {
+            sessions: Mutex::new(HashMap::new()),
+            id_rng: Mutex::new(ChaCha20Rng::from_os_entropy()),
+        }
+    }
+
+    pub fn create(&self, engine: CheetahServer<'static>) -> (u64, Arc<Mutex<Session>>) {
+        let mut sessions = self.sessions.lock().unwrap();
+        let id = {
+            let mut rng = self.id_rng.lock().unwrap();
+            loop {
+                let id = rng.next_u64();
+                if id != 0 && !sessions.contains_key(&id) {
+                    break id;
+                }
+            }
+        };
+        let session = Arc::new(Mutex::new(Session::new(id, engine)));
+        sessions.insert(id, session.clone());
+        (id, session)
+    }
+
+    pub fn get(&self, id: u64) -> Option<Arc<Mutex<Session>>> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    pub fn remove(&self, id: u64) -> bool {
+        self.sessions.lock().unwrap().remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn clear(&self) {
+        self.sessions.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::ScalePlan;
+    use crate::nn::{Layer, Network};
+    use crate::phe::Params;
+
+    fn session_on_tiny_net() -> Session {
+        let ctx = crate::serve::leak_context(Params::default_params());
+        let mut net = Network {
+            name: "sm".into(),
+            input_shape: (1, 3, 3),
+            layers: vec![Layer::fc(4), Layer::relu(), Layer::fc(2)],
+        };
+        net.init_weights(7);
+        let engine = CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 8);
+        Session::new(1, engine)
+    }
+
+    #[test]
+    fn out_of_order_rounds_are_rejected_not_panicking() {
+        let metrics = Metrics::new();
+        let mut s = session_on_tiny_net();
+        // RECOVERY before any SHARES.
+        assert!(s.on_recovery(0, &[]).is_err());
+        // SHARES for a later step first.
+        assert!(s.on_shares(1, &[], &metrics).is_err());
+        // Wrong ciphertext count for the right step.
+        assert!(s.on_shares(0, &[], &metrics).is_err());
+        // The session survives the rejections in its initial phase.
+        assert_eq!(s.phase, Phase::AwaitShares(0));
+    }
+
+    #[test]
+    fn registry_create_get_remove() {
+        let ctx = crate::serve::leak_context(Params::default_params());
+        let mut net = Network {
+            name: "r".into(),
+            input_shape: (1, 2, 2),
+            layers: vec![Layer::fc(2)],
+        };
+        net.init_weights(9);
+        let reg = SessionRegistry::new();
+        let engine = CheetahServer::new(ctx, net.clone(), ScalePlan::default_plan(), 0.0, 1);
+        let (id1, _) = reg.create(engine);
+        let engine = CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 2);
+        let (id2, _) = reg.create(engine);
+        assert_ne!(id1, id2);
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get(id1).is_some());
+        assert!(reg.remove(id1));
+        assert!(!reg.remove(id1));
+        assert!(reg.get(id1).is_none());
+        assert_eq!(reg.len(), 1);
+        reg.clear();
+        assert!(reg.is_empty());
+    }
+}

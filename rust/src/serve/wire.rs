@@ -1,0 +1,470 @@
+//! Wire codec for the secure serving protocol: maps each CHEETAH round
+//! (transformed-share ciphertexts, obscured linear products, nonlinear
+//! recovery messages) onto the length-prefixed frames of
+//! [`crate::protocol::transport`].
+//!
+//! Frame grammar (one protocol message per frame; all integers
+//! little-endian; ciphertexts use the exact bit-packed format of
+//! [`crate::phe::serial`]):
+//!
+//! | tag  | dir | payload |
+//! |------|-----|---------|
+//! | `HELLO`        0x20 | c→s | magic `u32` + version `u16` |
+//! | `SHARES`       0x23 | c→s | sid `u64` + step `u32` + cts (`[T(share_C)]_C`) |
+//! | `RECOVERY`     0x24 | c→s | sid `u64` + step `u32` + cts (`[ID₁∘y+ID₂∘ReLU(y)−s₁]_S`) |
+//! | `BYE`          0x2f | c→s | sid `u64` |
+//! | `HELLO_OK`     0xa0 | s→c | sid `u64` + plan/params fingerprint `u64` + ε `f64` + n_steps `u32` + arch |
+//! | `OFFLINE_IDS`  0xa1 | s→c | sid `u64` + step `u32` + id1 cts + id2 cts |
+//! | `OFFLINE_DONE` 0xa2 | s→c | sid `u64` |
+//! | `PRODUCTS`     0xa3 | s→c | sid `u64` + step `u32` + cts (obscured products) |
+//! | `RECOVERY_OK`  0xa4 | s→c | sid `u64` + step `u32` |
+//! | `ERROR`        0xee | s→c | sid `u64` + code `u16` + utf-8 message |
+//!
+//! Every online frame carries the session id, so rounds from interleaved
+//! clients multiplex on one listener (and, if a client chooses, on one
+//! connection). Ciphertext vectors are encoded as `count u32` followed by
+//! `len u32 + bytes` per ciphertext. Decoding is defensive: all counts and
+//! lengths are validated against the remaining buffer before allocation,
+//! and malformed input returns a typed [`WireError`], never a panic.
+
+use crate::fixed::ScalePlan;
+use crate::nn::{Layer, LayerKind, Network};
+use crate::phe::serial::{deserialize_ct, serialize_ct};
+use crate::phe::{Ciphertext, Context, Params};
+
+/// Protocol magic: `"CHTA"`.
+pub const MAGIC: u32 = 0x4348_5441;
+/// Wire protocol version.
+pub const VERSION: u16 = 1;
+
+pub const TAG_HELLO: u8 = 0x20;
+pub const TAG_SHARES: u8 = 0x23;
+pub const TAG_RECOVERY: u8 = 0x24;
+pub const TAG_BYE: u8 = 0x2f;
+pub const TAG_HELLO_OK: u8 = 0xa0;
+pub const TAG_OFFLINE_IDS: u8 = 0xa1;
+pub const TAG_OFFLINE_DONE: u8 = 0xa2;
+pub const TAG_PRODUCTS: u8 = 0xa3;
+pub const TAG_RECOVERY_OK: u8 = 0xa4;
+pub const TAG_ERROR: u8 = 0xee;
+
+/// Error codes carried by `ERROR` frames.
+pub const ERR_PROTOCOL: u16 = 1;
+pub const ERR_UNSUPPORTED: u16 = 2;
+pub const ERR_INTERNAL: u16 = 3;
+
+/// Upper bound on ciphertexts per message (a paper-scale VGG step needs a
+/// few hundred; this only guards against absurd counts from corrupt input).
+const MAX_CTS_PER_MSG: usize = 1 << 16;
+/// Upper bound on layers in a served architecture description.
+const MAX_ARCH_LAYERS: usize = 256;
+/// Upper bound on any single architecture dimension.
+const MAX_ARCH_DIM: usize = 1 << 20;
+
+/// Typed decode failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the message did.
+    Truncated,
+    /// Structurally invalid content (bad magic, absurd count, …).
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "message truncated"),
+            WireError::Malformed(what) => write!(f, "malformed message: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<WireError> for std::io::Error {
+    fn from(e: WireError) -> Self {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    }
+}
+
+/// Bounds-checked little-endian reader over a message payload.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn take(&mut self, len: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < len {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+}
+
+// ---- ciphertext vectors ----
+
+/// Append `count u32 + (len u32 + bytes)*` for a ciphertext vector.
+pub fn encode_cts(out: &mut Vec<u8>, cts: &[Ciphertext]) {
+    out.extend_from_slice(&(cts.len() as u32).to_le_bytes());
+    for ct in cts {
+        let bytes = serialize_ct(ct);
+        out.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&bytes);
+    }
+}
+
+/// Decode a ciphertext vector; every length is validated against the
+/// remaining buffer before any allocation.
+pub fn decode_cts(ctx: &Context, r: &mut ByteReader) -> Result<Vec<Ciphertext>, WireError> {
+    let count = r.u32()? as usize;
+    if count > MAX_CTS_PER_MSG {
+        return Err(WireError::Malformed("ciphertext count"));
+    }
+    let mut cts = Vec::with_capacity(count);
+    for _ in 0..count {
+        let len = r.u32()? as usize;
+        let bytes = r.take(len)?;
+        cts.push(deserialize_ct(ctx, bytes));
+    }
+    Ok(cts)
+}
+
+// ---- architecture description (kinds + shapes only, never weights) ----
+
+/// Encode the layer geometry of `net` — the public model metadata the
+/// client needs to compile its own [`crate::protocol::cheetah::spec::ProtocolSpec`].
+/// Weights never cross the wire (they are the server's secret).
+pub fn encode_arch(out: &mut Vec<u8>, net: &Network) {
+    let (c, h, w) = net.input_shape;
+    out.extend_from_slice(&(c as u32).to_le_bytes());
+    out.extend_from_slice(&(h as u32).to_le_bytes());
+    out.extend_from_slice(&(w as u32).to_le_bytes());
+    out.extend_from_slice(&(net.layers.len() as u32).to_le_bytes());
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Conv2d { out_channels, kernel, stride, pad } => {
+                out.push(0);
+                for v in [out_channels, kernel, stride, pad] {
+                    out.extend_from_slice(&(v as u32).to_le_bytes());
+                }
+            }
+            LayerKind::Relu => out.push(1),
+            LayerKind::MeanPool { size } => {
+                out.push(2);
+                out.extend_from_slice(&(size as u32).to_le_bytes());
+            }
+            LayerKind::Fc { out_features } => {
+                out.push(3);
+                out.extend_from_slice(&(out_features as u32).to_le_bytes());
+            }
+        }
+    }
+}
+
+fn arch_dim(r: &mut ByteReader) -> Result<usize, WireError> {
+    let v = r.u32()? as usize;
+    if v == 0 || v > MAX_ARCH_DIM {
+        return Err(WireError::Malformed("architecture dimension"));
+    }
+    Ok(v)
+}
+
+/// Decode an architecture description into a weight-less [`Network`].
+pub fn decode_arch(r: &mut ByteReader) -> Result<Network, WireError> {
+    let c = arch_dim(r)?;
+    let h = arch_dim(r)?;
+    let w = arch_dim(r)?;
+    let n_layers = r.u32()? as usize;
+    if n_layers == 0 || n_layers > MAX_ARCH_LAYERS {
+        return Err(WireError::Malformed("layer count"));
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for _ in 0..n_layers {
+        layers.push(match r.u8()? {
+            0 => {
+                let out_channels = arch_dim(r)?;
+                let kernel = arch_dim(r)?;
+                let stride = arch_dim(r)?;
+                let pad = r.u32()? as usize; // pad 0 is legal
+                if pad > MAX_ARCH_DIM {
+                    return Err(WireError::Malformed("architecture dimension"));
+                }
+                Layer::conv(out_channels, kernel, stride, pad)
+            }
+            1 => Layer::relu(),
+            2 => Layer::mean_pool(arch_dim(r)?),
+            3 => Layer::fc(arch_dim(r)?),
+            _ => return Err(WireError::Malformed("layer kind")),
+        });
+    }
+    Ok(Network { name: "served".into(), input_shape: (c, h, w), layers })
+}
+
+// ---- handshake ----
+
+fn mix(h: u64, v: u64) -> u64 {
+    // SplitMix64 finalizer over a running fold.
+    let mut z = h ^ v.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// A fingerprint over everything both parties must agree on byte-for-byte:
+/// the PHE parameters and the fixed-point scale plan. A mismatch is caught
+/// at the handshake instead of surfacing as garbage plaintexts mid-query.
+pub fn plan_fingerprint(params: &Params, plan: &ScalePlan) -> u64 {
+    let mut h = 0xC4EE_7A11u64; // arbitrary non-zero start
+    for v in [params.n as u64, params.p, params.qs[0], params.qs[1]] {
+        h = mix(h, v);
+    }
+    for s in [plan.x, plan.k, plan.v, plan.y, plan.id] {
+        h = mix(h, s.frac_bits as u64);
+    }
+    for f in [plan.x_max, plan.k_max, plan.y_max] {
+        h = mix(h, f.to_bits());
+    }
+    h
+}
+
+/// Client → server greeting.
+pub fn encode_hello() -> Vec<u8> {
+    let mut out = Vec::with_capacity(6);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out
+}
+
+pub fn decode_hello(payload: &[u8]) -> Result<(), WireError> {
+    let mut r = ByteReader::new(payload);
+    if r.u32()? != MAGIC {
+        return Err(WireError::Malformed("bad magic"));
+    }
+    if r.u16()? != VERSION {
+        return Err(WireError::Malformed("unsupported version"));
+    }
+    Ok(())
+}
+
+/// Server → client session grant.
+pub struct HelloOk {
+    pub session_id: u64,
+    pub fingerprint: u64,
+    pub epsilon: f64,
+    pub n_steps: u32,
+    pub arch: Network,
+}
+
+pub fn encode_hello_ok(
+    session_id: u64,
+    fingerprint: u64,
+    epsilon: f64,
+    n_steps: u32,
+    net: &Network,
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64);
+    out.extend_from_slice(&session_id.to_le_bytes());
+    out.extend_from_slice(&fingerprint.to_le_bytes());
+    out.extend_from_slice(&epsilon.to_bits().to_le_bytes());
+    out.extend_from_slice(&n_steps.to_le_bytes());
+    encode_arch(&mut out, net);
+    out
+}
+
+pub fn decode_hello_ok(payload: &[u8]) -> Result<HelloOk, WireError> {
+    let mut r = ByteReader::new(payload);
+    let session_id = r.u64()?;
+    let fingerprint = r.u64()?;
+    let epsilon = r.f64()?;
+    let n_steps = r.u32()?;
+    let arch = decode_arch(&mut r)?;
+    Ok(HelloOk { session_id, fingerprint, epsilon, n_steps, arch })
+}
+
+// ---- round headers ----
+
+/// `sid u64 + step u32` — the routing prefix of every online round frame.
+pub fn round_header(session_id: u64, step: u32) -> Vec<u8> {
+    let mut out = Vec::with_capacity(12);
+    out.extend_from_slice(&session_id.to_le_bytes());
+    out.extend_from_slice(&step.to_le_bytes());
+    out
+}
+
+pub fn read_round_header(r: &mut ByteReader) -> Result<(u64, u32), WireError> {
+    Ok((r.u64()?, r.u32()?))
+}
+
+/// Peek the session id from a round payload without consuming it (the
+/// connection reader uses this to pick the session-sticky worker).
+pub fn peek_session_id(payload: &[u8]) -> Result<u64, WireError> {
+    if payload.len() < 8 {
+        return Err(WireError::Truncated);
+    }
+    Ok(u64::from_le_bytes(payload[..8].try_into().unwrap()))
+}
+
+// ---- error frames ----
+
+pub fn encode_error(session_id: u64, code: u16, msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(10 + msg.len());
+    out.extend_from_slice(&session_id.to_le_bytes());
+    out.extend_from_slice(&code.to_le_bytes());
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+pub fn decode_error(payload: &[u8]) -> Result<(u64, u16, String), WireError> {
+    let mut r = ByteReader::new(payload);
+    let sid = r.u64()?;
+    let code = r.u16()?;
+    let msg = String::from_utf8_lossy(r.take(r.remaining())?).into_owned();
+    Ok((sid, code, msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NetworkArch;
+    use crate::util::rng::ChaCha20Rng;
+
+    #[test]
+    fn hello_roundtrip_and_rejects() {
+        decode_hello(&encode_hello()).unwrap();
+        assert_eq!(decode_hello(&[1, 2, 3]), Err(WireError::Truncated));
+        let mut bad = encode_hello();
+        bad[0] ^= 0xff;
+        assert_eq!(decode_hello(&bad), Err(WireError::Malformed("bad magic")));
+    }
+
+    #[test]
+    fn arch_roundtrip_all_layer_kinds() {
+        let net = Network::build(NetworkArch::NetB, 1); // conv+relu+pool+fc
+        let mut buf = Vec::new();
+        encode_arch(&mut buf, &net);
+        let back = decode_arch(&mut ByteReader::new(&buf)).unwrap();
+        assert_eq!(back.input_shape, net.input_shape);
+        assert_eq!(back.layers.len(), net.layers.len());
+        for (a, b) in back.layers.iter().zip(&net.layers) {
+            assert_eq!(a.kind, b.kind);
+            assert!(a.weights.is_empty(), "weights must never cross the wire");
+        }
+        // The client-compiled spec matches the server's.
+        let spec_a = crate::protocol::cheetah::ProtocolSpec::compile(&back);
+        let spec_b = crate::protocol::cheetah::ProtocolSpec::compile(&net);
+        assert_eq!(spec_a.steps.len(), spec_b.steps.len());
+    }
+
+    #[test]
+    fn cts_roundtrip_fresh_and_evaluated() {
+        let ctx = Context::new(Params::new(1024, 20));
+        let mut rng = ChaCha20Rng::from_u64_seed(3);
+        let enc = crate::phe::Encryptor::new(&ctx, &mut rng);
+        let ev = crate::phe::Evaluator::new(&ctx);
+        let vals: Vec<i64> = (0..50).map(|i| i - 25).collect();
+        let fresh = enc.encrypt_slots(&vals, &mut rng);
+        let mut ntt = fresh.clone();
+        ev.to_ntt(&mut ntt);
+        let threes = vec![3i64; ctx.params.n];
+        let evaluated = ev.mult_plain(&ntt, &ctx.mult_operand(&threes));
+
+        let mut buf = Vec::new();
+        encode_cts(&mut buf, &[fresh.clone(), evaluated]);
+        let mut r = ByteReader::new(&buf);
+        let back = decode_cts(&ctx, &mut r).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(&enc.decrypt_slots(&back[0])[..50], &vals[..]);
+        let dec = enc.decrypt_slots(&back[1]);
+        for i in 0..50 {
+            assert_eq!(dec[i], vals[i] * 3);
+        }
+    }
+
+    #[test]
+    fn decode_cts_rejects_garbage_without_panicking() {
+        let ctx = Context::new(Params::new(1024, 20));
+        // Absurd count.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_cts(&ctx, &mut ByteReader::new(&buf)).is_err());
+        // Length past end of buffer.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&1_000_000u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 16]);
+        assert_eq!(
+            decode_cts(&ctx, &mut ByteReader::new(&buf)),
+            Err(WireError::Truncated)
+        );
+    }
+
+    #[test]
+    fn hello_ok_roundtrip() {
+        let net = Network::build(NetworkArch::NetA, 1);
+        let params = Params::new(1024, 20);
+        let plan = ScalePlan::default_plan();
+        let fp = plan_fingerprint(&params, &plan);
+        let buf = encode_hello_ok(42, fp, 0.125, 3, &net);
+        let ok = decode_hello_ok(&buf).unwrap();
+        assert_eq!(ok.session_id, 42);
+        assert_eq!(ok.fingerprint, fp);
+        assert_eq!(ok.epsilon, 0.125);
+        assert_eq!(ok.n_steps, 3);
+        assert_eq!(ok.arch.input_shape, net.input_shape);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_params_and_plan() {
+        let plan = ScalePlan::default_plan();
+        let a = plan_fingerprint(&Params::new(1024, 20), &plan);
+        let b = plan_fingerprint(&Params::new(2048, 20), &plan);
+        assert_ne!(a, b);
+        let mut plan2 = plan;
+        plan2.x_max = 4.0;
+        let c = plan_fingerprint(&Params::new(1024, 20), &plan2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn round_header_and_error_roundtrip() {
+        let hdr = round_header(7, 2);
+        assert_eq!(peek_session_id(&hdr).unwrap(), 7);
+        let mut r = ByteReader::new(&hdr);
+        assert_eq!(read_round_header(&mut r).unwrap(), (7, 2));
+
+        let e = encode_error(9, ERR_PROTOCOL, "step out of order");
+        let (sid, code, msg) = decode_error(&e).unwrap();
+        assert_eq!((sid, code, msg.as_str()), (9, ERR_PROTOCOL, "step out of order"));
+    }
+}

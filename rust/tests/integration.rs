@@ -7,6 +7,7 @@ use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
 use cheetah::protocol::cheetah::CheetahRunner;
 use cheetah::protocol::gazelle::GazelleRunner;
+use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
 use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
 
 /// The headline property: CHEETAH and GAZELLE produce consistent
@@ -124,6 +125,98 @@ fn coordinator_under_concurrent_load() {
         t.join().unwrap();
     }
     assert_eq!(server.metrics.summary().requests, 20);
+    server.shutdown();
+}
+
+/// The secure serving stack end to end over real TCP sockets: two
+/// concurrent clients each drive full CHEETAH inferences through
+/// `SecureServer` (session registry + worker pool + wire codec), and every
+/// result is **bit-identical** to the in-process `CheetahRunner` on the
+/// same model with the same blinding seed — serialization is exact and
+/// `v₁v₂ = 1` with no rounding, so the transport must not perturb a bit.
+///
+/// Seeding: recovery requantization rounds exact-tie values toward the
+/// blind's sign, so bit-exactness is a *per-seed* property. With the pool
+/// disabled, the two sessions get engine seeds `{seed, seed+1}` (arrival
+/// order unknown), so each client must match one of the two seed-matched
+/// references.
+#[test]
+fn secure_serving_two_concurrent_sessions_bit_exact() {
+    let ctx = serve::leak_context(Params::default_params());
+    let plan = ScalePlan::default_plan();
+    let mut net = Network {
+        name: "secure-e2e".into(),
+        input_shape: (1, 6, 6),
+        layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+    };
+    net.init_weights(2024);
+    let base_seed = 7u64;
+
+    // Per-client inputs.
+    let inputs: Vec<Vec<Tensor>> = (0..2)
+        .map(|c| {
+            let mut rng = SplitMix64::new(600 + c as u64);
+            (0..2)
+                .map(|_| {
+                    Tensor::from_vec(
+                        (0..36).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+                        1,
+                        6,
+                        6,
+                    )
+                })
+                .collect()
+        })
+        .collect();
+
+    // In-process references for both possible engine seeds.
+    let expected: Vec<Vec<Vec<Vec<f64>>>> = (0..2u64)
+        .map(|s| {
+            let mut runner = CheetahRunner::new(ctx, net.clone(), plan, 0.0, base_seed + s);
+            runner.run_offline();
+            inputs
+                .iter()
+                .map(|qs| qs.iter().map(|q| runner.infer(q).logits).collect())
+                .collect()
+        })
+        .collect();
+
+    let server = SecureServer::serve(
+        ctx,
+        net,
+        plan,
+        "127.0.0.1:0",
+        SecureConfig {
+            epsilon: 0.0,
+            workers: 2,
+            seed: Some(base_seed),
+            pool: PoolConfig::disabled(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr;
+
+    let mut threads = Vec::new();
+    for (c, qs) in inputs.into_iter().enumerate() {
+        threads.push(std::thread::spawn(move || {
+            let mut client =
+                CheetahNetClient::connect(ctx, plan, &addr, 800 + c as u64).unwrap();
+            let logits: Vec<Vec<f64>> =
+                qs.iter().map(|q| client.infer(q).unwrap().logits).collect();
+            client.bye().unwrap();
+            logits
+        }));
+    }
+    for (c, t) in threads.into_iter().enumerate() {
+        let got = t.join().unwrap();
+        assert!(
+            got == expected[0][c] || got == expected[1][c],
+            "client {c}: secure-served logits diverge bitwise from both \
+             seed-matched in-process references\n got: {got:?}"
+        );
+    }
+    assert_eq!(server.metrics.summary().requests, 4);
     server.shutdown();
 }
 
