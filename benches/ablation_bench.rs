@@ -19,10 +19,10 @@ fn main() {
     // ---- 1. ring size ----
     let mut t = Table::new(&["n", "MultPlain", "per-slot (ns)", "AddPlain", "Encrypt", "Decrypt"]);
     for params in [Params::default_params(), Params::big_ring()] {
-        let ctx = Context::new(params);
+        let ctx = std::sync::Arc::new(Context::new(params));
         let mut rng = ChaCha20Rng::from_u64_seed(1);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 101 - 50).collect();
         let mut ct = enc.encrypt_slots(&vals, &mut rng);
         ev.to_ntt(&mut ct);
@@ -57,11 +57,11 @@ fn main() {
 
     // ---- 2. blinding overhead ----
     {
-        let ctx = Context::new(Params::default_params());
+        let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
         let mut rng = ChaCha20Rng::from_u64_seed(3);
         let mut srng = SplitMix64::new(4);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let n = ctx.params.n;
         let x: Vec<i64> = (0..n as i64).map(|_| srng.gen_i64_range(-256, 256)).collect();
         let k: Vec<i64> = (0..n as i64).map(|_| srng.gen_i64_range(-128, 128)).collect();

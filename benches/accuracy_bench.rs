@@ -14,7 +14,7 @@
 //! Run: `cargo bench --bench accuracy_bench [-- --samples N]`
 
 use cheetah::bench_util::{BenchArgs, Table};
-use cheetah::fixed::ScalePlan;
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::nn::{Network, NetworkArch};
 
 const EPS_GRID: [f64; 6] = [0.0, 0.05, 0.1, 0.25, 0.4, 0.5];
@@ -74,7 +74,6 @@ fn trained_rows(_t: &mut Table, _samples: usize) {
 fn main() {
     let args = BenchArgs::from_env();
     let samples = args.get_usize("--samples", 96); // multiple of batch 32
-    let plan = ScalePlan::default_plan();
 
     let mut t = Table::new(&[
         "network",
@@ -110,23 +109,38 @@ fn main() {
         // perturbation ‖noisy − clean‖/‖clean‖ — the quantity that governs
         // accuracy degradation once real margins exist. The paper's Fig. 7
         // shape (flat below ε ≈ 0.25) appears as sub-~10% perturbation.
-        let clean: Vec<Vec<i64>> =
-            inputs.iter().map(|x| net.forward_quantized(x, &plan, 0.0, 1)).collect();
+        // Both passes run through the unified engine API: the
+        // `PlaintextQuantized` backend is the protocol's fixed-point mirror
+        // (dequantization is linear, so the ratio is scale-invariant).
+        let mut clean_engine = EngineBuilder::new(Backend::PlaintextQuantized)
+            .network(net.clone())
+            .epsilon(0.0)
+            .build()
+            .expect("clean engine");
+        let clean: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|x| clean_engine.infer(x).expect("clean inference").logits)
+            .collect();
         let mut row =
             vec![format!("{} (proxy)", net.name), "rel. logit perturbation".into()];
         for &eps in &EPS_GRID {
+            let mut noisy_engine = EngineBuilder::new(Backend::PlaintextQuantized)
+                .network(net.clone())
+                .epsilon(eps)
+                .seed(99)
+                .build()
+                .expect("noisy engine");
             let mut rel_sum = 0f64;
             for (i, x) in inputs.iter().enumerate() {
-                let q = net.forward_quantized(x, &plan, eps, 99 + i as u64);
+                let q = noisy_engine.infer(x).expect("noisy inference").logits;
                 let num: f64 = q
                     .iter()
                     .zip(&clean[i])
-                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .map(|(&a, &b)| (a - b).powi(2))
                     .sum::<f64>()
                     .sqrt();
-                let den: f64 =
-                    clean[i].iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt();
-                rel_sum += num / den.max(1.0);
+                let den: f64 = clean[i].iter().map(|&b| b.powi(2)).sum::<f64>().sqrt();
+                rel_sum += num / den.max(1e-6);
             }
             row.push(format!("{:.1}%", 100.0 * rel_sum / n_inputs as f64));
         }

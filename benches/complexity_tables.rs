@@ -20,7 +20,7 @@ fn main() {
 
     // Cross-check: the analytic CH-MIMO counts equal the runner's measured
     // server counters on the same shape.
-    let ctx = Context::new(params);
+    let ctx = std::sync::Arc::new(Context::new(params));
     let plan = ScalePlan::default_plan();
     let mut net = Network {
         name: "xcheck".into(),
@@ -28,7 +28,7 @@ fn main() {
         layers: vec![Layer::conv(5, 5, 1, 2)],
     };
     net.init_weights(1);
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 2);
+    let mut runner = CheetahRunner::new(ctx, net, plan, 0.0, 2);
     runner.run_offline();
     let input = cheetah::nn::SyntheticDigits::new(28, 3).render(1).image;
     let rep = runner.infer(&input);

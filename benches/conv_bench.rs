@@ -28,12 +28,12 @@ struct Cfg {
 }
 
 /// One measurement row: (gazelle_ir_ms, gazelle_or_ms, cheetah_ms, bytes).
-fn run_config(ctx: &Context, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, u64) {
+fn run_config(ctx: &std::sync::Arc<Context>, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, u64) {
     let plan = ScalePlan::default_plan();
     let mut rng = ChaCha20Rng::from_u64_seed(3);
     let mut srng = SplitMix64::new(4);
-    let enc = Encryptor::new(ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    let enc = Encryptor::new(ctx.clone(), &mut rng);
+    let ev = Evaluator::new(ctx.clone());
 
     let mut layer = Layer::conv(cfg.c_o, cfg.r, 1, cfg.r / 2);
     layer.init_weights(cfg.c_i, cfg.hw, cfg.hw, &mut srng);
@@ -83,7 +83,7 @@ fn run_config(ctx: &Context, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, 
         layers: vec![Layer::conv(cfg.c_o, cfg.r, 1, cfg.r / 2)],
     };
     net.init_weights(5);
-    let mut runner = CheetahRunner::new(ctx, net, plan, 0.0, 6);
+    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 6);
     runner.run_offline();
     let input = cheetah::nn::Tensor::from_vec(
         (0..cfg.c_i * cfg.hw * cfg.hw).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
@@ -105,7 +105,7 @@ fn run_config(ctx: &Context, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, 
 fn main() {
     let args = BenchArgs::from_env();
     let params = Params::default_params();
-    let ctx = Context::new(params);
+    let ctx = std::sync::Arc::new(Context::new(params));
     let samples = args.get_usize("--samples", 3);
 
     // Paper Table 3 configs (spatial dims reduced by default so the

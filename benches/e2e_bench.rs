@@ -1,6 +1,9 @@
 //! End-to-end network benchmark — paper **Table 7** (online/offline time +
 //! communication for Network A, Network B, AlexNet, VGG-16, CHEETAH vs
-//! GAZELLE) and **Fig. 8** (accumulated per-layer breakdown, `--breakdown`).
+//! GAZELLE) and **Fig. 8** (accumulated per-layer breakdown, `--breakdown`)
+//! — both frameworks driven through the unified engine API
+//! (`cheetah::engine::EngineBuilder`), so each row is literally the same
+//! build→prepare→infer calls with a different [`Backend`].
 //!
 //! Default: scaled-down AlexNet/VGG so the GAZELLE rotation path fits one
 //! half-row per channel and the bench finishes in minutes; `--paper` runs
@@ -10,13 +13,12 @@
 //! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]`
 
 use cheetah::bench_util::{BenchArgs, Table};
-use cheetah::fixed::ScalePlan;
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
-use cheetah::protocol::cheetah::CheetahRunner;
-use cheetah::protocol::gazelle::GazelleRunner;
 use cheetah::util::fmt_bytes;
 use cheetah::util::rng::SplitMix64;
+use std::sync::Arc;
 
 fn input_for(net: &Network, seed: u64) -> Tensor {
     let (c, h, w) = net.input_shape;
@@ -31,13 +33,11 @@ fn input_for(net: &Network, seed: u64) -> Tensor {
 fn main() {
     let args = BenchArgs::from_env();
     let paper = args.has("--paper");
-    let ctx = Context::new(Params::default_params());
-    let plan = ScalePlan::default_plan();
+    let ctx = Arc::new(Context::new(Params::default_params()));
 
     // Spatial scale factors: GAZELLE needs h·w ≤ row_size (2048) per
-    // channel; CHEETAH has no such limit.
-    // GAZELLE's packed conv needs h·w ≤ 2048 per channel and ≥1 pixel after
-    // every pool: AlexNet at 0.2 (45×45), VGG-16 at 32/224 (32×32).
+    // channel and ≥1 pixel after every pool: AlexNet at 0.2 (45×45),
+    // VGG-16 at 32/224 (32×32). CHEETAH has no such limit.
     let nets: Vec<(NetworkArch, f64, f64)> = vec![
         // (arch, cheetah_scale, gazelle_scale)
         (NetworkArch::NetA, 1.0, 1.0),
@@ -62,57 +62,63 @@ fn main() {
         let net = Network::build_scaled(arch, 21, ch_scale);
         let name = net.name.clone();
         let input = input_for(&net, 22);
-        let mut runner = CheetahRunner::new(&ctx, net, plan, 0.05, 23);
-        let t_off0 = std::time::Instant::now();
-        runner.server.refresh_blinding();
-        let ch_offline_time = t_off0.elapsed();
-        let ch_offline_bytes = runner.run_offline();
-        let rep = runner.infer(&input);
-        let ch_online = rep.online_total();
+        let mut ch = EngineBuilder::new(Backend::Cheetah)
+            .network(net)
+            .context(ctx.clone())
+            .epsilon(0.05)
+            .seed(23)
+            .build()
+            .expect("cheetah engine");
+        let ch_prep = ch.prepare().expect("cheetah offline");
+        let ch_rep = ch.infer(&input).expect("cheetah inference");
+        let ch_online = ch_rep.online_total();
 
         // ---- GAZELLE (skip full-scale big nets; see header) ----
         let gz_net = Network::build_scaled(arch, 21, gz_scale);
         let gz_name = gz_net.name.clone();
         let gz_input = input_for(&gz_net, 22);
-        let t_gz_off = std::time::Instant::now();
-        let mut gz = GazelleRunner::new(&ctx, gz_net, plan, 24);
-        let gz_offline_time = t_gz_off.elapsed();
-        let gz_rep = gz.infer(&gz_input);
-        let gz_online = gz_rep.online_compute() + gz_rep.gc.garble_time; // garble counted offline by GAZELLE; keep separate below
-        let gz_online_compute = gz_rep.online_compute();
+        let mut gz = EngineBuilder::new(Backend::Gazelle)
+            .network(gz_net)
+            .context(ctx.clone())
+            .seed(24)
+            .build()
+            .expect("gazelle engine");
+        let gz_prep = gz.prepare().expect("gazelle offline");
+        let gz_rep = gz.infer(&gz_input).expect("gazelle inference");
+        let gz_online = gz_rep.online_total();
+        let gz_timing = gz_rep.timing.expect("gazelle timing");
 
         let scale_note = if (ch_scale - gz_scale).abs() > 1e-9 {
             format!(" [GZ @ {gz_name}]")
         } else {
             String::new()
         };
-        let _ = gz_online;
         t.row(&[
             format!("{name}{scale_note}"),
             "GAZELLE".into(),
-            format!("{:.0} ms", gz_online_compute.as_secs_f64() * 1e3),
+            format!("{:.0} ms", gz_online.as_secs_f64() * 1e3),
             format!(
                 "{:.0} ms (+garble {:.0} ms)",
-                gz_offline_time.as_secs_f64() * 1e3,
-                gz_rep.gc.garble_time.as_secs_f64() * 1e3
+                gz_prep.offline_time.as_secs_f64() * 1e3,
+                gz_timing.offline.as_secs_f64() * 1e3
             ),
-            fmt_bytes(gz_rep.online_bytes),
-            fmt_bytes(gz_rep.offline_bytes),
+            fmt_bytes(gz_rep.online_bytes()),
+            fmt_bytes(gz_prep.offline_bytes),
             String::new(),
-            gz_rep.ops.perm.to_string(),
+            gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
         ]);
         t.row(&[
             name.clone(),
             "CHEETAH".into(),
             format!("{:.0} ms", ch_online.as_secs_f64() * 1e3),
-            format!("{:.0} ms", ch_offline_time.as_secs_f64() * 1e3),
-            fmt_bytes(rep.online_bytes()),
-            fmt_bytes(ch_offline_bytes),
+            format!("{:.0} ms", ch_prep.offline_time.as_secs_f64() * 1e3),
+            fmt_bytes(ch_rep.online_bytes()),
+            fmt_bytes(ch_prep.offline_bytes),
             format!(
                 "{:.0}x",
-                gz_online_compute.as_secs_f64() / ch_online.as_secs_f64().max(1e-9)
+                gz_online.as_secs_f64() / ch_online.as_secs_f64().max(1e-9)
             ),
-            rep.total_ops().perm.to_string(),
+            ch_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
         ]);
 
         if args.has("--breakdown") && arch == NetworkArch::Vgg16 {
@@ -127,17 +133,17 @@ fn main() {
             let mut cum = 0.0f64;
             let mut cum_b = 0u64;
             let mut gz_cum = 0.0f64;
-            for (i, s) in rep.steps.iter().enumerate() {
-                cum += (s.server_online + s.client_time).as_secs_f64() * 1e3;
+            for (i, s) in ch_rep.steps.iter().enumerate() {
+                cum += (s.server_time + s.client_time).as_secs_f64() * 1e3;
                 cum_b += s.c2s_bytes + s.s2c_bytes;
                 gz_cum += gz_rep
-                    .per_step
+                    .steps
                     .get(i)
-                    .map(|d| d.as_secs_f64() * 1e3)
+                    .map(|g| g.server_time.as_secs_f64() * 1e3)
                     .unwrap_or(0.0);
                 bt.row(&[
                     s.name.clone(),
-                    format!("{:.1}", s.server_online.as_secs_f64() * 1e3),
+                    format!("{:.1}", s.server_time.as_secs_f64() * 1e3),
                     format!("{:.1}", s.client_time.as_secs_f64() * 1e3),
                     format!("{cum:.1}"),
                     fmt_bytes(cum_b),

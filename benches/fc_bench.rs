@@ -14,7 +14,7 @@ use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
 
 fn main() {
     let args = BenchArgs::from_env();
-    let ctx = Context::new(Params::default_params());
+    let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let samples = args.get_usize("--samples", 5);
 
@@ -34,8 +34,8 @@ fn main() {
     for (n_o, n_i) in shapes {
         let mut rng = ChaCha20Rng::from_u64_seed(7);
         let mut srng = SplitMix64::new(8);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let mut layer = Layer::fc(n_o);
         layer.init_weights(1, 1, n_i, &mut srng);
         let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
@@ -61,7 +61,7 @@ fn main() {
             layers: vec![Layer::fc(n_o)],
         };
         net.init_weights(9);
-        let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 10);
+        let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 10);
         runner.run_offline();
         let input = cheetah::nn::Tensor::from_flat(
             (0..n_i).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),

@@ -11,10 +11,10 @@ use std::time::Duration;
 fn main() {
     let args = BenchArgs::from_env();
     let params = if args.has("--big-ring") { Params::big_ring() } else { Params::default_params() };
-    let ctx = Context::new(params);
+    let ctx = std::sync::Arc::new(Context::new(params));
     let mut rng = ChaCha20Rng::from_u64_seed(1);
-    let enc = Encryptor::new(&ctx, &mut rng);
-    let ev = Evaluator::new(&ctx);
+    let enc = Encryptor::new(ctx.clone(), &mut rng);
+    let ev = Evaluator::new(ctx.clone());
     let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
 
     let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 251 - 125).collect();

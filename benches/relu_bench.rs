@@ -38,7 +38,7 @@ fn gc_cost(relu: &GcRelu, dim: usize, p: u64) -> (f64, f64, u64, u64) {
 /// per output-indexed ciphertext under the server's key — plus the fresh
 /// share subtraction; one-way communication of the recovery ciphertexts.
 /// (Decrypt + block-sum is part of the *linear* benchmark, Table 3/4.)
-fn cheetah_cost(ctx: &Context, dim: usize) -> (f64, u64) {
+fn cheetah_cost(ctx: &std::sync::Arc<Context>, dim: usize) -> (f64, u64) {
     use cheetah::bench_util::time_fn;
     use cheetah::phe::serial::ciphertext_bytes;
     use cheetah::phe::{Encryptor, Evaluator};
@@ -47,8 +47,8 @@ fn cheetah_cost(ctx: &Context, dim: usize) -> (f64, u64) {
     let plan = ScalePlan::default_plan();
     let mut rng = ChaCha20Rng::from_u64_seed(21);
     let mut srng = SplitMix64::new(22);
-    let server_enc = Encryptor::new(ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    let server_enc = Encryptor::new(ctx.clone(), &mut rng);
+    let ev = Evaluator::new(ctx.clone());
     let n = ctx.params.n;
     let p = ctx.params.p;
     let n_cts = dim.div_ceil(n);
@@ -102,7 +102,7 @@ fn cheetah_cost(ctx: &Context, dim: usize) -> (f64, u64) {
 
 fn main() {
     let args = BenchArgs::from_env();
-    let ctx = Context::new(Params::default_params());
+    let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
     let relu = GcRelu::new(ctx.params.p, ScalePlan::default_plan().k.frac_bits as usize);
 
     let mut t = Table::new(&[

@@ -2,9 +2,9 @@
 //! function of concurrent session count and offline blinding-pool depth.
 //!
 //! Each cell starts a fresh `SecureServer` on loopback, connects N
-//! concurrent `CheetahNetClient`s (each session setup pays handshake +
-//! offline indicator transfer — or just the transfer when the pool is
-//! warm), runs Q private inferences per session, and reports:
+//! concurrent `Backend::CheetahNet` engines (each session's `prepare()`
+//! pays handshake + offline indicator transfer — or just the transfer when
+//! the pool is warm), runs Q private inferences per session, and reports:
 //!
 //! * session-setup latency (pool off vs pool on — the offline/online split),
 //! * per-query online latency (server-side p50 over completed queries),
@@ -17,11 +17,13 @@
 //! netA` runs the paper's Network A (28×28) at realistic cost.
 
 use cheetah::bench_util::{BenchArgs, Table};
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
-use cheetah::phe::Params;
-use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
+use cheetah::phe::{Context, Params};
+use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
 use cheetah::util::rng::SplitMix64;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 fn bench_net(name: &str) -> Network {
@@ -64,7 +66,7 @@ fn main() {
     let depth = args.get_usize("--depth", max_sessions);
     let net_name = args.get("--net").unwrap_or("small").to_string();
 
-    let ctx = serve::leak_context(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let net = bench_net(&net_name);
     println!(
@@ -92,7 +94,7 @@ fn main() {
                 PoolConfig::disabled()
             };
             let cfg = SecureConfig { epsilon: 0.0, workers: sessions.min(4), pool, ..Default::default() };
-            let server = SecureServer::serve(ctx, net.clone(), plan, "127.0.0.1:0", cfg)
+            let server = SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
                 .expect("bind secure server");
             if pool_on {
                 // Warm the bank so the measurement sees the offline/online
@@ -106,16 +108,24 @@ fn main() {
             let mut handles = Vec::new();
             for s in 0..sessions {
                 let input = input.clone();
+                let ctx = ctx.clone();
                 handles.push(std::thread::spawn(move || {
+                    // Each session is a `CheetahNet` engine pointed at the
+                    // shared server; `prepare()` is the measured setup
+                    // (handshake + offline indicator transfer).
+                    let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                        .context(ctx)
+                        .plan(plan)
+                        .seed(9000 + s as u64)
+                        .connect_to(addr)
+                        .build()
+                        .expect("secure engine");
                     let t_setup = Instant::now();
-                    let mut client =
-                        CheetahNetClient::connect(ctx, plan, &addr, 9000 + s as u64)
-                            .expect("secure session setup");
+                    engine.prepare().expect("secure session setup");
                     let setup = t_setup.elapsed();
                     for _ in 0..queries {
-                        client.infer(&input).expect("secure inference");
+                        engine.infer(&input).expect("secure inference");
                     }
-                    client.bye().ok();
                     setup
                 }));
             }

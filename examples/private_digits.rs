@@ -1,28 +1,34 @@
 //! Private digit classification with a *trained* model: loads the weights
-//! trained by `make artifacts` (JAX, build-time), serves them through the
-//! full CHEETAH protocol, and reports accuracy + per-query cost — showing
-//! the paper's "no accuracy loss" property on a real (small) workload.
+//! trained by `make artifacts`, serves them through the full CHEETAH
+//! protocol via the unified engine API, and reports accuracy + per-query
+//! cost against the plaintext float engine — showing the paper's "no
+//! accuracy loss" property on a real (small) workload.
 //!
 //! Run: `make artifacts && cargo run --release --example private_digits [-- N]`
 
-use cheetah::fixed::ScalePlan;
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::nn::SyntheticDigits;
-use cheetah::phe::{Context, Params};
-use cheetah::protocol::cheetah::CheetahRunner;
 use cheetah::runtime::load_trained_network;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n_queries: usize =
         std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(20);
-    let ctx = Context::new(Params::default_params());
-    let plan = ScalePlan::default_plan();
 
     let net = load_trained_network("artifacts", "netA")?;
     println!("loaded {} ({} params)", net.name, net.num_params());
-    let plain = net.clone();
 
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.1, 7);
-    runner.run_offline();
+    let mut private = EngineBuilder::new(Backend::Cheetah)
+        .network(net.clone())
+        .epsilon(0.1)
+        .seed(7)
+        .build()?;
+    let mut plain = EngineBuilder::new(Backend::PlaintextFloat).network(net).build()?;
+    let prepared = private.prepare()?;
+    println!(
+        "offline phase: {} in {}",
+        cheetah::util::fmt_bytes(prepared.offline_bytes),
+        cheetah::util::fmt_duration(prepared.offline_time)
+    );
 
     let mut gen = SyntheticDigits::new(28, 4242);
     let mut private_correct = 0;
@@ -30,11 +36,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut agree = 0;
     let mut total_online = std::time::Duration::ZERO;
     for s in gen.batch(n_queries) {
-        let rep = runner.infer(&s.image);
-        let plain_pred = plain.forward(&s.image).argmax();
+        let rep = private.infer(&s.image)?;
+        let plain_rep = plain.infer(&s.image)?;
         private_correct += (rep.argmax == s.label) as usize;
-        plain_correct += (plain_pred == s.label) as usize;
-        agree += (rep.argmax == plain_pred) as usize;
+        plain_correct += (plain_rep.argmax == s.label) as usize;
+        agree += (rep.argmax == plain_rep.argmax) as usize;
         total_online += rep.online_total();
     }
     println!(

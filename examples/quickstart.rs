@@ -1,46 +1,67 @@
-//! Quickstart: private inference on a 2-layer CNN in ~40 lines.
+//! Quickstart: one digit, every backend, one comparison table.
 //!
-//! The client's digit never leaves its side unencrypted; the server's
-//! weights never leave its side at all; and the linear layers use **zero**
-//! ciphertext permutations (the paper's contribution).
+//! The unified engine API makes "same input, N backends" a five-line
+//! program: pick a [`Backend`], hand the builder a network, call `infer`.
+//! Under the hood that spans a float forward pass, the fixed-point protocol
+//! mirror, the full CHEETAH protocol (in-process *and* over a real TCP
+//! socket), and the GAZELLE baseline — and the table shows the paper's
+//! headline: CHEETAH pays **zero** ciphertext permutations where GAZELLE
+//! pays hundreds.
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use cheetah::fixed::ScalePlan;
+use cheetah::engine::{comparison_table, Backend, EngineBuilder, InferenceEngine};
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
 use cheetah::phe::{Context, Params};
-use cheetah::protocol::cheetah::CheetahRunner;
+use std::sync::Arc;
 
 fn main() {
-    // Shared public parameters (ring degree, moduli, fixed-point plan).
-    let ctx = Context::new(Params::default_params());
-    let plan = ScalePlan::default_plan();
-
-    // The server's model: Network A (1 conv + 2 FC, the paper's §5.2).
-    // Seeded random weights — this example demonstrates the protocol;
-    // `examples/private_digits.rs` runs the trained model.
+    // The server's model: Network A (1 conv + 2 FC, the paper's §5.2) with
+    // seeded random weights; `examples/private_digits.rs` runs the trained
+    // model. One shared PHE context serves every cryptographic backend.
     let net = Network::build(NetworkArch::NetA, 7);
+    let ctx = Arc::new(Context::new(Params::default_params()));
     println!("model: {} ({} params, random weights)", net.name, net.num_params());
-
-    // Both parties (in-process here; examples/serve_mlaas.rs splits them
-    // over TCP). ε = 0.1 is the paper's safe obscuring-noise bound.
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.1, 42);
-    let offline_bytes = runner.run_offline();
-    println!("offline: {} of indicator ciphertexts shipped", cheetah::util::fmt_bytes(offline_bytes));
 
     // The client's private digit.
     let sample = SyntheticDigits::new(28, 99).render(5);
     println!("client's secret input: a handwritten '{}'", sample.label);
 
-    let report = runner.infer(&sample.image);
+    // Same input, five backends, one unified report each.
+    let backends = [
+        Backend::PlaintextFloat,
+        Backend::PlaintextQuantized,
+        Backend::Cheetah,
+        Backend::Gazelle,
+        Backend::CheetahNet, // real TCP via a self-hosted SecureServer
+    ];
+    let mut reports = Vec::new();
+    for backend in backends {
+        let mut engine = EngineBuilder::new(backend)
+            .network(net.clone())
+            .context(ctx.clone())
+            .epsilon(0.0) // exact inference; 0.1 is the paper's safe obscuring bound
+            .seed(42)
+            .build()
+            .expect("engine build");
+        reports.push(engine.infer(&sample.image).expect("inference"));
+    }
+
+    println!("{}", comparison_table("same digit through every backend", &reports));
+
+    // The paper's headline, checked live: CHEETAH is permutation-free,
+    // the GAZELLE baseline is not — and every backend agrees on the digit.
+    let by_backend =
+        |b: Backend| reports.iter().find(|r| r.backend == b).expect("backend was run");
+    let cheetah_rep = by_backend(Backend::Cheetah);
+    let gazelle_rep = by_backend(Backend::Gazelle);
+    assert_eq!(cheetah_rep.ops.unwrap().perm, 0, "CHEETAH is permutation-free");
+    assert!(gazelle_rep.ops.unwrap().perm > 0, "GAZELLE pays permutations");
+    let agree = reports.iter().all(|r| r.argmax == reports[0].argmax);
     println!(
-        "\nprediction: {}   (online: {} compute + {} wire, {} transferred, {} Perms)",
-        report.argmax,
-        cheetah::util::fmt_duration(report.online_compute()),
-        cheetah::util::fmt_duration(report.wire_time),
-        cheetah::util::fmt_bytes(report.online_bytes()),
-        report.total_ops().perm,
+        "prediction: {}{} (CHEETAH: 0 Perms, GAZELLE: {} Perms)",
+        reports[0].argmax,
+        if agree { " on every backend" } else { " (backends split on a marginal digit)" },
+        gazelle_rep.ops.unwrap().perm
     );
-    assert_eq!(report.total_ops().perm, 0, "CHEETAH is permutation-free");
-    println!("logits: {:?}", report.logits.iter().map(|v| (v * 100.0).round() / 100.0).collect::<Vec<_>>());
 }

@@ -5,7 +5,8 @@
 //!    client load, with dynamic batching and latency percentiles, and
 //! 2. the **secure** path: the full CHEETAH protocol served by
 //!    `serve::SecureServer` with a warm blinding pool, driven by concurrent
-//!    `CheetahNetClient`s over real sockets —
+//!    `Backend::CheetahNet` engines (the unified engine API) over real
+//!    sockets —
 //!
 //! then reports the privacy overhead measured socket-to-socket.
 //!
@@ -15,11 +16,13 @@
 //! Run: `cargo run --release --example serve_mlaas [-- N_REQS N_CLIENTS]`
 
 use cheetah::coordinator::{BatchPolicy, Client, Server};
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
-use cheetah::phe::Params;
+use cheetah::phe::{Context, Params};
 use cheetah::runtime::load_trained_network;
-use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
+use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -76,9 +79,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     server.shutdown();
 
-    // ---- secure path: CHEETAH protocol over real sockets ----
+    // ---- secure path: CHEETAH protocol over real sockets, driven
+    // through the unified engine API (`Backend::CheetahNet`) ----
     let plan = ScalePlan::default_plan();
-    let ctx = serve::leak_context(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let n_secure_clients = n_clients.clamp(1, 4);
     let queries_per_client = (10usize.min(n_reqs) / n_secure_clients).max(1);
     let cfg = SecureConfig {
@@ -92,26 +96,34 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
          {queries_per_client} queries (pool depth {})...",
         cfg.pool.depth
     );
-    let secure = SecureServer::serve(ctx, net, plan, "127.0.0.1:0", cfg)?;
+    let secure = SecureServer::serve(ctx.clone(), net, plan, "127.0.0.1:0", cfg)?;
     let secure_addr = secure.addr;
 
     let t1 = Instant::now();
     let mut handles = Vec::new();
     for c in 0..n_secure_clients {
+        let ctx = ctx.clone();
         handles.push(std::thread::spawn(move || {
+            let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                .context(ctx)
+                .plan(plan)
+                .seed(31337 + c as u64)
+                .connect_to(secure_addr)
+                .build()
+                .unwrap();
+            // prepare() is the session setup: handshake + offline
+            // indicator transfer over the socket.
             let t_setup = Instant::now();
-            let mut client =
-                CheetahNetClient::connect(ctx, plan, &secure_addr, 31337 + c as u64).unwrap();
+            engine.prepare().unwrap();
             let setup = t_setup.elapsed();
             let mut gen = SyntheticDigits::new(28, 5000 + c as u64);
             let mut correct = 0usize;
             let mut bytes = 0u64;
             for s in gen.batch(queries_per_client) {
-                let rep = client.infer(&s.image).unwrap();
+                let rep = engine.infer(&s.image).unwrap();
                 correct += (rep.argmax == s.label) as usize;
-                bytes += rep.c2s_bytes + rep.s2c_bytes;
+                bytes += rep.online_bytes();
             }
-            client.bye().unwrap();
             (correct, setup, bytes)
         }));
     }

@@ -89,7 +89,9 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn print(&self, title: &str) {
+    /// Render the table (with a title banner) to a string — used by
+    /// [`crate::engine::EngineReport`] comparisons as well as `print`.
+    pub fn render(&self, title: &str) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -97,8 +99,6 @@ impl Table {
             }
         }
         let total: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
-        println!("\n{title}");
-        println!("{}", "=".repeat(total.min(120)));
         let fmt_row = |cells: &[String]| {
             let mut line = String::from("|");
             for (i, c) in cells.iter().enumerate() {
@@ -106,11 +106,19 @@ impl Table {
             }
             line
         };
-        println!("{}", fmt_row(&self.headers));
-        println!("{}", "-".repeat(total.min(120)));
+        let mut out = String::new();
+        out.push_str(&format!("\n{title}\n"));
+        out.push_str(&format!("{}\n", "=".repeat(total.min(120))));
+        out.push_str(&format!("{}\n", fmt_row(&self.headers)));
+        out.push_str(&format!("{}\n", "-".repeat(total.min(120))));
         for row in &self.rows {
-            println!("{}", fmt_row(row));
+            out.push_str(&format!("{}\n", fmt_row(row)));
         }
+        out
+    }
+
+    pub fn print(&self, title: &str) {
+        print!("{}", self.render(title));
     }
 }
 

@@ -9,6 +9,7 @@
 
 use super::batcher::{spawn_batcher, BatcherHandle, BatchPolicy};
 use super::metrics::Metrics;
+use crate::engine::InferenceEngine;
 use crate::nn::{Network, Tensor};
 use crate::protocol::transport::{read_frame, write_frame};
 use std::io::Write as _;
@@ -163,8 +164,24 @@ pub struct Server {
 impl Server {
     /// Serve `net` (plaintext scoring path) on `addr` with the given batch
     /// policy; returns once the listener is bound (serving continues on
-    /// background threads).
+    /// background threads). Convenience wrapper over [`Server::serve_engine`]
+    /// with a [`crate::engine::PlaintextFloatEngine`] scorer.
     pub fn serve(net: Network, addr: &str, policy: BatchPolicy) -> std::io::Result<Server> {
+        let shape = net.input_shape;
+        let engine = Box::new(crate::engine::PlaintextFloatEngine::new(net));
+        Self::serve_engine(engine, shape, addr, policy)
+    }
+
+    /// Serve any [`crate::engine::InferenceEngine`] behind the dynamic
+    /// batcher — the scoring path is backend-agnostic: a quantized mirror,
+    /// an in-process CHEETAH deployment, or a networked client all drop in.
+    /// `input_shape` describes the flat pixel payload clients send.
+    pub fn serve_engine(
+        mut engine: Box<dyn InferenceEngine>,
+        input_shape: (usize, usize, usize),
+        addr: &str,
+        policy: BatchPolicy,
+    ) -> std::io::Result<Server> {
         let listener = StoppableListener::bind(addr)?;
         let local = listener.addr;
         let metrics = Arc::new(Metrics::new());
@@ -172,16 +189,19 @@ impl Server {
         let sessions = Arc::new(AtomicU64::new(0));
         let live_sessions = LiveConns::new();
 
-        let shape = net.input_shape;
-        let scorer_net = net;
+        let (c, h, w) = input_shape;
         let handle = spawn_batcher(policy, metrics.clone(), move |batch| {
-            batch
-                .iter()
-                .map(|flat| {
-                    let t = Tensor::from_vec(flat.clone(), shape.0, shape.1, shape.2);
-                    scorer_net.forward(&t).data
-                })
-                .collect()
+            let tensors: Vec<Tensor> =
+                batch.iter().map(|flat| Tensor::from_vec(flat.clone(), c, h, w)).collect();
+            match engine.infer_batch(&tensors) {
+                Ok(reps) => reps.into_iter().map(|r| r.logits).collect(),
+                Err(e) => {
+                    // Score path must never kill the batcher: reply with
+                    // empty logits (argmax 0) and keep serving.
+                    eprintln!("scoring engine failed: {e}");
+                    batch.iter().map(|_| Vec::new()).collect()
+                }
+            }
         });
 
         let accept_thread = {
@@ -240,6 +260,13 @@ fn handle_session(
                     .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
                     .collect();
                 let resp = batcher.infer_blocking(pixels);
+                if resp.logits.is_empty() {
+                    // The scoring engine failed for this batch (see
+                    // serve_engine); the wire protocol has no error tag, so
+                    // drop the connection rather than reply with a fake
+                    // class-0 prediction.
+                    return Ok(());
+                }
                 let mut out = Vec::with_capacity(4 + resp.logits.len() * 8);
                 out.extend_from_slice(&(resp.argmax as u32).to_le_bytes());
                 for l in &resp.logits {
@@ -327,6 +354,32 @@ mod tests {
         client.bye().unwrap();
         server.shutdown();
         assert!(server.metrics.summary().requests >= 6);
+    }
+
+    /// The scoring path is engine-generic: a quantized-mirror backend drops
+    /// in behind the same batcher + wire protocol.
+    #[test]
+    fn serve_engine_scores_through_quantized_backend() {
+        use crate::engine::{Backend, EngineBuilder};
+        use crate::fixed::ScalePlan;
+        let net = Network::build(NetworkArch::NetA, 5);
+        let shape = net.input_shape;
+        let engine = EngineBuilder::new(Backend::PlaintextQuantized)
+            .network(net.clone())
+            .build()
+            .unwrap();
+        let server =
+            Server::serve_engine(engine, shape, "127.0.0.1:0", BatchPolicy::default()).unwrap();
+        let sample = SyntheticDigits::new(28, 17).render(3);
+        let mut client = Client::connect(&server.addr).unwrap();
+        let (argmax, logits) = client.infer(&sample.image.data).unwrap();
+        assert_eq!(logits.len(), 10);
+        // Oracle: the quantized mirror itself (ε = 0 is seed-independent).
+        let q = net.forward_quantized(&sample.image, &ScalePlan::default_plan(), 0.0, 0);
+        let want = q.iter().enumerate().max_by_key(|(_, &v)| v).unwrap().0;
+        assert_eq!(argmax, want);
+        client.bye().unwrap();
+        server.shutdown();
     }
 
     /// Shutdown must join the accept/session threads and close live

@@ -1,0 +1,419 @@
+//! The five concrete engines behind [`super::EngineBuilder`].
+//!
+//! Each adapts one pre-existing deployment type onto the
+//! [`InferenceEngine`] trait and maps its native report into the unified
+//! [`EngineReport`]:
+//!
+//! | engine | wraps | sections filled |
+//! |---|---|---|
+//! | [`PlaintextFloatEngine`] | `Network::forward` | timing |
+//! | [`PlaintextQuantizedEngine`] | `Network::forward_quantized` | timing |
+//! | [`CheetahEngine`] | `CheetahRunner` (in-process) | timing, traffic, ops, steps |
+//! | [`GazelleEngine`] | `GazelleRunner` (in-process) | timing, traffic, ops, steps |
+//! | [`CheetahNetEngine`] | `CheetahNetClient` over TCP | timing, traffic |
+//!
+//! `prepare()` is the offline phase everywhere: CHEETAH blinding + indicator
+//! encryption, GAZELLE rotation-key generation, or the networked handshake +
+//! indicator transfer. `infer()` auto-prepares on first use.
+
+use super::report::{EngineReport, StepReport, Timing, Traffic};
+use super::{Backend, EngineError, EngineResult, InferenceEngine, Prepared};
+use crate::fixed::ScalePlan;
+use crate::nn::{Network, Tensor};
+use crate::phe::Context;
+use crate::protocol::cheetah::CheetahRunner;
+use crate::protocol::gazelle::GazelleRunner;
+use crate::protocol::transport::LinkModel;
+use crate::serve::{CheetahNetClient, SecureConfig, SecureServer};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------------
+// Plaintext backends
+// ---------------------------------------------------------------------------
+
+/// Float reference inference (the trusted-cloud baseline scorer).
+pub struct PlaintextFloatEngine {
+    net: Network,
+    last: Option<EngineReport>,
+}
+
+impl PlaintextFloatEngine {
+    pub fn new(net: Network) -> Self {
+        Self { net, last: None }
+    }
+}
+
+impl InferenceEngine for PlaintextFloatEngine {
+    fn backend(&self) -> Backend {
+        Backend::PlaintextFloat
+    }
+
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        Ok(Prepared::default())
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        let t0 = Instant::now();
+        let out = self.net.forward(input);
+        let mut rep = EngineReport::bare(self.backend(), out.argmax(), out.data);
+        rep.timing = Some(Timing { online_compute: t0.elapsed(), ..Default::default() });
+        self.last = Some(rep.clone());
+        Ok(rep)
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.last.as_ref()
+    }
+}
+
+/// Fixed-point reference with the paper's per-output noise `δ ~ U[-ε, ε]` —
+/// the plaintext mirror of the private protocol (same quantization plan).
+pub struct PlaintextQuantizedEngine {
+    net: Network,
+    plan: ScalePlan,
+    epsilon: f64,
+    /// Per-query noise seed; incremented each inference so repeated noisy
+    /// queries draw fresh δ (ε = 0 ignores it entirely).
+    noise_seed: u64,
+    last: Option<EngineReport>,
+}
+
+impl PlaintextQuantizedEngine {
+    pub fn new(net: Network, plan: ScalePlan, epsilon: f64, noise_seed: u64) -> Self {
+        Self { net, plan, epsilon, noise_seed, last: None }
+    }
+}
+
+impl InferenceEngine for PlaintextQuantizedEngine {
+    fn backend(&self) -> Backend {
+        Backend::PlaintextQuantized
+    }
+
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        Ok(Prepared::default())
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        let t0 = Instant::now();
+        let q = self.net.forward_quantized(input, &self.plan, self.epsilon, self.noise_seed);
+        self.noise_seed = self.noise_seed.wrapping_add(1);
+        let elapsed = t0.elapsed();
+        // Same tie-breaking as the protocol clients: last maximum wins.
+        let argmax = q.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0);
+        let logits = q.iter().map(|&v| self.plan.x.dequantize(v)).collect();
+        let mut rep = EngineReport::bare(self.backend(), argmax, logits);
+        rep.timing = Some(Timing { online_compute: elapsed, ..Default::default() });
+        self.last = Some(rep.clone());
+        Ok(rep)
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.last.as_ref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CHEETAH (in-process)
+// ---------------------------------------------------------------------------
+
+/// In-process CHEETAH deployment (both parties + metered link).
+pub struct CheetahEngine {
+    ctx: Arc<Context>,
+    net: Network,
+    plan: ScalePlan,
+    epsilon: f64,
+    seed: u64,
+    link: LinkModel,
+    runner: Option<CheetahRunner>,
+    offline_bytes: u64,
+    last: Option<EngineReport>,
+}
+
+impl CheetahEngine {
+    pub fn new(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+        link: LinkModel,
+    ) -> Self {
+        Self { ctx, net, plan, epsilon, seed, link, runner: None, offline_bytes: 0, last: None }
+    }
+}
+
+impl InferenceEngine for CheetahEngine {
+    fn backend(&self) -> Backend {
+        Backend::Cheetah
+    }
+
+    /// The offline phase: key generation, blinding material, indicator
+    /// encryption, and the (modeled) indicator shipment. Calling it again
+    /// rebuilds the deployment from the same seed (deterministic).
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        let t0 = Instant::now();
+        let mut runner = CheetahRunner::with_link(
+            self.ctx.clone(),
+            self.net.clone(),
+            self.plan,
+            self.epsilon,
+            self.seed,
+            self.link,
+        );
+        self.offline_bytes = runner.run_offline();
+        self.runner = Some(runner);
+        Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        if self.runner.is_none() {
+            self.prepare()?;
+        }
+        let offline_bytes = self.offline_bytes;
+        let runner = self.runner.as_mut().expect("prepared above");
+        let r = runner.infer(input);
+        let steps: Vec<StepReport> = r
+            .steps
+            .iter()
+            .map(|s| StepReport {
+                name: s.name.clone(),
+                server_time: s.server_online,
+                client_time: s.client_time,
+                c2s_bytes: s.c2s_bytes,
+                s2c_bytes: s.s2c_bytes,
+            })
+            .collect();
+        let mut rep = EngineReport::bare(Backend::Cheetah, r.argmax, r.logits.clone());
+        rep.timing = Some(Timing {
+            online_compute: r.online_compute(),
+            wire: r.wire_time,
+            offline: r.steps.iter().map(|s| s.server_offline).sum(),
+        });
+        rep.traffic = Some(Traffic {
+            c2s: r.steps.iter().map(|s| s.c2s_bytes).sum(),
+            s2c: r.steps.iter().map(|s| s.s2c_bytes).sum(),
+            offline: offline_bytes,
+            rounds: (2 * r.steps.len() as u64).saturating_sub(1),
+        });
+        rep.ops = Some(r.total_ops());
+        rep.steps = steps;
+        self.last = Some(rep.clone());
+        Ok(rep)
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.last.as_ref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GAZELLE (in-process baseline)
+// ---------------------------------------------------------------------------
+
+/// In-process GAZELLE baseline deployment.
+pub struct GazelleEngine {
+    ctx: Arc<Context>,
+    net: Network,
+    plan: ScalePlan,
+    seed: u64,
+    runner: Option<GazelleRunner>,
+    offline_bytes: u64,
+    last: Option<EngineReport>,
+}
+
+impl GazelleEngine {
+    pub fn new(ctx: Arc<Context>, net: Network, plan: ScalePlan, seed: u64) -> Self {
+        Self { ctx, net, plan, seed, runner: None, offline_bytes: 0, last: None }
+    }
+}
+
+impl InferenceEngine for GazelleEngine {
+    fn backend(&self) -> Backend {
+        Backend::Gazelle
+    }
+
+    /// The offline phase: client key generation + rotation (Galois) keys
+    /// for every step geometry; offline bytes additionally count the
+    /// per-ReLU garbled tables.
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        let t0 = Instant::now();
+        let runner = GazelleRunner::new(self.ctx.clone(), self.net.clone(), self.plan, self.seed);
+        self.offline_bytes = runner.offline_bytes();
+        self.runner = Some(runner);
+        Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        if self.runner.is_none() {
+            self.prepare()?;
+        }
+        let offline_bytes = self.offline_bytes;
+        let runner = self.runner.as_mut().expect("prepared above");
+        let r = runner.infer(input);
+        let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+        rep.timing = Some(Timing {
+            online_compute: r.online_compute(),
+            wire: Duration::ZERO,
+            offline: r.gc.garble_time,
+        });
+        rep.traffic = Some(Traffic {
+            c2s: r.c2s_bytes,
+            s2c: r.s2c_bytes,
+            offline: offline_bytes,
+            rounds: 0,
+        });
+        rep.ops = Some(r.ops);
+        rep.steps = r
+            .per_step
+            .iter()
+            .enumerate()
+            .map(|(i, &d)| StepReport {
+                name: format!("step{i}"),
+                server_time: d,
+                ..Default::default()
+            })
+            .collect();
+        self.last = Some(rep.clone());
+        Ok(rep)
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.last.as_ref()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CHEETAH over TCP (the serve subsystem)
+// ---------------------------------------------------------------------------
+
+/// Domain separator for the networked client's seed (ASCII "CLIENTSD"):
+/// keeps the client RNG stream disjoint from the server-side session
+/// engine seeds `seed, seed+1, …` handed out by the blinding pool.
+const CLIENT_SEED_DOMAIN: u64 = 0x434c_4945_4e54_5344;
+
+/// Where the networked engine finds its server.
+pub enum NetTarget {
+    /// Connect to an already-running [`SecureServer`] (or remote process).
+    Remote(SocketAddr),
+    /// Self-host a [`SecureServer`] on loopback and connect to it — gives a
+    /// single builder call the full socket round trip.
+    SelfHosted { net: Network, cfg: SecureConfig },
+}
+
+/// CHEETAH over real sockets: a [`CheetahNetClient`] session, optionally
+/// backed by a self-hosted loopback [`SecureServer`].
+pub struct CheetahNetEngine {
+    ctx: Arc<Context>,
+    plan: ScalePlan,
+    seed: u64,
+    target: NetTarget,
+    server: Option<SecureServer>,
+    client: Option<CheetahNetClient>,
+    offline_bytes: u64,
+    last: Option<EngineReport>,
+}
+
+impl CheetahNetEngine {
+    pub fn new(ctx: Arc<Context>, plan: ScalePlan, seed: u64, target: NetTarget) -> Self {
+        Self {
+            ctx,
+            plan,
+            seed,
+            target,
+            server: None,
+            client: None,
+            offline_bytes: 0,
+            last: None,
+        }
+    }
+
+    /// The bound address of the self-hosted server (after `prepare`).
+    pub fn server_addr(&self) -> Option<SocketAddr> {
+        self.server.as_ref().map(|s| s.addr)
+    }
+}
+
+impl InferenceEngine for CheetahNetEngine {
+    fn backend(&self) -> Backend {
+        Backend::CheetahNet
+    }
+
+    /// The offline phase over the wire: TCP connect, handshake (parameter
+    /// fingerprint, architecture download) and indicator-ciphertext
+    /// transfer. Re-preparing opens a fresh session.
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        let t0 = Instant::now();
+        let addr = match &self.target {
+            NetTarget::Remote(a) => *a,
+            NetTarget::SelfHosted { net, cfg } => {
+                if self.server.is_none() {
+                    self.server = Some(SecureServer::serve(
+                        self.ctx.clone(),
+                        net.clone(),
+                        self.plan,
+                        "127.0.0.1:0",
+                        *cfg,
+                    )?);
+                }
+                self.server.as_ref().expect("just hosted").addr
+            }
+        };
+        if let Some(mut old) = self.client.take() {
+            old.close().ok();
+        }
+        // Client keys/shares from a domain-separated derivation of the
+        // seed — NOT `seed + k`: a self-hosted server hands its sessions
+        // engine seeds `seed, seed+1, …`, so a small additive offset would
+        // collide a later session's server RNG stream with the client's
+        // (identical secret keys ⇒ the client could unblind the weights).
+        let client_seed = self.seed ^ CLIENT_SEED_DOMAIN;
+        let client =
+            CheetahNetClient::connect(self.ctx.clone(), self.plan, &addr, client_seed)?;
+        self.offline_bytes = client.offline_bytes();
+        self.client = Some(client);
+        Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        if self.client.is_none() {
+            self.prepare()?;
+        }
+        let offline_bytes = self.offline_bytes;
+        let client = self.client.as_mut().expect("prepared above");
+        let r = client.infer(input)?;
+        let mut rep = EngineReport::bare(Backend::CheetahNet, r.argmax, r.logits.clone());
+        // Wall time over a real socket already includes wire time.
+        rep.timing =
+            Some(Timing { online_compute: r.wall, wire: Duration::ZERO, offline: Duration::ZERO });
+        rep.traffic = Some(Traffic {
+            c2s: r.c2s_bytes,
+            s2c: r.s2c_bytes,
+            offline: offline_bytes,
+            rounds: r.rounds,
+        });
+        self.last = Some(rep.clone());
+        Ok(rep)
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.last.as_ref()
+    }
+}
+
+impl Drop for CheetahNetEngine {
+    fn drop(&mut self) {
+        if let Some(mut c) = self.client.take() {
+            c.close().ok();
+        }
+        // A self-hosted server shuts itself down on drop.
+    }
+}
+
+// EngineError <- io::Error used by the networked backend.
+impl From<std::io::Error> for EngineError {
+    fn from(e: std::io::Error) -> Self {
+        EngineError::Io(e)
+    }
+}

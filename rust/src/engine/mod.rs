@@ -1,0 +1,421 @@
+//! The unified inference engine: **one build→infer surface over every
+//! backend** the repository implements.
+//!
+//! The paper's headline claim is comparative — CHEETAH vs GAZELLE vs
+//! plaintext on the same networks — so the crate's entry point is a single
+//! abstraction rather than four incompatible deployment types:
+//!
+//! ```no_run
+//! use cheetah::engine::{comparison_table, Backend, EngineBuilder, InferenceEngine};
+//! use cheetah::nn::{NetworkArch, SyntheticDigits};
+//!
+//! let input = SyntheticDigits::new(28, 99).render(5).image;
+//! let reports: Vec<_> = [Backend::PlaintextQuantized, Backend::Cheetah, Backend::Gazelle]
+//!     .into_iter()
+//!     .map(|b| {
+//!         let mut e = EngineBuilder::new(b).arch(NetworkArch::NetA).seed(42).build().unwrap();
+//!         e.infer(&input).unwrap()
+//!     })
+//!     .collect();
+//! println!("{}", comparison_table("same input, three backends", &reports));
+//! ```
+//!
+//! * [`InferenceEngine`] — `prepare` (the offline phase), `infer`,
+//!   `infer_batch`, `report`,
+//! * [`EngineReport`] — argmax/logits plus optional timing / traffic /
+//!   op-count sections that every native report type maps into,
+//! * [`Backend`] + [`EngineBuilder`] — pick a backend, give it a network
+//!   (by [`NetworkArch`] or a custom [`Network`]), a [`ScalePlan`], ε,
+//!   seeds, a [`LinkModel`], and transport options; get a boxed engine.
+//!
+//! Ownership: everything shares one [`Arc<Context>`] — engines move freely
+//! across threads (the coordinator's batcher, serve workers) with no
+//! lifetime parameters anywhere in the public API.
+
+pub mod backends;
+pub mod report;
+
+pub use backends::{
+    CheetahEngine, CheetahNetEngine, GazelleEngine, NetTarget, PlaintextFloatEngine,
+    PlaintextQuantizedEngine,
+};
+pub use report::{comparison_table, EngineReport, StepReport, Timing, Traffic};
+
+use crate::fixed::ScalePlan;
+use crate::nn::{Network, NetworkArch, Tensor};
+use crate::phe::{Context, Params};
+use crate::protocol::transport::LinkModel;
+use crate::serve::{PoolConfig, SecureConfig};
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// The inference backends the builder can construct.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Float reference forward pass (trusted-cloud baseline).
+    PlaintextFloat,
+    /// Fixed-point forward pass with the paper's δ-noise (protocol mirror).
+    PlaintextQuantized,
+    /// The paper's protocol, both parties in-process over a metered link.
+    Cheetah,
+    /// The GAZELLE baseline (rotations + GC ReLU), in-process.
+    Gazelle,
+    /// The CHEETAH protocol over real TCP via the serve subsystem.
+    CheetahNet,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::PlaintextFloat => "plaintext-float",
+            Backend::PlaintextQuantized => "plaintext-quantized",
+            Backend::Cheetah => "cheetah",
+            Backend::Gazelle => "gazelle",
+            Backend::CheetahNet => "cheetah-net",
+        }
+    }
+
+    /// Parse a CLI-style key (`--backend cheetah-net`). Accepts the names
+    /// from [`Backend::name`] plus a few common aliases.
+    pub fn from_key(key: &str) -> Option<Backend> {
+        match key {
+            "plaintext-float" | "plaintext" | "float" => Some(Backend::PlaintextFloat),
+            "plaintext-quantized" | "quantized" => Some(Backend::PlaintextQuantized),
+            "cheetah" => Some(Backend::Cheetah),
+            "gazelle" => Some(Backend::Gazelle),
+            "cheetah-net" | "net" | "tcp" => Some(Backend::CheetahNet),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Backend; 5] {
+        [
+            Backend::PlaintextFloat,
+            Backend::PlaintextQuantized,
+            Backend::Cheetah,
+            Backend::Gazelle,
+            Backend::CheetahNet,
+        ]
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Engine failure: a build-time configuration problem or a transport error
+/// from a networked backend.
+#[derive(Debug)]
+pub enum EngineError {
+    Build(String),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::Build(msg) => write!(f, "engine build error: {msg}"),
+            EngineError::Io(e) => write!(f, "engine transport error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EngineError::Build(_) => None,
+            EngineError::Io(e) => Some(e),
+        }
+    }
+}
+
+pub type EngineResult<T> = Result<T, EngineError>;
+
+/// What the offline phase produced: its wall time and the bytes shipped
+/// ahead of any query (indicator ciphertexts, rotation keys, garbled
+/// tables — backend-dependent).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Prepared {
+    pub offline_time: Duration,
+    pub offline_bytes: u64,
+}
+
+/// One build→infer surface over plaintext, CHEETAH, GAZELLE, and networked
+/// backends. Engines are `Send`, so they drop into the coordinator's
+/// batcher thread or any worker pool.
+pub trait InferenceEngine: Send {
+    /// Which backend this engine runs.
+    fn backend(&self) -> Backend;
+
+    /// Run the offline phase (keys, blinding material, indicator/rotation
+    /// key transfer). `infer` calls this lazily if it has not run yet;
+    /// calling it again refreshes the offline material.
+    fn prepare(&mut self) -> EngineResult<Prepared>;
+
+    /// Run one inference, producing the unified report.
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport>;
+
+    /// Run a batch of inferences. The default loops over `infer`; backends
+    /// with real batching can override.
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        inputs.iter().map(|x| self.infer(x)).collect()
+    }
+
+    /// The most recent inference's report, if any.
+    fn report(&self) -> Option<&EngineReport>;
+}
+
+/// Builder for any [`Backend`]. Every option has a sensible default; the
+/// only hard requirement is a network (via [`EngineBuilder::arch`] or
+/// [`EngineBuilder::network`]) for backends that host the model themselves
+/// — a [`Backend::CheetahNet`] engine pointed at a remote server with
+/// [`EngineBuilder::connect_to`] downloads the architecture instead.
+pub struct EngineBuilder {
+    backend: Backend,
+    arch: Option<NetworkArch>,
+    arch_seed: u64,
+    scale: f64,
+    network: Option<Network>,
+    plan: ScalePlan,
+    epsilon: f64,
+    seed: u64,
+    ctx: Option<Arc<Context>>,
+    link: LinkModel,
+    remote: Option<SocketAddr>,
+    secure: Option<SecureConfig>,
+}
+
+impl EngineBuilder {
+    pub fn new(backend: Backend) -> Self {
+        Self {
+            backend,
+            arch: None,
+            arch_seed: 11,
+            scale: 1.0,
+            network: None,
+            plan: ScalePlan::default_plan(),
+            epsilon: 0.0,
+            seed: 1,
+            ctx: None,
+            link: LinkModel::gigabit_lan(),
+            remote: None,
+            secure: None,
+        }
+    }
+
+    /// Use a named zoo architecture with seeded random weights.
+    pub fn arch(mut self, arch: NetworkArch) -> Self {
+        self.arch = Some(arch);
+        self
+    }
+
+    /// Weight seed for [`EngineBuilder::arch`] (default 11).
+    pub fn arch_seed(mut self, seed: u64) -> Self {
+        self.arch_seed = seed;
+        self
+    }
+
+    /// Spatial scale factor for [`EngineBuilder::arch`] (default 1.0).
+    pub fn scaled(mut self, f: f64) -> Self {
+        self.scale = f;
+        self
+    }
+
+    /// Use a custom network (takes precedence over `arch`).
+    pub fn network(mut self, net: Network) -> Self {
+        self.network = Some(net);
+        self
+    }
+
+    /// Fixed-point scale plan (default [`ScalePlan::default_plan`]).
+    pub fn plan(mut self, plan: ScalePlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    /// Obscuring-noise bound ε (default 0.0 = exact).
+    pub fn epsilon(mut self, eps: f64) -> Self {
+        self.epsilon = eps;
+        self
+    }
+
+    /// Protocol seed: server blinding material uses `seed`; client keys
+    /// use a distinct derivation (`seed + 1` in-process, a domain-separated
+    /// value for the networked backend). Pin it for reproducible runs; see
+    /// CHANGES.md on per-seed bit-exactness.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Share a pre-built PHE context (default: fresh
+    /// [`Params::default_params`] context, built once per engine).
+    pub fn context(mut self, ctx: Arc<Context>) -> Self {
+        self.ctx = Some(ctx);
+        self
+    }
+
+    /// Link cost model for in-process backends (default gigabit LAN).
+    pub fn link(mut self, link: LinkModel) -> Self {
+        self.link = link;
+        self
+    }
+
+    /// `CheetahNet`: connect to an already-running secure server instead of
+    /// self-hosting one on loopback.
+    pub fn connect_to(mut self, addr: SocketAddr) -> Self {
+        self.remote = Some(addr);
+        self
+    }
+
+    /// `CheetahNet` self-hosting: override the server configuration
+    /// (default: ε/seed from this builder, pool disabled, 2 workers).
+    pub fn secure_config(mut self, cfg: SecureConfig) -> Self {
+        self.secure = Some(cfg);
+        self
+    }
+
+    fn resolve_network(&self) -> EngineResult<Network> {
+        if let Some(net) = &self.network {
+            return Ok(net.clone());
+        }
+        match self.arch {
+            Some(arch) => Ok(Network::build_scaled(arch, self.arch_seed, self.scale)),
+            None => Err(EngineError::Build(format!(
+                "backend `{}` hosts the model itself: give the builder .network(...) or .arch(...)",
+                self.backend
+            ))),
+        }
+    }
+
+    fn resolve_context(&self) -> Arc<Context> {
+        self.ctx
+            .clone()
+            .unwrap_or_else(|| Arc::new(Context::new(Params::default_params())))
+    }
+
+    /// Construct the engine. Heavy offline work (key generation, blinding,
+    /// handshakes) is deferred to [`InferenceEngine::prepare`] so builds are
+    /// cheap and the offline phase stays measurable.
+    pub fn build(self) -> EngineResult<Box<dyn InferenceEngine>> {
+        Ok(match self.backend {
+            Backend::PlaintextFloat => Box::new(PlaintextFloatEngine::new(self.resolve_network()?)),
+            Backend::PlaintextQuantized => Box::new(PlaintextQuantizedEngine::new(
+                self.resolve_network()?,
+                self.plan,
+                self.epsilon,
+                self.seed,
+            )),
+            Backend::Cheetah => {
+                let net = self.resolve_network()?;
+                Box::new(CheetahEngine::new(
+                    self.resolve_context(),
+                    net,
+                    self.plan,
+                    self.epsilon,
+                    self.seed,
+                    self.link,
+                ))
+            }
+            Backend::Gazelle => {
+                let net = self.resolve_network()?;
+                Box::new(GazelleEngine::new(self.resolve_context(), net, self.plan, self.seed))
+            }
+            Backend::CheetahNet => {
+                let target = match self.remote {
+                    Some(addr) => NetTarget::Remote(addr),
+                    None => NetTarget::SelfHosted {
+                        net: self.resolve_network()?,
+                        cfg: self.secure.unwrap_or(SecureConfig {
+                            epsilon: self.epsilon,
+                            seed: Some(self.seed),
+                            workers: 2,
+                            pool: PoolConfig::disabled(),
+                            ..SecureConfig::default()
+                        }),
+                    },
+                };
+                Box::new(CheetahNetEngine::new(
+                    self.resolve_context(),
+                    self.plan,
+                    self.seed,
+                    target,
+                ))
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::SyntheticDigits;
+
+    #[test]
+    fn backend_keys_roundtrip() {
+        for b in Backend::all() {
+            assert_eq!(Backend::from_key(b.name()), Some(b), "{b}");
+        }
+        assert_eq!(Backend::from_key("quantized"), Some(Backend::PlaintextQuantized));
+        assert_eq!(Backend::from_key("nope"), None);
+    }
+
+    #[test]
+    fn builder_requires_a_network_for_self_hosting_backends() {
+        let err = EngineBuilder::new(Backend::Cheetah).build().map(|_| ()).unwrap_err();
+        assert!(matches!(err, EngineError::Build(_)), "{err}");
+    }
+
+    #[test]
+    fn plaintext_engines_agree_on_a_digit() {
+        let sample = SyntheticDigits::new(28, 123).render(4);
+        let mut float = EngineBuilder::new(Backend::PlaintextFloat)
+            .arch(NetworkArch::NetA)
+            .arch_seed(3)
+            .build()
+            .unwrap();
+        let mut quant = EngineBuilder::new(Backend::PlaintextQuantized)
+            .arch(NetworkArch::NetA)
+            .arch_seed(3)
+            .build()
+            .unwrap();
+        let f = float.infer(&sample.image).unwrap();
+        let q = quant.infer(&sample.image).unwrap();
+        assert_eq!(f.argmax, q.argmax, "quantization changed the argmax");
+        assert_eq!(f.logits.len(), 10);
+        assert!(float.report().is_some());
+        // infer_batch default covers every input.
+        let reps = quant.infer_batch(&[sample.image.clone(), sample.image]).unwrap();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps[0].argmax, q.argmax);
+    }
+
+    #[test]
+    fn cheetah_engine_reports_all_sections_and_zero_perms() {
+        use crate::nn::Layer;
+        let mut net = Network {
+            name: "engine-test".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
+        };
+        net.init_weights(21);
+        let mut e = EngineBuilder::new(Backend::Cheetah)
+            .network(net)
+            .seed(7)
+            .build()
+            .unwrap();
+        let prepared = e.prepare().unwrap();
+        assert!(prepared.offline_bytes > 0, "indicators must ship offline");
+        let input = Tensor::from_vec((0..25).map(|i| (i as f64 - 12.0) / 13.0).collect(), 1, 5, 5);
+        let rep = e.infer(&input).unwrap();
+        assert_eq!(rep.backend, Backend::Cheetah);
+        assert_eq!(rep.ops.unwrap().perm, 0, "CHEETAH is permutation-free");
+        assert!(rep.online_bytes() > 0);
+        assert!(rep.traffic.unwrap().offline > 0);
+        assert_eq!(rep.steps.len(), 2);
+        assert_eq!(e.report().unwrap().argmax, rep.argmax);
+    }
+}

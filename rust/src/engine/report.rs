@@ -1,0 +1,157 @@
+//! The unified per-query report every backend maps into.
+//!
+//! All five backends answer with the same two fields (`argmax`, `logits`);
+//! everything else is an *optional section* a backend fills in only when it
+//! actually measures it:
+//!
+//! * [`Timing`] — online compute, modeled/real wire time, per-query offline
+//!   work (blinding refresh, GC garbling),
+//! * [`Traffic`] — exact serialized bytes per direction + round trips,
+//! * ops — HE operation counts ([`OpCounts`]; the paper's `#Perm` headline),
+//! * [`StepReport`] — per fused-step breakdown (Fig. 8).
+//!
+//! [`comparison_table`] renders N reports from different backends into one
+//! fixed-width table — the "same input, N backends, one table" output the
+//! engine API exists for.
+
+use crate::bench_util::Table;
+use crate::phe::OpCounts;
+use crate::util::{fmt_bytes, fmt_duration};
+use std::time::Duration;
+
+use super::Backend;
+
+/// Timing section (absent for backends that do not time themselves).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timing {
+    /// Query-dependent compute, both parties (the paper's "online time").
+    pub online_compute: Duration,
+    /// Wire time: modeled from exact bytes (in-process backends) or real
+    /// socket time folded into `online_compute` (networked backend).
+    pub wire: Duration,
+    /// Query-attributed offline work observed during this inference
+    /// (e.g. blinding-noise regeneration, GC garbling).
+    pub offline: Duration,
+}
+
+impl Timing {
+    pub fn online_total(&self) -> Duration {
+        self.online_compute + self.wire
+    }
+}
+
+/// Traffic section (absent for plaintext backends).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Traffic {
+    /// Online client→server bytes (exact serialized sizes).
+    pub c2s: u64,
+    /// Online server→client bytes.
+    pub s2c: u64,
+    /// Offline bytes shipped ahead of queries (indicators, rotation keys,
+    /// garbled tables).
+    pub offline: u64,
+    /// Communication round trips (0 = untracked by this backend).
+    pub rounds: u64,
+}
+
+impl Traffic {
+    pub fn online_total(&self) -> u64 {
+        self.c2s + self.s2c
+    }
+}
+
+/// Per fused-step accounting (CHEETAH backends; GAZELLE reports coarser
+/// whole-step durations).
+#[derive(Clone, Debug, Default)]
+pub struct StepReport {
+    pub name: String,
+    pub server_time: Duration,
+    pub client_time: Duration,
+    pub c2s_bytes: u64,
+    pub s2c_bytes: u64,
+}
+
+/// The unified whole-query report.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub backend: Backend,
+    pub argmax: usize,
+    pub logits: Vec<f64>,
+    pub timing: Option<Timing>,
+    pub traffic: Option<Traffic>,
+    pub ops: Option<OpCounts>,
+    pub steps: Vec<StepReport>,
+}
+
+impl EngineReport {
+    /// A bare result with every optional section empty.
+    pub fn bare(backend: Backend, argmax: usize, logits: Vec<f64>) -> Self {
+        Self { backend, argmax, logits, timing: None, traffic: None, ops: None, steps: Vec::new() }
+    }
+
+    /// Total online time (compute + wire), when timed.
+    pub fn online_total(&self) -> Duration {
+        self.timing.map(|t| t.online_total()).unwrap_or_default()
+    }
+
+    /// Total online bytes, when metered.
+    pub fn online_bytes(&self) -> u64 {
+        self.traffic.map(|t| t.online_total()).unwrap_or_default()
+    }
+
+    fn row(&self) -> Vec<String> {
+        let dash = || "-".to_string();
+        vec![
+            self.backend.name().to_string(),
+            self.argmax.to_string(),
+            self.timing.map(|t| fmt_duration(t.online_compute)).unwrap_or_else(dash),
+            self.timing.map(|t| fmt_duration(t.wire)).unwrap_or_else(dash),
+            self.traffic.map(|t| fmt_bytes(t.online_total())).unwrap_or_else(dash),
+            self.traffic.map(|t| fmt_bytes(t.offline)).unwrap_or_else(dash),
+            self.ops.map(|o| o.perm.to_string()).unwrap_or_else(dash),
+            self.ops.map(|o| o.mult.to_string()).unwrap_or_else(dash),
+        ]
+    }
+}
+
+/// Render one table comparing the same query across backends — the
+/// five-line "N backends, one comparison" program's output.
+pub fn comparison_table(title: &str, reports: &[EngineReport]) -> String {
+    let mut t = Table::new(&[
+        "backend",
+        "argmax",
+        "online compute",
+        "wire",
+        "online comm",
+        "offline comm",
+        "#Perm",
+        "#Mult",
+    ]);
+    for r in reports {
+        t.row(&r.row());
+    }
+    t.render(title)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comparison_table_renders_missing_sections_as_dashes() {
+        let a = EngineReport::bare(Backend::PlaintextFloat, 3, vec![0.0; 10]);
+        let mut b = EngineReport::bare(Backend::Cheetah, 3, vec![0.0; 10]);
+        b.timing = Some(Timing {
+            online_compute: Duration::from_millis(5),
+            wire: Duration::from_millis(1),
+            offline: Duration::ZERO,
+        });
+        b.traffic = Some(Traffic { c2s: 1024, s2c: 2048, offline: 512, rounds: 3 });
+        b.ops = Some(OpCounts { add: 4, mult: 2, perm: 0 });
+        let s = comparison_table("t", &[a, b]);
+        assert!(s.contains("plaintext-float"));
+        assert!(s.contains("cheetah"));
+        assert!(s.contains('-'), "missing sections render as dashes");
+        assert!(s.contains("3.00 KiB"), "traffic rendered: {s}");
+    }
+}

@@ -25,12 +25,18 @@
 //! The [`runtime`] module loads the L2 artifacts through PJRT and executes
 //! them from Rust; Python is never on the request path.
 //!
+//! The [`engine`] module is the crate's front door: one build→infer surface
+//! ([`engine::EngineBuilder`] / [`engine::InferenceEngine`]) over plaintext,
+//! CHEETAH, GAZELLE, and networked backends, with a unified
+//! [`engine::EngineReport`] for cross-backend comparisons.
+//!
 //! See `DESIGN.md` for the system inventory and the experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod bench_util;
 pub mod complexity;
 pub mod coordinator;
+pub mod engine;
 pub mod fixed;
 pub mod gc;
 pub mod nn;

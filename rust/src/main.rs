@@ -5,18 +5,26 @@
 //! cheetah serve-secure  [--addr A] [--model netA] [--pool-depth N]    serve the CHEETAH protocol over TCP (private inference)
 //!                       [--pool-workers N] [--workers N] [--eps E]
 //!                       [--seed S]  (blinding seed; default: OS entropy)
-//! cheetah infer         [--model netA] [--eps E] [--label D]          one private inference, verbose report
+//! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
+//!                       [--label D] [--seed S]                         B ∈ {plaintext-float, plaintext-quantized,
+//!                                                                      cheetah, gazelle, cheetah-net, all}
 //! cheetah tables                                                      print the paper's analytic tables
-//! cheetah bench-help                                                  how to regenerate every paper table/figure
+//! cheetah bench-help                                                   how to regenerate every paper table/figure
 //! ```
+//!
+//! `infer` runs the same input through every requested backend via
+//! [`cheetah::engine::EngineBuilder`] and prints one unified
+//! [`cheetah::engine::EngineReport`] comparison table — the paper's
+//! CHEETAH-vs-GAZELLE-vs-plaintext story in a single command.
 
 use cheetah::coordinator::{BatchPolicy, Server};
+use cheetah::engine::{comparison_table, Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
 use cheetah::phe::{Context, Params};
-use cheetah::protocol::cheetah::CheetahRunner;
 use cheetah::runtime::load_trained_network;
-use cheetah::serve::{self, PoolConfig, SecureConfig, SecureServer};
+use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn arg(flag: &str, default: &str) -> String {
@@ -33,7 +41,7 @@ fn arg(flag: &str, default: &str) -> String {
 fn model_or_fallback(model: &str) -> Network {
     load_trained_network("artifacts", model).unwrap_or_else(|e| {
         eprintln!("artifacts unavailable ({e}); serving an untrained {model}");
-        let arch = if model == "netB" { NetworkArch::NetB } else { NetworkArch::NetA };
+        let arch = NetworkArch::from_key(model).unwrap_or(NetworkArch::NetA);
         Network::build(arch, 11)
     })
 }
@@ -79,7 +87,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let seed = if seed_arg.is_empty() { None } else { Some(seed_arg.parse()?) };
             let net = model_or_fallback(&model);
             let name = net.name.clone();
-            let ctx = serve::leak_context(Params::default_params());
+            let ctx = Arc::new(Context::new(Params::default_params()));
             let cfg = SecureConfig {
                 epsilon: eps,
                 seed,
@@ -116,31 +124,56 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let model = arg("--model", "netA");
             let eps: f64 = arg("--eps", "0.1").parse()?;
             let label: usize = arg("--label", "3").parse()?;
-            let ctx = Context::new(Params::default_params());
-            let net = load_trained_network("artifacts", &model)?;
-            let mut runner = CheetahRunner::new(&ctx, net, ScalePlan::default_plan(), eps, 1);
-            let off = runner.run_offline();
+            let seed: u64 = arg("--seed", "1").parse()?;
+            let backend_arg = arg("--backend", "cheetah");
+
+            let backends: Vec<Backend> = if backend_arg == "all" {
+                Backend::all().to_vec()
+            } else {
+                backend_arg
+                    .split(',')
+                    .map(|k| {
+                        Backend::from_key(k.trim())
+                            .ok_or_else(|| format!("unknown backend `{k}` (try `all`)"))
+                    })
+                    .collect::<Result<_, _>>()?
+            };
+
+            let net = model_or_fallback(&model);
+            let ctx = Arc::new(Context::new(Params::default_params()));
             let sample = SyntheticDigits::new(28, 5).render(label);
-            let rep = runner.infer(&sample.image);
-            println!("true label {label} → prediction {}", rep.argmax);
             println!(
-                "online {} compute + {} wire | {} online bytes | {} offline bytes",
-                cheetah::util::fmt_duration(rep.online_compute()),
-                cheetah::util::fmt_duration(rep.wire_time),
-                cheetah::util::fmt_bytes(rep.online_bytes()),
-                cheetah::util::fmt_bytes(off)
+                "one private digit ('{label}') through {} backend(s) on {}",
+                backends.len(),
+                net.name
             );
-            for s in &rep.steps {
+
+            let mut reports = Vec::new();
+            for backend in backends {
+                let mut engine = EngineBuilder::new(backend)
+                    .network(net.clone())
+                    .context(ctx.clone())
+                    .epsilon(eps)
+                    .seed(seed)
+                    .build()?;
+                let prepared = engine.prepare()?;
+                let rep = engine.infer(&sample.image)?;
                 println!(
-                    "  {:>12}: server {:>10} client {:>10} ops(perm/mult/add) {}/{}/{}",
-                    s.name,
-                    cheetah::util::fmt_duration(s.server_online),
-                    cheetah::util::fmt_duration(s.client_time),
-                    s.server_ops.perm + s.client_ops.perm,
-                    s.server_ops.mult + s.client_ops.mult,
-                    s.server_ops.add + s.client_ops.add,
+                    "  {:>20}: prediction {} (offline {} / {})",
+                    backend.name(),
+                    rep.argmax,
+                    cheetah::util::fmt_duration(prepared.offline_time),
+                    cheetah::util::fmt_bytes(prepared.offline_bytes),
                 );
+                reports.push(rep);
             }
+            println!(
+                "{}",
+                comparison_table(
+                    &format!("true label {label} — same input, every backend"),
+                    &reports
+                )
+            );
             Ok(())
         }
         "tables" => {

@@ -40,6 +40,31 @@ impl NetworkArch {
     pub fn all() -> [NetworkArch; 4] {
         [NetworkArch::NetA, NetworkArch::NetB, NetworkArch::AlexNet, NetworkArch::Vgg16]
     }
+
+    /// Short CLI/artifact key, matching `python/compile/model.py::ARCHS`
+    /// and the `<key>_weights.bin` artifact names.
+    pub fn key(&self) -> &'static str {
+        match self {
+            NetworkArch::NetA => "netA",
+            NetworkArch::NetB => "netB",
+            NetworkArch::AlexNet => "alexnet",
+            NetworkArch::Vgg16 => "vgg16",
+        }
+    }
+
+    /// Parse a key produced by [`NetworkArch::key`] (CLI flags, artifact
+    /// manifests). The single source of architecture definitions is
+    /// [`Network::build`]; the trained-weight loader resolves through here
+    /// so the two can never drift.
+    pub fn from_key(key: &str) -> Option<NetworkArch> {
+        match key {
+            "netA" | "neta" => Some(NetworkArch::NetA),
+            "netB" | "netb" => Some(NetworkArch::NetB),
+            "alexnet" => Some(NetworkArch::AlexNet),
+            "vgg16" | "vgg" => Some(NetworkArch::Vgg16),
+            _ => None,
+        }
+    }
 }
 
 /// A network: input shape + layer stack (with weights).
@@ -239,6 +264,15 @@ impl Network {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn arch_keys_roundtrip() {
+        for arch in NetworkArch::all() {
+            assert_eq!(NetworkArch::from_key(arch.key()), Some(arch));
+        }
+        assert_eq!(NetworkArch::from_key("netA"), Some(NetworkArch::NetA));
+        assert_eq!(NetworkArch::from_key("mystery"), None);
+    }
 
     #[test]
     fn zoo_shapes() {

@@ -12,6 +12,7 @@ use super::keys::SecretKey;
 use super::poly::{Form, RnsPoly};
 use super::Context;
 use crate::util::rng::ChaCha20Rng;
+use std::sync::Arc;
 
 /// A BFV ciphertext `(c0, c1)` with `c0 + c1·s = Δ·m + e (mod q)`.
 #[derive(Clone, Debug)]
@@ -36,20 +37,22 @@ impl Ciphertext {
 }
 
 /// Holds a secret key; performs encryption, decryption and noise metering.
-pub struct Encryptor<'a> {
-    pub ctx: &'a Context,
+/// Owns a shared `Arc<Context>` (no lifetime plumbing — see DESIGN.md).
+pub struct Encryptor {
+    pub ctx: Arc<Context>,
     pub sk: SecretKey,
 }
 
-impl<'a> Encryptor<'a> {
-    pub fn new(ctx: &'a Context, rng: &mut ChaCha20Rng) -> Self {
-        Self { ctx, sk: SecretKey::generate(ctx, rng) }
+impl Encryptor {
+    pub fn new(ctx: Arc<Context>, rng: &mut ChaCha20Rng) -> Self {
+        let sk = SecretKey::generate(&ctx, rng);
+        Self { ctx, sk }
     }
 
     /// Symmetric encryption: sample uniform `a` from a fresh seed, small
     /// error `e`, and output `(Δm − a·s − e, a)` in NTT form.
     pub fn encrypt(&self, pt: &Plaintext, rng: &mut ChaCha20Rng) -> Ciphertext {
-        let ctx = self.ctx;
+        let ctx = &*self.ctx;
         let mut seed = [0u8; 32];
         rng.fill_bytes(&mut seed);
         let mut a_rng = ChaCha20Rng::new(&seed, 1);
@@ -82,7 +85,7 @@ impl<'a> Encryptor<'a> {
 
     /// The raw decryption inner product `w = c0 + c1·s` in coefficient form.
     fn decrypt_inner(&self, ct: &Ciphertext) -> RnsPoly {
-        let ctx = self.ctx;
+        let ctx = &*self.ctx;
         let mut c0 = ct.c0.clone();
         let mut c1 = ct.c1.clone();
         ctx.to_ntt(&mut c0);
@@ -95,7 +98,7 @@ impl<'a> Encryptor<'a> {
 
     /// Decrypt to a plaintext polynomial.
     pub fn decrypt(&self, ct: &Ciphertext) -> Plaintext {
-        let ctx = self.ctx;
+        let ctx = &*self.ctx;
         let w = self.decrypt_inner(ct);
         let coeffs =
             (0..ctx.params.n).map(|j| ctx.params.unscale_from_q(ctx.crt_reconstruct(&w, j))).collect();
@@ -110,7 +113,7 @@ impl<'a> Encryptor<'a> {
     /// Remaining noise budget in bits: `log2(q/2p) − log2(max|err|)`.
     /// Returns 0 when decryption is no longer guaranteed correct.
     pub fn noise_budget(&self, ct: &Ciphertext) -> u32 {
-        let ctx = self.ctx;
+        let ctx = &*self.ctx;
         let q = ctx.params.q();
         let w = self.decrypt_inner(ct);
         let pt = Plaintext {
@@ -139,14 +142,14 @@ mod tests {
     use crate::phe::params::Params;
     use crate::util::proptest;
 
-    fn setup() -> (Context, ChaCha20Rng) {
-        (Context::new(Params::new(1024, 20)), ChaCha20Rng::from_u64_seed(99))
+    fn setup() -> (Arc<Context>, ChaCha20Rng) {
+        (Arc::new(Context::new(Params::new(1024, 20))), ChaCha20Rng::from_u64_seed(99))
     }
 
     #[test]
     fn encrypt_decrypt_roundtrip() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
         let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i - 512).collect();
         let ct = enc.encrypt_slots(&vals, &mut rng);
         assert_eq!(enc.decrypt_slots(&ct), vals);
@@ -155,7 +158,7 @@ mod tests {
     #[test]
     fn fresh_ciphertext_has_budget() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
         let ct = enc.encrypt_slots(&[1, 2, 3], &mut rng);
         let budget = enc.noise_budget(&ct);
         // q ≈ 2^90, p ≈ 2^20, fresh noise ≈ 2^7 with s·e terms → plenty left.
@@ -165,7 +168,7 @@ mod tests {
     #[test]
     fn seed_expansion_matches_c1() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
         let ct = enc.encrypt_slots(&[7, -9], &mut rng);
         let a = Encryptor::expand_seed(&ctx, &ct.seed.unwrap());
         assert_eq!(a, ct.c1);
@@ -174,8 +177,8 @@ mod tests {
     #[test]
     fn wrong_key_garbles() {
         let (ctx, mut rng) = setup();
-        let enc1 = Encryptor::new(&ctx, &mut rng);
-        let enc2 = Encryptor::new(&ctx, &mut rng);
+        let enc1 = Encryptor::new(ctx.clone(), &mut rng);
+        let enc2 = Encryptor::new(ctx.clone(), &mut rng);
         let ct = enc1.encrypt_slots(&[42; 16], &mut rng);
         let dec = enc2.decrypt_slots(&ct);
         assert_ne!(&dec[..16], &[42i64; 16][..]);
@@ -187,7 +190,7 @@ mod tests {
         let half = ctx.params.max_slot_value();
         proptest::check_with_rng(2024, 8, |rng| {
             let mut crng = ChaCha20Rng::from_u64_seed(rng.next_u64());
-            let enc = Encryptor::new(&ctx, &mut crng);
+            let enc = Encryptor::new(ctx.clone(), &mut crng);
             let vals: Vec<i64> =
                 (0..ctx.params.n).map(|_| rng.gen_i64_range(-half, half)).collect();
             let ct = enc.encrypt_slots(&vals, &mut crng);

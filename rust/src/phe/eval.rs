@@ -17,6 +17,7 @@ use super::params::NUM_Q_PRIMES;
 use super::poly::{Form, RnsPoly};
 use super::{Ciphertext, Context};
 use std::cell::RefCell;
+use std::sync::Arc;
 
 /// Operation counters (the paper's cost unit).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -79,14 +80,16 @@ impl Context {
     }
 }
 
-/// Stateless evaluator over a context, with interior-mutable op counters.
-pub struct Evaluator<'a> {
-    pub ctx: &'a Context,
+/// Stateless evaluator over a shared context, with interior-mutable op
+/// counters. Owns an `Arc` so protocol parties and serving threads need no
+/// lifetime plumbing (see DESIGN.md, "engine" section).
+pub struct Evaluator {
+    pub ctx: Arc<Context>,
     counts: RefCell<OpCounts>,
 }
 
-impl<'a> Evaluator<'a> {
-    pub fn new(ctx: &'a Context) -> Self {
+impl Evaluator {
+    pub fn new(ctx: Arc<Context>) -> Self {
         Self { ctx, counts: RefCell::new(OpCounts::default()) }
     }
 
@@ -172,7 +175,7 @@ impl<'a> Evaluator<'a> {
     /// multiply-accumulate against the key-switching key.
     fn key_switch(&self, c1_auto: &RnsPoly, ksk: &KeySwitchKey) -> (RnsPoly, RnsPoly) {
         use crate::phe::keys::{digits_per_prime, KSK_DIGIT_BITS};
-        let ctx = self.ctx;
+        let ctx = &*self.ctx;
         let params = &ctx.params;
         let mut c1_coeff = c1_auto.clone();
         ctx.to_coeff(&mut c1_coeff);
@@ -267,15 +270,15 @@ mod tests {
     use crate::phe::Encryptor;
     use crate::util::rng::ChaCha20Rng;
 
-    fn setup() -> (Context, ChaCha20Rng) {
-        (Context::new(Params::new(1024, 20)), ChaCha20Rng::from_u64_seed(5))
+    fn setup() -> (Arc<Context>, ChaCha20Rng) {
+        (Arc::new(Context::new(Params::new(1024, 20))), ChaCha20Rng::from_u64_seed(5))
     }
 
     #[test]
     fn homomorphic_add() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let a: Vec<i64> = (0..64).collect();
         let b: Vec<i64> = (0..64).map(|i| 1000 - i).collect();
         let ca = enc.encrypt_slots(&a, &mut rng);
@@ -291,8 +294,8 @@ mod tests {
     #[test]
     fn homomorphic_mult_plain() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let a: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 101 - 50).collect();
         let u: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 37 - 18).collect();
         let mut ca = enc.encrypt_slots(&a, &mut rng);
@@ -310,8 +313,8 @@ mod tests {
     #[test]
     fn homomorphic_add_plain() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let a = vec![10i64, -20, 30];
         let b = vec![5i64, 5, -5];
         let mut ca = enc.encrypt_slots(&a, &mut rng);
@@ -327,8 +330,8 @@ mod tests {
         // The CHEETAH hop: MultPlain(kv) then AddPlain(b) must be *exact*
         // in Z_p so the client's block sums are exact.
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let n = ctx.params.n;
         let x: Vec<i64> = (0..n as i64).map(|i| (i * 7) % 200 - 100).collect();
         let k: Vec<i64> = (0..n as i64).map(|i| (i * 13) % 64 - 32).collect();
@@ -347,8 +350,8 @@ mod tests {
     #[test]
     fn rotation_rotates_rows_left() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
         let row = ctx.params.row_size();
         let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
@@ -367,8 +370,8 @@ mod tests {
     #[test]
     fn rotation_negative_and_columns() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
         let row = ctx.params.row_size();
         let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
@@ -392,8 +395,8 @@ mod tests {
     #[test]
     fn composed_rotation() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
         let row = ctx.params.row_size();
         let vals: Vec<i64> = (0..ctx.params.n as i64).collect();
@@ -412,8 +415,8 @@ mod tests {
     #[test]
     fn rotate_and_sum_computes_row_totals() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
         let row = ctx.params.row_size();
         let vals: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 17).collect();
@@ -432,8 +435,8 @@ mod tests {
     #[test]
     fn noise_budget_decreases_monotonically() {
         let (ctx, mut rng) = setup();
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
         let mut ct = enc.encrypt_slots(&[3; 8], &mut rng);
         ev.to_ntt(&mut ct);

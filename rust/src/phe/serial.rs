@@ -172,10 +172,10 @@ mod tests {
 
     #[test]
     fn ct_roundtrip_fresh_and_evaluated() {
-        let ctx = crate::phe::Context::new(Params::new(1024, 20));
+        let ctx = std::sync::Arc::new(crate::phe::Context::new(Params::new(1024, 20)));
         let mut rng = ChaCha20Rng::from_u64_seed(77);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let vals: Vec<i64> = (0..100).map(|i| i * 3 - 150).collect();
 
         // Fresh (seed-compressed).

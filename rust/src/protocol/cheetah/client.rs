@@ -15,13 +15,16 @@ use crate::fixed::ScalePlan;
 use crate::nn::Tensor;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
 use crate::util::rng::ChaCha20Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// The client side of the CHEETAH protocol.
-pub struct CheetahClient<'a> {
-    pub ctx: &'a Context,
-    pub ev: Evaluator<'a>,
-    pub enc: Encryptor<'a>,
+/// The client side of the CHEETAH protocol. Owns a shared `Arc<Context>`
+/// (no lifetime parameter), so networked clients and engines can hold it
+/// alongside the context without borrow gymnastics.
+pub struct CheetahClient {
+    pub ctx: Arc<Context>,
+    pub ev: Evaluator,
+    pub enc: Encryptor,
     pub plan: ScalePlan,
     pub spec: ProtocolSpec,
     /// Client's additive share (mod p) of the current activation.
@@ -34,13 +37,13 @@ pub struct CheetahClient<'a> {
     pub online: Duration,
 }
 
-impl<'a> CheetahClient<'a> {
-    pub fn new(ctx: &'a Context, spec: ProtocolSpec, plan: ScalePlan, seed: u64) -> Self {
+impl CheetahClient {
+    pub fn new(ctx: Arc<Context>, spec: ProtocolSpec, plan: ScalePlan, seed: u64) -> Self {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
-        let enc = Encryptor::new(ctx, &mut rng);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
         let n_steps = spec.steps.len();
         Self {
-            ev: Evaluator::new(ctx),
+            ev: Evaluator::new(ctx.clone()),
             enc,
             plan,
             spec,

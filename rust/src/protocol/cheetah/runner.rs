@@ -10,6 +10,7 @@ use crate::nn::{Network, Tensor};
 use crate::phe::serial::ciphertext_bytes;
 use crate::phe::{Context, OpCounts};
 use crate::protocol::transport::{Dir, LinkModel, MeteredChannel};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Per-step accounting (one fused linear[+ReLU][+pool] step).
@@ -56,23 +57,35 @@ impl InferenceReport {
 }
 
 /// An in-process CHEETAH deployment: both parties plus a metered link.
-pub struct CheetahRunner<'a> {
-    pub server: CheetahServer<'a>,
-    pub client: CheetahClient<'a>,
+pub struct CheetahRunner {
+    pub server: CheetahServer,
+    pub client: CheetahClient,
     pub channel: MeteredChannel,
 }
 
-impl<'a> CheetahRunner<'a> {
+impl CheetahRunner {
     pub fn new(
-        ctx: &'a Context,
+        ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         epsilon: f64,
         seed: u64,
     ) -> Self {
-        let server = CheetahServer::new(ctx, net, plan, epsilon, seed);
+        Self::with_link(ctx, net, plan, epsilon, seed, LinkModel::gigabit_lan())
+    }
+
+    /// Like [`CheetahRunner::new`] with an explicit link cost model.
+    pub fn with_link(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+        link: LinkModel,
+    ) -> Self {
+        let server = CheetahServer::new(ctx.clone(), net, plan, epsilon, seed);
         let client = CheetahClient::new(ctx, server.spec.clone(), plan, seed.wrapping_add(1));
-        Self { server, client, channel: MeteredChannel::new(LinkModel::gigabit_lan()) }
+        Self { server, client, channel: MeteredChannel::new(link) }
     }
 
     pub fn spec(&self) -> &ProtocolSpec {

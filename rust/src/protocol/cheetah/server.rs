@@ -24,6 +24,7 @@ use crate::fixed::ScalePlan;
 use crate::nn::Network;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
 use crate::util::rng::ChaCha20Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-tap additive-noise magnitude bound (see `fixed` docs: products ≤
@@ -58,11 +59,13 @@ struct PreparedStep {
     id2: Vec<Ciphertext>,
 }
 
-/// The server side of the CHEETAH protocol.
-pub struct CheetahServer<'a> {
-    pub ctx: &'a Context,
-    pub ev: Evaluator<'a>,
-    pub enc: Encryptor<'a>,
+/// The server side of the CHEETAH protocol. Owns a shared `Arc<Context>`,
+/// so prepared engines move freely between serving threads (blinding pool,
+/// session workers) with no lifetime plumbing.
+pub struct CheetahServer {
+    pub ctx: Arc<Context>,
+    pub ev: Evaluator,
+    pub enc: Encryptor,
     pub plan: ScalePlan,
     pub spec: ProtocolSpec,
     pub epsilon: f64,
@@ -74,24 +77,24 @@ pub struct CheetahServer<'a> {
     pub timers: Timers,
 }
 
-impl<'a> CheetahServer<'a> {
+impl CheetahServer {
     /// Prepare the model: quantize weights, sample per-query-independent
     /// blinding, and encrypt the indicator vectors. (The paper prepares
     /// v/b/ID offline per query; we re-prepare per `refresh_blinding` call —
     /// `new` counts as the first offline phase.)
     pub fn new(
-        ctx: &'a Context,
+        ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         epsilon: f64,
         seed: u64,
     ) -> Self {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
-        let enc = Encryptor::new(ctx, &mut rng);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
         let spec = ProtocolSpec::compile(&net);
         plan.check_fits(ctx.params.p);
         let mut server = Self {
-            ev: Evaluator::new(ctx),
+            ev: Evaluator::new(ctx.clone()),
             enc,
             plan,
             spec,

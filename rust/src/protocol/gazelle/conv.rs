@@ -80,7 +80,7 @@ pub fn conv(
     weight_div: f64,
     gk: &GaloisKeys,
 ) -> Vec<Ciphertext> {
-    let ctx = ev.ctx;
+    let ctx = &*ev.ctx;
     let (c_i, h, w) = in_shape;
     assert_eq!(in_cts.len(), c_i, "one ciphertext per input channel");
     assert!(h * w <= ctx.params.row_size(), "image must fit one half-row");
@@ -206,12 +206,12 @@ mod tests {
 
     #[test]
     fn both_variants_match_reference_and_counts() {
-        let ctx = Context::new(Params::new(1024, 20));
+        let ctx = std::sync::Arc::new(Context::new(Params::new(1024, 20)));
         let plan = ScalePlan::default_plan();
         let mut rng = ChaCha20Rng::from_u64_seed(31);
         let mut srng = SplitMix64::new(32);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
 
         let (c_i, c_o, h, w, r) = (2usize, 3usize, 8usize, 8usize, 3usize);
         let mut layer = Layer::conv(c_o, r, 1, 1);

@@ -96,7 +96,7 @@ pub fn fc(
     weight_div: f64,
     gk: &GaloisKeys,
 ) -> (Vec<Ciphertext>, Vec<(usize, usize)>) {
-    let ctx = ev.ctx;
+    let ctx = &*ev.ctx;
     let crate::nn::layers::LayerKind::Fc { out_features: n_o } = layer.kind else {
         panic!("fc requires Fc layer")
     };
@@ -224,8 +224,8 @@ mod tests {
         n_i: usize,
         n_o: usize,
         seed: u64,
-    ) -> (Context, Layer, Vec<i64>, Vec<i64>) {
-        let ctx = Context::new(Params::new(1024, 20));
+    ) -> (std::sync::Arc<Context>, Layer, Vec<i64>, Vec<i64>) {
+        let ctx = std::sync::Arc::new(Context::new(Params::new(1024, 20)));
         let plan = ScalePlan::default_plan();
         let mut srng = SplitMix64::new(seed);
         let mut layer = Layer::fc(n_o);
@@ -241,8 +241,8 @@ mod tests {
         let (ctx, layer, x_q, reference) = setup_fc(n_i, n_o, 41);
         let plan = ScalePlan::default_plan();
         let mut rng = ChaCha20Rng::from_u64_seed(42);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
 
         for method in [FcMethod::Naive, FcMethod::Diagonal, FcMethod::Hybrid] {
@@ -265,8 +265,8 @@ mod tests {
             let (ctx, layer, x_q, _) = setup_fc(n_i, n_o, 50 + n_o as u64);
             let plan = ScalePlan::default_plan();
             let mut rng = ChaCha20Rng::from_u64_seed(5);
-            let enc = Encryptor::new(&ctx, &mut rng);
-            let ev = Evaluator::new(&ctx);
+            let enc = Encryptor::new(ctx.clone(), &mut rng);
+            let ev = Evaluator::new(ctx.clone());
             let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
             let packed = pack_fc_input(&ctx, &x_q, FcMethod::Hybrid);
             let mut ct = enc.encrypt_slots(&packed, &mut rng);
@@ -290,8 +290,8 @@ mod tests {
         let (ctx, layer, x_q, _) = setup_fc(n_i, n_o, 60);
         let plan = ScalePlan::default_plan();
         let mut rng = ChaCha20Rng::from_u64_seed(6);
-        let enc = Encryptor::new(&ctx, &mut rng);
-        let ev = Evaluator::new(&ctx);
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
         let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
         let mut counts = Vec::new();
         for method in [FcMethod::Naive, FcMethod::Diagonal, FcMethod::Hybrid] {

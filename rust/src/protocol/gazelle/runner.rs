@@ -27,6 +27,7 @@ use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, GaloisKeys, OpCounts
 use crate::protocol::cheetah::server::pool_shares;
 use crate::protocol::cheetah::{LinearSpec, ProtocolSpec};
 use crate::util::rng::ChaCha20Rng;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Per-query report for the GAZELLE baseline.
@@ -38,6 +39,10 @@ pub struct GazelleReport {
     pub client_time: Duration,
     pub gc: GcReluReport,
     pub online_bytes: u64,
+    /// Direction split of `online_bytes`; GC traffic (tables, labels, OT)
+    /// is attributed server→client, its dominant direction.
+    pub c2s_bytes: u64,
+    pub s2c_bytes: u64,
     pub offline_bytes: u64,
     pub ops: OpCounts,
     /// Per-step (linear-layer) online compute, for Fig. 8 breakdowns.
@@ -50,11 +55,12 @@ impl GazelleReport {
     }
 }
 
-/// In-process GAZELLE deployment (both parties).
-pub struct GazelleRunner<'a> {
-    pub ctx: &'a Context,
-    ev: Evaluator<'a>,
-    client_enc: Encryptor<'a>,
+/// In-process GAZELLE deployment (both parties). Owns a shared
+/// `Arc<Context>` (no lifetime parameter).
+pub struct GazelleRunner {
+    pub ctx: Arc<Context>,
+    ev: Evaluator,
+    client_enc: Encryptor,
     plan: ScalePlan,
     pub spec: ProtocolSpec,
     net: Network,
@@ -64,10 +70,10 @@ pub struct GazelleRunner<'a> {
     rng: ChaCha20Rng,
 }
 
-impl<'a> GazelleRunner<'a> {
-    pub fn new(ctx: &'a Context, net: Network, plan: ScalePlan, seed: u64) -> Self {
+impl GazelleRunner {
+    pub fn new(ctx: Arc<Context>, net: Network, plan: ScalePlan, seed: u64) -> Self {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
-        let client_enc = Encryptor::new(ctx, &mut rng);
+        let client_enc = Encryptor::new(ctx.clone(), &mut rng);
         let spec = ProtocolSpec::compile(&net);
         let relu = GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
         // Offline: rotation keys per step geometry (generated under the
@@ -78,7 +84,7 @@ impl<'a> GazelleRunner<'a> {
             match &step.linear {
                 LinearSpec::Conv(p) => {
                     conv_keys.push(Some(conv_galois_keys(
-                        ctx,
+                        &ctx,
                         &client_enc.sk,
                         p.kernel,
                         p.in_shape.2,
@@ -87,12 +93,23 @@ impl<'a> GazelleRunner<'a> {
                     fc_keys.push(None);
                 }
                 LinearSpec::Fc(p) => {
-                    fc_keys.push(Some(fc_galois_keys(ctx, &client_enc.sk, p.n_i, &mut rng)));
+                    fc_keys.push(Some(fc_galois_keys(&ctx, &client_enc.sk, p.n_i, &mut rng)));
                     conv_keys.push(None);
                 }
             }
         }
-        Self { ctx, ev: Evaluator::new(ctx), client_enc, plan, spec, net, relu, conv_keys, fc_keys, rng }
+        Self {
+            ev: Evaluator::new(ctx.clone()),
+            client_enc,
+            plan,
+            spec,
+            net,
+            relu,
+            conv_keys,
+            fc_keys,
+            rng,
+            ctx,
+        }
     }
 
     /// Offline communication: rotation keys + garbled tables for every
@@ -167,7 +184,7 @@ impl<'a> GazelleRunner<'a> {
                     let x: Vec<i64> = client_share.iter().map(|&v| v as i64).collect();
                     // pack_fc_input expects signed values; shares are
                     // residues — pack residues directly (mod-p linearity).
-                    let packed_res: Vec<u64> = pack_fc_input(self.ctx, &x, FcMethod::Hybrid)
+                    let packed_res: Vec<u64> = pack_fc_input(&self.ctx, &x, FcMethod::Hybrid)
                         .iter()
                         .map(|&v| v as u64 % p)
                         .collect();
@@ -177,6 +194,7 @@ impl<'a> GazelleRunner<'a> {
             };
             report.client_time += t0.elapsed();
             report.online_bytes += in_cts.len() as u64 * fresh;
+            report.c2s_bytes += in_cts.len() as u64 * fresh;
 
             // ---- server: add own share, rotation-based linear, mask ----
             let t1 = Instant::now();
@@ -198,7 +216,7 @@ impl<'a> GazelleRunner<'a> {
                 }
                 LinearSpec::Fc(_) => {
                     let x: Vec<i64> = server_share.iter().map(|&v| v as i64).collect();
-                    let packed: Vec<u64> = pack_fc_input(self.ctx, &x, FcMethod::Hybrid)
+                    let packed: Vec<u64> = pack_fc_input(&self.ctx, &x, FcMethod::Hybrid)
                         .iter()
                         .map(|&v| v as u64 % p)
                         .collect();
@@ -277,6 +295,7 @@ impl<'a> GazelleRunner<'a> {
             }
             report.server_linear += t1.elapsed();
             report.online_bytes += masked.len() as u64 * eval_sz;
+            report.s2c_bytes += masked.len() as u64 * eval_sz;
 
             // ---- client: decrypt its linear share ----
             let t2 = Instant::now();
@@ -317,6 +336,7 @@ impl<'a> GazelleRunner<'a> {
             let (mut c_new, mut s_new, gc_rep) =
                 self.relu.run_batch(&server_lin, &client_lin, &mut self.rng);
             report.online_bytes += gc_rep.online_bytes;
+            report.s2c_bytes += gc_rep.online_bytes;
             report.gc.merge(&gc_rep);
 
             // Strided conv downsample (shares, both parties identically).
@@ -367,7 +387,7 @@ mod tests {
     /// flat-semantics plaintext composition.
     #[test]
     fn gazelle_e2e_small_net() {
-        let ctx = Context::new(Params::default_params());
+        let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
         let plan = ScalePlan::default_plan();
         let mut net = Network {
             name: "gz-test".into(),
@@ -376,7 +396,7 @@ mod tests {
         };
         net.init_weights(71);
         let netc = net.clone();
-        let mut runner = GazelleRunner::new(&ctx, net, plan, 72);
+        let mut runner = GazelleRunner::new(ctx, net, plan, 72);
 
         let mut srng = SplitMix64::new(73);
         let input = Tensor::from_vec(

@@ -79,14 +79,7 @@ impl Runtime {
             .get(name)
             .ok_or_else(|| format!("module {name} not loaded"))?;
         let result = module.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
-        let (elems, _) = result.to_tuple()?.into_iter().fold(
-            (Vec::new(), 0usize),
-            |(mut acc, i), lit| {
-                acc.push(lit);
-                (acc, i + 1)
-            },
-        );
-        Ok(elems)
+        Ok(result.to_tuple()?.into_iter().collect())
     }
 
     /// Run the `<arch>_noisy` artifact: images (flattened NCHW f32), a PRNG
@@ -118,7 +111,7 @@ pub fn load_trained_network(
     artifacts_dir: impl AsRef<Path>,
     arch: &str,
 ) -> Result<crate::nn::Network> {
-    use crate::nn::{Layer, Network};
+    use crate::nn::Network;
     let dir = artifacts_dir.as_ref();
     let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
         .map_err(|e| format!("read manifest.txt (run `make artifacts`): {e}"))?;
@@ -139,38 +132,18 @@ pub fn load_trained_network(
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
         .collect();
 
-    // Architecture mirrors python/compile/model.py::ARCHS.
-    let (input_shape, mut layers): ((usize, usize, usize), Vec<Layer>) = match arch {
-        "netA" => (
-            (1, 28, 28),
-            vec![
-                Layer::conv(5, 5, 2, 2),
-                Layer::relu(),
-                Layer::fc(100),
-                Layer::relu(),
-                Layer::fc(10),
-            ],
-        ),
-        "netB" => (
-            (1, 28, 28),
-            vec![
-                Layer::conv(16, 5, 1, 2),
-                Layer::relu(),
-                Layer::mean_pool(2),
-                Layer::conv(16, 5, 1, 2),
-                Layer::relu(),
-                Layer::mean_pool(2),
-                Layer::fc(100),
-                Layer::relu(),
-                Layer::fc(10),
-            ],
-        ),
-        _ => return Err(format!("unknown arch {arch}").into()),
-    };
+    // The layer stack comes from the single source of architecture truth
+    // (`Network::build` via `NetworkArch::from_key`), so this loader can
+    // never drift from the zoo — it only replaces the seeded weights with
+    // the trained ones.
+    let arch_id = crate::nn::NetworkArch::from_key(arch)
+        .ok_or_else(|| format!("unknown arch {arch}"))?;
+    let mut net = Network::build(arch_id, 0);
+    net.name = format!("{arch} (trained)");
 
     let mut offset = 0usize;
     let mut shape_idx = 0usize;
-    for layer in layers.iter_mut() {
+    for layer in net.layers.iter_mut() {
         if matches!(layer.kind, crate::nn::LayerKind::Relu | crate::nn::LayerKind::MeanPool { .. })
         {
             continue;
@@ -183,8 +156,9 @@ pub fn load_trained_network(
     if offset != floats.len() {
         return Err("weight size mismatch".into());
     }
-    let mut net = Network { name: format!("{arch} (trained)"), input_shape, layers };
-    equalize_activations(&mut net, 1.2, 32);
+    if let Err(e) = equalize_activations(&mut net, 1.2, 32) {
+        eprintln!("warning: activation equalization skipped for {arch}: {e}");
+    }
     Ok(net)
 }
 
@@ -194,14 +168,27 @@ pub fn load_trained_network(
 /// the float function by ReLU positive homogeneity (the final logits pick
 /// up one uniform positive factor, leaving the argmax unchanged). Standard
 /// deployment-time conditioning for fixed-point inference.
-pub fn equalize_activations(net: &mut crate::nn::Network, target: f64, calib: usize) {
+///
+/// Errors (instead of silently no-opping) when no calibration corpus exists
+/// for the network's input shape — the synthetic-digit corpus is
+/// single-channel, so multi-channel networks (AlexNet/VGG) are not
+/// calibrated here.
+pub fn equalize_activations(
+    net: &mut crate::nn::Network,
+    target: f64,
+    calib: usize,
+) -> Result<()> {
     use crate::nn::layers::{forward_layer, LayerKind};
     let mut gen = crate::nn::SyntheticDigits::new(net.input_shape.1.max(12), 2024);
-    let samples: Vec<crate::nn::Tensor> = if net.input_shape.0 == 1 {
-        gen.batch(calib).into_iter().map(|s| s.image).collect()
-    } else {
-        return; // calibration corpus is single-channel
-    };
+    if net.input_shape.0 != 1 {
+        return Err(format!(
+            "no calibration corpus for {}-channel input (synthetic digits are single-channel)",
+            net.input_shape.0
+        )
+        .into());
+    }
+    let samples: Vec<crate::nn::Tensor> =
+        gen.batch(calib).into_iter().map(|s| s.image).collect();
     let linear_idxs: Vec<usize> = net
         .layers
         .iter()
@@ -234,6 +221,7 @@ pub fn equalize_activations(net: &mut crate::nn::Network, target: f64, calib: us
             *v /= s;
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -242,6 +230,43 @@ mod tests {
 
     fn artifacts_ready() -> bool {
         Path::new("artifacts/manifest.txt").exists()
+    }
+
+    #[test]
+    fn equalize_activations_rejects_multichannel_input() {
+        let mut net = crate::nn::Network {
+            name: "rgb".into(),
+            input_shape: (3, 4, 4),
+            layers: vec![crate::nn::Layer::fc(2)],
+        };
+        net.init_weights(1);
+        let before = net.layers[0].weights.clone();
+        let err = equalize_activations(&mut net, 1.2, 4).unwrap_err();
+        assert!(err.to_string().contains("single-channel"), "{err}");
+        assert_eq!(net.layers[0].weights, before, "failed calibration must not touch weights");
+    }
+
+    #[test]
+    fn equalize_activations_runs_on_single_channel() {
+        let mut net = crate::nn::Network {
+            name: "mono".into(),
+            input_shape: (1, 12, 12),
+            layers: vec![
+                crate::nn::Layer::fc(6),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::fc(3),
+            ],
+        };
+        net.init_weights(2);
+        equalize_activations(&mut net, 1.2, 4).expect("single-channel calibration");
+    }
+
+    #[test]
+    fn unknown_arch_is_an_error_not_a_panic() {
+        let err = load_trained_network("artifacts", "resnet152").unwrap_err();
+        // Either the manifest is missing entirely (no artifacts) or the
+        // arch key fails to resolve — both must surface as errors.
+        assert!(!err.to_string().is_empty());
     }
 
     #[cfg(feature = "pjrt")]

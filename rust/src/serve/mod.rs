@@ -46,7 +46,7 @@ use crate::coordinator::metrics::Metrics;
 use crate::coordinator::server::{stop_accept_thread, LiveConns, StoppableListener};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, Tensor};
-use crate::phe::{Context, Params};
+use crate::phe::Context;
 use crate::protocol::cheetah::{CheetahClient, ProtocolSpec};
 use crate::protocol::transport::{read_frame_limited, write_frame, DEFAULT_MAX_FRAME_LEN};
 use crate::util::rng::ChaCha20Rng;
@@ -56,13 +56,6 @@ use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
-
-/// Promote a parameter set to the `&'static Context` the serving threads
-/// need. One context per server process; the leak is deliberate and
-/// bounded (NTT tables + encoder, a few MiB).
-pub fn leak_context(params: Params) -> &'static Context {
-    Box::leak(Box::new(Context::new(params)))
-}
 
 /// Secure-server tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -103,7 +96,7 @@ impl Default for SecureConfig {
 
 /// State shared by every worker and reader thread.
 struct ServeShared {
-    ctx: &'static Context,
+    ctx: Arc<Context>,
     net: Network,
     plan: ScalePlan,
     epsilon: f64,
@@ -151,9 +144,11 @@ pub struct SecureServer {
 
 impl SecureServer {
     /// Serve `net` through the CHEETAH protocol on `addr`. Returns once the
-    /// listener is bound; serving continues on background threads.
+    /// listener is bound; serving continues on background threads. The
+    /// shared [`Context`] is reference-counted across every worker, reader,
+    /// and pool thread — no `'static` leak.
     pub fn serve(
-        ctx: &'static Context,
+        ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         addr: &str,
@@ -169,7 +164,7 @@ impl SecureServer {
             .seed
             .unwrap_or_else(|| ChaCha20Rng::from_os_entropy().next_u64());
         let pool =
-            BlindingPool::start(ctx, net.clone(), plan, cfg.epsilon, base_seed, cfg.pool);
+            BlindingPool::start(ctx.clone(), net.clone(), plan, cfg.epsilon, base_seed, cfg.pool);
         let shared = Arc::new(ServeShared {
             ctx,
             net,
@@ -444,7 +439,7 @@ fn handle_round(
     };
     let mut r = wire::ByteReader::new(payload);
     let decoded = wire::read_round_header(&mut r)
-        .and_then(|(_, step)| wire::decode_cts(shared.ctx, &mut r).map(|cts| (step, cts)));
+        .and_then(|(_, step)| wire::decode_cts(&shared.ctx, &mut r).map(|cts| (step, cts)));
     let (step, cts) = match decoded {
         Ok(d) => d,
         Err(e) => {
@@ -496,13 +491,17 @@ pub struct NetReport {
 /// [`SecureServer`]. The constructor performs the handshake (parameter
 /// fingerprint check, architecture download, offline indicator transfer);
 /// [`CheetahNetClient::infer`] then runs queries on the cached session.
-pub struct CheetahNetClient<'a> {
-    ctx: &'a Context,
+pub struct CheetahNetClient {
+    ctx: Arc<Context>,
     stream: TcpStream,
     pub session_id: u64,
-    client: CheetahClient<'a>,
+    client: CheetahClient,
     last_step: usize,
     max_frame: usize,
+    /// Bytes received during the offline phase (handshake + indicators),
+    /// frame headers included — the networked "offline communication".
+    offline_bytes: u64,
+    said_bye: bool,
 }
 
 fn invalid(msg: &str) -> std::io::Error {
@@ -516,12 +515,12 @@ fn error_frame_to_io(payload: &[u8]) -> std::io::Error {
     }
 }
 
-impl<'a> CheetahNetClient<'a> {
+impl CheetahNetClient {
     /// Connect and complete the offline phase. `ctx`/`plan` must match the
     /// server's (verified via the handshake fingerprint); `seed` drives the
     /// client's key generation and share randomness.
     pub fn connect(
-        ctx: &'a Context,
+        ctx: Arc<Context>,
         plan: ScalePlan,
         addr: &SocketAddr,
         seed: u64,
@@ -531,6 +530,7 @@ impl<'a> CheetahNetClient<'a> {
         stream.set_nodelay(true).ok();
         write_frame(&mut stream, wire::TAG_HELLO, &wire::encode_hello())?;
         let (tag, payload) = read_frame_limited(&mut stream, max_frame)?;
+        let mut offline_bytes = payload.len() as u64 + 5;
         if tag == wire::TAG_ERROR {
             return Err(error_frame_to_io(&payload));
         }
@@ -548,11 +548,12 @@ impl<'a> CheetahNetClient<'a> {
         if n_steps != hello.n_steps as usize {
             return Err(invalid("handshake step count disagrees with architecture"));
         }
-        let mut client = CheetahClient::new(ctx, spec, plan, seed);
+        let mut client = CheetahClient::new(ctx.clone(), spec, plan, seed);
 
         // Offline phase: install the indicator ciphertexts per step.
         loop {
             let (tag, payload) = read_frame_limited(&mut stream, max_frame)?;
+            offline_bytes += payload.len() as u64 + 5;
             match tag {
                 wire::TAG_OFFLINE_IDS => {
                     let mut r = wire::ByteReader::new(&payload);
@@ -560,8 +561,8 @@ impl<'a> CheetahNetClient<'a> {
                     if step as usize >= n_steps {
                         return Err(invalid("offline indicators for unknown step"));
                     }
-                    let id1 = wire::decode_cts(ctx, &mut r)?;
-                    let id2 = wire::decode_cts(ctx, &mut r)?;
+                    let id1 = wire::decode_cts(&ctx, &mut r)?;
+                    let id2 = wire::decode_cts(&ctx, &mut r)?;
                     client.install_indicators(step as usize, id1, id2);
                 }
                 wire::TAG_OFFLINE_DONE => break,
@@ -576,7 +577,15 @@ impl<'a> CheetahNetClient<'a> {
             client,
             last_step: n_steps - 1,
             max_frame,
+            offline_bytes,
+            said_bye: false,
         })
+    }
+
+    /// Bytes shipped to this client during the offline phase (handshake +
+    /// indicator ciphertexts, frame headers included).
+    pub fn offline_bytes(&self) -> u64 {
+        self.offline_bytes
     }
 
     fn read_expect(&mut self, want: u8) -> std::io::Result<Vec<u8>> {
@@ -613,7 +622,7 @@ impl<'a> CheetahNetClient<'a> {
             if sid != self.session_id || step as usize != si {
                 return Err(invalid("products round header mismatch"));
             }
-            let out_cts = wire::decode_cts(self.ctx, &mut r)?;
+            let out_cts = wire::decode_cts(&self.ctx, &mut r)?;
             if out_cts.len() != self.client.spec.steps[si].linear.num_out_cts(n) {
                 return Err(invalid("wrong obscured-product ciphertext count"));
             }
@@ -644,9 +653,19 @@ impl<'a> CheetahNetClient<'a> {
         })
     }
 
+    /// End the session politely without consuming the client (idempotent;
+    /// used by engine wrappers on drop).
+    pub fn close(&mut self) -> std::io::Result<()> {
+        if self.said_bye {
+            return Ok(());
+        }
+        self.said_bye = true;
+        write_frame(&mut self.stream, wire::TAG_BYE, &self.session_id.to_le_bytes())
+    }
+
     /// End the session politely.
     pub fn bye(mut self) -> std::io::Result<()> {
-        write_frame(&mut self.stream, wire::TAG_BYE, &self.session_id.to_le_bytes())
+        self.close()
     }
 }
 
@@ -654,6 +673,7 @@ impl<'a> CheetahNetClient<'a> {
 mod tests {
     use super::*;
     use crate::nn::Layer;
+    use crate::phe::Params;
     use crate::protocol::cheetah::CheetahRunner;
     use crate::protocol::transport::read_frame;
 
@@ -681,17 +701,17 @@ mod tests {
     /// matching the reference runner's server seed.
     #[test]
     fn session_reuse_is_bit_exact_vs_in_process_runner() {
-        let ctx = leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let plan = ScalePlan::default_plan();
         let net = tiny_net(21);
 
-        let mut runner = CheetahRunner::new(ctx, net.clone(), plan, 0.0, 99);
+        let mut runner = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 99);
         runner.run_offline();
         let want_a = runner.infer(&test_input(0.0));
         let want_b = runner.infer(&test_input(0.05));
 
         let server = SecureServer::serve(
-            ctx,
+            ctx.clone(),
             net,
             plan,
             "127.0.0.1:0",
@@ -703,7 +723,7 @@ mod tests {
             },
         )
         .unwrap();
-        let mut client = CheetahNetClient::connect(ctx, plan, &server.addr, 4242).unwrap();
+        let mut client = CheetahNetClient::connect(ctx.clone(), plan, &server.addr, 4242).unwrap();
         let got_a = client.infer(&test_input(0.0)).unwrap();
         let got_b = client.infer(&test_input(0.05)).unwrap();
         assert_eq!(got_a.logits, want_a.logits, "query 1 diverged from in-process runner");
@@ -720,9 +740,9 @@ mod tests {
 
     #[test]
     fn bad_hello_gets_error_frame() {
-        let ctx = leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let server = SecureServer::serve(
-            ctx,
+            ctx.clone(),
             tiny_net(3),
             ScalePlan::default_plan(),
             "127.0.0.1:0",
@@ -740,9 +760,9 @@ mod tests {
 
     #[test]
     fn unknown_tag_gets_error_frame() {
-        let ctx = leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let server = SecureServer::serve(
-            ctx,
+            ctx.clone(),
             tiny_net(4),
             ScalePlan::default_plan(),
             "127.0.0.1:0",
@@ -758,10 +778,10 @@ mod tests {
 
     #[test]
     fn out_of_order_round_kills_session_with_error() {
-        let ctx = leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let plan = ScalePlan::default_plan();
         let server = SecureServer::serve(
-            ctx,
+            ctx.clone(),
             tiny_net(5),
             plan,
             "127.0.0.1:0",

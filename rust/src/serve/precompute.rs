@@ -64,12 +64,12 @@ pub struct PoolStats {
 
 /// Background bank of prepared CHEETAH serving engines.
 pub struct BlindingPool {
-    ctx: &'static Context,
+    ctx: Arc<Context>,
     net: Network,
     plan: ScalePlan,
     epsilon: f64,
     next_seed: AtomicU64,
-    bank: Mutex<Option<Receiver<CheetahServer<'static>>>>,
+    bank: Mutex<Option<Receiver<CheetahServer>>>,
     stop: Arc<AtomicBool>,
     workers: Mutex<Vec<JoinHandle<()>>>,
     produced: AtomicU64,
@@ -82,7 +82,7 @@ impl BlindingPool {
     /// Engine seeds are `base_seed, base_seed+1, …` — deterministic but
     /// distinct per engine, so every session gets fresh blinding material.
     pub fn start(
-        ctx: &'static Context,
+        ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         epsilon: f64,
@@ -108,19 +108,19 @@ impl BlindingPool {
             let mut handles = pool.workers.lock().unwrap();
             for _ in 0..cfg.workers {
                 let pool = pool.clone();
-                let tx: SyncSender<CheetahServer<'static>> = tx.clone();
+                let tx: SyncSender<CheetahServer> = tx.clone();
                 handles.push(std::thread::spawn(move || pool.worker_loop(tx)));
             }
         }
         pool
     }
 
-    fn build(&self) -> CheetahServer<'static> {
+    fn build(&self) -> CheetahServer {
         let seed = self.next_seed.fetch_add(1, Ordering::Relaxed);
-        CheetahServer::new(self.ctx, self.net.clone(), self.plan, self.epsilon, seed)
+        CheetahServer::new(self.ctx.clone(), self.net.clone(), self.plan, self.epsilon, seed)
     }
 
-    fn worker_loop(&self, tx: SyncSender<CheetahServer<'static>>) {
+    fn worker_loop(&self, tx: SyncSender<CheetahServer>) {
         while !self.stop.load(Ordering::SeqCst) {
             let mut engine = Some(self.build());
             self.produced.fetch_add(1, Ordering::Relaxed);
@@ -143,7 +143,7 @@ impl BlindingPool {
 
     /// A ready engine: from the bank when warm, built inline otherwise.
     /// Never blocks on the background workers.
-    pub fn take(&self) -> CheetahServer<'static> {
+    pub fn take(&self) -> CheetahServer {
         let banked = {
             let guard = self.bank.lock().unwrap();
             guard.as_ref().and_then(|rx| rx.try_recv().ok())
@@ -219,9 +219,9 @@ mod tests {
     fn disabled_pool_builds_inline() {
         // default_params: the default ScalePlan's product range needs the
         // 23-bit plaintext modulus (check_fits panics on smaller p).
-        let ctx = crate::serve::leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let pool = BlindingPool::start(
-            ctx,
+            ctx.clone(),
             tiny_net(),
             ScalePlan::default_plan(),
             0.0,
@@ -239,9 +239,9 @@ mod tests {
 
     #[test]
     fn warm_pool_serves_hits_with_distinct_seeds() {
-        let ctx = crate::serve::leak_context(Params::default_params());
+        let ctx = Arc::new(Context::new(Params::default_params()));
         let pool = BlindingPool::start(
-            ctx,
+            ctx.clone(),
             tiny_net(),
             ScalePlan::default_plan(),
             0.0,

@@ -51,14 +51,14 @@ impl std::error::Error for ProtocolViolation {}
 /// One client's serving state: engine + state machine + counters.
 pub struct Session {
     pub id: u64,
-    pub engine: CheetahServer<'static>,
+    pub engine: CheetahServer,
     pub phase: Phase,
     query_start: Option<Instant>,
     pub queries_done: u64,
 }
 
 impl Session {
-    pub fn new(id: u64, engine: CheetahServer<'static>) -> Self {
+    pub fn new(id: u64, engine: CheetahServer) -> Self {
         Self { id, engine, phase: Phase::AwaitShares(0), query_start: None, queries_done: 0 }
     }
 
@@ -165,7 +165,7 @@ impl SessionRegistry {
         }
     }
 
-    pub fn create(&self, engine: CheetahServer<'static>) -> (u64, Arc<Mutex<Session>>) {
+    pub fn create(&self, engine: CheetahServer) -> (u64, Arc<Mutex<Session>>) {
         let mut sessions = self.sessions.lock().unwrap();
         let id = {
             let mut rng = self.id_rng.lock().unwrap();
@@ -210,7 +210,7 @@ mod tests {
     use crate::phe::Params;
 
     fn session_on_tiny_net() -> Session {
-        let ctx = crate::serve::leak_context(Params::default_params());
+        let ctx = Arc::new(crate::phe::Context::new(Params::default_params()));
         let mut net = Network {
             name: "sm".into(),
             input_shape: (1, 3, 3),
@@ -237,7 +237,7 @@ mod tests {
 
     #[test]
     fn registry_create_get_remove() {
-        let ctx = crate::serve::leak_context(Params::default_params());
+        let ctx = Arc::new(crate::phe::Context::new(Params::default_params()));
         let mut net = Network {
             name: "r".into(),
             input_shape: (1, 2, 2),
@@ -245,9 +245,9 @@ mod tests {
         };
         net.init_weights(9);
         let reg = SessionRegistry::new();
-        let engine = CheetahServer::new(ctx, net.clone(), ScalePlan::default_plan(), 0.0, 1);
+        let engine = CheetahServer::new(ctx.clone(), net.clone(), ScalePlan::default_plan(), 0.0, 1);
         let (id1, _) = reg.create(engine);
-        let engine = CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 2);
+        let engine = CheetahServer::new(ctx.clone(), net, ScalePlan::default_plan(), 0.0, 2);
         let (id2, _) = reg.create(engine);
         assert_ne!(id1, id2);
         assert_eq!(reg.len(), 2);

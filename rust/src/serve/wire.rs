@@ -388,10 +388,10 @@ mod tests {
 
     #[test]
     fn cts_roundtrip_fresh_and_evaluated() {
-        let ctx = Context::new(Params::new(1024, 20));
+        let ctx = std::sync::Arc::new(Context::new(Params::new(1024, 20)));
         let mut rng = ChaCha20Rng::from_u64_seed(3);
-        let enc = crate::phe::Encryptor::new(&ctx, &mut rng);
-        let ev = crate::phe::Evaluator::new(&ctx);
+        let enc = crate::phe::Encryptor::new(ctx.clone(), &mut rng);
+        let ev = crate::phe::Evaluator::new(ctx.clone());
         let vals: Vec<i64> = (0..50).map(|i| i - 25).collect();
         let fresh = enc.encrypt_slots(&vals, &mut rng);
         let mut ntt = fresh.clone();
@@ -413,7 +413,7 @@ mod tests {
 
     #[test]
     fn decode_cts_rejects_garbage_without_panicking() {
-        let ctx = Context::new(Params::new(1024, 20));
+        let ctx = std::sync::Arc::new(Context::new(Params::new(1024, 20)));
         // Absurd count.
         let mut buf = Vec::new();
         buf.extend_from_slice(&u32::MAX.to_le_bytes());

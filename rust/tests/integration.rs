@@ -1,21 +1,23 @@
 //! Integration tests across the public API: PHE × protocol × GC ×
 //! coordinator × runtime working together (cargo test --test integration).
 
+use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::gc::GcRelu;
 use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
 use cheetah::protocol::cheetah::CheetahRunner;
 use cheetah::protocol::gazelle::GazelleRunner;
-use cheetah::serve::{self, CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
+use cheetah::serve::{CheetahNetClient, PoolConfig, SecureConfig, SecureServer};
 use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
+use std::sync::Arc;
 
 /// The headline property: CHEETAH and GAZELLE produce consistent
 /// predictions on the same model, with CHEETAH using zero permutations
 /// and no garbled circuits, and GAZELLE paying both.
 #[test]
 fn cheetah_vs_gazelle_same_model() {
-    let ctx = Context::new(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let mut net = Network {
         name: "shared".into(),
@@ -25,9 +27,9 @@ fn cheetah_vs_gazelle_same_model() {
     net.init_weights(404);
     let float_net = net.clone();
 
-    let mut ch = CheetahRunner::new(&ctx, net.clone(), plan, 0.0, 405);
+    let mut ch = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 405);
     ch.run_offline();
-    let mut gz = GazelleRunner::new(&ctx, net, plan, 406);
+    let mut gz = GazelleRunner::new(ctx.clone(), net, plan, 406);
 
     let mut srng = SplitMix64::new(407);
     let input = Tensor::from_vec(
@@ -62,10 +64,10 @@ fn trained_model_private_inference() {
         eprintln!("skipping: run `make artifacts` first");
         return;
     }
-    let ctx = Context::new(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let net = cheetah::runtime::load_trained_network("artifacts", "netA").unwrap();
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.05, 500);
+    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.05, 500);
     runner.run_offline();
     let mut gen = SyntheticDigits::new(28, 501);
     let mut correct = 0;
@@ -80,7 +82,7 @@ fn trained_model_private_inference() {
 /// GC ReLU and the CHEETAH nonlinearity agree on the same share values.
 #[test]
 fn gc_and_obscure_relu_agree() {
-    let ctx = Context::new(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let p = ctx.params.p;
     let relu = GcRelu::new(p, 0);
     let mut rng = ChaCha20Rng::from_u64_seed(600);
@@ -142,7 +144,7 @@ fn coordinator_under_concurrent_load() {
 /// references.
 #[test]
 fn secure_serving_two_concurrent_sessions_bit_exact() {
-    let ctx = serve::leak_context(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let mut net = Network {
         name: "secure-e2e".into(),
@@ -172,7 +174,7 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
     // In-process references for both possible engine seeds.
     let expected: Vec<Vec<Vec<Vec<f64>>>> = (0..2u64)
         .map(|s| {
-            let mut runner = CheetahRunner::new(ctx, net.clone(), plan, 0.0, base_seed + s);
+            let mut runner = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, base_seed + s);
             runner.run_offline();
             inputs
                 .iter()
@@ -182,7 +184,7 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
         .collect();
 
     let server = SecureServer::serve(
-        ctx,
+        ctx.clone(),
         net,
         plan,
         "127.0.0.1:0",
@@ -199,6 +201,7 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
 
     let mut threads = Vec::new();
     for (c, qs) in inputs.into_iter().enumerate() {
+        let ctx = ctx.clone();
         threads.push(std::thread::spawn(move || {
             let mut client =
                 CheetahNetClient::connect(ctx, plan, &addr, 800 + c as u64).unwrap();
@@ -220,11 +223,65 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
     server.shutdown();
 }
 
+/// The engine API's reason to exist: the same seeded input through the
+/// `PlaintextQuantized`, `Cheetah`, `Gazelle`, and `CheetahNet` engines
+/// must produce the identical argmax — and the two CHEETAH deployments
+/// (in-process and over TCP) must be **bit-exact** on logits, since with a
+/// pinned blinding seed the transport may not perturb a single bit (see
+/// CHANGES.md: exact-tie rounding follows the blind's sign, so
+/// bit-exactness is a per-seed property).
+#[test]
+fn engines_cross_backend_agreement() {
+    let ctx = Arc::new(Context::new(Params::default_params()));
+    // Network A + a rendered digit: the configuration the protocol tests
+    // already pin down (large logit margins, so quantization/border drift
+    // cannot flip the prediction).
+    let net = Network::build(NetworkArch::NetA, 11);
+    let input = SyntheticDigits::new(28, 9).render(3).image;
+    let seed = 43u64;
+
+    let build = |backend: Backend| {
+        EngineBuilder::new(backend)
+            .network(net.clone())
+            .context(ctx.clone())
+            .epsilon(0.0)
+            .seed(seed)
+            .build()
+            .expect("engine build")
+    };
+
+    let mut quant = build(Backend::PlaintextQuantized);
+    let mut cheetah = build(Backend::Cheetah);
+    let mut gazelle = build(Backend::Gazelle);
+    let mut net_engine = build(Backend::CheetahNet); // self-hosted loopback server
+
+    let q = quant.infer(&input).unwrap();
+    let ch = cheetah.infer(&input).unwrap();
+    let gz = gazelle.infer(&input).unwrap();
+    let nt = net_engine.infer(&input).unwrap();
+
+    assert_eq!(ch.argmax, q.argmax, "cheetah vs quantized mirror");
+    assert_eq!(ch.argmax, gz.argmax, "cheetah vs gazelle baseline");
+    assert_eq!(ch.argmax, nt.argmax, "cheetah in-process vs over TCP");
+
+    // Bit-exactness where the protocol guarantees it: same server blinding
+    // seed ⇒ the socket deployment reproduces the in-process logits bit
+    // for bit.
+    assert_eq!(ch.logits, nt.logits, "TCP transport perturbed the logits");
+
+    // Section sanity: both protocol engines meter traffic; CHEETAH pays
+    // zero permutations while GAZELLE pays many.
+    assert!(ch.online_bytes() > 0 && nt.online_bytes() > 0);
+    assert_eq!(ch.ops.unwrap().perm, 0);
+    assert!(gz.ops.unwrap().perm > 0);
+    assert!(nt.traffic.unwrap().offline > 0, "offline indicators metered over the wire");
+}
+
 /// Property: private inference is deterministic given seeds, and the
 /// metered traffic equals the sum of serialized ciphertext sizes.
 #[test]
 fn traffic_accounting_consistent() {
-    let ctx = Context::new(Params::default_params());
+    let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let mut net = Network {
         name: "acct".into(),
@@ -232,7 +289,7 @@ fn traffic_accounting_consistent() {
         layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
     };
     net.init_weights(900);
-    let mut runner = CheetahRunner::new(&ctx, net, plan, 0.0, 901);
+    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 901);
     runner.run_offline();
     let input = Tensor::from_vec((0..36).map(|i| i as f64 / 36.0).collect(), 1, 6, 6);
     let rep = runner.infer(&input);
