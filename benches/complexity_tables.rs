@@ -28,7 +28,7 @@ fn main() {
         layers: vec![Layer::conv(5, 5, 1, 2)],
     };
     net.init_weights(1);
-    let mut runner = CheetahRunner::new(ctx, net, plan, 0.0, 2);
+    let mut runner = CheetahRunner::new(ctx, net, plan, 0.0, 2).expect("valid network");
     runner.run_offline();
     let input = cheetah::nn::SyntheticDigits::new(28, 3).render(1).image;
     let rep = runner.infer(&input);

@@ -83,7 +83,7 @@ fn run_config(ctx: &std::sync::Arc<Context>, cfg: &Cfg, samples: usize) -> (f64,
         layers: vec![Layer::conv(cfg.c_o, cfg.r, 1, cfg.r / 2)],
     };
     net.init_weights(5);
-    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 6);
+    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 6).expect("valid network");
     runner.run_offline();
     let input = cheetah::nn::Tensor::from_vec(
         (0..cfg.c_i * cfg.hw * cfg.hw).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),

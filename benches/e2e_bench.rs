@@ -5,12 +5,19 @@
 //! (`cheetah::engine::EngineBuilder`), so each row is literally the same
 //! build→prepare→infer calls with a different [`Backend`].
 //!
+//! CHEETAH additionally runs twice per network — once at `--threads 1`
+//! (the sequential baseline) and once at `--threads N` (default: all
+//! cores) — so the parallel-runtime speedup is measured and recorded.
+//! Results are persisted to `BENCH_e2e.json` (machine-readable; uploaded
+//! by CI) so the perf trajectory is tracked across PRs.
+//!
 //! Default: scaled-down AlexNet/VGG so the GAZELLE rotation path fits one
 //! half-row per channel and the bench finishes in minutes; `--paper` runs
 //! CHEETAH at full scale (GAZELLE full-scale cost is extrapolated from its
 //! measured per-op costs — see EXPERIMENTS.md).
 //!
-//! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]`
+//! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]
+//!       [-- --network netB] [-- --threads 4]`
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
@@ -33,6 +40,8 @@ fn input_for(net: &Network, seed: u64) -> Tensor {
 fn main() {
     let args = BenchArgs::from_env();
     let paper = args.has("--paper");
+    let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
+    let net_filter = args.get("--network").map(|s| s.to_string());
     let ctx = Arc::new(Context::new(Params::default_params()));
 
     // Spatial scale factors: GAZELLE needs h·w ≤ row_size (2048) per
@@ -45,6 +54,13 @@ fn main() {
         (NetworkArch::AlexNet, if paper { 1.0 } else { 0.2 }, 0.2),
         (NetworkArch::Vgg16, if paper { 1.0 } else { 32.0 / 224.0 }, 32.0 / 224.0),
     ];
+    let nets: Vec<(NetworkArch, f64, f64)> = nets
+        .into_iter()
+        .filter(|(arch, _, _)| {
+            net_filter.as_deref().is_none_or(|f| NetworkArch::from_key(f) == Some(*arch))
+        })
+        .collect();
+    assert!(!nets.is_empty(), "--network matched no architecture (try netA/netB/alexnet/vgg16)");
 
     let mut t = Table::new(&[
         "network",
@@ -56,9 +72,22 @@ fn main() {
         "speedup",
         "#Perm",
     ]);
+    // Machine-readable companion (BENCH_e2e.json): one row per
+    // (network, framework, threads) cell, times in milliseconds.
+    let mut jt = Table::new(&[
+        "network",
+        "framework",
+        "threads",
+        "online_ms",
+        "offline_ms",
+        "online_bytes",
+        "offline_bytes",
+        "perm",
+        "par_speedup",
+    ]);
 
     for (arch, ch_scale, gz_scale) in nets {
-        // ---- CHEETAH ----
+        // ---- CHEETAH: sequential baseline, then the parallel runtime ----
         let net = Network::build_scaled(arch, 21, ch_scale);
         let name = net.name.clone();
         let input = input_for(&net, 22);
@@ -69,9 +98,26 @@ fn main() {
             .seed(23)
             .build()
             .expect("cheetah engine");
+
+        // Offline and online are measured at each thread count: prepare()
+        // rebuilds the deployment from the same seed, so both runs carry
+        // identical blinding material and each infer is the deployment's
+        // first query — the logits must match bit for bit.
+        cheetah::par::set_threads(1);
+        let seq_prep = ch.prepare().expect("cheetah offline (threads=1)");
+        let seq_rep = ch.infer(&input).expect("cheetah inference (threads=1)");
+        let seq_online = seq_rep.online_total();
+
+        cheetah::par::set_threads(threads);
         let ch_prep = ch.prepare().expect("cheetah offline");
         let ch_rep = ch.infer(&input).expect("cheetah inference");
         let ch_online = ch_rep.online_total();
+        assert_eq!(
+            seq_rep.logits, ch_rep.logits,
+            "{name}: parallel run diverged from the sequential baseline"
+        );
+        let par_speedup = seq_rep.online_compute().as_secs_f64()
+            / ch_rep.online_compute().as_secs_f64().max(1e-9);
 
         // ---- GAZELLE (skip full-scale big nets; see header) ----
         let gz_net = Network::build_scaled(arch, 21, gz_scale);
@@ -108,18 +154,63 @@ fn main() {
             gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
         ]);
         t.row(&[
-            name.clone(),
+            format!("{name} [T=1]"),
+            "CHEETAH".into(),
+            format!("{:.0} ms", seq_online.as_secs_f64() * 1e3),
+            format!("{:.0} ms", seq_prep.offline_time.as_secs_f64() * 1e3),
+            fmt_bytes(seq_rep.online_bytes()),
+            fmt_bytes(seq_prep.offline_bytes),
+            format!(
+                "{:.0}x",
+                gz_online.as_secs_f64() / seq_online.as_secs_f64().max(1e-9)
+            ),
+            seq_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+        ]);
+        t.row(&[
+            format!("{name} [T={threads}]"),
             "CHEETAH".into(),
             format!("{:.0} ms", ch_online.as_secs_f64() * 1e3),
             format!("{:.0} ms", ch_prep.offline_time.as_secs_f64() * 1e3),
             fmt_bytes(ch_rep.online_bytes()),
             fmt_bytes(ch_prep.offline_bytes),
             format!(
-                "{:.0}x",
-                gz_online.as_secs_f64() / ch_online.as_secs_f64().max(1e-9)
+                "{:.0}x (par {:.2}x)",
+                gz_online.as_secs_f64() / ch_online.as_secs_f64().max(1e-9),
+                par_speedup
             ),
             ch_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
         ]);
+
+        // JSON rows record online *compute* (no wire) for both frameworks —
+        // the quantity the thread sweep varies; the printed table shows
+        // online totals (compute + modeled wire).
+        jt.row(&[
+            name.clone(),
+            "gazelle".into(),
+            threads.to_string(),
+            format!("{:.3}", gz_rep.online_compute().as_secs_f64() * 1e3),
+            format!("{:.3}", gz_prep.offline_time.as_secs_f64() * 1e3),
+            gz_rep.online_bytes().to_string(),
+            gz_prep.offline_bytes.to_string(),
+            gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+            String::new(),
+        ]);
+        for (thr, rep, prep, speedup) in [
+            (1usize, &seq_rep, &seq_prep, String::new()),
+            (threads, &ch_rep, &ch_prep, format!("{par_speedup:.3}")),
+        ] {
+            jt.row(&[
+                name.clone(),
+                "cheetah".into(),
+                thr.to_string(),
+                format!("{:.3}", rep.online_compute().as_secs_f64() * 1e3),
+                format!("{:.3}", prep.offline_time.as_secs_f64() * 1e3),
+                rep.online_bytes().to_string(),
+                prep.offline_bytes.to_string(),
+                rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+                speedup,
+            ]);
+        }
 
         if args.has("--breakdown") && arch == NetworkArch::Vgg16 {
             let mut bt = Table::new(&[
@@ -157,4 +248,7 @@ fn main() {
     t.print(
         "Table 7 — end-to-end networks (paper: CHEETAH 218x/334x/130x/140x over GAZELLE)",
     );
+    jt.write_json("BENCH_e2e.json", "e2e networks: online/offline per (network, framework, threads)")
+        .expect("write BENCH_e2e.json");
+    println!("\nwrote BENCH_e2e.json");
 }

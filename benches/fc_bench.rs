@@ -61,7 +61,7 @@ fn main() {
             layers: vec![Layer::fc(n_o)],
         };
         net.init_weights(9);
-        let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 10);
+        let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 10).expect("valid network");
         runner.run_offline();
         let input = cheetah::nn::Tensor::from_flat(
             (0..n_i).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),

@@ -12,9 +12,11 @@
 //! * pool effectiveness (engines prebuilt vs built inline).
 //!
 //! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
-//!       [-- --depth 4] [-- --net netA]`
+//!       [-- --depth 4] [-- --net netA] [-- --threads 4]`
 //! Default is a small conv+fc model so the sweep finishes quickly; `--net
-//! netA` runs the paper's Network A (28×28) at realistic cost.
+//! netA` runs the paper's Network A (28×28) at realistic cost. Results are
+//! also persisted to `BENCH_serve.json` (wall time, bytes, threads) so the
+//! serving-perf trajectory is recorded across PRs; CI uploads it.
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
@@ -65,12 +67,15 @@ fn main() {
     let queries = args.get_usize("--queries", 2);
     let depth = args.get_usize("--depth", max_sessions);
     let net_name = args.get("--net").unwrap_or("small").to_string();
+    let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
+    cheetah::par::set_threads(threads);
 
     let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let net = bench_net(&net_name);
     println!(
-        "secure serving of {} — sessions up to {max_sessions}, {queries} queries/session",
+        "secure serving of {} — sessions up to {max_sessions}, {queries} queries/session, \
+         {threads} compute threads",
         net.name
     );
 
@@ -81,7 +86,22 @@ fn main() {
         "query p50 (server)",
         "wall",
         "req/s",
+        "online bytes",
         "pool built/hits/inline",
+    ]);
+    // Machine-readable companion (BENCH_serve.json).
+    let mut jt = Table::new(&[
+        "sessions",
+        "pool_depth",
+        "threads",
+        "setup_p50_ms",
+        "query_p50_ms",
+        "wall_s",
+        "req_per_s",
+        "online_bytes",
+        "pool_produced",
+        "pool_hits",
+        "pool_inline",
     ]);
 
     let session_counts: Vec<usize> =
@@ -93,7 +113,13 @@ fn main() {
             } else {
                 PoolConfig::disabled()
             };
-            let cfg = SecureConfig { epsilon: 0.0, workers: sessions.min(4), pool, ..Default::default() };
+            let cfg = SecureConfig {
+                epsilon: 0.0,
+                workers: sessions.min(4),
+                pool,
+                threads,
+                ..Default::default()
+            };
             let server = SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
                 .expect("bind secure server");
             if pool_on {
@@ -123,30 +149,51 @@ fn main() {
                     let t_setup = Instant::now();
                     engine.prepare().expect("secure session setup");
                     let setup = t_setup.elapsed();
+                    let mut bytes = 0u64;
                     for _ in 0..queries {
-                        engine.infer(&input).expect("secure inference");
+                        let rep = engine.infer(&input).expect("secure inference");
+                        let traffic = rep.traffic.expect("networked engine meters traffic");
+                        bytes += traffic.c2s + traffic.s2c;
                     }
-                    setup
+                    (setup, bytes)
                 }));
             }
-            let mut setups: Vec<Duration> = handles
+            let (mut setups, online_bytes): (Vec<Duration>, u64) = handles
                 .into_iter()
                 .map(|h| h.join().expect("client thread"))
-                .collect();
+                .fold((Vec::new(), 0), |(mut v, b), (s, bytes)| {
+                    v.push(s);
+                    (v, b + bytes)
+                });
             let wall = t0.elapsed();
 
             let total = sessions * queries;
             let m = server.metrics.summary();
             assert_eq!(m.requests as usize, total, "metered queries mismatch");
             let ps = server.pool_stats();
+            let setup_p50 = p50(&mut setups);
             t.row(&[
                 sessions.to_string(),
                 if pool_on { format!("on (d={depth})") } else { "off".into() },
-                cheetah::util::fmt_duration(p50(&mut setups)),
+                cheetah::util::fmt_duration(setup_p50),
                 cheetah::util::fmt_duration(m.p50),
                 format!("{:.2}s", wall.as_secs_f64()),
                 format!("{:.2}", total as f64 / wall.as_secs_f64()),
+                cheetah::util::fmt_bytes(online_bytes),
                 format!("{}/{}/{}", ps.produced, ps.pool_hits, ps.inline_builds),
+            ]);
+            jt.row(&[
+                sessions.to_string(),
+                if pool_on { depth.to_string() } else { "0".into() },
+                threads.to_string(),
+                format!("{:.3}", setup_p50.as_secs_f64() * 1e3),
+                format!("{:.3}", m.p50.as_secs_f64() * 1e3),
+                format!("{:.3}", wall.as_secs_f64()),
+                format!("{:.3}", total as f64 / wall.as_secs_f64()),
+                online_bytes.to_string(),
+                ps.produced.to_string(),
+                ps.pool_hits.to_string(),
+                ps.inline_builds.to_string(),
             ]);
             server.shutdown();
         }
@@ -157,4 +204,7 @@ fn main() {
          online latency unchanged",
         net.name
     ));
+    jt.write_json("BENCH_serve.json", "secure serving: wall/bytes per (sessions, pool, threads)")
+        .expect("write BENCH_serve.json");
+    println!("\nwrote BENCH_serve.json");
 }

@@ -120,6 +120,55 @@ impl Table {
     pub fn print(&self, title: &str) {
         print!("{}", self.render(title));
     }
+
+    /// Write the table as machine-readable JSON: `{"title", "headers",
+    /// "rows": [{header: cell, …}, …]}` — every cell a string, exactly as
+    /// rendered. Hand-rolled serialization (the offline registry has no
+    /// `serde`); benches use this to persist `BENCH_*.json` so the perf
+    /// trajectory is recorded across PRs and CI uploads it as an artifact.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>, title: &str) -> std::io::Result<()> {
+        fn esc(s: &str) -> String {
+            let mut out = String::with_capacity(s.len());
+            for c in s.chars() {
+                match c {
+                    '"' => out.push_str("\\\""),
+                    '\\' => out.push_str("\\\\"),
+                    '\n' => out.push_str("\\n"),
+                    '\r' => out.push_str("\\r"),
+                    '\t' => out.push_str("\\t"),
+                    c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                    c => out.push(c),
+                }
+            }
+            out
+        }
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"title\": \"{}\",\n", esc(title)));
+        s.push_str("  \"headers\": [");
+        for (i, h) in self.headers.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{}\"", esc(h)));
+        }
+        s.push_str("],\n  \"rows\": [\n");
+        for (ri, row) in self.rows.iter().enumerate() {
+            s.push_str("    {");
+            for (i, cell) in row.iter().enumerate() {
+                if i > 0 {
+                    s.push_str(", ");
+                }
+                s.push_str(&format!("\"{}\": \"{}\"", esc(&self.headers[i]), esc(cell)));
+            }
+            s.push('}');
+            if ri + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("  ]\n}\n");
+        std::fs::write(path, s)
+    }
 }
 
 /// Parse simple `--flag value` / `--flag` CLI args for bench binaries.
@@ -170,5 +219,26 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new(&["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    #[test]
+    fn table_writes_machine_readable_json() {
+        let mut t = Table::new(&["network", "online ms"]);
+        t.row(&["netB \"quoted\"".into(), "12.5".into()]);
+        t.row(&["netA".into(), "3.1".into()]);
+        let path = std::env::temp_dir().join(format!(
+            "cheetah_bench_json_test_{}.json",
+            std::process::id()
+        ));
+        t.write_json(&path, "e2e\nbench").unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        // Escaping and structure (no serde available to parse; check the
+        // load-bearing fragments).
+        assert!(got.contains("\"title\": \"e2e\\nbench\""), "{got}");
+        assert!(got.contains("\"headers\": [\"network\", \"online ms\"]"), "{got}");
+        assert!(got.contains("\"network\": \"netB \\\"quoted\\\"\""), "{got}");
+        assert!(got.contains("\"online ms\": \"3.1\""), "{got}");
+        assert_eq!(got.matches('{').count(), 3, "one object per row plus the root: {got}");
     }
 }

@@ -161,7 +161,7 @@ impl InferenceEngine for CheetahEngine {
             self.epsilon,
             self.seed,
             self.link,
-        );
+        )?;
         self.offline_bytes = runner.run_offline();
         self.runner = Some(runner);
         Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
@@ -239,7 +239,8 @@ impl InferenceEngine for GazelleEngine {
     /// per-ReLU garbled tables.
     fn prepare(&mut self) -> EngineResult<Prepared> {
         let t0 = Instant::now();
-        let runner = GazelleRunner::new(self.ctx.clone(), self.net.clone(), self.plan, self.seed);
+        let runner =
+            GazelleRunner::new(self.ctx.clone(), self.net.clone(), self.plan, self.seed)?;
         self.offline_bytes = runner.offline_bytes();
         self.runner = Some(runner);
         Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })

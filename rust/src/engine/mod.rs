@@ -44,6 +44,7 @@ pub use report::{comparison_table, EngineReport, StepReport, Timing, Traffic};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, NetworkArch, Tensor};
 use crate::phe::{Context, Params};
+use crate::protocol::cheetah::{ProtocolSpec, SpecError};
 use crate::protocol::transport::LinkModel;
 use crate::serve::{PoolConfig, SecureConfig};
 use std::net::SocketAddr;
@@ -106,11 +107,14 @@ impl std::fmt::Display for Backend {
     }
 }
 
-/// Engine failure: a build-time configuration problem or a transport error
-/// from a networked backend.
+/// Engine failure: a build-time configuration problem, a network the
+/// protocol cannot express, or a transport error from a networked backend.
 #[derive(Debug)]
 pub enum EngineError {
     Build(String),
+    /// The network cannot compile into a protocol spec (typed — previously
+    /// a panic deep inside the protocol layer).
+    Spec(SpecError),
     Io(std::io::Error),
 }
 
@@ -118,6 +122,7 @@ impl std::fmt::Display for EngineError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             EngineError::Build(msg) => write!(f, "engine build error: {msg}"),
+            EngineError::Spec(e) => write!(f, "engine spec error: {e}"),
             EngineError::Io(e) => write!(f, "engine transport error: {e}"),
         }
     }
@@ -127,8 +132,15 @@ impl std::error::Error for EngineError {
     fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
         match self {
             EngineError::Build(_) => None,
+            EngineError::Spec(e) => Some(e),
             EngineError::Io(e) => Some(e),
         }
+    }
+}
+
+impl From<SpecError> for EngineError {
+    fn from(e: SpecError) -> Self {
+        EngineError::Spec(e)
     }
 }
 
@@ -186,6 +198,7 @@ pub struct EngineBuilder {
     link: LinkModel,
     remote: Option<SocketAddr>,
     secure: Option<SecureConfig>,
+    threads: Option<usize>,
 }
 
 impl EngineBuilder {
@@ -203,6 +216,7 @@ impl EngineBuilder {
             link: LinkModel::gigabit_lan(),
             remote: None,
             secure: None,
+            threads: None,
         }
     }
 
@@ -278,6 +292,24 @@ impl EngineBuilder {
         self
     }
 
+    /// Compute threads for the parallel runtime ([`crate::par`]): the
+    /// protocol's per-channel ciphertext streams, NTT batches, and
+    /// plaintext conv loops fan out over this many threads. Default: the
+    /// global setting (`CHEETAH_THREADS` env var, else
+    /// `available_parallelism()`). `1` forces the exact sequential code
+    /// path; the arithmetic is bit-identical at every thread count.
+    ///
+    /// **Scope: this knob is process-global**, not per-engine — `build()`
+    /// calls [`crate::par::set_threads`], so the last engine (or
+    /// [`SecureConfig::threads`]) to set it wins for *every* engine and
+    /// server in the process. Results are unaffected (bit-exact at any
+    /// count); only throughput is. Don't lower it in a process that is
+    /// concurrently serving (per-engine pools are a ROADMAP item).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
     fn resolve_network(&self) -> EngineResult<Network> {
         if let Some(net) = &self.network {
             return Ok(net.clone());
@@ -299,8 +331,14 @@ impl EngineBuilder {
 
     /// Construct the engine. Heavy offline work (key generation, blinding,
     /// handshakes) is deferred to [`InferenceEngine::prepare`] so builds are
-    /// cheap and the offline phase stays measurable.
+    /// cheap and the offline phase stays measurable — but the network →
+    /// protocol-spec compilation is validated **here** for every backend
+    /// that hosts a model, so a malformed network is a typed build error
+    /// (never a panic inside `prepare`/`infer` or a serving thread).
     pub fn build(self) -> EngineResult<Box<dyn InferenceEngine>> {
+        if let Some(n) = self.threads {
+            crate::par::set_threads(n);
+        }
         Ok(match self.backend {
             Backend::PlaintextFloat => Box::new(PlaintextFloatEngine::new(self.resolve_network()?)),
             Backend::PlaintextQuantized => Box::new(PlaintextQuantizedEngine::new(
@@ -311,6 +349,7 @@ impl EngineBuilder {
             )),
             Backend::Cheetah => {
                 let net = self.resolve_network()?;
+                ProtocolSpec::compile(&net)?;
                 Box::new(CheetahEngine::new(
                     self.resolve_context(),
                     net,
@@ -322,21 +361,26 @@ impl EngineBuilder {
             }
             Backend::Gazelle => {
                 let net = self.resolve_network()?;
+                ProtocolSpec::compile(&net)?;
                 Box::new(GazelleEngine::new(self.resolve_context(), net, self.plan, self.seed))
             }
             Backend::CheetahNet => {
                 let target = match self.remote {
                     Some(addr) => NetTarget::Remote(addr),
-                    None => NetTarget::SelfHosted {
-                        net: self.resolve_network()?,
-                        cfg: self.secure.unwrap_or(SecureConfig {
-                            epsilon: self.epsilon,
-                            seed: Some(self.seed),
-                            workers: 2,
-                            pool: PoolConfig::disabled(),
-                            ..SecureConfig::default()
-                        }),
-                    },
+                    None => {
+                        let net = self.resolve_network()?;
+                        ProtocolSpec::compile(&net)?;
+                        NetTarget::SelfHosted {
+                            net,
+                            cfg: self.secure.unwrap_or(SecureConfig {
+                                epsilon: self.epsilon,
+                                seed: Some(self.seed),
+                                workers: 2,
+                                pool: PoolConfig::disabled(),
+                                ..SecureConfig::default()
+                            }),
+                        }
+                    }
                 };
                 Box::new(CheetahNetEngine::new(
                     self.resolve_context(),
@@ -367,6 +411,24 @@ mod tests {
     fn builder_requires_a_network_for_self_hosting_backends() {
         let err = EngineBuilder::new(Backend::Cheetah).build().map(|_| ()).unwrap_err();
         assert!(matches!(err, EngineError::Build(_)), "{err}");
+    }
+
+    #[test]
+    fn malformed_network_is_a_typed_build_error() {
+        use crate::nn::Layer;
+        let bad = Network {
+            name: "relu-first".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::relu(), Layer::fc(2)],
+        };
+        for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+            let err = EngineBuilder::new(backend)
+                .network(bad.clone())
+                .build()
+                .map(|_| ())
+                .unwrap_err();
+            assert!(matches!(err, EngineError::Spec(_)), "{backend}: {err}");
+        }
     }
 
     #[test]

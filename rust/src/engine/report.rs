@@ -94,6 +94,13 @@ impl EngineReport {
         self.timing.map(|t| t.online_total()).unwrap_or_default()
     }
 
+    /// Online compute alone (no wire), when timed — the quantity the
+    /// parallel runtime accelerates, so the thread-sweep benches compare
+    /// this across thread counts.
+    pub fn online_compute(&self) -> Duration {
+        self.timing.map(|t| t.online_compute).unwrap_or_default()
+    }
+
     /// Total online bytes, when metered.
     pub fn online_bytes(&self) -> u64 {
         self.traffic.map(|t| t.online_total()).unwrap_or_default()

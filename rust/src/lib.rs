@@ -25,6 +25,11 @@
 //! The [`runtime`] module loads the L2 artifacts through PJRT and executes
 //! them from Rust; Python is never on the request path.
 //!
+//! The [`par`] module is the crate-wide parallel runtime: a dependency-free
+//! fork-join pool that fans the protocol's per-channel ciphertext streams,
+//! NTT batches, and plaintext conv loops across cores, bit-exactly (the
+//! `--threads`/`CHEETAH_THREADS` knob, default `available_parallelism()`).
+//!
 //! The [`engine`] module is the crate's front door: one build→infer surface
 //! ([`engine::EngineBuilder`] / [`engine::InferenceEngine`]) over plaintext,
 //! CHEETAH, GAZELLE, and networked backends, with a unified
@@ -40,6 +45,7 @@ pub mod engine;
 pub mod fixed;
 pub mod gc;
 pub mod nn;
+pub mod par;
 pub mod phe;
 pub mod protocol;
 pub mod runtime;

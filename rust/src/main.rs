@@ -5,12 +5,19 @@
 //! cheetah serve-secure  [--addr A] [--model netA] [--pool-depth N]    serve the CHEETAH protocol over TCP (private inference)
 //!                       [--pool-workers N] [--workers N] [--eps E]
 //!                       [--seed S]  (blinding seed; default: OS entropy)
+//!                       [--threads T]  (compute threads; 0 = all cores)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
-//!                       [--label D] [--seed S]                         B ∈ {plaintext-float, plaintext-quantized,
+//!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
 //!                                                                      cheetah, gazelle, cheetah-net, all}
 //! cheetah tables                                                      print the paper's analytic tables
 //! cheetah bench-help                                                   how to regenerate every paper table/figure
 //! ```
+//!
+//! `--threads` drives the crate-wide parallel runtime ([`cheetah::par`]):
+//! per-channel ciphertext streams, NTT batches, and conv loops fan out over
+//! that many threads (default `available_parallelism()`, overridable with
+//! the `CHEETAH_THREADS` env var; `1` is the exact sequential path — the
+//! arithmetic is bit-identical at every thread count).
 //!
 //! `infer` runs the same input through every requested backend via
 //! [`cheetah::engine::EngineBuilder`] and prints one unified
@@ -82,6 +89,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let pool_workers: usize = arg("--pool-workers", "1").parse()?;
             let workers: usize = arg("--workers", "2").parse()?;
             let eps: f64 = arg("--eps", "0.0").parse()?;
+            // Compute threads: 0 = default (CHEETAH_THREADS / all cores).
+            let threads: usize = arg("--threads", "0").parse()?;
             // Blinding seed: OS entropy unless pinned for reproducibility.
             let seed_arg = arg("--seed", "");
             let seed = if seed_arg.is_empty() { None } else { Some(seed_arg.parse()?) };
@@ -93,14 +102,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 seed,
                 workers,
                 pool: PoolConfig { depth: pool_depth, workers: pool_workers },
+                threads,
                 ..SecureConfig::default()
             };
             let server =
                 SecureServer::serve(ctx, net, ScalePlan::default_plan(), &addr, cfg)?;
             println!(
                 "secure CHEETAH serving of {name} on {} (ε={eps}, {workers} workers, \
-                 pool depth {pool_depth}×{pool_workers}) — Ctrl-C to stop",
-                server.addr
+                 {} compute threads, pool depth {pool_depth}×{pool_workers}) — Ctrl-C to stop",
+                server.addr,
+                cheetah::par::threads(),
             );
             loop {
                 std::thread::sleep(Duration::from_secs(10));
@@ -125,6 +136,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let eps: f64 = arg("--eps", "0.1").parse()?;
             let label: usize = arg("--label", "3").parse()?;
             let seed: u64 = arg("--seed", "1").parse()?;
+            let threads: usize = arg("--threads", "0").parse()?;
+            cheetah::par::set_threads(threads);
             let backend_arg = arg("--backend", "cheetah");
 
             let backends: Vec<Backend> = if backend_arg == "all" {
@@ -143,9 +156,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let ctx = Arc::new(Context::new(Params::default_params()));
             let sample = SyntheticDigits::new(28, 5).render(label);
             println!(
-                "one private digit ('{label}') through {} backend(s) on {}",
+                "one private digit ('{label}') through {} backend(s) on {} \
+                 ({} compute threads)",
                 backends.len(),
-                net.name
+                net.name,
+                cheetah::par::threads(),
             );
 
             let mut reports = Vec::new();

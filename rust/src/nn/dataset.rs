@@ -80,6 +80,24 @@ impl SyntheticDigits {
     pub fn batch(&mut self, count: usize) -> Vec<Sample> {
         (0..count).map(|i| self.render(i % 10)).collect()
     }
+
+    /// Render one sample replicated across `channels` input channels —
+    /// the calibration corpus for multi-channel (RGB-style) networks like
+    /// AlexNet/VGG, where every channel carries the same glyph (activation
+    /// equalization only needs representative magnitudes, not color).
+    pub fn render_channels(&mut self, label: usize, channels: usize) -> Sample {
+        assert!(channels >= 1);
+        let base = self.render(label);
+        if channels == 1 {
+            return base;
+        }
+        let (_, h, w) = base.image.shape();
+        let mut data = Vec::with_capacity(channels * h * w);
+        for _ in 0..channels {
+            data.extend_from_slice(&base.image.data);
+        }
+        Sample { image: Tensor::from_vec(data, channels, h, w), label }
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +170,19 @@ mod tests {
             }
         }
         assert!(correct > 60, "template accuracy only {correct}/{total}");
+    }
+
+    #[test]
+    fn render_channels_replicates_the_glyph() {
+        let mut g = SyntheticDigits::new(12, 8);
+        let s = g.render_channels(5, 3);
+        assert_eq!(s.image.shape(), (3, 12, 12));
+        let hw = 12 * 12;
+        assert_eq!(&s.image.data[..hw], &s.image.data[hw..2 * hw]);
+        assert_eq!(&s.image.data[..hw], &s.image.data[2 * hw..]);
+        // Single-channel request is the plain render.
+        let s1 = g.render_channels(5, 1);
+        assert_eq!(s1.image.shape(), (1, 12, 12));
     }
 
     #[test]

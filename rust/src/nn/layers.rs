@@ -8,6 +8,7 @@
 
 use super::tensor::Tensor;
 use crate::fixed::ScalePlan;
+use crate::par;
 use crate::util::rng::SplitMix64;
 
 /// The kind and hyper-parameters of a layer.
@@ -94,13 +95,18 @@ impl Layer {
     }
 }
 
-/// Float forward pass for one layer.
+/// Float forward pass for one layer. The conv and FC loops fan their
+/// independent output channels/neurons across the [`crate::par`] pool
+/// (float accumulation order within one output is unchanged, so results
+/// are bit-identical at any thread count).
 pub fn forward_layer(layer: &Layer, input: &Tensor) -> Tensor {
     match layer.kind {
         LayerKind::Conv2d { out_channels, kernel, stride, pad } => {
             let (oc, oh, ow) = layer.out_shape(input.c, input.h, input.w);
             let mut out = Tensor::zeros(oc, oh, ow);
-            for o in 0..out_channels {
+            debug_assert_eq!(oc, out_channels);
+            // Each output channel owns one disjoint oh·ow plane.
+            par::for_each_chunk_mut(&mut out.data, oh * ow, |o, plane| {
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let mut acc = 0.0;
@@ -114,10 +120,10 @@ pub fn forward_layer(layer: &Layer, input: &Tensor) -> Tensor {
                                 }
                             }
                         }
-                        *out.at_mut(o, oy, ox) = acc;
+                        plane[oy * ow + ox] = acc;
                     }
                 }
-            }
+            });
             out
         }
         LayerKind::Relu => {
@@ -149,13 +155,18 @@ pub fn forward_layer(layer: &Layer, input: &Tensor) -> Tensor {
         LayerKind::Fc { out_features } => {
             let in_features = input.len();
             let mut out = Tensor::zeros(1, 1, out_features);
-            for o in 0..out_features {
-                let mut acc = 0.0;
-                for (i, &x) in input.data.iter().enumerate() {
-                    acc += layer.fc_w(in_features, o, i) * x;
+            // Group output neurons so each task amortizes dispatch cost.
+            const NEURONS_PER_CHUNK: usize = 16;
+            par::for_each_chunk_mut(&mut out.data, NEURONS_PER_CHUNK, |ci, chunk| {
+                for (k, slot) in chunk.iter_mut().enumerate() {
+                    let o = ci * NEURONS_PER_CHUNK + k;
+                    let mut acc = 0.0;
+                    for (i, &x) in input.data.iter().enumerate() {
+                        acc += layer.fc_w(in_features, o, i) * x;
+                    }
+                    *slot = acc;
                 }
-                out.data[o] = acc;
-            }
+            });
             out
         }
     }

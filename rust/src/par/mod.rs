@@ -1,0 +1,480 @@
+//! Dependency-free structured concurrency for the crate's hot paths.
+//!
+//! CHEETAH's speed story is built on restructuring linear layers into
+//! *embarrassingly parallel* per-channel ciphertext streams, so the runtime
+//! here is deliberately minimal: a lazily-started global pool of worker
+//! threads plus three fork-join primitives ([`join`], [`for_each_chunked`] /
+//! [`for_each_chunk_mut`], [`map_indexed`] / [`map_collect`]). There is no
+//! work stealing and no task graph — every parallel region statically
+//! partitions its work by index, writes results into pre-sized slots, and
+//! blocks the caller until the whole region is done.
+//!
+//! **Determinism by construction.** Which thread executes a chunk races;
+//! *what* each chunk computes and *where* it writes never does. All the
+//! arithmetic the crate fans out is exact integer/modular math with no
+//! cross-chunk accumulation, so the output of any parallel region is
+//! bit-identical to the sequential loop it replaced, for every thread
+//! count (the integration tests sweep 1/2/8 and assert exactly this).
+//!
+//! **Sequential fallback.** With an effective thread count of 1 (the
+//! `--threads 1` CLI knob, `CHEETAH_THREADS=1`, or a single-core host)
+//! every primitive degenerates to the plain `for` loop — the pool is never
+//! started and no worker thread is ever spawned.
+//!
+//! **Nested regions.** A region's caller first claims and executes unclaimed
+//! chunks itself, then waits only on chunks other threads have already
+//! claimed. A chunk may itself open a nested region (the same rule applies),
+//! so waiting always points at strictly younger regions — the blocking graph
+//! is acyclic and nested [`join`]s cannot deadlock even when every worker is
+//! busy.
+//!
+//! RNG-consuming protocol material (blinding draws, fresh shares, key/error
+//! sampling) deliberately stays **outside** this module: consuming a shared
+//! RNG from racing threads would make the draw order scheduling-dependent.
+//! Callers either keep those loops sequential or derive an independent,
+//! deterministically-seeded stream per chunk (as the CHEETAH server does for
+//! its per-channel noise streams).
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Explicit thread-count override (0 = unset, fall back to the default).
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+/// Resolved default: `CHEETAH_THREADS` env var, else `available_parallelism`.
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+fn default_threads() -> usize {
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("CHEETAH_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Set the global thread count. `0` restores the default
+/// (`CHEETAH_THREADS` env var, else `available_parallelism()`); `1` forces
+/// the exact sequential code path everywhere.
+pub fn set_threads(n: usize) {
+    CONFIGURED.store(n, Ordering::Relaxed);
+}
+
+/// The effective thread count parallel regions will target.
+pub fn threads() -> usize {
+    match CONFIGURED.load(Ordering::Relaxed) {
+        0 => default_threads(),
+        n => n,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Region: one fork-join parallel section
+// ---------------------------------------------------------------------------
+
+/// A parallel region: `n` chunks claimed by index from `next`, executed via
+/// the lifetime-erased chunk function `f`.
+///
+/// Safety contract for the erased lifetime: `f` is only ever invoked for a
+/// claimed index `i < n`, and the submitting caller does not return from
+/// [`run_chunks`] until `finished == n` — i.e. until every claimed chunk has
+/// completed. The header itself lives in an `Arc`, so a late worker that
+/// pops an already-exhausted region only touches the (still-alive) atomics
+/// and never calls `f`.
+struct Region {
+    f: &'static (dyn Fn(usize) + Sync),
+    n: usize,
+    next: AtomicUsize,
+    finished: AtomicUsize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl Region {
+    /// Claim and execute chunks until none are left unclaimed.
+    fn drain(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.n {
+                return;
+            }
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| (self.f)(i))) {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(p);
+                }
+            }
+            // AcqRel: publishes this chunk's writes to whoever observes the
+            // final count (the RMW chain forms one release sequence).
+            if self.finished.fetch_add(1, Ordering::AcqRel) + 1 == self.n {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    /// Block until every chunk (including ones claimed by workers) is done.
+    fn wait(&self) {
+        if self.finished.load(Ordering::Acquire) >= self.n {
+            return;
+        }
+        let mut done = self.done.lock().unwrap();
+        while !*done {
+            // The timeout is belt-and-braces against a lost wakeup; the
+            // predicate re-check is what actually terminates the loop.
+            let (g, _) = self.done_cv.wait_timeout(done, Duration::from_millis(1)).unwrap();
+            done = g;
+            if self.finished.load(Ordering::Acquire) >= self.n {
+                return;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global pool
+// ---------------------------------------------------------------------------
+
+struct Pool {
+    queue: Mutex<VecDeque<Arc<Region>>>,
+    work_cv: Condvar,
+    spawned: Mutex<usize>,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+fn pool() -> &'static Pool {
+    POOL.get_or_init(|| Pool {
+        queue: Mutex::new(VecDeque::new()),
+        work_cv: Condvar::new(),
+        spawned: Mutex::new(0),
+    })
+}
+
+impl Pool {
+    /// Hand `helpers` claim tickets for `region` to the workers (spawning
+    /// workers lazily up to the requested count).
+    fn submit(&'static self, region: &Arc<Region>, helpers: usize) {
+        self.ensure_workers(helpers);
+        {
+            let mut q = self.queue.lock().unwrap();
+            for _ in 0..helpers {
+                q.push_back(region.clone());
+            }
+        }
+        if helpers == 1 {
+            self.work_cv.notify_one();
+        } else {
+            self.work_cv.notify_all();
+        }
+    }
+
+    fn ensure_workers(&'static self, want: usize) {
+        let mut spawned = self.spawned.lock().unwrap();
+        while *spawned < want {
+            let idx = *spawned;
+            std::thread::Builder::new()
+                .name(format!("cheetah-par-{idx}"))
+                .spawn(move || self.worker_loop())
+                .expect("spawn par worker");
+            *spawned += 1;
+        }
+    }
+
+    fn worker_loop(&'static self) {
+        loop {
+            let region = {
+                let mut q = self.queue.lock().unwrap();
+                loop {
+                    if let Some(r) = q.pop_front() {
+                        break r;
+                    }
+                    q = self.work_cv.wait(q).unwrap();
+                }
+            };
+            region.drain();
+        }
+    }
+}
+
+/// Execute `f(0), f(1), …, f(n-1)` across the caller plus up to
+/// `threads()-1` pool workers; returns once all `n` chunks completed. The
+/// caller participates (and drains every unclaimed chunk itself), so a
+/// region always makes progress even when every worker is busy. Panics in
+/// any chunk are re-raised on the caller after the region completes.
+fn run_chunks(n: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n == 0 {
+        return;
+    }
+    let t = threads();
+    if t <= 1 || n == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    // Lifetime erasure: see the Region safety contract above — `f` is only
+    // called for claimed chunks, all of which complete before this function
+    // returns, so the borrow outlives every call.
+    #[allow(clippy::useless_transmute)]
+    let f_erased: &'static (dyn Fn(usize) + Sync) =
+        unsafe { std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f) };
+    let region = Arc::new(Region {
+        f: f_erased,
+        n,
+        next: AtomicUsize::new(0),
+        finished: AtomicUsize::new(0),
+        panic: Mutex::new(None),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
+    });
+    let helpers = (t - 1).min(n - 1);
+    pool().submit(&region, helpers);
+    region.drain();
+    region.wait();
+    if let Some(p) = region.panic.lock().unwrap().take() {
+        resume_unwind(p);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public primitives
+// ---------------------------------------------------------------------------
+
+/// Run two closures, potentially in parallel, and return both results.
+/// With `threads() == 1` this is exactly `(a(), b())`.
+pub fn join<RA, RB, A, B>(a: A, b: B) -> (RA, RB)
+where
+    A: FnOnce() -> RA + Send,
+    B: FnOnce() -> RB + Send,
+    RA: Send,
+    RB: Send,
+{
+    if threads() <= 1 {
+        return (a(), b());
+    }
+    let a_cell = Mutex::new(Some(a));
+    let b_cell = Mutex::new(Some(b));
+    let ra = Mutex::new(None);
+    let rb = Mutex::new(None);
+    run_chunks(2, &|i| {
+        if i == 0 {
+            let f = a_cell.lock().unwrap().take().expect("join chunk 0 claimed twice");
+            *ra.lock().unwrap() = Some(f());
+        } else {
+            let f = b_cell.lock().unwrap().take().expect("join chunk 1 claimed twice");
+            *rb.lock().unwrap() = Some(f());
+        }
+    });
+    (
+        ra.into_inner().unwrap().expect("join arm a did not run"),
+        rb.into_inner().unwrap().expect("join arm b did not run"),
+    )
+}
+
+/// Split `0..len` into contiguous index ranges of at least `min_grain`
+/// elements and run `f(lo, hi)` on each, in parallel. Ranges are disjoint
+/// and cover `0..len` exactly once; `f` must only touch state owned by its
+/// range.
+pub fn for_each_chunked<F: Fn(usize, usize) + Sync>(len: usize, min_grain: usize, f: F) {
+    if len == 0 {
+        return;
+    }
+    let grain = min_grain.max(1);
+    // Over-partition by 4x the thread count for load balance, but never
+    // below the grain size.
+    let n_chunks = len.div_ceil(grain).min(threads().saturating_mul(4)).max(1);
+    run_chunks(n_chunks, &|c| {
+        let lo = c * len / n_chunks;
+        let hi = (c + 1) * len / n_chunks;
+        if lo < hi {
+            f(lo, hi);
+        }
+    });
+}
+
+/// Covariant raw-pointer handle used to hand disjoint `&mut` sub-slices of
+/// one allocation to different chunks.
+struct SlicePtr<T>(*mut T);
+// Safety: each chunk derives a reference only to its own disjoint region.
+unsafe impl<T: Send> Sync for SlicePtr<T> {}
+
+/// Split `data` into consecutive chunks of `chunk_len` elements (the last
+/// may be shorter) and run `f(chunk_index, &mut chunk)` on each in
+/// parallel. This is the mutable-output workhorse: chunk `i` owns
+/// `data[i*chunk_len .. (i+1)*chunk_len]` exclusively.
+pub fn for_each_chunk_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0, "chunk_len must be positive");
+    let len = data.len();
+    if len == 0 {
+        return;
+    }
+    let base = SlicePtr(data.as_mut_ptr());
+    let n_chunks = len.div_ceil(chunk_len);
+    run_chunks(n_chunks, &|i| {
+        let lo = i * chunk_len;
+        let hi = ((i + 1) * chunk_len).min(len);
+        // Safety: chunk indices are claimed exactly once and the ranges
+        // [lo, hi) are pairwise disjoint, so this &mut aliases nothing.
+        let chunk = unsafe { std::slice::from_raw_parts_mut(base.0.add(lo), hi - lo) };
+        f(i, chunk);
+    });
+}
+
+/// Run `f(i, &mut data[i])` for every element, in parallel.
+pub fn for_each_mut<T, F>(data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    for_each_chunk_mut(data, 1, |i, chunk| f(i, &mut chunk[0]));
+}
+
+/// Compute `[f(0), f(1), …, f(n-1)]` in parallel, each result written into
+/// its pre-sized slot (so the output order is exactly the index order,
+/// independent of scheduling).
+pub fn map_indexed<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec<R> {
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for_each_mut(&mut out, |i, slot| *slot = Some(f(i)));
+    out.into_iter().map(|o| o.expect("parallel map slot left unfilled")).collect()
+}
+
+/// Parallel map over a slice, preserving order.
+pub fn map_collect<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    map_indexed(items.len(), |i| f(i, &items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+    use std::sync::MutexGuard;
+
+    /// `CONFIGURED` is process-global and `cargo test` runs tests
+    /// concurrently in one binary: every test that mutates the thread
+    /// count must hold this lock, or another test's `set_threads` lands
+    /// mid-assertion.
+    fn threads_lock() -> MutexGuard<'static, ()> {
+        static LOCK: Mutex<()> = Mutex::new(());
+        LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn join_returns_both_results() {
+        let (a, b) = join(|| 6 * 7, || "hi".to_string());
+        assert_eq!(a, 42);
+        assert_eq!(b, "hi");
+    }
+
+    #[test]
+    fn nested_join_completes_and_is_correct() {
+        // Depth-3 nesting with every leaf doing real work: exercises the
+        // caller-drains-its-own-region rule that makes nesting deadlock-free.
+        fn sum_tree(lo: u64, hi: u64) -> u64 {
+            if hi - lo <= 64 {
+                return (lo..hi).sum();
+            }
+            let mid = lo + (hi - lo) / 2;
+            let (a, b) = join(|| sum_tree(lo, mid), || sum_tree(mid, hi));
+            a + b
+        }
+        let n = 10_000u64;
+        assert_eq!(sum_tree(0, n), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn for_each_chunked_covers_every_index_once() {
+        // Odd length, odd grain: chunk math must still cover 0..len exactly.
+        for (len, grain) in [(0usize, 3usize), (1, 3), (7, 2), (101, 13), (4096, 1000)] {
+            let hits: Vec<AtomicU64> = (0..len).map(|_| AtomicU64::new(0)).collect();
+            for_each_chunked(len, grain, |lo, hi| {
+                assert!(lo < hi && hi <= len);
+                for i in lo..hi {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "index {i} (len={len}, grain={grain})");
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_mut_handles_empty_and_ragged_tails() {
+        let mut empty: Vec<u32> = Vec::new();
+        for_each_chunk_mut(&mut empty, 4, |_, _| panic!("no chunks for empty input"));
+
+        // 10 elements in chunks of 4 → chunk lens 4, 4, 2.
+        let mut v: Vec<usize> = vec![0; 10];
+        for_each_chunk_mut(&mut v, 4, |ci, chunk| {
+            assert_eq!(chunk.len(), if ci == 2 { 2 } else { 4 });
+            for (k, slot) in chunk.iter_mut().enumerate() {
+                *slot = ci * 4 + k;
+            }
+        });
+        assert_eq!(v, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_indexed_preserves_order_at_any_thread_count() {
+        let _guard = threads_lock();
+        let want: Vec<u64> = (0..500u64).map(|i| i * i).collect();
+        for t in [1usize, 2, 8] {
+            set_threads(t);
+            let got = map_indexed(500, |i| (i as u64) * (i as u64));
+            assert_eq!(got, want, "threads={t}");
+        }
+        set_threads(0);
+    }
+
+    #[test]
+    fn map_collect_maps_slices() {
+        let items = vec![1i64, -2, 3];
+        assert_eq!(map_collect(&items, |i, &v| v + i as i64), vec![1, -1, 5]);
+        let none: Vec<i64> = Vec::new();
+        assert!(map_collect(&none, |_, &v| v).is_empty());
+    }
+
+    #[test]
+    fn panics_propagate_to_the_caller() {
+        let res = std::panic::catch_unwind(|| {
+            for_each_chunked(64, 1, |lo, _| {
+                if lo >= 32 {
+                    panic!("chunk boom");
+                }
+            });
+        });
+        assert!(res.is_err(), "worker panic must re-raise on the caller");
+    }
+
+    #[test]
+    fn single_thread_is_sequential_in_order() {
+        let _guard = threads_lock();
+        set_threads(1);
+        let order = Mutex::new(Vec::new());
+        for_each_chunked(10, 1, |lo, hi| {
+            for i in lo..hi {
+                order.lock().unwrap().push(i);
+            }
+        });
+        assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+        set_threads(0);
+    }
+}

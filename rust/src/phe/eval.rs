@@ -16,7 +16,7 @@ use super::keys::{
 use super::params::NUM_Q_PRIMES;
 use super::poly::{Form, RnsPoly};
 use super::{Ciphertext, Context};
-use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Operation counters (the paper's cost unit).
@@ -80,37 +80,67 @@ impl Context {
     }
 }
 
-/// Stateless evaluator over a shared context, with interior-mutable op
-/// counters. Owns an `Arc` so protocol parties and serving threads need no
-/// lifetime plumbing (see DESIGN.md, "engine" section).
+/// Lock-free op counters: ticked from parallel per-channel streams, so the
+/// evaluator is `Sync` and one instance serves every worker thread. Totals
+/// are exact regardless of interleaving (each op is one atomic increment).
+#[derive(Default)]
+struct Counters {
+    add: AtomicU64,
+    mult: AtomicU64,
+    perm: AtomicU64,
+}
+
+/// Stateless evaluator over a shared context, with atomic op counters.
+/// Owns an `Arc` so protocol parties and serving threads need no lifetime
+/// plumbing (see DESIGN.md, "engine" section), and is `Sync` so the
+/// parallel runtime ([`crate::par`]) can fan per-channel work across
+/// threads sharing one evaluator.
 pub struct Evaluator {
     pub ctx: Arc<Context>,
-    counts: RefCell<OpCounts>,
+    counts: Counters,
 }
 
 impl Evaluator {
     pub fn new(ctx: Arc<Context>) -> Self {
-        Self { ctx, counts: RefCell::new(OpCounts::default()) }
+        Self { ctx, counts: Counters::default() }
     }
 
     pub fn counts(&self) -> OpCounts {
-        *self.counts.borrow()
+        OpCounts {
+            add: self.counts.add.load(Ordering::Relaxed),
+            mult: self.counts.mult.load(Ordering::Relaxed),
+            perm: self.counts.perm.load(Ordering::Relaxed),
+        }
     }
 
     pub fn reset_counts(&self) {
-        *self.counts.borrow_mut() = OpCounts::default();
+        self.counts.add.store(0, Ordering::Relaxed);
+        self.counts.mult.store(0, Ordering::Relaxed);
+        self.counts.perm.store(0, Ordering::Relaxed);
     }
 
     /// Convert ciphertext to NTT form (free at the protocol level — done
     /// once on receipt; not counted as an op, matching GAZELLE's accounting).
+    /// The two components transform independently, so they fork-join.
     pub fn to_ntt(&self, ct: &mut Ciphertext) {
-        self.ctx.to_ntt(&mut ct.c0);
-        self.ctx.to_ntt(&mut ct.c1);
+        let ctx = &self.ctx;
+        let Ciphertext { c0, c1, .. } = ct;
+        crate::par::join(|| ctx.to_ntt(c0), || ctx.to_ntt(c1));
     }
 
     pub fn to_coeff(&self, ct: &mut Ciphertext) {
-        self.ctx.to_coeff(&mut ct.c0);
-        self.ctx.to_coeff(&mut ct.c1);
+        let ctx = &self.ctx;
+        let Ciphertext { c0, c1, .. } = ct;
+        crate::par::join(|| ctx.to_coeff(c0), || ctx.to_coeff(c1));
+    }
+
+    /// Convert a batch of independent ciphertexts to NTT form in parallel —
+    /// the per-step ingest hot path of both protocol servers.
+    pub fn to_ntt_batch(&self, cts: &mut [Ciphertext]) {
+        crate::par::for_each_mut(cts, |_, ct| {
+            self.ctx.to_ntt(&mut ct.c0);
+            self.ctx.to_ntt(&mut ct.c1);
+        });
     }
 
     /// `a += b` (ciphertext addition).
@@ -119,7 +149,7 @@ impl Evaluator {
         a.c0.add_assign(&b.c0, &self.ctx.params);
         a.c1.add_assign(&b.c1, &self.ctx.params);
         a.mark_evaluated();
-        self.counts.borrow_mut().add += 1;
+        self.counts.add.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
@@ -134,7 +164,7 @@ impl Evaluator {
         a.c0.sub_assign(&b.c0, &self.ctx.params);
         a.c1.sub_assign(&b.c1, &self.ctx.params);
         a.mark_evaluated();
-        self.counts.borrow_mut().add += 1;
+        self.counts.add.fetch_add(1, Ordering::Relaxed);
     }
 
     /// `a = -a`.
@@ -151,7 +181,7 @@ impl Evaluator {
         assert_eq!(ct.form(), op.poly.form, "form mismatch in add_plain");
         ct.c0.add_assign(&op.poly, &self.ctx.params);
         ct.mark_evaluated();
-        self.counts.borrow_mut().add += 1;
+        self.counts.add.fetch_add(1, Ordering::Relaxed);
     }
 
     /// `ct * pt` slot-wise (operand must be centered-lifted, both NTT form).
@@ -167,7 +197,7 @@ impl Evaluator {
         ct.c0.mul_assign_pointwise(&op.poly, &self.ctx.params);
         ct.c1.mul_assign_pointwise(&op.poly, &self.ctx.params);
         ct.mark_evaluated();
-        self.counts.borrow_mut().mult += 1;
+        self.counts.mult.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Key-switch the automorphed `c1` component back to the base key:
@@ -179,11 +209,15 @@ impl Evaluator {
         let params = &ctx.params;
         let mut c1_coeff = c1_auto.clone();
         ctx.to_coeff(&mut c1_coeff);
-        let mut out0 = RnsPoly::zero(params, Form::Ntt);
-        let mut out1 = RnsPoly::zero(params, Form::Ntt);
         let mask = (1u64 << KSK_DIGIT_BITS) - 1;
-        for j in 0..NUM_Q_PRIMES {
-            for t in 0..digits_per_prime() {
+        // Each digit (j, t) contributes an independent NTT + two pointwise
+        // MACs, so the digits fan out in parallel and the contributions are
+        // summed afterwards (modular addition is exactly associative, so
+        // the result is bit-identical to the sequential accumulation).
+        let dpp = digits_per_prime();
+        let contribs: Vec<(RnsPoly, RnsPoly)> =
+            crate::par::map_indexed(NUM_Q_PRIMES * dpp, |jt| {
+                let (j, t) = (jt / dpp, jt % dpp);
                 // Digit (j, t): bits [Wt, W(t+1)) of the residue mod q_j,
                 // lifted into every prime (digits are < all primes).
                 let mut d = RnsPoly::zero(params, Form::Coeff);
@@ -194,9 +228,17 @@ impl Evaluator {
                     }
                 }
                 ctx.to_ntt(&mut d);
-                out0.mac_pointwise(&d, &ksk.pairs[j][t].0, params);
-                out1.mac_pointwise(&d, &ksk.pairs[j][t].1, params);
-            }
+                let mut p0 = RnsPoly::zero(params, Form::Ntt);
+                let mut p1 = RnsPoly::zero(params, Form::Ntt);
+                p0.mac_pointwise(&d, &ksk.pairs[j][t].0, params);
+                p1.mac_pointwise(&d, &ksk.pairs[j][t].1, params);
+                (p0, p1)
+            });
+        let mut out0 = RnsPoly::zero(params, Form::Ntt);
+        let mut out1 = RnsPoly::zero(params, Form::Ntt);
+        for (p0, p1) in &contribs {
+            out0.add_assign(p0, params);
+            out1.add_assign(p1, params);
         }
         (out0, out1)
     }
@@ -211,7 +253,7 @@ impl Evaluator {
         let (k0, k1) = self.key_switch(&c1_auto, ksk);
         let mut c0 = c0_auto;
         c0.add_assign(&k0, &self.ctx.params);
-        self.counts.borrow_mut().perm += 1;
+        self.counts.perm.fetch_add(1, Ordering::Relaxed);
         Ciphertext { c0, c1: k1, seed: None }
     }
 

@@ -13,6 +13,7 @@ use super::packing::block_sums;
 use super::spec::ProtocolSpec;
 use crate::fixed::ScalePlan;
 use crate::nn::Tensor;
+use crate::par;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
 use crate::util::rng::ChaCha20Rng;
 use std::sync::Arc;
@@ -61,9 +62,8 @@ impl CheetahClient {
     pub fn install_indicators(&mut self, si: usize, id1: Vec<Ciphertext>, id2: Vec<Ciphertext>) {
         let mut id1 = id1;
         let mut id2 = id2;
-        for ct in id1.iter_mut().chain(id2.iter_mut()) {
-            self.ev.to_ntt(ct);
-        }
+        self.ev.to_ntt_batch(&mut id1);
+        self.ev.to_ntt_batch(&mut id2);
         self.ids[si] = (id1, id2);
     }
 
@@ -121,17 +121,29 @@ impl CheetahClient {
         let block = step.linear.block_len();
         assert_eq!(out_cts.len(), channels * n_cts, "wrong response ct count");
 
-        // Decrypt + block-sum (the obscure_dot hot loop).
-        let mut y = Vec::with_capacity(channels * blocks);
-        let mut stream: Vec<i64> = Vec::with_capacity(len);
-        for ch in 0..channels {
-            stream.clear();
+        // Decrypt + block-sum (the obscure_dot hot loop): every ciphertext
+        // decrypts independently — fan out over the (channel × ct) grid so
+        // FC steps (one channel, many ciphertexts) parallelize too — then
+        // block-sum per channel, concatenated in channel order.
+        let enc = &self.enc;
+        let decs: Vec<Vec<i64>> = par::map_indexed(channels * n_cts, |k| {
+            let c = k % n_cts;
+            let vals = enc.decrypt_slots(&out_cts[k]);
+            let hi = ((c + 1) * n).min(len) - c * n;
+            let mut vals = vals;
+            vals.truncate(hi);
+            vals
+        });
+        let y_parts: Vec<Vec<i64>> = par::map_indexed(channels, |ch| {
+            let mut stream: Vec<i64> = Vec::with_capacity(len);
             for c in 0..n_cts {
-                let vals = self.enc.decrypt_slots(&out_cts[ch * n_cts + c]);
-                let hi = ((c + 1) * n).min(len) - c * n;
-                stream.extend_from_slice(&vals[..hi]);
+                stream.extend_from_slice(&decs[ch * n_cts + c]);
             }
-            y.extend(block_sums(&stream, block, blocks));
+            block_sums(&stream, block, blocks)
+        });
+        let mut y = Vec::with_capacity(channels * blocks);
+        for part in y_parts {
+            y.extend(part);
         }
 
         let last = si == self.spec.last_idx();
@@ -155,28 +167,31 @@ impl CheetahClient {
         let n_rec = step.linear.num_recovery_cts(n);
         assert_eq!(id1.len(), n_rec, "indicators not installed for step {si}");
         let p = self.ctx.params.p;
-        let mut rec_out = Vec::with_capacity(n_rec);
+        // Draw the fresh shares s₁ first, strictly sequentially — the RNG
+        // stream order must not depend on scheduling (same draw order as
+        // the sequential code: ciphertext-major, slot-minor).
         let mut s1 = Vec::with_capacity(n_out);
-        for c in 0..n_rec {
+        for _ in 0..n_out {
+            s1.push(self.rng.gen_range(p));
+        }
+        // Eq. 6 per recovery ciphertext is then pure evaluator work
+        // (Mult/Mult/Add/AddPlain) — independent across ciphertexts.
+        let (ctx, ev) = (&self.ctx, &self.ev);
+        let rec_out: Vec<Ciphertext> = par::map_indexed(n_rec, |c| {
             let lo = c * n;
             let hi = ((c + 1) * n).min(n_out);
             // Eq. 6: Add(Mult([ID1]_S, y), Mult([ID2]_S, ReLU(y))).
-            let op_y = self.ctx.mult_operand(&y_req[lo..hi]);
-            let op_r = self.ctx.mult_operand(&relu_y[lo..hi]);
-            let mut rec = self.ev.mult_plain(&id1[c], &op_y);
-            let rec2 = self.ev.mult_plain(&id2[c], &op_r);
-            self.ev.add_assign(&mut rec, &rec2);
+            let op_y = ctx.mult_operand(&y_req[lo..hi]);
+            let op_r = ctx.mult_operand(&relu_y[lo..hi]);
+            let mut rec = ev.mult_plain(&id1[c], &op_y);
+            let rec2 = ev.mult_plain(&id2[c], &op_r);
+            ev.add_assign(&mut rec, &rec2);
             // Subtract the client's fresh share s₁ (uniform mod p).
-            let mut neg_s1 = vec![0u64; hi - lo];
-            for slot in neg_s1.iter_mut() {
-                let s = self.rng.gen_range(p);
-                s1.push(s);
-                *slot = (p - s) % p;
-            }
-            let op_s = self.ctx.add_operand_unsigned(&neg_s1);
-            self.ev.add_plain(&mut rec, &op_s);
-            rec_out.push(rec);
-        }
+            let neg_s1: Vec<u64> = s1[lo..hi].iter().map(|&s| (p - s) % p).collect();
+            let op_s = ctx.add_operand_unsigned(&neg_s1);
+            ev.add_plain(&mut rec, &op_s);
+            rec
+        });
 
         // The client's next-layer share is s₁ (sum-pooled if the network
         // pools here, mirroring the server).

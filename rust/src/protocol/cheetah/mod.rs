@@ -39,7 +39,7 @@ pub mod spec;
 pub use client::CheetahClient;
 pub use runner::{CheetahRunner, InferenceReport, StepReport};
 pub use server::CheetahServer;
-pub use spec::{LinearSpec, ProtocolSpec, StepSpec};
+pub use spec::{LinearSpec, ProtocolSpec, SpecError, StepSpec};
 
 #[cfg(test)]
 mod tests {
@@ -71,7 +71,7 @@ mod tests {
         net.init_weights(77);
         let float_net = net.clone();
 
-        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 42);
+        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 42).expect("valid network");
         let off = runner.run_offline();
         assert!(off > 0);
 
@@ -107,7 +107,7 @@ mod tests {
         let plan = ScalePlan::default_plan();
         let net = Network::build(NetworkArch::NetA, 11);
         let float_net = net.clone();
-        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.01, 43);
+        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.01, 43).expect("valid network");
         runner.run_offline();
 
         let mut gen = SyntheticDigits::new(28, 9);
@@ -141,7 +141,7 @@ mod tests {
         // 2 pools, 2 fc).
         let net = Network::build_scaled(NetworkArch::NetB, 13, 0.5);
         let float_net = net.clone();
-        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 44);
+        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 44).expect("valid network");
         runner.run_offline();
 
         let mut gen = SyntheticDigits::new(14, 3);
@@ -175,11 +175,11 @@ mod tests {
         net.init_weights(5);
 
         let input = Tensor::from_vec((0..16).map(|i| i as f64 / 16.0).collect(), 1, 4, 4);
-        let mut clean_runner = CheetahRunner::new(c.clone(), net.clone(), plan, 0.0, 50);
+        let mut clean_runner = CheetahRunner::new(c.clone(), net.clone(), plan, 0.0, 50).expect("valid network");
         clean_runner.run_offline();
         let clean = clean_runner.infer(&input);
 
-        let mut noisy_runner = CheetahRunner::new(c.clone(), net, plan, 0.2, 51);
+        let mut noisy_runner = CheetahRunner::new(c.clone(), net, plan, 0.2, 51).expect("valid network");
         noisy_runner.run_offline();
         let noisy = noisy_runner.infer(&input);
 
@@ -208,7 +208,7 @@ mod tests {
         };
         net.init_weights(6);
         let float_net = net.clone();
-        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 60);
+        let mut runner = CheetahRunner::new(c.clone(), net, plan, 0.0, 60).expect("valid network");
         runner.run_offline();
         let input = Tensor::from_vec((0..9).map(|i| (i as f64 - 4.0) / 5.0).collect(), 1, 3, 3);
         let _ = runner.infer(&input);

@@ -15,6 +15,7 @@
 //! concatenated slot stream*, so no alignment padding is needed.
 
 use crate::nn::layers::{Layer, LayerKind};
+use crate::par;
 
 /// Where tap `t` of a block comes from in the flat input vector.
 /// `None` encodes zero-padding taps.
@@ -76,17 +77,19 @@ impl ConvPacking {
     /// slot stream (length `len`). Works on any copyable scalar — in the
     /// protocol this is applied to plaintext inputs *and* to mod-p shares
     /// (`T` is linear, so it commutes with secret sharing).
-    pub fn expand<T: Copy + Default>(&self, input: &[T]) -> Vec<T> {
+    pub fn expand<T: Copy + Default + Send + Sync>(&self, input: &[T]) -> Vec<T> {
         let (c, h, w) = self.in_shape;
         assert_eq!(input.len(), c * h * w, "input length mismatch");
         let mut out = vec![T::default(); self.len];
-        for pos in 0..self.n_pos {
-            for t in 0..self.block {
+        // Each output position owns one disjoint block of the slot stream —
+        // parallel across positions, identical values at any thread count.
+        par::for_each_chunk_mut(&mut out, self.block, |pos, chunk| {
+            for (t, slot) in chunk.iter_mut().enumerate() {
                 if let Some(src) = self.tap_source(pos, t) {
-                    out[pos * self.block + t] = input[src];
+                    *slot = input[src];
                 }
             }
-        }
+        });
         out
     }
 
@@ -112,11 +115,11 @@ impl ConvPacking {
             })
             .collect();
         let mut out = vec![0i64; self.len];
-        for pos in 0..self.n_pos {
-            for t in 0..self.block {
-                out[pos * self.block + t] = kq[t] * v_int[pos];
+        par::for_each_chunk_mut(&mut out, self.block, |pos, chunk| {
+            for (t, slot) in chunk.iter_mut().enumerate() {
+                *slot = kq[t] * v_int[pos];
             }
-        }
+        });
         out
     }
 }
@@ -163,15 +166,15 @@ impl FcPacking {
         &self,
         layer: &Layer,
         v_int: &[i64],
-        quant: impl Fn(f64) -> i64,
+        quant: impl (Fn(f64) -> i64) + Sync,
     ) -> Vec<i64> {
         assert_eq!(v_int.len(), self.n_o);
         let mut out = vec![0i64; self.len];
-        for o in 0..self.n_o {
-            for j in 0..self.n_i {
-                out[o * self.n_i + j] = quant(layer.fc_w(self.n_i, o, j)) * v_int[o];
+        par::for_each_chunk_mut(&mut out, self.n_i, |o, chunk| {
+            for (j, slot) in chunk.iter_mut().enumerate() {
+                *slot = quant(layer.fc_w(self.n_i, o, j)) * v_int[o];
             }
-        }
+        });
         out
     }
 }

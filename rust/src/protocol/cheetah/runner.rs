@@ -4,7 +4,7 @@
 
 use super::client::CheetahClient;
 use super::server::CheetahServer;
-use super::spec::ProtocolSpec;
+use super::spec::{ProtocolSpec, SpecError};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, Tensor};
 use crate::phe::serial::ciphertext_bytes;
@@ -70,11 +70,12 @@ impl CheetahRunner {
         plan: ScalePlan,
         epsilon: f64,
         seed: u64,
-    ) -> Self {
+    ) -> Result<Self, SpecError> {
         Self::with_link(ctx, net, plan, epsilon, seed, LinkModel::gigabit_lan())
     }
 
-    /// Like [`CheetahRunner::new`] with an explicit link cost model.
+    /// Like [`CheetahRunner::new`] with an explicit link cost model. A
+    /// network the protocol cannot express is a typed [`SpecError`].
     pub fn with_link(
         ctx: Arc<Context>,
         net: Network,
@@ -82,10 +83,10 @@ impl CheetahRunner {
         epsilon: f64,
         seed: u64,
         link: LinkModel,
-    ) -> Self {
-        let server = CheetahServer::new(ctx.clone(), net, plan, epsilon, seed);
+    ) -> Result<Self, SpecError> {
+        let server = CheetahServer::new(ctx.clone(), net, plan, epsilon, seed)?;
         let client = CheetahClient::new(ctx, server.spec.clone(), plan, seed.wrapping_add(1));
-        Self { server, client, channel: MeteredChannel::new(link) }
+        Ok(Self { server, client, channel: MeteredChannel::new(link) })
     }
 
     pub fn spec(&self) -> &ProtocolSpec {

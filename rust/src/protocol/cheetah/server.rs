@@ -18,11 +18,12 @@
 //! and `offline` (weight/blinding material preparation, amortizable).
 
 use super::blinding::{sample_block_noise, Blind};
-use super::spec::{LinearSpec, ProtocolSpec, StepSpec};
+use super::spec::{LinearSpec, ProtocolSpec, SpecError, StepSpec};
 use crate::fixed::ScalePlan;
 
 use crate::nn::Network;
-use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts};
+use crate::par;
+use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts, PlainOperand};
 use crate::util::rng::ChaCha20Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -81,17 +82,33 @@ impl CheetahServer {
     /// Prepare the model: quantize weights, sample per-query-independent
     /// blinding, and encrypt the indicator vectors. (The paper prepares
     /// v/b/ID offline per query; we re-prepare per `refresh_blinding` call —
-    /// `new` counts as the first offline phase.)
+    /// `new` counts as the first offline phase.) A network the protocol
+    /// cannot express is a typed [`SpecError`], not a panic.
     pub fn new(
         ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         epsilon: f64,
         seed: u64,
+    ) -> Result<Self, SpecError> {
+        let spec = ProtocolSpec::compile(&net)?;
+        Ok(Self::with_spec(ctx, net, spec, plan, epsilon, seed))
+    }
+
+    /// Like [`CheetahServer::new`] with an already-validated spec —
+    /// infallible, so serving-path builders (the blinding pool) that
+    /// validated the network once at configuration time never risk a
+    /// worker-thread death on a malformed architecture.
+    pub fn with_spec(
+        ctx: Arc<Context>,
+        net: Network,
+        spec: ProtocolSpec,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
     ) -> Self {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
         let enc = Encryptor::new(ctx.clone(), &mut rng);
-        let spec = ProtocolSpec::compile(&net);
         plan.check_fits(ctx.params.p);
         let mut server = Self {
             ev: Evaluator::new(ctx.clone()),
@@ -184,36 +201,32 @@ impl CheetahServer {
 
     /// Quantized kernel taps per channel, with the inherited pool divisor
     /// folded in (`mean = sum / div` absorbed into the next linear layer).
+    /// Pure per-channel work, fanned out across the pool (this runs inside
+    /// every blinding-pool background build).
     fn quantize_weights(&self, step: &StepSpec) -> Vec<Vec<i64>> {
         let layer = &self.net.layers[step.layer_idx];
         let div = step.weight_div;
+        let plan = &self.plan;
         match &step.linear {
             LinearSpec::Conv(p) => {
                 let (c_i, _, _) = p.in_shape;
                 let r = p.kernel;
-                (0..p.out_shape.0)
-                    .map(|o| {
-                        (0..p.block)
-                            .map(|t| {
-                                let i = t / (r * r);
-                                let rem = t % (r * r);
-                                self.plan
-                                    .quant_k(layer.conv_w(c_i, r, o, i, rem / r, rem % r) / div)
-                            })
-                            .collect()
-                    })
-                    .collect()
+                par::map_indexed(p.out_shape.0, |o| {
+                    (0..p.block)
+                        .map(|t| {
+                            let i = t / (r * r);
+                            let rem = t % (r * r);
+                            plan.quant_k(layer.conv_w(c_i, r, o, i, rem / r, rem % r) / div)
+                        })
+                        .collect()
+                })
             }
             LinearSpec::Fc(p) => {
                 // FC: one "channel"; blocks are output neurons, so kq is
                 // indexed per block at multiplier-build time. Store rows.
-                (0..p.n_o)
-                    .map(|o| {
-                        (0..p.n_i)
-                            .map(|j| self.plan.quant_k(layer.fc_w(p.n_i, o, j) / div))
-                            .collect()
-                    })
-                    .collect()
+                par::map_indexed(p.n_o, |o| {
+                    (0..p.n_i).map(|j| plan.quant_k(layer.fc_w(p.n_i, o, j) / div)).collect()
+                })
             }
         }
     }
@@ -242,6 +255,13 @@ impl CheetahServer {
     /// The obscure linear computation for step `si`. Input: the client's
     /// encrypted expanded share. Output: channel-major obscured-product
     /// ciphertexts (`channels × num_in_cts`).
+    ///
+    /// The per-output-channel streams are the paper's embarrassingly
+    /// parallel unit: every channel's multiplier, noise stream, and
+    /// Mult+Add chain is independent, so both phases fan out across the
+    /// [`crate::par`] pool. Results land in channel-ordered slots and each
+    /// channel's noise stream comes from its own deterministically-seeded
+    /// RNG, so the output is bit-identical at every thread count.
     pub fn step_linear(&mut self, si: usize, in_cts: &[Ciphertext]) -> Vec<Ciphertext> {
         let step = &self.spec.steps[si];
         let prep = &self.steps[si];
@@ -254,31 +274,50 @@ impl CheetahServer {
         let blocks = step.linear.blocks_per_channel();
         let block = step.linear.block_len();
 
-        // Online: convert incoming ciphertexts to NTT form once.
+        // Online: convert incoming ciphertexts to NTT form once (parallel
+        // batch), and expand the server's share T(share_S) — zero for the
+        // first layer of a fresh query (client holds the input).
         let t_on = Instant::now();
         let mut in_ntt: Vec<Ciphertext> = in_cts.to_vec();
-        for ct in in_ntt.iter_mut() {
-            self.ev.to_ntt(ct);
-        }
-        self.timers.online += t_on.elapsed();
-
-        // The server's expanded share T(share_S); zero for the first layer
-        // of a fresh query (client holds the input).
+        self.ev.to_ntt_batch(&mut in_ntt);
         let share_zero = self.share.iter().all(|&s| s == 0);
-        let t_share = Instant::now();
         let ts: Vec<u64> = if share_zero {
             Vec::new()
         } else {
             step.linear.expand_u64(&self.share)
         };
-        self.timers.online += t_share.elapsed();
+        self.timers.online += t_on.elapsed();
 
-        let mut out = Vec::with_capacity(channels * n_cts);
-        let mut kv_slot = vec![0i64; n];
-        let mut add_slot = vec![0u64; n];
-        for ch in 0..channels {
-            // Regenerate this channel's noise stream b (deterministic).
-            let t_off = Instant::now();
+        /// Query-independent material for one (channel, input-ct) slot.
+        /// Holding the whole grid at once costs ~1 extra operand poly per
+        /// output ciphertext (≈ +50% over the output itself, which is
+        /// inherently `channels × n_cts` two-poly ciphertexts) — the price
+        /// of splitting operand construction (offline-attributed) from the
+        /// Mult+Add streams (online). Per-slot scratch that one phase does
+        /// not need is not retained (see ROADMAP: scratch reuse).
+        struct SlotOps {
+            /// Raw `k'·v` slot values — retained only for hidden layers,
+            /// where the online additive operand needs them again.
+            kv_slot: Option<Vec<i64>>,
+            /// The `MultPlain` operand `k'∘v`.
+            kv_op: PlainOperand,
+            /// First layer only: the `AddPlain` operand for `b` alone.
+            b_op: Option<PlainOperand>,
+        }
+
+        let ev = &self.ev;
+        let ctx = &self.ctx;
+        let linear = &step.linear;
+
+        // Offline-attributed (all query-independent), wall-timed around
+        // the parallel regions. First the per-channel noise streams — each
+        // channel draws from its own deterministically-seeded RNG, exactly
+        // the sequential derivation, so values are thread-count-invariant.
+        // Then the blinded-kernel multipliers, fanned out over the finer
+        // (channel × input-ct) grid so FC steps (one channel, many
+        // ciphertexts) parallelize just as well as conv steps.
+        let t_off = Instant::now();
+        let b_streams: Vec<Vec<i64>> = par::map_indexed(channels, |ch| {
             let mut nrng = ChaCha20Rng::from_u64_seed(prep.noise_seed ^ (ch as u64) << 32);
             let mut b_stream: Vec<i64> = Vec::with_capacity(blocks * block);
             for blk in 0..blocks {
@@ -290,59 +329,83 @@ impl CheetahServer {
                     &mut nrng,
                 ));
             }
-            self.timers.offline += t_off.elapsed();
-
-            for (c, in_ct) in in_ntt.iter().enumerate() {
-                let lo = c * n;
-                let hi = ((c + 1) * n).min(len);
-                let width = hi - lo;
-
-                // Offline-attributed: the blinded-kernel multiplier k'∘v.
-                let t_off = Instant::now();
-                for (slot, g) in (lo..hi).enumerate() {
-                    let (blk, tap) = (g / block, g % block);
-                    let kq = match &step.linear {
-                        LinearSpec::Conv(_) => prep.kq[ch][tap],
-                        LinearSpec::Fc(_) => prep.kq[blk][tap],
-                    };
-                    kv_slot[slot] = kq * prep.v_int[ch * blocks + blk];
-                }
-                kv_slot[width..].fill(0);
-                let kv_op = self.ctx.mult_operand(&kv_slot[..width.max(1)]);
-                self.timers.offline += t_off.elapsed();
-
-                // The additive operand k'v∘T(share_S) + b. Query-dependent
-                // when the server holds a non-zero share (hidden layers):
-                // online. First layer: offline-attributable (b only).
-                let t_add = Instant::now();
-                for (slot, g) in (lo..hi).enumerate() {
-                    let bb = b_stream[g];
-                    let b_res = if bb < 0 { p - ((-bb) as u64 % p) } else { bb as u64 % p };
-                    add_slot[slot] = if share_zero {
-                        b_res % p
-                    } else {
-                        let kv = kv_slot[slot];
-                        let kv_res =
-                            if kv < 0 { p - ((-kv) as u64 % p) } else { kv as u64 % p };
-                        (crate::util::math::mul_mod(kv_res, ts[g], p) + b_res) % p
-                    };
-                }
-                add_slot[width..].fill(0);
-                let add_op = self.ctx.add_operand_unsigned(&add_slot[..width.max(1)]);
-                if share_zero {
-                    self.timers.offline += t_add.elapsed();
-                } else {
-                    self.timers.online += t_add.elapsed();
-                }
-
-                // Online: the paper's 1 Mult + 1 Add per ciphertext.
-                let t_on = Instant::now();
-                let mut prod = self.ev.mult_plain(in_ct, &kv_op);
-                self.ev.add_plain(&mut prod, &add_op);
-                self.timers.online += t_on.elapsed();
-                out.push(prod);
+            b_stream
+        });
+        let slot_ops: Vec<SlotOps> = par::map_indexed(channels * n_cts, |k| {
+            let (ch, c) = (k / n_cts, k % n_cts);
+            let lo = c * n;
+            let hi = ((c + 1) * n).min(len);
+            let mut kv_slot = vec![0i64; hi - lo];
+            for (slot, g) in (lo..hi).enumerate() {
+                let (blk, tap) = (g / block, g % block);
+                let kq = match linear {
+                    LinearSpec::Conv(_) => prep.kq[ch][tap],
+                    LinearSpec::Fc(_) => prep.kq[blk][tap],
+                };
+                kv_slot[slot] = kq * prep.v_int[ch * blocks + blk];
             }
-        }
+            let kv_op = ctx.mult_operand(&kv_slot);
+            let b_op = if share_zero {
+                // First layer: the additive operand is b alone —
+                // query-independent, so built (and attributed) here.
+                let b_res: Vec<u64> = (lo..hi)
+                    .map(|g| {
+                        let bb = b_streams[ch][g];
+                        if bb < 0 {
+                            p - ((-bb) as u64 % p)
+                        } else {
+                            bb as u64 % p
+                        }
+                    })
+                    .collect();
+                Some(ctx.add_operand_unsigned(&b_res))
+            } else {
+                None
+            };
+            SlotOps { kv_slot: (!share_zero).then_some(kv_slot), kv_op, b_op }
+        });
+        // First layer: the online phase reads neither b nor kv_slot —
+        // free the streams before fanning out the Mult+Add grid.
+        let b_streams = if share_zero { Vec::new() } else { b_streams };
+        self.timers.offline += t_off.elapsed();
+
+        // Online: for hidden layers the query-dependent additive operands
+        // `k'v∘T(share_S) + b`, then the paper's 1 Mult + 1 Add per
+        // ciphertext — the (channel × input-ct) grid fanned out in
+        // parallel, each result written to its channel-major slot.
+        let t_on = Instant::now();
+        let out: Vec<Ciphertext> = par::map_indexed(channels * n_cts, |k| {
+            let (ch, c) = (k / n_cts, k % n_cts);
+            let sops = &slot_ops[k];
+            let in_ct = &in_ntt[c];
+            let lo = c * n;
+            let hi = ((c + 1) * n).min(len);
+            let online_add;
+            let add_op = match &sops.b_op {
+                Some(op) => op,
+                None => {
+                    let kv_slot =
+                        sops.kv_slot.as_deref().expect("hidden layers retain kv_slot");
+                    let add_res: Vec<u64> = (lo..hi)
+                        .map(|g| {
+                            let bb = b_streams[ch][g];
+                            let b_res =
+                                if bb < 0 { p - ((-bb) as u64 % p) } else { bb as u64 % p };
+                            let kv = kv_slot[g - lo];
+                            let kv_res =
+                                if kv < 0 { p - ((-kv) as u64 % p) } else { kv as u64 % p };
+                            (crate::util::math::mul_mod(kv_res, ts[g], p) + b_res) % p
+                        })
+                        .collect();
+                    online_add = ctx.add_operand_unsigned(&add_res);
+                    &online_add
+                }
+            };
+            let mut prod = ev.mult_plain(in_ct, &sops.kv_op);
+            ev.add_plain(&mut prod, add_op);
+            prod
+        });
+        self.timers.online += t_on.elapsed();
         out
     }
 
@@ -355,11 +418,18 @@ impl CheetahServer {
         let n_out = step.linear.num_outputs();
         assert_eq!(rec_cts.len(), step.linear.num_recovery_cts(n));
         let t0 = Instant::now();
-        let mut share = Vec::with_capacity(n_out);
-        for (c, ct) in rec_cts.iter().enumerate() {
-            let vals = self.ctx.encoder.decode_unsigned(&self.enc.decrypt(ct));
+        // Each recovery ciphertext decrypts independently — parallel batch,
+        // concatenated in ciphertext order.
+        let enc = &self.enc;
+        let ctx = &self.ctx;
+        let parts: Vec<Vec<u64>> = par::map_collect(rec_cts, |c, ct| {
+            let vals = ctx.encoder.decode_unsigned(&enc.decrypt(ct));
             let hi = ((c + 1) * n).min(n_out) - c * n;
-            share.extend_from_slice(&vals[..hi]);
+            vals[..hi].to_vec()
+        });
+        let mut share = Vec::with_capacity(n_out);
+        for part in parts {
+            share.extend(part);
         }
         if let Some(size) = step.pool_after {
             share = pool_shares(&share, step.out_shape, size, self.ctx.params.p);

@@ -103,6 +103,32 @@ pub struct StepSpec {
     pub weight_div: f64,
 }
 
+/// Why a network cannot be compiled into a protocol spec. Surfaced as a
+/// typed error (through `EngineBuilder` and the serve subsystem) instead of
+/// a panic, so a malformed architecture drops the request rather than
+/// killing a serving worker thread.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpecError {
+    /// A ReLU or pool appears without a preceding linear layer.
+    UnsupportedLayerOrder { index: usize, kind: String },
+    /// The network contains no linear (Conv/FC) layer at all.
+    NoLinearLayers,
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnsupportedLayerOrder { index, kind } => write!(
+                f,
+                "unsupported layer order: {kind} at index {index} has no preceding linear layer"
+            ),
+            SpecError::NoLinearLayers => write!(f, "network has no linear layers"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
 /// The full protocol spec for a network.
 #[derive(Clone, Debug)]
 pub struct ProtocolSpec {
@@ -113,7 +139,8 @@ pub struct ProtocolSpec {
 impl ProtocolSpec {
     /// Compile a network into protocol steps. Supported patterns:
     /// `Linear [→ ReLU] [→ MeanPool]` (all four benchmark networks fit).
-    pub fn compile(net: &Network) -> Self {
+    /// Anything else is a typed [`SpecError`], not a panic.
+    pub fn compile(net: &Network) -> Result<Self, SpecError> {
         let mut steps = Vec::new();
         let (mut c, mut h, mut w) = net.input_shape;
         let mut i = 0;
@@ -159,12 +186,17 @@ impl ProtocolSpec {
                     i = j;
                 }
                 LayerKind::Relu | LayerKind::MeanPool { .. } => {
-                    panic!("unsupported layer order at index {i}: nonlinear without preceding linear");
+                    return Err(SpecError::UnsupportedLayerOrder {
+                        index: i,
+                        kind: format!("{:?}", layer.kind),
+                    });
                 }
             }
         }
-        assert!(!steps.is_empty(), "network has no linear layers");
-        Self { steps, input_shape: net.input_shape }
+        if steps.is_empty() {
+            return Err(SpecError::NoLinearLayers);
+        }
+        Ok(Self { steps, input_shape: net.input_shape })
     }
 
     pub fn last_idx(&self) -> usize {
@@ -198,7 +230,7 @@ mod tests {
     #[test]
     fn compile_net_a() {
         let net = Network::build(NetworkArch::NetA, 1);
-        let spec = ProtocolSpec::compile(&net);
+        let spec = ProtocolSpec::compile(&net).expect("valid network");
         assert_eq!(spec.steps.len(), 3); // conv+relu, fc+relu, fc
         assert!(spec.steps[0].relu && spec.steps[1].relu && !spec.steps[2].relu);
         assert!(spec.steps.iter().all(|s| s.pool_after.is_none()));
@@ -209,7 +241,7 @@ mod tests {
     #[test]
     fn compile_net_b_with_pools() {
         let net = Network::build(NetworkArch::NetB, 1);
-        let spec = ProtocolSpec::compile(&net);
+        let spec = ProtocolSpec::compile(&net).expect("valid network");
         assert_eq!(spec.steps.len(), 4);
         assert_eq!(spec.steps[0].pool_after, Some(2));
         assert_eq!(spec.steps[1].pool_after, Some(2));
@@ -224,7 +256,7 @@ mod tests {
     fn compile_big_nets() {
         for arch in [NetworkArch::AlexNet, NetworkArch::Vgg16] {
             let net = Network::build_scaled(arch, 1, 0.125);
-            let spec = ProtocolSpec::compile(&net);
+            let spec = ProtocolSpec::compile(&net).expect("valid network");
             let n_linear = spec.steps.len();
             assert!(n_linear == 8 || n_linear == 16, "{arch:?}: {n_linear} steps");
             // Shapes chain.
@@ -245,9 +277,33 @@ mod tests {
     }
 
     #[test]
+    fn malformed_networks_are_typed_errors_not_panics() {
+        use crate::nn::Layer;
+        // ReLU with no preceding linear layer.
+        let bad_order = Network {
+            name: "bad-order".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::relu(), Layer::fc(2)],
+        };
+        match ProtocolSpec::compile(&bad_order) {
+            Err(super::SpecError::UnsupportedLayerOrder { index: 0, .. }) => {}
+            other => panic!("expected UnsupportedLayerOrder, got {other:?}"),
+        }
+        // No linear layers at all.
+        let empty = Network { name: "empty".into(), input_shape: (1, 4, 4), layers: vec![] };
+        assert_eq!(
+            ProtocolSpec::compile(&empty).unwrap_err(),
+            super::SpecError::NoLinearLayers
+        );
+        // Errors render a human-readable message.
+        let msg = ProtocolSpec::compile(&bad_order).unwrap_err().to_string();
+        assert!(msg.contains("index 0"), "{msg}");
+    }
+
+    #[test]
     fn ct_count_accounting() {
         let net = Network::build(NetworkArch::NetA, 1);
-        let spec = ProtocolSpec::compile(&net);
+        let spec = ProtocolSpec::compile(&net).expect("valid network");
         let params = Params::default_params();
         let s0 = &spec.steps[0];
         // Conv 5×5@5 stride 2 pad 2 on 28×28: n_pos = 14*14, block = 25.

@@ -100,66 +100,67 @@ pub fn conv(
         vec![kq; hw]
     };
 
+    // Both variants fan out over GAZELLE's independent units: the
+    // per-(input-channel, offset) rotations and the per-output-channel
+    // accumulation chains. Accumulation order *within* a channel stays
+    // exactly the sequential order, so results are bit-identical at any
+    // thread count; only op-counter increments interleave (atomic).
     match variant {
         ConvVariant::InputRotation => {
-            // Rotate each input channel per offset once.
-            let mut rotated: Vec<Vec<Ciphertext>> = Vec::with_capacity(c_i);
-            for ct in in_cts {
-                let mut per_offset = Vec::with_capacity(offsets.len());
-                for &d in &offsets {
-                    if d == 0 {
-                        per_offset.push(ct.clone());
-                    } else {
-                        per_offset.push(ev.rotate_rows(ct, d, gk));
+            // Rotate each input channel per offset once — every rotation
+            // (i, t) is independent.
+            let n_off = offsets.len();
+            let rotated_flat: Vec<Ciphertext> = crate::par::map_indexed(c_i * n_off, |k| {
+                let (i, t) = (k / n_off, k % n_off);
+                let d = offsets[t];
+                if d == 0 {
+                    in_cts[i].clone()
+                } else {
+                    ev.rotate_rows(&in_cts[i], d, gk)
+                }
+            });
+            let rotated: Vec<&[Ciphertext]> = rotated_flat.chunks(n_off).collect();
+            crate::par::map_indexed(out_channels, |o| {
+                let mut acc: Option<Ciphertext> = None;
+                for (i, rot_i) in rotated.iter().enumerate() {
+                    for (t, _) in offsets.iter().enumerate() {
+                        let op = ctx.mult_operand(&broadcast(o, i, t));
+                        let prod = ev.mult_plain(&rot_i[t], &op);
+                        match &mut acc {
+                            None => acc = Some(prod),
+                            Some(a) => ev.add_assign(a, &prod),
+                        }
                     }
                 }
-                rotated.push(per_offset);
-            }
-            (0..out_channels)
-                .map(|o| {
-                    let mut acc: Option<Ciphertext> = None;
-                    for i in 0..c_i {
-                        for (t, _) in offsets.iter().enumerate() {
-                            let op = ctx.mult_operand(&broadcast(o, i, t));
-                            let prod = ev.mult_plain(&rotated[i][t], &op);
-                            match &mut acc {
-                                None => acc = Some(prod),
-                                Some(a) => ev.add_assign(a, &prod),
-                            }
-                        }
-                    }
-                    acc.unwrap()
-                })
-                .collect()
+                acc.unwrap()
+            })
         }
         ConvVariant::OutputRotation => {
-            (0..out_channels)
-                .map(|o| {
-                    let mut acc: Option<Ciphertext> = None;
-                    for (t, &d) in offsets.iter().enumerate() {
-                        // Sum over input channels first, then one rotation
-                        // per (o, offset).
-                        let mut partial: Option<Ciphertext> = None;
-                        for (i, ct) in in_cts.iter().enumerate() {
-                            let op = ctx.mult_operand(&broadcast(o, i, t));
-                            let prod = ev.mult_plain(ct, &op);
-                            match &mut partial {
-                                None => partial = Some(prod),
-                                Some(p) => ev.add_assign(p, &prod),
-                            }
-                        }
-                        let mut part = partial.unwrap();
-                        if d != 0 {
-                            part = ev.rotate_rows(&part, d, gk);
-                        }
-                        match &mut acc {
-                            None => acc = Some(part),
-                            Some(a) => ev.add_assign(a, &part),
+            crate::par::map_indexed(out_channels, |o| {
+                let mut acc: Option<Ciphertext> = None;
+                for (t, &d) in offsets.iter().enumerate() {
+                    // Sum over input channels first, then one rotation
+                    // per (o, offset).
+                    let mut partial: Option<Ciphertext> = None;
+                    for (i, ct) in in_cts.iter().enumerate() {
+                        let op = ctx.mult_operand(&broadcast(o, i, t));
+                        let prod = ev.mult_plain(ct, &op);
+                        match &mut partial {
+                            None => partial = Some(prod),
+                            Some(p) => ev.add_assign(p, &prod),
                         }
                     }
-                    acc.unwrap()
-                })
-                .collect()
+                    let mut part = partial.unwrap();
+                    if d != 0 {
+                        part = ev.rotate_rows(&part, d, gk);
+                    }
+                    match &mut acc {
+                        None => acc = Some(part),
+                        Some(a) => ev.add_assign(a, &part),
+                    }
+                }
+                acc.unwrap()
+            })
         }
     }
 }

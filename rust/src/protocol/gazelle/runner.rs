@@ -25,7 +25,7 @@ use crate::phe::keys::KeySwitchKey;
 use crate::phe::serial::ciphertext_bytes;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, GaloisKeys, OpCounts};
 use crate::protocol::cheetah::server::pool_shares;
-use crate::protocol::cheetah::{LinearSpec, ProtocolSpec};
+use crate::protocol::cheetah::{LinearSpec, ProtocolSpec, SpecError};
 use crate::util::rng::ChaCha20Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -71,10 +71,16 @@ pub struct GazelleRunner {
 }
 
 impl GazelleRunner {
-    pub fn new(ctx: Arc<Context>, net: Network, plan: ScalePlan, seed: u64) -> Self {
+    /// A network the protocol cannot express is a typed [`SpecError`].
+    pub fn new(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        seed: u64,
+    ) -> Result<Self, SpecError> {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
         let client_enc = Encryptor::new(ctx.clone(), &mut rng);
-        let spec = ProtocolSpec::compile(&net);
+        let spec = ProtocolSpec::compile(&net)?;
         let relu = GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
         // Offline: rotation keys per step geometry (generated under the
         // client's key — GAZELLE's server evaluates on client ciphertexts).
@@ -98,7 +104,7 @@ impl GazelleRunner {
                 }
             }
         }
-        Self {
+        Ok(Self {
             ev: Evaluator::new(ctx.clone()),
             client_enc,
             plan,
@@ -109,7 +115,7 @@ impl GazelleRunner {
             fc_keys,
             rng,
             ctx,
-        }
+        })
     }
 
     /// Offline communication: rotation keys + garbled tables for every
@@ -199,9 +205,7 @@ impl GazelleRunner {
             // ---- server: add own share, rotation-based linear, mask ----
             let t1 = Instant::now();
             let mut in_ntt = in_cts;
-            for ct in in_ntt.iter_mut() {
-                self.ev.to_ntt(ct);
-            }
+            self.ev.to_ntt_batch(&mut in_ntt);
             // AddPlain the server's share, packed identically.
             match &step.linear {
                 LinearSpec::Conv(cp) => {
@@ -300,10 +304,11 @@ impl GazelleRunner {
             // ---- client: decrypt its linear share ----
             let t2 = Instant::now();
             let mut client_lin: Vec<u64> = Vec::with_capacity(n_lin);
-            let decs: Vec<Vec<u64>> = masked
-                .iter()
-                .map(|ct| self.ctx.encoder.decode_unsigned(&self.client_enc.decrypt(ct)))
-                .collect();
+            // Per-ciphertext decryption is independent — parallel batch.
+            let (ctx, client_enc) = (&self.ctx, &self.client_enc);
+            let decs: Vec<Vec<u64>> = crate::par::map_collect(&masked, |_, ct| {
+                ctx.encoder.decode_unsigned(&client_enc.decrypt(ct))
+            });
             for &(ci, slot) in &out_map {
                 client_lin.push(decs[ci][slot]);
             }
@@ -396,7 +401,7 @@ mod tests {
         };
         net.init_weights(71);
         let netc = net.clone();
-        let mut runner = GazelleRunner::new(ctx, net, plan, 72);
+        let mut runner = GazelleRunner::new(ctx, net, plan, 72).expect("valid network");
 
         let mut srng = SplitMix64::new(73);
         let input = Tensor::from_vec(

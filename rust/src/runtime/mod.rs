@@ -169,26 +169,29 @@ pub fn load_trained_network(
 /// up one uniform positive factor, leaving the argmax unchanged). Standard
 /// deployment-time conditioning for fixed-point inference.
 ///
-/// Errors (instead of silently no-opping) when no calibration corpus exists
-/// for the network's input shape — the synthetic-digit corpus is
-/// single-channel, so multi-channel networks (AlexNet/VGG) are not
-/// calibrated here.
+/// The calibration corpus is the synthetic-digit generator, replicated
+/// across input channels for multi-channel networks (AlexNet/VGG style) —
+/// see [`crate::nn::SyntheticDigits::render_channels`]. Errors (instead of
+/// silently no-opping) when the input shape fits no corpus at all
+/// (non-square or smaller than the 12-px glyph floor).
 pub fn equalize_activations(
     net: &mut crate::nn::Network,
     target: f64,
     calib: usize,
 ) -> Result<()> {
     use crate::nn::layers::{forward_layer, LayerKind};
-    let mut gen = crate::nn::SyntheticDigits::new(net.input_shape.1.max(12), 2024);
-    if net.input_shape.0 != 1 {
+    let (c_in, h, w) = net.input_shape;
+    if h != w || h < 12 {
         return Err(format!(
-            "no calibration corpus for {}-channel input (synthetic digits are single-channel)",
-            net.input_shape.0
+            "no calibration corpus for input shape {:?} (needs square images ≥ 12 px)",
+            net.input_shape
         )
         .into());
     }
-    let samples: Vec<crate::nn::Tensor> =
-        gen.batch(calib).into_iter().map(|s| s.image).collect();
+    let mut gen = crate::nn::SyntheticDigits::new(h, 2024);
+    let samples: Vec<crate::nn::Tensor> = (0..calib)
+        .map(|i| gen.render_channels(i % 10, c_in).image)
+        .collect();
     let linear_idxs: Vec<usize> = net
         .layers
         .iter()
@@ -233,16 +236,46 @@ mod tests {
     }
 
     #[test]
-    fn equalize_activations_rejects_multichannel_input() {
+    fn equalize_activations_calibrates_multichannel_input() {
+        // 3-channel (RGB-style) network: the replicated-digit corpus now
+        // calibrates it instead of erroring out (AlexNet/VGG path).
         let mut net = crate::nn::Network {
             name: "rgb".into(),
+            input_shape: (3, 12, 12),
+            layers: vec![
+                crate::nn::Layer::conv(2, 3, 1, 1),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::fc(2),
+            ],
+        };
+        net.init_weights(1);
+        let reference = net.clone();
+        equalize_activations(&mut net, 1.2, 4).expect("multi-channel calibration");
+        // Function preserved up to one uniform positive factor on the
+        // logits (ReLU positive homogeneity) — argmax must not move.
+        let mut gen = crate::nn::SyntheticDigits::new(12, 77);
+        for s in (0..4).map(|i| gen.render_channels(i, 3)) {
+            assert_eq!(
+                net.forward(&s.image).argmax(),
+                reference.forward(&s.image).argmax(),
+                "calibration changed a prediction"
+            );
+        }
+    }
+
+    #[test]
+    fn equalize_activations_rejects_shapes_without_a_corpus() {
+        // Too small for the glyph renderer (< 12 px): typed error, weights
+        // untouched.
+        let mut net = crate::nn::Network {
+            name: "tiny".into(),
             input_shape: (3, 4, 4),
             layers: vec![crate::nn::Layer::fc(2)],
         };
         net.init_weights(1);
         let before = net.layers[0].weights.clone();
         let err = equalize_activations(&mut net, 1.2, 4).unwrap_err();
-        assert!(err.to_string().contains("single-channel"), "{err}");
+        assert!(err.to_string().contains("no calibration corpus"), "{err}");
         assert_eq!(net.layers[0].weights, before, "failed calibration must not touch weights");
     }
 

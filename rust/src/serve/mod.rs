@@ -78,6 +78,14 @@ pub struct SecureConfig {
     /// Timeout on server→client writes: a client that stops reading fails
     /// its replies (and loses its connection) instead of parking a worker.
     pub write_timeout: Duration,
+    /// Compute threads for the parallel runtime ([`crate::par`]):
+    /// per-channel ciphertext streams, NTT batches, and pool builds all
+    /// fan out over this many threads. `0` (the default) keeps the global
+    /// setting (`CHEETAH_THREADS` env var, else `available_parallelism()`);
+    /// `1` forces the sequential code path. **Process-global**: a non-zero
+    /// value calls [`crate::par::set_threads`] at bind time and applies to
+    /// every engine/server in the process (last writer wins).
+    pub threads: usize,
 }
 
 impl Default for SecureConfig {
@@ -90,6 +98,7 @@ impl Default for SecureConfig {
             queue_depth: 8,
             max_frame: DEFAULT_MAX_FRAME_LEN,
             write_timeout: Duration::from_secs(30),
+            threads: 0,
         }
     }
 }
@@ -155,6 +164,9 @@ impl SecureServer {
         cfg: SecureConfig,
     ) -> std::io::Result<SecureServer> {
         plan.check_fits(ctx.params.p);
+        if cfg.threads > 0 {
+            crate::par::set_threads(cfg.threads);
+        }
         let listener = StoppableListener::bind(addr)?;
         let local = listener.addr;
         let stop = listener.stop_flag();
@@ -163,8 +175,12 @@ impl SecureServer {
         let base_seed = cfg
             .seed
             .unwrap_or_else(|| ChaCha20Rng::from_os_entropy().next_u64());
+        // The pool validates the network → protocol-spec compilation once,
+        // here: a malformed architecture is a bind-time error, never a
+        // panic on a serving or builder thread.
         let pool =
-            BlindingPool::start(ctx.clone(), net.clone(), plan, cfg.epsilon, base_seed, cfg.pool);
+            BlindingPool::start(ctx.clone(), net.clone(), plan, cfg.epsilon, base_seed, cfg.pool)
+                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         let shared = Arc::new(ServeShared {
             ctx,
             net,
@@ -543,7 +559,10 @@ impl CheetahNetClient {
                 "server/client parameter or scale-plan mismatch (fingerprint)",
             ));
         }
-        let spec = ProtocolSpec::compile(&hello.arch);
+        // A server advertising an architecture the protocol cannot express
+        // is a typed connect error, not a client panic.
+        let spec = ProtocolSpec::compile(&hello.arch)
+            .map_err(|e| invalid(&format!("server architecture rejected: {e}")))?;
         let n_steps = spec.steps.len();
         if n_steps != hello.n_steps as usize {
             return Err(invalid("handshake step count disagrees with architecture"));
@@ -705,7 +724,8 @@ mod tests {
         let plan = ScalePlan::default_plan();
         let net = tiny_net(21);
 
-        let mut runner = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 99);
+        let mut runner =
+            CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 99).expect("valid network");
         runner.run_offline();
         let want_a = runner.infer(&test_input(0.0));
         let want_b = runner.infer(&test_input(0.05));
@@ -736,6 +756,29 @@ mod tests {
         let m = server.metrics.summary();
         assert_eq!(m.requests, 2, "two completed secure queries should be metered");
         server.shutdown();
+    }
+
+    /// A network the protocol cannot express must be rejected when the
+    /// server is configured — typed error, no worker-thread panic later.
+    #[test]
+    fn malformed_network_is_a_bind_time_error() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let bad = Network {
+            name: "relu-first".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::relu(), Layer::fc(2)],
+        };
+        let err = SecureServer::serve(
+            ctx,
+            bad,
+            ScalePlan::default_plan(),
+            "127.0.0.1:0",
+            SecureConfig::default(),
+        )
+        .err()
+        .expect("malformed network must not serve");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(err.to_string().contains("layer order"), "{err}");
     }
 
     #[test]

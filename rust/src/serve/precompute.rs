@@ -18,7 +18,7 @@
 use crate::fixed::ScalePlan;
 use crate::nn::Network;
 use crate::phe::Context;
-use crate::protocol::cheetah::CheetahServer;
+use crate::protocol::cheetah::{CheetahServer, ProtocolSpec, SpecError};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -66,6 +66,9 @@ pub struct PoolStats {
 pub struct BlindingPool {
     ctx: Arc<Context>,
     net: Network,
+    /// Spec validated once at pool start — background builds are
+    /// infallible, so a malformed network can never kill a builder thread.
+    spec: ProtocolSpec,
     plan: ScalePlan,
     epsilon: f64,
     next_seed: AtomicU64,
@@ -81,6 +84,9 @@ impl BlindingPool {
     /// Start the pool (spawning `cfg.workers` builder threads when enabled).
     /// Engine seeds are `base_seed, base_seed+1, …` — deterministic but
     /// distinct per engine, so every session gets fresh blinding material.
+    /// Compiling the network into a protocol spec happens here, **once**:
+    /// a malformed network is a typed error at configuration time instead
+    /// of a panic on a background builder thread.
     pub fn start(
         ctx: Arc<Context>,
         net: Network,
@@ -88,10 +94,12 @@ impl BlindingPool {
         epsilon: f64,
         base_seed: u64,
         cfg: PoolConfig,
-    ) -> Arc<Self> {
+    ) -> Result<Arc<Self>, SpecError> {
+        let spec = ProtocolSpec::compile(&net)?;
         let pool = Arc::new(Self {
             ctx,
             net,
+            spec,
             plan,
             epsilon,
             next_seed: AtomicU64::new(base_seed),
@@ -112,12 +120,21 @@ impl BlindingPool {
                 handles.push(std::thread::spawn(move || pool.worker_loop(tx)));
             }
         }
-        pool
+        Ok(pool)
     }
 
     fn build(&self) -> CheetahServer {
         let seed = self.next_seed.fetch_add(1, Ordering::Relaxed);
-        CheetahServer::new(self.ctx.clone(), self.net.clone(), self.plan, self.epsilon, seed)
+        // The engine's own preparation (weight quantization, indicator
+        // encryption) additionally fans out on the crate-wide `par` pool.
+        CheetahServer::with_spec(
+            self.ctx.clone(),
+            self.net.clone(),
+            self.spec.clone(),
+            self.plan,
+            self.epsilon,
+            seed,
+        )
     }
 
     fn worker_loop(&self, tx: SyncSender<CheetahServer>) {
@@ -227,7 +244,8 @@ mod tests {
             0.0,
             100,
             PoolConfig::disabled(),
-        );
+        )
+        .expect("valid network");
         let _a = pool.take();
         let _b = pool.take();
         let s = pool.stats();
@@ -247,7 +265,8 @@ mod tests {
             0.0,
             200,
             PoolConfig { depth: 2, workers: 1 },
-        );
+        )
+        .expect("valid network");
         assert!(pool.wait_until_produced(2, Duration::from_secs(10)), "pool never warmed");
         let _a = pool.take();
         let _b = pool.take();

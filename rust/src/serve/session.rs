@@ -217,7 +217,8 @@ mod tests {
             layers: vec![Layer::fc(4), Layer::relu(), Layer::fc(2)],
         };
         net.init_weights(7);
-        let engine = CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 8);
+        let engine =
+            CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 8).expect("valid net");
         Session::new(1, engine)
     }
 
@@ -245,9 +246,11 @@ mod tests {
         };
         net.init_weights(9);
         let reg = SessionRegistry::new();
-        let engine = CheetahServer::new(ctx.clone(), net.clone(), ScalePlan::default_plan(), 0.0, 1);
+        let engine = CheetahServer::new(ctx.clone(), net.clone(), ScalePlan::default_plan(), 0.0, 1)
+            .expect("valid net");
         let (id1, _) = reg.create(engine);
-        let engine = CheetahServer::new(ctx.clone(), net, ScalePlan::default_plan(), 0.0, 2);
+        let engine = CheetahServer::new(ctx.clone(), net, ScalePlan::default_plan(), 0.0, 2)
+            .expect("valid net");
         let (id2, _) = reg.create(engine);
         assert_ne!(id1, id2);
         assert_eq!(reg.len(), 2);

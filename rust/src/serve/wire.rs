@@ -381,8 +381,8 @@ mod tests {
             assert!(a.weights.is_empty(), "weights must never cross the wire");
         }
         // The client-compiled spec matches the server's.
-        let spec_a = crate::protocol::cheetah::ProtocolSpec::compile(&back);
-        let spec_b = crate::protocol::cheetah::ProtocolSpec::compile(&net);
+        let spec_a = crate::protocol::cheetah::ProtocolSpec::compile(&back).unwrap();
+        let spec_b = crate::protocol::cheetah::ProtocolSpec::compile(&net).unwrap();
         assert_eq!(spec_a.steps.len(), spec_b.steps.len());
     }
 

@@ -27,9 +27,10 @@ fn cheetah_vs_gazelle_same_model() {
     net.init_weights(404);
     let float_net = net.clone();
 
-    let mut ch = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 405);
+    let mut ch =
+        CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 405).expect("valid network");
     ch.run_offline();
-    let mut gz = GazelleRunner::new(ctx.clone(), net, plan, 406);
+    let mut gz = GazelleRunner::new(ctx.clone(), net, plan, 406).expect("valid network");
 
     let mut srng = SplitMix64::new(407);
     let input = Tensor::from_vec(
@@ -67,7 +68,8 @@ fn trained_model_private_inference() {
     let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
     let net = cheetah::runtime::load_trained_network("artifacts", "netA").unwrap();
-    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.05, 500);
+    let mut runner =
+        CheetahRunner::new(ctx.clone(), net, plan, 0.05, 500).expect("valid network");
     runner.run_offline();
     let mut gen = SyntheticDigits::new(28, 501);
     let mut correct = 0;
@@ -174,7 +176,8 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
     // In-process references for both possible engine seeds.
     let expected: Vec<Vec<Vec<Vec<f64>>>> = (0..2u64)
         .map(|s| {
-            let mut runner = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, base_seed + s);
+            let mut runner = CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, base_seed + s)
+                .expect("valid network");
             runner.run_offline();
             inputs
                 .iter()
@@ -277,6 +280,62 @@ fn engines_cross_backend_agreement() {
     assert!(nt.traffic.unwrap().offline > 0, "offline indicators metered over the wire");
 }
 
+/// The parallel runtime's determinism contract, end to end: for every
+/// protocol backend, the logits at 2 and 8 threads are **bit-identical** to
+/// the sequential (threads = 1) run under pinned seeds. Work is statically
+/// partitioned by index with per-channel RNG streams, so no arithmetic —
+/// modular or float — may depend on scheduling.
+#[test]
+fn thread_sweep_is_bit_exact_across_backends() {
+    // The sweep mutates the process-global thread count; under the CI
+    // sequential gate (CHEETAH_THREADS=1) that would silently re-enable
+    // parallelism for concurrently running tests, so skip the sweep there
+    // — the default-threads CI job still runs it in full.
+    if std::env::var("CHEETAH_THREADS").as_deref() == Ok("1") {
+        eprintln!("skipping thread sweep: CHEETAH_THREADS=1 pins the sequential gate");
+        return;
+    }
+    let ctx = Arc::new(Context::new(Params::default_params()));
+    let mut net = Network {
+        name: "sweep".into(),
+        input_shape: (1, 6, 6),
+        layers: vec![Layer::conv(3, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+    };
+    net.init_weights(7070);
+    let input = {
+        let mut rng = SplitMix64::new(7071);
+        Tensor::from_vec((0..36).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(), 1, 6, 6)
+    };
+
+    let run = |backend: Backend, threads: usize| -> Vec<f64> {
+        // A fresh engine per (backend, thread-count) with the same pinned
+        // seed: identical keys and blinding material every time, so any
+        // logit difference can only come from the parallel runtime.
+        let mut engine = EngineBuilder::new(backend)
+            .network(net.clone())
+            .context(ctx.clone())
+            .epsilon(0.0)
+            .seed(7072)
+            .threads(threads)
+            .build()
+            .expect("engine build");
+        engine.infer(&input).expect("inference").logits
+    };
+
+    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+        let reference = run(backend, 1);
+        for threads in [2usize, 8] {
+            let got = run(backend, threads);
+            assert_eq!(
+                got, reference,
+                "{backend}: logits at threads={threads} diverge bitwise from sequential"
+            );
+        }
+    }
+    // Restore the global default for the rest of the test process.
+    cheetah::par::set_threads(0);
+}
+
 /// Property: private inference is deterministic given seeds, and the
 /// metered traffic equals the sum of serialized ciphertext sizes.
 #[test]
@@ -289,7 +348,8 @@ fn traffic_accounting_consistent() {
         layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
     };
     net.init_weights(900);
-    let mut runner = CheetahRunner::new(ctx.clone(), net, plan, 0.0, 901);
+    let mut runner =
+        CheetahRunner::new(ctx.clone(), net, plan, 0.0, 901).expect("valid network");
     runner.run_offline();
     let input = Tensor::from_vec((0..36).map(|i| i as f64 / 36.0).collect(), 1, 6, 6);
     let rep = runner.infer(&input);
