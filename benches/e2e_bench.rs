@@ -16,8 +16,15 @@
 //! CHEETAH at full scale (GAZELLE full-scale cost is extrapolated from its
 //! measured per-op costs — see EXPERIMENTS.md).
 //!
+//! `--batch N` (default 4) additionally measures **batch-level
+//! parallelism**: N queries scored as one `infer_batch` fork-join region
+//! vs the same N through a sequential `infer` loop, asserting bit-equal
+//! logits and recording both throughputs (queries/sec) in the JSON
+//! (`framework = cheetah-loop` / `cheetah-batch`). `--batch 1` disables
+//! the section.
+//!
 //! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]
-//!       [-- --network netB] [-- --threads 4]`
+//!       [-- --network netB] [-- --threads 4] [-- --batch 8]`
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
@@ -26,6 +33,7 @@ use cheetah::phe::{Context, Params};
 use cheetah::util::fmt_bytes;
 use cheetah::util::rng::SplitMix64;
 use std::sync::Arc;
+use std::time::Instant;
 
 fn input_for(net: &Network, seed: u64) -> Tensor {
     let (c, h, w) = net.input_shape;
@@ -41,6 +49,7 @@ fn main() {
     let args = BenchArgs::from_env();
     let paper = args.has("--paper");
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
+    let batch = args.get_usize("--batch", 4).max(1);
     let net_filter = args.get("--network").map(|s| s.to_string());
     let ctx = Arc::new(Context::new(Params::default_params()));
 
@@ -73,7 +82,9 @@ fn main() {
         "#Perm",
     ]);
     // Machine-readable companion (BENCH_e2e.json): one row per
-    // (network, framework, threads) cell, times in milliseconds.
+    // (network, framework, threads, batch) cell, times in milliseconds.
+    // Single-query rows have batch=1; `cheetah-loop`/`cheetah-batch` rows
+    // record whole-batch wall ms in online_ms plus throughput in qps.
     let mut jt = Table::new(&[
         "network",
         "framework",
@@ -84,6 +95,8 @@ fn main() {
         "offline_bytes",
         "perm",
         "par_speedup",
+        "batch",
+        "qps",
     ]);
 
     for (arch, ch_scale, gz_scale) in nets {
@@ -91,6 +104,9 @@ fn main() {
         let net = Network::build_scaled(arch, 21, ch_scale);
         let name = net.name.clone();
         let input = input_for(&net, 22);
+        // Batch inputs drawn up front (the net moves into the builder).
+        let batch_inputs: Vec<Tensor> =
+            (0..batch).map(|i| input_for(&net, 30 + i as u64)).collect();
         let mut ch = EngineBuilder::new(Backend::Cheetah)
             .network(net)
             .context(ctx.clone())
@@ -194,6 +210,8 @@ fn main() {
             gz_prep.offline_bytes.to_string(),
             gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
             String::new(),
+            "1".into(),
+            String::new(),
         ]);
         for (thr, rep, prep, speedup) in [
             (1usize, &seq_rep, &seq_prep, String::new()),
@@ -209,7 +227,58 @@ fn main() {
                 prep.offline_bytes.to_string(),
                 rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
                 speedup,
+                "1".into(),
+                String::new(),
             ]);
+        }
+
+        // ---- batch-level parallelism: sequential loop vs one fork-join
+        // batch over the same prepared deployment (threads stays at N) ----
+        if batch > 1 {
+            let t0 = Instant::now();
+            let loop_reps: Vec<_> = batch_inputs
+                .iter()
+                .map(|x| ch.infer(x).expect("cheetah loop inference"))
+                .collect();
+            let loop_wall = t0.elapsed();
+            let t1 = Instant::now();
+            let batch_reps = ch.infer_batch(&batch_inputs).expect("cheetah batch inference");
+            let batch_wall = t1.elapsed();
+            for (i, (a, b)) in loop_reps.iter().zip(&batch_reps).enumerate() {
+                assert_eq!(
+                    a.logits, b.logits,
+                    "{name}: batched query {i} diverged bitwise from the sequential loop"
+                );
+            }
+            let loop_qps = batch as f64 / loop_wall.as_secs_f64().max(1e-9);
+            let batch_qps = batch as f64 / batch_wall.as_secs_f64().max(1e-9);
+            println!(
+                "{name}: batch {batch} @ {threads} threads — loop {loop_qps:.2} q/s vs \
+                 batch {batch_qps:.2} q/s ({:.2}x)",
+                batch_qps / loop_qps.max(1e-9)
+            );
+            // Each row meters its own run's traffic, so a drift between the
+            // loop and batch accounting would show up in the JSON too.
+            let loop_bytes: u64 = loop_reps.iter().map(|r| r.online_bytes()).sum();
+            let batch_bytes: u64 = batch_reps.iter().map(|r| r.online_bytes()).sum();
+            for (fw, wall, qps, bytes) in [
+                ("cheetah-loop", loop_wall, loop_qps, loop_bytes),
+                ("cheetah-batch", batch_wall, batch_qps, batch_bytes),
+            ] {
+                jt.row(&[
+                    name.clone(),
+                    fw.into(),
+                    threads.to_string(),
+                    format!("{:.3}", wall.as_secs_f64() * 1e3),
+                    String::new(),
+                    bytes.to_string(),
+                    String::new(),
+                    String::new(),
+                    String::new(),
+                    batch.to_string(),
+                    format!("{qps:.3}"),
+                ]);
+            }
         }
 
         if args.has("--breakdown") && arch == NetworkArch::Vgg16 {
@@ -248,7 +317,10 @@ fn main() {
     t.print(
         "Table 7 — end-to-end networks (paper: CHEETAH 218x/334x/130x/140x over GAZELLE)",
     );
-    jt.write_json("BENCH_e2e.json", "e2e networks: online/offline per (network, framework, threads)")
-        .expect("write BENCH_e2e.json");
+    jt.write_json(
+        "BENCH_e2e.json",
+        "e2e networks: online/offline per (network, framework, threads, batch)",
+    )
+    .expect("write BENCH_e2e.json");
     println!("\nwrote BENCH_e2e.json");
 }

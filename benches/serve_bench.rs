@@ -12,7 +12,11 @@
 //! * pool effectiveness (engines prebuilt vs built inline).
 //!
 //! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
-//!       [-- --depth 4] [-- --net netA] [-- --threads 4]`
+//!       [-- --depth 4] [-- --net netA] [-- --threads 4] [-- --batch 8]`
+//! `--batch N` makes each session submit its queries as **one**
+//! `infer_batch` call (pipelined over the session's ordered socket) instead
+//! of N separate `infer` calls, so the batch path over real TCP shows up in
+//! `BENCH_serve.json` (batch=0 rows are the per-query path).
 //! Default is a small conv+fc model so the sweep finishes quickly; `--net
 //! netA` runs the paper's Network A (28×28) at realistic cost. Results are
 //! also persisted to `BENCH_serve.json` (wall time, bytes, threads) so the
@@ -65,6 +69,7 @@ fn main() {
     let args = BenchArgs::from_env();
     let max_sessions = args.get_usize("--sessions", 4);
     let queries = args.get_usize("--queries", 2);
+    let batch = args.get_usize("--batch", 0);
     let depth = args.get_usize("--depth", max_sessions);
     let net_name = args.get("--net").unwrap_or("small").to_string();
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
@@ -94,6 +99,7 @@ fn main() {
         "sessions",
         "pool_depth",
         "threads",
+        "batch",
         "setup_p50_ms",
         "query_p50_ms",
         "wall_s",
@@ -150,10 +156,23 @@ fn main() {
                     engine.prepare().expect("secure session setup");
                     let setup = t_setup.elapsed();
                     let mut bytes = 0u64;
-                    for _ in 0..queries {
-                        let rep = engine.infer(&input).expect("secure inference");
-                        let traffic = rep.traffic.expect("networked engine meters traffic");
-                        bytes += traffic.c2s + traffic.s2c;
+                    if batch > 0 {
+                        // One infer_batch call per session: the batch path
+                        // over a real socket (queries pipeline in order on
+                        // the session; per-query compute still fans out).
+                        let inputs = vec![input.clone(); batch];
+                        for rep in engine.infer_batch(&inputs).expect("secure batch") {
+                            let traffic =
+                                rep.traffic.expect("networked engine meters traffic");
+                            bytes += traffic.c2s + traffic.s2c;
+                        }
+                    } else {
+                        for _ in 0..queries {
+                            let rep = engine.infer(&input).expect("secure inference");
+                            let traffic =
+                                rep.traffic.expect("networked engine meters traffic");
+                            bytes += traffic.c2s + traffic.s2c;
+                        }
                     }
                     (setup, bytes)
                 }));
@@ -167,7 +186,7 @@ fn main() {
                 });
             let wall = t0.elapsed();
 
-            let total = sessions * queries;
+            let total = sessions * if batch > 0 { batch } else { queries };
             let m = server.metrics.summary();
             assert_eq!(m.requests as usize, total, "metered queries mismatch");
             let ps = server.pool_stats();
@@ -186,6 +205,7 @@ fn main() {
                 sessions.to_string(),
                 if pool_on { depth.to_string() } else { "0".into() },
                 threads.to_string(),
+                batch.to_string(),
                 format!("{:.3}", setup_p50.as_secs_f64() * 1e3),
                 format!("{:.3}", m.p50.as_secs_f64() * 1e3),
                 format!("{:.3}", wall.as_secs_f64()),
@@ -204,7 +224,10 @@ fn main() {
          online latency unchanged",
         net.name
     ));
-    jt.write_json("BENCH_serve.json", "secure serving: wall/bytes per (sessions, pool, threads)")
-        .expect("write BENCH_serve.json");
+    jt.write_json(
+        "BENCH_serve.json",
+        "secure serving: wall/bytes per (sessions, pool, threads, batch)",
+    )
+    .expect("write BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");
 }

@@ -3,6 +3,14 @@
 //! standard MLaaS serving pattern (vLLM-style continuous batching,
 //! simplified to fixed windows since CNN inference has no autoregressive
 //! state).
+//!
+//! The scorer sees the **whole batch at once** (`score(&[inputs])`), and
+//! the engine-backed scorer (`Server::serve_engine`) forwards it to
+//! `InferenceEngine::infer_batch` — one fork-join region over the
+//! [`crate::par`] pool, so queries that were queued together are scored
+//! concurrently instead of back to back. Batch logits are bit-identical to
+//! sequential scoring (per-query RNG stream isolation in the protocol
+//! backends), so batching is purely a throughput knob.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

@@ -175,7 +175,9 @@ impl Server {
     /// Serve any [`crate::engine::InferenceEngine`] behind the dynamic
     /// batcher — the scoring path is backend-agnostic: a quantized mirror,
     /// an in-process CHEETAH deployment, or a networked client all drop in.
-    /// `input_shape` describes the flat pixel payload clients send.
+    /// `input_shape` describes the flat pixel payload clients send. Each
+    /// collected batch is dispatched as **one** `infer_batch` call, so the
+    /// in-process engines fan the queries across the [`crate::par`] pool.
     pub fn serve_engine(
         mut engine: Box<dyn InferenceEngine>,
         input_shape: (usize, usize, usize),

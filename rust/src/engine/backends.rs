@@ -20,6 +20,7 @@ use super::report::{EngineReport, StepReport, Timing, Traffic};
 use super::{Backend, EngineError, EngineResult, InferenceEngine, Prepared};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, Tensor};
+use crate::par;
 use crate::phe::Context;
 use crate::protocol::cheetah::CheetahRunner;
 use crate::protocol::gazelle::GazelleRunner;
@@ -40,6 +41,7 @@ pub struct PlaintextFloatEngine {
 }
 
 impl PlaintextFloatEngine {
+    /// Build from a network (weights already initialized or loaded).
     pub fn new(net: Network) -> Self {
         Self { net, last: None }
     }
@@ -63,6 +65,24 @@ impl InferenceEngine for PlaintextFloatEngine {
         Ok(rep)
     }
 
+    /// Queries are independent forward passes — one fork-join region over
+    /// the batch.
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let net = &self.net;
+        let reps = par::map_indexed(inputs.len(), |i| {
+            let t0 = Instant::now();
+            let out = net.forward(&inputs[i]);
+            let mut rep = EngineReport::bare(Backend::PlaintextFloat, out.argmax(), out.data);
+            rep.timing = Some(Timing { online_compute: t0.elapsed(), ..Default::default() });
+            rep
+        });
+        self.last = reps.last().cloned();
+        Ok(reps)
+    }
+
     fn report(&self) -> Option<&EngineReport> {
         self.last.as_ref()
     }
@@ -81,8 +101,18 @@ pub struct PlaintextQuantizedEngine {
 }
 
 impl PlaintextQuantizedEngine {
+    /// Build from a network, scale plan, noise bound ε, and base noise seed.
     pub fn new(net: Network, plan: ScalePlan, epsilon: f64, noise_seed: u64) -> Self {
         Self { net, plan, epsilon, noise_seed, last: None }
+    }
+
+    fn report_for(&self, q: Vec<i64>, elapsed: Duration) -> EngineReport {
+        // Same tie-breaking as the protocol clients: last maximum wins.
+        let argmax = q.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0);
+        let logits = q.iter().map(|&v| self.plan.x.dequantize(v)).collect();
+        let mut rep = EngineReport::bare(Backend::PlaintextQuantized, argmax, logits);
+        rep.timing = Some(Timing { online_compute: elapsed, ..Default::default() });
+        rep
     }
 }
 
@@ -99,14 +129,33 @@ impl InferenceEngine for PlaintextQuantizedEngine {
         let t0 = Instant::now();
         let q = self.net.forward_quantized(input, &self.plan, self.epsilon, self.noise_seed);
         self.noise_seed = self.noise_seed.wrapping_add(1);
-        let elapsed = t0.elapsed();
-        // Same tie-breaking as the protocol clients: last maximum wins.
-        let argmax = q.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0);
-        let logits = q.iter().map(|&v| self.plan.x.dequantize(v)).collect();
-        let mut rep = EngineReport::bare(self.backend(), argmax, logits);
-        rep.timing = Some(Timing { online_compute: elapsed, ..Default::default() });
+        let rep = self.report_for(q, t0.elapsed());
         self.last = Some(rep.clone());
         Ok(rep)
+    }
+
+    /// Per-query noise seeds `base, base+1, …` — exactly the looped
+    /// derivation — so the batched δ draws match the sequential path bit
+    /// for bit while queries fan out in parallel.
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let base = self.noise_seed;
+        self.noise_seed = base.wrapping_add(inputs.len() as u64);
+        let this = &*self;
+        let reps = par::map_indexed(inputs.len(), |i| {
+            let t0 = Instant::now();
+            let q = this.net.forward_quantized(
+                &inputs[i],
+                &this.plan,
+                this.epsilon,
+                base.wrapping_add(i as u64),
+            );
+            this.report_for(q, t0.elapsed())
+        });
+        self.last = reps.last().cloned();
+        Ok(reps)
     }
 
     fn report(&self) -> Option<&EngineReport> {
@@ -132,6 +181,8 @@ pub struct CheetahEngine {
 }
 
 impl CheetahEngine {
+    /// Build from a shared context, network, scale plan, ε, seed, and link
+    /// cost model.
     pub fn new(
         ctx: Arc<Context>,
         net: Network,
@@ -203,6 +254,44 @@ impl InferenceEngine for CheetahEngine {
         Ok(rep)
     }
 
+    /// Batch driver: independent queries fanned across the [`crate::par`]
+    /// pool against the one prepared deployment
+    /// ([`CheetahRunner::infer_batch`]). Logits are bit-identical to
+    /// looping `infer`; reports carry per-query wall time, exact traffic,
+    /// and modeled wire time (no per-step/ops attribution in batch mode).
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.runner.is_none() {
+            self.prepare()?;
+        }
+        let offline_bytes = self.offline_bytes;
+        let runner = self.runner.as_mut().expect("prepared above");
+        let n_steps = runner.spec().steps.len() as u64;
+        let out: Vec<EngineReport> = runner
+            .infer_batch(inputs)
+            .into_iter()
+            .map(|r| {
+                let mut rep = EngineReport::bare(Backend::Cheetah, r.argmax, r.logits.clone());
+                rep.timing = Some(Timing {
+                    online_compute: r.online_compute(),
+                    wire: r.wire_time,
+                    offline: Duration::ZERO,
+                });
+                rep.traffic = Some(Traffic {
+                    c2s: r.steps.iter().map(|s| s.c2s_bytes).sum(),
+                    s2c: r.steps.iter().map(|s| s.s2c_bytes).sum(),
+                    offline: offline_bytes,
+                    rounds: (2 * n_steps).saturating_sub(1),
+                });
+                rep
+            })
+            .collect();
+        self.last = out.last().cloned();
+        Ok(out)
+    }
+
     fn report(&self) -> Option<&EngineReport> {
         self.last.as_ref()
     }
@@ -224,6 +313,7 @@ pub struct GazelleEngine {
 }
 
 impl GazelleEngine {
+    /// Build from a shared context, network, scale plan, and seed.
     pub fn new(ctx: Arc<Context>, net: Network, plan: ScalePlan, seed: u64) -> Self {
         Self { ctx, net, plan, seed, runner: None, offline_bytes: 0, last: None }
     }
@@ -280,6 +370,41 @@ impl InferenceEngine for GazelleEngine {
         Ok(rep)
     }
 
+    /// Batch driver: independent queries fanned across the [`crate::par`]
+    /// pool ([`GazelleRunner::infer_batch`]); logits bit-identical to the
+    /// loop. HE op counts are a single-query-mode feature (`ops: None`).
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.runner.is_none() {
+            self.prepare()?;
+        }
+        let offline_bytes = self.offline_bytes;
+        let runner = self.runner.as_mut().expect("prepared above");
+        let out: Vec<EngineReport> = runner
+            .infer_batch(inputs)
+            .into_iter()
+            .map(|r| {
+                let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+                rep.timing = Some(Timing {
+                    online_compute: r.online_compute(),
+                    wire: Duration::ZERO,
+                    offline: r.gc.garble_time,
+                });
+                rep.traffic = Some(Traffic {
+                    c2s: r.c2s_bytes,
+                    s2c: r.s2c_bytes,
+                    offline: offline_bytes,
+                    rounds: 0,
+                });
+                rep
+            })
+            .collect();
+        self.last = out.last().cloned();
+        Ok(out)
+    }
+
     fn report(&self) -> Option<&EngineReport> {
         self.last.as_ref()
     }
@@ -300,7 +425,12 @@ pub enum NetTarget {
     Remote(SocketAddr),
     /// Self-host a [`SecureServer`] on loopback and connect to it — gives a
     /// single builder call the full socket round trip.
-    SelfHosted { net: Network, cfg: SecureConfig },
+    SelfHosted {
+        /// The network the loopback server hosts.
+        net: Network,
+        /// The loopback server's configuration.
+        cfg: SecureConfig,
+    },
 }
 
 /// CHEETAH over real sockets: a [`CheetahNetClient`] session, optionally
@@ -317,6 +447,7 @@ pub struct CheetahNetEngine {
 }
 
 impl CheetahNetEngine {
+    /// Build from a shared context, scale plan, seed, and server target.
     pub fn new(ctx: Arc<Context>, plan: ScalePlan, seed: u64, target: NetTarget) -> Self {
         Self {
             ctx,
@@ -396,6 +527,15 @@ impl InferenceEngine for CheetahNetEngine {
         });
         self.last = Some(rep.clone());
         Ok(rep)
+    }
+
+    /// One TCP session is one ordered protocol stream — the server's
+    /// per-session state machine serializes rounds — so a batch pipelines
+    /// sequentially over the session (within-query compute on both ends
+    /// still fans out on the [`crate::par`] pool). Batch-parallelism over
+    /// TCP means one engine per session; see `benches/serve_bench.rs`.
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        inputs.iter().map(|x| self.infer(x)).collect()
     }
 
     fn report(&self) -> Option<&EngineReport> {

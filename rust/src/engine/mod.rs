@@ -67,6 +67,7 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Stable CLI/report key for this backend (`cheetah`, `gazelle`, …).
     pub fn name(&self) -> &'static str {
         match self {
             Backend::PlaintextFloat => "plaintext-float",
@@ -90,6 +91,7 @@ impl Backend {
         }
     }
 
+    /// Every backend, in the canonical comparison order.
     pub fn all() -> [Backend; 5] {
         [
             Backend::PlaintextFloat,
@@ -111,10 +113,12 @@ impl std::fmt::Display for Backend {
 /// protocol cannot express, or a transport error from a networked backend.
 #[derive(Debug)]
 pub enum EngineError {
+    /// A build-time configuration problem (missing network, bad option).
     Build(String),
     /// The network cannot compile into a protocol spec (typed — previously
     /// a panic deep inside the protocol layer).
     Spec(SpecError),
+    /// A transport error from a networked backend.
     Io(std::io::Error),
 }
 
@@ -144,6 +148,7 @@ impl From<SpecError> for EngineError {
     }
 }
 
+/// Shorthand for engine-returning results.
 pub type EngineResult<T> = Result<T, EngineError>;
 
 /// What the offline phase produced: its wall time and the bytes shipped
@@ -151,7 +156,9 @@ pub type EngineResult<T> = Result<T, EngineError>;
 /// tables — backend-dependent).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Prepared {
+    /// Wall time of the offline phase.
     pub offline_time: Duration,
+    /// Bytes shipped ahead of any query.
     pub offline_bytes: u64,
 }
 
@@ -170,8 +177,18 @@ pub trait InferenceEngine: Send {
     /// Run one inference, producing the unified report.
     fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport>;
 
-    /// Run a batch of inferences. The default loops over `infer`; backends
-    /// with real batching can override.
+    /// Run a batch of independent inferences.
+    ///
+    /// Every in-process backend overrides this to fan the queries across
+    /// the [`crate::par`] pool as one fork-join region, with logits
+    /// **bit-identical** to looping [`InferenceEngine::infer`] over the
+    /// same inputs at every thread count and batch size (per-query RNG
+    /// stream isolation; see the `protocol::cheetah::client` docs). The
+    /// networked backend pipelines the batch over its single ordered
+    /// session instead. Batch reports fill timing and traffic; per-step
+    /// breakdowns and HE op counts are single-query-mode features.
+    ///
+    /// The default implementation loops over `infer`.
     fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
         inputs.iter().map(|x| self.infer(x)).collect()
     }
@@ -185,6 +202,35 @@ pub trait InferenceEngine: Send {
 /// [`EngineBuilder::network`]) for backends that host the model themselves
 /// — a [`Backend::CheetahNet`] engine pointed at a remote server with
 /// [`EngineBuilder::connect_to`] downloads the architecture instead.
+///
+/// ```
+/// use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
+/// use cheetah::nn::{Layer, Network, Tensor};
+///
+/// // A tiny custom network through the quantized-mirror backend.
+/// let mut net = Network {
+///     name: "doctest".into(),
+///     input_shape: (1, 4, 4),
+///     layers: vec![Layer::fc(4), Layer::relu(), Layer::fc(3)],
+/// };
+/// net.init_weights(7);
+/// let mut engine = EngineBuilder::new(Backend::PlaintextQuantized)
+///     .network(net)
+///     .threads(2) // scoped to this engine, not the process
+///     .build()
+///     .expect("valid network");
+///
+/// let input = Tensor::from_vec(vec![0.25; 16], 1, 4, 4);
+/// let one = engine.infer(&input).expect("inference");
+/// assert_eq!(one.logits.len(), 3);
+///
+/// // Batched inference fans out on the par pool and stays bit-identical
+/// // to single queries (ε = 0 here, so repeats are exact).
+/// let batch = engine.infer_batch(&[input.clone(), input]).expect("batch");
+/// assert_eq!(batch.len(), 2);
+/// assert_eq!(batch[0].logits, one.logits);
+/// assert_eq!(batch[1].logits, one.logits);
+/// ```
 pub struct EngineBuilder {
     backend: Backend,
     arch: Option<NetworkArch>,
@@ -202,6 +248,7 @@ pub struct EngineBuilder {
 }
 
 impl EngineBuilder {
+    /// Start a builder for `backend` with every option at its default.
     pub fn new(backend: Backend) -> Self {
         Self {
             backend,
@@ -293,18 +340,22 @@ impl EngineBuilder {
     }
 
     /// Compute threads for the parallel runtime ([`crate::par`]): the
-    /// protocol's per-channel ciphertext streams, NTT batches, and
-    /// plaintext conv loops fan out over this many threads. Default: the
-    /// global setting (`CHEETAH_THREADS` env var, else
+    /// protocol's per-channel ciphertext streams, NTT batches, plaintext
+    /// conv loops, and the batch driver's per-query fan-out all target
+    /// this many threads. Default: the global setting (`CHEETAH_THREADS`
+    /// env var, [`crate::par::set_threads`], else
     /// `available_parallelism()`). `1` forces the exact sequential code
     /// path; the arithmetic is bit-identical at every thread count.
     ///
-    /// **Scope: this knob is process-global**, not per-engine — `build()`
-    /// calls [`crate::par::set_threads`], so the last engine (or
-    /// [`SecureConfig::threads`]) to set it wins for *every* engine and
-    /// server in the process. Results are unaffected (bit-exact at any
-    /// count); only throughput is. Don't lower it in a process that is
-    /// concurrently serving (per-engine pools are a ROADMAP item).
+    /// **Scope: per-engine.** The built engine wraps every
+    /// `prepare`/`infer`/`infer_batch` call in
+    /// [`crate::par::with_threads`], so the override applies to this
+    /// engine's own calls only — building an engine can never resize a
+    /// live server's parallelism (servers pin theirs via
+    /// [`SecureConfig::threads`]). `0` (or not calling this) keeps the
+    /// global setting. For a self-hosted [`Backend::CheetahNet`] engine
+    /// the value is also forwarded to the loopback server's config, so
+    /// both sides of the socket honor it.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n);
         self
@@ -336,10 +387,8 @@ impl EngineBuilder {
     /// that hosts a model, so a malformed network is a typed build error
     /// (never a panic inside `prepare`/`infer` or a serving thread).
     pub fn build(self) -> EngineResult<Box<dyn InferenceEngine>> {
-        if let Some(n) = self.threads {
-            crate::par::set_threads(n);
-        }
-        Ok(match self.backend {
+        let threads = self.threads;
+        let engine: Box<dyn InferenceEngine> = match self.backend {
             Backend::PlaintextFloat => Box::new(PlaintextFloatEngine::new(self.resolve_network()?)),
             Backend::PlaintextQuantized => Box::new(PlaintextQuantizedEngine::new(
                 self.resolve_network()?,
@@ -377,6 +426,9 @@ impl EngineBuilder {
                                 seed: Some(self.seed),
                                 workers: 2,
                                 pool: PoolConfig::disabled(),
+                                // A per-engine thread override also scopes
+                                // the loopback server's side of the work.
+                                threads: self.threads.unwrap_or(0),
                                 ..SecureConfig::default()
                             }),
                         }
@@ -389,7 +441,46 @@ impl EngineBuilder {
                     target,
                 ))
             }
+        };
+        Ok(match threads {
+            Some(n) if n > 0 => Box::new(ScopedEngine { inner: engine, threads: n }),
+            _ => engine,
         })
+    }
+}
+
+/// Wrapper pinning the [`crate::par`] thread count around every call into
+/// the inner engine — what `EngineBuilder::threads(n)` builds. The scope
+/// travels with the calling thread only ([`crate::par::with_threads`]), so
+/// two engines with different `threads` settings, or an engine and a live
+/// [`crate::serve::SecureServer`], never fight over a global knob.
+struct ScopedEngine {
+    inner: Box<dyn InferenceEngine>,
+    threads: usize,
+}
+
+impl InferenceEngine for ScopedEngine {
+    fn backend(&self) -> Backend {
+        self.inner.backend()
+    }
+
+    fn prepare(&mut self) -> EngineResult<Prepared> {
+        let inner = &mut self.inner;
+        crate::par::with_threads(self.threads, || inner.prepare())
+    }
+
+    fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
+        let inner = &mut self.inner;
+        crate::par::with_threads(self.threads, || inner.infer(input))
+    }
+
+    fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
+        let inner = &mut self.inner;
+        crate::par::with_threads(self.threads, || inner.infer_batch(inputs))
+    }
+
+    fn report(&self) -> Option<&EngineReport> {
+        self.inner.report()
     }
 }
 

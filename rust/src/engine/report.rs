@@ -35,6 +35,7 @@ pub struct Timing {
 }
 
 impl Timing {
+    /// Online compute plus wire time.
     pub fn online_total(&self) -> Duration {
         self.online_compute + self.wire
     }
@@ -55,6 +56,7 @@ pub struct Traffic {
 }
 
 impl Traffic {
+    /// Total online bytes, both directions.
     pub fn online_total(&self) -> u64 {
         self.c2s + self.s2c
     }
@@ -64,22 +66,34 @@ impl Traffic {
 /// whole-step durations).
 #[derive(Clone, Debug, Default)]
 pub struct StepReport {
+    /// Step label (`step0:conv`, …).
     pub name: String,
+    /// Server compute attributed to this step.
     pub server_time: Duration,
+    /// Client compute attributed to this step.
     pub client_time: Duration,
+    /// Client→server bytes for this step.
     pub c2s_bytes: u64,
+    /// Server→client bytes for this step.
     pub s2c_bytes: u64,
 }
 
 /// The unified whole-query report.
 #[derive(Clone, Debug)]
 pub struct EngineReport {
+    /// Which backend produced this report.
     pub backend: Backend,
+    /// Predicted class (last maximum of the logits).
     pub argmax: usize,
+    /// Dequantized logits.
     pub logits: Vec<f64>,
+    /// Timing section, when the backend times itself.
     pub timing: Option<Timing>,
+    /// Traffic section, when the backend meters bytes.
     pub traffic: Option<Traffic>,
+    /// HE op counts (single-query mode only; `None` for batch reports).
     pub ops: Option<OpCounts>,
+    /// Per fused-step breakdown (single-query protocol backends).
     pub steps: Vec<StepReport>,
 }
 

@@ -107,11 +107,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             };
             let server =
                 SecureServer::serve(ctx, net, ScalePlan::default_plan(), &addr, cfg)?;
+            // cfg.threads is scoped to this server's workers; 0 means the
+            // process default.
+            let effective_threads =
+                if threads > 0 { threads } else { cheetah::par::threads() };
             println!(
                 "secure CHEETAH serving of {name} on {} (ε={eps}, {workers} workers, \
-                 {} compute threads, pool depth {pool_depth}×{pool_workers}) — Ctrl-C to stop",
+                 {effective_threads} compute threads, pool depth {pool_depth}×{pool_workers}) \
+                 — Ctrl-C to stop",
                 server.addr,
-                cheetah::par::threads(),
             );
             loop {
                 std::thread::sleep(Duration::from_secs(10));

@@ -17,9 +17,16 @@
 //! count (the integration tests sweep 1/2/8 and assert exactly this).
 //!
 //! **Sequential fallback.** With an effective thread count of 1 (the
-//! `--threads 1` CLI knob, `CHEETAH_THREADS=1`, or a single-core host)
-//! every primitive degenerates to the plain `for` loop — the pool is never
-//! started and no worker thread is ever spawned.
+//! `--threads 1` CLI knob, `CHEETAH_THREADS=1`, a [`with_threads`]`(1, …)`
+//! scope, or a single-core host) every primitive degenerates to the plain
+//! `for` loop — the pool is never started and no worker thread is ever
+//! spawned.
+//!
+//! **Thread-count resolution.** [`threads()`] answers, in priority order:
+//! the innermost [`with_threads`] scope on the calling thread (how
+//! per-engine and per-server overrides stay isolated from each other),
+//! then the [`set_threads`] process-global, then the default
+//! (`CHEETAH_THREADS` env var, else `available_parallelism()`).
 //!
 //! **Nested regions.** A region's caller first claims and executes unclaimed
 //! chunks itself, then waits only on chunks other threads have already
@@ -35,6 +42,7 @@
 //! deterministically-seeded stream per chunk (as the CHEETAH server does for
 //! its per-channel noise streams).
 
+use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -45,6 +53,11 @@ use std::time::Duration;
 static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
 /// Resolved default: `CHEETAH_THREADS` env var, else `available_parallelism`.
 static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+thread_local! {
+    /// Per-thread scoped override (0 = none); see [`with_threads`].
+    static SCOPED: Cell<usize> = const { Cell::new(0) };
+}
 
 fn default_threads() -> usize {
     *DEFAULT.get_or_init(|| {
@@ -59,19 +72,66 @@ fn default_threads() -> usize {
     })
 }
 
-/// Set the global thread count. `0` restores the default
+/// Set the **process-global** thread count. `0` restores the default
 /// (`CHEETAH_THREADS` env var, else `available_parallelism()`); `1` forces
-/// the exact sequential code path everywhere.
+/// the exact sequential code path everywhere. Prefer [`with_threads`] (or
+/// `EngineBuilder::threads`, which uses it) when the override should apply
+/// to one engine or server rather than the whole process.
 pub fn set_threads(n: usize) {
     CONFIGURED.store(n, Ordering::Relaxed);
 }
 
-/// The effective thread count parallel regions will target.
+/// The effective thread count parallel regions opened *on this thread*
+/// will target: the innermost [`with_threads`] scope if one is active,
+/// else the [`set_threads`] global, else the default.
 pub fn threads() -> usize {
+    let scoped = SCOPED.with(|s| s.get());
+    if scoped > 0 {
+        return scoped;
+    }
     match CONFIGURED.load(Ordering::Relaxed) {
         0 => default_threads(),
         n => n,
     }
+}
+
+/// Run `f` with the effective thread count pinned to `n` — **scoped to the
+/// calling thread**, restored (panic-safe) when `f` returns. `n = 0` is a
+/// no-op scope (the global setting stays in effect); `n = 1` makes every
+/// parallel region opened inside `f` on this thread run the exact
+/// sequential code path.
+///
+/// This is how per-engine/per-server thread counts work without the
+/// builders racing each other over the [`set_threads`] global: an engine
+/// built with `EngineBuilder::threads(n)` wraps its `prepare`/`infer`
+/// calls in `with_threads(n, …)`, and a `SecureServer` pins its worker
+/// and pool-builder threads the same way — so constructing a builder can
+/// never resize a live server's parallelism.
+///
+/// Scope caveat: the override travels with *this* thread only. A region
+/// opened inside `f` fans its chunks out to pool workers, and a chunk that
+/// itself opens a nested region does so under the **worker's** setting
+/// (scoped if the worker is inside its own `with_threads`, else the
+/// global). Results are unaffected either way — parallel output is
+/// bit-exact at every thread count — only the fan-out width is.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    if n == 0 {
+        // A no-op scope must not cancel an enclosing `with_threads` pin.
+        return f();
+    }
+    struct Restore(usize);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            SCOPED.with(|s| s.set(self.0));
+        }
+    }
+    let prev = SCOPED.with(|s| {
+        let p = s.get();
+        s.set(n);
+        p
+    });
+    let _restore = Restore(prev);
+    f()
 }
 
 // ---------------------------------------------------------------------------
@@ -462,6 +522,86 @@ mod tests {
             });
         });
         assert!(res.is_err(), "worker panic must re-raise on the caller");
+    }
+
+    #[test]
+    fn with_threads_scopes_to_the_calling_thread_and_restores() {
+        let _guard = threads_lock();
+        set_threads(4);
+        assert_eq!(threads(), 4);
+        assert_eq!(with_threads(2, threads), 2);
+        assert_eq!(threads(), 4, "scope must not leak past its closure");
+        with_threads(1, || {
+            assert_eq!(threads(), 1);
+            with_threads(3, || assert_eq!(threads(), 3, "scopes nest"));
+            assert_eq!(threads(), 1, "inner scope restores the outer one");
+        });
+        assert_eq!(with_threads(0, threads), 4, "0 is a no-op scope");
+        // …and a no-op even when nested: it must not cancel the enclosing
+        // pin (SecureServer workers call with_threads(cfg.threads) with 0).
+        with_threads(2, || {
+            assert_eq!(with_threads(0, threads), 2, "0 must keep the outer scope");
+        });
+        // The scope is per-thread: another thread still sees the global.
+        with_threads(2, || {
+            let other = std::thread::spawn(threads).join().unwrap();
+            assert_eq!(other, 4);
+        });
+        set_threads(0);
+    }
+
+    /// `EngineBuilder::threads(n)` must scope, not mutate the global —
+    /// the regression this PR exists to prevent (a builder resizing a
+    /// live server's pool). Lives here because it needs `threads_lock`.
+    #[test]
+    fn engine_builder_threads_is_scoped_not_global() {
+        use crate::engine::{Backend, EngineBuilder, InferenceEngine};
+        use crate::nn::{Layer, Network, Tensor};
+        let _guard = threads_lock();
+        set_threads(4);
+        let mut net = Network {
+            name: "scope-test".into(),
+            input_shape: (1, 3, 3),
+            layers: vec![Layer::fc(2)],
+        };
+        net.init_weights(3);
+        let mut engine = EngineBuilder::new(Backend::PlaintextQuantized)
+            .network(net)
+            .threads(2)
+            .build()
+            .expect("engine build");
+        assert_eq!(threads(), 4, "build() must not touch the global");
+        let input = Tensor::from_vec(vec![0.5; 9], 1, 3, 3);
+        engine.infer(&input).expect("inference");
+        engine.infer_batch(&[input]).expect("batch");
+        assert_eq!(threads(), 4, "engine calls must not leak their scope");
+        set_threads(0);
+    }
+
+    #[test]
+    fn with_threads_restores_on_panic() {
+        let _guard = threads_lock();
+        set_threads(5);
+        let res = std::panic::catch_unwind(|| with_threads(2, || panic!("boom")));
+        assert!(res.is_err());
+        assert_eq!(threads(), 5, "panic inside the scope must still restore");
+        set_threads(0);
+    }
+
+    #[test]
+    fn scoped_single_thread_is_sequential_in_order() {
+        let _guard = threads_lock();
+        set_threads(8);
+        with_threads(1, || {
+            let order = Mutex::new(Vec::new());
+            for_each_chunked(10, 1, |lo, hi| {
+                for i in lo..hi {
+                    order.lock().unwrap().push(i);
+                }
+            });
+            assert_eq!(*order.lock().unwrap(), (0..10).collect::<Vec<_>>());
+        });
+        set_threads(0);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub struct Blind {
 }
 
 impl Blind {
+    /// Sample a uniform blind over the 6-element support `{±1}×{-1,0,1}`.
     pub fn sample(rng: &mut ChaCha20Rng) -> Self {
         let s = if rng.gen_range(2) == 0 { 1 } else { -1 };
         let j = rng.gen_range(3) as i8 - 1;

@@ -7,6 +7,27 @@
 //! products and the `ID₁∘y + ID₂∘ReLU(y)` recovery — are exactly what the
 //! L1 Pallas kernels (`obscure_dot`, `relu_recover`) implement for the
 //! accelerated plaintext path; golden vectors tie the two together.
+//!
+//! # Per-query RNG stream isolation
+//!
+//! Everything RNG-consuming on the client is **per query**: the encryption
+//! randomness in [`CheetahClient::step_send`] and the fresh shares `s₁`
+//! drawn in [`CheetahClient::step_receive`]. So that independent queries
+//! can score concurrently (batch-level parallelism) while staying
+//! bit-identical to the looped sequential path, each query owns its own
+//! ChaCha20 stream, domain-separated by `(base seed, query index)`:
+//!
+//! * the 32-byte ChaCha20 key is expanded from the client's `u64` seed,
+//! * **stream 0** (the ChaCha20 96-bit-nonce word pair) belongs to key
+//!   generation at construction,
+//! * **stream `1 + query_index`** belongs to query `query_index`.
+//!
+//! Streams of one key never overlap (distinct nonces ⇒ disjoint
+//! keystreams), so a query's draws do not depend on how many queries ran
+//! before it on other threads — the draw sequence for query *i* is the same
+//! whether the batch runs on 1 thread or 8, in a loop or fanned out.
+//! Within one query the draws stay strictly sequential (share draws `s₁`
+//! are pulled up front, in ciphertext-major slot-minor order).
 
 use super::blinding::client_y_pair;
 use super::packing::block_sums;
@@ -19,28 +40,76 @@ use crate::util::rng::ChaCha20Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// ChaCha20 stream id owned by client key generation (see module docs).
+const KEYGEN_STREAM: u64 = 0;
+/// First ChaCha20 stream id owned by queries: query `i` draws from stream
+/// `QUERY_STREAM_BASE + i`, disjoint from the keygen stream and from every
+/// other query's stream.
+const QUERY_STREAM_BASE: u64 = 1;
+
+/// Per-query client state: the share chain, the last layer's blinded
+/// logits, this query's domain-separated RNG stream, and its attributed
+/// client compute time.
+///
+/// Queries are independent values: a batch scores many `ClientQuery`s
+/// concurrently against one shared [`CheetahClient`]
+/// ([`super::runner::CheetahRunner::infer_batch`]), and the sequential
+/// wrappers ([`CheetahClient::begin_query`] …) drive exactly one.
+pub struct ClientQuery {
+    /// Client's additive share (mod p) of the current activation.
+    share: Vec<u64>,
+    /// Blinded logits from the last layer (product scale).
+    last_y: Vec<i64>,
+    /// This query's RNG stream (`(base seed, query index)`-derived).
+    rng: ChaCha20Rng,
+    /// Client-side compute attributed to this query.
+    online: Duration,
+}
+
+impl ClientQuery {
+    /// The client's current additive share (mod p).
+    pub fn share(&self) -> &[u64] {
+        &self.share
+    }
+}
+
 /// The client side of the CHEETAH protocol. Owns a shared `Arc<Context>`
 /// (no lifetime parameter), so networked clients and engines can hold it
 /// alongside the context without borrow gymnastics.
+///
+/// Like the server, scoring is **stateless** (`&self`): all per-query
+/// state lives in a [`ClientQuery`] threaded through the `*_with` methods,
+/// so one client (one key) can drive many queries concurrently. The
+/// `&mut self` wrappers keep a single internal query for the classic call
+/// sequence ([`CheetahClient::begin_query`] → [`CheetahClient::step_send`]
+/// → [`CheetahClient::step_receive`] → [`CheetahClient::logits`]).
 pub struct CheetahClient {
+    /// Shared PHE context (parameters, encoder, NTT tables).
     pub ctx: Arc<Context>,
+    /// Homomorphic evaluator for the indicator recovery (Eq. 6).
     pub ev: Evaluator,
+    /// The client's encryptor/decryptor (holds the client secret key).
     pub enc: Encryptor,
+    /// Fixed-point scale plan shared with the server.
     pub plan: ScalePlan,
+    /// Compiled protocol spec both parties agree on.
     pub spec: ProtocolSpec,
-    /// Client's additive share (mod p) of the current activation.
-    share: Vec<u64>,
     /// Indicator ciphertexts per step (received from the server offline).
     ids: Vec<(Vec<Ciphertext>, Vec<Ciphertext>)>,
-    /// Blinded logits from the last layer (product scale).
-    last_y: Vec<i64>,
-    rng: ChaCha20Rng,
-    pub online: Duration,
+    /// ChaCha20 key shared by the keygen stream and every query stream.
+    seed_key: [u8; 32],
+    /// Next unassigned query index (each query consumes one stream id).
+    next_query: u64,
+    /// The single query driven by the `&mut self` wrappers, if any.
+    current: Option<ClientQuery>,
 }
 
 impl CheetahClient {
+    /// Build a client: key generation draws from stream 0 of the expanded
+    /// `seed`; queries later draw from streams `1, 2, …` (module docs).
     pub fn new(ctx: Arc<Context>, spec: ProtocolSpec, plan: ScalePlan, seed: u64) -> Self {
-        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let seed_key = ChaCha20Rng::key_from_u64(seed);
+        let mut rng = ChaCha20Rng::new(&seed_key, KEYGEN_STREAM);
         let enc = Encryptor::new(ctx.clone(), &mut rng);
         let n_steps = spec.steps.len();
         Self {
@@ -48,12 +117,11 @@ impl CheetahClient {
             enc,
             plan,
             spec,
-            share: Vec::new(),
             ids: vec![(Vec::new(), Vec::new()); n_steps],
-            last_y: Vec::new(),
+            seed_key,
+            next_query: 0,
+            current: None,
             ctx,
-            rng,
-            online: Duration::ZERO,
         }
     }
 
@@ -67,13 +135,25 @@ impl CheetahClient {
         self.ids[si] = (id1, id2);
     }
 
-    /// Begin a query: quantize the input; the client's share IS the input
-    /// (server share starts at zero).
-    pub fn begin_query(&mut self, input: &Tensor) {
+    /// Reserve `count` consecutive query indices (batch dispatch): the
+    /// caller hands index `base + i` to query `i` via
+    /// [`CheetahClient::start_query`]. Looped single queries through
+    /// [`CheetahClient::begin_query`] consume indices from the same
+    /// counter, which is what makes loop and batch draw identically.
+    pub fn reserve_queries(&mut self, count: u64) -> u64 {
+        let base = self.next_query;
+        self.next_query += count;
+        base
+    }
+
+    /// Start query `query_index`: quantize the input into the client's
+    /// initial share (the client holds the whole input; the server share
+    /// starts at zero) and derive the query's own RNG stream.
+    pub fn start_query(&self, input: &Tensor, query_index: u64) -> ClientQuery {
         let (c, h, w) = self.spec.input_shape;
         assert_eq!(input.shape(), (c, h, w), "input shape mismatch");
         let p = self.ctx.params.p;
-        self.share = input
+        let share = input
             .data
             .iter()
             .map(|&v| {
@@ -85,32 +165,66 @@ impl CheetahClient {
                 }
             })
             .collect();
-        self.last_y.clear();
+        ClientQuery {
+            share,
+            last_y: Vec::new(),
+            rng: ChaCha20Rng::new(&self.seed_key, QUERY_STREAM_BASE + query_index),
+            online: Duration::ZERO,
+        }
+    }
+
+    /// Begin a query on the internal single-query state (wrapper over
+    /// [`CheetahClient::start_query`] with the next reserved index).
+    pub fn begin_query(&mut self, input: &Tensor) {
+        let qi = self.reserve_queries(1);
+        self.current = Some(self.start_query(input, qi));
+    }
+
+    /// Single-query wrapper over [`CheetahClient::step_send_with`].
+    pub fn step_send(&mut self, si: usize) -> Vec<Ciphertext> {
+        let mut q = self.current.take().expect("begin_query before step_send");
+        let out = self.step_send_with(si, &mut q);
+        self.current = Some(q);
+        out
     }
 
     /// Produce the client→server message for step `si`: the encrypted
-    /// expanded share `[T(share_C)]_C`.
-    pub fn step_send(&mut self, si: usize) -> Vec<Ciphertext> {
+    /// expanded share `[T(share_C)]_C`, encryption randomness drawn from
+    /// the query's own stream.
+    pub fn step_send_with(&self, si: usize, q: &mut ClientQuery) -> Vec<Ciphertext> {
         let t0 = Instant::now();
         let step = &self.spec.steps[si];
         let n = self.ctx.params.n;
-        let expanded = step.linear.expand_u64(&self.share);
+        let expanded = step.linear.expand_u64(&q.share);
         let n_cts = step.linear.num_in_cts(n);
         let mut out = Vec::with_capacity(n_cts);
         for c in 0..n_cts {
             let lo = c * n;
             let hi = ((c + 1) * n).min(expanded.len());
             let pt = self.ctx.encoder.encode_unsigned(&expanded[lo..hi]);
-            out.push(self.enc.encrypt(&pt, &mut self.rng));
+            out.push(self.enc.encrypt(&pt, &mut q.rng));
         }
-        self.online += t0.elapsed();
+        q.online += t0.elapsed();
+        out
+    }
+
+    /// Single-query wrapper over [`CheetahClient::step_receive_with`].
+    pub fn step_receive(&mut self, si: usize, out_cts: &[Ciphertext]) -> Option<Vec<Ciphertext>> {
+        let mut q = self.current.take().expect("begin_query before step_receive");
+        let out = self.step_receive_with(si, out_cts, &mut q);
+        self.current = Some(q);
         out
     }
 
     /// Consume the server's obscured products. Returns the recovery
     /// ciphertexts `[ReLU(Con+δ)·(scale) − s₁]_S` for intermediate steps,
-    /// or `None` for the last step (the blinded logits are stored).
-    pub fn step_receive(&mut self, si: usize, out_cts: &[Ciphertext]) -> Option<Vec<Ciphertext>> {
+    /// or `None` for the last step (the blinded logits land in `q`).
+    pub fn step_receive_with(
+        &self,
+        si: usize,
+        out_cts: &[Ciphertext],
+        q: &mut ClientQuery,
+    ) -> Option<Vec<Ciphertext>> {
         let t0 = Instant::now();
         let step = &self.spec.steps[si];
         let n = self.ctx.params.n;
@@ -148,8 +262,8 @@ impl CheetahClient {
 
         let last = si == self.spec.last_idx();
         if last {
-            self.last_y = y;
-            self.online += t0.elapsed();
+            q.last_y = y;
+            q.online += t0.elapsed();
             return None;
         }
 
@@ -172,7 +286,7 @@ impl CheetahClient {
         // the sequential code: ciphertext-major, slot-minor).
         let mut s1 = Vec::with_capacity(n_out);
         for _ in 0..n_out {
-            s1.push(self.rng.gen_range(p));
+            s1.push(q.rng.gen_range(p));
         }
         // Eq. 6 per recovery ciphertext is then pure evaluator work
         // (Mult/Mult/Add/AddPlain) — independent across ciphertexts.
@@ -198,21 +312,22 @@ impl CheetahClient {
         if let Some(size) = step.pool_after {
             s1 = super::server::pool_shares(&s1, step.out_shape, size, p);
         }
-        self.share = s1;
-        self.online += t0.elapsed();
+        q.share = s1;
+        q.online += t0.elapsed();
         Some(rec_out)
     }
 
-    /// Blinded logits from the last layer, dequantized (product scale; the
-    /// shared last-layer blind is the identity so these are the true logits
-    /// up to quantization + δ).
-    pub fn logits(&self) -> Vec<f64> {
+    /// Blinded logits of `q`, dequantized (product scale; the shared
+    /// last-layer blind is the identity so these are the true logits up to
+    /// quantization + δ).
+    pub fn logits_of(&self, q: &ClientQuery) -> Vec<f64> {
         let s = self.plan.product();
-        self.last_y.iter().map(|&v| s.dequantize(v)).collect()
+        q.last_y.iter().map(|&v| s.dequantize(v)).collect()
     }
 
-    pub fn argmax(&self) -> usize {
-        self.last_y
+    /// Predicted class of `q`: last maximum of the blinded logits.
+    pub fn argmax_of(&self, q: &ClientQuery) -> usize {
+        q.last_y
             .iter()
             .enumerate()
             .max_by_key(|(_, &v)| v)
@@ -220,21 +335,45 @@ impl CheetahClient {
             .expect("no logits yet")
     }
 
+    /// Blinded logits of the internal single query (wrapper).
+    pub fn logits(&self) -> Vec<f64> {
+        self.logits_of(self.current.as_ref().expect("no query run yet"))
+    }
+
+    /// Predicted class of the internal single query (wrapper).
+    pub fn argmax(&self) -> usize {
+        self.argmax_of(self.current.as_ref().expect("no query run yet"))
+    }
+
+    /// The internal single query's current share (empty before any query).
     pub fn share(&self) -> &[u64] {
-        &self.share
+        self.current.as_ref().map(|q| q.share.as_slice()).unwrap_or(&[])
     }
 
+    /// Direct share injection into the internal single-query state (tests /
+    /// mid-network entry); starts a fresh query if none is active.
     pub fn set_share(&mut self, share: Vec<u64>) {
-        self.share = share;
+        if self.current.is_none() {
+            let qi = self.reserve_queries(1);
+            self.current = Some(ClientQuery {
+                share: Vec::new(),
+                last_y: Vec::new(),
+                rng: ChaCha20Rng::new(&self.seed_key, QUERY_STREAM_BASE + qi),
+                online: Duration::ZERO,
+            });
+        }
+        self.current.as_mut().expect("just ensured").share = share;
     }
 
+    /// Reset and return evaluator op counters.
     pub fn take_ops(&self) -> OpCounts {
         let c = self.ev.counts();
         self.ev.reset_counts();
         c
     }
 
+    /// Take (and zero) the internal single query's attributed client time.
     pub fn reset_online(&mut self) -> Duration {
-        std::mem::take(&mut self.online)
+        self.current.as_mut().map(|q| std::mem::take(&mut q.online)).unwrap_or_default()
     }
 }

@@ -28,6 +28,35 @@
 //!   form keeps the protocol perm-free at slightly higher C→S bandwidth.
 //! * The multiplicative blind is `±2^j` so that `v₁v₂ = 1` exactly (see
 //!   [`blinding`]); recovery is bit-exact, preserving "approximation-free".
+//!
+//! # Seed and domain-separation convention
+//!
+//! Every RNG in the protocol derives deterministically from a small number
+//! of `u64` seeds, so pinned-seed runs are reproducible bit for bit:
+//!
+//! * **server** — engine seed `s` drives key generation, per-block blinds
+//!   `v₁ = ±2^j`, noise targets δ, and per-step `noise_seed`s; inside
+//!   [`server::CheetahServer::step_linear_with`] each output channel
+//!   regenerates its per-tap noise stream from
+//!   `noise_seed ^ (channel << 32)` — one independent stream per channel,
+//!   which is what lets channels fan out across threads without making the
+//!   draw order scheduling-dependent. The in-process runner gives the
+//!   client `s + 1`; a [`crate::serve::SecureServer`] hands sessions
+//!   engine seeds `base, base+1, …`; the networked client XORs a 64-bit
+//!   domain constant into its seed so its streams can never collide with a
+//!   pool session's.
+//! * **client** — seed expands to a ChaCha20 key; **stream 0** is key
+//!   generation and **stream `1 + query_index`** is query `query_index`'s
+//!   private stream (encryption randomness + fresh shares `s₁`). See
+//!   [`client`] module docs — this per-query isolation is what makes
+//!   batch-parallel inference bit-identical to the sequential loop.
+//!
+//! **Bit-exactness caveat** (from CHANGES.md): recovery requantization
+//! rounds exact-tie values toward the blind's sign, so "bit-identical" is
+//! always a *per-server-blinding-seed* property. Logits do not depend on
+//! the client seed at all (decryption is exact and the shares `s₁` cancel
+//! on reconstruction), which is why batch order, thread count, and client
+//! RNG scheme cannot perturb them.
 
 pub mod blinding;
 pub mod client;
@@ -36,7 +65,7 @@ pub mod runner;
 pub mod server;
 pub mod spec;
 
-pub use client::CheetahClient;
+pub use client::{CheetahClient, ClientQuery};
 pub use runner::{CheetahRunner, InferenceReport, StepReport};
 pub use server::CheetahServer;
 pub use spec::{LinearSpec, ProtocolSpec, SpecError, StepSpec};
@@ -159,6 +188,63 @@ mod tests {
             );
         }
         assert_eq!(report.total_ops().perm, 0);
+    }
+
+    /// Batch-parallel inference must be bit-identical to the looped
+    /// sequential path on an identically-seeded deployment — and per-query
+    /// traffic accounting must agree between the two drivers.
+    #[test]
+    fn batch_inference_is_bit_exact_vs_looped() {
+        let c = ctx();
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "batch".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![
+                crate::nn::Layer::conv(2, 3, 1, 1),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::fc(3),
+            ],
+        };
+        net.init_weights(88);
+        let mut srng = SplitMix64::new(89);
+        let inputs: Vec<Tensor> = (0..5)
+            .map(|_| {
+                Tensor::from_vec(
+                    (0..25).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+                    1,
+                    5,
+                    5,
+                )
+            })
+            .collect();
+
+        // Looped reference on a fresh deployment.
+        let mut looped =
+            CheetahRunner::new(c.clone(), net.clone(), plan, 0.0, 91).expect("valid network");
+        looped.run_offline();
+        let want: Vec<_> = inputs.iter().map(|x| looped.infer(x)).collect();
+
+        // Batch on an identically-seeded fresh deployment.
+        let mut batched = CheetahRunner::new(c, net, plan, 0.0, 91).expect("valid network");
+        batched.run_offline();
+        let got = batched.infer_batch(&inputs);
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.logits, w.logits, "query {i}: batch diverged from loop");
+            assert_eq!(g.argmax, w.argmax, "query {i}");
+            assert_eq!(
+                g.online_bytes(),
+                w.online_bytes(),
+                "query {i}: batch traffic accounting diverged from the metered loop"
+            );
+        }
+
+        // Interleaving loop and batch on one deployment stays bit-exact
+        // too (blinding is per-deployment, not per-query-order).
+        let tail = looped.infer_batch(&inputs[..2]);
+        assert_eq!(tail[0].logits, want[0].logits);
+        assert_eq!(tail[1].logits, want[1].logits);
     }
 
     /// Noise ε must perturb logits but keep them within ε-ish of the clean

@@ -24,10 +24,15 @@ pub type TapSource = Option<usize>;
 /// Packing for a convolutional layer.
 #[derive(Clone, Debug)]
 pub struct ConvPacking {
+    /// Input shape `(c_i, h, w)`.
     pub in_shape: (usize, usize, usize),
+    /// Output shape `(c_o, oh, ow)`.
     pub out_shape: (usize, usize, usize),
+    /// Kernel side length `r`.
     pub kernel: usize,
+    /// Convolution stride.
     pub stride: usize,
+    /// Zero padding.
     pub pad: usize,
     /// Taps per block: `c_i · r²`.
     pub block: usize,
@@ -38,6 +43,7 @@ pub struct ConvPacking {
 }
 
 impl ConvPacking {
+    /// Derive the packing from a Conv2d layer and its input shape.
     pub fn new(layer: &Layer, in_shape: (usize, usize, usize)) -> Self {
         let LayerKind::Conv2d { kernel, stride, pad, .. } = layer.kind else {
             panic!("ConvPacking requires a Conv2d layer");
@@ -127,13 +133,16 @@ impl ConvPacking {
 /// Packing for a fully-connected layer.
 #[derive(Clone, Debug)]
 pub struct FcPacking {
+    /// Input features.
     pub n_i: usize,
+    /// Output features.
     pub n_o: usize,
     /// Slot-stream length: `n_o · n_i`.
     pub len: usize,
 }
 
 impl FcPacking {
+    /// Derive the packing from an Fc layer and its input length.
     pub fn new(layer: &Layer, in_len: usize) -> Self {
         let LayerKind::Fc { out_features } = layer.kind else {
             panic!("FcPacking requires an Fc layer");
@@ -141,6 +150,7 @@ impl FcPacking {
         Self { n_i: in_len, n_o: out_features, len: out_features * in_len }
     }
 
+    /// Number of ciphertexts for `n` slots per ciphertext.
     pub fn num_cts(&self, n: usize) -> usize {
         self.len.div_ceil(n)
     }

@@ -1,54 +1,80 @@
 //! End-to-end CHEETAH inference: drives client and server through every
 //! step, meters exact serialized traffic through the link model, and
 //! produces the per-layer report behind the paper's Table 7 / Fig. 8.
+//!
+//! Two driving modes share one prepared deployment:
+//!
+//! * [`CheetahRunner::infer`] — one query, exact per-step attribution
+//!   (timing, ops, traffic),
+//! * [`CheetahRunner::infer_batch`] — independent queries fanned across
+//!   the [`crate::par`] pool, bit-identical logits to the looped
+//!   sequential path (per-query RNG stream isolation; see
+//!   [`super::client`] module docs).
 
 use super::client::CheetahClient;
 use super::server::CheetahServer;
 use super::spec::{ProtocolSpec, SpecError};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, Tensor};
+use crate::par;
 use crate::phe::serial::ciphertext_bytes;
 use crate::phe::{Context, OpCounts};
 use crate::protocol::transport::{Dir, LinkModel, MeteredChannel};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Per-step accounting (one fused linear[+ReLU][+pool] step).
 #[derive(Clone, Debug, Default)]
 pub struct StepReport {
+    /// Step label (`step0:conv`, `step1:fc`, …).
     pub name: String,
+    /// Client compute attributed to this step.
     pub client_time: Duration,
+    /// Server query-dependent compute attributed to this step.
     pub server_online: Duration,
+    /// Server query-independent compute observed during this step.
     pub server_offline: Duration,
+    /// Client→server bytes (exact serialized sizes).
     pub c2s_bytes: u64,
+    /// Server→client bytes.
     pub s2c_bytes: u64,
+    /// Server HE op counts for this step.
     pub server_ops: OpCounts,
+    /// Client HE op counts for this step.
     pub client_ops: OpCounts,
 }
 
 /// Whole-query report.
 #[derive(Clone, Debug, Default)]
 pub struct InferenceReport {
+    /// Predicted class (last maximum of the logits).
     pub argmax: usize,
+    /// Dequantized logits.
     pub logits: Vec<f64>,
+    /// Per fused-step accounting (a single synthetic step in batch mode).
     pub steps: Vec<StepReport>,
     /// Offline bytes: indicator ciphertexts shipped ahead of the query.
     pub offline_bytes: u64,
+    /// Offline preparation time observed so far.
     pub offline_time: Duration,
     /// Modeled wire time for the online traffic.
     pub wire_time: Duration,
 }
 
 impl InferenceReport {
+    /// Total online compute across both parties (no wire time).
     pub fn online_compute(&self) -> Duration {
         self.steps.iter().map(|s| s.client_time + s.server_online).sum()
     }
+    /// Online compute plus the modeled wire time.
     pub fn online_total(&self) -> Duration {
         self.online_compute() + self.wire_time
     }
+    /// Total online bytes, both directions.
     pub fn online_bytes(&self) -> u64 {
         self.steps.iter().map(|s| s.c2s_bytes + s.s2c_bytes).sum()
     }
+    /// Aggregate HE op counts across all steps and both parties.
     pub fn total_ops(&self) -> OpCounts {
         self.steps
             .iter()
@@ -58,12 +84,18 @@ impl InferenceReport {
 
 /// An in-process CHEETAH deployment: both parties plus a metered link.
 pub struct CheetahRunner {
+    /// The server party (model, blinding material, indicators).
     pub server: CheetahServer,
+    /// The client party (keys, share chain).
     pub client: CheetahClient,
+    /// The metered in-process link between them.
     pub channel: MeteredChannel,
 }
 
 impl CheetahRunner {
+    /// Build a deployment over the default gigabit-LAN link model.
+    /// Seed convention: server blinding uses `seed`, the client `seed + 1`
+    /// (see the [`super`] module docs).
     pub fn new(
         ctx: Arc<Context>,
         net: Network,
@@ -89,6 +121,7 @@ impl CheetahRunner {
         Ok(Self { server, client, channel: MeteredChannel::new(link) })
     }
 
+    /// The compiled protocol spec both parties share.
     pub fn spec(&self) -> &ProtocolSpec {
         &self.server.spec
     }
@@ -113,7 +146,7 @@ impl CheetahRunner {
         let eval = ciphertext_bytes(params, false) as u64;
 
         let mut report = InferenceReport {
-            offline_time: self.server.timers.offline,
+            offline_time: self.server.timers().offline,
             ..Default::default()
         };
         self.server.reset_timers();
@@ -174,5 +207,77 @@ impl CheetahRunner {
         report.logits = self.client.logits();
         report.wire_time = self.channel.wire_time;
         report
+    }
+
+    /// Run a batch of independent queries, fanned across the
+    /// [`crate::par`] pool (one fork-join region; each chunk drives one
+    /// full query through the stateless client/server cores).
+    ///
+    /// Every query gets its own state — client share chain + RNG stream
+    /// derived from `(client seed, query index)`, server share — against
+    /// the *same* prepared deployment (same blinding material, same keys),
+    /// so the logits are **bit-identical** to looping
+    /// [`CheetahRunner::infer`] over the same inputs, at every thread
+    /// count and batch size.
+    ///
+    /// Per-query reports carry wall time (one synthetic step whose
+    /// `client_time` is the query's end-to-end compute), exact per-query
+    /// traffic, and the modeled per-query wire time. Evaluator op counts
+    /// and per-step timing are *not* attributed per query (the counters
+    /// are shared across concurrent queries) — use [`CheetahRunner::infer`]
+    /// for those.
+    pub fn infer_batch(&mut self, inputs: &[Tensor]) -> Vec<InferenceReport> {
+        if inputs.is_empty() {
+            return Vec::new();
+        }
+        let base = self.client.reserve_queries(inputs.len() as u64);
+        let params = &self.server.ctx.params;
+        let fresh = ciphertext_bytes(params, true) as u64;
+        let eval = ciphertext_bytes(params, false) as u64;
+        let link = self.channel.link;
+        let offline_time = self.server.timers().offline;
+        let server = &self.server;
+        let client = &self.client;
+        let n_steps = server.spec.steps.len();
+        par::map_indexed(inputs.len(), |i| {
+            let t0 = Instant::now();
+            let mut q = client.start_query(&inputs[i], base + i as u64);
+            let mut s_share = server.fresh_share();
+            let (mut c2s, mut s2c) = (0u64, 0u64);
+            let mut wire = Duration::ZERO;
+            for si in 0..n_steps {
+                let in_cts = client.step_send_with(si, &mut q);
+                for _ in &in_cts {
+                    c2s += fresh;
+                    wire += link.transfer_time(fresh);
+                }
+                let out_cts = server.step_linear_with(si, &in_cts, &s_share);
+                for _ in &out_cts {
+                    s2c += eval;
+                    wire += link.transfer_time(eval);
+                }
+                if let Some(rec) = client.step_receive_with(si, &out_cts, &mut q) {
+                    for _ in &rec {
+                        c2s += eval;
+                        wire += link.transfer_time(eval);
+                    }
+                    s_share = server.finish_nonlinear_with(si, &rec);
+                }
+            }
+            InferenceReport {
+                argmax: client.argmax_of(&q),
+                logits: client.logits_of(&q),
+                steps: vec![StepReport {
+                    name: "batch-query".into(),
+                    client_time: t0.elapsed(),
+                    c2s_bytes: c2s,
+                    s2c_bytes: s2c,
+                    ..Default::default()
+                }],
+                offline_bytes: 0,
+                offline_time,
+                wire_time: wire,
+            }
+        })
     }
 }

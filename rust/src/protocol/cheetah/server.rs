@@ -25,6 +25,7 @@ use crate::nn::Network;
 use crate::par;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts, PlainOperand};
 use crate::util::rng::ChaCha20Rng;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -32,11 +33,47 @@ use std::time::{Duration, Instant};
 /// ~2^21, noise ≤ 2^17 keeps every slot within ±(p−1)/2).
 pub const NOISE_BOUND: i64 = 1 << 17;
 
-/// Online/offline compute timers.
+/// Online/offline compute timer snapshot ([`CheetahServer::timers`]).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Timers {
+    /// Query-dependent work (the paper's "online time").
     pub online: Duration,
+    /// Query-independent preparation (amortizable offline work).
     pub offline: Duration,
+}
+
+/// Interior-mutable nanosecond accumulators behind the [`Timers`]
+/// snapshots, so the `&self` scoring core (shared by concurrent batch
+/// queries) can time itself. Concurrent queries fold into one total —
+/// per-query attribution in batch mode is the batch driver's job.
+#[derive(Default)]
+struct TimerCell {
+    online_ns: AtomicU64,
+    offline_ns: AtomicU64,
+}
+
+impl TimerCell {
+    fn add_online(&self, d: Duration) {
+        self.online_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn add_offline(&self, d: Duration) {
+        self.offline_ns.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    fn snapshot(&self) -> Timers {
+        Timers {
+            online: Duration::from_nanos(self.online_ns.load(Ordering::Relaxed)),
+            offline: Duration::from_nanos(self.offline_ns.load(Ordering::Relaxed)),
+        }
+    }
+
+    fn take(&self) -> Timers {
+        Timers {
+            online: Duration::from_nanos(self.online_ns.swap(0, Ordering::Relaxed)),
+            offline: Duration::from_nanos(self.offline_ns.swap(0, Ordering::Relaxed)),
+        }
+    }
 }
 
 /// Offline material for one step.
@@ -63,19 +100,36 @@ struct PreparedStep {
 /// The server side of the CHEETAH protocol. Owns a shared `Arc<Context>`,
 /// so prepared engines move freely between serving threads (blinding pool,
 /// session workers) with no lifetime plumbing.
+///
+/// Scoring is **stateless** (`&self`): the per-query state — the server's
+/// additive share of the activation chain — lives outside the engine and is
+/// threaded through [`CheetahServer::step_linear_with`] /
+/// [`CheetahServer::finish_nonlinear_with`]. One prepared engine therefore
+/// serves any number of concurrent queries (the batch driver in
+/// [`super::runner::CheetahRunner::infer_batch`] and the serve sessions
+/// both rely on this). The `&mut self` wrappers ([`CheetahServer::begin_query`],
+/// [`CheetahServer::step_linear`], …) keep one internal share for the
+/// classic single-query call sequence.
 pub struct CheetahServer {
+    /// Shared PHE context (parameters, encoder, NTT tables).
     pub ctx: Arc<Context>,
+    /// Homomorphic evaluator (op counters are atomic — `Sync`).
     pub ev: Evaluator,
+    /// The server's encryptor/decryptor (holds the server secret key).
     pub enc: Encryptor,
+    /// Fixed-point scale plan shared with the client.
     pub plan: ScalePlan,
+    /// Compiled protocol spec both parties agree on.
     pub spec: ProtocolSpec,
+    /// Obscuring-noise bound ε (0.0 = exact inference).
     pub epsilon: f64,
     net: Network,
     steps: Vec<PreparedStep>,
-    /// Server's additive share (mod p) of the current activation.
+    /// Server's additive share (mod p) of the current activation — the
+    /// single-query convenience state behind the `&mut self` wrappers.
     share: Vec<u64>,
     rng: ChaCha20Rng,
-    pub timers: Timers,
+    timers: TimerCell,
 }
 
 impl CheetahServer {
@@ -121,7 +175,7 @@ impl CheetahServer {
             share: Vec::new(),
             ctx,
             rng,
-            timers: Timers::default(),
+            timers: TimerCell::default(),
         };
         server.refresh_blinding();
         server
@@ -196,7 +250,7 @@ impl CheetahServer {
             });
         }
         self.steps = steps;
-        self.timers.offline += t0.elapsed();
+        self.timers.add_offline(t0.elapsed());
     }
 
     /// Quantized kernel taps per channel, with the inherited pool divisor
@@ -236,11 +290,18 @@ impl CheetahServer {
         (&self.steps[si].id1, &self.steps[si].id2)
     }
 
-    /// Begin a query: the client holds the whole input, so the server's
-    /// initial share is zero.
-    pub fn begin_query(&mut self) {
+    /// A zeroed server-side share for a fresh query (at step 0 the client
+    /// holds the whole input) — the starting per-query state for the
+    /// stateless scoring path ([`CheetahServer::step_linear_with`]).
+    pub fn fresh_share(&self) -> Vec<u64> {
         let (c, h, w) = self.spec.input_shape;
-        self.share = vec![0u64; c * h * w];
+        vec![0u64; c * h * w]
+    }
+
+    /// Begin a query on the internal single-query state: the client holds
+    /// the whole input, so the server's initial share is zero.
+    pub fn begin_query(&mut self) {
+        self.share = self.fresh_share();
     }
 
     /// Direct share injection (tests / mid-network entry).
@@ -248,13 +309,22 @@ impl CheetahServer {
         self.share = share;
     }
 
+    /// The internal single-query share (after the wrappers ran).
     pub fn share(&self) -> &[u64] {
         &self.share
     }
 
+    /// Single-query wrapper over [`CheetahServer::step_linear_with`] using
+    /// the internal share set by [`CheetahServer::begin_query`] /
+    /// [`CheetahServer::finish_nonlinear`].
+    pub fn step_linear(&mut self, si: usize, in_cts: &[Ciphertext]) -> Vec<Ciphertext> {
+        self.step_linear_with(si, in_cts, &self.share)
+    }
+
     /// The obscure linear computation for step `si`. Input: the client's
-    /// encrypted expanded share. Output: channel-major obscured-product
-    /// ciphertexts (`channels × num_in_cts`).
+    /// encrypted expanded share and the server's additive share of the
+    /// current activation (`share`; zeros for step 0). Output:
+    /// channel-major obscured-product ciphertexts (`channels × num_in_cts`).
     ///
     /// The per-output-channel streams are the paper's embarrassingly
     /// parallel unit: every channel's multiplier, noise stream, and
@@ -262,7 +332,17 @@ impl CheetahServer {
     /// [`crate::par`] pool. Results land in channel-ordered slots and each
     /// channel's noise stream comes from its own deterministically-seeded
     /// RNG, so the output is bit-identical at every thread count.
-    pub fn step_linear(&mut self, si: usize, in_cts: &[Ciphertext]) -> Vec<Ciphertext> {
+    ///
+    /// `&self`: all mutable state is the caller-owned `share`, so any
+    /// number of queries may score concurrently against one prepared
+    /// engine (they share the blinding material — exactly like repeated
+    /// queries on one deployment).
+    pub fn step_linear_with(
+        &self,
+        si: usize,
+        in_cts: &[Ciphertext],
+        share: &[u64],
+    ) -> Vec<Ciphertext> {
         let step = &self.spec.steps[si];
         let prep = &self.steps[si];
         let n = self.ctx.params.n;
@@ -280,13 +360,13 @@ impl CheetahServer {
         let t_on = Instant::now();
         let mut in_ntt: Vec<Ciphertext> = in_cts.to_vec();
         self.ev.to_ntt_batch(&mut in_ntt);
-        let share_zero = self.share.iter().all(|&s| s == 0);
+        let share_zero = share.iter().all(|&s| s == 0);
         let ts: Vec<u64> = if share_zero {
             Vec::new()
         } else {
-            step.linear.expand_u64(&self.share)
+            step.linear.expand_u64(share)
         };
-        self.timers.online += t_on.elapsed();
+        self.timers.add_online(t_on.elapsed());
 
         /// Query-independent material for one (channel, input-ct) slot.
         /// Holding the whole grid at once costs ~1 extra operand poly per
@@ -367,7 +447,7 @@ impl CheetahServer {
         // First layer: the online phase reads neither b nor kv_slot —
         // free the streams before fanning out the Mult+Add grid.
         let b_streams = if share_zero { Vec::new() } else { b_streams };
-        self.timers.offline += t_off.elapsed();
+        self.timers.add_offline(t_off.elapsed());
 
         // Online: for hidden layers the query-dependent additive operands
         // `k'v∘T(share_S) + b`, then the paper's 1 Mult + 1 Add per
@@ -405,14 +485,22 @@ impl CheetahServer {
             ev.add_plain(&mut prod, add_op);
             prod
         });
-        self.timers.online += t_on.elapsed();
+        self.timers.add_online(t_on.elapsed());
         out
+    }
+
+    /// Single-query wrapper over [`CheetahServer::finish_nonlinear_with`]:
+    /// stores the next share in the internal single-query state.
+    pub fn finish_nonlinear(&mut self, si: usize, rec_cts: &[Ciphertext]) {
+        self.share = self.finish_nonlinear_with(si, rec_cts);
     }
 
     /// Finish the nonlinear step: decrypt the recovery ciphertexts into the
     /// server's share of the (ReLU'd, requantized) activation, applying the
-    /// share-domain sum-pool when the network pools here.
-    pub fn finish_nonlinear(&mut self, si: usize, rec_cts: &[Ciphertext]) {
+    /// share-domain sum-pool when the network pools here. Returns the
+    /// next-layer share (`&self` — see [`CheetahServer::step_linear_with`]
+    /// on concurrent queries).
+    pub fn finish_nonlinear_with(&self, si: usize, rec_cts: &[Ciphertext]) -> Vec<u64> {
         let step = &self.spec.steps[si];
         let n = self.ctx.params.n;
         let n_out = step.linear.num_outputs();
@@ -434,8 +522,8 @@ impl CheetahServer {
         if let Some(size) = step.pool_after {
             share = pool_shares(&share, step.out_shape, size, self.ctx.params.p);
         }
-        self.share = share;
-        self.timers.online += t0.elapsed();
+        self.timers.add_online(t0.elapsed());
+        share
     }
 
     /// Reset and return evaluator op counters.
@@ -445,8 +533,16 @@ impl CheetahServer {
         c
     }
 
-    pub fn reset_timers(&mut self) -> Timers {
-        std::mem::take(&mut self.timers)
+    /// Snapshot of the accumulated online/offline compute timers.
+    pub fn timers(&self) -> Timers {
+        self.timers.snapshot()
+    }
+
+    /// Take (and zero) the accumulated online/offline compute timers.
+    /// Under concurrent batch queries the totals interleave across queries;
+    /// the single-query runner uses this per step for exact attribution.
+    pub fn reset_timers(&self) -> Timers {
+        self.timers.take()
     }
 }
 

@@ -10,7 +10,9 @@ use crate::phe::Params;
 /// The linear kernel of one protocol step.
 #[derive(Clone, Debug)]
 pub enum LinearSpec {
+    /// A convolutional step (one packing shared by all output channels).
     Conv(ConvPacking),
+    /// A fully-connected step (input tiled per output neuron).
     Fc(FcPacking),
 }
 
@@ -76,6 +78,7 @@ impl LinearSpec {
         }
     }
 
+    /// [`LinearSpec::expand_u64`] for signed values (plaintext mirrors).
     pub fn expand_i64(&self, input: &[i64]) -> Vec<i64> {
         match self {
             LinearSpec::Conv(p) => p.expand(input),
@@ -89,6 +92,7 @@ impl LinearSpec {
 pub struct StepSpec {
     /// Index of the linear layer in the source `Network`.
     pub layer_idx: usize,
+    /// The step's linear kernel and packing.
     pub linear: LinearSpec,
     /// Fused ReLU (every step except possibly the last).
     pub relu: bool,
@@ -110,7 +114,12 @@ pub struct StepSpec {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SpecError {
     /// A ReLU or pool appears without a preceding linear layer.
-    UnsupportedLayerOrder { index: usize, kind: String },
+    UnsupportedLayerOrder {
+        /// Index of the offending layer.
+        index: usize,
+        /// Debug-rendered layer kind.
+        kind: String,
+    },
     /// The network contains no linear (Conv/FC) layer at all.
     NoLinearLayers,
 }
@@ -132,7 +141,9 @@ impl std::error::Error for SpecError {}
 /// The full protocol spec for a network.
 #[derive(Clone, Debug)]
 pub struct ProtocolSpec {
+    /// The fused protocol steps, in execution order.
     pub steps: Vec<StepSpec>,
+    /// The network's input shape `(c, h, w)`.
     pub input_shape: (usize, usize, usize),
 }
 
@@ -199,6 +210,7 @@ impl ProtocolSpec {
         Ok(Self { steps, input_shape: net.input_shape })
     }
 
+    /// Index of the last step (its result is revealed obscured — `f^OMI`).
     pub fn last_idx(&self) -> usize {
         self.steps.len() - 1
     }

@@ -55,19 +55,37 @@ impl GazelleReport {
     }
 }
 
+/// ChaCha20 stream id for key generation; queries use `1 + query_index`
+/// (the same per-query isolation scheme as the CHEETAH client — see
+/// `protocol::cheetah::client` module docs).
+const QUERY_STREAM_BASE: u64 = 1;
+
 /// In-process GAZELLE deployment (both parties). Owns a shared
 /// `Arc<Context>` (no lifetime parameter).
+///
+/// Scoring is stateless (`&self`, [`GazelleRunner::infer_with`]): the
+/// share chain is local to each query and all RNG consumption (encryption
+/// randomness, masks `r`, GC garbling) comes from a per-query
+/// domain-separated stream, so [`GazelleRunner::infer_batch`] fans
+/// independent queries across the [`crate::par`] pool with logits
+/// bit-identical to the sequential loop. (GAZELLE logits do not depend on
+/// the RNG at all — masks cancel on reconstruction and GC evaluation is
+/// exact — so the isolation is about keeping draw *order*
+/// schedule-independent.)
 pub struct GazelleRunner {
+    /// Shared PHE context.
     pub ctx: Arc<Context>,
     ev: Evaluator,
     client_enc: Encryptor,
     plan: ScalePlan,
+    /// Compiled protocol spec (shared layer fusion with CHEETAH).
     pub spec: ProtocolSpec,
     net: Network,
     relu: GcRelu,
     conv_keys: Vec<Option<GaloisKeys>>,
     fc_keys: Vec<Option<GaloisKeys>>,
-    rng: ChaCha20Rng,
+    seed_key: [u8; 32],
+    next_query: u64,
 }
 
 impl GazelleRunner {
@@ -78,7 +96,8 @@ impl GazelleRunner {
         plan: ScalePlan,
         seed: u64,
     ) -> Result<Self, SpecError> {
-        let mut rng = ChaCha20Rng::from_u64_seed(seed);
+        let seed_key = ChaCha20Rng::key_from_u64(seed);
+        let mut rng = ChaCha20Rng::new(&seed_key, 0);
         let client_enc = Encryptor::new(ctx.clone(), &mut rng);
         let spec = ProtocolSpec::compile(&net)?;
         let relu = GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
@@ -113,7 +132,8 @@ impl GazelleRunner {
             relu,
             conv_keys,
             fc_keys,
-            rng,
+            seed_key,
+            next_query: 0,
             ctx,
         })
     }
@@ -138,12 +158,39 @@ impl GazelleRunner {
         (key_bytes + relu_count * self.relu.offline_bytes_per_relu()) as u64
     }
 
-    /// Run one private inference. Mirrors `CheetahRunner::infer`.
+    /// Run one private inference. Mirrors `CheetahRunner::infer`. Wrapper
+    /// over [`GazelleRunner::infer_with`] that also attributes the HE op
+    /// counts (meaningful only when queries run one at a time).
     pub fn infer(&mut self, input: &Tensor) -> GazelleReport {
+        let qi = self.next_query;
+        self.next_query += 1;
+        self.ev.reset_counts();
+        let mut report = self.infer_with(input, qi);
+        report.ops = self.ev.counts();
+        report
+    }
+
+    /// Run a batch of independent queries fanned across the
+    /// [`crate::par`] pool. Logits are bit-identical to looping
+    /// [`GazelleRunner::infer`] (per-query RNG streams; see the type
+    /// docs). HE op counts are not attributed per query in batch mode
+    /// (the evaluator counters are shared across concurrent queries), so
+    /// each report's `ops` is zero.
+    pub fn infer_batch(&mut self, inputs: &[Tensor]) -> Vec<GazelleReport> {
+        let base = self.next_query;
+        self.next_query += inputs.len() as u64;
+        crate::par::map_indexed(inputs.len(), |i| self.infer_with(&inputs[i], base + i as u64))
+    }
+
+    /// Stateless single-query core: every draw comes from the query's own
+    /// `(seed, query index)` ChaCha20 stream and the share chain is local,
+    /// so any number of queries may run concurrently on one deployment.
+    /// `ops` is left at its default (see [`GazelleRunner::infer`]).
+    pub fn infer_with(&self, input: &Tensor, query_index: u64) -> GazelleReport {
+        let mut rng = ChaCha20Rng::new(&self.seed_key, QUERY_STREAM_BASE + query_index);
         let p = self.ctx.params.p;
         let plan = self.plan;
         let mut report = GazelleReport::default();
-        self.ev.reset_counts();
 
         // Initial shares: client holds the quantized input, server zero.
         let mut client_share: Vec<u64> = input
@@ -181,7 +228,7 @@ impl GazelleRunner {
                             let pt = self.ctx.encoder.encode_unsigned(
                                 &slots.iter().map(|&v| v as u64).collect::<Vec<_>>(),
                             );
-                            self.client_enc.encrypt(&pt, &mut self.rng)
+                            self.client_enc.encrypt(&pt, &mut rng)
                         })
                         .collect();
                     (cts, 0)
@@ -195,7 +242,7 @@ impl GazelleRunner {
                         .map(|&v| v as u64 % p)
                         .collect();
                     let pt = self.ctx.encoder.encode_unsigned(&packed_res);
-                    (vec![self.client_enc.encrypt(&pt, &mut self.rng)], packed_res.len())
+                    (vec![self.client_enc.encrypt(&pt, &mut rng)], packed_res.len())
                 }
             };
             report.client_time += t0.elapsed();
@@ -284,7 +331,7 @@ impl GazelleRunner {
             let n_lin = out_map.len();
             let mut r_share: Vec<u64> = Vec::new();
             if !last {
-                r_share = (0..n_lin).map(|_| self.rng.gen_range(p)).collect();
+                r_share = (0..n_lin).map(|_| rng.gen_range(p)).collect();
                 // Scatter (p - r) into the mapped slots of each output ct.
                 let row_slots = self.ctx.params.n;
                 let mut scatter: Vec<Vec<u64>> =
@@ -339,7 +386,7 @@ impl GazelleRunner {
             // ---- GC ReLU over shares (server garbles, client evaluates) ----
             let server_lin: Vec<u64> = r_share;
             let (mut c_new, mut s_new, gc_rep) =
-                self.relu.run_batch(&server_lin, &client_lin, &mut self.rng);
+                self.relu.run_batch(&server_lin, &client_lin, &mut rng);
             report.online_bytes += gc_rep.online_bytes;
             report.s2c_bytes += gc_rep.online_bytes;
             report.gc.merge(&gc_rep);
@@ -375,7 +422,6 @@ impl GazelleRunner {
             report.per_step.push(step_t0.elapsed());
         }
 
-        report.ops = self.ev.counts();
         report.offline_bytes = self.offline_bytes();
         report
     }

@@ -7,5 +7,7 @@
 //! * [`transport`] — message framing, byte metering and a link cost model.
 
 pub mod cheetah;
+#[allow(missing_docs)] // legacy module: rustdoc coverage tracked in README
 pub mod gazelle;
+#[allow(missing_docs)] // legacy module: rustdoc coverage tracked in README
 pub mod transport;

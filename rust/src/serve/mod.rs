@@ -22,7 +22,13 @@
 //! [`StoppableListener`]), one reader thread per connection, and a fixed
 //! worker pool. Rounds are routed to worker `session_id % workers`, so one
 //! session's rounds execute in order while different sessions run in
-//! parallel. Server metrics flow into [`crate::coordinator::metrics`].
+//! parallel. Engines score through the stateless `&self` core (per-query
+//! share state lives in the [`Session`]), so concurrent sessions never
+//! contend on engine ownership; [`SecureConfig::threads`] pins the
+//! compute fan-out of this server's workers and pool builders via
+//! [`crate::par::with_threads`] — scoped, so no other engine or builder
+//! in the process can resize it. Server metrics flow into
+//! [`crate::coordinator::metrics`].
 //!
 //! Trust model: the server authenticates nothing (as in the paper — both
 //! parties are semi-honest); malformed input from the network is rejected
@@ -82,9 +88,11 @@ pub struct SecureConfig {
     /// per-channel ciphertext streams, NTT batches, and pool builds all
     /// fan out over this many threads. `0` (the default) keeps the global
     /// setting (`CHEETAH_THREADS` env var, else `available_parallelism()`);
-    /// `1` forces the sequential code path. **Process-global**: a non-zero
-    /// value calls [`crate::par::set_threads`] at bind time and applies to
-    /// every engine/server in the process (last writer wins).
+    /// `1` forces the sequential code path. **Scoped to this server**: a
+    /// non-zero value pins the server's protocol workers and pool builders
+    /// via [`crate::par::with_threads`] — other engines and servers in the
+    /// process are unaffected, and nothing they build can resize this
+    /// server's parallelism.
     pub threads: usize,
 }
 
@@ -140,7 +148,9 @@ fn send_error(writer: &Arc<Mutex<TcpStream>>, sid: u64, code: u16, msg: &str) {
 
 /// A running secure server. All threads are joined by [`SecureServer::shutdown`].
 pub struct SecureServer {
+    /// The bound listen address.
     pub addr: SocketAddr,
+    /// Serving metrics (completed queries, latency percentiles).
     pub metrics: Arc<Metrics>,
     registry: Arc<SessionRegistry>,
     pool: Arc<BlindingPool>,
@@ -164,9 +174,6 @@ impl SecureServer {
         cfg: SecureConfig,
     ) -> std::io::Result<SecureServer> {
         plan.check_fits(ctx.params.p);
-        if cfg.threads > 0 {
-            crate::par::set_threads(cfg.threads);
-        }
         let listener = StoppableListener::bind(addr)?;
         let local = listener.addr;
         let stop = listener.stop_flag();
@@ -178,9 +185,16 @@ impl SecureServer {
         // The pool validates the network → protocol-spec compilation once,
         // here: a malformed architecture is a bind-time error, never a
         // panic on a serving or builder thread.
-        let pool =
-            BlindingPool::start(ctx.clone(), net.clone(), plan, cfg.epsilon, base_seed, cfg.pool)
-                .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        let pool = BlindingPool::start(
+            ctx.clone(),
+            net.clone(),
+            plan,
+            cfg.epsilon,
+            base_seed,
+            cfg.pool,
+            cfg.threads,
+        )
+        .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         let shared = Arc::new(ServeShared {
             ctx,
             net,
@@ -198,7 +212,14 @@ impl SecureServer {
             let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
             txs.push(tx);
             let shared = shared.clone();
-            worker_threads.push(std::thread::spawn(move || worker_loop(rx, shared)));
+            let threads = cfg.threads;
+            // The per-server thread count rides the worker thread itself
+            // (scoped, not global): every round this worker computes —
+            // including inline engine builds on pool misses — fans out at
+            // the server's configured width.
+            worker_threads.push(std::thread::spawn(move || {
+                crate::par::with_threads(threads, || worker_loop(rx, shared))
+            }));
         }
         let txs = Arc::new(txs);
 
@@ -250,6 +271,7 @@ impl SecureServer {
         })
     }
 
+    /// Point-in-time blinding-pool counters.
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
     }
@@ -260,6 +282,7 @@ impl SecureServer {
         self.pool.wait_until_produced(n, timeout)
     }
 
+    /// Number of live sessions.
     pub fn session_count(&self) -> usize {
         self.registry.len()
     }
@@ -393,7 +416,7 @@ fn write_or_hangup(w: &mut TcpStream, tag: u8, payload: &[u8]) -> bool {
 }
 
 fn handle_hello(shared: &ServeShared, writer: &Arc<Mutex<TcpStream>>, conn: &Arc<ConnState>) {
-    let engine = shared.pool.take();
+    let engine = Arc::new(shared.pool.take());
     let (sid, session) = shared.registry.create(engine);
     // Tie the session to its connection; if the connection closed while we
     // were setting up, retire it immediately (the reader's sweep may have
@@ -493,13 +516,17 @@ fn handle_round(
 /// Client-side accounting for one secure inference over the wire.
 #[derive(Clone, Debug, Default)]
 pub struct NetReport {
+    /// Predicted class (last maximum of the logits).
     pub argmax: usize,
+    /// Dequantized logits.
     pub logits: Vec<f64>,
-    /// Exact bytes put on the wire (frame headers included).
+    /// Exact client→server bytes put on the wire (frame headers included).
     pub c2s_bytes: u64,
+    /// Exact server→client bytes (frame headers included).
     pub s2c_bytes: u64,
     /// Round trips (SHARES→PRODUCTS and RECOVERY→RECOVERY_OK pairs).
     pub rounds: u64,
+    /// End-to-end wall time of the query, wire included.
     pub wall: Duration,
 }
 
@@ -510,6 +537,7 @@ pub struct NetReport {
 pub struct CheetahNetClient {
     ctx: Arc<Context>,
     stream: TcpStream,
+    /// The server-assigned session id.
     pub session_id: u64,
     client: CheetahClient,
     last_step: usize,

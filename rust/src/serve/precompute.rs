@@ -36,10 +36,12 @@ pub struct PoolConfig {
 }
 
 impl PoolConfig {
+    /// A disabled pool: every session builds its engine inline.
     pub fn disabled() -> Self {
         Self { depth: 0, workers: 0 }
     }
 
+    /// Whether background precomputation is on.
     pub fn enabled(&self) -> bool {
         self.depth > 0 && self.workers > 0
     }
@@ -87,6 +89,11 @@ impl BlindingPool {
     /// Compiling the network into a protocol spec happens here, **once**:
     /// a malformed network is a typed error at configuration time instead
     /// of a panic on a background builder thread.
+    ///
+    /// `threads` pins the [`crate::par`] fan-out of the background builds
+    /// (scoped per builder thread via [`crate::par::with_threads`]; `0`
+    /// keeps the global setting) — the owning server's
+    /// `SecureConfig::threads` is passed through here.
     pub fn start(
         ctx: Arc<Context>,
         net: Network,
@@ -94,6 +101,7 @@ impl BlindingPool {
         epsilon: f64,
         base_seed: u64,
         cfg: PoolConfig,
+        threads: usize,
     ) -> Result<Arc<Self>, SpecError> {
         let spec = ProtocolSpec::compile(&net)?;
         let pool = Arc::new(Self {
@@ -117,7 +125,9 @@ impl BlindingPool {
             for _ in 0..cfg.workers {
                 let pool = pool.clone();
                 let tx: SyncSender<CheetahServer> = tx.clone();
-                handles.push(std::thread::spawn(move || pool.worker_loop(tx)));
+                handles.push(std::thread::spawn(move || {
+                    crate::par::with_threads(threads, || pool.worker_loop(tx))
+                }));
             }
         }
         Ok(pool)
@@ -177,6 +187,7 @@ impl BlindingPool {
         }
     }
 
+    /// Point-in-time counters (builds, hits, inline fallbacks).
     pub fn stats(&self) -> PoolStats {
         PoolStats {
             produced: self.produced.load(Ordering::Relaxed),
@@ -244,6 +255,7 @@ mod tests {
             0.0,
             100,
             PoolConfig::disabled(),
+            0,
         )
         .expect("valid network");
         let _a = pool.take();
@@ -265,6 +277,7 @@ mod tests {
             0.0,
             200,
             PoolConfig { depth: 2, workers: 1 },
+            0,
         )
         .expect("valid network");
         assert!(pool.wait_until_produced(2, Duration::from_secs(10)), "pool never warmed");

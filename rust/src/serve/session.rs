@@ -15,6 +15,15 @@
 //! instead is the per-session offline material — the prepared engine and its
 //! indicator ciphertexts — so repeat queries on a session pay online cost
 //! only.
+//!
+//! Engines are held by `Arc` and scored through the **stateless** `&self`
+//! core ([`CheetahServer::step_linear_with`]): the per-query mutable state
+//! — the server's share of the activation chain — lives in the [`Session`],
+//! not the engine. One engine instance can therefore serve any number of
+//! concurrent queries; the TCP path still hands each session its own
+//! freshly-blinded engine from the pool (per-session blinds are what keep
+//! one client's view uncorrelated with another's), but nothing about the
+//! scoring requires exclusive engine ownership any more.
 
 use super::wire;
 use crate::coordinator::metrics::Metrics;
@@ -38,7 +47,10 @@ pub enum Phase {
 /// A protocol-ordering or validation failure; the worker converts this into
 /// an `ERROR` frame and retires the session.
 #[derive(Debug)]
-pub struct ProtocolViolation(pub String);
+pub struct ProtocolViolation(
+    /// Human-readable description of the violation.
+    pub String,
+);
 
 impl std::fmt::Display for ProtocolViolation {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -48,18 +60,27 @@ impl std::fmt::Display for ProtocolViolation {
 
 impl std::error::Error for ProtocolViolation {}
 
-/// One client's serving state: engine + state machine + counters.
+/// One client's serving state: shared engine + per-query share + state
+/// machine + counters.
 pub struct Session {
+    /// The session id (the wire-level isolation boundary).
     pub id: u64,
-    pub engine: CheetahServer,
+    /// The prepared serving engine (stateless scoring; `Arc`-shared).
+    pub engine: Arc<CheetahServer>,
+    /// Server-side share of this session's in-flight query.
+    share: Vec<u64>,
+    /// Where this session is in the round sequence.
     pub phase: Phase,
     query_start: Option<Instant>,
+    /// Completed queries on this session.
     pub queries_done: u64,
 }
 
 impl Session {
-    pub fn new(id: u64, engine: CheetahServer) -> Self {
-        Self { id, engine, phase: Phase::AwaitShares(0), query_start: None, queries_done: 0 }
+    /// Wrap a prepared engine into a fresh session.
+    pub fn new(id: u64, engine: Arc<CheetahServer>) -> Self {
+        let share = engine.fresh_share();
+        Self { id, engine, share, phase: Phase::AwaitShares(0), query_start: None, queries_done: 0 }
     }
 
     fn expect_shares(&self, step: usize) -> Result<(), ProtocolViolation> {
@@ -91,10 +112,10 @@ impl Session {
             )));
         }
         if step == 0 {
-            self.engine.begin_query();
+            self.share = self.engine.fresh_share();
             self.query_start = Some(Instant::now());
         }
-        let out = self.engine.step_linear(step, in_cts);
+        let out = self.engine.step_linear_with(step, in_cts, &self.share);
         if step == self.engine.spec.last_idx() {
             if let Some(t0) = self.query_start.take() {
                 metrics.record_request(t0.elapsed());
@@ -132,7 +153,7 @@ impl Session {
                 rec_cts.len()
             )));
         }
-        self.engine.finish_nonlinear(step, rec_cts);
+        self.share = self.engine.finish_nonlinear_with(step, rec_cts);
         self.phase = Phase::AwaitShares(step + 1);
         Ok(wire::round_header(self.id, step as u32))
     }
@@ -158,6 +179,7 @@ impl Default for SessionRegistry {
 }
 
 impl SessionRegistry {
+    /// An empty registry with a CSPRNG id source.
     pub fn new() -> Self {
         Self {
             sessions: Mutex::new(HashMap::new()),
@@ -165,7 +187,9 @@ impl SessionRegistry {
         }
     }
 
-    pub fn create(&self, engine: CheetahServer) -> (u64, Arc<Mutex<Session>>) {
+    /// Mint an unguessable session id and register a session around the
+    /// (shared) engine.
+    pub fn create(&self, engine: Arc<CheetahServer>) -> (u64, Arc<Mutex<Session>>) {
         let mut sessions = self.sessions.lock().unwrap();
         let id = {
             let mut rng = self.id_rng.lock().unwrap();
@@ -181,22 +205,27 @@ impl SessionRegistry {
         (id, session)
     }
 
+    /// Look a session up by id.
     pub fn get(&self, id: u64) -> Option<Arc<Mutex<Session>>> {
         self.sessions.lock().unwrap().get(&id).cloned()
     }
 
+    /// Retire a session; returns whether it existed.
     pub fn remove(&self, id: u64) -> bool {
         self.sessions.lock().unwrap().remove(&id).is_some()
     }
 
+    /// Number of live sessions.
     pub fn len(&self) -> usize {
         self.sessions.lock().unwrap().len()
     }
 
+    /// Whether no session is live.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Retire every session (server shutdown).
     pub fn clear(&self) {
         self.sessions.lock().unwrap().clear();
     }
@@ -219,7 +248,7 @@ mod tests {
         net.init_weights(7);
         let engine =
             CheetahServer::new(ctx, net, ScalePlan::default_plan(), 0.0, 8).expect("valid net");
-        Session::new(1, engine)
+        Session::new(1, Arc::new(engine))
     }
 
     #[test]
@@ -236,6 +265,91 @@ mod tests {
         assert_eq!(s.phase, Phase::AwaitShares(0));
     }
 
+    /// The stateless scoring core: two sessions sharing **one** engine
+    /// `Arc`, driven from two threads concurrently, each produce the same
+    /// results a dedicated single-session run does — the per-query state
+    /// isolation the batch path relies on, exercised through the session
+    /// layer.
+    #[test]
+    fn concurrent_sessions_share_one_engine() {
+        use crate::nn::Tensor;
+        use crate::protocol::cheetah::{CheetahClient, CheetahRunner};
+
+        let ctx = Arc::new(crate::phe::Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "shared-engine".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::fc(4), Layer::relu(), Layer::fc(2)],
+        };
+        net.init_weights(31);
+
+        // Reference: in-process runner, same server seed.
+        let mut reference =
+            CheetahRunner::new(ctx.clone(), net.clone(), plan, 0.0, 77).expect("valid net");
+        reference.run_offline();
+        let inputs: Vec<Tensor> = (0..2)
+            .map(|k| {
+                Tensor::from_vec(
+                    (0..16).map(|i| (i as f64 - 8.0) / 9.0 + k as f64 * 0.03).collect(),
+                    1,
+                    4,
+                    4,
+                )
+            })
+            .collect();
+        let want: Vec<Vec<f64>> = inputs.iter().map(|x| reference.infer(x).logits).collect();
+
+        // One engine Arc, two sessions, two threads.
+        let engine = Arc::new(
+            CheetahServer::new(ctx.clone(), net, plan, 0.0, 77).expect("valid net"),
+        );
+        let metrics = Arc::new(Metrics::new());
+        let mut threads = Vec::new();
+        for (k, input) in inputs.into_iter().enumerate() {
+            let engine = engine.clone();
+            let ctx = ctx.clone();
+            let metrics = metrics.clone();
+            threads.push(std::thread::spawn(move || {
+                use crate::serve::wire;
+                let mut session = Session::new(1 + k as u64, engine.clone());
+                // A driving client per thread (client seed is irrelevant to
+                // the logits; see protocol::cheetah docs).
+                let mut client = CheetahClient::new(
+                    ctx.clone(),
+                    engine.spec.clone(),
+                    plan,
+                    500 + k as u64,
+                );
+                for si in 0..engine.spec.steps.len() {
+                    let (id1, id2) = engine.indicator_cts(si);
+                    client.install_indicators(si, id1.to_vec(), id2.to_vec());
+                }
+                client.begin_query(&input);
+                for si in 0..engine.spec.steps.len() {
+                    let in_cts = client.step_send(si);
+                    let payload =
+                        session.on_shares(si, &in_cts, &metrics).expect("shares round");
+                    let mut r = wire::ByteReader::new(&payload);
+                    wire::read_round_header(&mut r).expect("round header");
+                    let out = wire::decode_cts(&ctx, &mut r).expect("products decode");
+                    if let Some(rec) = client.step_receive(si, &out) {
+                        session.on_recovery(si, &rec).expect("recovery round");
+                    }
+                }
+                (client.argmax(), client.logits())
+            }));
+        }
+        for (k, t) in threads.into_iter().enumerate() {
+            let (_, logits) = t.join().expect("session thread");
+            assert_eq!(
+                logits, want[k],
+                "session {k} on the shared engine diverged from the dedicated runner"
+            );
+        }
+        assert_eq!(metrics.summary().requests, 2);
+    }
+
     #[test]
     fn registry_create_get_remove() {
         let ctx = Arc::new(crate::phe::Context::new(Params::default_params()));
@@ -248,10 +362,10 @@ mod tests {
         let reg = SessionRegistry::new();
         let engine = CheetahServer::new(ctx.clone(), net.clone(), ScalePlan::default_plan(), 0.0, 1)
             .expect("valid net");
-        let (id1, _) = reg.create(engine);
+        let (id1, _) = reg.create(Arc::new(engine));
         let engine = CheetahServer::new(ctx.clone(), net, ScalePlan::default_plan(), 0.0, 2)
             .expect("valid net");
-        let (id2, _) = reg.create(engine);
+        let (id2, _) = reg.create(Arc::new(engine));
         assert_ne!(id1, id2);
         assert_eq!(reg.len(), 2);
         assert!(reg.get(id1).is_some());

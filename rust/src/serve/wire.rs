@@ -37,20 +37,32 @@ pub const MAGIC: u32 = 0x4348_5441;
 /// Wire protocol version.
 pub const VERSION: u16 = 1;
 
+/// c→s greeting (magic + version).
 pub const TAG_HELLO: u8 = 0x20;
+/// c→s encrypted transformed-share round.
 pub const TAG_SHARES: u8 = 0x23;
+/// c→s nonlinear recovery round.
 pub const TAG_RECOVERY: u8 = 0x24;
+/// c→s polite session end.
 pub const TAG_BYE: u8 = 0x2f;
+/// s→c session grant (id, fingerprint, ε, architecture).
 pub const TAG_HELLO_OK: u8 = 0xa0;
+/// s→c offline indicator-ciphertext shipment for one step.
 pub const TAG_OFFLINE_IDS: u8 = 0xa1;
+/// s→c end of the offline phase.
 pub const TAG_OFFLINE_DONE: u8 = 0xa2;
+/// s→c obscured linear products.
 pub const TAG_PRODUCTS: u8 = 0xa3;
+/// s→c recovery acknowledgement.
 pub const TAG_RECOVERY_OK: u8 = 0xa4;
+/// s→c typed failure; the session is retired.
 pub const TAG_ERROR: u8 = 0xee;
 
-/// Error codes carried by `ERROR` frames.
+/// `ERROR` code: protocol-ordering or validation failure.
 pub const ERR_PROTOCOL: u16 = 1;
+/// `ERROR` code: unsupported greeting (magic/version).
 pub const ERR_UNSUPPORTED: u16 = 2;
+/// `ERROR` code: internal server failure.
 pub const ERR_INTERNAL: u16 = 3;
 
 /// Upper bound on ciphertexts per message (a paper-scale VGG step needs a
@@ -94,14 +106,17 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// Start reading at the front of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
+    /// Bytes not yet consumed.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
+    /// Consume exactly `len` bytes, or fail with `Truncated`.
     pub fn take(&mut self, len: usize) -> Result<&'a [u8], WireError> {
         if self.remaining() < len {
             return Err(WireError::Truncated);
@@ -111,22 +126,27 @@ impl<'a> ByteReader<'a> {
         Ok(s)
     }
 
+    /// Read a `u8`.
     pub fn u8(&mut self) -> Result<u8, WireError> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian `u16`.
     pub fn u16(&mut self) -> Result<u16, WireError> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> Result<u32, WireError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> Result<u64, WireError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read an `f64` from its little-endian bit pattern.
     pub fn f64(&mut self) -> Result<f64, WireError> {
         Ok(f64::from_bits(self.u64()?))
     }
@@ -266,6 +286,7 @@ pub fn encode_hello() -> Vec<u8> {
     out
 }
 
+/// Validate a client greeting (magic + version).
 pub fn decode_hello(payload: &[u8]) -> Result<(), WireError> {
     let mut r = ByteReader::new(payload);
     if r.u32()? != MAGIC {
@@ -279,13 +300,19 @@ pub fn decode_hello(payload: &[u8]) -> Result<(), WireError> {
 
 /// Server → client session grant.
 pub struct HelloOk {
+    /// The minted session id.
     pub session_id: u64,
+    /// Parameter/scale-plan fingerprint ([`plan_fingerprint`]).
     pub fingerprint: u64,
+    /// The server's obscuring-noise bound ε.
     pub epsilon: f64,
+    /// Number of protocol steps the architecture compiles into.
     pub n_steps: u32,
+    /// The served architecture (geometry only — never weights).
     pub arch: Network,
 }
 
+/// Encode a session grant ([`HelloOk`] layout).
 pub fn encode_hello_ok(
     session_id: u64,
     fingerprint: u64,
@@ -302,6 +329,7 @@ pub fn encode_hello_ok(
     out
 }
 
+/// Decode a session grant.
 pub fn decode_hello_ok(payload: &[u8]) -> Result<HelloOk, WireError> {
     let mut r = ByteReader::new(payload);
     let session_id = r.u64()?;
@@ -322,6 +350,7 @@ pub fn round_header(session_id: u64, step: u32) -> Vec<u8> {
     out
 }
 
+/// Read the `(session id, step)` routing prefix of a round payload.
 pub fn read_round_header(r: &mut ByteReader) -> Result<(u64, u32), WireError> {
     Ok((r.u64()?, r.u32()?))
 }
@@ -337,6 +366,7 @@ pub fn peek_session_id(payload: &[u8]) -> Result<u64, WireError> {
 
 // ---- error frames ----
 
+/// Encode an `ERROR` frame payload.
 pub fn encode_error(session_id: u64, code: u16, msg: &str) -> Vec<u8> {
     let mut out = Vec::with_capacity(10 + msg.len());
     out.extend_from_slice(&session_id.to_le_bytes());
@@ -345,6 +375,7 @@ pub fn encode_error(session_id: u64, code: u16, msg: &str) -> Vec<u8> {
     out
 }
 
+/// Decode an `ERROR` frame payload into `(session id, code, message)`.
 pub fn decode_error(payload: &[u8]) -> Result<(u64, u16, String), WireError> {
     let mut r = ByteReader::new(payload);
     let sid = r.u64()?;

@@ -42,13 +42,23 @@ impl ChaCha20Rng {
         rng
     }
 
-    /// Convenience: derive from a u64 seed (non-secret contexts like
-    /// deterministic tests that still want the crypto generator).
-    pub fn from_u64_seed(seed: u64) -> Self {
+    /// The canonical u64-seed → 32-byte-key expansion shared by every
+    /// seeded-stream consumer in the crate. The per-query stream-isolation
+    /// scheme (`protocol::cheetah::client`, `protocol::gazelle`) relies on
+    /// stream 0 of this key being exactly [`ChaCha20Rng::from_u64_seed`],
+    /// so there must be one expansion, here.
+    pub fn key_from_u64(seed: u64) -> [u8; 32] {
         let mut s = [0u8; 32];
         s[..8].copy_from_slice(&seed.to_le_bytes());
         s[8..16].copy_from_slice(&seed.wrapping_mul(0x9e37_79b9_7f4a_7c15).to_le_bytes());
-        Self::new(&s, 0)
+        s
+    }
+
+    /// Convenience: derive from a u64 seed (non-secret contexts like
+    /// deterministic tests that still want the crypto generator).
+    /// Equivalent to `new(&key_from_u64(seed), 0)`.
+    pub fn from_u64_seed(seed: u64) -> Self {
+        Self::new(&Self::key_from_u64(seed), 0)
     }
 
     /// Fresh generator from OS entropy (`/dev/urandom`).

@@ -287,10 +287,10 @@ fn engines_cross_backend_agreement() {
 /// modular or float — may depend on scheduling.
 #[test]
 fn thread_sweep_is_bit_exact_across_backends() {
-    // The sweep mutates the process-global thread count; under the CI
-    // sequential gate (CHEETAH_THREADS=1) that would silently re-enable
-    // parallelism for concurrently running tests, so skip the sweep there
-    // — the default-threads CI job still runs it in full.
+    // `.threads(n)` is engine-scoped (not global) since the batch PR, but
+    // under the CI sequential gate (CHEETAH_THREADS=1) the point is an
+    // all-sequential process, so skip the parallel sweep there — the
+    // default-threads CI job still runs it in full.
     if std::env::var("CHEETAH_THREADS").as_deref() == Ok("1") {
         eprintln!("skipping thread sweep: CHEETAH_THREADS=1 pins the sequential gate");
         return;
@@ -332,8 +332,81 @@ fn thread_sweep_is_bit_exact_across_backends() {
             );
         }
     }
-    // Restore the global default for the rest of the test process.
-    cheetah::par::set_threads(0);
+}
+
+/// Batch determinism, end to end: for every protocol backend,
+/// `infer_batch` logits are **bit-identical** to looped single-query
+/// `infer` on an identically-seeded fresh engine — at threads 1/2/8 and
+/// batch sizes 1/4/9. The batch driver fans whole queries across the par
+/// pool with per-query RNG streams derived from `(seed, query index)`, so
+/// neither scheduling nor batch shape may perturb a bit.
+#[test]
+fn batch_inference_matches_looped_at_every_thread_count() {
+    // Same rationale as the thread sweep: scoped `.threads(n)` overrides
+    // would re-enable parallel regions under the CHEETAH_THREADS=1
+    // sequential CI gate, whose point is an all-sequential process.
+    if std::env::var("CHEETAH_THREADS").as_deref() == Ok("1") {
+        eprintln!("skipping batch sweep: CHEETAH_THREADS=1 pins the sequential gate");
+        return;
+    }
+    let ctx = Arc::new(Context::new(Params::default_params()));
+    let mut net = Network {
+        name: "batch-sweep".into(),
+        input_shape: (1, 6, 6),
+        layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+    };
+    net.init_weights(4040);
+    let inputs: Vec<Tensor> = {
+        let mut rng = SplitMix64::new(4041);
+        (0..9)
+            .map(|_| {
+                Tensor::from_vec(
+                    (0..36).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+                    1,
+                    6,
+                    6,
+                )
+            })
+            .collect()
+    };
+
+    let fresh_engine = |backend: Backend, threads: usize| {
+        EngineBuilder::new(backend)
+            .network(net.clone())
+            .context(ctx.clone())
+            .epsilon(0.0)
+            .seed(4042)
+            .threads(threads)
+            .build()
+            .expect("engine build")
+    };
+
+    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+        // Reference: looped single-query inference, sequential.
+        let mut looped = fresh_engine(backend, 1);
+        let want: Vec<Vec<f64>> = inputs
+            .iter()
+            .map(|x| looped.infer(x).expect("looped inference").logits)
+            .collect();
+
+        for threads in [1usize, 2, 8] {
+            for batch in [1usize, 4, 9] {
+                let mut engine = fresh_engine(backend, threads);
+                let reps = engine
+                    .infer_batch(&inputs[..batch])
+                    .expect("batched inference");
+                assert_eq!(reps.len(), batch);
+                for (i, rep) in reps.iter().enumerate() {
+                    assert_eq!(
+                        rep.logits, want[i],
+                        "{backend}: batch={batch} threads={threads} query {i} \
+                         diverged bitwise from the sequential loop"
+                    );
+                }
+            }
+        }
+    }
+    // `.threads(n)` is engine-scoped now — no global state to restore.
 }
 
 /// Property: private inference is deterministic given seeds, and the

@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Bench-trend gate: compare two BENCH_e2e.json files and fail on regression.
+
+Usage:
+    bench_trend.py PREVIOUS.json CURRENT.json [--max-regression 0.15]
+
+The JSON layout is what `bench_util::Table::write_json` emits: a `headers`
+list and `rows` of {header: string-cell} objects. Rows are keyed by
+(network, framework, threads, batch) — `batch` is absent in pre-batch-PR
+artifacts and defaults to "1" — and the gated metric is `online_ms`
+(whole-batch wall ms for the cheetah-loop/cheetah-batch rows, per-query
+online compute otherwise).
+
+Exit codes: 0 pass / skipped (no previous artifact, so nothing to compare
+against — first run on a branch); 1 regression beyond the threshold or
+zero comparable rows (a schema/key rename must not silently disable the
+gate); 2 malformed input.
+
+Noise guard: CI runners are shared machines, so rows faster than
+MIN_ABS_MS in *both* runs are reported but never gate.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+MIN_ABS_MS = 5.0  # sub-5ms cells are timer noise on shared runners
+
+
+def load_rows(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    if "rows" not in doc or "headers" not in doc:
+        print(f"error: {path} is not a bench_util Table JSON", file=sys.stderr)
+        sys.exit(2)
+    return doc["rows"]
+
+
+def key_of(row):
+    return (
+        row.get("network", ""),
+        row.get("framework", ""),
+        row.get("threads", ""),
+        row.get("batch", "1") or "1",
+    )
+
+
+def metric_of(row):
+    cell = row.get("online_ms", "")
+    try:
+        return float(cell)
+    except ValueError:
+        return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.15,
+        help="fail when current online_ms exceeds previous by this fraction",
+    )
+    args = ap.parse_args()
+
+    if not os.path.exists(args.previous):
+        print(f"no previous artifact at {args.previous} — skipping trend gate")
+        return 0
+    if not os.path.exists(args.current):
+        print(f"error: current artifact {args.current} missing", file=sys.stderr)
+        return 2
+
+    prev = {key_of(r): metric_of(r) for r in load_rows(args.previous)}
+    curr = {key_of(r): metric_of(r) for r in load_rows(args.current)}
+
+    regressions = []
+    compared = 0
+    for key, now in sorted(curr.items()):
+        before = prev.get(key)
+        if before is None or now is None or before <= 0.0:
+            continue
+        compared += 1
+        ratio = now / before
+        marker = ""
+        if ratio > 1.0 + args.max_regression:
+            if before < MIN_ABS_MS and now < MIN_ABS_MS:
+                marker = "  (noise-exempt: sub-5ms cell)"
+            else:
+                marker = "  << REGRESSION"
+                regressions.append((key, before, now, ratio))
+        print(
+            f"{'/'.join(key):40s} {before:10.3f} ms -> {now:10.3f} ms"
+            f"  ({ratio:5.2f}x){marker}"
+        )
+
+    if compared == 0:
+        # Both artifacts exist but share no (key, metric) rows: almost
+        # certainly a schema/key rename. Fail loudly rather than leaving
+        # the gate permanently green-but-dead; the run after the rename
+        # lands on main compares new-vs-new and goes green again.
+        print(
+            "error: artifacts share zero comparable rows — schema or key "
+            "rename? The trend gate would otherwise be silently disabled.",
+            file=sys.stderr,
+        )
+        return 1
+    if regressions:
+        print(
+            f"\nFAIL: {len(regressions)} row(s) regressed more than "
+            f"{args.max_regression:.0%} in online compute:",
+            file=sys.stderr,
+        )
+        for key, before, now, ratio in regressions:
+            print(
+                f"  {'/'.join(key)}: {before:.3f} ms -> {now:.3f} ms ({ratio:.2f}x)",
+                file=sys.stderr,
+            )
+        return 1
+    print(f"\nOK: {compared} row(s) compared, none beyond the threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
