@@ -1,0 +1,123 @@
+//! PHE micro-throughput benchmark — the substrate numbers behind every
+//! protocol row: NTT/iNTT, `MultPlain` (in-place, the online hot op),
+//! `AddPlain`, `Perm`, and the two ways to build an `AddPlain` operand —
+//! allocating ([`Context::add_operand_unsigned`]) vs the scratch-arena path
+//! the online scoring loop uses (`encode_unsigned_into` → `scale_plain_into`
+//! → NTT → `add_plain_raw`), with the arena hit rate reported.
+//!
+//! Each row times a fixed `iters`-op batch (median of 5 batches after
+//! warm-up) so `total_ms` is comfortably above timer/scheduler noise; the
+//! CI bench-trend job gates on these rows via `BENCH_phe.json`
+//! (`scripts/bench_trend.py --phe`).
+//!
+//! Run: `cargo bench --bench phe_bench [-- --big-ring]`
+
+use cheetah::bench_util::{time_fn, BenchArgs, Table};
+use cheetah::phe::scratch::Arena;
+use cheetah::phe::{Context, Encryptor, Evaluator, Form, GaloisKeys, Params};
+use cheetah::util::rng::ChaCha20Rng;
+use std::sync::Arc;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let params = if args.has("--big-ring") { Params::big_ring() } else { Params::default_params() };
+    let ctx = Arc::new(Context::new(params));
+    let n = ctx.params.n;
+    let mut rng = ChaCha20Rng::from_u64_seed(5);
+    let enc = Encryptor::new(ctx.clone(), &mut rng);
+    let ev = Evaluator::new(ctx.clone());
+    let gk = GaloisKeys::generate_default(&ctx, &enc.sk, &mut rng);
+
+    let vals: Vec<i64> = (0..n as i64).map(|i| i % 251 - 125).collect();
+    let residues: Vec<u64> = (0..n as u64).map(|i| (i * 7919) % ctx.params.p).collect();
+    let mut ct = enc.encrypt_slots(&vals, &mut rng);
+    ev.to_ntt(&mut ct);
+    let mult_op = ctx.mult_operand(&vals);
+    let add_op = ctx.add_operand(&vals);
+    let mut poly = ctx.sample_uniform_ntt(&mut rng);
+    let arena = Arena::new();
+    arena.reserve(&ctx.params, 2);
+
+    let mut t = Table::new(&["op", "n", "iters", "total_ms", "per_op_us", "arena_hit_rate"]);
+    // The hit-rate column is populated only by the dedicated `arena` row
+    // appended after the timed rows (it isn't known until they have run).
+    let mut bench = |op: &str, iters: usize, f: &mut dyn FnMut()| {
+        let m = time_fn(1, 5, || {
+            for _ in 0..iters {
+                f();
+            }
+        });
+        t.row(&[
+            op.into(),
+            n.to_string(),
+            iters.to_string(),
+            format!("{:.3}", m.millis()),
+            format!("{:.3}", m.micros() / iters as f64),
+            String::new(),
+        ]);
+        println!(
+            "{op:<18} {iters:>6} iters  {:>10.3} ms total  {:>8.3} us/op",
+            m.millis(),
+            m.micros() / iters as f64
+        );
+    };
+
+    bench("ntt_forward", 200, &mut || {
+        ctx.to_coeff(&mut poly);
+        ctx.to_ntt(&mut poly);
+        std::hint::black_box(&poly);
+    });
+    // Output ciphertexts are hoisted and reused so the timed loops measure
+    // the op, not allocator traffic (the regression gate must not trip on
+    // allocator variance across shared CI runners).
+    let mut mult_out = ct.clone();
+    bench("mult_plain_into", 200, &mut || {
+        ev.mult_plain_into(&ct, &mult_op, &mut mult_out);
+        std::hint::black_box(&mult_out);
+    });
+    let mut add_acc = ct.clone();
+    bench("add_plain", 2000, &mut || {
+        ev.add_plain(&mut add_acc, &add_op);
+        std::hint::black_box(&add_acc);
+    });
+    bench("perm", 10, &mut || {
+        let _ = std::hint::black_box(ev.rotate_rows(&ct, 1, &gk));
+    });
+    bench("add_operand_alloc", 200, &mut || {
+        let _ = std::hint::black_box(ctx.add_operand_unsigned(&residues));
+    });
+    // The online path's operand build: fully scratch-backed, then applied
+    // with add_plain_raw — zero allocations once the arena is warm.
+    let mut scratch_ct = ct.clone();
+    bench("add_operand_scratch", 200, &mut || {
+        let mut pt = arena.plain(n);
+        ctx.encoder.encode_unsigned_into(&residues, &mut pt);
+        let mut p = arena.poly(&ctx.params, Form::Coeff);
+        ctx.scale_plain_into(&pt, &mut p);
+        ctx.to_ntt(&mut p);
+        ev.add_plain_raw(&mut scratch_ct, &p);
+        std::hint::black_box(&*p);
+    });
+    // Re-emit the scratch row's hit rate as its own row so the JSON carries
+    // it without re-timing (the table closure can't know it in advance).
+    let stats = arena.stats();
+    t.row(&[
+        "arena".into(),
+        n.to_string(),
+        stats.checkouts.to_string(),
+        String::new(),
+        String::new(),
+        format!("{:.4}", stats.hit_rate()),
+    ]);
+    println!(
+        "arena: {} checkouts, {} fresh allocs (hit rate {:.4})",
+        stats.checkouts,
+        stats.fresh_allocs,
+        stats.hit_rate()
+    );
+
+    t.print(&format!("PHE micro-throughput — n={}, q≈2^{}", n, ctx.params.q_bits()));
+    t.write_json("BENCH_phe.json", "phe micro-ops: batch totals per (op, n, iters)")
+        .expect("write BENCH_phe.json");
+    println!("\nwrote BENCH_phe.json");
+}

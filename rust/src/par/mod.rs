@@ -4,7 +4,8 @@
 //! *embarrassingly parallel* per-channel ciphertext streams, so the runtime
 //! here is deliberately minimal: a lazily-started global pool of worker
 //! threads plus three fork-join primitives ([`join`], [`for_each_chunked`] /
-//! [`for_each_chunk_mut`], [`map_indexed`] / [`map_collect`]). There is no
+//! [`for_each_chunk_mut`], [`map_indexed`] / [`map_collect`] /
+//! [`map_indexed_grained`]). There is no
 //! work stealing and no task graph — every parallel region statically
 //! partitions its work by index, writes results into pre-sized slots, and
 //! blocks the caller until the whole region is done.
@@ -53,6 +54,8 @@ use std::time::Duration;
 static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
 /// Resolved default: `CHEETAH_THREADS` env var, else `available_parallelism`.
 static DEFAULT: OnceLock<usize> = OnceLock::new();
+/// Resolved `CHEETAH_PAR_GRAIN` floor (see [`grain_floor`]).
+static GRAIN: OnceLock<usize> = OnceLock::new();
 
 thread_local! {
     /// Per-thread scoped override (0 = none); see [`with_threads`].
@@ -411,6 +414,48 @@ pub fn map_indexed<R: Send, F: Fn(usize) -> R + Sync>(n: usize, f: F) -> Vec<R> 
     out.into_iter().map(|o| o.expect("parallel map slot left unfilled")).collect()
 }
 
+/// The global minimum region size for grained dispatch: regions opened
+/// through [`map_indexed_grained`] with fewer units than this run on the
+/// caller's thread with no fork-join handshake at all. Resolved once from
+/// the `CHEETAH_PAR_GRAIN` env var; defaults to 2 (a 1-unit region never
+/// dispatches anyway, so 2 preserves historical behavior unless a call
+/// site asks for a higher per-region floor). Raising it trades parallelism
+/// of small regions for lower dispatch overhead — results are bit-identical
+/// either way (dispatch width never affects values).
+pub fn grain_floor() -> usize {
+    *GRAIN.get_or_init(|| {
+        if let Ok(v) = std::env::var("CHEETAH_PAR_GRAIN") {
+            if let Ok(g) = v.trim().parse::<usize>() {
+                if g > 0 {
+                    return g;
+                }
+            }
+        }
+        2
+    })
+}
+
+/// [`map_indexed`] with a per-region grain heuristic: when `n` is below
+/// `max(min_units, grain_floor())` the region runs as a plain sequential
+/// loop on the caller's thread — no pool submission, no condvar wakeups.
+///
+/// This is for regions whose *unit* cost can be tiny relative to fork-join
+/// overhead (FC-tail grids with a couple of ciphertexts, per-channel block
+/// sums on short streams): the caller states the region size below which
+/// dispatch loses more than it gains, and `CHEETAH_PAR_GRAIN` lets an
+/// operator raise the floor fleet-wide. Output is exactly
+/// `[f(0), …, f(n-1)]` in either mode.
+pub fn map_indexed_grained<R: Send, F: Fn(usize) -> R + Sync>(
+    n: usize,
+    min_units: usize,
+    f: F,
+) -> Vec<R> {
+    if n < min_units.max(grain_floor()) {
+        return (0..n).map(f).collect();
+    }
+    map_indexed(n, f)
+}
+
 /// Parallel map over a slice, preserving order.
 pub fn map_collect<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
@@ -501,6 +546,28 @@ mod tests {
             let got = map_indexed(500, |i| (i as u64) * (i as u64));
             assert_eq!(got, want, "threads={t}");
         }
+        set_threads(0);
+    }
+
+    #[test]
+    fn grained_map_matches_map_and_stays_on_caller_below_floor() {
+        let _guard = threads_lock();
+        set_threads(8);
+        // Above the floor: same values as plain map_indexed.
+        let want: Vec<u64> = (0..100u64).map(|i| i * 3).collect();
+        assert_eq!(map_indexed_grained(100, 4, |i| (i as u64) * 3), want);
+        // Below the per-region floor: every unit runs on the caller thread
+        // (no dispatch), and the values are still exact.
+        let caller = std::thread::current().id();
+        let ids = map_indexed_grained(3, 8, |i| (i, std::thread::current().id()));
+        assert_eq!(ids.len(), 3);
+        for (i, (idx, id)) in ids.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*id, caller, "unit {i} left the caller thread");
+        }
+        // Empty and single-unit regions degenerate cleanly.
+        assert!(map_indexed_grained(0, 4, |i| i).is_empty());
+        assert_eq!(map_indexed_grained(1, 4, |i| i), vec![0]);
         set_threads(0);
     }
 

@@ -14,12 +14,15 @@ use crate::util::math::reverse_bits;
 /// A plaintext polynomial: coefficients modulo `p`, coefficient domain.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Plaintext {
+    /// The `n` polynomial coefficients, each in `[0, p)`.
     pub coeffs: Vec<u64>,
 }
 
 /// Batching encoder for a given `(n, p)`.
 pub struct BatchEncoder {
+    /// Plaintext modulus (batching prime, `≡ 1 mod 2n`).
     pub p: u64,
+    /// Ring degree == SIMD slot count.
     pub n: usize,
     ntt: NttTables,
     /// slot index → coefficient index (after the plaintext NTT).
@@ -27,6 +30,8 @@ pub struct BatchEncoder {
 }
 
 impl BatchEncoder {
+    /// Build the encoder: plaintext NTT tables plus the slot→coefficient
+    /// index permutation induced by `⟨3⟩ × ⟨-1⟩ ⊂ Z_{2n}^*`.
     pub fn new(n: usize, p: u64) -> Self {
         let ntt = NttTables::new(n, p);
         let log_n = (n as u64).trailing_zeros();
@@ -77,14 +82,24 @@ impl BatchEncoder {
 
     /// Encode unsigned residues (already in `[0, p)`).
     pub fn encode_unsigned(&self, values: &[u64]) -> Plaintext {
-        assert!(values.len() <= self.n);
-        let mut coeffs = vec![0u64; self.n];
+        let mut pt = Plaintext { coeffs: vec![0u64; self.n] };
+        self.encode_unsigned_into(values, &mut pt);
+        pt
+    }
+
+    /// [`BatchEncoder::encode_unsigned`] into a caller-provided (scratch)
+    /// plaintext — the buffer is resized and fully overwritten, so stale
+    /// arena contents are fine. This is the allocation-free encoding the
+    /// online scoring path uses for its query-dependent `AddPlain` operands.
+    pub fn encode_unsigned_into(&self, values: &[u64], pt: &mut Plaintext) {
+        assert!(values.len() <= self.n, "too many slots ({} > {})", values.len(), self.n);
+        pt.coeffs.clear();
+        pt.coeffs.resize(self.n, 0);
         for (i, &v) in values.iter().enumerate() {
             debug_assert!(v < self.p);
-            coeffs[self.index_map[i]] = v;
+            pt.coeffs[self.index_map[i]] = v;
         }
-        self.ntt.inverse(&mut coeffs);
-        Plaintext { coeffs }
+        self.ntt.inverse(&mut pt.coeffs);
     }
 
     /// Decode a plaintext into `n` centered signed slot values.
@@ -173,6 +188,16 @@ mod tests {
         let dec = enc.decode(&Plaintext { coeffs: fc });
         let expect: Vec<i64> = a.iter().zip(&b).map(|(&x, &y)| x * y).collect();
         assert_eq!(dec, expect);
+    }
+
+    #[test]
+    fn encode_unsigned_into_matches_alloc_on_stale_buffer() {
+        let enc = encoder();
+        let vals: Vec<u64> = (0..100u64).map(|i| (i * 37) % enc.p).collect();
+        let want = enc.encode_unsigned(&vals);
+        let mut pt = Plaintext { coeffs: vec![7u64; 3] }; // wrong size + stale
+        enc.encode_unsigned_into(&vals, &mut pt);
+        assert_eq!(pt, want);
     }
 
     #[test]

@@ -17,7 +17,9 @@ use std::sync::Arc;
 /// A BFV ciphertext `(c0, c1)` with `c0 + c1·s = Δ·m + e (mod q)`.
 #[derive(Clone, Debug)]
 pub struct Ciphertext {
+    /// The masked component `Δ·m − c1·s − e`.
     pub c0: RnsPoly,
+    /// The uniform component `a` (regenerable from `seed` when fresh).
     pub c1: RnsPoly,
     /// Present iff this is a fresh symmetric encryption whose `c1` is
     /// derivable from the seed (seed-compressed wire format).
@@ -25,6 +27,7 @@ pub struct Ciphertext {
 }
 
 impl Ciphertext {
+    /// The representation form of both components (always equal).
     pub fn form(&self) -> Form {
         debug_assert_eq!(self.c0.form, self.c1.form);
         self.c0.form
@@ -39,11 +42,14 @@ impl Ciphertext {
 /// Holds a secret key; performs encryption, decryption and noise metering.
 /// Owns a shared `Arc<Context>` (no lifetime plumbing — see DESIGN.md).
 pub struct Encryptor {
+    /// Shared PHE context (parameters, encoder, NTT tables).
     pub ctx: Arc<Context>,
+    /// This party's secret key.
     pub sk: SecretKey,
 }
 
 impl Encryptor {
+    /// Generate a fresh secret key from `rng` and wrap it with the context.
     pub fn new(ctx: Arc<Context>, rng: &mut ChaCha20Rng) -> Self {
         let sk = SecretKey::generate(&ctx, rng);
         Self { ctx, sk }

@@ -22,12 +22,16 @@ use std::sync::Arc;
 /// Operation counters (the paper's cost unit).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCounts {
+    /// `Add` / `AddPlain` / `Sub` operations.
     pub add: u64,
+    /// `MultPlain` operations.
     pub mult: u64,
+    /// `Perm` (rotation + key switch) operations.
     pub perm: u64,
 }
 
 impl OpCounts {
+    /// Component-wise sum of two counter snapshots.
     pub fn plus(&self, o: &OpCounts) -> OpCounts {
         OpCounts { add: self.add + o.add, mult: self.mult + o.mult, perm: self.perm + o.perm }
     }
@@ -46,7 +50,9 @@ pub enum OperandKind {
 /// offline phase; applying it online is a pointwise loop.
 #[derive(Clone, Debug)]
 pub struct PlainOperand {
+    /// The prepared (lifted or Δ-scaled) operand polynomial, NTT form.
     pub poly: RnsPoly,
+    /// Which operation this operand was prepared for.
     pub kind: OperandKind,
 }
 
@@ -56,7 +62,14 @@ impl Context {
         self.mult_operand_pt(&self.encoder.encode(values))
     }
 
+    /// Prepare a `MultPlain` operand from an already-encoded plaintext.
+    ///
+    /// Allocates the operand poly (counted by [`Context::operand_builds`]);
+    /// the online scoring path instead builds its query-dependent operands
+    /// into arena scratch ([`crate::phe::scratch`]) and applies them with
+    /// [`Evaluator::add_plain_raw`].
     pub fn mult_operand_pt(&self, pt: &Plaintext) -> PlainOperand {
+        self.count_operand_build();
         let mut poly = self.lift_centered(pt);
         self.to_ntt(&mut poly);
         PlainOperand { poly, kind: OperandKind::Mult }
@@ -73,7 +86,10 @@ impl Context {
         self.add_operand_pt(&self.encoder.encode_unsigned(values))
     }
 
+    /// Prepare an `AddPlain` operand from an already-encoded plaintext
+    /// (allocating; counted by [`Context::operand_builds`]).
     pub fn add_operand_pt(&self, pt: &Plaintext) -> PlainOperand {
+        self.count_operand_build();
         let mut poly = self.scale_plain(pt);
         self.to_ntt(&mut poly);
         PlainOperand { poly, kind: OperandKind::Add }
@@ -96,15 +112,18 @@ struct Counters {
 /// parallel runtime ([`crate::par`]) can fan per-channel work across
 /// threads sharing one evaluator.
 pub struct Evaluator {
+    /// Shared PHE context (parameters, encoder, NTT tables).
     pub ctx: Arc<Context>,
     counts: Counters,
 }
 
 impl Evaluator {
+    /// Wrap a shared context into an evaluator with zeroed op counters.
     pub fn new(ctx: Arc<Context>) -> Self {
         Self { ctx, counts: Counters::default() }
     }
 
+    /// Snapshot of the accumulated op counters.
     pub fn counts(&self) -> OpCounts {
         OpCounts {
             add: self.counts.add.load(Ordering::Relaxed),
@@ -113,6 +132,7 @@ impl Evaluator {
         }
     }
 
+    /// Zero the op counters.
     pub fn reset_counts(&self) {
         self.counts.add.store(0, Ordering::Relaxed);
         self.counts.mult.store(0, Ordering::Relaxed);
@@ -128,6 +148,7 @@ impl Evaluator {
         crate::par::join(|| ctx.to_ntt(c0), || ctx.to_ntt(c1));
     }
 
+    /// Convert ciphertext to coefficient form (both components fork-join).
     pub fn to_coeff(&self, ct: &mut Ciphertext) {
         let ctx = &self.ctx;
         let Ciphertext { c0, c1, .. } = ct;
@@ -152,6 +173,7 @@ impl Evaluator {
         self.counts.add.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// `a + b` into a fresh ciphertext.
     pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
         let mut out = a.clone();
         self.add_assign(&mut out, b);
@@ -178,25 +200,60 @@ impl Evaluator {
     /// same form as `ct`).
     pub fn add_plain(&self, ct: &mut Ciphertext, op: &PlainOperand) {
         assert_eq!(op.kind, OperandKind::Add, "operand not prepared for AddPlain");
-        assert_eq!(ct.form(), op.poly.form, "form mismatch in add_plain");
-        ct.c0.add_assign(&op.poly, &self.ctx.params);
+        self.add_plain_raw(ct, &op.poly);
+    }
+
+    /// `ct += poly` where `poly` is a raw Δ-scaled `AddPlain` operand
+    /// polynomial — typically arena scratch the caller just built with
+    /// [`Context::scale_plain_into`] + [`Context::to_ntt`]. Skipping the
+    /// [`PlainOperand`] wrapper keeps the online path allocation-free; the
+    /// caller is responsible for the operand being Δ-scaled (the kind check
+    /// the wrapper would have performed). Counts as one `Add`.
+    pub fn add_plain_raw(&self, ct: &mut Ciphertext, poly: &RnsPoly) {
+        assert_eq!(ct.form(), poly.form, "form mismatch in add_plain");
+        ct.c0.add_assign(poly, &self.ctx.params);
         ct.mark_evaluated();
         self.counts.add.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// `ct * pt` slot-wise (operand must be centered-lifted, both NTT form).
+    /// `ct * pt` slot-wise into a fresh ciphertext (operand must be
+    /// centered-lifted, both NTT form). Single pass: each output residue
+    /// vec is built directly from the product stream — no clone-then-
+    /// multiply and no zero-fill. Counts as one `Mult`.
     pub fn mult_plain(&self, ct: &Ciphertext, op: &PlainOperand) -> Ciphertext {
-        let mut out = ct.clone();
-        self.mult_plain_assign(&mut out, op);
+        assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
+        assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
+        let params = &self.ctx.params;
+        let out = Ciphertext {
+            c0: RnsPoly::mul_pointwise(&ct.c0, &op.poly, params),
+            c1: RnsPoly::mul_pointwise(&ct.c1, &op.poly, params),
+            seed: None,
+        };
+        self.counts.mult.fetch_add(1, Ordering::Relaxed);
         out
     }
 
+    /// In-place variant of [`Evaluator::mult_plain`].
     pub fn mult_plain_assign(&self, ct: &mut Ciphertext, op: &PlainOperand) {
         assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
         assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
         ct.c0.mul_assign_pointwise(&op.poly, &self.ctx.params);
         ct.c1.mul_assign_pointwise(&op.poly, &self.ctx.params);
         ct.mark_evaluated();
+        self.counts.mult.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `out = ct * pt`, written directly into a preallocated output
+    /// ciphertext in one pass (no clone-then-multiply temp traffic) — the
+    /// online scoring path's `MultPlain`. `out`'s prior contents are
+    /// irrelevant; its polys must be sized for this context. Counts as one
+    /// `Mult`.
+    pub fn mult_plain_into(&self, ct: &Ciphertext, op: &PlainOperand, out: &mut Ciphertext) {
+        assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
+        assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
+        out.c0.set_mul_pointwise(&ct.c0, &op.poly, &self.ctx.params);
+        out.c1.set_mul_pointwise(&ct.c1, &op.poly, &self.ctx.params);
+        out.seed = None;
         self.counts.mult.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -387,6 +444,67 @@ mod tests {
         for i in 0..n {
             assert_eq!(dec[i], x[i] * k[i] + b[i], "slot {i}");
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_ops() {
+        // mult_plain_into + add_plain_raw (the allocation-free online path)
+        // must be bit-identical to mult_plain + add_plain.
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
+        let a: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 97 - 48).collect();
+        let k: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 31 - 15).collect();
+        let b: Vec<i64> = (0..ctx.params.n as i64).map(|i| i % 19 - 9).collect();
+        let mut ca = enc.encrypt_slots(&a, &mut rng);
+        ev.to_ntt(&mut ca);
+        let kop = ctx.mult_operand(&k);
+        let bop = ctx.add_operand(&b);
+        let mut want = ev.mult_plain(&ca, &kop);
+        ev.add_plain(&mut want, &bop);
+        // Stale preallocated output (wrong form, garbage contents).
+        let mut got = Ciphertext {
+            c0: RnsPoly::zero(&ctx.params, Form::Coeff),
+            c1: RnsPoly::zero(&ctx.params, Form::Coeff),
+            seed: None,
+        };
+        got.c0.coeffs[0][0] = 42;
+        ev.mult_plain_into(&ca, &kop, &mut got);
+        ev.add_plain_raw(&mut got, &bop.poly);
+        assert_eq!(got.c0, want.c0);
+        assert_eq!(got.c1, want.c1);
+        let dec = enc.decrypt_slots(&got);
+        for i in 0..ctx.params.n {
+            assert_eq!(dec[i], a[i] * k[i] + b[i], "slot {i}");
+        }
+    }
+
+    #[test]
+    fn operand_builds_counter_ticks_on_allocating_builders_only() {
+        let (ctx, mut rng) = setup();
+        let enc = Encryptor::new(ctx.clone(), &mut rng);
+        let ev = Evaluator::new(ctx.clone());
+        let base = ctx.operand_builds();
+        let op = ctx.mult_operand(&[1, 2, 3]);
+        let _ = ctx.add_operand(&[4, 5]);
+        assert_eq!(ctx.operand_builds() - base, 2);
+        // Scratch-based application paths don't tick the counter.
+        let mut ct = enc.encrypt_slots(&[1], &mut rng);
+        ev.to_ntt(&mut ct);
+        let mut out = Ciphertext {
+            c0: RnsPoly::zero(&ctx.params, Form::Coeff),
+            c1: RnsPoly::zero(&ctx.params, Form::Coeff),
+            seed: None,
+        };
+        let arena = crate::phe::scratch::Arena::new();
+        let mut pt = arena.plain(ctx.params.n);
+        ctx.encoder.encode_unsigned_into(&[5, 6], &mut pt);
+        let mut poly = arena.poly(&ctx.params, Form::Coeff);
+        ctx.scale_plain_into(&pt, &mut poly);
+        ctx.to_ntt(&mut poly);
+        ev.mult_plain_into(&ct, &op, &mut out);
+        ev.add_plain_raw(&mut out, &poly);
+        assert_eq!(ctx.operand_builds() - base, 2, "into-variants must not tick");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub struct SecretKey {
 }
 
 impl SecretKey {
+    /// Sample a fresh ternary secret and cache it in both domains.
     pub fn generate(ctx: &Context, rng: &mut ChaCha20Rng) -> Self {
         let s_coeff = ctx.sample_ternary(rng);
         let mut s_ntt = s_coeff.clone();
@@ -168,6 +169,7 @@ impl KeySwitchKey {
 
 /// A set of Galois (rotation) keys, lazily generated per Galois element.
 pub struct GaloisKeys {
+    /// Key-switching key per Galois element.
     pub keys: HashMap<u64, KeySwitchKey>,
 }
 
@@ -207,6 +209,7 @@ impl GaloisKeys {
         Self { keys }
     }
 
+    /// The key-switching key for Galois element `g`, if generated.
     pub fn get(&self, g: u64) -> Option<&KeySwitchKey> {
         self.keys.get(&g)
     }

@@ -23,6 +23,7 @@ pub mod keys;
 pub mod ntt;
 pub mod params;
 pub mod poly;
+pub mod scratch;
 pub mod serial;
 
 pub use encoder::{BatchEncoder, Plaintext};
@@ -36,23 +37,46 @@ use crate::util::math::{inv_mod, mul_mod, sub_mod};
 use crate::util::rng::ChaCha20Rng;
 use ntt::NttTables;
 use params::NUM_Q_PRIMES;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Shared precomputed context: parameters, NTT tables for each RNS prime,
 /// the batching encoder, and CRT reconstruction constants.
 pub struct Context {
+    /// The parameter set this context was built for.
     pub params: Params,
+    /// Forward/inverse NTT tables, one per RNS prime (same order as
+    /// `params.qs`).
     pub ntt: Vec<NttTables>,
+    /// SIMD batching encoder over the plaintext modulus `p`.
     pub encoder: BatchEncoder,
     /// `inv(q0) mod q1` for Garner CRT reconstruction.
     inv_q0_mod_q1: u64,
+    /// Allocating plaintext-operand constructions ([`Context::mult_operand`]
+    /// / [`Context::add_operand`] families). The `*_into` variants writing
+    /// into scratch buffers do **not** count — this counter is how the
+    /// protocol's instrumentation test asserts the online scoring path
+    /// builds zero fresh operand polynomials.
+    operand_builds: AtomicU64,
 }
 
 impl Context {
+    /// Precompute NTT tables, the batching encoder, and CRT constants for
+    /// `params`.
     pub fn new(params: Params) -> Self {
         let ntt = params.qs.iter().map(|&q| NttTables::new(params.n, q)).collect();
         let encoder = BatchEncoder::new(params.n, params.p);
         let inv_q0_mod_q1 = inv_mod(params.qs[0] % params.qs[1], params.qs[1]);
-        Self { params, ntt, encoder, inv_q0_mod_q1 }
+        Self { params, ntt, encoder, inv_q0_mod_q1, operand_builds: AtomicU64::new(0) }
+    }
+
+    /// Number of allocating operand constructions so far (see the
+    /// `operand_builds` field docs).
+    pub fn operand_builds(&self) -> u64 {
+        self.operand_builds.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn count_operand_build(&self) {
+        self.operand_builds.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Convert a poly to NTT form in place (no-op if already there).
@@ -129,16 +153,25 @@ impl Context {
     /// with **centered** lifting: residues above p/2 map to negatives mod q.
     /// This is the representation used as a `MultPlain` operand.
     pub fn lift_centered(&self, pt: &Plaintext) -> RnsPoly {
+        let mut out = RnsPoly::zero(&self.params, Form::Coeff);
+        self.lift_centered_into(pt, &mut out);
+        out
+    }
+
+    /// [`Context::lift_centered`] into a caller-provided (scratch) poly —
+    /// every coefficient of every residue is overwritten, so stale arena
+    /// buffers are fine. The poly must be sized for this context.
+    pub fn lift_centered_into(&self, pt: &Plaintext, out: &mut RnsPoly) {
+        debug_assert_eq!(out.n(), self.params.n, "scratch poly sized for another ring");
         let p = self.params.p;
         let half = p / 2;
-        let mut out = RnsPoly::zero(&self.params, Form::Coeff);
         for j in 0..self.params.n {
             let c = pt.coeffs[j];
             for (i, &q) in self.params.qs.iter().enumerate() {
                 out.coeffs[i][j] = if c > half { q - (p - c) } else { c };
             }
         }
-        out
+        out.form = Form::Coeff;
     }
 
     /// Scale a plaintext by `Δ = q/p` with exact rounding:
@@ -146,13 +179,21 @@ impl Context {
     /// used as an `AddPlain` operand and inside `encrypt`.
     pub fn scale_plain(&self, pt: &Plaintext) -> RnsPoly {
         let mut out = RnsPoly::zero(&self.params, Form::Coeff);
+        self.scale_plain_into(pt, &mut out);
+        out
+    }
+
+    /// [`Context::scale_plain`] into a caller-provided (scratch) poly —
+    /// fully overwritten, so stale arena buffers are fine.
+    pub fn scale_plain_into(&self, pt: &Plaintext, out: &mut RnsPoly) {
+        debug_assert_eq!(out.n(), self.params.n, "scratch poly sized for another ring");
         for j in 0..self.params.n {
             let rns = self.params.scale_to_q(pt.coeffs[j]);
             for i in 0..NUM_Q_PRIMES {
                 out.coeffs[i][j] = rns[i];
             }
         }
-        out
+        out.form = Form::Coeff;
     }
 }
 

@@ -41,7 +41,9 @@ pub fn shoup_precompute(w: u64, q: u64) -> u64 {
 
 /// Precomputed NTT tables for one prime modulus and one ring degree.
 pub struct NttTables {
+    /// The prime modulus (`≡ 1 mod 2n`).
     pub q: u64,
+    /// The ring degree (power of two).
     pub n: usize,
     #[allow(dead_code)]
     log_n: u32,
@@ -57,6 +59,8 @@ pub struct NttTables {
 }
 
 impl NttTables {
+    /// Precompute ψ-twisted twiddle tables (with Shoup companions) for ring
+    /// degree `n` and modulus `q`.
     pub fn new(n: usize, q: u64) -> Self {
         assert!(n.is_power_of_two());
         assert_eq!(q % (2 * n as u64), 1, "q must be ≡ 1 mod 2n");

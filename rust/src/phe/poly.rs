@@ -17,7 +17,10 @@ pub enum Form {
 /// coefficient (or evaluation) modulo `qs[i]`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct RnsPoly {
+    /// One residue vector per RNS prime: `coeffs[i][j]` is coefficient `j`
+    /// modulo `qs[i]`.
     pub coeffs: Vec<Vec<u64>>,
+    /// Which domain the residues currently live in.
     pub form: Form,
 }
 
@@ -27,6 +30,7 @@ impl RnsPoly {
         Self { coeffs: vec![vec![0u64; params.n]; NUM_Q_PRIMES], form }
     }
 
+    /// Ring degree (coefficients per residue vector).
     pub fn n(&self) -> usize {
         self.coeffs[0].len()
     }
@@ -72,6 +76,46 @@ impl RnsPoly {
                 a[j] = mul_mod(a[j], b[j], q);
             }
         }
+    }
+
+    /// `a ∘ b` pointwise into a fresh poly (both NTT form) — single pass,
+    /// no zero-fill of the output (each residue vec is built directly from
+    /// the product stream).
+    pub fn mul_pointwise(a: &RnsPoly, b: &RnsPoly, params: &Params) -> RnsPoly {
+        assert_eq!(a.form, Form::Ntt, "pointwise mul requires NTT form");
+        assert_eq!(b.form, Form::Ntt, "pointwise mul requires NTT form");
+        let coeffs = params
+            .qs
+            .iter()
+            .enumerate()
+            .map(|(i, &q)| {
+                a.coeffs[i]
+                    .iter()
+                    .zip(&b.coeffs[i])
+                    .map(|(&x, &y)| mul_mod(x, y, q))
+                    .collect()
+            })
+            .collect();
+        RnsPoly { coeffs, form: Form::Ntt }
+    }
+
+    /// `self = a ∘ b` pointwise (both NTT form), fully overwriting `self` —
+    /// the single-pass write-into-preallocated-output primitive behind
+    /// [`crate::phe::Evaluator::mult_plain_into`]. `self`'s prior contents
+    /// and form are irrelevant (stale scratch is fine); its dimensions must
+    /// match.
+    pub fn set_mul_pointwise(&mut self, a: &RnsPoly, b: &RnsPoly, params: &Params) {
+        assert_eq!(a.form, Form::Ntt, "pointwise mul requires NTT form");
+        assert_eq!(b.form, Form::Ntt, "pointwise mul requires NTT form");
+        debug_assert_eq!(self.n(), a.n());
+        for (i, &q) in params.qs.iter().enumerate() {
+            let dst = &mut self.coeffs[i];
+            let (x, y) = (&a.coeffs[i], &b.coeffs[i]);
+            for j in 0..dst.len() {
+                dst[j] = mul_mod(x[j], y[j], q);
+            }
+        }
+        self.form = Form::Ntt;
     }
 
     /// `self += a ∘ b` pointwise multiply-accumulate (all NTT form).
@@ -141,6 +185,26 @@ mod tests {
         assert_ne!(a, orig);
         a.negate(&pr);
         assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn set_mul_pointwise_matches_mul_assign() {
+        let pr = params();
+        let mut a = RnsPoly::zero(&pr, Form::Ntt);
+        let mut b = RnsPoly::zero(&pr, Form::Ntt);
+        for i in 0..NUM_Q_PRIMES {
+            for j in 0..pr.n {
+                a.coeffs[i][j] = (j as u64 * 11 + 3) % pr.qs[i];
+                b.coeffs[i][j] = (j as u64 * 5 + 1) % pr.qs[i];
+            }
+        }
+        let mut want = a.clone();
+        want.mul_assign_pointwise(&b, &pr);
+        // Stale scratch destination: garbage contents, wrong form.
+        let mut got = RnsPoly::zero(&pr, Form::Coeff);
+        got.coeffs[0][0] = 999;
+        got.set_mul_pointwise(&a, &b, &pr);
+        assert_eq!(got, want);
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Reusable scratch buffers for the online scoring hot path.
+//!
+//! The CHEETAH server's online phase builds one query-dependent `AddPlain`
+//! operand per (channel × ciphertext) slot: slot residues → plaintext
+//! encoding → Δ-scaled RNS poly → forward NTT. Allocating those three
+//! buffers fresh per slot puts an allocator round-trip (and a cold cache
+//! line sweep) inside the tightest loop of the serving path. An [`Arena`]
+//! instead banks the buffers: a worker checks one out for the duration of a
+//! region, overwrites it completely, and the guard returns it on drop — so
+//! after a brief warm-up the online path performs **zero operand-poly
+//! allocations** (asserted by the protocol's instrumentation test).
+//!
+//! Design notes:
+//!
+//! * The arena is owned (one per `CheetahServer`), not global, so its
+//!   counters are test-isolatable and concurrent deployments in one process
+//!   never share or skew each other's statistics.
+//! * Checkout/check-in take a `Mutex` held only for a `Vec` push/pop —
+//!   tens of nanoseconds against the tens of microseconds a poly operation
+//!   costs, so contention across pool workers is negligible. Each worker
+//!   holds its own guards while it computes (the "per-worker" usage
+//!   pattern); only the free-list is shared.
+//! * Returned buffers contain **stale data**. Every consumer in this crate
+//!   fully overwrites them (`encode_unsigned_into`, `scale_plain_into`,
+//!   `lift_centered_into` write all `n` coefficients of every residue);
+//!   new consumers must follow the same contract.
+//! * The pool is unbounded but naturally sized by peak concurrency: a
+//!   region checks out at most a few buffers per worker thread, and they
+//!   all come back when the region ends.
+
+use super::encoder::Plaintext;
+use super::params::{Params, NUM_Q_PRIMES};
+use super::poly::{Form, RnsPoly};
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Point-in-time arena counters ([`Arena::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// Buffers handed out (hits + fresh allocations).
+    pub checkouts: u64,
+    /// Checkouts that had to allocate because the free-list was empty (or
+    /// held no size-matching buffer). Steady-state serving keeps this flat.
+    pub fresh_allocs: u64,
+    /// Buffers pre-allocated via [`Arena::reserve`] (not counted as fresh).
+    pub reserved: u64,
+}
+
+impl ArenaStats {
+    /// Fraction of checkouts served from the free-list (`1.0` = fully
+    /// warmed; `phe_bench` reports this per workload).
+    pub fn hit_rate(&self) -> f64 {
+        if self.checkouts == 0 {
+            return 1.0;
+        }
+        1.0 - self.fresh_allocs as f64 / self.checkouts as f64
+    }
+}
+
+/// A bank of reusable [`RnsPoly`] / [`Plaintext`] / slot-value buffers with
+/// hit/miss instrumentation. See the module docs for the usage contract.
+#[derive(Default)]
+pub struct Arena {
+    polys: Mutex<Vec<RnsPoly>>,
+    plains: Mutex<Vec<Plaintext>>,
+    slots: Mutex<Vec<Vec<u64>>>,
+    checkouts: AtomicU64,
+    fresh: AtomicU64,
+    reserved: AtomicU64,
+}
+
+impl Arena {
+    /// An empty arena (buffers are banked as guards return them).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-allocate `count` buffers of each kind sized for `params`, so a
+    /// scoring path that never exceeds `count` concurrent checkouts per
+    /// kind performs no allocation at all — not even on its first query.
+    pub fn reserve(&self, params: &Params, count: usize) {
+        let n = params.n;
+        {
+            let mut pool = self.polys.lock().unwrap();
+            for _ in 0..count {
+                pool.push(RnsPoly::zero(params, Form::Coeff));
+            }
+        }
+        {
+            let mut pool = self.plains.lock().unwrap();
+            for _ in 0..count {
+                pool.push(Plaintext { coeffs: vec![0u64; n] });
+            }
+        }
+        {
+            let mut pool = self.slots.lock().unwrap();
+            for _ in 0..count {
+                pool.push(vec![0u64; n]);
+            }
+        }
+        self.reserved.fetch_add(3 * count as u64, Ordering::Relaxed);
+    }
+
+    /// Check out an [`RnsPoly`] sized for `params`, in `form`. Contents are
+    /// stale; the caller must overwrite every coefficient.
+    pub fn poly(&self, params: &Params, form: Form) -> PolyGuard<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let mut poly = {
+            let mut pool = self.polys.lock().unwrap();
+            let found = pool
+                .iter()
+                .rposition(|p| p.coeffs.len() == NUM_Q_PRIMES && p.n() == params.n);
+            found.map(|i| pool.swap_remove(i))
+        }
+        .unwrap_or_else(|| {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+            RnsPoly::zero(params, form)
+        });
+        poly.form = form;
+        PolyGuard { arena: self, poly: Some(poly) }
+    }
+
+    /// Check out a [`Plaintext`] with `n` (stale) coefficients.
+    pub fn plain(&self, n: usize) -> PlainGuard<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let pt = {
+            let mut pool = self.plains.lock().unwrap();
+            let found = pool.iter().rposition(|p| p.coeffs.len() == n);
+            found.map(|i| pool.swap_remove(i))
+        }
+        .unwrap_or_else(|| {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+            Plaintext { coeffs: vec![0u64; n] }
+        });
+        PlainGuard { arena: self, pt: Some(pt) }
+    }
+
+    /// Check out a zeroed slot-value buffer of length `len`.
+    pub fn slots(&self, len: usize) -> SlotsGuard<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let mut buf = {
+            let mut pool = self.slots.lock().unwrap();
+            let found = pool.iter().rposition(|b| b.capacity() >= len);
+            found.map(|i| pool.swap_remove(i))
+        }
+        .unwrap_or_else(|| {
+            self.fresh.fetch_add(1, Ordering::Relaxed);
+            Vec::with_capacity(len)
+        });
+        buf.clear();
+        buf.resize(len, 0);
+        SlotsGuard { arena: self, buf: Some(buf) }
+    }
+
+    /// Point-in-time counters.
+    pub fn stats(&self) -> ArenaStats {
+        ArenaStats {
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            fresh_allocs: self.fresh.load(Ordering::Relaxed),
+            reserved: self.reserved.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Checked-out [`RnsPoly`]; derefs to the poly, returns it on drop.
+pub struct PolyGuard<'a> {
+    arena: &'a Arena,
+    poly: Option<RnsPoly>,
+}
+
+impl Deref for PolyGuard<'_> {
+    type Target = RnsPoly;
+    fn deref(&self) -> &RnsPoly {
+        self.poly.as_ref().expect("guard holds until drop")
+    }
+}
+
+impl DerefMut for PolyGuard<'_> {
+    fn deref_mut(&mut self) -> &mut RnsPoly {
+        self.poly.as_mut().expect("guard holds until drop")
+    }
+}
+
+impl Drop for PolyGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(p) = self.poly.take() {
+            self.arena.polys.lock().unwrap().push(p);
+        }
+    }
+}
+
+/// Checked-out [`Plaintext`]; derefs to the plaintext, returns it on drop.
+pub struct PlainGuard<'a> {
+    arena: &'a Arena,
+    pt: Option<Plaintext>,
+}
+
+impl Deref for PlainGuard<'_> {
+    type Target = Plaintext;
+    fn deref(&self) -> &Plaintext {
+        self.pt.as_ref().expect("guard holds until drop")
+    }
+}
+
+impl DerefMut for PlainGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Plaintext {
+        self.pt.as_mut().expect("guard holds until drop")
+    }
+}
+
+impl Drop for PlainGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(p) = self.pt.take() {
+            self.arena.plains.lock().unwrap().push(p);
+        }
+    }
+}
+
+/// Checked-out slot-value buffer; derefs to `Vec<u64>`, returns on drop.
+pub struct SlotsGuard<'a> {
+    arena: &'a Arena,
+    buf: Option<Vec<u64>>,
+}
+
+impl Deref for SlotsGuard<'_> {
+    type Target = Vec<u64>;
+    fn deref(&self) -> &Vec<u64> {
+        self.buf.as_ref().expect("guard holds until drop")
+    }
+}
+
+impl DerefMut for SlotsGuard<'_> {
+    fn deref_mut(&mut self) -> &mut Vec<u64> {
+        self.buf.as_mut().expect("guard holds until drop")
+    }
+}
+
+impl Drop for SlotsGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(b) = self.buf.take() {
+            self.arena.slots.lock().unwrap().push(b);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Params {
+        Params::new(1024, 20)
+    }
+
+    #[test]
+    fn checkout_return_reuses_buffers() {
+        let pr = params();
+        let arena = Arena::new();
+        {
+            let mut p = arena.poly(&pr, Form::Ntt);
+            p.coeffs[0][0] = 7;
+        } // returned
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 1);
+        assert_eq!(s.fresh_allocs, 1);
+        {
+            let p = arena.poly(&pr, Form::Coeff);
+            assert_eq!(p.form, Form::Coeff, "form is re-set on checkout");
+            assert_eq!(p.coeffs[0][0], 7, "contents are stale by contract");
+        }
+        let s = arena.stats();
+        assert_eq!(s.checkouts, 2);
+        assert_eq!(s.fresh_allocs, 1, "second checkout must hit the free-list");
+        assert!(s.hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn reserve_prevents_fresh_allocs() {
+        let pr = params();
+        let arena = Arena::new();
+        arena.reserve(&pr, 2);
+        assert_eq!(arena.stats().reserved, 6);
+        {
+            let _a = arena.poly(&pr, Form::Coeff);
+            let _b = arena.poly(&pr, Form::Coeff);
+            let _c = arena.plain(pr.n);
+            let _d = arena.slots(100);
+        }
+        assert_eq!(arena.stats().fresh_allocs, 0, "reserved buffers must cover");
+    }
+
+    #[test]
+    fn size_mismatch_allocates_fresh() {
+        let arena = Arena::new();
+        {
+            let _small = arena.poly(&Params::new(1024, 20), Form::Coeff);
+        }
+        {
+            let big = arena.poly(&Params::new(2048, 20), Form::Coeff);
+            assert_eq!(big.n(), 2048);
+        }
+        assert_eq!(arena.stats().fresh_allocs, 2);
+    }
+
+    #[test]
+    fn slots_are_zeroed_and_sized() {
+        let arena = Arena::new();
+        {
+            let mut s = arena.slots(8);
+            s.iter_mut().for_each(|v| *v = 9);
+        }
+        let s = arena.slots(4);
+        assert_eq!(s.len(), 4);
+        assert!(s.iter().all(|&v| v == 0), "slot buffers are re-zeroed");
+    }
+}

@@ -22,10 +22,12 @@ pub struct BitWriter {
 }
 
 impl BitWriter {
+    /// An empty writer.
     pub fn new() -> Self {
         Self { buf: Vec::new(), acc: 0, nbits: 0 }
     }
 
+    /// Append the low `bits` bits of `value` (at most 57 per call).
     pub fn write(&mut self, value: u64, bits: u32) {
         debug_assert!(bits <= 57, "write at most 57 bits at a time");
         debug_assert!(bits == 64 || value < (1u64 << bits));
@@ -38,6 +40,7 @@ impl BitWriter {
         }
     }
 
+    /// Flush the partial byte and return the packed buffer.
     pub fn finish(mut self) -> Vec<u8> {
         if self.nbits > 0 {
             self.buf.push((self.acc & 0xff) as u8);
@@ -61,10 +64,12 @@ pub struct BitReader<'a> {
 }
 
 impl<'a> BitReader<'a> {
+    /// A reader over `buf`, positioned at the first bit.
     pub fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0, acc: 0, nbits: 0 }
     }
 
+    /// Read the next `bits` bits (at most 57; reads past the end yield 0s).
     pub fn read(&mut self, bits: u32) -> u64 {
         debug_assert!(bits <= 57);
         while self.nbits < bits {

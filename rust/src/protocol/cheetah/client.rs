@@ -238,9 +238,11 @@ impl CheetahClient {
         // Decrypt + block-sum (the obscure_dot hot loop): every ciphertext
         // decrypts independently — fan out over the (channel × ct) grid so
         // FC steps (one channel, many ciphertexts) parallelize too — then
-        // block-sum per channel, concatenated in channel order.
+        // block-sum per channel, concatenated in channel order. Both
+        // regions are grained: a decrypt is heavy (floor 2), block sums are
+        // light per channel (floor 8 — FC tails run them inline).
         let enc = &self.enc;
-        let decs: Vec<Vec<i64>> = par::map_indexed(channels * n_cts, |k| {
+        let decs: Vec<Vec<i64>> = par::map_indexed_grained(channels * n_cts, 2, |k| {
             let c = k % n_cts;
             let vals = enc.decrypt_slots(&out_cts[k]);
             let hi = ((c + 1) * n).min(len) - c * n;
@@ -248,7 +250,7 @@ impl CheetahClient {
             vals.truncate(hi);
             vals
         });
-        let y_parts: Vec<Vec<i64>> = par::map_indexed(channels, |ch| {
+        let y_parts: Vec<Vec<i64>> = par::map_indexed_grained(channels, 8, |ch| {
             let mut stream: Vec<i64> = Vec::with_capacity(len);
             for c in 0..n_cts {
                 stream.extend_from_slice(&decs[ch * n_cts + c]);
@@ -291,7 +293,7 @@ impl CheetahClient {
         // Eq. 6 per recovery ciphertext is then pure evaluator work
         // (Mult/Mult/Add/AddPlain) — independent across ciphertexts.
         let (ctx, ev) = (&self.ctx, &self.ev);
-        let rec_out: Vec<Ciphertext> = par::map_indexed(n_rec, |c| {
+        let rec_out: Vec<Ciphertext> = par::map_indexed_grained(n_rec, 2, |c| {
             let lo = c * n;
             let hi = ((c + 1) * n).min(n_out);
             // Eq. 6: Add(Mult([ID1]_S, y), Mult([ID2]_S, ReLU(y))).

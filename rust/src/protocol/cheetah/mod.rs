@@ -35,12 +35,21 @@
 //! of `u64` seeds, so pinned-seed runs are reproducible bit for bit:
 //!
 //! * **server** — engine seed `s` drives key generation, per-block blinds
-//!   `v₁ = ±2^j`, noise targets δ, and per-step `noise_seed`s; inside
-//!   [`server::CheetahServer::step_linear_with`] each output channel
-//!   regenerates its per-tap noise stream from
-//!   `noise_seed ^ (channel << 32)` — one independent stream per channel,
-//!   which is what lets channels fan out across threads without making the
-//!   draw order scheduling-dependent. The in-process runner gives the
+//!   `v₁ = ±2^j`, noise targets δ, and one fresh `u64` noise seed per step;
+//!   that seed expands to a ChaCha20 *key*
+//!   ([`crate::util::rng::ChaCha20Rng::key_from_u64`]) and output channel
+//!   `ch` draws its per-tap noise stream
+//!   `b` from **stream id `ch`** of that key — the same key/stream
+//!   convention the client uses for per-query isolation. Distinct stream
+//!   ids give disjoint keystreams, so channel streams can never collide
+//!   across channels or steps, and channels fan out across threads without
+//!   making the draw order scheduling-dependent. *Compat note:* through
+//!   PR 4 channel streams were derived by seed XOR
+//!   (`noise_seed ^ (channel << 32)`), which could alias across
+//!   channel/step pairs; the key/stream derivation changes the per-tap `b`
+//!   values of a pinned seed (ciphertexts differ from pre-PR-5 runs) but
+//!   **not** the logits — each block's noise still sums exactly to `v₁·δ`,
+//!   which is all the recovery observes. The in-process runner gives the
 //!   client `s + 1`; a [`crate::serve::SecureServer`] hands sessions
 //!   engine seeds `base, base+1, …`; the networked client XORs a 64-bit
 //!   domain constant into its seed so its streams can never collide with a
@@ -245,6 +254,146 @@ mod tests {
         let tail = looped.infer_batch(&inputs[..2]);
         assert_eq!(tail[0].logits, want[0].logits);
         assert_eq!(tail[1].logits, want[1].logits);
+    }
+
+    /// The offline/online attribution contract: with a warm operand cache
+    /// (the default), the online phase of `step_linear_with` constructs and
+    /// allocates **zero** operand polynomials — cached `k'∘v` / `b`
+    /// operands apply directly, and hidden-layer additive operands build in
+    /// reused arena scratch. Instrumented via the server context's
+    /// operand-build counter and the arena's fresh-allocation counter, at
+    /// threads 1/2/8 (bit-exact logits throughout).
+    #[test]
+    fn online_phase_builds_no_operand_polys() {
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "arena".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![
+                crate::nn::Layer::conv(2, 3, 1, 1),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::conv(3, 3, 1, 1),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::fc(3),
+            ],
+        };
+        net.init_weights(31);
+        // Separate (equal) contexts: the server counter must see only
+        // server-side constructions — the client builds its recovery
+        // operands online by design.
+        let server_ctx = std::sync::Arc::new(Context::new(Params::default_params()));
+        let client_ctx = std::sync::Arc::new(Context::new(Params::default_params()));
+        let server =
+            CheetahServer::new(server_ctx.clone(), net, plan, 0.0, 71).expect("valid network");
+        assert!(server.cached_operand_bytes() > 0, "small net must fit the default budget");
+        let mut client = CheetahClient::new(client_ctx, server.spec.clone(), plan, 72);
+        for si in 0..server.spec.steps.len() {
+            let (id1, id2) = server.indicator_cts(si);
+            client.install_indicators(si, id1.to_vec(), id2.to_vec());
+        }
+        let input =
+            Tensor::from_vec((0..25).map(|i| (i as f64 - 12.0) / 13.0).collect(), 1, 5, 5);
+
+        let run = |client: &mut CheetahClient, threads: usize| {
+            crate::par::with_threads(threads, || {
+                client.begin_query(&input);
+                let mut s_share = server.fresh_share();
+                for si in 0..server.spec.steps.len() {
+                    let in_cts = client.step_send(si);
+                    let out = server.step_linear_with(si, &in_cts, &s_share);
+                    if let Some(rec) = client.step_receive(si, &out) {
+                        s_share = server.finish_nonlinear_with(si, &rec);
+                    }
+                }
+                client.logits()
+            })
+        };
+
+        // Cover the worst-case concurrent scratch demand, then warm up.
+        server.scratch().reserve(&server.ctx.params, 16);
+        let want = run(&mut client, 8);
+        let builds0 = server_ctx.operand_builds();
+        let fresh0 = server.scratch().stats().fresh_allocs;
+        for threads in [1usize, 2, 8] {
+            let got = run(&mut client, threads);
+            assert_eq!(got, want, "threads={threads}: logits diverged");
+        }
+        assert_eq!(
+            server_ctx.operand_builds(),
+            builds0,
+            "online phase constructed operand polynomials"
+        );
+        assert_eq!(
+            server.scratch().stats().fresh_allocs,
+            fresh0,
+            "online phase allocated scratch buffers"
+        );
+        assert!(server.scratch().stats().checkouts > 0, "hidden layers must use the arena");
+    }
+
+    /// Cached-operand scoring must be bit-identical to the rebuild-per-query
+    /// (tiled, budget 0) path at every thread count: the cache budget gates
+    /// only *where* operands are built, never the blinding draws — so two
+    /// same-seed deployments agree ciphertext-for-ciphertext.
+    #[test]
+    fn cached_operand_scoring_is_bit_exact_vs_rebuild() {
+        let c = ctx();
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "cachecmp".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![
+                crate::nn::Layer::conv(2, 3, 1, 1),
+                crate::nn::Layer::relu(),
+                crate::nn::Layer::fc(4),
+            ],
+        };
+        net.init_weights(91);
+        let cached =
+            CheetahServer::new(c.clone(), net.clone(), plan, 0.01, 77).expect("valid network");
+        let rebuild = CheetahServer::with_cache_budget(c.clone(), net, plan, 0.01, 77, 0)
+            .expect("valid network");
+        assert!(cached.cached_operand_bytes() > 0, "default budget must cache this net");
+        assert_eq!(rebuild.cached_operand_bytes(), 0, "budget 0 must disable the cache");
+        let mut client_a = CheetahClient::new(c.clone(), cached.spec.clone(), plan, 78);
+        let mut client_b = CheetahClient::new(c.clone(), rebuild.spec.clone(), plan, 78);
+        for si in 0..cached.spec.steps.len() {
+            let (id1, id2) = cached.indicator_cts(si);
+            client_a.install_indicators(si, id1.to_vec(), id2.to_vec());
+            let (id1, id2) = rebuild.indicator_cts(si);
+            client_b.install_indicators(si, id1.to_vec(), id2.to_vec());
+        }
+        let input =
+            Tensor::from_vec((0..25).map(|i| (i as f64 - 10.0) / 15.0).collect(), 1, 5, 5);
+        for threads in [1usize, 2, 8] {
+            crate::par::with_threads(threads, || {
+                client_a.begin_query(&input);
+                client_b.begin_query(&input);
+                let mut sa = cached.fresh_share();
+                let mut sb = rebuild.fresh_share();
+                for si in 0..cached.spec.steps.len() {
+                    let ia = client_a.step_send(si);
+                    let ib = client_b.step_send(si);
+                    let oa = cached.step_linear_with(si, &ia, &sa);
+                    let ob = rebuild.step_linear_with(si, &ib, &sb);
+                    assert_eq!(oa.len(), ob.len());
+                    for (k, (x, y)) in oa.iter().zip(&ob).enumerate() {
+                        assert_eq!(
+                            x.c0, y.c0,
+                            "threads={threads} step {si} ct {k}: products diverged"
+                        );
+                        assert_eq!(x.c1, y.c1);
+                    }
+                    if let Some(ra) = client_a.step_receive(si, &oa) {
+                        let rb = client_b.step_receive(si, &ob).expect("same round shape");
+                        sa = cached.finish_nonlinear_with(si, &ra);
+                        sb = rebuild.finish_nonlinear_with(si, &rb);
+                        assert_eq!(sa, sb, "threads={threads} step {si}: shares diverged");
+                    }
+                }
+                assert_eq!(client_a.logits(), client_b.logits(), "threads={threads}");
+            });
+        }
     }
 
     /// Noise ε must perturb logits but keep them within ε-ish of the clean

@@ -87,12 +87,18 @@ impl ConvPacking {
         let (c, h, w) = self.in_shape;
         assert_eq!(input.len(), c * h * w, "input length mismatch");
         let mut out = vec![T::default(); self.len];
-        // Each output position owns one disjoint block of the slot stream —
-        // parallel across positions, identical values at any thread count.
-        par::for_each_chunk_mut(&mut out, self.block, |pos, chunk| {
-            for (t, slot) in chunk.iter_mut().enumerate() {
-                if let Some(src) = self.tap_source(pos, t) {
-                    *slot = input[src];
+        // Each output position owns one disjoint block of the slot stream.
+        // One position's block is tiny (c·r² copies), so chunks coalesce
+        // several positions to amortize the per-chunk dispatch handshake —
+        // values are identical at any grouping and thread count.
+        let per_chunk = (2048 / self.block).max(1);
+        par::for_each_chunk_mut(&mut out, self.block * per_chunk, |ci, chunk| {
+            for (k, block) in chunk.chunks_mut(self.block).enumerate() {
+                let pos = ci * per_chunk + k;
+                for (t, slot) in block.iter_mut().enumerate() {
+                    if let Some(src) = self.tap_source(pos, t) {
+                        *slot = input[src];
+                    }
                 }
             }
         });

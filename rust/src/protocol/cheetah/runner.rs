@@ -235,11 +235,18 @@ impl CheetahRunner {
         let fresh = ciphertext_bytes(params, true) as u64;
         let eval = ciphertext_bytes(params, false) as u64;
         let link = self.channel.link;
-        let offline_time = self.server.timers().offline;
+        // Take (and zero) the accumulated offline time once for the whole
+        // batch — mirroring the looped path, where the first `infer`
+        // reports it and later ones report ~0. Summing a batch's reports
+        // therefore counts the offline cost once, not N times, and a later
+        // single `infer` doesn't re-report it. Offline accrued *during*
+        // the batch (tiled operand rebuilds on over-budget steps) is
+        // collected after the region and folded into query 0's report too.
+        let offline_time = self.server.reset_timers().offline;
         let server = &self.server;
         let client = &self.client;
         let n_steps = server.spec.steps.len();
-        par::map_indexed(inputs.len(), |i| {
+        let mut reports = par::map_indexed(inputs.len(), |i| {
             let t0 = Instant::now();
             let mut q = client.start_query(&inputs[i], base + i as u64);
             let mut s_share = server.fresh_share();
@@ -275,9 +282,14 @@ impl CheetahRunner {
                     ..Default::default()
                 }],
                 offline_bytes: 0,
-                offline_time,
+                offline_time: Duration::ZERO,
                 wire_time: wire,
             }
-        })
+        });
+        let in_batch = self.server.reset_timers().offline;
+        if let Some(first) = reports.first_mut() {
+            first.offline_time = offline_time + in_batch;
+        }
+        reports
     }
 }

@@ -23,15 +23,34 @@ use crate::fixed::ScalePlan;
 
 use crate::nn::Network;
 use crate::par;
-use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, OpCounts, PlainOperand};
+use crate::phe::params::NUM_Q_PRIMES;
+use crate::phe::scratch::Arena;
+use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, Form, OpCounts, PlainOperand};
 use crate::util::rng::ChaCha20Rng;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Per-tap additive-noise magnitude bound (see `fixed` docs: products ≤
 /// ~2^21, noise ≤ 2^17 keeps every slot within ±(p−1)/2).
 pub const NOISE_BOUND: i64 = 1 << 17;
+
+/// Default per-step operand-cache budget in bytes: the `CHEETAH_OPERAND_CACHE_MB`
+/// env var, else 256 MB. Steps whose prepared-operand footprint fits the
+/// budget cache everything at [`CheetahServer::refresh_blinding`] time and
+/// score with **zero** per-query operand construction; over-budget steps
+/// (paper-scale VGG conv grids) fall back to tiled per-query construction
+/// whose transient memory is bounded by the same budget per tile.
+fn default_operand_cache_bytes() -> usize {
+    static BUDGET: OnceLock<usize> = OnceLock::new();
+    *BUDGET.get_or_init(|| {
+        let mb = std::env::var("CHEETAH_OPERAND_CACHE_MB")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .unwrap_or(256);
+        mb.saturating_mul(1024 * 1024)
+    })
+}
 
 /// Online/offline compute timer snapshot ([`CheetahServer::timers`]).
 #[derive(Clone, Copy, Debug, Default)]
@@ -76,7 +95,14 @@ impl TimerCell {
     }
 }
 
-/// Offline material for one step.
+/// Offline material for one step: the blinding draws plus the prepared
+/// operand cache. The cached components are what make the online phase of
+/// [`CheetahServer::step_linear_with`] construction-free — they are built
+/// once per [`CheetahServer::refresh_blinding`] and reused by every query
+/// (GAZELLE/GALA hoist exactly this plaintext-operand preparation offline).
+/// Each component is cached only while the step fits the per-step budget
+/// ([`default_operand_cache_bytes`]); `None` means the scoring path builds
+/// it per query, tile by tile, with offline attribution.
 struct PreparedStep {
     /// Quantized kernel taps per output channel (weights pre-divided by the
     /// inherited pool divisor): `kq[channel][tap]`.
@@ -88,13 +114,25 @@ struct PreparedStep {
     v_int: Vec<i64>,
     /// Noise targets `v₁·δ` per output index, at the product scale.
     targets: Vec<i64>,
-    /// Seed for regenerating the per-tap noise stream `b` (not stored:
-    /// regenerating is cheaper than holding `len × channels` words).
-    noise_seed: u64,
+    /// ChaCha20 key for the per-tap noise streams `b`: channel `ch` draws
+    /// from stream id `ch` of this key, so channel streams are disjoint by
+    /// the cipher's nonce separation (no seed-XOR collisions across
+    /// channels or steps — see the `protocol::cheetah` module docs).
+    noise_key: [u8; 32],
     /// Server-encrypted polar indicators, output-indexed packing
     /// (transmitted to the client in the offline phase).
     id1: Vec<Ciphertext>,
     id2: Vec<Ciphertext>,
+    /// NTT-form `MultPlain` operands `k'∘v`, one per (channel × input-ct)
+    /// slot, channel-major.
+    kv_ops: Option<Vec<PlainOperand>>,
+    /// First step only: `AddPlain` operands of `b` alone (the first layer's
+    /// whole additive operand — the server share is zero on a fresh query).
+    b_ops: Option<Vec<PlainOperand>>,
+    /// Hidden steps: per-channel noise-stream residues mod p, indexed
+    /// `[channel][stream position]` — the query-independent half of the
+    /// online `k'v∘T(share_S) + b` operand.
+    noise_res: Option<Vec<Vec<u64>>>,
 }
 
 /// The server side of the CHEETAH protocol. Owns a shared `Arc<Context>`,
@@ -130,6 +168,12 @@ pub struct CheetahServer {
     share: Vec<u64>,
     rng: ChaCha20Rng,
     timers: TimerCell,
+    /// Per-step byte budget for the prepared-operand cache (and the bound
+    /// on per-tile transient memory when a step overflows it).
+    cache_budget: usize,
+    /// Reusable scratch buffers for the online phase's query-dependent
+    /// `AddPlain` operands (see [`crate::phe::scratch`]).
+    scratch: Arena,
 }
 
 impl CheetahServer {
@@ -161,6 +205,36 @@ impl CheetahServer {
         epsilon: f64,
         seed: u64,
     ) -> Self {
+        Self::with_spec_and_cache(ctx, net, spec, plan, epsilon, seed, default_operand_cache_bytes())
+    }
+
+    /// Like [`CheetahServer::new`] with an explicit per-step operand-cache
+    /// budget in bytes (`0` disables caching entirely — every query rebuilds
+    /// its operands tile by tile, the pre-cache behavior). The budget never
+    /// affects the blinding draws, so two servers with the same seed and
+    /// different budgets produce bit-identical ciphertexts and logits (the
+    /// cached-vs-rebuild equivalence test relies on this).
+    pub fn with_cache_budget(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+        cache_bytes: usize,
+    ) -> Result<Self, SpecError> {
+        let spec = ProtocolSpec::compile(&net)?;
+        Ok(Self::with_spec_and_cache(ctx, net, spec, plan, epsilon, seed, cache_bytes))
+    }
+
+    fn with_spec_and_cache(
+        ctx: Arc<Context>,
+        net: Network,
+        spec: ProtocolSpec,
+        plan: ScalePlan,
+        epsilon: f64,
+        seed: u64,
+        cache_bytes: usize,
+    ) -> Self {
         let mut rng = ChaCha20Rng::from_u64_seed(seed);
         let enc = Encryptor::new(ctx.clone(), &mut rng);
         plan.check_fits(ctx.params.p);
@@ -176,13 +250,25 @@ impl CheetahServer {
             ctx,
             rng,
             timers: TimerCell::default(),
+            cache_budget: cache_bytes,
+            scratch: Arena::new(),
         };
         server.refresh_blinding();
         server
     }
 
-    /// (Re-)sample all per-query blinding material and re-encrypt the
-    /// indicator ciphertexts — the offline phase.
+    /// The scratch arena backing the online phase (hit-rate metering and
+    /// test instrumentation; see [`crate::phe::scratch`]).
+    pub fn scratch(&self) -> &Arena {
+        &self.scratch
+    }
+
+    /// (Re-)sample all per-query blinding material, re-encrypt the
+    /// indicator ciphertexts, and rebuild the prepared-operand cache — the
+    /// offline phase. After this returns, every budget-fitting step scores
+    /// with zero per-query operand construction (the blinding-pool
+    /// background builds in `serve::precompute` therefore bank fully
+    /// prepared operands, not just blinding draws).
     pub fn refresh_blinding(&mut self) {
         let t0 = Instant::now();
         let prod_scale = self.plan.product();
@@ -239,18 +325,122 @@ impl CheetahServer {
                 }
                 (id1, id2)
             };
-            steps.push(PreparedStep {
+            let mut prep = PreparedStep {
                 kq,
                 blinds,
                 v_int,
                 targets,
-                noise_seed: self.rng.next_u64(),
+                noise_key: ChaCha20Rng::key_from_u64(self.rng.next_u64()),
                 id1,
                 id2,
-            });
+                kv_ops: None,
+                b_ops: None,
+                noise_res: None,
+            };
+            self.build_operand_cache(si, step, &mut prep);
+            steps.push(prep);
         }
         self.steps = steps;
+        // Warm the scratch arena once (only on the first refresh), sized
+        // for the wider of the current `par` setting and the host's
+        // parallelism — so a first query at any in-hardware thread count
+        // allocates nothing in the online phase. An explicit
+        // `with_threads` scope wider than the host may still fresh-allocate
+        // a few buffers on its first query (they bank for reuse after);
+        // tests that assert strict zero-alloc reserve explicitly.
+        if self.scratch.stats().reserved == 0 {
+            let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            self.scratch.reserve(&self.ctx.params, par::threads().max(host) + 2);
+        }
         self.timers.add_offline(t0.elapsed());
+    }
+
+    /// Build the prepared-operand cache for one step, component by
+    /// component in payoff order (`kv_ops`, then the additive material)
+    /// while the step stays within the per-step budget. Uses no RNG state —
+    /// the blinding draws above are identical whatever the budget, which is
+    /// what keeps cached and rebuild-per-query deployments bit-identical.
+    /// Transient memory is bounded per worker (one channel's noise stream /
+    /// one slot's tap values), never the whole (channel × ct) grid.
+    fn build_operand_cache(&self, si: usize, step: &StepSpec, prep: &mut PreparedStep) {
+        let n = self.ctx.params.n;
+        let len = step.linear.stream_len();
+        let n_cts = step.linear.num_in_cts(n);
+        let channels = step.linear.num_channels();
+        let grid = channels * n_cts;
+        let poly_mem = NUM_Q_PRIMES * n * 8;
+        let mut remaining = self.cache_budget;
+
+        let kv_cost = grid * poly_mem;
+        if kv_cost <= remaining {
+            remaining -= kv_cost;
+            let prep_ref: &PreparedStep = prep;
+            let ops = par::map_indexed(grid, |k| {
+                self.build_kv_op(prep_ref, step, k / n_cts, k % n_cts)
+            });
+            prep.kv_ops = Some(ops);
+        } else {
+            return; // additive material is cheaper but useless without kv_ops
+        }
+
+        if si == 0 {
+            // First layer: the whole additive operand is query-independent.
+            if grid * poly_mem <= remaining {
+                let prep_ref: &PreparedStep = prep;
+                let per_channel: Vec<Vec<PlainOperand>> = par::map_indexed(channels, |ch| {
+                    let noise = self.channel_noise_residues(prep_ref, step, ch);
+                    (0..n_cts)
+                        .map(|c| {
+                            let lo = c * n;
+                            let hi = ((c + 1) * n).min(len);
+                            self.ctx.add_operand_unsigned(&noise[lo..hi])
+                        })
+                        .collect()
+                });
+                prep.b_ops = Some(per_channel.into_iter().flatten().collect());
+            }
+        } else if channels * len * 8 <= remaining {
+            // Hidden layers: the additive operand is query-dependent, but
+            // its noise half is not — cache the residue streams.
+            let prep_ref: &PreparedStep = prep;
+            let noise = par::map_indexed(channels, |ch| {
+                self.channel_noise_residues(prep_ref, step, ch)
+            });
+            prep.noise_res = Some(noise);
+        }
+    }
+
+    /// One channel's full noise stream `b` as residues mod p, drawn from
+    /// stream `ch` of the step's noise key (domain-separated per channel —
+    /// thread-count-invariant by construction).
+    fn channel_noise_residues(&self, prep: &PreparedStep, step: &StepSpec, ch: usize) -> Vec<u64> {
+        let p = self.ctx.params.p;
+        let blocks = step.linear.blocks_per_channel();
+        let block = step.linear.block_len();
+        let mut nrng = ChaCha20Rng::new(&prep.noise_key, ch as u64);
+        let mut out = Vec::with_capacity(blocks * block);
+        for blk in 0..blocks {
+            for b in sample_block_noise(block, prep.targets[ch * blocks + blk], NOISE_BOUND, &mut nrng)
+            {
+                out.push(if b < 0 { p - ((-b) as u64 % p) } else { b as u64 % p });
+            }
+        }
+        out
+    }
+
+    /// The `MultPlain` operand `k'∘v` for one (channel, input-ct) slot.
+    fn build_kv_op(&self, prep: &PreparedStep, step: &StepSpec, ch: usize, c: usize) -> PlainOperand {
+        let n = self.ctx.params.n;
+        let len = step.linear.stream_len();
+        let blocks = step.linear.blocks_per_channel();
+        let block = step.linear.block_len();
+        let lo = c * n;
+        let hi = ((c + 1) * n).min(len);
+        let mut kv = vec![0i64; hi - lo];
+        for (slot, g) in (lo..hi).enumerate() {
+            kv[slot] = kv_int(prep, &step.linear, blocks, block, ch, g);
+        }
+        self.ctx.mult_operand(&kv)
     }
 
     /// Quantized kernel taps per channel, with the inherited pool divisor
@@ -326,12 +516,27 @@ impl CheetahServer {
     /// current activation (`share`; zeros for step 0). Output:
     /// channel-major obscured-product ciphertexts (`channels × num_in_cts`).
     ///
-    /// The per-output-channel streams are the paper's embarrassingly
-    /// parallel unit: every channel's multiplier, noise stream, and
-    /// Mult+Add chain is independent, so both phases fan out across the
-    /// [`crate::par`] pool. Results land in channel-ordered slots and each
-    /// channel's noise stream comes from its own deterministically-seeded
-    /// RNG, so the output is bit-identical at every thread count.
+    /// **Offline/online split.** With a warm operand cache (every step that
+    /// fits the per-step budget — see [`CheetahServer::with_cache_budget`])
+    /// the online phase is exactly the paper's claim: NTT ingest, then one
+    /// `MultPlain` (cached `k'∘v` operand, built single-pass into the
+    /// output ciphertext) plus one `AddPlain` per output ciphertext, each
+    /// landing in its pre-sized channel-major slot. Hidden layers
+    /// additionally build their query-dependent additive operand
+    /// `k'v∘T(share_S) + b` — inherently online work — but into reusable
+    /// arena scratch, so the online phase **allocates no operand
+    /// polynomials** (asserted by `online_phase_builds_no_operand_polys`).
+    /// Only over-budget steps construct operands here, tile by tile
+    /// (offline-attributed, transient memory bounded by the budget per
+    /// tile — never the whole (channel × ct) grid).
+    ///
+    /// The (channel × input-ct) grid is the paper's embarrassingly parallel
+    /// unit and fans out across the [`crate::par`] pool (via
+    /// [`crate::par::map_indexed_grained`], so tiny FC-tail grids skip the
+    /// fork-join handshake). Results land in channel-ordered slots and each
+    /// channel's
+    /// noise stream comes from its own ChaCha20 stream id, so the output is
+    /// bit-identical at every thread count.
     ///
     /// `&self`: all mutable state is the caller-owned `share`, so any
     /// number of queries may score concurrently against one prepared
@@ -345,8 +550,9 @@ impl CheetahServer {
     ) -> Vec<Ciphertext> {
         let step = &self.spec.steps[si];
         let prep = &self.steps[si];
-        let n = self.ctx.params.n;
-        let p = self.ctx.params.p;
+        let params = &self.ctx.params;
+        let n = params.n;
+        let p = params.p;
         let len = step.linear.stream_len();
         let n_cts = step.linear.num_in_cts(n);
         assert_eq!(in_cts.len(), n_cts, "wrong input ciphertext count");
@@ -355,137 +561,108 @@ impl CheetahServer {
         let block = step.linear.block_len();
 
         // Online: convert incoming ciphertexts to NTT form once (parallel
-        // batch), and expand the server's share T(share_S) — zero for the
-        // first layer of a fresh query (client holds the input).
+        // batch), and expand the server's share T(share_S). A fresh query's
+        // first layer (zero server share, cached `b` operands) skips the
+        // expansion; a zero share *without* cached operands still runs the
+        // generic path — T(0) = 0, so the additive operand degenerates to
+        // `b` alone and the result is identical.
         let t_on = Instant::now();
         let mut in_ntt: Vec<Ciphertext> = in_cts.to_vec();
         self.ev.to_ntt_batch(&mut in_ntt);
         let share_zero = share.iter().all(|&s| s == 0);
-        let ts: Vec<u64> = if share_zero {
-            Vec::new()
-        } else {
-            step.linear.expand_u64(share)
-        };
+        let first_layer = share_zero && prep.b_ops.is_some();
+        let ts: Vec<u64> =
+            if first_layer { Vec::new() } else { step.linear.expand_u64(share) };
         self.timers.add_online(t_on.elapsed());
 
-        /// Query-independent material for one (channel, input-ct) slot.
-        /// Holding the whole grid at once costs ~1 extra operand poly per
-        /// output ciphertext (≈ +50% over the output itself, which is
-        /// inherently `channels × n_cts` two-poly ciphertexts) — the price
-        /// of splitting operand construction (offline-attributed) from the
-        /// Mult+Add streams (online). Per-slot scratch that one phase does
-        /// not need is not retained (see ROADMAP: scratch reuse).
-        struct SlotOps {
-            /// Raw `k'·v` slot values — retained only for hidden layers,
-            /// where the online additive operand needs them again.
-            kv_slot: Option<Vec<i64>>,
-            /// The `MultPlain` operand `k'∘v`.
-            kv_op: PlainOperand,
-            /// First layer only: the `AddPlain` operand for `b` alone.
-            b_op: Option<PlainOperand>,
-        }
+        // Tile sizing: fully cached steps stream the whole grid as one
+        // "tile" with no offline block at all; uncached steps bound their
+        // per-tile operand memory by the cache budget.
+        let need_kv = prep.kv_ops.is_none();
+        let need_noise = !first_layer && prep.noise_res.is_none();
+        let tile_ch = if need_kv || need_noise {
+            let poly_mem = NUM_Q_PRIMES * n * 8;
+            let per_ch = n_cts * poly_mem + len * 8;
+            (self.cache_budget / per_ch.max(1)).clamp(1, channels)
+        } else {
+            channels
+        };
 
         let ev = &self.ev;
         let ctx = &self.ctx;
         let linear = &step.linear;
-
-        // Offline-attributed (all query-independent), wall-timed around
-        // the parallel regions. First the per-channel noise streams — each
-        // channel draws from its own deterministically-seeded RNG, exactly
-        // the sequential derivation, so values are thread-count-invariant.
-        // Then the blinded-kernel multipliers, fanned out over the finer
-        // (channel × input-ct) grid so FC steps (one channel, many
-        // ciphertexts) parallelize just as well as conv steps.
-        let t_off = Instant::now();
-        let b_streams: Vec<Vec<i64>> = par::map_indexed(channels, |ch| {
-            let mut nrng = ChaCha20Rng::from_u64_seed(prep.noise_seed ^ (ch as u64) << 32);
-            let mut b_stream: Vec<i64> = Vec::with_capacity(blocks * block);
-            for blk in 0..blocks {
-                let out_idx = ch * blocks + blk;
-                b_stream.extend(sample_block_noise(
-                    block,
-                    prep.targets[out_idx],
-                    NOISE_BOUND,
-                    &mut nrng,
-                ));
-            }
-            b_stream
-        });
-        let slot_ops: Vec<SlotOps> = par::map_indexed(channels * n_cts, |k| {
-            let (ch, c) = (k / n_cts, k % n_cts);
-            let lo = c * n;
-            let hi = ((c + 1) * n).min(len);
-            let mut kv_slot = vec![0i64; hi - lo];
-            for (slot, g) in (lo..hi).enumerate() {
-                let (blk, tap) = (g / block, g % block);
-                let kq = match linear {
-                    LinearSpec::Conv(_) => prep.kq[ch][tap],
-                    LinearSpec::Fc(_) => prep.kq[blk][tap],
-                };
-                kv_slot[slot] = kq * prep.v_int[ch * blocks + blk];
-            }
-            let kv_op = ctx.mult_operand(&kv_slot);
-            let b_op = if share_zero {
-                // First layer: the additive operand is b alone —
-                // query-independent, so built (and attributed) here.
-                let b_res: Vec<u64> = (lo..hi)
-                    .map(|g| {
-                        let bb = b_streams[ch][g];
-                        if bb < 0 {
-                            p - ((-bb) as u64 % p)
-                        } else {
-                            bb as u64 % p
-                        }
+        let mut out: Vec<Ciphertext> = Vec::with_capacity(channels * n_cts);
+        let mut tlo = 0;
+        while tlo < channels {
+            let thi = (tlo + tile_ch).min(channels);
+            // Offline-attributed: per-tile operand construction for steps
+            // whose prepared grid overflowed the cache budget. Transient:
+            // one tile's operands, freed before the next tile.
+            let (tile_kv, tile_noise) = if need_kv || need_noise {
+                let t_off = Instant::now();
+                let tile_noise: Option<Vec<Vec<u64>>> = need_noise.then(|| {
+                    par::map_indexed_grained(thi - tlo, 2, |i| {
+                        self.channel_noise_residues(prep, step, tlo + i)
                     })
-                    .collect();
-                Some(ctx.add_operand_unsigned(&b_res))
+                });
+                let tile_kv: Option<Vec<PlainOperand>> = need_kv.then(|| {
+                    par::map_indexed_grained((thi - tlo) * n_cts, 2, |k| {
+                        self.build_kv_op(prep, step, tlo + k / n_cts, k % n_cts)
+                    })
+                });
+                self.timers.add_offline(t_off.elapsed());
+                (tile_kv, tile_noise)
             } else {
-                None
+                (None, None)
             };
-            SlotOps { kv_slot: (!share_zero).then_some(kv_slot), kv_op, b_op }
-        });
-        // First layer: the online phase reads neither b nor kv_slot —
-        // free the streams before fanning out the Mult+Add grid.
-        let b_streams = if share_zero { Vec::new() } else { b_streams };
-        self.timers.add_offline(t_off.elapsed());
 
-        // Online: for hidden layers the query-dependent additive operands
-        // `k'v∘T(share_S) + b`, then the paper's 1 Mult + 1 Add per
-        // ciphertext — the (channel × input-ct) grid fanned out in
-        // parallel, each result written to its channel-major slot.
-        let t_on = Instant::now();
-        let out: Vec<Ciphertext> = par::map_indexed(channels * n_cts, |k| {
-            let (ch, c) = (k / n_cts, k % n_cts);
-            let sops = &slot_ops[k];
-            let in_ct = &in_ntt[c];
-            let lo = c * n;
-            let hi = ((c + 1) * n).min(len);
-            let online_add;
-            let add_op = match &sops.b_op {
-                Some(op) => op,
-                None => {
-                    let kv_slot =
-                        sops.kv_slot.as_deref().expect("hidden layers retain kv_slot");
-                    let add_res: Vec<u64> = (lo..hi)
-                        .map(|g| {
-                            let bb = b_streams[ch][g];
-                            let b_res =
-                                if bb < 0 { p - ((-bb) as u64 % p) } else { bb as u64 % p };
-                            let kv = kv_slot[g - lo];
+            // Online: 1 MultPlain + 1 AddPlain per ciphertext over the tile
+            // grid, each result written into its preallocated channel-major
+            // slot; hidden-layer additive operands build in arena scratch.
+            let t_on = Instant::now();
+            let tile_out: Vec<Ciphertext> =
+                par::map_indexed_grained((thi - tlo) * n_cts, 2, |k| {
+                    let (ch_rel, c) = (k / n_cts, k % n_cts);
+                    let ch = tlo + ch_rel;
+                    let gk = ch * n_cts + c;
+                    let kv_op: &PlainOperand = match &prep.kv_ops {
+                        Some(ops) => &ops[gk],
+                        None => &tile_kv.as_ref().expect("tile kv ops built")[k],
+                    };
+                    // Single-pass product straight into this slot's output
+                    // ciphertext (no clone, no zero-fill).
+                    let mut prod = ev.mult_plain(&in_ntt[c], kv_op);
+                    if first_layer {
+                        let b_ops = prep.b_ops.as_ref().expect("first-layer ops cached");
+                        ev.add_plain(&mut prod, &b_ops[gk]);
+                    } else {
+                        let noise: &[u64] = match &prep.noise_res {
+                            Some(nr) => &nr[ch],
+                            None => &tile_noise.as_ref().expect("tile noise built")[ch_rel],
+                        };
+                        let lo = c * n;
+                        let hi = ((c + 1) * n).min(len);
+                        let mut vals = self.scratch.slots(hi - lo);
+                        for (slot, g) in (lo..hi).enumerate() {
+                            let kv = kv_int(prep, linear, blocks, block, ch, g);
                             let kv_res =
                                 if kv < 0 { p - ((-kv) as u64 % p) } else { kv as u64 % p };
-                            (crate::util::math::mul_mod(kv_res, ts[g], p) + b_res) % p
-                        })
-                        .collect();
-                    online_add = ctx.add_operand_unsigned(&add_res);
-                    &online_add
-                }
-            };
-            let mut prod = ev.mult_plain(in_ct, &sops.kv_op);
-            ev.add_plain(&mut prod, add_op);
-            prod
-        });
-        self.timers.add_online(t_on.elapsed());
+                            vals[slot] =
+                                (crate::util::math::mul_mod(kv_res, ts[g], p) + noise[g]) % p;
+                        }
+                        let mut pt = self.scratch.plain(n);
+                        ctx.encoder.encode_unsigned_into(&vals, &mut pt);
+                        let mut poly = self.scratch.poly(params, Form::Coeff);
+                        ctx.scale_plain_into(&pt, &mut poly);
+                        ctx.to_ntt(&mut poly);
+                        ev.add_plain_raw(&mut prod, &poly);
+                    }
+                    prod
+                });
+            out.extend(tile_out);
+            self.timers.add_online(t_on.elapsed());
+            tlo = thi;
+        }
         out
     }
 
@@ -506,12 +683,13 @@ impl CheetahServer {
         let n_out = step.linear.num_outputs();
         assert_eq!(rec_cts.len(), step.linear.num_recovery_cts(n));
         let t0 = Instant::now();
-        // Each recovery ciphertext decrypts independently — parallel batch,
-        // concatenated in ciphertext order.
+        // Each recovery ciphertext decrypts independently — parallel batch
+        // (grained: single-ciphertext FC tails skip dispatch), concatenated
+        // in ciphertext order.
         let enc = &self.enc;
         let ctx = &self.ctx;
-        let parts: Vec<Vec<u64>> = par::map_collect(rec_cts, |c, ct| {
-            let vals = ctx.encoder.decode_unsigned(&enc.decrypt(ct));
+        let parts: Vec<Vec<u64>> = par::map_indexed_grained(rec_cts.len(), 2, |c| {
+            let vals = ctx.encoder.decode_unsigned(&enc.decrypt(&rec_cts[c]));
             let hi = ((c + 1) * n).min(n_out) - c * n;
             vals[..hi].to_vec()
         });
@@ -524,6 +702,25 @@ impl CheetahServer {
         }
         self.timers.add_online(t0.elapsed());
         share
+    }
+
+    /// Total bytes currently held by the prepared-operand cache across all
+    /// steps (operand polys + noise residues) — the deployment memory spent
+    /// to make the online phase construction-free. `0` means every step
+    /// overflowed the budget (or caching was disabled) and queries rebuild
+    /// operands tile by tile.
+    pub fn cached_operand_bytes(&self) -> usize {
+        let poly_mem = NUM_Q_PRIMES * self.ctx.params.n * 8;
+        self.steps
+            .iter()
+            .map(|s| {
+                s.kv_ops.as_ref().map_or(0, |v| v.len() * poly_mem)
+                    + s.b_ops.as_ref().map_or(0, |v| v.len() * poly_mem)
+                    + s.noise_res
+                        .as_ref()
+                        .map_or(0, |v| v.iter().map(|c| c.len() * 8).sum::<usize>())
+            })
+            .sum()
     }
 
     /// Reset and return evaluator op counters.
@@ -544,6 +741,27 @@ impl CheetahServer {
     pub fn reset_timers(&self) -> Timers {
         self.timers.take()
     }
+}
+
+/// `k'·v` for stream position `g` of channel `ch` — the one place the
+/// Conv-vs-Fc tap indexing swap lives (Conv: taps per channel; FC: taps per
+/// output block), shared by the cached-operand build and the online
+/// additive-operand loop so the two can never disagree.
+#[inline]
+fn kv_int(
+    prep: &PreparedStep,
+    linear: &LinearSpec,
+    blocks: usize,
+    block: usize,
+    ch: usize,
+    g: usize,
+) -> i64 {
+    let (blk, tap) = (g / block, g % block);
+    let kq = match linear {
+        LinearSpec::Conv(_) => prep.kq[ch][tap],
+        LinearSpec::Fc(_) => prep.kq[blk][tap],
+    };
+    kq * prep.v_int[ch * blocks + blk]
 }
 
 /// Sum-pool additive shares (mod p) over `size×size` windows — used by both
@@ -588,13 +806,12 @@ mod tests {
         let b: Vec<u64> = (0..total).map(|_| rng.gen_range(p)).collect();
         let pa = pool_shares(&a, shape, 2, p);
         let pb = pool_shares(&b, shape, 2, p);
+        // Pooled (a+b), computed once — not rebuilt per index.
+        let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| (x + y) % p).collect();
+        let pooled = pool_shares(&sum, shape, 2, p);
         // Reconstructed pooled value == pooled reconstructed value.
         for i in 0..pa.len() {
-            let rec_pool = (pa[i] + pb[i]) % p;
-            // compute pooled (a+b) directly
-            let sum: Vec<u64> = a.iter().zip(&b).map(|(&x, &y)| (x + y) % p).collect();
-            let pooled = pool_shares(&sum, shape, 2, p);
-            assert_eq!(rec_pool, pooled[i]);
+            assert_eq!((pa[i] + pb[i]) % p, pooled[i]);
         }
     }
 }

@@ -3,11 +3,16 @@
 //!
 //! Preparing a CHEETAH serving engine is the expensive, query-independent
 //! part of the protocol: quantize weights, sample the per-block blinding
-//! factors `v₁ = ±2^j` and noise seeds ([`crate::protocol::cheetah::blinding`]),
-//! and encrypt the polar-indicator vectors under the server's key. The pool
-//! runs that work on background threads *ahead of demand* and hands a ready
-//! engine to each new session, so session-setup latency collapses to a
-//! queue pop plus indicator serialization.
+//! factors `v₁ = ±2^j` and noise streams ([`crate::protocol::cheetah::blinding`]),
+//! encrypt the polar-indicator vectors under the server's key, and build
+//! the per-step prepared-operand cache (NTT-form `k'∘v` MultPlain operands,
+//! first-layer `b` AddPlain operands, per-channel noise residues — budget
+//! gated by `CHEETAH_OPERAND_CACHE_MB`). The pool runs that work on
+//! background threads *ahead of demand* and hands a ready engine to each
+//! new session, so session-setup latency collapses to a queue pop plus
+//! indicator serialization — and every query on the session scores through
+//! the construction-free online path. Note the banked engines carry their
+//! operand caches, so `depth` now budgets memory as well as build time.
 //!
 //! The pool is a bounded channel: workers block (politely, with a stop
 //! check) once `depth` engines are banked, so precomputation never runs

@@ -1,20 +1,27 @@
 #!/usr/bin/env python3
-"""Bench-trend gate: compare two BENCH_e2e.json files and fail on regression.
+"""Bench-trend gate: compare BENCH_*.json files and fail on regression.
 
 Usage:
     bench_trend.py PREVIOUS.json CURRENT.json [--max-regression 0.15]
+                   [--phe PREV_PHE.json CURR_PHE.json]
 
 The JSON layout is what `bench_util::Table::write_json` emits: a `headers`
-list and `rows` of {header: string-cell} objects. Rows are keyed by
-(network, framework, threads, batch) — `batch` is absent in pre-batch-PR
-artifacts and defaults to "1" — and the gated metric is `online_ms`
-(whole-batch wall ms for the cheetah-loop/cheetah-batch rows, per-query
-online compute otherwise).
+list and `rows` of {header: string-cell} objects.
 
-Exit codes: 0 pass / skipped (no previous artifact, so nothing to compare
-against — first run on a branch); 1 regression beyond the threshold or
-zero comparable rows (a schema/key rename must not silently disable the
-gate); 2 malformed input.
+Two schemas are gated:
+
+* e2e (positional args): rows keyed by (network, framework, threads, batch)
+  — `batch` is absent in pre-batch-PR artifacts and defaults to "1" — and
+  the gated metric is `online_ms` (whole-batch wall ms for the
+  cheetah-loop/cheetah-batch rows, per-query online compute otherwise).
+* phe (`--phe` pair): rows keyed by (op, n, iters), gated on `total_ms`
+  (a fixed-size op batch, sized above the noise floor). Rows with an empty
+  metric cell (the arena hit-rate row) are informational and skipped.
+
+Exit codes: 0 pass / skipped (no previous artifact for that pair — first
+run on a branch, or an older artifact predating the phe bench); 1
+regression beyond the threshold or zero comparable e2e rows (a schema/key
+rename must not silently disable the gate); 2 malformed input.
 
 Noise guard: CI runners are shared machines, so rows faster than
 MIN_ABS_MS in *both* runs are reported but never gate.
@@ -37,7 +44,7 @@ def load_rows(path):
     return doc["rows"]
 
 
-def key_of(row):
+def e2e_key(row):
     return (
         row.get("network", ""),
         row.get("framework", ""),
@@ -46,35 +53,30 @@ def key_of(row):
     )
 
 
-def metric_of(row):
-    cell = row.get("online_ms", "")
+def phe_key(row):
+    return (row.get("op", ""), row.get("n", ""), row.get("iters", ""))
+
+
+def metric_of(row, field):
+    cell = row.get(field, "")
     try:
         return float(cell)
     except ValueError:
         return None
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("previous")
-    ap.add_argument("current")
-    ap.add_argument(
-        "--max-regression",
-        type=float,
-        default=0.15,
-        help="fail when current online_ms exceeds previous by this fraction",
-    )
-    args = ap.parse_args()
+def compare(label, prev_path, curr_path, key_fn, metric_field, max_regression):
+    """Returns (compared_row_count, regression_list) or None when the
+    previous artifact is missing (skip, not failure)."""
+    if not os.path.exists(prev_path):
+        print(f"[{label}] no previous artifact at {prev_path} — skipping trend gate")
+        return None
+    if not os.path.exists(curr_path):
+        print(f"error: current artifact {curr_path} missing", file=sys.stderr)
+        sys.exit(2)
 
-    if not os.path.exists(args.previous):
-        print(f"no previous artifact at {args.previous} — skipping trend gate")
-        return 0
-    if not os.path.exists(args.current):
-        print(f"error: current artifact {args.current} missing", file=sys.stderr)
-        return 2
-
-    prev = {key_of(r): metric_of(r) for r in load_rows(args.previous)}
-    curr = {key_of(r): metric_of(r) for r in load_rows(args.current)}
+    prev = {key_fn(r): metric_of(r, metric_field) for r in load_rows(prev_path)}
+    curr = {key_fn(r): metric_of(r, metric_field) for r in load_rows(curr_path)}
 
     regressions = []
     compared = 0
@@ -85,41 +87,87 @@ def main():
         compared += 1
         ratio = now / before
         marker = ""
-        if ratio > 1.0 + args.max_regression:
+        if ratio > 1.0 + max_regression:
             if before < MIN_ABS_MS and now < MIN_ABS_MS:
                 marker = "  (noise-exempt: sub-5ms cell)"
             else:
                 marker = "  << REGRESSION"
                 regressions.append((key, before, now, ratio))
         print(
-            f"{'/'.join(key):40s} {before:10.3f} ms -> {now:10.3f} ms"
+            f"[{label}] {'/'.join(key):40s} {before:10.3f} ms -> {now:10.3f} ms"
             f"  ({ratio:5.2f}x){marker}"
         )
+    return compared, regressions
 
-    if compared == 0:
-        # Both artifacts exist but share no (key, metric) rows: almost
-        # certainly a schema/key rename. Fail loudly rather than leaving
-        # the gate permanently green-but-dead; the run after the rename
-        # lands on main compares new-vs-new and goes green again.
-        print(
-            "error: artifacts share zero comparable rows — schema or key "
-            "rename? The trend gate would otherwise be silently disabled.",
-            file=sys.stderr,
-        )
-        return 1
-    if regressions:
-        print(
-            f"\nFAIL: {len(regressions)} row(s) regressed more than "
-            f"{args.max_regression:.0%} in online compute:",
-            file=sys.stderr,
-        )
-        for key, before, now, ratio in regressions:
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("previous")
+    ap.add_argument("current")
+    ap.add_argument(
+        "--max-regression",
+        type=float,
+        default=0.15,
+        help="fail when a gated metric exceeds the previous run by this fraction",
+    )
+    ap.add_argument(
+        "--phe",
+        nargs=2,
+        metavar=("PREV_PHE", "CURR_PHE"),
+        help="additionally gate a BENCH_phe.json pair keyed by (op, n, iters)",
+    )
+    args = ap.parse_args()
+
+    failures = []
+
+    e2e = compare("e2e", args.previous, args.current, e2e_key, "online_ms", args.max_regression)
+    if e2e is not None:
+        compared, regressions = e2e
+        if compared == 0:
+            # Both artifacts exist but share no (key, metric) rows: almost
+            # certainly a schema/key rename. Fail loudly rather than leaving
+            # the gate permanently green-but-dead; the run after the rename
+            # lands on main compares new-vs-new and goes green again.
             print(
-                f"  {'/'.join(key)}: {before:.3f} ms -> {now:.3f} ms ({ratio:.2f}x)",
+                "error: e2e artifacts share zero comparable rows — schema or "
+                "key rename? The trend gate would otherwise be silently "
+                "disabled.",
+                file=sys.stderr,
+            )
+            return 1
+        failures.extend(("e2e", *r) for r in regressions)
+
+    if args.phe:
+        phe = compare("phe", args.phe[0], args.phe[1], phe_key, "total_ms", args.max_regression)
+        if phe is not None:
+            compared, regressions = phe
+            if compared == 0:
+                # A previous artifact predating the phe bench is already a
+                # skip (missing file, handled inside compare). Both files
+                # existing but sharing zero keys is a schema/op rename —
+                # fail loudly, same policy as the e2e gate.
+                print(
+                    "error: phe artifacts share zero comparable rows — "
+                    "schema or op rename? The trend gate would otherwise "
+                    "be silently disabled.",
+                    file=sys.stderr,
+                )
+                return 1
+            failures.extend(("phe", *r) for r in regressions)
+
+    if failures:
+        print(
+            f"\nFAIL: {len(failures)} row(s) regressed more than "
+            f"{args.max_regression:.0%}:",
+            file=sys.stderr,
+        )
+        for label, key, before, now, ratio in failures:
+            print(
+                f"  [{label}] {'/'.join(key)}: {before:.3f} ms -> {now:.3f} ms ({ratio:.2f}x)",
                 file=sys.stderr,
             )
         return 1
-    print(f"\nOK: {compared} row(s) compared, none beyond the threshold")
+    print("\nOK: no gated row beyond the threshold")
     return 0
 
 
