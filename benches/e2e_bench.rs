@@ -23,8 +23,13 @@
 //! (`framework = cheetah-loop` / `cheetah-batch`). `--batch 1` disables
 //! the section.
 //!
+//! `--obs` turns telemetry on for the run and embeds the final
+//! `cheetah::obs` snapshot (span histograms for the phe/protocol/par
+//! layers) as an `"obs"` section of `BENCH_e2e.json`, plus a standalone
+//! `BENCH_e2e_obs.json` that CI uploads next to the bench artifacts.
+//!
 //! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]
-//!       [-- --network netB] [-- --threads 4] [-- --batch 8]`
+//!       [-- --network netB] [-- --threads 4] [-- --batch 8] [-- --obs]`
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
@@ -48,6 +53,11 @@ fn input_for(net: &Network, seed: u64) -> Tensor {
 fn main() {
     let args = BenchArgs::from_env();
     let paper = args.has("--paper");
+    let obs = args.has("--obs");
+    if obs {
+        cheetah::obs::set_level(cheetah::obs::Level::On);
+        cheetah::obs::reset();
+    }
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
     let batch = args.get_usize("--batch", 4).max(1);
     let net_filter = args.get("--network").map(|s| s.to_string());
@@ -317,10 +327,18 @@ fn main() {
     t.print(
         "Table 7 — end-to-end networks (paper: CHEETAH 218x/334x/130x/140x over GAZELLE)",
     );
-    jt.write_json(
-        "BENCH_e2e.json",
-        "e2e networks: online/offline per (network, framework, threads, batch)",
-    )
-    .expect("write BENCH_e2e.json");
-    println!("\nwrote BENCH_e2e.json");
+    let title = "e2e networks: online/offline per (network, framework, threads, batch)";
+    if obs {
+        // One snapshot covers the whole run: the span histograms show
+        // where time went (phe kernels, protocol phases, par decisions)
+        // for every measured cell above.
+        let snap = cheetah::obs::snapshot().to_json();
+        jt.write_json_with_sections("BENCH_e2e.json", title, &[("obs", snap.as_str())])
+            .expect("write BENCH_e2e.json");
+        std::fs::write("BENCH_e2e_obs.json", &snap).expect("write BENCH_e2e_obs.json");
+        println!("\nwrote BENCH_e2e.json (+obs section) and BENCH_e2e_obs.json");
+    } else {
+        jt.write_json("BENCH_e2e.json", title).expect("write BENCH_e2e.json");
+        println!("\nwrote BENCH_e2e.json");
+    }
 }

@@ -12,7 +12,13 @@
 //! * pool effectiveness (engines prebuilt vs built inline).
 //!
 //! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
-//!       [-- --depth 4] [-- --net netA] [-- --threads 4] [-- --batch 8]`
+//!       [-- --depth 4] [-- --net netA] [-- --threads 4] [-- --batch 8]
+//!       [-- --stats]`
+//! `--stats` binds a live [`cheetah::obs::StatsServer`] endpoint and
+//! scrapes it mid-run (server and pool still up), recording blinding-pool
+//! occupancy and the server-side `serve.query` p99 into the `pool_occ` /
+//! `query_p99_ms` columns of `BENCH_serve.json`; without the flag the
+//! columns stay empty. `scripts/bench_trend.py` ignores unknown columns.
 //! `--batch N` makes each session submit its queries as **one**
 //! `infer_batch` call (pipelined over the session's ordered socket) instead
 //! of N separate `infer` calls, so the batch path over real TCP shows up in
@@ -74,6 +80,17 @@ fn main() {
     let net_name = args.get("--net").unwrap_or("small").to_string();
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
     cheetah::par::set_threads(threads);
+    let stats = args.has("--stats");
+    // The endpoint serves the process-global obs snapshot; the secure
+    // server under test runs in this process, so scraping it over HTTP
+    // exercises the exact surface an operator curls in production.
+    let stats_srv = if stats {
+        let srv = cheetah::obs::StatsServer::serve("127.0.0.1:0").expect("bind stats endpoint");
+        println!("telemetry endpoint on http://{}/ (scraped per cell)", srv.addr);
+        Some(srv)
+    } else {
+        None
+    };
 
     let ctx = Arc::new(Context::new(Params::default_params()));
     let plan = ScalePlan::default_plan();
@@ -108,12 +125,19 @@ fn main() {
         "pool_produced",
         "pool_hits",
         "pool_inline",
+        "pool_occ",
+        "query_p99_ms",
     ]);
 
     let session_counts: Vec<usize> =
         [1usize, 2, 4, 8].into_iter().filter(|&s| s <= max_sessions).collect();
     for pool_on in [false, true] {
         for &sessions in &session_counts {
+            // Scope the global obs registry to this cell so the scraped
+            // occupancy gauge and query histogram describe one server.
+            if stats {
+                cheetah::obs::reset();
+            }
             let pool = if pool_on {
                 PoolConfig { depth, workers: 1 }
             } else {
@@ -190,6 +214,29 @@ fn main() {
             let m = server.metrics.summary();
             assert_eq!(m.requests as usize, total, "metered queries mismatch");
             let ps = server.pool_stats();
+            // Scrape the endpoint while the server and its pool are still
+            // up: the occupancy gauge shows engines banked right now and
+            // `serve.query` holds this cell's server-side latencies (ns).
+            // Empty cells when --stats is off or obs is compiled out.
+            let (pool_occ, query_p99_ms) = match &stats_srv {
+                Some(srv) => {
+                    let body =
+                        cheetah::obs::stats::scrape(&srv.addr).expect("scrape stats endpoint");
+                    let snap = cheetah::obs::Snapshot::from_json(&body)
+                        .expect("stats endpoint must serve a schema-valid snapshot");
+                    let occ = snap
+                        .get("serve.pool.occupancy")
+                        .map(|m| m.value.to_string())
+                        .unwrap_or_default();
+                    let p99 = snap
+                        .get("serve.query")
+                        .and_then(|m| m.hist.as_ref().map(|h| h.percentile(99.0)))
+                        .map(|ns| format!("{:.3}", ns as f64 / 1e6))
+                        .unwrap_or_default();
+                    (occ, p99)
+                }
+                None => (String::new(), String::new()),
+            };
             let setup_p50 = p50(&mut setups);
             t.row(&[
                 sessions.to_string(),
@@ -214,6 +261,8 @@ fn main() {
                 ps.produced.to_string(),
                 ps.pool_hits.to_string(),
                 ps.inline_builds.to_string(),
+                pool_occ,
+                query_p99_ms,
             ]);
             server.shutdown();
         }

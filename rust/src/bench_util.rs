@@ -17,9 +17,11 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Median as fractional milliseconds.
     pub fn millis(&self) -> f64 {
         self.median.as_secs_f64() * 1e3
     }
+    /// Median as fractional microseconds.
     pub fn micros(&self) -> f64 {
         self.median.as_secs_f64() * 1e6
     }
@@ -80,10 +82,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers and no rows.
     pub fn new(headers: &[&str]) -> Self {
         Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row; panics if the cell count differs from the headers.
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
@@ -117,6 +121,7 @@ impl Table {
         out
     }
 
+    /// Render to stdout.
     pub fn print(&self, title: &str) {
         print!("{}", self.render(title));
     }
@@ -127,6 +132,22 @@ impl Table {
     /// `serde`); benches use this to persist `BENCH_*.json` so the perf
     /// trajectory is recorded across PRs and CI uploads it as an artifact.
     pub fn write_json(&self, path: impl AsRef<std::path::Path>, title: &str) -> std::io::Result<()> {
+        self.write_json_with_sections(path, title, &[])
+    }
+
+    /// Like [`Table::write_json`], with extra top-level sections appended
+    /// after `"rows"`. Each `(key, raw_json)` pair is emitted as
+    /// `"key": raw_json` **verbatim** — the value must already be valid
+    /// JSON (e.g. an [`crate::obs::Snapshot::to_json`] document, which is
+    /// how `e2e_bench --obs` embeds its `"obs"` section). Consumers that
+    /// only read `"headers"`/`"rows"` (`scripts/bench_trend.py`) ignore
+    /// the extra keys.
+    pub fn write_json_with_sections(
+        &self,
+        path: impl AsRef<std::path::Path>,
+        title: &str,
+        sections: &[(&str, &str)],
+    ) -> std::io::Result<()> {
         fn esc(s: &str) -> String {
             let mut out = String::with_capacity(s.len());
             for c in s.chars() {
@@ -166,7 +187,11 @@ impl Table {
             }
             s.push('\n');
         }
-        s.push_str("  ]\n}\n");
+        s.push_str("  ]");
+        for (key, raw) in sections {
+            s.push_str(&format!(",\n  \"{}\": {}", esc(key), raw));
+        }
+        s.push_str("\n}\n");
         std::fs::write(path, s)
     }
 }
@@ -177,18 +202,23 @@ pub struct BenchArgs {
 }
 
 impl BenchArgs {
+    /// Capture the process arguments (everything after the binary name).
     pub fn from_env() -> Self {
         Self { args: std::env::args().skip(1).collect() }
     }
+    /// Whether the bare `flag` is present.
     pub fn has(&self, flag: &str) -> bool {
         self.args.iter().any(|a| a == flag)
     }
+    /// The value following `flag`, if any.
     pub fn get(&self, flag: &str) -> Option<&str> {
         self.args.iter().position(|a| a == flag).and_then(|i| self.args.get(i + 1)).map(|s| s.as_str())
     }
+    /// The value following `flag` parsed as `usize`, or `default`.
     pub fn get_usize(&self, flag: &str, default: usize) -> usize {
         self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+    /// The value following `flag` parsed as `f64`, or `default`.
     pub fn get_f64(&self, flag: &str, default: f64) -> f64 {
         self.get(flag).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -240,5 +270,22 @@ mod tests {
         assert!(got.contains("\"network\": \"netB \\\"quoted\\\"\""), "{got}");
         assert!(got.contains("\"online ms\": \"3.1\""), "{got}");
         assert_eq!(got.matches('{').count(), 3, "one object per row plus the root: {got}");
+    }
+
+    #[test]
+    fn table_json_embeds_extra_sections_verbatim() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into()]);
+        let path = std::env::temp_dir().join(format!(
+            "cheetah_bench_json_sections_test_{}.json",
+            std::process::id()
+        ));
+        let obs = "{\"version\":1,\"metrics\":[],\"timeline\":[]}";
+        t.write_json_with_sections(&path, "t", &[("obs", obs)]).unwrap();
+        let got = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert!(got.contains(&format!("\"obs\": {obs}")), "{got}");
+        assert!(got.contains("\"rows\": [\n"), "rows section must survive: {got}");
+        assert!(got.trim_end().ends_with('}'), "document must stay closed: {got}");
     }
 }

@@ -18,23 +18,31 @@ use std::time::{Duration, Instant};
 
 /// One queued request: input image (flattened) + reply channel.
 pub struct Request {
+    /// Flattened input pixels.
     pub input: Vec<f64>,
+    /// When the request entered the queue (latency epoch).
     pub enqueued: Instant,
+    /// Where the scored [`Response`] is delivered.
     pub reply: Sender<Response>,
 }
 
 /// Scored response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// Per-class scores.
     pub logits: Vec<f64>,
+    /// Index of the winning class.
     pub argmax: usize,
+    /// Queue-to-reply latency.
     pub latency: Duration,
 }
 
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
+    /// Dispatch as soon as this many requests are queued.
     pub max_batch: usize,
+    /// Dispatch a partial batch after waiting this long for more.
     pub linger: Duration,
 }
 

@@ -1,70 +1,84 @@
 //! Serving metrics: latency percentiles and throughput counters.
+//!
+//! Built on the telemetry histogram ([`crate::obs::Hist`]): recording is
+//! a few relaxed atomic ops with **no lock and no allocation**, and
+//! memory is a fixed bucket array for the life of the process. (The
+//! original implementation pushed every latency into a `Vec` under a
+//! mutex and clone-and-sorted it per summary — unbounded growth and
+//! O(n log n) on the read path.) Percentiles come from the log₂ bucket
+//! layout, accurate to ≤3.1%; `max` stays exact.
 
-use std::sync::Mutex;
+use crate::obs::Hist;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// A concurrent latency/throughput recorder.
 #[derive(Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
-}
-
-#[derive(Default)]
-struct Inner {
-    latencies_us: Vec<u64>,
-    requests: u64,
-    batches: u64,
-    batch_sizes: u64,
+    /// Request latencies in microseconds.
+    latency_us: Hist,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_sizes: AtomicU64,
 }
 
 /// A point-in-time summary.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct Summary {
+    /// Requests recorded so far.
     pub requests: u64,
+    /// Batches dispatched so far.
     pub batches: u64,
+    /// Mean requests per batch (0 when no batch was dispatched).
     pub mean_batch: f64,
+    /// Median request latency (bucket-quantized, ≤3.1% error).
     pub p50: Duration,
+    /// 95th-percentile request latency.
     pub p95: Duration,
+    /// 99th-percentile request latency.
     pub p99: Duration,
+    /// Maximum request latency (exact).
     pub max: Duration,
 }
 
 impl Metrics {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one completed request's end-to-end latency.
     pub fn record_request(&self, latency: Duration) {
-        let mut g = self.inner.lock().unwrap();
-        g.latencies_us.push(latency.as_micros() as u64);
-        g.requests += 1;
+        self.latency_us.record(latency.as_micros() as u64);
+        self.requests.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one dispatched batch of `size` requests.
     pub fn record_batch(&self, size: usize) {
-        let mut g = self.inner.lock().unwrap();
-        g.batches += 1;
-        g.batch_sizes += size as u64;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_sizes.fetch_add(size as u64, Ordering::Relaxed);
     }
 
+    /// Capture a point-in-time summary. Lock-free; concurrent recorders
+    /// may land between the counter and histogram reads.
     pub fn summary(&self) -> Summary {
-        let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
-        lat.sort_unstable();
-        let pick = |q: f64| -> Duration {
-            if lat.is_empty() {
+        let h = self.latency_us.snapshot();
+        let pick = |p: f64| -> Duration {
+            if h.count == 0 {
                 return Duration::ZERO;
             }
-            let idx = ((lat.len() as f64 - 1.0) * q).round() as usize;
-            Duration::from_micros(lat[idx])
+            Duration::from_micros(h.percentile(p))
         };
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batch_sizes = self.batch_sizes.load(Ordering::Relaxed);
         Summary {
-            requests: g.requests,
-            batches: g.batches,
-            mean_batch: if g.batches > 0 { g.batch_sizes as f64 / g.batches as f64 } else { 0.0 },
-            p50: pick(0.50),
-            p95: pick(0.95),
-            p99: pick(0.99),
-            max: pick(1.0),
+            requests: self.requests.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches > 0 { batch_sizes as f64 / batches as f64 } else { 0.0 },
+            p50: pick(50.0),
+            p95: pick(95.0),
+            p99: pick(99.0),
+            max: if h.count == 0 { Duration::ZERO } else { Duration::from_micros(h.max) },
         }
     }
 }
@@ -85,7 +99,7 @@ mod tests {
         assert_eq!(s.requests, 100);
         assert_eq!(s.mean_batch, 6.0);
         assert!(s.p50 >= Duration::from_micros(4900) && s.p50 <= Duration::from_micros(5200));
-        assert_eq!(s.max, Duration::from_micros(10000));
+        assert_eq!(s.max, Duration::from_micros(10000), "max must stay exact");
         assert!(s.p99 >= s.p95 && s.p95 >= s.p50);
     }
 
@@ -94,5 +108,27 @@ mod tests {
         let s = Metrics::new().summary();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99, Duration::ZERO);
+        assert_eq!(s.max, Duration::ZERO);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        let m = std::sync::Arc::new(Metrics::new());
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for i in 0..250u64 {
+                        m.record_request(Duration::from_micros(100 + t * 250 + i));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = m.summary();
+        assert_eq!(s.requests, 1000);
+        assert_eq!(s.max, Duration::from_micros(100 + 3 * 250 + 249));
     }
 }

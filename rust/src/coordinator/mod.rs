@@ -4,7 +4,8 @@
 //! * [`batcher`] — dynamic request batching (max-batch + linger window),
 //! * [`server`] — framed TCP serving of trained models with per-session
 //!   threads and live metrics,
-//! * [`metrics`] — latency percentiles / throughput counters.
+//! * [`metrics`] — latency percentiles / throughput counters, built on
+//!   the lock-free [`crate::obs`] histogram.
 //!
 //! Two serving paths share this infrastructure: the *plaintext* scorer
 //! (trusted-cloud baseline; runs the PJRT artifacts or the native forward

@@ -18,10 +18,15 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// Client → server: score one image (f64-LE pixel payload).
 pub const TAG_INFER: u8 = 0x01;
+/// Client → server: request a text metrics summary.
 pub const TAG_STATS: u8 = 0x02;
+/// Client → server: close the session.
 pub const TAG_BYE: u8 = 0x03;
+/// Server → client: inference reply (`argmax (u32)` + f64-LE logits).
 pub const TAG_INFER_OK: u8 = 0x81;
+/// Server → client: metrics summary reply (UTF-8 text).
 pub const TAG_STATS_OK: u8 = 0x82;
 
 /// A TCP listener that blocks in `accept` (no busy-poll) but can be stopped
@@ -31,10 +36,12 @@ pub const TAG_STATS_OK: u8 = 0x82;
 pub struct StoppableListener {
     listener: TcpListener,
     stop: Arc<AtomicBool>,
+    /// The locally bound address (resolved, e.g. after a `:0` bind).
     pub addr: std::net::SocketAddr,
 }
 
 impl StoppableListener {
+    /// Bind `addr` (standard `host:port` syntax; port `0` picks a free one).
     pub fn bind(addr: &str) -> std::io::Result<Self> {
         let listener = TcpListener::bind(addr)?;
         let addr = listener.local_addr()?;
@@ -103,6 +110,7 @@ pub struct LiveConns {
 }
 
 impl LiveConns {
+    /// An empty tracker, shared behind an `Arc`.
     pub fn new() -> Arc<Self> {
         Arc::new(Self { inner: Mutex::new(Vec::new()) })
     }
@@ -153,9 +161,12 @@ pub fn stop_accept_thread(
 
 /// A running server handle.
 pub struct Server {
+    /// The bound serving address.
     pub addr: std::net::SocketAddr,
+    /// Live latency/throughput recorder (shared with the batcher).
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
+    /// Total sessions accepted since start.
     pub sessions: Arc<AtomicU64>,
     accept_thread: Mutex<Option<JoinHandle<()>>>,
     live_sessions: Arc<LiveConns>,
@@ -302,10 +313,12 @@ pub struct Client {
 }
 
 impl Client {
+    /// Connect to a running [`Server`].
     pub fn connect(addr: &std::net::SocketAddr) -> std::io::Result<Self> {
         Ok(Self { stream: TcpStream::connect(addr)? })
     }
 
+    /// Score one image; returns `(argmax, logits)`.
     pub fn infer(&mut self, pixels: &[f64]) -> std::io::Result<(usize, Vec<f64>)> {
         let mut payload = Vec::with_capacity(pixels.len() * 8);
         for p in pixels {
@@ -320,6 +333,7 @@ impl Client {
         Ok((argmax, logits))
     }
 
+    /// Fetch the server's text metrics summary.
     pub fn stats(&mut self) -> std::io::Result<String> {
         write_frame(&mut self.stream, TAG_STATS, &[])?;
         let (tag, resp) = read_frame(&mut self.stream)?;
@@ -327,6 +341,7 @@ impl Client {
         Ok(String::from_utf8_lossy(&resp).into_owned())
     }
 
+    /// Announce an orderly close.
     pub fn bye(&mut self) -> std::io::Result<()> {
         write_frame(&mut self.stream, TAG_BYE, &[])
     }

@@ -79,6 +79,7 @@ pub struct Garbler {
 impl Garbler {
     /// Garble `circuit`, returning the garbler state and the tables.
     pub fn garble(circuit: &Circuit, rng: &mut ChaCha20Rng) -> (Self, GarbledCircuit) {
+        let _span = crate::obs::span("gc.garble");
         let mut delta = [0u8; 16];
         rng.fill_bytes(&mut delta);
         delta[0] |= 1; // permute-bit invariant
@@ -151,6 +152,7 @@ pub fn evaluate(
     garbler_labels: &[Label],
     evaluator_labels: &[Label],
 ) -> Vec<bool> {
+    let _span = crate::obs::span("gc.eval");
     let mut labels = vec![[0u8; 16]; circuit.n_wires];
     labels[circuit.one] = one_label;
     for (w, l) in circuit.garbler_inputs.iter().zip(garbler_labels) {

@@ -33,6 +33,12 @@
 //! per-engine scoping via `EngineBuilder::threads` /
 //! [`par::with_threads`]).
 //!
+//! The [`obs`] module is the telemetry subsystem: lock-free counters and
+//! log₂ latency histograms, structured spans through the `phe`, `protocol`,
+//! `gc`, `par`, and `serve` layers, and a JSON snapshot served live by the
+//! secure server's `STATS` frame and the `serve-secure --stats-addr`
+//! endpoint (`CHEETAH_OBS` level knob; `obs-off` feature compiles it out).
+//!
 //! The [`engine`] module is the crate's front door: one build→infer surface
 //! ([`engine::EngineBuilder`] / [`engine::InferenceEngine`]) over plaintext,
 //! CHEETAH, GAZELLE, and networked backends, with a unified
@@ -49,11 +55,9 @@
 // gate and clippy keep newly-warned modules clean thereafter).
 #![warn(missing_docs)]
 
-#[allow(missing_docs)]
 pub mod bench_util;
 #[allow(missing_docs)]
 pub mod complexity;
-#[allow(missing_docs)]
 pub mod coordinator;
 pub mod engine;
 #[allow(missing_docs)]
@@ -62,6 +66,7 @@ pub mod fixed;
 pub mod gc;
 #[allow(missing_docs)]
 pub mod nn;
+pub mod obs;
 pub mod par;
 pub mod phe;
 pub mod protocol;

@@ -6,6 +6,7 @@
 //!                       [--pool-workers N] [--workers N] [--eps E]
 //!                       [--seed S]  (blinding seed; default: OS entropy)
 //!                       [--threads T]  (compute threads; 0 = all cores)
+//!                       [--stats-addr A]  (live telemetry endpoint; e.g. 127.0.0.1:9911)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
 //!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
 //!                                                                      cheetah, gazelle, cheetah-net, all}
@@ -107,6 +108,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             };
             let server =
                 SecureServer::serve(ctx, net, ScalePlan::default_plan(), &addr, cfg)?;
+            // Optional live introspection endpoint: serves the obs snapshot
+            // as JSON over HTTP/1.0 (curl-able; scraped by serve_bench).
+            let stats_addr = arg("--stats-addr", "");
+            let _stats = if stats_addr.is_empty() {
+                None
+            } else {
+                let s = cheetah::obs::StatsServer::serve(&stats_addr)?;
+                println!("telemetry snapshot endpoint on http://{}/", s.addr);
+                Some(s)
+            };
             // cfg.threads is scoped to this server's workers; 0 means the
             // process default.
             let effective_threads =

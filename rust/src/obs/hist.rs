@@ -1,0 +1,347 @@
+//! Lock-free fixed-bucket log₂ histogram with linear sub-buckets.
+//!
+//! The recording path is wait-free and allocation-free: one `fetch_add` on
+//! the count, one on the sum, a `fetch_max`/`fetch_min` pair, and one
+//! `fetch_add` on the owning bucket — all `Relaxed`, so concurrent
+//! recorders never contend on anything but cache lines. Bucket layout is
+//! HDR-style: values below [`SUBS`] get exact unit buckets; above that,
+//! each power-of-two range `[2^k, 2^(k+1))` is split into [`SUBS`] linear
+//! sub-buckets, bounding the relative quantization error of any recorded
+//! value by `1/SUBS` (≈3.1%). Percentile estimates interpolate by rank
+//! inside the owning bucket and are clamped to the exact tracked min/max,
+//! so `max()` is always exact and percentile error is bounded by one
+//! bucket width.
+//!
+//! The histogram is unit-agnostic (it records `u64` values); the
+//! conventions in this crate are nanoseconds for [`crate::obs::span`]
+//! timings and microseconds for [`crate::coordinator::metrics`] request
+//! latencies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// log₂ of the number of linear sub-buckets per power-of-two range.
+pub const SUB_BITS: u32 = 5;
+/// Linear sub-buckets per power-of-two range (relative error ≤ `1/SUBS`).
+pub const SUBS: usize = 1 << SUB_BITS;
+/// Total bucket count covering the full `u64` range.
+/// Groups run `g = 0` (exact values `0..SUBS`) through `g = 64 - SUB_BITS`.
+pub const N_BUCKETS: usize = SUBS * (64 - SUB_BITS as usize + 1);
+
+/// Bucket index owning value `v`. Values below [`SUBS`] map exactly;
+/// larger values map to `32·g + sub` where `g` is the power-of-two group
+/// and `sub` the linear sub-bucket within it.
+pub fn bucket_of(v: u64) -> usize {
+    if v < SUBS as u64 {
+        return v as usize;
+    }
+    let bit_len = 64 - v.leading_zeros(); // ≥ SUB_BITS + 1
+    let g = (bit_len - SUB_BITS) as usize; // ≥ 1
+    let sub = (v >> (g - 1)) as usize - SUBS;
+    g * SUBS + sub
+}
+
+/// Half-open value range `[lo, hi)` covered by bucket `i` (the top bucket
+/// saturates at `u64::MAX`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < SUBS {
+        return (i as u64, i as u64 + 1);
+    }
+    let g = i / SUBS;
+    let sub = (i % SUBS) as u64;
+    let width = 1u64 << (g - 1);
+    let lo = (SUBS as u64 + sub) << (g - 1);
+    (lo, lo.saturating_add(width))
+}
+
+/// A thread-safe latency/value histogram. See the module docs for the
+/// bucket layout and accuracy bounds.
+pub struct Hist {
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+    min: AtomicU64,
+    buckets: Box<[AtomicU64]>,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Hist {
+    /// An empty histogram (allocates its bucket array once, here — the
+    /// recording path never allocates).
+    pub fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            buckets: (0..N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    /// Record one value. Wait-free; safe from any number of threads.
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Values recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (0 when empty).
+    pub fn max(&self) -> u64 {
+        self.max.load(Ordering::Relaxed)
+    }
+
+    /// Fold another histogram into this one (bucket-wise addition; min/max
+    /// combine exactly). Used to aggregate per-shard histograms.
+    pub fn merge(&self, other: &Hist) {
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max.fetch_max(other.max.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min.fetch_min(other.min.load(Ordering::Relaxed), Ordering::Relaxed);
+        for (b, o) in self.buckets.iter().zip(other.buckets.iter()) {
+            b.fetch_add(o.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// Reset every cell to the empty state. Not atomic with respect to
+    /// concurrent recorders — intended for bench/test scoping only.
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+        self.min.store(u64::MAX, Ordering::Relaxed);
+        for b in self.buckets.iter() {
+            b.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// A point-in-time copy. Under concurrent recording the header fields
+    /// and buckets may disagree by in-flight records; percentiles are
+    /// computed from the bucket totals, so they stay internally consistent.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = self.min.load(Ordering::Relaxed);
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if min == u64::MAX { 0 } else { min },
+            max: self.max.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let c = b.load(Ordering::Relaxed);
+                    (c > 0).then_some((i as u64, c))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Hist`]: header fields plus the non-empty
+/// `(bucket index, count)` pairs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Values recorded.
+    pub count: u64,
+    /// Sum of all recorded values.
+    pub sum: u64,
+    /// Exact minimum recorded value (0 when empty).
+    pub min: u64,
+    /// Exact maximum recorded value (0 when empty).
+    pub max: u64,
+    /// Non-empty buckets as `(bucket index, count)` in index order.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+impl HistSnapshot {
+    /// Estimate the `p`-th percentile (`0.0..=100.0`) by rank interpolation
+    /// inside the owning bucket, clamped to the exact min/max. The estimate
+    /// is off by at most one bucket width — a relative error of `1/SUBS`
+    /// (≈3.1%) plus one unit for values above [`SUBS`], and exact below.
+    pub fn percentile(&self, p: f64) -> u64 {
+        let total: u64 = self.buckets.iter().map(|&(_, c)| c).sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().clamp(1.0, total as f64) as u64;
+        let mut cum = 0u64;
+        for &(idx, c) in &self.buckets {
+            if cum + c >= rank {
+                let (lo, hi) = bucket_bounds(idx as usize);
+                let into = (rank - cum) as f64 / c as f64;
+                let est = lo as f64 + (hi - lo) as f64 * into;
+                return (est as u64).clamp(self.min, self.max.max(self.min));
+            }
+            cum += c;
+        }
+        self.max
+    }
+
+    /// Mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::ChaCha20Rng;
+
+    #[test]
+    fn bucket_layout_is_contiguous_and_ordered() {
+        // Every value maps into a bucket whose bounds contain it, and
+        // bucket lows are non-decreasing in index.
+        let probes = [
+            0u64,
+            1,
+            31,
+            32,
+            33,
+            63,
+            64,
+            65,
+            100,
+            1000,
+            5000,
+            u32::MAX as u64,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        for &v in &probes {
+            let i = bucket_of(v);
+            assert!(i < N_BUCKETS, "index {i} out of range for {v}");
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && (v < hi || hi == u64::MAX), "{v} not in [{lo},{hi}) (bucket {i})");
+        }
+        let mut prev = 0u64;
+        for i in 0..N_BUCKETS {
+            let (lo, _) = bucket_bounds(i);
+            assert!(lo >= prev, "bucket {i} lo {lo} below previous {prev}");
+            prev = lo;
+        }
+    }
+
+    /// Satellite requirement: percentile estimates vs an exact sort on
+    /// random samples stay within the advertised one-bucket error bound.
+    #[test]
+    fn percentiles_match_exact_sort_within_bucket_error() {
+        let mut rng = ChaCha20Rng::from_u64_seed(0x0b5);
+        // Mixed magnitudes: exercise the exact region, mid groups, and
+        // large values.
+        let mut vals: Vec<u64> = (0..4000)
+            .map(|i| match i % 4 {
+                0 => rng.next_u64() % 16,
+                1 => 100 + rng.next_u64() % 900,
+                2 => 10_000 + rng.next_u64() % 90_000,
+                _ => rng.next_u64() % 10_000_000,
+            })
+            .collect();
+        let h = Hist::new();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let snap = h.snapshot();
+        for &p in &[1.0, 10.0, 50.0, 90.0, 95.0, 99.0, 99.9] {
+            let rank = ((p / 100.0) * vals.len() as f64).ceil().max(1.0) as usize - 1;
+            let exact = vals[rank];
+            let est = snap.percentile(p);
+            // One bucket width: lo/SUBS relative error, plus one unit for
+            // interpolation rounding.
+            let tol = exact / (SUBS as u64 / 2) + 2;
+            assert!(
+                est.abs_diff(exact) <= tol,
+                "p{p}: est {est} vs exact {exact} (tol {tol})"
+            );
+        }
+        assert_eq!(snap.max, *vals.last().unwrap(), "max must be exact");
+        assert_eq!(snap.min, vals[0], "min must be exact");
+        assert_eq!(snap.count, vals.len() as u64);
+    }
+
+    /// Satellite requirement: merging two histograms equals recording the
+    /// union of their samples.
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut rng = ChaCha20Rng::from_u64_seed(7);
+        let (a, b, both) = (Hist::new(), Hist::new(), Hist::new());
+        for i in 0..500 {
+            let v = rng.next_u64() % 1_000_000;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            both.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.snapshot(), both.snapshot());
+    }
+
+    /// Satellite requirement: concurrent recording at 1, 2, and 8 threads
+    /// loses nothing.
+    #[test]
+    fn concurrent_recording_is_lossless() {
+        for threads in [1usize, 2, 8] {
+            let h = std::sync::Arc::new(Hist::new());
+            let per = 2000u64;
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let h = h.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per {
+                            h.record(t as u64 * 1000 + i);
+                        }
+                    })
+                })
+                .collect();
+            for jh in handles {
+                jh.join().unwrap();
+            }
+            let snap = h.snapshot();
+            assert_eq!(snap.count, threads as u64 * per, "{threads} threads");
+            let bucket_total: u64 = snap.buckets.iter().map(|&(_, c)| c).sum();
+            assert_eq!(bucket_total, snap.count, "{threads} threads: bucket totals");
+            let want_sum: u64 =
+                (0..threads as u64).map(|t| (0..per).map(|i| t * 1000 + i).sum::<u64>()).sum();
+            assert_eq!(snap.sum, want_sum, "{threads} threads: sum");
+        }
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zero() {
+        let snap = Hist::new().snapshot();
+        assert_eq!((snap.count, snap.sum, snap.min, snap.max), (0, 0, 0, 0));
+        assert_eq!(snap.percentile(50.0), 0);
+        assert_eq!(snap.mean(), 0.0);
+        assert!(snap.buckets.is_empty());
+    }
+
+    #[test]
+    fn reset_empties_the_histogram() {
+        let h = Hist::new();
+        for v in [5u64, 500, 50_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 3);
+        h.reset();
+        assert_eq!(h.snapshot(), Hist::new().snapshot());
+    }
+}

@@ -1,0 +1,274 @@
+//! Global metric registry: a lock-free interning table mapping static
+//! metric names to heap-pinned [`Metric`] cells.
+//!
+//! The hot path (`intern` on an already-registered name) is a hash plus a
+//! short linear probe over an `AtomicPtr` slot array — no lock, no
+//! allocation. A name's first use allocates its `Metric` once and
+//! publishes it with a compare-exchange; the loser of a racing first use
+//! frees its candidate and adopts the winner's. Metrics live for the
+//! process lifetime (`Box::leak`), which is what makes handing out
+//! `&'static Metric` references sound.
+//!
+//! The table is fixed-capacity ([`TABLE_SLOTS`]). The span taxonomy is a
+//! few dozen names, so the table never fills in practice; if it ever does,
+//! further names all resolve to one shared `obs.overflow` metric instead
+//! of failing — telemetry degrades, the program does not.
+
+use super::hist::Hist;
+use std::sync::atomic::{AtomicI64, AtomicPtr, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// Slot capacity of the interning table (power of two).
+pub const TABLE_SLOTS: usize = 512;
+
+/// What a metric measures — fixes how its cells are interpreted and how
+/// the snapshot serializes it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MetricKind {
+    /// Monotonic event count (`value` accumulates).
+    Counter,
+    /// Instantaneous level, settable and signed (`value` is last-set/±delta).
+    Gauge,
+    /// Duration/value distribution (records land in the histogram).
+    Span,
+}
+
+impl MetricKind {
+    /// Stable lowercase name used in the JSON snapshot schema.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Span => "span",
+        }
+    }
+
+    /// Parse the JSON schema name back into a kind.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "counter" => Some(MetricKind::Counter),
+            "gauge" => Some(MetricKind::Gauge),
+            "span" => Some(MetricKind::Span),
+            _ => None,
+        }
+    }
+}
+
+/// One registered metric: a name, a kind, a scalar cell (counter/gauge)
+/// and — for [`MetricKind::Span`] — a histogram. All mutation is atomic;
+/// a `&'static Metric` can be recorded into from any thread.
+pub struct Metric {
+    name: &'static str,
+    kind: MetricKind,
+    value: AtomicI64,
+    hist: Option<Hist>,
+}
+
+impl Metric {
+    fn new(name: &'static str, kind: MetricKind) -> Self {
+        Self {
+            name,
+            kind,
+            value: AtomicI64::new(0),
+            hist: (kind == MetricKind::Span).then(Hist::new),
+        }
+    }
+
+    /// The interned metric name.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The kind fixed at first registration.
+    pub fn kind(&self) -> MetricKind {
+        self.kind
+    }
+
+    /// Add to the scalar cell (counter increment or signed gauge delta).
+    pub fn add(&self, delta: i64) {
+        self.value.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Overwrite the scalar cell (gauge set).
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Current scalar cell value.
+    pub fn value(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    /// Record a value into the histogram (no-op for non-span kinds).
+    pub fn record(&self, v: u64) {
+        if let Some(h) = &self.hist {
+            h.record(v);
+        }
+    }
+
+    /// The span histogram, when this metric has one.
+    pub fn hist(&self) -> Option<&Hist> {
+        self.hist.as_ref()
+    }
+
+    /// Zero every cell (bench/test scoping; not atomic vs recorders).
+    pub fn reset(&self) {
+        self.value.store(0, Ordering::Relaxed);
+        if let Some(h) = &self.hist {
+            h.reset();
+        }
+    }
+}
+
+struct Table {
+    slots: Box<[AtomicPtr<Metric>]>,
+    /// Names that could not be interned because the table filled.
+    overflowed: AtomicU64,
+}
+
+static TABLE: OnceLock<Table> = OnceLock::new();
+
+fn table() -> &'static Table {
+    TABLE.get_or_init(|| Table {
+        slots: (0..TABLE_SLOTS).map(|_| AtomicPtr::new(std::ptr::null_mut())).collect(),
+        overflowed: AtomicU64::new(0),
+    })
+}
+
+fn fnv1a(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The shared sink for names that arrive after the table filled.
+fn overflow_metric() -> &'static Metric {
+    static M: OnceLock<&'static Metric> = OnceLock::new();
+    M.get_or_init(|| Box::leak(Box::new(Metric::new("obs.overflow", MetricKind::Span))))
+}
+
+/// Resolve `name` to its process-wide metric cell, registering it with
+/// `kind` on first use. Lock-free; allocates only on a name's first use.
+/// If the same name is first registered with a different kind, the first
+/// registration wins.
+pub fn intern(name: &'static str, kind: MetricKind) -> &'static Metric {
+    let t = table();
+    let h = fnv1a(name) as usize;
+    for i in 0..TABLE_SLOTS {
+        let slot = &t.slots[(h + i) & (TABLE_SLOTS - 1)];
+        let p = slot.load(Ordering::Acquire);
+        if p.is_null() {
+            let candidate = Box::into_raw(Box::new(Metric::new(name, kind)));
+            match slot.compare_exchange(
+                std::ptr::null_mut(),
+                candidate,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return unsafe { &*candidate },
+                Err(existing) => {
+                    // Lost the race for this slot: free our candidate and
+                    // inspect the winner.
+                    drop(unsafe { Box::from_raw(candidate) });
+                    let m = unsafe { &*existing };
+                    if m.name == name {
+                        return m;
+                    }
+                }
+            }
+        } else {
+            let m = unsafe { &*p };
+            if m.name == name {
+                return m;
+            }
+        }
+    }
+    t.overflowed.fetch_add(1, Ordering::Relaxed);
+    overflow_metric()
+}
+
+/// Every registered metric, sorted by name (snapshot iteration order).
+pub fn all() -> Vec<&'static Metric> {
+    let t = table();
+    let mut out: Vec<&'static Metric> = t
+        .slots
+        .iter()
+        .filter_map(|s| {
+            let p = s.load(Ordering::Acquire);
+            (!p.is_null()).then(|| unsafe { &*p })
+        })
+        .collect();
+    out.sort_by_key(|m| m.name);
+    out
+}
+
+/// Zero every registered metric (bench/test scoping; concurrent recorders
+/// may land records mid-reset).
+pub fn reset_all() {
+    for m in all() {
+        m.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_stable_and_kind_sticky() {
+        let a = intern("obs.test.interning", MetricKind::Counter);
+        let b = intern("obs.test.interning", MetricKind::Gauge);
+        assert!(std::ptr::eq(a, b), "same name must intern to the same cell");
+        assert_eq!(b.kind(), MetricKind::Counter, "first registration wins");
+        let c = intern("obs.test.interning2", MetricKind::Counter);
+        assert!(!std::ptr::eq(a, c));
+    }
+
+    #[test]
+    fn counters_accumulate_and_spans_record() {
+        let c = intern("obs.test.counter", MetricKind::Counter);
+        let before = c.value();
+        c.add(3);
+        c.add(4);
+        assert_eq!(c.value() - before, 7);
+
+        let s = intern("obs.test.span", MetricKind::Span);
+        let n0 = s.hist().unwrap().count();
+        s.record(123);
+        assert_eq!(s.hist().unwrap().count() - n0, 1);
+
+        let g = intern("obs.test.gauge", MetricKind::Gauge);
+        g.set(9);
+        g.add(-4);
+        assert_eq!(g.value(), 5);
+    }
+
+    #[test]
+    fn concurrent_first_use_interns_one_cell() {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    intern("obs.test.race", MetricKind::Counter) as *const Metric as usize
+                })
+            })
+            .collect();
+        let ptrs: Vec<usize> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(ptrs.windows(2).all(|w| w[0] == w[1]), "racing interns diverged: {ptrs:?}");
+    }
+
+    #[test]
+    fn all_lists_registered_names_sorted() {
+        intern("obs.test.list.b", MetricKind::Counter);
+        intern("obs.test.list.a", MetricKind::Counter);
+        let names: Vec<&str> = all().iter().map(|m| m.name()).collect();
+        let ia = names.iter().position(|n| *n == "obs.test.list.a").unwrap();
+        let ib = names.iter().position(|n| *n == "obs.test.list.b").unwrap();
+        assert!(ia < ib);
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        assert_eq!(names, sorted);
+    }
+}

@@ -1,0 +1,276 @@
+//! Point-in-time telemetry snapshot and its JSON schema.
+//!
+//! One schema serves every surface: the `STATS` admin frame on the secure
+//! server, the `--stats-addr` HTTP endpoint, and the `obs` section
+//! `e2e_bench --obs` embeds in `BENCH_e2e.json`. The document is:
+//!
+//! ```json
+//! {"version":1,
+//!  "metrics":[
+//!    {"name":"par.regions.forked","kind":"counter","value":42},
+//!    {"name":"serve.pool.occupancy","kind":"gauge","value":2},
+//!    {"name":"phe.mult_plain","kind":"span","count":9,"sum":12345,
+//!     "min":800,"max":2100,"p50":1300,"p95":2000,"p99":2100,
+//!     "buckets":[[161,4],[162,5]]}],
+//!  "timeline":[["cheetah.online.step_linear",1042,350]]}
+//! ```
+//!
+//! Span units are nanoseconds; timeline entries are
+//! `[name, start_us, dur_us]` relative to the process telemetry epoch and
+//! appear only at trace level. `p50/p95/p99` are derived from the buckets
+//! at serialization time (with the documented one-bucket error bound), so
+//! [`Snapshot::from_json`] → [`Snapshot::to_json`] reproduces the exact
+//! document — the round-trip property the schema test pins.
+
+use super::hist::HistSnapshot;
+use super::json::{escape, Json, JsonError};
+use super::registry::MetricKind;
+use std::fmt::Write as _;
+
+/// Schema version stamped into every document.
+pub const SNAPSHOT_VERSION: i64 = 1;
+
+/// One metric's point-in-time state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricSnapshot {
+    /// Registered metric name.
+    pub name: String,
+    /// Counter, gauge, or span.
+    pub kind: MetricKind,
+    /// Scalar cell (counter total / gauge level; 0 for spans).
+    pub value: i64,
+    /// Histogram state (span metrics only).
+    pub hist: Option<HistSnapshot>,
+}
+
+/// One timeline event (trace level only).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TimelineEvent {
+    /// Span name.
+    pub name: String,
+    /// Start, µs since the telemetry epoch.
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+}
+
+/// A full registry snapshot: every metric (sorted by name) plus the
+/// recent timeline window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    /// All registered metrics, sorted by name.
+    pub metrics: Vec<MetricSnapshot>,
+    /// Recent span events (empty below trace level).
+    pub timeline: Vec<TimelineEvent>,
+}
+
+impl Snapshot {
+    /// Look a metric up by name.
+    pub fn get(&self, name: &str) -> Option<&MetricSnapshot> {
+        self.metrics.iter().find(|m| m.name == name)
+    }
+
+    /// Serialize to the canonical JSON document (see module docs).
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.metrics.len() * 96);
+        let _ = write!(out, "{{\"version\":{SNAPSHOT_VERSION},\"metrics\":[");
+        for (i, m) in self.metrics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("{\"name\":");
+            escape(&mut out, &m.name);
+            let _ = write!(out, ",\"kind\":\"{}\"", m.kind.as_str());
+            match &m.hist {
+                None => {
+                    let _ = write!(out, ",\"value\":{}", m.value);
+                }
+                Some(h) => {
+                    let _ = write!(
+                        out,
+                        ",\"count\":{},\"sum\":{},\"min\":{},\"max\":{},\
+                         \"p50\":{},\"p95\":{},\"p99\":{},\"buckets\":[",
+                        h.count,
+                        h.sum,
+                        h.min,
+                        h.max,
+                        h.percentile(50.0),
+                        h.percentile(95.0),
+                        h.percentile(99.0)
+                    );
+                    for (j, &(idx, c)) in h.buckets.iter().enumerate() {
+                        if j > 0 {
+                            out.push(',');
+                        }
+                        let _ = write!(out, "[{idx},{c}]");
+                    }
+                    out.push(']');
+                }
+            }
+            out.push('}');
+        }
+        out.push_str("],\"timeline\":[");
+        for (i, e) in self.timeline.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push('[');
+            escape(&mut out, &e.name);
+            let _ = write!(out, ",{},{}]", e.start_us, e.dur_us);
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Parse a document produced by [`Snapshot::to_json`]. Derived fields
+    /// (`p50/p95/p99`) are ignored on input and recomputed on re-emit, so
+    /// `from_json(to_json(s)).to_json() == to_json(s)`.
+    pub fn from_json(doc: &str) -> Result<Snapshot, JsonError> {
+        let v = Json::parse(doc)?;
+        let bad = |msg: &'static str| JsonError { msg, at: 0 };
+        if v.get("version").and_then(Json::as_i64) != Some(SNAPSHOT_VERSION) {
+            return Err(bad("unsupported snapshot version"));
+        }
+        let mut metrics = Vec::new();
+        for m in v.get("metrics").and_then(Json::as_arr).ok_or(bad("missing metrics"))? {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or(bad("metric missing name"))?
+                .to_string();
+            let kind = m
+                .get("kind")
+                .and_then(Json::as_str)
+                .and_then(MetricKind::parse)
+                .ok_or(bad("metric missing kind"))?;
+            let hist = if kind == MetricKind::Span {
+                let field = |k: &str| {
+                    m.get(k)
+                        .and_then(Json::as_i64)
+                        .map(|v| v as u64)
+                        .ok_or(bad("span metric missing histogram field"))
+                };
+                let mut buckets = Vec::new();
+                for b in m.get("buckets").and_then(Json::as_arr).ok_or(bad("missing buckets"))? {
+                    let pair = b.as_arr().ok_or(bad("bad bucket entry"))?;
+                    let idx =
+                        pair.first().and_then(Json::as_i64).ok_or(bad("bad bucket entry"))?;
+                    let c = pair.get(1).and_then(Json::as_i64).ok_or(bad("bad bucket entry"))?;
+                    buckets.push((idx as u64, c as u64));
+                }
+                Some(HistSnapshot {
+                    count: field("count")?,
+                    sum: field("sum")?,
+                    min: field("min")?,
+                    max: field("max")?,
+                    buckets,
+                })
+            } else {
+                None
+            };
+            let value = if hist.is_some() {
+                0
+            } else {
+                m.get("value").and_then(Json::as_i64).ok_or(bad("metric missing value"))?
+            };
+            metrics.push(MetricSnapshot { name, kind, value, hist });
+        }
+        let mut timeline = Vec::new();
+        for e in v.get("timeline").and_then(Json::as_arr).ok_or(bad("missing timeline"))? {
+            let t = e.as_arr().ok_or(bad("bad timeline entry"))?;
+            let name = t
+                .first()
+                .and_then(Json::as_str)
+                .ok_or(bad("bad timeline entry"))?
+                .to_string();
+            let start_us = t.get(1).and_then(Json::as_i64).ok_or(bad("bad timeline entry"))?;
+            let dur_us = t.get(2).and_then(Json::as_i64).ok_or(bad("bad timeline entry"))?;
+            timeline.push(TimelineEvent {
+                name,
+                start_us: start_us as u64,
+                dur_us: dur_us as u64,
+            });
+        }
+        Ok(Snapshot { metrics, timeline })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Hist;
+
+    fn sample_snapshot() -> Snapshot {
+        let h = Hist::new();
+        for v in [800u64, 1_300, 1_700, 2_100, 950_000] {
+            h.record(v);
+        }
+        Snapshot {
+            metrics: vec![
+                MetricSnapshot {
+                    name: "par.regions.forked".into(),
+                    kind: MetricKind::Counter,
+                    value: 42,
+                    hist: None,
+                },
+                MetricSnapshot {
+                    name: "phe.mult_plain".into(),
+                    kind: MetricKind::Span,
+                    value: 0,
+                    hist: Some(h.snapshot()),
+                },
+                MetricSnapshot {
+                    name: "serve.pool.occupancy".into(),
+                    kind: MetricKind::Gauge,
+                    value: -2,
+                    hist: None,
+                },
+            ],
+            timeline: vec![TimelineEvent {
+                name: "cheetah.online.step_linear".into(),
+                start_us: 1042,
+                dur_us: 350,
+            }],
+        }
+    }
+
+    /// Satellite requirement: the snapshot schema round-trips.
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let snap = sample_snapshot();
+        let doc = snap.to_json();
+        let back = Snapshot::from_json(&doc).expect("own output must parse");
+        assert_eq!(back, snap);
+        assert_eq!(back.to_json(), doc, "re-serialization must be byte-identical");
+    }
+
+    #[test]
+    fn lookup_and_percentiles_survive_the_wire() {
+        let doc = sample_snapshot().to_json();
+        let back = Snapshot::from_json(&doc).unwrap();
+        let span = back.get("phe.mult_plain").unwrap();
+        let h = span.hist.as_ref().unwrap();
+        assert_eq!(h.count, 5);
+        assert_eq!(h.max, 950_000, "max is exact through serialization");
+        let p50 = h.percentile(50.0);
+        assert!((1_250..=1_400).contains(&p50), "p50 {p50} out of expected bucket");
+        assert_eq!(back.get("par.regions.forked").unwrap().value, 42);
+        assert_eq!(back.get("serve.pool.occupancy").unwrap().value, -2);
+        assert!(back.get("no.such.metric").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_version_and_malformed_documents() {
+        assert!(Snapshot::from_json("{\"version\":99,\"metrics\":[],\"timeline\":[]}").is_err());
+        assert!(Snapshot::from_json("{\"metrics\":[]}").is_err());
+        assert!(Snapshot::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn empty_snapshot_round_trips() {
+        let empty = Snapshot::default();
+        let doc = empty.to_json();
+        assert_eq!(doc, "{\"version\":1,\"metrics\":[],\"timeline\":[]}");
+        assert_eq!(Snapshot::from_json(&doc).unwrap(), empty);
+    }
+}

@@ -1,0 +1,132 @@
+//! Live introspection endpoint: a tiny HTTP/1.0 responder that serves the
+//! current telemetry snapshot as JSON.
+//!
+//! `main.rs serve-secure --stats-addr 127.0.0.1:9911` binds one of these
+//! next to the secure server, so a long-running deployment can be
+//! inspected with `curl http://127.0.0.1:9911/` (or scraped by
+//! `serve_bench --stats`) without restarting — the snapshot itself is
+//! lock-free to capture. Every connection gets the full document and is
+//! closed; there is no routing, no keep-alive, and no request parsing
+//! beyond draining the request head.
+
+use crate::coordinator::server::{stop_accept_thread, StoppableListener};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::AtomicBool;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A running stats endpoint. Serving continues on a background thread
+/// until [`StatsServer::shutdown`] (or drop).
+pub struct StatsServer {
+    /// The bound address.
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl StatsServer {
+    /// Bind `addr` and serve snapshots. Returns once the listener is
+    /// bound.
+    pub fn serve(addr: &str) -> std::io::Result<StatsServer> {
+        let listener = StoppableListener::bind(addr)?;
+        let local = listener.addr;
+        let stop = listener.stop_flag();
+        let accept_thread = std::thread::spawn(move || {
+            while let Some(stream) = listener.accept() {
+                // Serialized handling is fine for an admin endpoint; a
+                // stuck peer is bounded by the read/write timeouts.
+                let _ = respond(stream);
+            }
+        });
+        Ok(StatsServer { addr: local, stop, accept_thread: Mutex::new(Some(accept_thread)) })
+    }
+
+    /// Stop accepting and join the accept thread. Idempotent.
+    pub fn shutdown(&self) {
+        stop_accept_thread(&self.stop, self.addr, &self.accept_thread);
+    }
+}
+
+impl Drop for StatsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn respond(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    stream.set_write_timeout(Some(Duration::from_secs(5))).ok();
+    // Drain the request head (best-effort: until a blank line, EOF, a
+    // bounded amount of bytes, or the timeout). The response is the same
+    // regardless of the request.
+    let mut head = [0u8; 1024];
+    let mut seen = 0usize;
+    while seen < head.len() {
+        match stream.read(&mut head[seen..]) {
+            Ok(0) => break,
+            Ok(n) => {
+                seen += n;
+                if head[..seen].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+            }
+            Err(_) => break, // timeout or reset: respond anyway
+        }
+    }
+    let body = crate::obs::snapshot().to_json();
+    let header = format!(
+        "HTTP/1.0 200 OK\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(header.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Fetch and parse the snapshot served at `addr`: issues a minimal HTTP
+/// GET and returns the JSON body. Used by `serve_bench --stats` and
+/// available to tests/operator tooling.
+pub fn scrape(addr: &SocketAddr) -> std::io::Result<String> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    stream.write_all(b"GET / HTTP/1.0\r\n\r\n")?;
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response)?;
+    let text = String::from_utf8_lossy(&response);
+    match text.split_once("\r\n\r\n") {
+        Some((_, body)) => Ok(body.to_string()),
+        None => Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "stats endpoint returned no header/body separator",
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Snapshot;
+
+    #[test]
+    fn endpoint_serves_a_parsable_snapshot() {
+        crate::obs::inc("obs.test.stats.requests");
+        let server = StatsServer::serve("127.0.0.1:0").expect("bind stats endpoint");
+        let body = scrape(&server.addr).expect("scrape endpoint");
+        let snap = Snapshot::from_json(&body).expect("endpoint body must be schema-valid");
+        #[cfg(not(feature = "obs-off"))]
+        assert!(
+            snap.get("obs.test.stats.requests").is_some(),
+            "scraped snapshot misses a registered counter"
+        );
+        #[cfg(feature = "obs-off")]
+        assert!(snap.metrics.is_empty());
+        server.shutdown();
+        server.shutdown(); // idempotent
+        assert!(
+            TcpStream::connect(server.addr).is_err() || scrape(&server.addr).is_err(),
+            "endpoint still serving after shutdown"
+        );
+    }
+}

@@ -232,6 +232,9 @@ impl Pool {
             for _ in 0..helpers {
                 q.push_back(region.clone());
             }
+            // Queue depth is only meaningful under the lock: this is the
+            // instantaneous number of un-popped claim tickets.
+            crate::obs::gauge_set("par.queue_depth", q.len() as i64);
         }
         if helpers == 1 {
             self.work_cv.notify_one();
@@ -279,11 +282,14 @@ fn run_chunks(n: usize, f: &(dyn Fn(usize) + Sync)) {
     }
     let t = threads();
     if t <= 1 || n == 1 {
+        crate::obs::inc("par.regions.inline");
         for i in 0..n {
             f(i);
         }
         return;
     }
+    crate::obs::inc("par.regions.forked");
+    crate::obs::add("par.chunks", n as u64);
     // Lifetime erasure: see the Region safety contract above — `f` is only
     // called for claimed chunks, all of which complete before this function
     // returns, so the borrow outlives every call.
@@ -451,6 +457,7 @@ pub fn map_indexed_grained<R: Send, F: Fn(usize) -> R + Sync>(
     f: F,
 ) -> Vec<R> {
     if n < min_units.max(grain_floor()) {
+        crate::obs::inc("par.regions.inline");
         return (0..n).map(f).collect();
     }
     map_indexed(n, f)

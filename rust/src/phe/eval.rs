@@ -143,6 +143,7 @@ impl Evaluator {
     /// once on receipt; not counted as an op, matching GAZELLE's accounting).
     /// The two components transform independently, so they fork-join.
     pub fn to_ntt(&self, ct: &mut Ciphertext) {
+        let _span = crate::obs::span("phe.ntt");
         let ctx = &self.ctx;
         let Ciphertext { c0, c1, .. } = ct;
         crate::par::join(|| ctx.to_ntt(c0), || ctx.to_ntt(c1));
@@ -150,6 +151,7 @@ impl Evaluator {
 
     /// Convert ciphertext to coefficient form (both components fork-join).
     pub fn to_coeff(&self, ct: &mut Ciphertext) {
+        let _span = crate::obs::span("phe.intt");
         let ctx = &self.ctx;
         let Ciphertext { c0, c1, .. } = ct;
         crate::par::join(|| ctx.to_coeff(c0), || ctx.to_coeff(c1));
@@ -158,6 +160,7 @@ impl Evaluator {
     /// Convert a batch of independent ciphertexts to NTT form in parallel —
     /// the per-step ingest hot path of both protocol servers.
     pub fn to_ntt_batch(&self, cts: &mut [Ciphertext]) {
+        let _span = crate::obs::span("phe.ntt_batch");
         crate::par::for_each_mut(cts, |_, ct| {
             self.ctx.to_ntt(&mut ct.c0);
             self.ctx.to_ntt(&mut ct.c1);
@@ -210,6 +213,7 @@ impl Evaluator {
     /// caller is responsible for the operand being Δ-scaled (the kind check
     /// the wrapper would have performed). Counts as one `Add`.
     pub fn add_plain_raw(&self, ct: &mut Ciphertext, poly: &RnsPoly) {
+        let _span = crate::obs::span("phe.add_plain");
         assert_eq!(ct.form(), poly.form, "form mismatch in add_plain");
         ct.c0.add_assign(poly, &self.ctx.params);
         ct.mark_evaluated();
@@ -221,6 +225,7 @@ impl Evaluator {
     /// vec is built directly from the product stream — no clone-then-
     /// multiply and no zero-fill. Counts as one `Mult`.
     pub fn mult_plain(&self, ct: &Ciphertext, op: &PlainOperand) -> Ciphertext {
+        let _span = crate::obs::span("phe.mult_plain");
         assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
         assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
         let params = &self.ctx.params;
@@ -235,6 +240,7 @@ impl Evaluator {
 
     /// In-place variant of [`Evaluator::mult_plain`].
     pub fn mult_plain_assign(&self, ct: &mut Ciphertext, op: &PlainOperand) {
+        let _span = crate::obs::span("phe.mult_plain");
         assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
         assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
         ct.c0.mul_assign_pointwise(&op.poly, &self.ctx.params);
@@ -249,6 +255,7 @@ impl Evaluator {
     /// irrelevant; its polys must be sized for this context. Counts as one
     /// `Mult`.
     pub fn mult_plain_into(&self, ct: &Ciphertext, op: &PlainOperand, out: &mut Ciphertext) {
+        let _span = crate::obs::span("phe.mult_plain");
         assert_eq!(op.kind, OperandKind::Mult, "operand not prepared for MultPlain");
         assert_eq!(ct.form(), Form::Ntt, "MultPlain requires NTT-form ciphertext");
         out.c0.set_mul_pointwise(&ct.c0, &op.poly, &self.ctx.params);
@@ -301,6 +308,7 @@ impl Evaluator {
     }
 
     fn apply_galois(&self, ct: &Ciphertext, g: u64, gk: &GaloisKeys) -> Ciphertext {
+        let _span = crate::obs::span("phe.perm");
         assert_eq!(ct.form(), Form::Ntt, "Perm requires NTT-form ciphertext");
         let ksk = gk
             .get(g)

@@ -270,6 +270,7 @@ impl CheetahServer {
     /// background builds in `serve::precompute` therefore bank fully
     /// prepared operands, not just blinding draws).
     pub fn refresh_blinding(&mut self) {
+        let _span = crate::obs::span("cheetah.offline.refresh");
         let t0 = Instant::now();
         let prod_scale = self.plan.product();
         let mut steps = Vec::with_capacity(self.spec.steps.len());
@@ -548,6 +549,7 @@ impl CheetahServer {
         in_cts: &[Ciphertext],
         share: &[u64],
     ) -> Vec<Ciphertext> {
+        let _span = crate::obs::span("cheetah.online.step_linear");
         let step = &self.spec.steps[si];
         let prep = &self.steps[si];
         let params = &self.ctx.params;
@@ -580,6 +582,13 @@ impl CheetahServer {
         // per-tile operand memory by the cache budget.
         let need_kv = prep.kv_ops.is_none();
         let need_noise = !first_layer && prep.noise_res.is_none();
+        // Cache observability: did this step score from the prepared-operand
+        // cache, or stream tiles (rebuilding operands per query)?
+        if need_kv || need_noise {
+            crate::obs::inc("cheetah.steps.streamed");
+        } else {
+            crate::obs::inc("cheetah.steps.cached");
+        }
         let tile_ch = if need_kv || need_noise {
             let poly_mem = NUM_Q_PRIMES * n * 8;
             let per_ch = n_cts * poly_mem + len * 8;
@@ -678,6 +687,7 @@ impl CheetahServer {
     /// next-layer share (`&self` — see [`CheetahServer::step_linear_with`]
     /// on concurrent queries).
     pub fn finish_nonlinear_with(&self, si: usize, rec_cts: &[Ciphertext]) -> Vec<u64> {
+        let _span = crate::obs::span("cheetah.online.finish_nonlinear");
         let step = &self.spec.steps[si];
         let n = self.ctx.params.n;
         let n_out = step.linear.num_outputs();

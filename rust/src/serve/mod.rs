@@ -354,6 +354,7 @@ fn read_frames(
             Ok(f) => f,
             Err(_) => return, // peer hung up, oversized frame, or shutdown
         };
+        crate::obs::add("serve.rx_bytes", payload.len() as u64 + 5);
         match tag {
             wire::TAG_HELLO => {
                 if let Err(e) = wire::decode_hello(&payload) {
@@ -364,6 +365,17 @@ fn read_frames(
                 let job = Job::Hello { writer: writer.clone(), conn: conn.clone() };
                 if txs[w].send(job).is_err() {
                     return;
+                }
+            }
+            wire::TAG_STATS => {
+                // Admin introspection: answered inline from the reader (the
+                // snapshot capture is lock-free, so this cannot stall rounds
+                // queued behind it on a worker).
+                let body = crate::obs::snapshot().to_json();
+                if let Ok(mut w) = writer.lock() {
+                    if !write_or_hangup(&mut w, wire::TAG_STATS_OK, body.as_bytes()) {
+                        return;
+                    }
                 }
             }
             wire::TAG_SHARES | wire::TAG_RECOVERY | wire::TAG_BYE => {
@@ -412,6 +424,7 @@ fn write_or_hangup(w: &mut TcpStream, tag: u8, payload: &[u8]) -> bool {
         let _ = w.shutdown(std::net::Shutdown::Both);
         return false;
     }
+    crate::obs::add("serve.tx_bytes", payload.len() as u64 + 5);
     true
 }
 
@@ -635,6 +648,17 @@ impl CheetahNetClient {
         self.offline_bytes
     }
 
+    /// Fetch the server's live telemetry snapshot over the `STATS` admin
+    /// frame. Returns the raw JSON document (parse with
+    /// [`crate::obs::Snapshot::from_json`]). Must not be interleaved with
+    /// an in-flight [`CheetahNetClient::infer`] round.
+    pub fn stats_json(&mut self) -> std::io::Result<String> {
+        write_frame(&mut self.stream, wire::TAG_STATS, &[])?;
+        let payload = self.read_expect(wire::TAG_STATS_OK)?;
+        String::from_utf8(payload)
+            .map_err(|_| invalid("stats snapshot is not valid UTF-8"))
+    }
+
     fn read_expect(&mut self, want: u8) -> std::io::Result<Vec<u8>> {
         let (tag, payload) = read_frame_limited(&mut self.stream, self.max_frame)?;
         if tag == wire::TAG_ERROR {
@@ -826,6 +850,44 @@ mod tests {
         assert_eq!(tag, wire::TAG_ERROR);
         let (_, code, _) = wire::decode_error(&payload).unwrap();
         assert_eq!(code, wire::ERR_UNSUPPORTED);
+        server.shutdown();
+    }
+
+    /// The `STATS` admin frame serves a schema-valid snapshot mid-session,
+    /// and (with obs on) the serve-layer counters it carries reflect the
+    /// queries that ran before it.
+    #[test]
+    fn stats_frame_serves_live_snapshot() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(8),
+            plan,
+            "127.0.0.1:0",
+            SecureConfig {
+                seed: Some(11),
+                pool: PoolConfig::disabled(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut client = CheetahNetClient::connect(ctx, plan, &server.addr, 77).unwrap();
+        client.infer(&test_input(0.0)).unwrap();
+        let doc = client.stats_json().unwrap();
+        let snap = crate::obs::Snapshot::from_json(&doc).expect("STATS body must parse");
+        #[cfg(not(feature = "obs-off"))]
+        {
+            let rounds = snap.get("serve.rounds").expect("serve.rounds registered");
+            assert!(rounds.value >= 3, "one query is ≥3 rounds, got {}", rounds.value);
+            let q = snap.get("serve.query").expect("serve.query registered");
+            assert!(q.hist.as_ref().unwrap().count >= 1);
+        }
+        #[cfg(feature = "obs-off")]
+        assert!(snap.metrics.is_empty());
+        // The session survives the admin frame: a second query still works.
+        client.infer(&test_input(0.05)).unwrap();
+        client.bye().unwrap();
         server.shutdown();
     }
 

@@ -139,6 +139,7 @@ impl BlindingPool {
     }
 
     fn build(&self) -> CheetahServer {
+        let _span = crate::obs::span("serve.pool.build");
         let seed = self.next_seed.fetch_add(1, Ordering::Relaxed);
         // The engine's own preparation (weight quantization, indicator
         // encryption) additionally fans out on the crate-wide `par` pool.
@@ -162,7 +163,10 @@ impl BlindingPool {
                     return;
                 }
                 match tx.try_send(engine.take().expect("engine consumed twice")) {
-                    Ok(()) => break,
+                    Ok(()) => {
+                        crate::obs::gauge_add("serve.pool.occupancy", 1);
+                        break;
+                    }
                     Err(TrySendError::Full(e)) => {
                         engine = Some(e);
                         std::thread::sleep(Duration::from_millis(5));
@@ -183,10 +187,13 @@ impl BlindingPool {
         match banked {
             Some(engine) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
+                crate::obs::gauge_add("serve.pool.occupancy", -1);
+                crate::obs::inc("serve.pool.hits");
                 engine
             }
             None => {
                 self.misses.fetch_add(1, Ordering::Relaxed);
+                crate::obs::inc("serve.pool.misses");
                 self.build()
             }
         }

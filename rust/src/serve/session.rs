@@ -103,6 +103,7 @@ impl Session {
         metrics: &Metrics,
     ) -> Result<Vec<u8>, ProtocolViolation> {
         self.expect_shares(step)?;
+        crate::obs::inc("serve.rounds");
         let n = self.engine.ctx.params.n;
         let expected = self.engine.spec.steps[step].linear.num_in_cts(n);
         if in_cts.len() != expected {
@@ -118,7 +119,9 @@ impl Session {
         let out = self.engine.step_linear_with(step, in_cts, &self.share);
         if step == self.engine.spec.last_idx() {
             if let Some(t0) = self.query_start.take() {
-                metrics.record_request(t0.elapsed());
+                let elapsed = t0.elapsed();
+                crate::obs::record("serve.query", elapsed.as_nanos() as u64);
+                metrics.record_request(elapsed);
             }
             self.queries_done += 1;
             self.phase = Phase::AwaitShares(0);
@@ -145,6 +148,7 @@ impl Session {
                 )))
             }
         }
+        crate::obs::inc("serve.rounds");
         let n = self.engine.ctx.params.n;
         let expected = self.engine.spec.steps[step].linear.num_recovery_cts(n);
         if rec_cts.len() != expected {
@@ -202,6 +206,7 @@ impl SessionRegistry {
         };
         let session = Arc::new(Mutex::new(Session::new(id, engine)));
         sessions.insert(id, session.clone());
+        crate::obs::gauge_set("serve.sessions", sessions.len() as i64);
         (id, session)
     }
 
@@ -212,7 +217,10 @@ impl SessionRegistry {
 
     /// Retire a session; returns whether it existed.
     pub fn remove(&self, id: u64) -> bool {
-        self.sessions.lock().unwrap().remove(&id).is_some()
+        let mut sessions = self.sessions.lock().unwrap();
+        let existed = sessions.remove(&id).is_some();
+        crate::obs::gauge_set("serve.sessions", sessions.len() as i64);
+        existed
     }
 
     /// Number of live sessions.
@@ -228,6 +236,7 @@ impl SessionRegistry {
     /// Retire every session (server shutdown).
     pub fn clear(&self) {
         self.sessions.lock().unwrap().clear();
+        crate::obs::gauge_set("serve.sessions", 0);
     }
 }
 

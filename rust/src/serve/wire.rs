@@ -12,12 +12,14 @@
 //! | `HELLO`        0x20 | c→s | magic `u32` + version `u16` |
 //! | `SHARES`       0x23 | c→s | sid `u64` + step `u32` + cts (`[T(share_C)]_C`) |
 //! | `RECOVERY`     0x24 | c→s | sid `u64` + step `u32` + cts (`[ID₁∘y+ID₂∘ReLU(y)−s₁]_S`) |
+//! | `STATS`        0x30 | c→s | (empty) — admin introspection request |
 //! | `BYE`          0x2f | c→s | sid `u64` |
 //! | `HELLO_OK`     0xa0 | s→c | sid `u64` + plan/params fingerprint `u64` + ε `f64` + n_steps `u32` + arch |
 //! | `OFFLINE_IDS`  0xa1 | s→c | sid `u64` + step `u32` + id1 cts + id2 cts |
 //! | `OFFLINE_DONE` 0xa2 | s→c | sid `u64` |
 //! | `PRODUCTS`     0xa3 | s→c | sid `u64` + step `u32` + cts (obscured products) |
 //! | `RECOVERY_OK`  0xa4 | s→c | sid `u64` + step `u32` |
+//! | `STATS_OK`     0xa5 | s→c | utf-8 telemetry snapshot JSON ([`crate::obs::Snapshot`]) |
 //! | `ERROR`        0xee | s→c | sid `u64` + code `u16` + utf-8 message |
 //!
 //! Every online frame carries the session id, so rounds from interleaved
@@ -43,6 +45,8 @@ pub const TAG_HELLO: u8 = 0x20;
 pub const TAG_SHARES: u8 = 0x23;
 /// c→s nonlinear recovery round.
 pub const TAG_RECOVERY: u8 = 0x24;
+/// c→s admin request for a telemetry snapshot (no session required).
+pub const TAG_STATS: u8 = 0x30;
 /// c→s polite session end.
 pub const TAG_BYE: u8 = 0x2f;
 /// s→c session grant (id, fingerprint, ε, architecture).
@@ -55,6 +59,8 @@ pub const TAG_OFFLINE_DONE: u8 = 0xa2;
 pub const TAG_PRODUCTS: u8 = 0xa3;
 /// s→c recovery acknowledgement.
 pub const TAG_RECOVERY_OK: u8 = 0xa4;
+/// s→c telemetry snapshot (UTF-8 JSON; see [`crate::obs::Snapshot`]).
+pub const TAG_STATS_OK: u8 = 0xa5;
 /// s→c typed failure; the session is retired.
 pub const TAG_ERROR: u8 = 0xee;
 

@@ -25,6 +25,11 @@ rename must not silently disable the gate); 2 malformed input.
 
 Noise guard: CI runners are shared machines, so rows faster than
 MIN_ABS_MS in *both* runs are reported but never gate.
+
+Forward compatibility: rows are read by *named* column, and only the keys
+named above participate, so new columns (e.g. serve_bench `--stats`'s
+`pool_occ`/`query_p99_ms`) and extra top-level sections (e.g. the `obs`
+snapshot `e2e_bench --obs` embeds) are ignored without any flag.
 """
 
 import argparse
