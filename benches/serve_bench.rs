@@ -1,5 +1,6 @@
 //! Secure-serving benchmark: CHEETAH-over-TCP throughput and latency as a
-//! function of concurrent session count and offline blinding-pool depth.
+//! function of concurrent session count, serving front, offline
+//! blinding-pool depth, and client-side session pooling.
 //!
 //! Each cell starts a fresh `SecureServer` on loopback, connects N
 //! concurrent `Backend::CheetahNet` engines (each session's `prepare()`
@@ -13,7 +14,26 @@
 //!
 //! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
 //!       [-- --depth 4] [-- --net netA] [-- --threads 4] [-- --batch 8]
-//!       [-- --stats]`
+//!       [-- --mode threads|reactor|both] [-- --net-sessions 4]
+//!       [-- --client-batch 8] [-- --stats]`
+//!
+//! `--mode` selects the serving front (the `mode` column): the default
+//! thread-per-connection front, the readiness `reactor`
+//! ([`cheetah::serve::reactor`]), or `both`. Session counts above 8
+//! (`--sessions 1000` is the ROADMAP's C10K measuring stick) run in
+//! reactor mode only — they hold every session open concurrently on the
+//! server's bounded reactor+worker threads, with client drivers fanning
+//! the queries — and record the server-side
+//! `serve.reactor.sessions_peak` / `.wakeups` / `.write_queue_depth`
+//! gauges into the `reactor_sessions` / `reactor_wakeups` / `reactor_wq`
+//! columns when `--stats` is on.
+//!
+//! `--net-sessions K` adds the pooled-client experiment: one
+//! `Backend::CheetahNet` engine with `EngineBuilder::net_sessions(k)` for
+//! k ∈ {1, K} submits one `infer_batch` of `--client-batch` queries, so
+//! BENCH_serve.json records whole-query TCP parallelism (the
+//! `net_sessions` column; wall-clock at k=4 below k=1 is the win).
+//!
 //! `--stats` binds a live [`cheetah::obs::StatsServer`] endpoint and
 //! scrapes it mid-run (server and pool still up), recording blinding-pool
 //! occupancy and the server-side `serve.query` p99 into the `pool_occ` /
@@ -35,7 +55,7 @@ use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
 use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
 use cheetah::util::rng::SplitMix64;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 fn bench_net(name: &str) -> Network {
@@ -71,15 +91,74 @@ fn p50(durations: &mut [Duration]) -> Duration {
     durations[durations.len() / 2]
 }
 
+fn mode_name(reactor: bool) -> &'static str {
+    if reactor { "reactor" } else { "threads" }
+}
+
+/// Values scraped from the live stats endpoint while a cell's server is
+/// still up; empty strings when `--stats` is off or obs is compiled out.
+#[derive(Default)]
+struct Scraped {
+    pool_occ: String,
+    query_p99_ms: String,
+    reactor_sessions: String,
+    reactor_wakeups: String,
+    reactor_wq: String,
+}
+
+fn scrape(stats_srv: &Option<cheetah::obs::StatsServer>) -> Scraped {
+    let Some(srv) = stats_srv else { return Scraped::default() };
+    let body = cheetah::obs::stats::scrape(&srv.addr).expect("scrape stats endpoint");
+    let snap = cheetah::obs::Snapshot::from_json(&body)
+        .expect("stats endpoint must serve a schema-valid snapshot");
+    let val = |name: &str| snap.get(name).map(|m| m.value.to_string()).unwrap_or_default();
+    Scraped {
+        pool_occ: val("serve.pool.occupancy"),
+        query_p99_ms: snap
+            .get("serve.query")
+            .and_then(|m| m.hist.as_ref().map(|h| h.percentile(99.0)))
+            .map(|ns| format!("{:.3}", ns as f64 / 1e6))
+            .unwrap_or_default(),
+        reactor_sessions: val("serve.reactor.sessions_peak"),
+        reactor_wakeups: val("serve.reactor.wakeups"),
+        reactor_wq: val("serve.reactor.write_queue_depth"),
+    }
+}
+
+/// One measured serving cell, already reduced to row values.
+struct Cell {
+    sessions: usize,
+    pool_depth: usize,
+    batch: usize,
+    net_sessions: usize,
+    reactor: bool,
+    setup_p50: Duration,
+    query_p50: Duration,
+    wall: Duration,
+    total_queries: usize,
+    online_bytes: u64,
+    pool: (u64, u64, u64),
+    scraped: Scraped,
+}
+
 fn main() {
     let args = BenchArgs::from_env();
     let max_sessions = args.get_usize("--sessions", 4);
     let queries = args.get_usize("--queries", 2);
     let batch = args.get_usize("--batch", 0);
-    let depth = args.get_usize("--depth", max_sessions);
+    let depth = args.get_usize("--depth", max_sessions.min(8));
     let net_name = args.get("--net").unwrap_or("small").to_string();
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
     cheetah::par::set_threads(threads);
+    let mode = args.get("--mode").unwrap_or("threads").to_string();
+    let modes: Vec<bool> = match mode.as_str() {
+        "threads" => vec![false],
+        "reactor" => vec![true],
+        "both" => vec![false, true],
+        other => panic!("--mode must be threads|reactor|both (got `{other}`)"),
+    };
+    let net_sessions = args.get_usize("--net-sessions", 1);
+    let client_batch = args.get_usize("--client-batch", 8).max(1);
     let stats = args.has("--stats");
     // The endpoint serves the process-global obs snapshot; the secure
     // server under test runs in this process, so scraping it over HTTP
@@ -97,13 +176,15 @@ fn main() {
     let net = bench_net(&net_name);
     println!(
         "secure serving of {} — sessions up to {max_sessions}, {queries} queries/session, \
-         {threads} compute threads",
+         {threads} compute threads, mode {mode}",
         net.name
     );
 
     let mut t = Table::new(&[
+        "mode",
         "sessions",
         "pool",
+        "net_sess",
         "setup p50",
         "query p50 (server)",
         "wall",
@@ -111,12 +192,15 @@ fn main() {
         "online bytes",
         "pool built/hits/inline",
     ]);
-    // Machine-readable companion (BENCH_serve.json).
+    // Machine-readable companion (BENCH_serve.json). Rows are keyed by
+    // (sessions, mode, pool_depth, batch, net_sessions) in bench_trend.
     let mut jt = Table::new(&[
         "sessions",
+        "mode",
         "pool_depth",
         "threads",
         "batch",
+        "net_sessions",
         "setup_p50_ms",
         "query_p50_ms",
         "wall_s",
@@ -127,144 +211,324 @@ fn main() {
         "pool_inline",
         "pool_occ",
         "query_p99_ms",
+        "reactor_sessions",
+        "reactor_wakeups",
+        "reactor_wq",
     ]);
+    let record = |t: &mut Table, jt: &mut Table, c: Cell| {
+        let m = mode_name(c.reactor);
+        t.row(&[
+            m.to_string(),
+            c.sessions.to_string(),
+            if c.pool_depth > 0 { format!("on (d={})", c.pool_depth) } else { "off".into() },
+            c.net_sessions.to_string(),
+            cheetah::util::fmt_duration(c.setup_p50),
+            cheetah::util::fmt_duration(c.query_p50),
+            format!("{:.2}s", c.wall.as_secs_f64()),
+            format!("{:.2}", c.total_queries as f64 / c.wall.as_secs_f64()),
+            cheetah::util::fmt_bytes(c.online_bytes),
+            format!("{}/{}/{}", c.pool.0, c.pool.1, c.pool.2),
+        ]);
+        jt.row(&[
+            c.sessions.to_string(),
+            m.to_string(),
+            c.pool_depth.to_string(),
+            threads.to_string(),
+            c.batch.to_string(),
+            c.net_sessions.to_string(),
+            format!("{:.3}", c.setup_p50.as_secs_f64() * 1e3),
+            format!("{:.3}", c.query_p50.as_secs_f64() * 1e3),
+            format!("{:.3}", c.wall.as_secs_f64()),
+            format!("{:.3}", c.total_queries as f64 / c.wall.as_secs_f64()),
+            c.online_bytes.to_string(),
+            c.pool.0.to_string(),
+            c.pool.1.to_string(),
+            c.pool.2.to_string(),
+            c.scraped.pool_occ.clone(),
+            c.scraped.query_p99_ms.clone(),
+            c.scraped.reactor_sessions.clone(),
+            c.scraped.reactor_wakeups.clone(),
+            c.scraped.reactor_wq.clone(),
+        ]);
+    };
 
-    let session_counts: Vec<usize> =
+    let small_counts: Vec<usize> =
         [1usize, 2, 4, 8].into_iter().filter(|&s| s <= max_sessions).collect();
-    for pool_on in [false, true] {
-        for &sessions in &session_counts {
-            // Scope the global obs registry to this cell so the scraped
-            // occupancy gauge and query histogram describe one server.
-            if stats {
-                cheetah::obs::reset();
-            }
-            let pool = if pool_on {
-                PoolConfig { depth, workers: 1 }
-            } else {
-                PoolConfig::disabled()
-            };
-            let cfg = SecureConfig {
-                epsilon: 0.0,
-                workers: sessions.min(4),
-                pool,
-                threads,
-                ..Default::default()
-            };
-            let server = SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
-                .expect("bind secure server");
-            if pool_on {
-                // Warm the bank so the measurement sees the offline/online
-                // split rather than a cold-start artifact.
-                server.wait_pool_ready(sessions.min(depth) as u64, Duration::from_secs(60));
-            }
-            let addr = server.addr;
-            let input = input_for(&net, 23);
+    // The C10K sweep (reactor only: the threads front would need one OS
+    // thread per session, which is exactly the cap under test).
+    let big_counts: Vec<usize> =
+        [64usize, 256, 1000].into_iter().filter(|&s| s <= max_sessions).collect();
 
-            let t0 = Instant::now();
-            let mut handles = Vec::new();
-            for s in 0..sessions {
-                let input = input.clone();
-                let ctx = ctx.clone();
-                handles.push(std::thread::spawn(move || {
-                    // Each session is a `CheetahNet` engine pointed at the
-                    // shared server; `prepare()` is the measured setup
-                    // (handshake + offline indicator transfer).
-                    let mut engine = EngineBuilder::new(Backend::CheetahNet)
-                        .context(ctx)
-                        .plan(plan)
-                        .seed(9000 + s as u64)
-                        .connect_to(addr)
-                        .build()
-                        .expect("secure engine");
-                    let t_setup = Instant::now();
-                    engine.prepare().expect("secure session setup");
-                    let setup = t_setup.elapsed();
-                    let mut bytes = 0u64;
-                    if batch > 0 {
-                        // One infer_batch call per session: the batch path
-                        // over a real socket (queries pipeline in order on
-                        // the session; per-query compute still fans out).
-                        let inputs = vec![input.clone(); batch];
-                        for rep in engine.infer_batch(&inputs).expect("secure batch") {
-                            let traffic =
-                                rep.traffic.expect("networked engine meters traffic");
-                            bytes += traffic.c2s + traffic.s2c;
-                        }
-                    } else {
-                        for _ in 0..queries {
-                            let rep = engine.infer(&input).expect("secure inference");
-                            let traffic =
-                                rep.traffic.expect("networked engine meters traffic");
-                            bytes += traffic.c2s + traffic.s2c;
-                        }
-                    }
-                    (setup, bytes)
-                }));
-            }
-            let (mut setups, online_bytes): (Vec<Duration>, u64) = handles
-                .into_iter()
-                .map(|h| h.join().expect("client thread"))
-                .fold((Vec::new(), 0), |(mut v, b), (s, bytes)| {
-                    v.push(s);
-                    (v, b + bytes)
-                });
-            let wall = t0.elapsed();
-
-            let total = sessions * if batch > 0 { batch } else { queries };
-            let m = server.metrics.summary();
-            assert_eq!(m.requests as usize, total, "metered queries mismatch");
-            let ps = server.pool_stats();
-            // Scrape the endpoint while the server and its pool are still
-            // up: the occupancy gauge shows engines banked right now and
-            // `serve.query` holds this cell's server-side latencies (ns).
-            // Empty cells when --stats is off or obs is compiled out.
-            let (pool_occ, query_p99_ms) = match &stats_srv {
-                Some(srv) => {
-                    let body =
-                        cheetah::obs::stats::scrape(&srv.addr).expect("scrape stats endpoint");
-                    let snap = cheetah::obs::Snapshot::from_json(&body)
-                        .expect("stats endpoint must serve a schema-valid snapshot");
-                    let occ = snap
-                        .get("serve.pool.occupancy")
-                        .map(|m| m.value.to_string())
-                        .unwrap_or_default();
-                    let p99 = snap
-                        .get("serve.query")
-                        .and_then(|m| m.hist.as_ref().map(|h| h.percentile(99.0)))
-                        .map(|ns| format!("{:.3}", ns as f64 / 1e6))
-                        .unwrap_or_default();
-                    (occ, p99)
+    for &reactor in &modes {
+        for pool_on in [false, true] {
+            for &sessions in &small_counts {
+                // Scope the global obs registry to this cell so the scraped
+                // occupancy gauge and query histogram describe one server.
+                if stats {
+                    cheetah::obs::reset();
                 }
-                None => (String::new(), String::new()),
-            };
-            let setup_p50 = p50(&mut setups);
-            t.row(&[
-                sessions.to_string(),
-                if pool_on { format!("on (d={depth})") } else { "off".into() },
-                cheetah::util::fmt_duration(setup_p50),
-                cheetah::util::fmt_duration(m.p50),
-                format!("{:.2}s", wall.as_secs_f64()),
-                format!("{:.2}", total as f64 / wall.as_secs_f64()),
-                cheetah::util::fmt_bytes(online_bytes),
-                format!("{}/{}/{}", ps.produced, ps.pool_hits, ps.inline_builds),
-            ]);
-            jt.row(&[
-                sessions.to_string(),
-                if pool_on { depth.to_string() } else { "0".into() },
-                threads.to_string(),
-                batch.to_string(),
-                format!("{:.3}", setup_p50.as_secs_f64() * 1e3),
-                format!("{:.3}", m.p50.as_secs_f64() * 1e3),
-                format!("{:.3}", wall.as_secs_f64()),
-                format!("{:.3}", total as f64 / wall.as_secs_f64()),
-                online_bytes.to_string(),
-                ps.produced.to_string(),
-                ps.pool_hits.to_string(),
-                ps.inline_builds.to_string(),
-                pool_occ,
-                query_p99_ms,
-            ]);
-            server.shutdown();
+                let pool = if pool_on {
+                    PoolConfig { depth, workers: 1 }
+                } else {
+                    PoolConfig::disabled()
+                };
+                let cfg = SecureConfig {
+                    epsilon: 0.0,
+                    workers: sessions.min(4),
+                    pool,
+                    threads,
+                    reactor,
+                    ..Default::default()
+                };
+                let server =
+                    SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
+                        .expect("bind secure server");
+                if pool_on {
+                    // Warm the bank so the measurement sees the
+                    // offline/online split, not a cold-start artifact.
+                    server.wait_pool_ready(sessions.min(depth) as u64, Duration::from_secs(60));
+                }
+                let addr = server.addr;
+                let input = input_for(&net, 23);
+
+                let t0 = Instant::now();
+                let mut handles = Vec::new();
+                for s in 0..sessions {
+                    let input = input.clone();
+                    let ctx = ctx.clone();
+                    handles.push(std::thread::spawn(move || {
+                        // Each session is a `CheetahNet` engine pointed at
+                        // the shared server; `prepare()` is the measured
+                        // setup (handshake + offline indicator transfer).
+                        let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                            .context(ctx)
+                            .plan(plan)
+                            .seed(9000 + s as u64)
+                            .connect_to(addr)
+                            .build()
+                            .expect("secure engine");
+                        let t_setup = Instant::now();
+                        engine.prepare().expect("secure session setup");
+                        let setup = t_setup.elapsed();
+                        let mut bytes = 0u64;
+                        if batch > 0 {
+                            // One infer_batch call per session: the batch
+                            // path over a real socket (queries pipeline in
+                            // order on the session; per-query compute still
+                            // fans out).
+                            let inputs = vec![input.clone(); batch];
+                            for rep in engine.infer_batch(&inputs).expect("secure batch") {
+                                let traffic =
+                                    rep.traffic.expect("networked engine meters traffic");
+                                bytes += traffic.c2s + traffic.s2c;
+                            }
+                        } else {
+                            for _ in 0..queries {
+                                let rep = engine.infer(&input).expect("secure inference");
+                                let traffic =
+                                    rep.traffic.expect("networked engine meters traffic");
+                                bytes += traffic.c2s + traffic.s2c;
+                            }
+                        }
+                        (setup, bytes)
+                    }));
+                }
+                let (mut setups, online_bytes): (Vec<Duration>, u64) = handles
+                    .into_iter()
+                    .map(|h| h.join().expect("client thread"))
+                    .fold((Vec::new(), 0), |(mut v, b), (s, bytes)| {
+                        v.push(s);
+                        (v, b + bytes)
+                    });
+                let wall = t0.elapsed();
+
+                let total = sessions * if batch > 0 { batch } else { queries };
+                let m = server.metrics.summary();
+                assert_eq!(m.requests as usize, total, "metered queries mismatch");
+                let ps = server.pool_stats();
+                // Scrape while the server and its pool are still up.
+                let scraped = scrape(&stats_srv);
+                let cell = Cell {
+                    sessions,
+                    pool_depth: if pool_on { depth } else { 0 },
+                    batch,
+                    net_sessions: 1,
+                    reactor,
+                    setup_p50: p50(&mut setups),
+                    query_p50: m.p50,
+                    wall,
+                    total_queries: total,
+                    online_bytes,
+                    pool: (ps.produced, ps.pool_hits, ps.inline_builds),
+                    scraped,
+                };
+                record(&mut t, &mut jt, cell);
+                server.shutdown();
+            }
+        }
+
+        if reactor {
+            for &sessions in &big_counts {
+                if stats {
+                    cheetah::obs::reset();
+                }
+                let cfg = SecureConfig {
+                    epsilon: 0.0,
+                    workers: 4,
+                    pool: PoolConfig::disabled(),
+                    threads,
+                    reactor: true,
+                    ..Default::default()
+                };
+                let server =
+                    SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
+                        .expect("bind secure server");
+                let addr = server.addr;
+                let input = input_for(&net, 23);
+
+                // Bounded client drivers, each owning a slice of sessions:
+                // every session connects and stays open before any query
+                // runs, so `sessions` secure sessions are concurrently
+                // live on the server's handful of reactor+worker threads.
+                let drivers = 16.min(sessions);
+                let connected = Arc::new(Barrier::new(drivers + 1));
+                let go = Arc::new(Barrier::new(drivers + 1));
+                let t0 = Instant::now();
+                let mut handles = Vec::new();
+                for d in 0..drivers {
+                    let input = input.clone();
+                    let ctx = ctx.clone();
+                    let connected = connected.clone();
+                    let go = go.clone();
+                    handles.push(std::thread::spawn(move || {
+                        let mut engines = Vec::new();
+                        let mut setups = Vec::new();
+                        for s in (d..sessions).step_by(drivers) {
+                            let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                                .context(ctx.clone())
+                                .plan(plan)
+                                .seed(9000 + s as u64)
+                                .connect_to(addr)
+                                .build()
+                                .expect("secure engine");
+                            let t_setup = Instant::now();
+                            engine.prepare().expect("secure session setup");
+                            setups.push(t_setup.elapsed());
+                            engines.push(engine);
+                        }
+                        connected.wait();
+                        go.wait();
+                        let mut bytes = 0u64;
+                        for engine in &mut engines {
+                            for _ in 0..queries.max(1) {
+                                let rep = engine.infer(&input).expect("secure inference");
+                                let traffic =
+                                    rep.traffic.expect("networked engine meters traffic");
+                                bytes += traffic.c2s + traffic.s2c;
+                            }
+                        }
+                        (setups, bytes)
+                    }));
+                }
+                connected.wait();
+                let live = server.session_count();
+                assert_eq!(live, sessions, "all sessions must be concurrently live");
+                go.wait();
+                let (mut setups, online_bytes): (Vec<Duration>, u64) = handles
+                    .into_iter()
+                    .map(|h| h.join().expect("driver thread"))
+                    .fold((Vec::new(), 0), |(mut v, b), (s, bytes)| {
+                        v.extend(s);
+                        (v, b + bytes)
+                    });
+                let wall = t0.elapsed();
+
+                let total = sessions * queries.max(1);
+                let m = server.metrics.summary();
+                assert_eq!(m.requests as usize, total, "metered queries mismatch");
+                let scraped = scrape(&stats_srv);
+                let cell = Cell {
+                    sessions,
+                    pool_depth: 0,
+                    batch: 0,
+                    net_sessions: 1,
+                    reactor: true,
+                    setup_p50: p50(&mut setups),
+                    query_p50: m.p50,
+                    wall,
+                    total_queries: total,
+                    online_bytes,
+                    pool: (0, 0, 0),
+                    scraped,
+                };
+                record(&mut t, &mut jt, cell);
+                server.shutdown();
+            }
+        }
+
+        // Pooled-client experiment: one engine, k TCP sessions behind
+        // `infer_batch` — whole-query parallelism over the wire (compare
+        // the k=1 pipelining row with the k=K fan-out row).
+        if net_sessions > 1 {
+            for k in [1usize, net_sessions] {
+                if stats {
+                    cheetah::obs::reset();
+                }
+                let cfg = SecureConfig {
+                    epsilon: 0.0,
+                    workers: 4,
+                    pool: PoolConfig::disabled(),
+                    threads,
+                    reactor,
+                    ..Default::default()
+                };
+                let server =
+                    SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg)
+                        .expect("bind secure server");
+                let input = input_for(&net, 23);
+                let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                    .context(ctx.clone())
+                    .plan(plan)
+                    .seed(4100)
+                    .connect_to(server.addr)
+                    .net_sessions(k)
+                    .build()
+                    .expect("secure engine");
+                let t_setup = Instant::now();
+                engine.prepare().expect("pooled session setup");
+                let setup = t_setup.elapsed();
+                let inputs = vec![input; client_batch];
+                let t0 = Instant::now();
+                let reps = engine.infer_batch(&inputs).expect("pooled batch");
+                let wall = t0.elapsed();
+                let online_bytes = reps
+                    .iter()
+                    .map(|r| {
+                        let tr = r.traffic.expect("networked engine meters traffic");
+                        tr.c2s + tr.s2c
+                    })
+                    .sum();
+                let m = server.metrics.summary();
+                assert_eq!(m.requests as usize, client_batch, "metered queries mismatch");
+                let scraped = scrape(&stats_srv);
+                let cell = Cell {
+                    sessions: 1,
+                    pool_depth: 0,
+                    batch: client_batch,
+                    net_sessions: k,
+                    reactor,
+                    setup_p50: setup,
+                    query_p50: m.p50,
+                    wall,
+                    total_queries: client_batch,
+                    online_bytes,
+                    pool: (0, 0, 0),
+                    scraped,
+                };
+                record(&mut t, &mut jt, cell);
+                drop(engine);
+                server.shutdown();
+            }
         }
     }
 
@@ -275,7 +539,7 @@ fn main() {
     ));
     jt.write_json(
         "BENCH_serve.json",
-        "secure serving: wall/bytes per (sessions, pool, threads, batch)",
+        "secure serving: wall/bytes per (sessions, mode, pool, threads, batch, net_sessions)",
     )
     .expect("write BENCH_serve.json");
     println!("\nwrote BENCH_serve.json");

@@ -25,7 +25,7 @@ use crate::phe::Context;
 use crate::protocol::cheetah::CheetahRunner;
 use crate::protocol::gazelle::GazelleRunner;
 use crate::protocol::transport::LinkModel;
-use crate::serve::{CheetahNetClient, SecureConfig, SecureServer};
+use crate::serve::{CheetahNetClient, NetReport, SecureConfig, SecureServer};
 use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -433,29 +433,57 @@ pub enum NetTarget {
     },
 }
 
-/// CHEETAH over real sockets: a [`CheetahNetClient`] session, optionally
-/// backed by a self-hosted loopback [`SecureServer`].
+/// Client seed for pooled session `k`. Session 0 keeps the legacy
+/// domain-separated derivation (bit-compatible with single-session runs);
+/// later sessions run the SplitMix64 finalizer over a golden-ratio offset
+/// of it — well mixed, so no pooled session's RNG stream collides with
+/// another's, or with the server-side engine seeds `seed, seed+1, …` the
+/// way any small additive offset could.
+pub(crate) fn client_session_seed(seed: u64, k: usize) -> u64 {
+    let base = seed ^ CLIENT_SEED_DOMAIN;
+    if k == 0 {
+        return base;
+    }
+    let mut z = base.wrapping_add((k as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// CHEETAH over real sockets: a pool of [`CheetahNetClient`] sessions
+/// (size [`super::EngineBuilder::net_sessions`], default 1), optionally
+/// backed by a self-hosted loopback [`SecureServer`]. Single queries ride
+/// the first session; batches fan out across the pool.
 pub struct CheetahNetEngine {
     ctx: Arc<Context>,
     plan: ScalePlan,
     seed: u64,
+    sessions: usize,
     target: NetTarget,
     server: Option<SecureServer>,
-    client: Option<CheetahNetClient>,
+    clients: Vec<CheetahNetClient>,
     offline_bytes: u64,
     last: Option<EngineReport>,
 }
 
 impl CheetahNetEngine {
-    /// Build from a shared context, scale plan, seed, and server target.
-    pub fn new(ctx: Arc<Context>, plan: ScalePlan, seed: u64, target: NetTarget) -> Self {
+    /// Build from a shared context, scale plan, seed, server target, and
+    /// pooled-session count (`sessions` is clamped to at least 1).
+    pub fn new(
+        ctx: Arc<Context>,
+        plan: ScalePlan,
+        seed: u64,
+        target: NetTarget,
+        sessions: usize,
+    ) -> Self {
         Self {
             ctx,
             plan,
             seed,
+            sessions: sessions.max(1),
             target,
             server: None,
-            client: None,
+            clients: Vec::new(),
             offline_bytes: 0,
             last: None,
         }
@@ -464,6 +492,20 @@ impl CheetahNetEngine {
     /// The bound address of the self-hosted server (after `prepare`).
     pub fn server_addr(&self) -> Option<SocketAddr> {
         self.server.as_ref().map(|s| s.addr)
+    }
+
+    fn report_for(r: &NetReport, offline_bytes: u64) -> EngineReport {
+        let mut rep = EngineReport::bare(Backend::CheetahNet, r.argmax, r.logits.clone());
+        // Wall time over a real socket already includes wire time.
+        rep.timing =
+            Some(Timing { online_compute: r.wall, wire: Duration::ZERO, offline: Duration::ZERO });
+        rep.traffic = Some(Traffic {
+            c2s: r.c2s_bytes,
+            s2c: r.s2c_bytes,
+            offline: offline_bytes,
+            rounds: r.rounds,
+        });
+        rep
     }
 }
 
@@ -474,7 +516,9 @@ impl InferenceEngine for CheetahNetEngine {
 
     /// The offline phase over the wire: TCP connect, handshake (parameter
     /// fingerprint, architecture download) and indicator-ciphertext
-    /// transfer. Re-preparing opens a fresh session.
+    /// transfer — once per pooled session, sequentially (so a self-hosted
+    /// server's engine-seed assignment order is deterministic).
+    /// Re-preparing opens fresh sessions; offline bytes sum over the pool.
     fn prepare(&mut self) -> EngineResult<Prepared> {
         let t0 = Instant::now();
         let addr = match &self.target {
@@ -492,7 +536,7 @@ impl InferenceEngine for CheetahNetEngine {
                 self.server.as_ref().expect("just hosted").addr
             }
         };
-        if let Some(mut old) = self.client.take() {
+        for mut old in self.clients.drain(..) {
             old.close().ok();
         }
         // Client keys/shares from a domain-separated derivation of the
@@ -500,42 +544,81 @@ impl InferenceEngine for CheetahNetEngine {
         // engine seeds `seed, seed+1, …`, so a small additive offset would
         // collide a later session's server RNG stream with the client's
         // (identical secret keys ⇒ the client could unblind the weights).
-        let client_seed = self.seed ^ CLIENT_SEED_DOMAIN;
-        let client =
-            CheetahNetClient::connect(self.ctx.clone(), self.plan, &addr, client_seed)?;
-        self.offline_bytes = client.offline_bytes();
-        self.client = Some(client);
+        // Pooled sessions mix further; see [`client_session_seed`].
+        self.offline_bytes = 0;
+        for k in 0..self.sessions {
+            let client_seed = client_session_seed(self.seed, k);
+            let client =
+                CheetahNetClient::connect(self.ctx.clone(), self.plan, &addr, client_seed)?;
+            self.offline_bytes += client.offline_bytes();
+            self.clients.push(client);
+        }
         Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
     }
 
     fn infer(&mut self, input: &Tensor) -> EngineResult<EngineReport> {
-        if self.client.is_none() {
+        if self.clients.is_empty() {
             self.prepare()?;
         }
         let offline_bytes = self.offline_bytes;
-        let client = self.client.as_mut().expect("prepared above");
+        let client = self.clients.first_mut().expect("prepared above");
         let r = client.infer(input)?;
-        let mut rep = EngineReport::bare(Backend::CheetahNet, r.argmax, r.logits.clone());
-        // Wall time over a real socket already includes wire time.
-        rep.timing =
-            Some(Timing { online_compute: r.wall, wire: Duration::ZERO, offline: Duration::ZERO });
-        rep.traffic = Some(Traffic {
-            c2s: r.c2s_bytes,
-            s2c: r.s2c_bytes,
-            offline: offline_bytes,
-            rounds: r.rounds,
-        });
+        let rep = Self::report_for(&r, offline_bytes);
         self.last = Some(rep.clone());
         Ok(rep)
     }
 
     /// One TCP session is one ordered protocol stream — the server's
-    /// per-session state machine serializes rounds — so a batch pipelines
-    /// sequentially over the session (within-query compute on both ends
-    /// still fans out on the [`crate::par`] pool). Batch-parallelism over
-    /// TCP means one engine per session; see `benches/serve_bench.rs`.
+    /// per-session state machine serializes rounds — so within a session a
+    /// batch pipelines sequentially. With `net_sessions > 1` the batch is
+    /// split into contiguous chunks fanned across the pooled sessions on
+    /// scoped threads: whole-query parallelism over real sockets, the TCP
+    /// analogue of the in-process engines' batch fan-out. Per-query logits
+    /// depend only on each session's own seeds, so results are independent
+    /// of the pool size; report order matches input order.
     fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
-        inputs.iter().map(|x| self.infer(x)).collect()
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        if self.clients.is_empty() {
+            self.prepare()?;
+        }
+        if self.clients.len() == 1 || inputs.len() == 1 {
+            return inputs.iter().map(|x| self.infer(x)).collect();
+        }
+        let offline_bytes = self.offline_bytes;
+        let k = self.clients.len().min(inputs.len());
+        let per = inputs.len() / k;
+        let rem = inputs.len() % k;
+        let mut chunks: Vec<&[Tensor]> = Vec::with_capacity(k);
+        let mut start = 0;
+        for i in 0..k {
+            let len = per + usize::from(i < rem);
+            chunks.push(&inputs[start..start + len]);
+            start += len;
+        }
+        let results: Vec<std::io::Result<Vec<EngineReport>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .clients
+                .iter_mut()
+                .zip(chunks)
+                .map(|(client, chunk)| {
+                    s.spawn(move || {
+                        chunk
+                            .iter()
+                            .map(|x| client.infer(x).map(|r| Self::report_for(&r, offline_bytes)))
+                            .collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("net batch thread panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(inputs.len());
+        for chunk in results {
+            out.extend(chunk?);
+        }
+        self.last = out.last().cloned();
+        Ok(out)
     }
 
     fn report(&self) -> Option<&EngineReport> {
@@ -545,7 +628,7 @@ impl InferenceEngine for CheetahNetEngine {
 
 impl Drop for CheetahNetEngine {
     fn drop(&mut self) {
-        if let Some(mut c) = self.client.take() {
+        for mut c in self.clients.drain(..) {
             c.close().ok();
         }
         // A self-hosted server shuts itself down on drop.

@@ -184,9 +184,11 @@ pub trait InferenceEngine: Send {
     /// **bit-identical** to looping [`InferenceEngine::infer`] over the
     /// same inputs at every thread count and batch size (per-query RNG
     /// stream isolation; see the `protocol::cheetah::client` docs). The
-    /// networked backend pipelines the batch over its single ordered
-    /// session instead. Batch reports fill timing and traffic; per-step
-    /// breakdowns and HE op counts are single-query-mode features.
+    /// networked backend pipelines the batch over one ordered session —
+    /// or, with [`EngineBuilder::net_sessions`], fans whole queries
+    /// across its pooled sessions. Batch reports fill timing and
+    /// traffic; per-step breakdowns and HE op counts are
+    /// single-query-mode features.
     ///
     /// The default implementation loops over `infer`.
     fn infer_batch(&mut self, inputs: &[Tensor]) -> EngineResult<Vec<EngineReport>> {
@@ -245,6 +247,7 @@ pub struct EngineBuilder {
     remote: Option<SocketAddr>,
     secure: Option<SecureConfig>,
     threads: Option<usize>,
+    net_sessions: usize,
 }
 
 impl EngineBuilder {
@@ -264,6 +267,7 @@ impl EngineBuilder {
             remote: None,
             secure: None,
             threads: None,
+            net_sessions: 1,
         }
     }
 
@@ -336,6 +340,19 @@ impl EngineBuilder {
     /// (default: ε/seed from this builder, pool disabled, 2 workers).
     pub fn secure_config(mut self, cfg: SecureConfig) -> Self {
         self.secure = Some(cfg);
+        self
+    }
+
+    /// `CheetahNet`: pooled TCP sessions behind this one engine (default
+    /// 1; clamped to ≥ 1). Single [`InferenceEngine::infer`] calls ride
+    /// the first session; [`InferenceEngine::infer_batch`] splits the
+    /// batch across all `n` sessions on scoped threads — whole-query
+    /// parallelism over real sockets instead of pipelining every query
+    /// down one ordered round stream. Each session handshakes and ships
+    /// its own offline material; per-query results are independent of the
+    /// pool size.
+    pub fn net_sessions(mut self, n: usize) -> Self {
+        self.net_sessions = n.max(1);
         self
     }
 
@@ -439,6 +456,7 @@ impl EngineBuilder {
                     self.plan,
                     self.seed,
                     target,
+                    self.net_sessions,
                 ))
             }
         };
@@ -544,6 +562,72 @@ mod tests {
         let reps = quant.infer_batch(&[sample.image.clone(), sample.image]).unwrap();
         assert_eq!(reps.len(), 2);
         assert_eq!(reps[0].argmax, q.argmax);
+    }
+
+    /// A pooled networked engine (`net_sessions > 1`) keeps reports in
+    /// input order and computes exactly what a hand-rolled client pool
+    /// computes: pooled session `k` pairs server engine seed `base+k`
+    /// (sequential connects, pool disabled) with the mixed client seed
+    /// `client_session_seed(seed, k)`, so replaying that pairing against a
+    /// second identically-seeded server must reproduce every logit.
+    #[test]
+    fn pooled_net_sessions_preserve_order_and_results() {
+        use crate::nn::Layer;
+        use crate::serve::{CheetahNetClient, SecureServer};
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "pool-test".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
+        };
+        net.init_weights(19);
+        let cfg = SecureConfig {
+            workers: 2,
+            seed: Some(17),
+            pool: PoolConfig::disabled(),
+            ..SecureConfig::default()
+        };
+        let inputs: Vec<Tensor> = (0..5)
+            .map(|i| {
+                let data = (0..25).map(|j| (j as f64 - 12.0) / 13.0 + i as f64 * 0.01).collect();
+                Tensor::from_vec(data, 1, 5, 5)
+            })
+            .collect();
+
+        // Reference: a manual pool of 3 sessions against server A, fed the
+        // same contiguous chunks the engine's batch splitter produces
+        // (5 over 3 → lengths 2, 2, 1).
+        let server_a =
+            SecureServer::serve(ctx.clone(), net.clone(), plan, "127.0.0.1:0", cfg).unwrap();
+        let mut want: Vec<Vec<f64>> = Vec::new();
+        let chunks: [&[Tensor]; 3] = [&inputs[0..2], &inputs[2..4], &inputs[4..5]];
+        for (k, chunk) in chunks.iter().enumerate() {
+            let seed = backends::client_session_seed(17, k);
+            let mut c = CheetahNetClient::connect(ctx.clone(), plan, &server_a.addr, seed).unwrap();
+            for x in *chunk {
+                want.push(c.infer(x).unwrap().logits);
+            }
+            c.bye().unwrap();
+        }
+        server_a.shutdown();
+
+        // Pooled engine against server B (same seeds, fresh sessions).
+        let server_b = SecureServer::serve(ctx.clone(), net, plan, "127.0.0.1:0", cfg).unwrap();
+        let mut engine = EngineBuilder::new(Backend::CheetahNet)
+            .connect_to(server_b.addr)
+            .context(ctx)
+            .plan(plan)
+            .seed(17)
+            .net_sessions(3)
+            .build()
+            .unwrap();
+        let reps = engine.infer_batch(&inputs).unwrap();
+        assert_eq!(reps.len(), inputs.len());
+        let got: Vec<Vec<f64>> = reps.iter().map(|r| r.logits.clone()).collect();
+        assert_eq!(got, want, "pooled batch diverged from the manual session pool");
+        drop(engine);
+        server_b.shutdown();
     }
 
     #[test]

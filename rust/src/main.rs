@@ -6,6 +6,8 @@
 //!                       [--pool-workers N] [--workers N] [--eps E]
 //!                       [--seed S]  (blinding seed; default: OS entropy)
 //!                       [--threads T]  (compute threads; 0 = all cores)
+//!                       [--reactor]  (readiness event loop instead of thread-per-connection; unix)
+//!                       [--max-sessions N]  (reactor connection cap; default 4096)
 //!                       [--stats-addr A]  (live telemetry endpoint; e.g. 127.0.0.1:9911)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
 //!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
@@ -42,6 +44,11 @@ fn arg(flag: &str, default: &str) -> String {
         .and_then(|i| args.get(i + 1))
         .cloned()
         .unwrap_or_else(|| default.to_string())
+}
+
+/// Bare boolean flag (`--reactor`): present or not, no value.
+fn has(flag: &str) -> bool {
+    std::env::args().any(|a| a == flag)
 }
 
 /// Trained weights when `make artifacts` ran, otherwise a seeded random
@@ -95,6 +102,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             // Blinding seed: OS entropy unless pinned for reproducibility.
             let seed_arg = arg("--seed", "");
             let seed = if seed_arg.is_empty() { None } else { Some(seed_arg.parse()?) };
+            // The C10K front: one event-loop thread over nonblocking
+            // sockets instead of one reader thread per connection.
+            let reactor = has("--reactor");
+            let max_sessions: usize = arg("--max-sessions", "4096").parse()?;
             let net = model_or_fallback(&model);
             let name = net.name.clone();
             let ctx = Arc::new(Context::new(Params::default_params()));
@@ -104,6 +115,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 workers,
                 pool: PoolConfig { depth: pool_depth, workers: pool_workers },
                 threads,
+                reactor,
+                max_sessions,
                 ..SecureConfig::default()
             };
             let server =
@@ -122,10 +135,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             // process default.
             let effective_threads =
                 if threads > 0 { threads } else { cheetah::par::threads() };
+            let front = if reactor { "reactor" } else { "threads" };
             println!(
-                "secure CHEETAH serving of {name} on {} (ε={eps}, {workers} workers, \
-                 {effective_threads} compute threads, pool depth {pool_depth}×{pool_workers}) \
-                 — Ctrl-C to stop",
+                "secure CHEETAH serving of {name} on {} ({front} front, ε={eps}, \
+                 {workers} workers, {effective_threads} compute threads, \
+                 pool depth {pool_depth}×{pool_workers}) — Ctrl-C to stop",
                 server.addr,
             );
             loop {

@@ -9,5 +9,4 @@
 pub mod cheetah;
 #[allow(missing_docs)] // legacy module: rustdoc coverage tracked in README
 pub mod gazelle;
-#[allow(missing_docs)] // legacy module: rustdoc coverage tracked in README
 pub mod transport;

@@ -15,14 +15,18 @@ use std::time::Duration;
 /// Direction of a transfer, for accounting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dir {
+    /// Client → server (query shares, recovery requests).
     ClientToServer,
+    /// Server → client (offline indicators, products, recovered values).
     ServerToClient,
 }
 
 /// A link cost model: RTT and symmetric bandwidth.
 #[derive(Clone, Copy, Debug)]
 pub struct LinkModel {
+    /// Round-trip time; half is charged per one-way transfer.
     pub rtt: Duration,
+    /// Symmetric link bandwidth in bits per second.
     pub bandwidth_bps: f64,
 }
 
@@ -48,15 +52,20 @@ impl LinkModel {
 /// Accumulated traffic statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct TrafficStats {
+    /// Bytes sent client → server.
     pub c2s_bytes: u64,
+    /// Bytes sent server → client.
     pub s2c_bytes: u64,
+    /// Messages sent client → server.
     pub c2s_msgs: u64,
+    /// Messages sent server → client.
     pub s2c_msgs: u64,
     /// Number of communication *rounds* (direction flips).
     pub rounds: u64,
 }
 
 impl TrafficStats {
+    /// Total bytes over the link, both directions.
     pub fn total_bytes(&self) -> u64 {
         self.c2s_bytes + self.s2c_bytes
     }
@@ -66,6 +75,7 @@ impl TrafficStats {
 /// modeled wire time. The benchmarks pass serialized sizes here rather than
 /// moving real buffers; the TCP mode moves real bytes.
 pub struct MeteredChannel {
+    /// The link cost model transfers are priced against.
     pub link: LinkModel,
     stats: TrafficStats,
     last_dir: Option<Dir>,
@@ -74,6 +84,7 @@ pub struct MeteredChannel {
 }
 
 impl MeteredChannel {
+    /// A fresh channel with zeroed counters over the given link model.
     pub fn new(link: LinkModel) -> Self {
         Self { link, stats: TrafficStats::default(), last_dir: None, wire_time: Duration::ZERO }
     }
@@ -97,10 +108,12 @@ impl MeteredChannel {
         self.wire_time += self.link.transfer_time(bytes);
     }
 
+    /// Snapshot of the accumulated counters.
     pub fn stats(&self) -> TrafficStats {
         self.stats
     }
 
+    /// Zero all counters and the modeled wire time.
     pub fn reset(&mut self) {
         self.stats = TrafficStats::default();
         self.last_dir = None;

@@ -18,9 +18,21 @@
 //!   TCP flow control pushes back on the client (no unbounded buffering),
 //! * [`CheetahNetClient`] — drives a full private inference over a socket.
 //!
-//! Threading model: one blocking accept thread (woken for shutdown via
-//! [`StoppableListener`]), one reader thread per connection, and a fixed
-//! worker pool. Rounds are routed to worker `session_id % workers`, so one
+//! Threading model — two serving fronts behind one [`SecureServer`]
+//! surface, selected by [`SecureConfig::reactor`]:
+//!
+//! * **Threads front** (default): one blocking accept thread (woken for
+//!   shutdown via [`StoppableListener`]), one reader thread per
+//!   connection, and a fixed worker pool — simple, but session count is
+//!   capped by OS threads.
+//! * **Reactor front** ([`reactor`], unix only): one event-loop thread
+//!   multiplexes every connection over nonblocking sockets and an
+//!   epoll/poll readiness poller, with incremental frame reassembly and
+//!   per-connection write queues — thousands of concurrent sessions on a
+//!   handful of threads, with idle reaping, slow-client eviction, and
+//!   graceful `EMFILE` handling.
+//!
+//! Either way, rounds are routed to worker `session_id % workers`, so one
 //! session's rounds execute in order while different sessions run in
 //! parallel. Engines score through the stateless `&self` core (per-query
 //! share state lives in the [`Session`]), so concurrent sessions never
@@ -42,6 +54,8 @@
 //! the server it chose to connect to.
 
 pub mod precompute;
+#[cfg(unix)]
+pub mod reactor;
 pub mod session;
 pub mod wire;
 
@@ -81,9 +95,27 @@ pub struct SecureConfig {
     pub queue_depth: usize,
     /// Maximum accepted frame payload (defense against corrupt lengths).
     pub max_frame: usize,
-    /// Timeout on server→client writes: a client that stops reading fails
-    /// its replies (and loses its connection) instead of parking a worker.
+    /// Server→client write deadline. Threads front: socket write timeout,
+    /// so a client that stops reading fails its replies instead of parking
+    /// a worker. Reactor front: a connection whose queued output makes no
+    /// progress for this long is evicted.
     pub write_timeout: Duration,
+    /// Serve through the readiness reactor (one event-loop thread over
+    /// nonblocking sockets; unix only — see [`reactor`]) instead of
+    /// thread-per-connection. Protocol, wire format, and results are
+    /// identical on both fronts.
+    pub reactor: bool,
+    /// Reactor front only: maximum concurrent connections. At the cap the
+    /// listener pauses (counted in `serve.reactor.accept_stalls`) and
+    /// resumes as connections close.
+    pub max_sessions: usize,
+    /// Reactor front only: connections idle this long (no inbound bytes,
+    /// nothing queued or in flight) are reaped. Zero disables reaping.
+    pub idle_timeout: Duration,
+    /// Reactor front only: per-connection write-queue bound in bytes. A
+    /// client that lets this much output pile up is evicted instead of
+    /// buffered unboundedly (`0` = unbounded).
+    pub max_write_queue: usize,
     /// Compute threads for the parallel runtime ([`crate::par`]):
     /// per-channel ciphertext streams, NTT batches, and pool builds all
     /// fan out over this many threads. `0` (the default) keeps the global
@@ -106,6 +138,10 @@ impl Default for SecureConfig {
             queue_depth: 8,
             max_frame: DEFAULT_MAX_FRAME_LEN,
             write_timeout: Duration::from_secs(30),
+            reactor: false,
+            max_sessions: 4096,
+            idle_timeout: Duration::from_secs(300),
+            max_write_queue: 64 << 20,
             threads: 0,
         }
     }
@@ -139,11 +175,34 @@ enum Job {
     Round { session_id: u64, tag: u8, payload: Vec<u8>, writer: Arc<Mutex<TcpStream>> },
 }
 
-fn send_error(writer: &Arc<Mutex<TcpStream>>, sid: u64, code: u16, msg: &str) {
-    let payload = wire::encode_error(sid, code, msg);
-    if let Ok(mut w) = writer.lock() {
-        let _ = write_frame(&mut *w, wire::TAG_ERROR, &payload);
+/// Where a handler's reply frames go: the threads front's write-locked
+/// socket, or a connection's reactor write queue. `send` returns `false`
+/// when the connection is gone — the handler stops and retires the
+/// session it was serving. Frames are atomic per send; ordering across
+/// sessions multiplexed on one connection is unspecified (each frame
+/// carries its session id).
+trait ReplySink {
+    /// Ship one frame; `false` means the connection is dead.
+    fn send(&mut self, tag: u8, payload: &[u8]) -> bool;
+}
+
+/// [`ReplySink`] over the threads front's shared, write-locked socket.
+struct StreamSink<'a> {
+    writer: &'a Arc<Mutex<TcpStream>>,
+}
+
+impl ReplySink for StreamSink<'_> {
+    fn send(&mut self, tag: u8, payload: &[u8]) -> bool {
+        match self.writer.lock() {
+            Ok(mut w) => write_or_hangup(&mut w, tag, payload),
+            Err(_) => false,
+        }
     }
+}
+
+fn send_error(sink: &mut dyn ReplySink, sid: u64, code: u16, msg: &str) {
+    let payload = wire::encode_error(sid, code, msg);
+    let _ = sink.send(wire::TAG_ERROR, &payload);
 }
 
 /// A running secure server. All threads are joined by [`SecureServer::shutdown`].
@@ -154,11 +213,23 @@ pub struct SecureServer {
     pub metrics: Arc<Metrics>,
     registry: Arc<SessionRegistry>,
     pool: Arc<BlindingPool>,
-    stop: Arc<AtomicBool>,
-    accept_thread: Mutex<Option<JoinHandle<()>>>,
-    conns: Arc<LiveConns>,
     worker_threads: Mutex<Vec<JoinHandle<()>>>,
-    worker_txs: Mutex<Option<Arc<Vec<SyncSender<Job>>>>>,
+    front: Front,
+}
+
+/// The listener/dispatch machinery behind a [`SecureServer`] — one of the
+/// two serving fronts ([`SecureConfig::reactor`] picks at bind time).
+enum Front {
+    /// Thread-per-connection: blocking readers + bounded worker queues.
+    Threads {
+        stop: Arc<AtomicBool>,
+        accept_thread: Mutex<Option<JoinHandle<()>>>,
+        conns: Arc<LiveConns>,
+        worker_txs: Mutex<Option<Arc<Vec<SyncSender<Job>>>>>,
+    },
+    /// One readiness event loop multiplexing every connection (unix only).
+    #[cfg(unix)]
+    Reactor { handle: reactor::ReactorHandle },
 }
 
 impl SecureServer {
@@ -174,9 +245,6 @@ impl SecureServer {
         cfg: SecureConfig,
     ) -> std::io::Result<SecureServer> {
         plan.check_fits(ctx.params.p);
-        let listener = StoppableListener::bind(addr)?;
-        let local = listener.addr;
-        let stop = listener.stop_flag();
         let metrics = Arc::new(Metrics::new());
         let registry = Arc::new(SessionRegistry::new());
         let base_seed = cfg
@@ -205,6 +273,13 @@ impl SecureServer {
             pool: pool.clone(),
         });
 
+        if cfg.reactor {
+            return serve_reactor(shared, metrics, registry, pool, addr, cfg);
+        }
+
+        let listener = StoppableListener::bind(addr)?;
+        let local = listener.addr;
+        let stop = listener.stop_flag();
         let n_workers = cfg.workers.max(1);
         let mut txs = Vec::with_capacity(n_workers);
         let mut worker_threads = Vec::with_capacity(n_workers);
@@ -263,11 +338,13 @@ impl SecureServer {
             metrics,
             registry,
             pool,
-            stop,
-            accept_thread: Mutex::new(Some(accept_thread)),
-            conns,
             worker_threads: Mutex::new(worker_threads),
-            worker_txs: Mutex::new(Some(txs)),
+            front: Front::Threads {
+                stop,
+                accept_thread: Mutex::new(Some(accept_thread)),
+                conns,
+                worker_txs: Mutex::new(Some(txs)),
+            },
         })
     }
 
@@ -287,14 +364,22 @@ impl SecureServer {
         self.registry.len()
     }
 
-    /// Stop accepting, close every live connection, and join the accept,
-    /// reader, worker, and pool threads. Idempotent.
+    /// Stop accepting, close every live connection, and join the accept
+    /// (or reactor), reader, worker, and pool threads. Idempotent.
     pub fn shutdown(&self) {
-        stop_accept_thread(&self.stop, self.addr, &self.accept_thread);
-        // Closing the sockets unblocks readers parked in read_frame.
-        self.conns.close_and_join();
-        // Dropping the senders disconnects the worker queues.
-        self.worker_txs.lock().unwrap().take();
+        match &self.front {
+            Front::Threads { stop, accept_thread, conns, worker_txs } => {
+                stop_accept_thread(stop, self.addr, accept_thread);
+                // Closing the sockets unblocks readers parked in read_frame.
+                conns.close_and_join();
+                // Dropping the senders disconnects the worker queues.
+                worker_txs.lock().unwrap().take();
+            }
+            // Joining the reactor thread drops its connections and worker
+            // senders, which in turn disconnects the worker queues below.
+            #[cfg(unix)]
+            Front::Reactor { handle } => handle.shutdown(),
+        }
         let workers: Vec<JoinHandle<()>> =
             self.worker_threads.lock().unwrap().drain(..).collect();
         for h in workers {
@@ -303,6 +388,46 @@ impl SecureServer {
         self.registry.clear();
         self.pool.shutdown();
     }
+}
+
+/// Bind and launch the [`reactor`] front (unix only — see
+/// [`SecureConfig::reactor`]).
+#[cfg(unix)]
+fn serve_reactor(
+    shared: Arc<ServeShared>,
+    metrics: Arc<Metrics>,
+    registry: Arc<SessionRegistry>,
+    pool: Arc<BlindingPool>,
+    addr: &str,
+    cfg: SecureConfig,
+) -> std::io::Result<SecureServer> {
+    let listener = std::net::TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    let (handle, worker_threads) = reactor::spawn(listener, shared, cfg)?;
+    Ok(SecureServer {
+        addr: local,
+        metrics,
+        registry,
+        pool,
+        worker_threads: Mutex::new(worker_threads),
+        front: Front::Reactor { handle },
+    })
+}
+
+/// The reactor front needs readiness polling; refuse cleanly elsewhere.
+#[cfg(not(unix))]
+fn serve_reactor(
+    _shared: Arc<ServeShared>,
+    _metrics: Arc<Metrics>,
+    _registry: Arc<SessionRegistry>,
+    _pool: Arc<BlindingPool>,
+    _addr: &str,
+    _cfg: SecureConfig,
+) -> std::io::Result<SecureServer> {
+    Err(std::io::Error::new(
+        std::io::ErrorKind::Unsupported,
+        "SecureConfig::reactor requires a unix target (epoll/poll readiness)",
+    ))
 }
 
 impl Drop for SecureServer {
@@ -358,7 +483,8 @@ fn read_frames(
         match tag {
             wire::TAG_HELLO => {
                 if let Err(e) = wire::decode_hello(&payload) {
-                    send_error(writer, 0, wire::ERR_UNSUPPORTED, &e.to_string());
+                    let mut sink = StreamSink { writer };
+                    send_error(&mut sink, 0, wire::ERR_UNSUPPORTED, &e.to_string());
                     return;
                 }
                 let w = (rr.fetch_add(1, Ordering::Relaxed) as usize) % txs.len();
@@ -382,7 +508,8 @@ fn read_frames(
                 let sid = match wire::peek_session_id(&payload) {
                     Ok(s) => s,
                     Err(e) => {
-                        send_error(writer, 0, wire::ERR_PROTOCOL, &e.to_string());
+                        let mut sink = StreamSink { writer };
+                        send_error(&mut sink, 0, wire::ERR_PROTOCOL, &e.to_string());
                         return;
                     }
                 };
@@ -393,8 +520,9 @@ fn read_frames(
                 }
             }
             other => {
+                let mut sink = StreamSink { writer };
                 send_error(
-                    writer,
+                    &mut sink,
                     0,
                     wire::ERR_PROTOCOL,
                     &format!("unknown frame tag {other:#04x}"),
@@ -408,9 +536,13 @@ fn read_frames(
 fn worker_loop(rx: Receiver<Job>, shared: Arc<ServeShared>) {
     for job in rx {
         match job {
-            Job::Hello { writer, conn } => handle_hello(&shared, &writer, &conn),
+            Job::Hello { writer, conn } => {
+                let mut sink = StreamSink { writer: &writer };
+                handle_hello(&shared, &mut sink, &conn);
+            }
             Job::Round { session_id, tag, payload, writer } => {
-                handle_round(&shared, session_id, tag, &payload, &writer)
+                let mut sink = StreamSink { writer: &writer };
+                handle_round(&shared, session_id, tag, &payload, &mut sink);
             }
         }
     }
@@ -428,7 +560,7 @@ fn write_or_hangup(w: &mut TcpStream, tag: u8, payload: &[u8]) -> bool {
     true
 }
 
-fn handle_hello(shared: &ServeShared, writer: &Arc<Mutex<TcpStream>>, conn: &Arc<ConnState>) {
+fn handle_hello(shared: &ServeShared, sink: &mut dyn ReplySink, conn: &Arc<ConnState>) {
     let engine = Arc::new(shared.pool.take());
     let (sid, session) = shared.registry.create(engine);
     // Tie the session to its connection; if the connection closed while we
@@ -448,12 +580,7 @@ fn handle_hello(shared: &ServeShared, writer: &Arc<Mutex<TcpStream>>, conn: &Arc
         n_steps as u32,
         &shared.net,
     );
-    let mut w = match writer.lock() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    if !write_or_hangup(&mut w, wire::TAG_HELLO_OK, &hello_ok) {
-        drop(w);
+    if !sink.send(wire::TAG_HELLO_OK, &hello_ok) {
         shared.registry.remove(sid);
         return;
     }
@@ -465,13 +592,12 @@ fn handle_hello(shared: &ServeShared, writer: &Arc<Mutex<TcpStream>>, conn: &Arc
         let mut payload = wire::round_header(sid, si as u32);
         wire::encode_cts(&mut payload, id1);
         wire::encode_cts(&mut payload, id2);
-        if !write_or_hangup(&mut w, wire::TAG_OFFLINE_IDS, &payload) {
-            drop(w);
+        if !sink.send(wire::TAG_OFFLINE_IDS, &payload) {
             shared.registry.remove(sid);
             return;
         }
     }
-    let _ = write_or_hangup(&mut w, wire::TAG_OFFLINE_DONE, &sid.to_le_bytes());
+    let _ = sink.send(wire::TAG_OFFLINE_DONE, &sid.to_le_bytes());
 }
 
 fn handle_round(
@@ -479,14 +605,14 @@ fn handle_round(
     session_id: u64,
     tag: u8,
     payload: &[u8],
-    writer: &Arc<Mutex<TcpStream>>,
+    sink: &mut dyn ReplySink,
 ) {
     if tag == wire::TAG_BYE {
         shared.registry.remove(session_id);
         return;
     }
     let Some(session) = shared.registry.get(session_id) else {
-        send_error(writer, session_id, wire::ERR_PROTOCOL, "unknown session");
+        send_error(sink, session_id, wire::ERR_PROTOCOL, "unknown session");
         return;
     };
     let mut r = wire::ByteReader::new(payload);
@@ -495,7 +621,7 @@ fn handle_round(
     let (step, cts) = match decoded {
         Ok(d) => d,
         Err(e) => {
-            send_error(writer, session_id, wire::ERR_PROTOCOL, &e.to_string());
+            send_error(sink, session_id, wire::ERR_PROTOCOL, &e.to_string());
             shared.registry.remove(session_id);
             return;
         }
@@ -511,12 +637,10 @@ fn handle_round(
     };
     match result {
         Ok((reply_tag, reply)) => {
-            if let Ok(mut w) = writer.lock() {
-                let _ = write_or_hangup(&mut w, reply_tag, &reply);
-            }
+            let _ = sink.send(reply_tag, &reply);
         }
         Err(violation) => {
-            send_error(writer, session_id, wire::ERR_PROTOCOL, &violation.to_string());
+            send_error(sink, session_id, wire::ERR_PROTOCOL, &violation.to_string());
             shared.registry.remove(session_id);
         }
     }
@@ -887,6 +1011,145 @@ mod tests {
         assert!(snap.metrics.is_empty());
         // The session survives the admin frame: a second query still works.
         client.infer(&test_input(0.05)).unwrap();
+        client.bye().unwrap();
+        server.shutdown();
+    }
+
+    /// The reactor front is protocol- and bit-identical to the threads
+    /// front: pinned seeds, sequential session setup, then concurrent
+    /// queries — per-session logits must match exactly at 2 and at 64
+    /// concurrent sessions.
+    ///
+    /// Sequential connects pin the engine-seed assignment order (`base`,
+    /// `base+1`, …, pool disabled) so session `k` gets the same blinding
+    /// material on both fronts; the queries themselves then run fully
+    /// concurrently.
+    #[cfg(unix)]
+    #[test]
+    fn reactor_matches_threads_front_bit_exactly() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let net = tiny_net(13);
+        for &n_sessions in &[2usize, 64] {
+            let mut per_front: Vec<Vec<Vec<f64>>> = Vec::new();
+            for &reactor in &[false, true] {
+                let server = SecureServer::serve(
+                    ctx.clone(),
+                    net.clone(),
+                    plan,
+                    "127.0.0.1:0",
+                    SecureConfig {
+                        workers: 2,
+                        seed: Some(501),
+                        pool: PoolConfig::disabled(),
+                        reactor,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let mut clients: Vec<CheetahNetClient> = (0..n_sessions)
+                    .map(|k| {
+                        let seed = 9000 + k as u64;
+                        CheetahNetClient::connect(ctx.clone(), plan, &server.addr, seed).unwrap()
+                    })
+                    .collect();
+                assert_eq!(server.session_count(), n_sessions);
+                let logits: Vec<Vec<f64>> = std::thread::scope(|s| {
+                    let handles: Vec<_> = clients
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(k, c)| {
+                            s.spawn(move || c.infer(&test_input(k as f64 * 0.01)).unwrap().logits)
+                        })
+                        .collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+                for c in &mut clients {
+                    c.close().unwrap();
+                }
+                server.shutdown();
+                per_front.push(logits);
+            }
+            assert_eq!(per_front[0], per_front[1], "fronts diverged at {n_sessions} sessions");
+        }
+    }
+
+    /// With a lowered fd ulimit (CI: `ulimit -n 256`), the reactor sheds
+    /// fd exhaustion gracefully: accepting pauses (counted in
+    /// `serve.reactor.accept_stalls`) instead of busy-spinning or dying,
+    /// and serving resumes once fds free up. Opt-in via
+    /// `CHEETAH_FD_LIMIT_TEST` because it deliberately exhausts the
+    /// process fd table (CI runs it alone, single-threaded).
+    #[cfg(all(unix, not(feature = "obs-off")))]
+    #[test]
+    fn reactor_sheds_emfile_and_resumes_accepting() {
+        if std::env::var("CHEETAH_FD_LIMIT_TEST").is_err() {
+            eprintln!("skipping: set CHEETAH_FD_LIMIT_TEST=1 (under a low `ulimit -n`) to run");
+            return;
+        }
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(6),
+            plan,
+            "127.0.0.1:0",
+            SecureConfig {
+                seed: Some(31),
+                pool: PoolConfig::disabled(),
+                reactor: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let stalls = || {
+            let snap = crate::obs::snapshot();
+            snap.get("serve.reactor.accept_stalls").map(|m| m.value).unwrap_or(0)
+        };
+        let base = stalls();
+
+        // Exhaust the fd table: raw connects first (each pins fds on both
+        // ends of this process), then /dev/null handles for the remainder.
+        let mut flood = Vec::new();
+        while let Ok(s) = TcpStream::connect(server.addr) {
+            flood.push(s);
+            if flood.len() > 4096 {
+                break; // ulimit not actually low; the cap path still stalls
+            }
+        }
+        let mut nulls = Vec::new();
+        while let Ok(f) = std::fs::File::open("/dev/null") {
+            nulls.push(f);
+            if nulls.len() > 4096 {
+                break;
+            }
+        }
+        // Free exactly one fd so one more connect can park in the kernel
+        // backlog while the server's accept still fails with EMFILE.
+        drop(nulls.pop());
+        let parked = TcpStream::connect(server.addr);
+
+        let t0 = Instant::now();
+        while stalls() <= base {
+            assert!(t0.elapsed() < Duration::from_secs(10), "no accept stall recorded");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // Free the fds: accepting must resume and serving must work again.
+        drop(parked);
+        drop(flood);
+        drop(nulls);
+        let t0 = Instant::now();
+        let mut client = loop {
+            match CheetahNetClient::connect(ctx.clone(), plan, &server.addr, 77) {
+                Ok(c) => break c,
+                Err(_) => {
+                    assert!(t0.elapsed() < Duration::from_secs(10), "accept never resumed");
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        };
+        client.infer(&test_input(0.0)).unwrap();
         client.bye().unwrap();
         server.shutdown();
     }

@@ -1,0 +1,824 @@
+//! The readiness reactor: the C10K serving front behind
+//! [`SecureConfig::reactor`](super::SecureConfig::reactor).
+//!
+//! The thread-per-session front ([`super::SecureServer`]'s default) caps
+//! session count at OS-thread count. This module replaces it with one
+//! event-loop thread multiplexing every connection over a level-triggered
+//! readiness poller ([`sys::Poller`] — raw `epoll` on Linux, `poll(2)`
+//! elsewhere on unix; no new crates), so a handful of reactor + worker
+//! threads serve thousands of concurrent sessions:
+//!
+//! * **Nonblocking I/O, incremental framing.** Every socket is
+//!   nonblocking. Inbound bytes accumulate in a per-connection
+//!   [`wire::FrameAssembler`]; outbound frames queue in a per-connection
+//!   [`OutBuf`] that the reactor drains opportunistically and finishes on
+//!   `EPOLLOUT` after a `WouldBlock`.
+//! * **Compute off the loop.** A completed frame becomes a [`WorkerMsg`]
+//!   dispatched to session-sticky protocol workers (`session_id %
+//!   workers`, HELLOs round-robin) — the same handlers as the threads
+//!   front, each worker's fan-out pinned via [`crate::par::with_threads`].
+//!   The reactor thread itself never computes a round.
+//! * **Bounded everything.** At most one frame per connection is in
+//!   flight at a worker; further frames park in a small per-connection
+//!   queue, and past [`PARK_CAP`] the reactor drops the socket's read
+//!   interest so TCP flow control pushes back on the client. Worker
+//!   channels are unbounded but can hold at most one message per
+//!   connection, so memory stays bounded by connection count.
+//! * **Backpressure and eviction.** Idle connections (no bytes, no work)
+//!   are reaped after `idle_timeout`; a client that stops reading while
+//!   output is queued is evicted after `write_timeout` without progress,
+//!   or immediately once its write queue exceeds `max_write_queue` —
+//!   the server never buffers unboundedly for a slow client.
+//! * **Graceful fd exhaustion.** `EMFILE`/`ENFILE` (or the
+//!   `max_sessions` cap) pauses accepting — the listener is deregistered
+//!   so level-triggered readiness cannot spin — and accepting resumes as
+//!   soon as a connection closes. Counted in
+//!   `serve.reactor.accept_stalls`.
+//! * **STATS stays inline.** The admin frame is answered on the reactor
+//!   thread from the lock-free telemetry snapshot and bypasses the worker
+//!   queues entirely, so it can neither stall behind nor stall queued
+//!   rounds — the same property the threads front gives it.
+//!
+//! Wakeups from worker completions ride a `UnixStream` pair with an
+//! atomic coalescing flag (at most one wake byte in flight), so a burst
+//! of completions costs one `epoll_wait` return. Telemetry:
+//! `serve.reactor.sessions` / `.sessions_peak` (gauges),
+//! `.wakeups`, `.accept_stalls`, `.idle_evictions`, `.slow_evictions`
+//! (counters), and `.write_queue_depth` (gauge, bytes queued server-wide).
+
+pub(crate) mod sys;
+
+use super::wire;
+use super::{handle_hello, handle_round, ConnState, ReplySink, SecureConfig, ServeShared};
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Parked frames per connection before the reactor stops reading that
+/// socket and lets TCP flow control push back on the client.
+const PARK_CAP: usize = 32;
+
+/// Max bytes read from one connection per wakeup — fairness under a
+/// flood; the level-triggered poller re-fires for the remainder.
+const READ_BUDGET: usize = 256 * 1024;
+
+/// Poll timeout, which doubles as the sweep cadence for idle-session
+/// reaping and write-timeout enforcement.
+const SWEEP_MS: u64 = 250;
+
+/// Per-connection outbound frame queue, shared between the worker that
+/// produces replies and the reactor that drains them to the socket.
+struct OutBuf {
+    frames: Mutex<VecDeque<Vec<u8>>>,
+    bytes: AtomicUsize,
+    closed: AtomicBool,
+}
+
+impl OutBuf {
+    fn new() -> Self {
+        Self {
+            frames: Mutex::new(VecDeque::new()),
+            bytes: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+        }
+    }
+
+    /// Queue one encoded frame for the reactor to drain. Returns `false`
+    /// once the connection is gone (frame dropped) — callers treat that
+    /// exactly like a failed socket write.
+    fn push(&self, tag: u8, payload: &[u8]) -> bool {
+        let mut f = Vec::with_capacity(5 + payload.len());
+        f.push(tag);
+        f.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        f.extend_from_slice(payload);
+        let len = f.len();
+        {
+            let mut q = self.frames.lock().unwrap();
+            if self.closed.load(Ordering::SeqCst) {
+                return false;
+            }
+            q.push_back(f);
+            self.bytes.fetch_add(len, Ordering::SeqCst);
+        }
+        crate::obs::gauge_add("serve.reactor.write_queue_depth", len as i64);
+        true
+    }
+
+    fn pop(&self) -> Option<Vec<u8>> {
+        let mut q = self.frames.lock().unwrap();
+        let f = q.pop_front();
+        if let Some(f) = &f {
+            self.bytes.fetch_sub(f.len(), Ordering::SeqCst);
+        }
+        f
+    }
+
+    fn queued_bytes(&self) -> usize {
+        self.bytes.load(Ordering::SeqCst)
+    }
+
+    /// Mark the connection gone and discard queued frames
+    /// (gauge-balanced; late pushes from an in-flight worker are refused).
+    fn close(&self) {
+        let drained = {
+            let mut q = self.frames.lock().unwrap();
+            self.closed.store(true, Ordering::SeqCst);
+            let d = q.iter().map(|f| f.len()).sum::<usize>();
+            q.clear();
+            self.bytes.fetch_sub(d, Ordering::SeqCst);
+            d
+        };
+        if drained > 0 {
+            crate::obs::gauge_add("serve.reactor.write_queue_depth", -(drained as i64));
+        }
+    }
+}
+
+/// [`ReplySink`] over a connection's [`OutBuf`]: workers append encoded
+/// frames; the reactor owns the socket.
+struct OutSink {
+    out: Arc<OutBuf>,
+}
+
+impl ReplySink for OutSink {
+    fn send(&mut self, tag: u8, payload: &[u8]) -> bool {
+        self.out.push(tag, payload)
+    }
+}
+
+/// One completed inbound frame, dispatched to a protocol worker.
+enum WorkerMsg {
+    /// Session setup (round-robin across workers).
+    Hello { token: u64, out: Arc<OutBuf>, conn: Arc<ConnState> },
+    /// An online round (session-sticky: `session_id % workers`).
+    Round { token: u64, out: Arc<OutBuf>, session_id: u64, tag: u8, payload: Vec<u8> },
+}
+
+fn worker_loop(rx: Receiver<WorkerMsg>, shared: Arc<ServeShared>, r: Arc<ReactorShared>) {
+    for msg in rx {
+        match msg {
+            WorkerMsg::Hello { token, out, conn } => {
+                let mut sink = OutSink { out };
+                handle_hello(&shared, &mut sink, &conn);
+                r.complete(token);
+            }
+            WorkerMsg::Round { token, out, session_id, tag, payload } => {
+                let mut sink = OutSink { out };
+                handle_round(&shared, session_id, tag, &payload, &mut sink);
+                r.complete(token);
+            }
+        }
+    }
+}
+
+/// State shared between the reactor thread, the protocol workers, and
+/// the owning [`super::SecureServer`]: the stop flag, the completion
+/// list, and the coalesced wake channel.
+struct ReactorShared {
+    stop: AtomicBool,
+    wake_flag: AtomicBool,
+    wake_tx: Mutex<UnixStream>,
+    completions: Mutex<Vec<u64>>,
+}
+
+impl ReactorShared {
+    /// Wake the reactor. The atomic flag coalesces bursts: at most one
+    /// wake byte is in flight, so the (blocking) one-byte write can
+    /// never fill the socketpair buffer and block a worker.
+    fn wake(&self) {
+        if !self.wake_flag.swap(true, Ordering::SeqCst) {
+            if let Ok(mut tx) = self.wake_tx.lock() {
+                let _ = tx.write(&[1u8]);
+            }
+        }
+    }
+
+    /// Report a finished worker job for `token` and wake the reactor.
+    fn complete(&self, token: u64) {
+        self.completions.lock().unwrap().push(token);
+        self.wake();
+    }
+}
+
+/// Owner handle for a running reactor; [`shutdown`](Self::shutdown)
+/// stops and joins the event-loop thread (idempotent).
+pub(super) struct ReactorHandle {
+    shared: Arc<ReactorShared>,
+    thread: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl ReactorHandle {
+    pub(super) fn shutdown(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        if let Some(h) = self.thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-connection reactor state: socket, frame assembler, write queue,
+/// dispatch bookkeeping, and the timestamps the sweeps act on.
+struct Conn {
+    stream: TcpStream,
+    out: Arc<OutBuf>,
+    state: Arc<ConnState>,
+    asm: wire::FrameAssembler,
+    /// Frame currently being written (popped off `out`), plus cursor.
+    pending: Vec<u8>,
+    pending_pos: usize,
+    /// Whether a frame from this connection is at a worker.
+    in_flight: bool,
+    /// Completed frames waiting for the in-flight one to finish.
+    parked: VecDeque<(u8, Vec<u8>)>,
+    read_paused: bool,
+    want_write: bool,
+    /// An error frame is queued; close once the queue drains.
+    closing: bool,
+    /// Output has been queued since the last fully-drained state —
+    /// arms the write-stall clock.
+    had_backlog: bool,
+    last_activity: Instant,
+    last_progress: Instant,
+}
+
+impl Conn {
+    fn queued_bytes(&self) -> usize {
+        self.out.queued_bytes() + (self.pending.len() - self.pending_pos)
+    }
+}
+
+struct Reactor {
+    poller: sys::Poller,
+    listener: TcpListener,
+    wake_rx: UnixStream,
+    rshared: Arc<ReactorShared>,
+    shared: Arc<ServeShared>,
+    cfg: SecureConfig,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    txs: Vec<Sender<WorkerMsg>>,
+    rr: usize,
+    accept_paused: bool,
+    peak: usize,
+    last_sweep: Instant,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events: Vec<sys::Event> = Vec::new();
+        let mut rdbuf = vec![0u8; 64 * 1024];
+        while !self.rshared.stop.load(Ordering::SeqCst) {
+            if self.poller.wait(SWEEP_MS as i32, &mut events).is_err() {
+                // A broken poller cannot be waited on again; stop serving
+                // rather than spin.
+                break;
+            }
+            crate::obs::inc("serve.reactor.wakeups");
+            let mut accept_ready = false;
+            for ev in &events {
+                match ev.token {
+                    TOKEN_LISTENER => accept_ready = true,
+                    TOKEN_WAKE => self.drain_wake(),
+                    tok => {
+                        if ev.readable {
+                            self.on_readable(tok, &mut rdbuf);
+                        }
+                        if ev.writable {
+                            self.flush_conn(tok);
+                        }
+                    }
+                }
+            }
+            self.drain_completions();
+            if accept_ready {
+                self.do_accept();
+            }
+            if self.last_sweep.elapsed() >= Duration::from_millis(SWEEP_MS) {
+                self.last_sweep = Instant::now();
+                self.sweep();
+            }
+        }
+        // Shutdown: retire every connection (sessions included); dropping
+        // `txs` with `self` then disconnects the worker channels.
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            self.close_conn(tok);
+        }
+    }
+
+    /// Drain the wake pipe, then clear the coalescing flag. Order
+    /// matters: the flag must be cleared *before* the completion list is
+    /// drained (it is, right after event processing), so a completion
+    /// posted mid-drain writes a fresh wake byte instead of being lost.
+    fn drain_wake(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match self.wake_rx.read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break,
+            }
+        }
+        self.rshared.wake_flag.store(false, Ordering::SeqCst);
+    }
+
+    fn drain_completions(&mut self) {
+        let done: Vec<u64> = std::mem::take(&mut *self.rshared.completions.lock().unwrap());
+        for tok in done {
+            let next = {
+                let Some(c) = self.conns.get_mut(&tok) else { continue };
+                c.in_flight = false;
+                c.last_activity = Instant::now();
+                if c.closing {
+                    None
+                } else {
+                    c.parked.pop_front()
+                }
+            };
+            if let Some((tag, payload)) = next {
+                self.dispatch(tok, tag, payload);
+            }
+            self.maybe_resume_reads(tok);
+            self.flush_conn(tok);
+        }
+    }
+
+    fn on_readable(&mut self, tok: u64, buf: &mut [u8]) {
+        let mut disconnect = false;
+        let mut total = 0usize;
+        {
+            let Some(c) = self.conns.get_mut(&tok) else { return };
+            if c.closing || c.read_paused {
+                return;
+            }
+            loop {
+                match c.stream.read(buf) {
+                    Ok(0) => {
+                        disconnect = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.asm.push(&buf[..n]);
+                        total += n;
+                        if total >= READ_BUDGET {
+                            break;
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        disconnect = true;
+                        break;
+                    }
+                }
+            }
+            if total > 0 {
+                c.last_activity = Instant::now();
+            }
+        }
+        if total > 0 {
+            self.process_frames(tok);
+        }
+        if disconnect {
+            self.close_conn(tok);
+        }
+    }
+
+    fn process_frames(&mut self, tok: u64) {
+        loop {
+            let frame = {
+                let Some(c) = self.conns.get_mut(&tok) else { return };
+                if c.closing {
+                    return;
+                }
+                match c.asm.next_frame() {
+                    Ok(Some(f)) => Ok(f),
+                    Ok(None) => return,
+                    Err(e) => Err(e.to_string()),
+                }
+            };
+            match frame {
+                Ok((tag, payload)) => self.handle_frame(tok, tag, payload),
+                Err(msg) => {
+                    // Corrupt framing: the byte stream is unrecoverable.
+                    self.fail_conn(tok, 0, wire::ERR_PROTOCOL, &msg);
+                    return;
+                }
+            }
+        }
+    }
+
+    fn handle_frame(&mut self, tok: u64, tag: u8, payload: Vec<u8>) {
+        crate::obs::add("serve.rx_bytes", payload.len() as u64 + 5);
+        match tag {
+            wire::TAG_STATS => {
+                // Admin introspection stays inline on the reactor thread:
+                // the snapshot capture is lock-free and the reply skips
+                // the worker queues entirely, so it can neither stall
+                // behind nor stall queued rounds.
+                let body = crate::obs::snapshot().to_json();
+                if let Some(c) = self.conns.get_mut(&tok) {
+                    c.out.push(wire::TAG_STATS_OK, body.as_bytes());
+                }
+                self.flush_conn(tok);
+            }
+            wire::TAG_HELLO => match wire::decode_hello(&payload) {
+                Ok(()) => self.enqueue(tok, tag, payload),
+                Err(e) => self.fail_conn(tok, 0, wire::ERR_UNSUPPORTED, &e.to_string()),
+            },
+            wire::TAG_SHARES | wire::TAG_RECOVERY | wire::TAG_BYE => {
+                match wire::peek_session_id(&payload) {
+                    Ok(_) => self.enqueue(tok, tag, payload),
+                    Err(e) => self.fail_conn(tok, 0, wire::ERR_PROTOCOL, &e.to_string()),
+                }
+            }
+            other => self.fail_conn(
+                tok,
+                0,
+                wire::ERR_PROTOCOL,
+                &format!("unknown frame tag {other:#04x}"),
+            ),
+        }
+    }
+
+    fn enqueue(&mut self, tok: u64, tag: u8, payload: Vec<u8>) {
+        let busy = {
+            let Some(c) = self.conns.get_mut(&tok) else { return };
+            c.in_flight || !c.parked.is_empty()
+        };
+        if busy {
+            self.park(tok, tag, payload);
+        } else {
+            self.dispatch(tok, tag, payload);
+        }
+    }
+
+    fn park(&mut self, tok: u64, tag: u8, payload: Vec<u8>) {
+        let Some(c) = self.conns.get_mut(&tok) else { return };
+        c.parked.push_back((tag, payload));
+        if !c.read_paused && c.parked.len() >= PARK_CAP {
+            c.read_paused = true;
+            let (fd, ww) = (c.stream.as_raw_fd(), c.want_write);
+            let _ = self.poller.modify(fd, tok, false, ww);
+        }
+    }
+
+    fn dispatch(&mut self, tok: u64, tag: u8, payload: Vec<u8>) {
+        let msg = {
+            let Some(c) = self.conns.get_mut(&tok) else { return };
+            c.in_flight = true;
+            match tag {
+                wire::TAG_HELLO => {
+                    WorkerMsg::Hello { token: tok, out: c.out.clone(), conn: c.state.clone() }
+                }
+                _ => {
+                    // Validated at parse time; a race would only misroute
+                    // to a worker that then reports "unknown session".
+                    let session_id = wire::peek_session_id(&payload).unwrap_or(0);
+                    WorkerMsg::Round { token: tok, out: c.out.clone(), session_id, tag, payload }
+                }
+            }
+        };
+        let wi = match &msg {
+            WorkerMsg::Hello { .. } => {
+                self.rr = self.rr.wrapping_add(1);
+                self.rr % self.txs.len()
+            }
+            WorkerMsg::Round { session_id, .. } => (*session_id % self.txs.len() as u64) as usize,
+        };
+        // Unbounded send — never blocks the reactor. Memory stays bounded
+        // by the per-connection in-flight cap (one message per connection
+        // at a worker; the rest park, then reads pause).
+        let _ = self.txs[wi].send(msg);
+    }
+
+    fn maybe_resume_reads(&mut self, tok: u64) {
+        let Some(c) = self.conns.get_mut(&tok) else { return };
+        if c.read_paused && !c.closing && c.parked.len() <= PARK_CAP / 2 {
+            c.read_paused = false;
+            let (fd, ww) = (c.stream.as_raw_fd(), c.want_write);
+            let _ = self.poller.modify(fd, tok, true, ww);
+        }
+    }
+
+    /// Drain the connection's write queue as far as the socket allows;
+    /// arm `EPOLLOUT` on `WouldBlock`, and close/evict on write failure,
+    /// drained-after-error, or write-queue overflow.
+    fn flush_conn(&mut self, tok: u64) {
+        let mut evicted_slow = false;
+        let mut close = false;
+        {
+            let Some(c) = self.conns.get_mut(&tok) else { return };
+            let mut wrote = 0usize;
+            let mut dead = false;
+            loop {
+                if c.pending_pos == c.pending.len() {
+                    c.pending.clear();
+                    c.pending_pos = 0;
+                    match c.out.pop() {
+                        Some(f) => c.pending = f,
+                        None => break,
+                    }
+                }
+                match c.stream.write(&c.pending[c.pending_pos..]) {
+                    Ok(0) => {
+                        dead = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.pending_pos += n;
+                        wrote += n;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        dead = true;
+                        break;
+                    }
+                }
+            }
+            if wrote > 0 {
+                crate::obs::add("serve.tx_bytes", wrote as u64);
+                crate::obs::gauge_add("serve.reactor.write_queue_depth", -(wrote as i64));
+                c.last_progress = Instant::now();
+            }
+            let queued = c.queued_bytes();
+            if queued > 0 && !c.had_backlog {
+                c.had_backlog = true;
+                c.last_progress = Instant::now();
+            } else if queued == 0 {
+                c.had_backlog = false;
+            }
+            if dead || (queued == 0 && c.closing) {
+                close = true;
+            } else if self.cfg.max_write_queue > 0 && queued > self.cfg.max_write_queue {
+                evicted_slow = true;
+            } else {
+                let want_write = queued > 0;
+                if want_write != c.want_write {
+                    c.want_write = want_write;
+                    let want_read = !c.read_paused && !c.closing;
+                    let fd = c.stream.as_raw_fd();
+                    let _ = self.poller.modify(fd, tok, want_read, want_write);
+                }
+            }
+        }
+        if evicted_slow {
+            crate::obs::inc("serve.reactor.slow_evictions");
+            close = true;
+        }
+        if close {
+            self.close_conn(tok);
+        }
+    }
+
+    /// Queue an error frame, stop reading, and close once it drains —
+    /// the nonblocking equivalent of the threads front's "send error,
+    /// drop connection".
+    fn fail_conn(&mut self, tok: u64, sid: u64, code: u16, msg: &str) {
+        {
+            let Some(c) = self.conns.get_mut(&tok) else { return };
+            c.out.push(wire::TAG_ERROR, &wire::encode_error(sid, code, msg));
+            c.closing = true;
+            c.parked.clear();
+            c.want_write = true;
+            let fd = c.stream.as_raw_fd();
+            let _ = self.poller.modify(fd, tok, false, true);
+        }
+        self.flush_conn(tok);
+    }
+
+    /// Retire a connection: deregister, discard queued output, retire
+    /// its sessions (an in-flight Hello sees `closed` and retires its
+    /// own, exactly as on the threads front), and resume accepting if
+    /// fd pressure had paused it.
+    fn close_conn(&mut self, tok: u64) {
+        let Some(c) = self.conns.remove(&tok) else { return };
+        let _ = self.poller.deregister(c.stream.as_raw_fd());
+        c.out.close();
+        let rem = c.pending.len() - c.pending_pos;
+        if rem > 0 {
+            crate::obs::gauge_add("serve.reactor.write_queue_depth", -(rem as i64));
+        }
+        c.state.closed.store(true, Ordering::SeqCst);
+        for sid in c.state.sessions.lock().unwrap().drain(..) {
+            self.shared.registry.remove(sid);
+        }
+        crate::obs::gauge_set("serve.reactor.sessions", self.conns.len() as i64);
+        self.resume_accept_if_possible();
+    }
+
+    fn do_accept(&mut self) {
+        let mut transient = 0u32;
+        loop {
+            if self.conns.len() >= self.cfg.max_sessions.max(1) {
+                crate::obs::inc("serve.reactor.accept_stalls");
+                self.pause_accept();
+                return;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => self.add_conn(stream),
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if matches!(e.raw_os_error(), Some(23) | Some(24)) => {
+                    // ENFILE/EMFILE: out of fds. Deregister the listener
+                    // (level-triggered readiness would otherwise spin the
+                    // loop) and resume once a close frees fds.
+                    crate::obs::inc("serve.reactor.accept_stalls");
+                    self.pause_accept();
+                    return;
+                }
+                Err(_) => {
+                    // Per-connection accept failures (ECONNABORTED & co):
+                    // skip, with a cap so a persistent failure cannot
+                    // wedge this pass.
+                    transient += 1;
+                    if transient > 64 {
+                        return;
+                    }
+                }
+            }
+        }
+    }
+
+    fn add_conn(&mut self, stream: TcpStream) {
+        if stream.set_nonblocking(true).is_err() {
+            return;
+        }
+        stream.set_nodelay(true).ok();
+        let tok = self.next_token;
+        self.next_token += 1;
+        if self.poller.register(stream.as_raw_fd(), tok, true, false).is_err() {
+            return;
+        }
+        let now = Instant::now();
+        self.conns.insert(
+            tok,
+            Conn {
+                stream,
+                out: Arc::new(OutBuf::new()),
+                state: Arc::new(ConnState {
+                    closed: AtomicBool::new(false),
+                    sessions: Mutex::new(Vec::new()),
+                }),
+                asm: wire::FrameAssembler::new(self.cfg.max_frame),
+                pending: Vec::new(),
+                pending_pos: 0,
+                in_flight: false,
+                parked: VecDeque::new(),
+                read_paused: false,
+                want_write: false,
+                closing: false,
+                had_backlog: false,
+                last_activity: now,
+                last_progress: now,
+            },
+        );
+        crate::obs::gauge_set("serve.reactor.sessions", self.conns.len() as i64);
+        if self.conns.len() > self.peak {
+            self.peak = self.conns.len();
+            crate::obs::gauge_set("serve.reactor.sessions_peak", self.peak as i64);
+        }
+    }
+
+    fn pause_accept(&mut self) {
+        if !self.accept_paused {
+            self.accept_paused = true;
+            let _ = self.poller.deregister(self.listener.as_raw_fd());
+        }
+    }
+
+    fn resume_accept_if_possible(&mut self) {
+        if self.accept_paused && self.conns.len() < self.cfg.max_sessions.max(1) {
+            let fd = self.listener.as_raw_fd();
+            if self.poller.register(fd, TOKEN_LISTENER, true, false).is_ok() {
+                self.accept_paused = false;
+            }
+        }
+    }
+
+    /// Periodic enforcement: evict writes stalled past `write_timeout`,
+    /// reap sessions idle past `idle_timeout`, and retry a paused accept
+    /// (in case fds freed outside our close path).
+    fn sweep(&mut self) {
+        let now = Instant::now();
+        let mut slow: Vec<u64> = Vec::new();
+        let mut idle: Vec<u64> = Vec::new();
+        for (&tok, c) in &self.conns {
+            let queued = c.queued_bytes();
+            if c.had_backlog
+                && queued > 0
+                && now.duration_since(c.last_progress) > self.cfg.write_timeout
+            {
+                slow.push(tok);
+            } else if self.cfg.idle_timeout > Duration::ZERO
+                && !c.in_flight
+                && !c.closing
+                && c.parked.is_empty()
+                && queued == 0
+                && now.duration_since(c.last_activity) > self.cfg.idle_timeout
+            {
+                idle.push(tok);
+            }
+        }
+        for tok in slow {
+            crate::obs::inc("serve.reactor.slow_evictions");
+            self.close_conn(tok);
+        }
+        for tok in idle {
+            crate::obs::inc("serve.reactor.idle_evictions");
+            self.close_conn(tok);
+        }
+        self.resume_accept_if_possible();
+    }
+}
+
+/// Bind the reactor front onto an already-bound listener: spawn the
+/// event-loop thread plus `cfg.workers` protocol workers (each pinned to
+/// `cfg.threads` compute fan-out). Returns the owner handle and the
+/// worker join handles.
+pub(super) fn spawn(
+    listener: TcpListener,
+    shared: Arc<ServeShared>,
+    cfg: SecureConfig,
+) -> io::Result<(ReactorHandle, Vec<JoinHandle<()>>)> {
+    listener.set_nonblocking(true)?;
+    let (wake_tx, wake_rx) = UnixStream::pair()?;
+    wake_rx.set_nonblocking(true)?;
+    let mut poller = sys::Poller::new()?;
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, true, false)?;
+    poller.register(wake_rx.as_raw_fd(), TOKEN_WAKE, true, false)?;
+    let rshared = Arc::new(ReactorShared {
+        stop: AtomicBool::new(false),
+        wake_flag: AtomicBool::new(false),
+        wake_tx: Mutex::new(wake_tx),
+        completions: Mutex::new(Vec::new()),
+    });
+    let n_workers = cfg.workers.max(1);
+    let mut txs = Vec::with_capacity(n_workers);
+    let mut worker_threads = Vec::with_capacity(n_workers);
+    for _ in 0..n_workers {
+        let (tx, rx) = channel::<WorkerMsg>();
+        txs.push(tx);
+        let shared = shared.clone();
+        let rshared = rshared.clone();
+        let threads = cfg.threads;
+        worker_threads.push(std::thread::spawn(move || {
+            crate::par::with_threads(threads, || worker_loop(rx, shared, rshared))
+        }));
+    }
+    let reactor = Reactor {
+        poller,
+        listener,
+        wake_rx,
+        rshared: rshared.clone(),
+        shared,
+        cfg,
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        txs,
+        rr: 0,
+        accept_paused: false,
+        peak: 0,
+        last_sweep: Instant::now(),
+    };
+    let thread = std::thread::spawn(move || reactor.run());
+    Ok((ReactorHandle { shared: rshared, thread: Mutex::new(Some(thread)) }, worker_threads))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The write-queue accounting that backpressure and eviction key on:
+    /// push/pop stay byte-balanced, and a closed buffer refuses frames
+    /// (the signal a worker reads as "connection gone").
+    #[test]
+    fn outbuf_accounts_bytes_and_refuses_after_close() {
+        let out = OutBuf::new();
+        assert!(out.push(0x23, &[1, 2, 3]));
+        assert!(out.push(0x24, &[]));
+        assert_eq!(out.queued_bytes(), (5 + 3) + 5);
+        let first = out.pop().expect("frame queued");
+        assert_eq!(first[0], 0x23);
+        assert_eq!(&first[5..], &[1, 2, 3]);
+        assert_eq!(out.queued_bytes(), 5);
+        out.close();
+        assert_eq!(out.queued_bytes(), 0, "close discards queued frames");
+        assert!(!out.push(0x30, &[9]), "closed buffer must refuse frames");
+        assert!(out.pop().is_none());
+    }
+}

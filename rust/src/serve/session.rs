@@ -4,10 +4,13 @@
 //! engine (with its own blinding material and indicator ciphertexts, pulled
 //! from the [`super::precompute::BlindingPool`]). The registry multiplexes
 //! rounds from interleaved clients on one listener: each online frame
-//! carries its session id, the reader routes it to a session-sticky worker,
-//! and the state machine enforces round ordering so a confused (or
-//! malicious) client gets a typed protocol error instead of corrupting
-//! engine state or panicking a worker.
+//! carries its session id, the reader (a blocking per-connection thread on
+//! the threads front, the event loop on the [`super::reactor`] front)
+//! routes it to a session-sticky worker, and the state machine enforces
+//! round ordering so a confused (or malicious) client gets a typed
+//! protocol error instead of corrupting engine state or panicking a
+//! worker. Both fronts drive the *same* state machine — a session never
+//! knows which front delivered its frames.
 //!
 //! CHEETAH needs **no client evaluation keys**: the server's obscure linear
 //! computation is `MultPlain`/`AddPlain` only (zero `Perm`s — the paper's

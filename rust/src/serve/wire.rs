@@ -370,6 +370,82 @@ pub fn peek_session_id(payload: &[u8]) -> Result<u64, WireError> {
     Ok(u64::from_le_bytes(payload[..8].try_into().unwrap()))
 }
 
+// ---- incremental (non-blocking) frame reassembly ----
+
+/// Incremental reassembler for the length-prefixed frames of
+/// [`crate::protocol::transport`]: the non-blocking twin of
+/// [`crate::protocol::transport::read_frame_limited`].
+///
+/// A readiness-driven reader ([`crate::serve::reactor`]) hands every chunk
+/// the socket yields to [`FrameAssembler::push`] — a chunk may carry half a
+/// header, the middle of a payload, or several coalesced frames — and then
+/// drains completed frames with [`FrameAssembler::next_frame`]. The
+/// reassembled `(tag, payload)` stream is byte-identical to what the
+/// blocking reader produces from the same bytes (pinned by a
+/// split-at-every-boundary test below).
+///
+/// Defensive like the blocking path: the length header is validated against
+/// `max_frame` as soon as the 5 header bytes are present — *before* any
+/// payload accumulates — so a corrupt length can never drive allocation.
+pub struct FrameAssembler {
+    max_frame: usize,
+    buf: Vec<u8>,
+    /// Consumed prefix of `buf` (compacted lazily to keep pushes amortized
+    /// O(bytes) instead of O(bytes × frames)).
+    start: usize,
+}
+
+impl FrameAssembler {
+    /// An empty assembler rejecting payloads longer than `max_frame`.
+    pub fn new(max_frame: usize) -> Self {
+        Self { max_frame, buf: Vec::new(), start: 0 }
+    }
+
+    /// Feed bytes as they arrived from the socket (any chunking).
+    pub fn push(&mut self, data: &[u8]) {
+        // Compact once the dead prefix dominates, so the buffer does not
+        // grow without bound across a long-lived connection.
+        if self.start > 4096 && self.start * 2 >= self.buf.len() {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(data);
+    }
+
+    /// Bytes buffered but not yet returned as part of a complete frame.
+    pub fn buffered(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Pop the next complete frame, if one has fully arrived.
+    ///
+    /// `Ok(None)` means "need more bytes". An oversized length header is a
+    /// hard [`WireError`] — the connection is unrecoverable because framing
+    /// can no longer be trusted.
+    pub fn next_frame(&mut self) -> Result<Option<(u8, Vec<u8>)>, WireError> {
+        let avail = self.buf.len() - self.start;
+        if avail < 5 {
+            return Ok(None);
+        }
+        let hdr = &self.buf[self.start..self.start + 5];
+        let tag = hdr[0];
+        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+        if len > self.max_frame {
+            return Err(WireError::Malformed("frame payload exceeds maximum"));
+        }
+        if avail < 5 + len {
+            return Ok(None);
+        }
+        let payload = self.buf[self.start + 5..self.start + 5 + len].to_vec();
+        self.start += 5 + len;
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        }
+        Ok(Some((tag, payload)))
+    }
+}
+
 // ---- error frames ----
 
 /// Encode an `ERROR` frame payload.
@@ -491,6 +567,93 @@ mod tests {
         plan2.x_max = 4.0;
         let c = plan_fingerprint(&Params::new(1024, 20), &plan2);
         assert_ne!(a, c);
+    }
+
+    /// The satellite correctness test for non-blocking decode: a frame
+    /// stream split at **every** byte boundary (header split, payload
+    /// split) and fully coalesced reassembles byte-identically to the
+    /// blocking [`crate::protocol::transport::read_frame`] path.
+    #[test]
+    fn chunked_reassembly_matches_blocking_reader_at_every_split() {
+        use crate::protocol::transport::{read_frame, write_frame};
+
+        // Two frames with distinct tags/payloads, including an empty one
+        // later, so header/payload and frame/frame boundaries all occur.
+        let mut stream = Vec::new();
+        write_frame(&mut stream, TAG_SHARES, &[0xaa, 0xbb, 0xcc, 0xdd, 0xee]).unwrap();
+        write_frame(&mut stream, TAG_RECOVERY, b"payload-two").unwrap();
+        write_frame(&mut stream, TAG_BYE, &[]).unwrap();
+
+        // Oracle: the blocking reader over the same byte stream.
+        let mut cursor = std::io::Cursor::new(stream.clone());
+        let mut want = Vec::new();
+        while (cursor.position() as usize) < stream.len() {
+            want.push(read_frame(&mut cursor).unwrap());
+        }
+        assert_eq!(want.len(), 3);
+
+        // Every split point: bytes [0..split) in one push, the rest in a
+        // second push. split=0 and split=len cover "everything coalesced
+        // in one read" from both sides.
+        for split in 0..=stream.len() {
+            let mut asm = FrameAssembler::new(1024);
+            let mut got = Vec::new();
+            asm.push(&stream[..split]);
+            while let Some(f) = asm.next_frame().unwrap() {
+                got.push(f);
+            }
+            asm.push(&stream[split..]);
+            while let Some(f) = asm.next_frame().unwrap() {
+                got.push(f);
+            }
+            assert_eq!(got, want, "divergence at split {split}");
+            assert_eq!(asm.buffered(), 0, "leftover bytes at split {split}");
+        }
+
+        // One-byte-at-a-time delivery (the most hostile chunking).
+        let mut asm = FrameAssembler::new(1024);
+        let mut got = Vec::new();
+        for &b in &stream {
+            asm.push(&[b]);
+            while let Some(f) = asm.next_frame().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_length_before_payload_arrives() {
+        let mut asm = FrameAssembler::new(16);
+        // Header claims a 1 MiB payload; only the header is pushed.
+        let mut hdr = vec![TAG_SHARES];
+        hdr.extend_from_slice(&(1_048_576u32).to_le_bytes());
+        asm.push(&hdr);
+        assert_eq!(
+            asm.next_frame(),
+            Err(WireError::Malformed("frame payload exceeds maximum"))
+        );
+        // At the exact limit the frame is accepted.
+        let mut asm = FrameAssembler::new(16);
+        let mut frame = vec![TAG_SHARES];
+        frame.extend_from_slice(&(16u32).to_le_bytes());
+        frame.extend_from_slice(&[7u8; 16]);
+        asm.push(&frame);
+        let (tag, payload) = asm.next_frame().unwrap().expect("complete frame");
+        assert_eq!((tag, payload.len()), (TAG_SHARES, 16));
+    }
+
+    #[test]
+    fn assembler_compacts_consumed_prefix_on_long_streams() {
+        let mut asm = FrameAssembler::new(64);
+        let mut frame = vec![0x20u8];
+        frame.extend_from_slice(&(32u32).to_le_bytes());
+        frame.extend_from_slice(&[3u8; 32]);
+        for _ in 0..1000 {
+            asm.push(&frame);
+            assert!(asm.next_frame().unwrap().is_some());
+        }
+        assert_eq!(asm.buffered(), 0);
     }
 
     #[test]

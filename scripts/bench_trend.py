@@ -4,11 +4,12 @@
 Usage:
     bench_trend.py PREVIOUS.json CURRENT.json [--max-regression 0.15]
                    [--phe PREV_PHE.json CURR_PHE.json]
+                   [--serve PREV_SERVE.json CURR_SERVE.json]
 
 The JSON layout is what `bench_util::Table::write_json` emits: a `headers`
 list and `rows` of {header: string-cell} objects.
 
-Two schemas are gated:
+Three schemas are gated:
 
 * e2e (positional args): rows keyed by (network, framework, threads, batch)
   — `batch` is absent in pre-batch-PR artifacts and defaults to "1" — and
@@ -17,6 +18,12 @@ Two schemas are gated:
 * phe (`--phe` pair): rows keyed by (op, n, iters), gated on `total_ms`
   (a fixed-size op batch, sized above the noise floor). Rows with an empty
   metric cell (the arena hit-rate row) are informational and skipped.
+* serve (`--serve` pair): rows keyed by (sessions, mode, pool_depth,
+  batch, net_sessions) — `mode` defaults to "threads" and `net_sessions`
+  to "1" for artifacts predating the reactor PR, so the thread-front rows
+  stay comparable across the schema change — gated on `query_p50_ms` (the
+  server-side online latency; the sessions=1000 reactor row is the C10K
+  measuring stick).
 
 Exit codes: 0 pass / skipped (no previous artifact for that pair — first
 run on a branch, or an older artifact predating the phe bench); 1
@@ -60,6 +67,16 @@ def e2e_key(row):
 
 def phe_key(row):
     return (row.get("op", ""), row.get("n", ""), row.get("iters", ""))
+
+
+def serve_key(row):
+    return (
+        row.get("sessions", ""),
+        row.get("mode", "threads") or "threads",
+        row.get("pool_depth", ""),
+        row.get("batch", ""),
+        row.get("net_sessions", "1") or "1",
+    )
 
 
 def metric_of(row, field):
@@ -121,6 +138,13 @@ def main():
         metavar=("PREV_PHE", "CURR_PHE"),
         help="additionally gate a BENCH_phe.json pair keyed by (op, n, iters)",
     )
+    ap.add_argument(
+        "--serve",
+        nargs=2,
+        metavar=("PREV_SERVE", "CURR_SERVE"),
+        help="additionally gate a BENCH_serve.json pair keyed by "
+        "(sessions, mode, pool_depth, batch, net_sessions)",
+    )
     args = ap.parse_args()
 
     failures = []
@@ -159,6 +183,31 @@ def main():
                 )
                 return 1
             failures.extend(("phe", *r) for r in regressions)
+
+    if args.serve:
+        serve = compare(
+            "serve",
+            args.serve[0],
+            args.serve[1],
+            serve_key,
+            "query_p50_ms",
+            args.max_regression,
+        )
+        if serve is not None:
+            compared, regressions = serve
+            if compared == 0:
+                # The serve_key defaults keep pre-reactor artifacts (no
+                # `mode`/`net_sessions` columns) comparable on their
+                # thread-front rows, so zero overlap means a schema or
+                # key rename — fail loudly, same policy as the e2e gate.
+                print(
+                    "error: serve artifacts share zero comparable rows — "
+                    "schema or key rename? The trend gate would otherwise "
+                    "be silently disabled.",
+                    file=sys.stderr,
+                )
+                return 1
+            failures.extend(("serve", *r) for r in regressions)
 
     if failures:
         print(
