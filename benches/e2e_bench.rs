@@ -28,13 +28,25 @@
 //! layers) as an `"obs"` section of `BENCH_e2e.json`, plus a standalone
 //! `BENCH_e2e_obs.json` that CI uploads next to the bench artifacts.
 //!
+//! `--params auto|default|big` (default `default`) picks the RLWE
+//! parameter policy for the CHEETAH engines (`auto` runs the
+//! [`cheetah::plan`] planner per network; GAZELLE stays on the default
+//! set, whose rotation-key geometry the baseline is tuned for). Every JSON
+//! row records the parameter set it ran under in a `params` column
+//! (`n4096p23`-style; `-` where no HE parameters apply). Independent of
+//! the flag, one **auto-params cell** always runs: netRes — whose residual
+//! tower overflows the default plaintext modulus — through the planner,
+//! recording the bigger rung it climbs to.
+//!
 //! Run: `cargo bench --bench e2e_bench [-- --breakdown] [-- --paper]
-//!       [-- --network netB] [-- --threads 4] [-- --batch 8] [-- --obs]`
+//!       [-- --network netB] [-- --threads 4] [-- --batch 8] [-- --obs]
+//!       [-- --params auto]`
 
 use cheetah::bench_util::{BenchArgs, Table};
 use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
+use cheetah::plan::ParamsChoice;
 use cheetah::util::fmt_bytes;
 use cheetah::util::rng::SplitMix64;
 use std::sync::Arc;
@@ -61,6 +73,9 @@ fn main() {
     let threads = args.get_usize("--threads", cheetah::par::threads()).max(1);
     let batch = args.get_usize("--batch", 4).max(1);
     let net_filter = args.get("--network").map(|s| s.to_string());
+    let params_raw = args.get("--params").unwrap_or("default").to_string();
+    let params_choice = ParamsChoice::parse(&params_raw)
+        .unwrap_or_else(|| panic!("unknown --params value `{params_raw}` (auto|default|big)"));
     let ctx = Arc::new(Context::new(Params::default_params()));
 
     // Spatial scale factors: GAZELLE needs h·w ≤ row_size (2048) per
@@ -79,7 +94,14 @@ fn main() {
             net_filter.as_deref().is_none_or(|f| NetworkArch::from_key(f) == Some(*arch))
         })
         .collect();
-    assert!(!nets.is_empty(), "--network matched no architecture (try netA/netB/alexnet/vgg16)");
+    // `--network netRes` selects just the auto-params cell below.
+    let netres_only = net_filter
+        .as_deref()
+        .is_some_and(|f| NetworkArch::from_key(f) == Some(NetworkArch::NetRes));
+    assert!(
+        !nets.is_empty() || netres_only,
+        "--network matched no architecture (try netA/netB/alexnet/vgg16/netRes)"
+    );
 
     let mut t = Table::new(&[
         "network",
@@ -92,12 +114,15 @@ fn main() {
         "#Perm",
     ]);
     // Machine-readable companion (BENCH_e2e.json): one row per
-    // (network, framework, threads, batch) cell, times in milliseconds.
-    // Single-query rows have batch=1; `cheetah-loop`/`cheetah-batch` rows
-    // record whole-batch wall ms in online_ms plus throughput in qps.
+    // (network, framework, params, threads, batch) cell, times in
+    // milliseconds. Single-query rows have batch=1;
+    // `cheetah-loop`/`cheetah-batch` rows record whole-batch wall ms in
+    // online_ms plus throughput in qps. `params` is the RLWE set the cell
+    // ran under (`n4096p23`-style).
     let mut jt = Table::new(&[
         "network",
         "framework",
+        "params",
         "threads",
         "online_ms",
         "offline_ms",
@@ -117,13 +142,15 @@ fn main() {
         // Batch inputs drawn up front (the net moves into the builder).
         let batch_inputs: Vec<Tensor> =
             (0..batch).map(|i| input_for(&net, 30 + i as u64)).collect();
-        let mut ch = EngineBuilder::new(Backend::Cheetah)
-            .network(net)
-            .context(ctx.clone())
-            .epsilon(0.05)
-            .seed(23)
-            .build()
-            .expect("cheetah engine");
+        // The params policy applies to the CHEETAH engines; `Default`
+        // keeps today's shared context (bit-identical rows), `auto`/`big`
+        // let each engine resolve its own.
+        let builder = EngineBuilder::new(Backend::Cheetah).network(net).epsilon(0.05).seed(23);
+        let builder = match params_choice {
+            ParamsChoice::Default => builder.context(ctx.clone()),
+            choice => builder.params(choice),
+        };
+        let mut ch = builder.build().expect("cheetah engine");
 
         // Offline and online are measured at each thread count: prepare()
         // rebuilds the deployment from the same seed, so both runs carry
@@ -213,6 +240,7 @@ fn main() {
         jt.row(&[
             name.clone(),
             "gazelle".into(),
+            gz_rep.params_key(),
             threads.to_string(),
             format!("{:.3}", gz_rep.online_compute().as_secs_f64() * 1e3),
             format!("{:.3}", gz_prep.offline_time.as_secs_f64() * 1e3),
@@ -230,6 +258,7 @@ fn main() {
             jt.row(&[
                 name.clone(),
                 "cheetah".into(),
+                rep.params_key(),
                 thr.to_string(),
                 format!("{:.3}", rep.online_compute().as_secs_f64() * 1e3),
                 format!("{:.3}", prep.offline_time.as_secs_f64() * 1e3),
@@ -278,6 +307,7 @@ fn main() {
                 jt.row(&[
                     name.clone(),
                     fw.into(),
+                    loop_reps[0].params_key(),
                     threads.to_string(),
                     format!("{:.3}", wall.as_secs_f64() * 1e3),
                     String::new(),
@@ -322,6 +352,55 @@ fn main() {
             }
             bt.print("Fig. 8 — VGG-16 accumulated per-layer cost");
         }
+    }
+
+    // ---- the auto-params cell: netRes through the planner ----
+    // netRes's ten-block residual tower overflows the default plaintext
+    // modulus, so `ParamsChoice::Auto` must climb the ladder; this cell
+    // records which rung it landed on and what the query cost there.
+    // Skipped only when `--network` filters it out.
+    if net_filter.as_deref().is_none_or(|f| NetworkArch::from_key(f) == Some(NetworkArch::NetRes))
+    {
+        cheetah::par::set_threads(threads);
+        let net = Network::build_scaled(NetworkArch::NetRes, 21, 1.0);
+        let name = net.name.clone();
+        let input = input_for(&net, 22);
+        let mut auto = EngineBuilder::new(Backend::Cheetah)
+            .network(net)
+            .params(ParamsChoice::Auto)
+            .epsilon(0.05)
+            .seed(23)
+            .build()
+            .expect("auto-params cheetah engine");
+        let prep = auto.prepare().expect("auto-params offline");
+        let rep = auto.infer(&input).expect("auto-params inference");
+        let key = rep.params_key();
+        assert_ne!(key, "n4096p23", "{name}: the planner must climb past the default rung");
+        println!("{name}: auto params selected {key}");
+        t.row(&[
+            format!("{name} [auto {key}]"),
+            "CHEETAH".into(),
+            format!("{:.0} ms", rep.online_total().as_secs_f64() * 1e3),
+            format!("{:.0} ms", prep.offline_time.as_secs_f64() * 1e3),
+            fmt_bytes(rep.online_bytes()),
+            fmt_bytes(prep.offline_bytes),
+            String::new(),
+            rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+        ]);
+        jt.row(&[
+            name,
+            "cheetah".into(),
+            key,
+            threads.to_string(),
+            format!("{:.3}", rep.online_compute().as_secs_f64() * 1e3),
+            format!("{:.3}", prep.offline_time.as_secs_f64() * 1e3),
+            rep.online_bytes().to_string(),
+            prep.offline_bytes.to_string(),
+            rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+            String::new(),
+            "1".into(),
+            String::new(),
+        ]);
     }
 
     t.print(

@@ -237,6 +237,7 @@ impl InferenceEngine for CheetahEngine {
             })
             .collect();
         let mut rep = EngineReport::bare(Backend::Cheetah, r.argmax, r.logits.clone());
+        rep.params = Some(self.ctx.params);
         rep.timing = Some(Timing {
             online_compute: r.online_compute(),
             wire: r.wire_time,
@@ -267,6 +268,7 @@ impl InferenceEngine for CheetahEngine {
             self.prepare()?;
         }
         let offline_bytes = self.offline_bytes;
+        let params = self.ctx.params;
         let runner = self.runner.as_mut().expect("prepared above");
         let n_steps = runner.spec().steps.len() as u64;
         let out: Vec<EngineReport> = runner
@@ -274,6 +276,7 @@ impl InferenceEngine for CheetahEngine {
             .into_iter()
             .map(|r| {
                 let mut rep = EngineReport::bare(Backend::Cheetah, r.argmax, r.logits.clone());
+                rep.params = Some(params);
                 rep.timing = Some(Timing {
                     online_compute: r.online_compute(),
                     wire: r.wire_time,
@@ -344,6 +347,7 @@ impl InferenceEngine for GazelleEngine {
         let runner = self.runner.as_mut().expect("prepared above");
         let r = runner.infer(input);
         let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+        rep.params = Some(self.ctx.params);
         rep.timing = Some(Timing {
             online_compute: r.online_compute(),
             wire: Duration::ZERO,
@@ -381,12 +385,14 @@ impl InferenceEngine for GazelleEngine {
             self.prepare()?;
         }
         let offline_bytes = self.offline_bytes;
+        let params = self.ctx.params;
         let runner = self.runner.as_mut().expect("prepared above");
         let out: Vec<EngineReport> = runner
             .infer_batch(inputs)
             .into_iter()
             .map(|r| {
                 let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+                rep.params = Some(params);
                 rep.timing = Some(Timing {
                     online_compute: r.online_compute(),
                     wire: Duration::ZERO,
@@ -494,8 +500,9 @@ impl CheetahNetEngine {
         self.server.as_ref().map(|s| s.addr)
     }
 
-    fn report_for(r: &NetReport, offline_bytes: u64) -> EngineReport {
+    fn report_for(r: &NetReport, offline_bytes: u64, params: crate::phe::Params) -> EngineReport {
         let mut rep = EngineReport::bare(Backend::CheetahNet, r.argmax, r.logits.clone());
+        rep.params = Some(params);
         // Wall time over a real socket already includes wire time.
         rep.timing =
             Some(Timing { online_compute: r.wall, wire: Duration::ZERO, offline: Duration::ZERO });
@@ -561,9 +568,10 @@ impl InferenceEngine for CheetahNetEngine {
             self.prepare()?;
         }
         let offline_bytes = self.offline_bytes;
+        let params = self.ctx.params;
         let client = self.clients.first_mut().expect("prepared above");
         let r = client.infer(input)?;
-        let rep = Self::report_for(&r, offline_bytes);
+        let rep = Self::report_for(&r, offline_bytes, params);
         self.last = Some(rep.clone());
         Ok(rep)
     }
@@ -587,6 +595,7 @@ impl InferenceEngine for CheetahNetEngine {
             return inputs.iter().map(|x| self.infer(x)).collect();
         }
         let offline_bytes = self.offline_bytes;
+        let params = self.ctx.params;
         let k = self.clients.len().min(inputs.len());
         let per = inputs.len() / k;
         let rem = inputs.len() % k;
@@ -606,7 +615,11 @@ impl InferenceEngine for CheetahNetEngine {
                     s.spawn(move || {
                         chunk
                             .iter()
-                            .map(|x| client.infer(x).map(|r| Self::report_for(&r, offline_bytes)))
+                            .map(|x| {
+                                client
+                                    .infer(x)
+                                    .map(|r| Self::report_for(&r, offline_bytes, params))
+                            })
                             .collect()
                     })
                 })

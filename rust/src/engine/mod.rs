@@ -44,6 +44,7 @@ pub use report::{comparison_table, EngineReport, StepReport, Timing, Traffic};
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, NetworkArch, Tensor};
 use crate::phe::{Context, Params};
+use crate::plan::{ParamsChoice, Plan, PlanError};
 use crate::protocol::cheetah::{ProtocolSpec, SpecError};
 use crate::protocol::transport::LinkModel;
 use crate::serve::{PoolConfig, SecureConfig};
@@ -118,6 +119,10 @@ pub enum EngineError {
     /// The network cannot compile into a protocol spec (typed — previously
     /// a panic deep inside the protocol layer).
     Spec(SpecError),
+    /// The parameter planner rejected the requested configuration
+    /// ([`crate::plan`]): no ladder rung clears the network's noise or
+    /// magnitude budget, raised before any key or ciphertext exists.
+    Plan(PlanError),
     /// A transport error from a networked backend.
     Io(std::io::Error),
 }
@@ -127,6 +132,7 @@ impl std::fmt::Display for EngineError {
         match self {
             EngineError::Build(msg) => write!(f, "engine build error: {msg}"),
             EngineError::Spec(e) => write!(f, "engine spec error: {e}"),
+            EngineError::Plan(e) => write!(f, "engine parameter-plan error: {e}"),
             EngineError::Io(e) => write!(f, "engine transport error: {e}"),
         }
     }
@@ -137,6 +143,7 @@ impl std::error::Error for EngineError {
         match self {
             EngineError::Build(_) => None,
             EngineError::Spec(e) => Some(e),
+            EngineError::Plan(e) => Some(e),
             EngineError::Io(e) => Some(e),
         }
     }
@@ -145,6 +152,12 @@ impl std::error::Error for EngineError {
 impl From<SpecError> for EngineError {
     fn from(e: SpecError) -> Self {
         EngineError::Spec(e)
+    }
+}
+
+impl From<PlanError> for EngineError {
+    fn from(e: PlanError) -> Self {
+        EngineError::Plan(e)
     }
 }
 
@@ -243,6 +256,7 @@ pub struct EngineBuilder {
     epsilon: f64,
     seed: u64,
     ctx: Option<Arc<Context>>,
+    params: ParamsChoice,
     link: LinkModel,
     remote: Option<SocketAddr>,
     secure: Option<SecureConfig>,
@@ -263,6 +277,7 @@ impl EngineBuilder {
             epsilon: 0.0,
             seed: 1,
             ctx: None,
+            params: ParamsChoice::Default,
             link: LinkModel::gigabit_lan(),
             remote: None,
             secure: None,
@@ -317,9 +332,29 @@ impl EngineBuilder {
     }
 
     /// Share a pre-built PHE context (default: fresh
-    /// [`Params::default_params`] context, built once per engine).
+    /// [`Params::default_params`] context, built once per engine). Takes
+    /// precedence over [`EngineBuilder::params`].
     pub fn context(mut self, ctx: Arc<Context>) -> Self {
         self.ctx = Some(ctx);
+        self
+    }
+
+    /// RLWE parameter policy (default [`ParamsChoice::Default`], which is
+    /// bit-compatible with every pinned-seed artifact):
+    ///
+    /// * [`ParamsChoice::Default`] — [`Params::default_params`];
+    /// * [`ParamsChoice::Explicit`] — a caller-supplied set, used as-is;
+    /// * [`ParamsChoice::Auto`] — run the [`crate::plan`] planner against
+    ///   the resolved network and take the cheapest ladder rung whose
+    ///   worst step clears the safety margin (a typed
+    ///   [`EngineError::Plan`] if none does).
+    ///
+    /// Ignored when an explicit [`EngineBuilder::context`] is shared —
+    /// that context's parameters win. `Auto` needs a local model, so it is
+    /// a build error for a [`Backend::CheetahNet`] engine pointed at a
+    /// remote server via [`EngineBuilder::connect_to`].
+    pub fn params(mut self, choice: ParamsChoice) -> Self {
+        self.params = choice;
         self
     }
 
@@ -391,10 +426,27 @@ impl EngineBuilder {
         }
     }
 
-    fn resolve_context(&self) -> Arc<Context> {
-        self.ctx
-            .clone()
-            .unwrap_or_else(|| Arc::new(Context::new(Params::default_params())))
+    /// Resolve the PHE context: a shared [`EngineBuilder::context`] wins;
+    /// otherwise the [`EngineBuilder::params`] policy decides, with `Auto`
+    /// running the planner against `net` (which the remote networked path
+    /// does not have).
+    fn resolve_context(&self, net: Option<&Network>) -> EngineResult<Arc<Context>> {
+        if let Some(ctx) = &self.ctx {
+            return Ok(ctx.clone());
+        }
+        let params = match (self.params, net) {
+            (ParamsChoice::Default, _) => Params::default_params(),
+            (ParamsChoice::Explicit(p), _) => p,
+            (ParamsChoice::Auto, Some(net)) => Plan::for_network(net)?.params,
+            (ParamsChoice::Auto, None) => {
+                return Err(EngineError::Build(
+                    "auto parameter selection needs a local network to analyze: \
+                     give the builder .network(...)/.arch(...), or share an explicit .context(...)"
+                        .into(),
+                ));
+            }
+        };
+        Ok(Arc::new(Context::new(params)))
     }
 
     /// Construct the engine. Heavy offline work (key generation, blinding,
@@ -416,8 +468,9 @@ impl EngineBuilder {
             Backend::Cheetah => {
                 let net = self.resolve_network()?;
                 ProtocolSpec::compile(&net)?;
+                let ctx = self.resolve_context(Some(&net))?;
                 Box::new(CheetahEngine::new(
-                    self.resolve_context(),
+                    ctx,
                     net,
                     self.plan,
                     self.epsilon,
@@ -428,15 +481,17 @@ impl EngineBuilder {
             Backend::Gazelle => {
                 let net = self.resolve_network()?;
                 ProtocolSpec::compile(&net)?;
-                Box::new(GazelleEngine::new(self.resolve_context(), net, self.plan, self.seed))
+                let ctx = self.resolve_context(Some(&net))?;
+                Box::new(GazelleEngine::new(ctx, net, self.plan, self.seed))
             }
             Backend::CheetahNet => {
-                let target = match self.remote {
-                    Some(addr) => NetTarget::Remote(addr),
+                let (ctx, target) = match self.remote {
+                    Some(addr) => (self.resolve_context(None)?, NetTarget::Remote(addr)),
                     None => {
                         let net = self.resolve_network()?;
                         ProtocolSpec::compile(&net)?;
-                        NetTarget::SelfHosted {
+                        let ctx = self.resolve_context(Some(&net))?;
+                        let target = NetTarget::SelfHosted {
                             net,
                             cfg: self.secure.unwrap_or(SecureConfig {
                                 epsilon: self.epsilon,
@@ -448,11 +503,12 @@ impl EngineBuilder {
                                 threads: self.threads.unwrap_or(0),
                                 ..SecureConfig::default()
                             }),
-                        }
+                        };
+                        (ctx, target)
                     }
                 };
                 Box::new(CheetahNetEngine::new(
-                    self.resolve_context(),
+                    ctx,
                     self.plan,
                     self.seed,
                     target,
@@ -628,6 +684,45 @@ mod tests {
         assert_eq!(got, want, "pooled batch diverged from the manual session pool");
         drop(engine);
         server_b.shutdown();
+    }
+
+    /// The params policy threads end to end: an `Auto` build runs the
+    /// planner (a tiny net stays on the default rung and the report keys
+    /// it), plaintext backends report no parameter set, and `Auto` on a
+    /// remote networked engine — no local model to analyze — is a typed
+    /// build error.
+    #[test]
+    fn params_choice_threads_through_build_and_report() {
+        use crate::nn::Layer;
+        let mut net = Network {
+            name: "params-test".into(),
+            input_shape: (1, 5, 5),
+            layers: vec![Layer::conv(2, 3, 1, 1), Layer::relu(), Layer::fc(3)],
+        };
+        net.init_weights(23);
+        let input = Tensor::from_vec((0..25).map(|i| (i as f64 - 12.0) / 13.0).collect(), 1, 5, 5);
+
+        let mut auto = EngineBuilder::new(Backend::Cheetah)
+            .network(net.clone())
+            .seed(9)
+            .params(ParamsChoice::Auto)
+            .build()
+            .unwrap();
+        let rep = auto.infer(&input).unwrap();
+        assert_eq!(rep.params_key(), "n4096p23", "tiny net stays on the default rung");
+
+        let mut quant =
+            EngineBuilder::new(Backend::PlaintextQuantized).network(net).build().unwrap();
+        let rep = quant.infer(&input).unwrap();
+        assert_eq!(rep.params_key(), "-", "plaintext backends report no params");
+
+        let err = EngineBuilder::new(Backend::CheetahNet)
+            .connect_to("127.0.0.1:9".parse().unwrap())
+            .params(ParamsChoice::Auto)
+            .build()
+            .map(|_| ())
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Build(_)), "{err}");
     }
 
     #[test]

@@ -93,6 +93,9 @@ pub struct EngineReport {
     pub traffic: Option<Traffic>,
     /// HE op counts (single-query mode only; `None` for batch reports).
     pub ops: Option<OpCounts>,
+    /// RLWE parameter set the run used (`None` for plaintext backends) —
+    /// keyed as `n{n}p{p_bits}` in benchmark artifacts.
+    pub params: Option<crate::phe::Params>,
     /// Per fused-step breakdown (single-query protocol backends).
     pub steps: Vec<StepReport>,
 }
@@ -100,7 +103,25 @@ pub struct EngineReport {
 impl EngineReport {
     /// A bare result with every optional section empty.
     pub fn bare(backend: Backend, argmax: usize, logits: Vec<f64>) -> Self {
-        Self { backend, argmax, logits, timing: None, traffic: None, ops: None, steps: Vec::new() }
+        Self {
+            backend,
+            argmax,
+            logits,
+            timing: None,
+            traffic: None,
+            ops: None,
+            params: None,
+            steps: Vec::new(),
+        }
+    }
+
+    /// Stable parameter key for benchmark artifacts (`n4096p23`); plaintext
+    /// backends report `-`.
+    pub fn params_key(&self) -> String {
+        match &self.params {
+            Some(p) => format!("n{}p{}", p.n, p.p_bits()),
+            None => "-".to_string(),
+        }
     }
 
     /// Total online time (compute + wire), when timed.

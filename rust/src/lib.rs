@@ -44,12 +44,19 @@
 //! CHEETAH, GAZELLE, and networked backends, with a unified
 //! [`engine::EngineReport`] for cross-backend comparisons.
 //!
+//! The [`plan`] module is the parameter planner: a static worst-case
+//! noise/magnitude model over the compiled protocol and a ladder of RLWE
+//! parameter rungs, so `EngineBuilder::params(ParamsChoice::Auto)` picks
+//! the smallest parameter set that provably decrypts every step of a
+//! network (or fails with a typed diagnostic before any garbage decrypt).
+//!
 //! See `README.md` for the quickstart and knob index, and `DESIGN.md` for
 //! the system inventory and the experiment index (measured results
 //! regenerate from the `benches/` targets into `BENCH_*.json`).
 
 // Rustdoc coverage is enforced on the crate's driving surfaces (`par`,
-// `engine`, `serve`, `phe`, `protocol::cheetah` and this root). Legacy
+// `engine`, `serve`, `phe`, `plan`, `nn`, `protocol::cheetah` and this
+// root). Legacy
 // modules below carry an explicit `#[allow(missing_docs)]` until their passes land
 // — remove the allow when documenting one (CI's `cargo doc -D warnings`
 // gate and clippy keep newly-warned modules clean thereafter).
@@ -64,11 +71,11 @@ pub mod engine;
 pub mod fixed;
 #[allow(missing_docs)]
 pub mod gc;
-#[allow(missing_docs)]
 pub mod nn;
 pub mod obs;
 pub mod par;
 pub mod phe;
+pub mod plan;
 pub mod protocol;
 #[allow(missing_docs)]
 pub mod runtime;

@@ -6,12 +6,15 @@
 //!                       [--pool-workers N] [--workers N] [--eps E]
 //!                       [--seed S]  (blinding seed; default: OS entropy)
 //!                       [--threads T]  (compute threads; 0 = all cores)
+//!                       [--params auto|default|big]  (RLWE parameter policy; auto runs the planner)
 //!                       [--reactor]  (readiness event loop instead of thread-per-connection; unix)
 //!                       [--max-sessions N]  (reactor connection cap; default 4096)
 //!                       [--stats-addr A]  (live telemetry endpoint; e.g. 127.0.0.1:9911)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
 //!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
-//!                                                                      cheetah, gazelle, cheetah-net, all}
+//!                       [--params auto|default|big]                    cheetah, gazelle, cheetah-net, all}
+//! cheetah plan          [--network netA|netB|alexnet|vgg16|netRes|netPool|all]
+//!                                                                     static noise/magnitude budget + chosen parameter rung
 //! cheetah tables                                                      print the paper's analytic tables
 //! cheetah bench-help                                                   how to regenerate every paper table/figure
 //! ```
@@ -31,7 +34,8 @@ use cheetah::coordinator::{BatchPolicy, Server};
 use cheetah::engine::{comparison_table, Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
-use cheetah::phe::{Context, Params};
+use cheetah::phe::Context;
+use cheetah::plan::{ParamsChoice, Plan};
 use cheetah::runtime::load_trained_network;
 use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
 use std::sync::Arc;
@@ -59,6 +63,36 @@ fn model_or_fallback(model: &str) -> Network {
         let arch = NetworkArch::from_key(model).unwrap_or(NetworkArch::NetA);
         Network::build(arch, 11)
     })
+}
+
+/// Parse `--params` and resolve it against `net`, printing the chosen rung
+/// plus the per-step headroom table whenever the planner ran.
+fn resolve_params(net: &Network) -> Result<cheetah::phe::Params, Box<dyn std::error::Error>> {
+    let raw = arg("--params", "default");
+    let choice = ParamsChoice::parse(&raw)
+        .ok_or_else(|| format!("unknown --params value `{raw}` (expected auto|default|big)"))?;
+    let (params, plan) = choice.resolve(net)?;
+    match plan {
+        Some(plan) => println!("{}", plan.render()),
+        None if !matches!(choice, ParamsChoice::Default) => println!(
+            "params: n={}, p={} bits, q={} bits",
+            params.n,
+            params.p_bits(),
+            params.q_bits()
+        ),
+        None => {}
+    }
+    Ok(params)
+}
+
+/// The spatial scale the planner/CLI analyzes a zoo architecture at: the
+/// ImageNet-sized nets run at 1/8 scale (the test/bench convention), the
+/// MNIST-sized nets at full size.
+fn plan_scale(arch: NetworkArch) -> f64 {
+    match arch {
+        NetworkArch::AlexNet | NetworkArch::Vgg16 => 0.125,
+        _ => 1.0,
+    }
 }
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -108,7 +142,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             let max_sessions: usize = arg("--max-sessions", "4096").parse()?;
             let net = model_or_fallback(&model);
             let name = net.name.clone();
-            let ctx = Arc::new(Context::new(Params::default_params()));
+            let ctx = Arc::new(Context::new(resolve_params(&net)?));
             let cfg = SecureConfig {
                 epsilon: eps,
                 seed,
@@ -182,7 +216,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             };
 
             let net = model_or_fallback(&model);
-            let ctx = Arc::new(Context::new(Params::default_params()));
+            let ctx = Arc::new(Context::new(resolve_params(&net)?));
             let sample = SyntheticDigits::new(28, 5).render(label);
             println!(
                 "one private digit ('{label}') through {} backend(s) on {} \
@@ -220,6 +254,36 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             );
             Ok(())
         }
+        "plan" => {
+            // Static parameter planning: no keys, no ciphertexts — just the
+            // per-step noise/magnitude budget and the cheapest ladder rung
+            // that clears it (or a typed infeasibility).
+            let which = arg("--network", "all");
+            let archs: Vec<NetworkArch> = if which == "all" {
+                NetworkArch::all().to_vec()
+            } else {
+                vec![NetworkArch::from_key(&which)
+                    .ok_or_else(|| format!("unknown network `{which}` (try `all`)"))?]
+            };
+            let mut infeasible = false;
+            for arch in archs {
+                let scale = plan_scale(arch);
+                let net = Network::build_scaled(arch, 11, scale);
+                let note = if scale < 1.0 { format!(" (scale {scale})") } else { String::new() };
+                println!("── {}{note} ──", net.name);
+                match Plan::for_network(&net) {
+                    Ok(plan) => println!("{}", plan.render()),
+                    Err(e) => {
+                        infeasible = true;
+                        println!("no feasible rung: {e}");
+                    }
+                }
+            }
+            if infeasible {
+                return Err("at least one network has no feasible parameter rung".into());
+            }
+            Ok(())
+        }
         "tables" => {
             cheetah::complexity::print_table1();
             cheetah::complexity::print_table2(
@@ -231,7 +295,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         _ => {
             println!(
                 "cheetah — privacy-preserved NN inference (paper reproduction)\n\n\
-                 subcommands: serve | serve-secure | infer | tables\n\n\
+                 subcommands: serve | serve-secure | infer | plan | tables\n\n\
                  paper artifacts → bench targets:\n\
                  \x20 Table 1/2  cargo bench --bench complexity_tables\n\
                  \x20 Table 3    cargo bench --bench conv_bench   (--sweep → Fig. 5)\n\

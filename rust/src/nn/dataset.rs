@@ -24,12 +24,15 @@ const FONT: [[u8; 7]; 10] = [
 /// One labelled sample.
 #[derive(Clone, Debug)]
 pub struct Sample {
+    /// Rendered image, `(channels, size, size)`.
     pub image: Tensor,
+    /// Digit class in `0..10`.
     pub label: usize,
 }
 
 /// The synthetic-digits generator.
 pub struct SyntheticDigits {
+    /// Square image side length in pixels.
     pub size: usize,
     rng: SplitMix64,
 }

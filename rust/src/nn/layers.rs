@@ -22,28 +22,43 @@ pub enum LayerKind {
     MeanPool { size: usize },
     /// Fully connected: `weights[o][i]` flattened.
     Fc { out_features: usize },
+    /// Identity skip connection: adds the input of the preceding linear
+    /// layer to the current activation (`x ← x + x_skip`). Shape-preserving
+    /// and weight-free; in the private protocol both parties add their
+    /// saved shares locally, so it costs zero ciphertext operations.
+    ResidualAdd,
 }
 
 /// A layer with (possibly empty) weights.
 #[derive(Clone, Debug)]
 pub struct Layer {
+    /// What the layer computes and its hyper-parameters.
     pub kind: LayerKind,
-    /// Row-major weights; empty for Relu/MeanPool.
+    /// Row-major weights; empty for Relu/MeanPool/ResidualAdd.
     pub weights: Vec<f64>,
 }
 
 impl Layer {
+    /// 2-D convolution layer (weights are initialized separately).
     pub fn conv(out_channels: usize, kernel: usize, stride: usize, pad: usize) -> Self {
         Self { kind: LayerKind::Conv2d { out_channels, kernel, stride, pad }, weights: vec![] }
     }
+    /// ReLU activation layer.
     pub fn relu() -> Self {
         Self { kind: LayerKind::Relu, weights: vec![] }
     }
+    /// Mean-pooling layer over `size × size` windows.
     pub fn mean_pool(size: usize) -> Self {
         Self { kind: LayerKind::MeanPool { size }, weights: vec![] }
     }
+    /// Fully-connected layer (weights are initialized separately).
     pub fn fc(out_features: usize) -> Self {
         Self { kind: LayerKind::Fc { out_features }, weights: vec![] }
+    }
+    /// Identity residual add (skip connection back to the preceding linear
+    /// layer's input).
+    pub fn residual_add() -> Self {
+        Self { kind: LayerKind::ResidualAdd, weights: vec![] }
     }
 
     /// Output shape for a given input shape.
@@ -54,7 +69,7 @@ impl Layer {
                 let ow = (w + 2 * pad - kernel) / stride + 1;
                 (out_channels, oh, ow)
             }
-            LayerKind::Relu => (c, h, w),
+            LayerKind::Relu | LayerKind::ResidualAdd => (c, h, w),
             LayerKind::MeanPool { size } => (c, h / size, w / size),
             LayerKind::Fc { out_features } => (1, 1, out_features),
         }
@@ -151,6 +166,9 @@ pub fn forward_layer(layer: &Layer, input: &Tensor) -> Tensor {
                 }
             }
             out
+        }
+        LayerKind::ResidualAdd => {
+            panic!("ResidualAdd needs the saved skip input — handled by Network::forward")
         }
         LayerKind::Fc { out_features } => {
             let in_features = input.len();

@@ -1,6 +1,7 @@
 //! Neural-network substrate: tensors, layers, the benchmark network zoo
-//! (Network A, Network B, AlexNet, VGG-16), plaintext reference inference
-//! (float and quantized), and the synthetic-digits dataset.
+//! (Network A, Network B, AlexNet, VGG-16, NetRes, NetPool), plaintext
+//! reference inference (float and quantized), and the synthetic-digits
+//! dataset.
 //!
 //! The plaintext quantized forward pass is the correctness oracle for the
 //! private protocols: CHEETAH must produce the same argmax (and values

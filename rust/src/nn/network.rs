@@ -6,6 +6,13 @@
 //! * **Network B** (MiniONN [23]): 2 Conv + 2 FC, ReLU + mean pooling.
 //! * **AlexNet** [5]: 5 Conv + 3 FC (224×224×3 input).
 //! * **VGG-16** [6]: 13 Conv + 3 FC (224×224×3 input).
+//! * **NetRes**: a CI-scale residual net — conv stem + 10 identity-skip
+//!   blocks (conv + ReLU + residual add) + FC head. The additive skip
+//!   chain grows the worst-case activation range linearly with depth,
+//!   which is exactly what forces the parameter planner
+//!   ([`crate::plan`]) onto a wider plaintext modulus.
+//! * **NetPool**: NetB-scale conv net with a *leading* standalone mean
+//!   pool, exercising the zero-ciphertext `AvgPool` protocol step.
 //!
 //! Plus `scaled(f)` variants that shrink spatial dimensions for fast CI
 //! benchmarking while preserving layer structure.
@@ -21,24 +28,43 @@ use crate::util::rng::SplitMix64;
 /// Named benchmark architectures.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NetworkArch {
+    /// Network A (DeepSecure): 1 Conv + 2 FC, MNIST-scale.
     NetA,
+    /// Network B (MiniONN): 2 Conv + 2 FC with fused mean pools.
     NetB,
+    /// AlexNet: 5 Conv + 3 FC, 224×224×3 input.
     AlexNet,
+    /// VGG-16: 13 Conv + 3 FC, 224×224×3 input.
     Vgg16,
+    /// Residual net: conv stem + 10 identity-skip blocks + FC head.
+    NetRes,
+    /// NetB-scale conv net with a leading standalone mean pool.
+    NetPool,
 }
 
 impl NetworkArch {
+    /// Human-readable architecture name (used in reports and tables).
     pub fn name(&self) -> &'static str {
         match self {
             NetworkArch::NetA => "Network A",
             NetworkArch::NetB => "Network B",
             NetworkArch::AlexNet => "AlexNet",
             NetworkArch::Vgg16 => "VGG-16",
+            NetworkArch::NetRes => "NetRes",
+            NetworkArch::NetPool => "NetPool",
         }
     }
 
-    pub fn all() -> [NetworkArch; 4] {
-        [NetworkArch::NetA, NetworkArch::NetB, NetworkArch::AlexNet, NetworkArch::Vgg16]
+    /// Every architecture in the zoo.
+    pub fn all() -> [NetworkArch; 6] {
+        [
+            NetworkArch::NetA,
+            NetworkArch::NetB,
+            NetworkArch::AlexNet,
+            NetworkArch::Vgg16,
+            NetworkArch::NetRes,
+            NetworkArch::NetPool,
+        ]
     }
 
     /// Short CLI/artifact key, matching `python/compile/model.py::ARCHS`
@@ -49,6 +75,8 @@ impl NetworkArch {
             NetworkArch::NetB => "netB",
             NetworkArch::AlexNet => "alexnet",
             NetworkArch::Vgg16 => "vgg16",
+            NetworkArch::NetRes => "netRes",
+            NetworkArch::NetPool => "netPool",
         }
     }
 
@@ -62,6 +90,8 @@ impl NetworkArch {
             "netB" | "netb" => Some(NetworkArch::NetB),
             "alexnet" => Some(NetworkArch::AlexNet),
             "vgg16" | "vgg" => Some(NetworkArch::Vgg16),
+            "netRes" | "netres" => Some(NetworkArch::NetRes),
+            "netPool" | "netpool" => Some(NetworkArch::NetPool),
             _ => None,
         }
     }
@@ -70,8 +100,11 @@ impl NetworkArch {
 /// A network: input shape + layer stack (with weights).
 #[derive(Clone, Debug)]
 pub struct Network {
+    /// Display name (architecture name, plus a scaled marker).
     pub name: String,
+    /// Input shape `(channels, height, width)`.
     pub input_shape: (usize, usize, usize),
+    /// The layer stack, input to output.
     pub layers: Vec<Layer>,
 }
 
@@ -151,6 +184,29 @@ impl Network {
                 ls.push(Layer::fc(1000.min(s(1000).max(10))));
                 ((3, s(224), s(224)), ls)
             }
+            NetworkArch::NetRes => {
+                // Stem, then 10 shape-preserving residual blocks. Each block
+                // adds the block input back after the ReLU, so the
+                // worst-case activation bound grows by x_max per block —
+                // the planner must widen the plaintext modulus for this net.
+                let mut ls = vec![Layer::conv(4, 3, 1, 1), Layer::relu()];
+                for _ in 0..10 {
+                    ls.push(Layer::conv(4, 3, 1, 1));
+                    ls.push(Layer::relu());
+                    ls.push(Layer::residual_add());
+                }
+                ls.push(Layer::fc(10));
+                ((1, s(12), s(12)), ls)
+            }
+            NetworkArch::NetPool => (
+                (1, s(28), s(28)),
+                vec![
+                    Layer::mean_pool(2),
+                    Layer::conv(8, 5, 1, 2),
+                    Layer::relu(),
+                    Layer::fc(10),
+                ],
+            ),
         };
         let mut net = Self {
             name: format!("{}{}", arch.name(), if f < 1.0 { " (scaled)" } else { "" }),
@@ -201,8 +257,23 @@ impl Network {
     pub fn forward(&self, input: &Tensor) -> Tensor {
         assert_eq!(input.shape(), self.input_shape, "input shape mismatch");
         let mut x = input.clone();
+        let mut skip: Option<Tensor> = None;
         for layer in &self.layers {
-            x = forward_layer(layer, &x);
+            match layer.kind {
+                LayerKind::ResidualAdd => {
+                    let s = skip.take().expect("ResidualAdd without a preceding linear layer");
+                    assert_eq!(x.shape(), s.shape(), "residual add needs matching shapes");
+                    for (a, b) in x.data.iter_mut().zip(s.data.iter()) {
+                        *a += b;
+                    }
+                }
+                _ => {
+                    if matches!(layer.kind, LayerKind::Conv2d { .. } | LayerKind::Fc { .. }) {
+                        skip = Some(x.clone());
+                    }
+                    x = forward_layer(layer, &x);
+                }
+            }
         }
         x
     }
@@ -225,6 +296,7 @@ impl Network {
             let layer = &self.layers[i];
             match layer.kind {
                 LayerKind::Conv2d { .. } | LayerKind::Fc { .. } => {
+                    let skip_q = q.clone();
                     let (sums, new_shape) =
                         forward_linear_quantized(layer, &q, shape, plan, epsilon, &mut rng);
                     shape = new_shape;
@@ -236,6 +308,18 @@ impl Network {
                     {
                         q = relu_requantize(&sums, plan);
                         i += 2;
+                        // Identity skip: both protocol parties add their
+                        // saved input shares locally, which reconstructs to
+                        // this plain integer add at scale `plan.x`.
+                        if i < self.layers.len()
+                            && self.layers[i].kind == LayerKind::ResidualAdd
+                        {
+                            debug_assert_eq!(q.len(), skip_q.len());
+                            for (a, &s) in q.iter_mut().zip(skip_q.iter()) {
+                                *a += s;
+                            }
+                            i += 1;
+                        }
                     } else {
                         let sum_scale = plan.x.mul(plan.k);
                         q = sums
@@ -254,6 +338,9 @@ impl Network {
                 LayerKind::Relu => {
                     q = q.iter().map(|&v| v.max(0)).collect();
                     i += 1;
+                }
+                LayerKind::ResidualAdd => {
+                    panic!("ResidualAdd must follow a linear+ReLU pair (see ProtocolSpec)")
                 }
             }
         }
@@ -314,6 +401,63 @@ mod tests {
         let before_fc = shapes[shapes.len() - 6]; // last pool output
         assert_eq!(before_fc, (512, 7, 7));
         assert!(vgg.num_params() > 100_000_000, "VGG-16 has >100M params");
+    }
+
+    #[test]
+    fn netres_shapes_and_residual_forward() {
+        let net = Network::build(NetworkArch::NetRes, 1);
+        assert_eq!(net.input_shape, (1, 12, 12));
+        let shapes = net.shapes();
+        assert_eq!(*shapes.last().unwrap(), (1, 1, 10));
+        let n_res = net
+            .layers
+            .iter()
+            .filter(|l| l.kind == LayerKind::ResidualAdd)
+            .count();
+        assert_eq!(n_res, 10);
+
+        // Residual add really is x + skip: a single block with zero conv
+        // weights must reproduce its input exactly.
+        let mut tiny = Network {
+            name: "tiny-res".into(),
+            input_shape: (1, 2, 2),
+            layers: vec![Layer::conv(1, 1, 1, 0), Layer::relu(), Layer::residual_add()],
+        };
+        tiny.layers[0].weights = vec![0.0];
+        let input = Tensor::from_vec(vec![1.0, -2.0, 3.0, 4.0], 1, 2, 2);
+        let out = tiny.forward(&input);
+        assert_eq!(out.data, input.data);
+    }
+
+    #[test]
+    fn netpool_leading_pool() {
+        let net = Network::build(NetworkArch::NetPool, 1);
+        assert_eq!(net.layers[0].kind, LayerKind::MeanPool { size: 2 });
+        let shapes = net.shapes();
+        assert_eq!(shapes[1], (1, 14, 14));
+        assert_eq!(*shapes.last().unwrap(), (1, 1, 10));
+    }
+
+    #[test]
+    fn netres_quantized_deterministic() {
+        // The float path never saturates while the quantized path clamps at
+        // `x_max`/`y_max`, so a deep residual chain is not argmax-comparable
+        // against floats; what must hold is that the quantized mirror (the
+        // protocol's ground truth) is well-formed and ε=0 deterministic.
+        let plan = ScalePlan::default_plan();
+        let net = Network::build(NetworkArch::NetRes, 5);
+        let mut rng = SplitMix64::new(17);
+        let input = Tensor::from_vec(
+            (0..12 * 12).map(|_| rng.gen_f64_range(-1.0, 1.0)).collect(),
+            1,
+            12,
+            12,
+        );
+        let q0 = net.forward_quantized(&input, &plan, 0.0, 7);
+        let q1 = net.forward_quantized(&input, &plan, 0.0, 999);
+        assert_eq!(q0.len(), 10);
+        assert_eq!(q0, q1, "ε=0 must not depend on the noise seed");
+        assert!(q0.iter().any(|&v| v != q0[0]), "degenerate logits");
     }
 
     #[test]

@@ -8,17 +8,23 @@
 /// A flat vector is represented as `(1, 1, len)`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
+    /// Channel-major elements: index `(c·h + y)·w + x`.
     pub data: Vec<f64>,
+    /// Channel count.
     pub c: usize,
+    /// Height.
     pub h: usize,
+    /// Width.
     pub w: usize,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(c: usize, h: usize, w: usize) -> Self {
         Self { data: vec![0.0; c * h * w], c, h, w }
     }
 
+    /// Wrap channel-major data in a shaped tensor (panics on length mismatch).
     pub fn from_vec(data: Vec<f64>, c: usize, h: usize, w: usize) -> Self {
         assert_eq!(data.len(), c * h * w, "shape/data mismatch");
         Self { data, c, h, w }
@@ -30,24 +36,29 @@ impl Tensor {
         Self { data, c: 1, h: 1, w: n }
     }
 
+    /// Total element count (`c·h·w`).
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Shape as `(channels, height, width)`.
     pub fn shape(&self) -> (usize, usize, usize) {
         (self.c, self.h, self.w)
     }
 
+    /// Read the element at `(c, y, x)`.
     #[inline]
     pub fn at(&self, c: usize, y: usize, x: usize) -> f64 {
         debug_assert!(c < self.c && y < self.h && x < self.w);
         self.data[(c * self.h + y) * self.w + x]
     }
 
+    /// Mutable access to the element at `(c, y, x)`.
     #[inline]
     pub fn at_mut(&mut self, c: usize, y: usize, x: usize) -> &mut f64 {
         debug_assert!(c < self.c && y < self.h && x < self.w);
@@ -74,6 +85,7 @@ impl Tensor {
             .unwrap()
     }
 
+    /// Largest absolute element value (0 for an empty tensor).
     pub fn max_abs(&self) -> f64 {
         self.data.iter().fold(0.0f64, |m, &v| m.max(v.abs()))
     }

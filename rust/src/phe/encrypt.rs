@@ -119,6 +119,18 @@ impl Encryptor {
     /// Remaining noise budget in bits: `log2(q/2p) − log2(max|err|)`.
     /// Returns 0 when decryption is no longer guaranteed correct.
     pub fn noise_budget(&self, ct: &Ciphertext) -> u32 {
+        let allowance_bits = (127
+            - (self.ctx.params.q() / (2 * self.ctx.params.p as u128)).leading_zeros())
+            as i64;
+        (allowance_bits - self.noise_bits(ct) as i64).max(0) as u32
+    }
+
+    /// Measured noise magnitude in bits: `ceil(log2(max|err|)) + 1` where
+    /// `err` is the centered residual between the raw decryption inner
+    /// product and the re-scaled rounded plaintext. This is the empirical
+    /// counterpart of the static model in [`crate::plan::noise`]: decryption
+    /// is exact while this stays below `log2(q/2p)`.
+    pub fn noise_bits(&self, ct: &Ciphertext) -> u32 {
         let ctx = &*self.ctx;
         let q = ctx.params.q();
         let w = self.decrypt_inner(ct);
@@ -136,9 +148,7 @@ impl Encryptor {
             let centered = d.min(q - d);
             max_err = max_err.max(centered);
         }
-        let allowance_bits = (127 - (q / (2 * ctx.params.p as u128)).leading_zeros()) as i64;
-        let err_bits = (128 - max_err.leading_zeros()) as i64;
-        (allowance_bits - err_bits).max(0) as u32
+        (128 - max_err.leading_zeros()) as u32
     }
 }
 

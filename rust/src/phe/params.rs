@@ -19,7 +19,7 @@ use crate::util::math::{find_ntt_prime_below, find_ntt_primes_below, ilog2};
 pub const NUM_Q_PRIMES: usize = 2;
 
 /// BFV-style parameter set.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Params {
     /// Ring degree (power of two). Also the SIMD slot count.
     pub n: usize,
@@ -35,10 +35,22 @@ impl Params {
     /// Build a parameter set with ring degree `n` and a plaintext modulus of
     /// about `plain_bits` bits. Panics if `n` is not a power of two ≥ 1024.
     pub fn new(n: usize, plain_bits: u32) -> Self {
+        Self::with_q_bits(n, plain_bits, 45)
+    }
+
+    /// Build a parameter set with an explicit per-prime ciphertext-modulus
+    /// width: each of the [`NUM_Q_PRIMES`] RNS primes is the largest
+    /// NTT-friendly prime below `2^q_bits`. `q_bits` is capped at 45 because
+    /// the wire format (`phe::serial::COEFF_BITS`) packs 45 bits per RNS
+    /// residue; the planner's undersized-rung tests use smaller widths.
+    /// Panics if `n` is not a power of two ≥ 1024, `plain_bits` is outside
+    /// `14..=30`, or `q_bits` is outside `20..=45`.
+    pub fn with_q_bits(n: usize, plain_bits: u32, q_bits: u32) -> Self {
         assert!(n.is_power_of_two() && n >= 1024, "ring degree must be a power of two >= 1024");
         assert!((14..=30).contains(&plain_bits), "plain_bits in 14..=30");
+        assert!((20..=45).contains(&q_bits), "q_bits in 20..=45 (wire packs 45 bits/residue)");
         let m = 2 * n as u64;
-        let qs_vec = find_ntt_primes_below(1u64 << 45, m, NUM_Q_PRIMES);
+        let qs_vec = find_ntt_primes_below(1u64 << q_bits, m, NUM_Q_PRIMES);
         let qs = [qs_vec[0], qs_vec[1]];
         let p = find_ntt_prime_below(1u64 << plain_bits, m);
         assert!(p < qs[1], "plain modulus must be below every q prime");
@@ -65,6 +77,11 @@ impl Params {
     pub fn q_bits(&self) -> u32 {
         let q = self.q();
         127 - q.leading_zeros()
+    }
+
+    /// Bit width of the plaintext modulus `p` (e.g. 23 for the default set).
+    pub fn p_bits(&self) -> u32 {
+        64 - self.p.leading_zeros()
     }
 
     /// Number of SIMD slots (== n for BFV batching; organized as a 2 × n/2
@@ -156,5 +173,19 @@ mod tests {
         let pr = Params::big_ring();
         assert_eq!(pr.n, 8192);
         assert_eq!(pr.p % (2 * 8192), 1);
+    }
+
+    #[test]
+    fn with_q_bits_shrinks_q() {
+        let pr = Params::with_q_bits(4096, 23, 30);
+        for &q in &pr.qs {
+            assert!(is_prime(q));
+            assert!(q < 1 << 30);
+            assert_eq!(q % (2 * pr.n as u64), 1);
+        }
+        assert!(pr.q_bits() < 60);
+        assert_eq!(pr.p_bits(), 23);
+        // The default constructor is exactly the 45-bit instantiation.
+        assert_eq!(Params::new(4096, 23), Params::with_q_bits(4096, 23, 45));
     }
 }

@@ -1,0 +1,36 @@
+//! Parameter planner: static noise-budget analysis and automatic RLWE
+//! parameter selection.
+//!
+//! Choosing `(n, q, p)` for a CHEETAH deployment used to be folklore —
+//! run the default set and hope every slot stays in range. This subsystem
+//! makes the decision static and typed:
+//!
+//! * [`noise`] models, per protocol step, the worst-case ciphertext noise
+//!   (per-op composition rules, cross-checked against
+//!   [`crate::complexity`]) and the worst-case decrypted slot magnitude
+//!   (actual quantized weights, blinding, and additive-noise bounds),
+//!   producing a per-step [`NoiseBudgetReport`];
+//! * [`planner`] walks a cost-ordered ladder of vetted parameter
+//!   [`Rung`]s and returns the cheapest one whose worst step clears a
+//!   safety margin — or a typed [`PlanError::Infeasible`] naming the
+//!   binding step, raised *before* any key or ciphertext exists;
+//! * [`ParamsChoice`] is the knob engines, servers, and CLIs thread
+//!   through: `default` (bit-compatible with every pinned-seed artifact),
+//!   `big`, an explicit set, or `auto` (run the planner).
+//!
+//! The model is validated empirically: the planner tests replay every zoo
+//! network at its chosen rung and assert the measured noise of every
+//! ciphertext ([`crate::phe::Encryptor::noise_bits`]) stays within the
+//! per-step prediction.
+#![warn(missing_docs)]
+
+pub mod noise;
+pub mod planner;
+
+pub use noise::{
+    analyze, key_switch_growth_bits, mult_plain_growth_bits, noise_allowance_bits,
+    step_noise_bits, NoiseBudgetReport, StepBudget, ADD_CHAIN_SLACK_BITS, FRESH_NOISE_BITS,
+};
+pub use planner::{
+    ladder, ParamsChoice, Plan, PlanError, Rung, DEFAULT_MARGIN_BITS, PLANNING_EPSILON,
+};

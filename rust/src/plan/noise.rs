@@ -1,0 +1,467 @@
+//! Static worst-case noise and slot-magnitude analysis for a compiled
+//! CHEETAH protocol run.
+//!
+//! Two independent budgets decide whether a parameter set `(n, q, p)` can
+//! run a network correctly:
+//!
+//! 1. **Ciphertext noise** — BFV decryption is exact while the accumulated
+//!    noise stays below `q/(2p)`. Each homomorphic op grows the noise by a
+//!    bounded factor; the per-op rules below compose over the op sequence
+//!    of [`ProtocolSpec::compile`]'s steps.
+//! 2. **Slot magnitude** — every decrypted slot is interpreted as a
+//!    *centered* value in `±(p−1)/2`. The obscured product `k·v·x + b`
+//!    must stay inside that range per slot (block sums happen client-side
+//!    in `i64` and are unconstrained by `p`).
+//!
+//! ## Per-op noise rules (worst case, in bits)
+//!
+//! | op                 | rule                                   | CHEETAH count/step |
+//! |--------------------|----------------------------------------|--------------------|
+//! | fresh encryption   | [`FRESH_NOISE_BITS`] (≈ `6σ` error)    | `num_in_cts`       |
+//! | `MultPlain`        | `+ log2(n) + log2(p)` (operand coeffs  | `c_o · num_in_cts` |
+//! |                    | lie in `[0, p)` after encoding)        |                    |
+//! | `AddPlain`/ct-add  | [`ADD_CHAIN_SLACK_BITS`] for the whole | `c_o · num_in_cts` |
+//! |                    | additive tail of a step                |                    |
+//! | `Perm`/key-switch  | [`key_switch_growth_bits`] — **unused**| 0 (by construction)|
+//!
+//! The zero-Perm count is CHEETAH's headline property; the op counts per
+//! step are cross-checked against the closed forms in
+//! [`crate::complexity`] by the tests in this module, and the noise rules
+//! are validated *empirically* against [`crate::phe::Encryptor::noise_bits`]
+//! measurements on every zoo network (the model must always be an upper
+//! bound on the measurement).
+//!
+//! ## Activation-bound tracking
+//!
+//! The slot-magnitude budget needs a bound on the true activation entering
+//! each step. The analysis threads a value-domain bound `B` through the
+//! steps:
+//!
+//! * the input is clamped by quantization to `±x_max`;
+//! * a linear step bounds its output by `max_o Σ_t |k_q[o][t]|/2^k · B`
+//!   computed from the **actual quantized weights** (the worst-case
+//!   `k_max`-clamp bound would falsely reject networks whose weights are
+//!   tiny, e.g. wide FC layers under He initialization);
+//! * every hidden recovery re-encodes through the scrambled value `y`,
+//!   which the client clamps at `±y_max`; with the blind `v₁ = ±2^j`,
+//!   `j ∈ {-1,0,1}`, the recovered activation is bounded by
+//!   `|y·v₂| ≤ 2·y_max` — so the post-step bound is
+//!   `min(linear bound, 2·y_max) + ε`;
+//! * a residual step adds its saved input shares: `B ← B_out + B_in`;
+//! * a pool (fused or standalone local step) *sum*-pools shares:
+//!   `B ← B · size²` (the divisor is folded into the next layer's
+//!   pre-divided weights, which the quantized-row scan above sees).
+
+use crate::fixed::ScalePlan;
+use crate::nn::{Layer, Network};
+use crate::phe::Params;
+use crate::protocol::cheetah::server::NOISE_BOUND;
+use crate::protocol::cheetah::{LinearSpec, ProtocolSpec, SpecError, StepSpec};
+
+/// Worst-case fresh symmetric-encryption noise in bits. The error sampler
+/// draws `e` with σ ≈ 3.2; `|e| ≤ 2^8` is a ≥ 80σ bound — unreachable in
+/// practice, and the empirical validation tests assert measurements stay
+/// below it.
+pub const FRESH_NOISE_BITS: f64 = 8.0;
+
+/// Slack covering the whole additive tail of one step: the `AddPlain` of
+/// the server's share operand, plus the ciphertext-ciphertext add and
+/// `AddPlain` of the client's recovery combination (each add at most
+/// doubles the noise; three bits cover the worst chain either party runs
+/// within one step).
+pub const ADD_CHAIN_SLACK_BITS: f64 = 3.0;
+
+/// Noise growth of one `MultPlain` in bits: the operand polynomial's
+/// coefficients lie in `[0, p)` after batching encoding (negacyclic
+/// convolution by `n` coefficients), so `‖e·op‖∞ ≤ n · ‖e‖∞ · p`.
+///
+/// Slot-value bounds on the operand do **not** help here: the inverse NTT
+/// of the encoder spreads bounded slot values across full-range
+/// coefficients, so `p` is the only sound coefficient bound.
+pub fn mult_plain_growth_bits(params: &Params) -> f64 {
+    params.log_n as f64 + params.p_bits() as f64
+}
+
+/// Noise growth of one key-switch (`Perm`) in bits — the rule GAZELLE-style
+/// rotations would pay per hop. CHEETAH's op sequence contains **zero**
+/// permutations (asserted against [`crate::complexity`] by the tests
+/// here), so this rule never enters a budget; it is kept so the table is
+/// complete and a future rotation-based step cannot silently omit it.
+pub fn key_switch_growth_bits(params: &Params) -> f64 {
+    params.log_n as f64 + params.q_bits() as f64 / 2.0
+}
+
+/// Worst-case noise (bits) of any ciphertext produced during one non-local
+/// step: one fresh encryption, one `MultPlain`, and the step's additive
+/// tail. Both the server's product ciphertexts and the client's recovery
+/// ciphertexts are bounded by this (the recovery chain runs two
+/// `MultPlain`s on *fresh* indicator ciphertexts, never on the product —
+/// no step ever multiplies twice into the same ciphertext).
+pub fn step_noise_bits(params: &Params) -> f64 {
+    FRESH_NOISE_BITS + mult_plain_growth_bits(params) + ADD_CHAIN_SLACK_BITS
+}
+
+/// Noise allowance in bits: `⌊log2(q / 2p)⌋`, the same formula
+/// [`crate::phe::Encryptor::noise_budget`] measures against. Decryption is
+/// exact while accumulated noise stays below this.
+pub fn noise_allowance_bits(params: &Params) -> f64 {
+    (127 - (params.q() / (2 * params.p as u128)).leading_zeros()) as f64
+}
+
+/// One protocol step's static budget: op counts, the activation bound
+/// threaded through it, and its two consumption-vs-allowance pairs.
+#[derive(Clone, Debug)]
+pub struct StepBudget {
+    /// Step label (`step0:conv`, `step2:avgpool`, …).
+    pub name: String,
+    /// `MultPlain` count (cross-checked against [`crate::complexity`]).
+    pub mults: u64,
+    /// `AddPlain` count.
+    pub adds: u64,
+    /// `Perm` count — structurally zero for CHEETAH.
+    pub perms: u64,
+    /// Value-domain activation bound entering the step.
+    pub input_bound: f64,
+    /// Value-domain activation bound leaving the step (after ReLU clamp,
+    /// residual add, and pooling).
+    pub output_bound: f64,
+    /// Predicted worst-case ciphertext noise after this step's ops (bits);
+    /// zero for local steps, which touch no ciphertexts.
+    pub noise_bits: f64,
+    /// Noise allowance `log2(q/2p)` (bits).
+    pub noise_allowance_bits: f64,
+    /// `log2` of the worst decrypted slot magnitude this step can produce.
+    pub magnitude_bits: f64,
+    /// Slot allowance `log2((p−1)/2)` (bits).
+    pub magnitude_allowance_bits: f64,
+}
+
+impl StepBudget {
+    /// Unused noise allowance in bits (may be negative).
+    pub fn noise_headroom_bits(&self) -> f64 {
+        self.noise_allowance_bits - self.noise_bits
+    }
+
+    /// Unused slot-magnitude allowance in bits (may be negative).
+    pub fn magnitude_headroom_bits(&self) -> f64 {
+        self.magnitude_allowance_bits - self.magnitude_bits
+    }
+
+    /// The binding headroom: the smaller of the noise and magnitude
+    /// headrooms.
+    pub fn headroom_bits(&self) -> f64 {
+        self.noise_headroom_bits().min(self.magnitude_headroom_bits())
+    }
+}
+
+/// The full static budget of one network under one parameter set.
+#[derive(Clone, Debug)]
+pub struct NoiseBudgetReport {
+    /// Network display name.
+    pub network: String,
+    /// The parameter set the budget was computed for.
+    pub params: Params,
+    /// Per-step budgets, in protocol order.
+    pub steps: Vec<StepBudget>,
+    /// Index of the step with the smallest headroom.
+    pub worst: usize,
+}
+
+impl NoiseBudgetReport {
+    /// The binding headroom across all steps (the worst step's).
+    pub fn min_headroom_bits(&self) -> f64 {
+        self.steps[self.worst].headroom_bits()
+    }
+
+    /// The step with the smallest headroom.
+    pub fn worst_step(&self) -> &StepBudget {
+        &self.steps[self.worst]
+    }
+
+    /// Render the per-step budget as an aligned text table, with the worst
+    /// step marked.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{} @ n={} q={}b p={}b — noise allowance {:.0}b, slot allowance {:.1}b\n",
+            self.network,
+            self.params.n,
+            self.params.q_bits(),
+            self.params.p_bits(),
+            self.steps.first().map(|s| s.noise_allowance_bits).unwrap_or(0.0),
+            self.steps.first().map(|s| s.magnitude_allowance_bits).unwrap_or(0.0),
+        ));
+        out.push_str(&format!(
+            "{:<16} {:>7} {:>7} {:>5} {:>9} {:>9} {:>8} {:>8} {:>9}\n",
+            "step", "mults", "adds", "perms", "in|x|", "out|x|", "noise b", "slot b", "headroom"
+        ));
+        for (i, s) in self.steps.iter().enumerate() {
+            out.push_str(&format!(
+                "{:<16} {:>7} {:>7} {:>5} {:>9.2} {:>9.2} {:>8.1} {:>8.1} {:>8.2}b{}\n",
+                s.name,
+                s.mults,
+                s.adds,
+                s.perms,
+                s.input_bound,
+                s.output_bound,
+                s.noise_bits,
+                s.magnitude_bits,
+                s.headroom_bits(),
+                if i == self.worst { "  ◀ worst" } else { "" },
+            ));
+        }
+        out
+    }
+}
+
+/// Scan a step's actual quantized weights (same indexing and pool
+/// pre-division as the server's operand build): returns
+/// `(max tap |k_q|, max per-output-block Σ|k_q|)`.
+fn quantized_row_stats(layer: &Layer, step: &StepSpec, plan: &ScalePlan) -> (i64, i64) {
+    let div = step.weight_div;
+    let (mut max_tap, mut max_row) = (0i64, 0i64);
+    match &step.linear {
+        LinearSpec::Conv(p) => {
+            let (c_i, _, _) = p.in_shape;
+            let r = p.kernel;
+            for o in 0..p.out_shape.0 {
+                let mut row = 0i64;
+                for t in 0..p.block {
+                    let i = t / (r * r);
+                    let rem = t % (r * r);
+                    let kq = plan.quant_k(layer.conv_w(c_i, r, o, i, rem / r, rem % r) / div).abs();
+                    max_tap = max_tap.max(kq);
+                    row += kq;
+                }
+                max_row = max_row.max(row);
+            }
+        }
+        LinearSpec::Fc(p) => {
+            for o in 0..p.n_o {
+                let mut row = 0i64;
+                for j in 0..p.n_i {
+                    let kq = plan.quant_k(layer.fc_w(p.n_i, o, j) / div).abs();
+                    max_tap = max_tap.max(kq);
+                    row += kq;
+                }
+                max_row = max_row.max(row);
+            }
+        }
+        LinearSpec::AvgPool { .. } => {}
+    }
+    (max_tap, max_row)
+}
+
+/// Compute the static noise/magnitude budget of `net` under `params`.
+///
+/// `epsilon` is the obscuring-noise bound the deployment will run with; it
+/// enters the slot bound (the noise share `b` carries the target `v₁·δ`)
+/// and the activation bound (each recovery perturbs the value by at most
+/// `ε`). Passing the *largest* ε the deployment may use keeps the budget
+/// an upper bound. A network the protocol cannot express surfaces as the
+/// compiler's typed [`SpecError`].
+pub fn analyze(
+    net: &Network,
+    params: &Params,
+    plan: &ScalePlan,
+    epsilon: f64,
+) -> Result<NoiseBudgetReport, SpecError> {
+    let spec = ProtocolSpec::compile(net)?;
+    let n = params.n;
+    let half = ((params.p - 1) / 2) as f64;
+    let mag_allow = half.log2();
+    let noise_allow = noise_allowance_bits(params);
+    // Worst multiplicative blind magnitude: v₁ = ±2 at the v scale.
+    let v_int_max = 2.0 * plan.v.factor();
+    // Per-slot additive noise share: |b| ≤ NOISE_BOUND + |v₁·δ|, plus one
+    // integer of quantization rounding.
+    let noise_slack = NOISE_BOUND as f64 * (1.0 + 2.0 * epsilon) + 1.0;
+
+    let mut bound = plan.x_max;
+    let mut steps = Vec::with_capacity(spec.steps.len());
+    for (si, step) in spec.steps.iter().enumerate() {
+        let name = format!(
+            "step{si}:{}",
+            match &step.linear {
+                LinearSpec::Conv(_) => "conv",
+                LinearSpec::Fc(_) => "fc",
+                LinearSpec::AvgPool { .. } => "avgpool",
+            }
+        );
+        let budget = if let LinearSpec::AvgPool { size, .. } = &step.linear {
+            // Local step: no ciphertexts at all; both parties sum-pool
+            // their own shares, so the only constraint is that the pooled
+            // *true* value still fits a slot when the next step runs.
+            let out_bound = bound * (size * size) as f64;
+            let b = StepBudget {
+                name,
+                mults: 0,
+                adds: 0,
+                perms: 0,
+                input_bound: bound,
+                output_bound: out_bound,
+                noise_bits: 0.0,
+                noise_allowance_bits: noise_allow,
+                magnitude_bits: (out_bound * plan.x.factor()).max(1.0).log2(),
+                magnitude_allowance_bits: mag_allow,
+            };
+            bound = out_bound;
+            b
+        } else {
+            let layer = &net.layers[step.layer_idx];
+            let (max_tap, max_row) = quantized_row_stats(layer, step, plan);
+            // Worst decrypted slot: k_q · v₁ · x + b at the product scale.
+            let x_int = bound * plan.x.factor();
+            let slot = max_tap as f64 * v_int_max * x_int + noise_slack;
+            let in_cts = step.linear.num_in_cts(n) as u64;
+            let ops = step.linear.num_channels() as u64 * in_cts;
+            let mut out_bound = (max_row as f64 / plan.k.factor()) * bound;
+            if si != spec.last_idx() {
+                // Hidden steps re-encode through y, clamped at ±y_max; the
+                // recovered activation is bounded by |y·v₂| ≤ 2·y_max (+ε
+                // obscuring drift) whatever the linear output was.
+                out_bound = out_bound.min(2.0 * plan.y_max) + epsilon;
+            }
+            if step.residual_add {
+                out_bound += bound;
+            }
+            if let Some(s) = step.pool_after {
+                out_bound *= (s * s) as f64;
+            }
+            let b = StepBudget {
+                name,
+                mults: ops,
+                adds: ops,
+                perms: 0,
+                input_bound: bound,
+                output_bound: out_bound,
+                noise_bits: step_noise_bits(params),
+                noise_allowance_bits: noise_allow,
+                magnitude_bits: slot.log2(),
+                magnitude_allowance_bits: mag_allow,
+            };
+            bound = out_bound;
+            b
+        };
+        steps.push(budget);
+    }
+    let worst = steps
+        .iter()
+        .enumerate()
+        .min_by(|(_, a), (_, b)| a.headroom_bits().total_cmp(&b.headroom_bits()))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(NoiseBudgetReport { network: net.name.clone(), params: *params, steps, worst })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::complexity::{ConvShape, FcShape};
+    use crate::nn::{Network, NetworkArch};
+
+    fn default_report(arch: NetworkArch) -> NoiseBudgetReport {
+        let net = Network::build(arch, 3);
+        analyze(&net, &Params::default_params(), &ScalePlan::default_plan(), 0.01)
+            .expect("zoo nets compile")
+    }
+
+    /// The analyzer's per-step op counts must agree with the closed-form
+    /// complexity model (Table 2's CH-MIMO / CH-FC rows) — same counting,
+    /// two independent derivations.
+    #[test]
+    fn op_counts_match_complexity_model() {
+        for arch in [NetworkArch::NetA, NetworkArch::NetB, NetworkArch::NetRes] {
+            let net = Network::build(arch, 3);
+            let params = Params::default_params();
+            let spec = ProtocolSpec::compile(&net).unwrap();
+            let report = analyze(&net, &params, &ScalePlan::default_plan(), 0.01).unwrap();
+            assert_eq!(report.steps.len(), spec.steps.len());
+            for (b, s) in report.steps.iter().zip(&spec.steps) {
+                let want = match &s.linear {
+                    LinearSpec::Conv(p) => ConvShape {
+                        c_i: p.in_shape.0 as u64,
+                        c_o: p.out_shape.0 as u64,
+                        r: p.kernel as u64,
+                        // `hw` is the output-position count (the packing's
+                        // n_pos) so the stream length matches at any stride.
+                        hw: p.n_pos as u64,
+                        n: params.n as u64,
+                    }
+                    .cheetah(),
+                    LinearSpec::Fc(p) => FcShape {
+                        n_i: p.n_i as u64,
+                        n_o: p.n_o as u64,
+                        n: params.n as u64,
+                    }
+                    .cheetah(),
+                    LinearSpec::AvgPool { .. } => crate::complexity::Counts::default(),
+                };
+                assert_eq!(b.mults, want.mult, "{}: {}", net.name, b.name);
+                assert_eq!(b.adds, want.add, "{}: {}", net.name, b.name);
+                assert_eq!(b.perms, want.perm, "{}: {}", net.name, b.name);
+                assert_eq!(b.perms, 0, "CHEETAH steps must never permute");
+            }
+        }
+    }
+
+    /// Activation-bound threading: pools multiply the bound, hidden
+    /// recoveries clamp it at `2·y_max + ε`, residual steps accumulate it.
+    #[test]
+    fn bound_tracking_follows_protocol_shape() {
+        let plan = ScalePlan::default_plan();
+        // NetPool opens with a standalone 2×2 pool: bound quadruples.
+        let pool = default_report(NetworkArch::NetPool);
+        assert_eq!(pool.steps[0].name, "step0:avgpool");
+        assert_eq!(pool.steps[0].input_bound, plan.x_max);
+        assert_eq!(pool.steps[0].output_bound, plan.x_max * 4.0);
+        assert_eq!(pool.steps[0].noise_bits, 0.0);
+        assert_eq!(pool.steps[0].mults, 0);
+
+        // NetRes residual chain: the bound entering each block grows by at
+        // most the recovery clamp per block, and grows monotonically.
+        let res = default_report(NetworkArch::NetRes);
+        let clamp = 2.0 * plan.y_max + 0.01;
+        for w in res.steps.windows(2) {
+            assert!(w[1].input_bound >= w[0].input_bound, "residual bound must accumulate");
+            assert!(w[1].input_bound <= w[0].input_bound + clamp + 1e-9);
+        }
+        // No hidden non-residual step can exceed the recovery clamp.
+        let a = default_report(NetworkArch::NetA);
+        for s in &a.steps[..a.steps.len() - 1] {
+            assert!(s.output_bound <= clamp + 1e-9, "{}: {}", a.network, s.output_bound);
+        }
+    }
+
+    /// Shrinking q reduces only the noise allowance; shrinking p reduces
+    /// the slot allowance (and the noise cost with it).
+    #[test]
+    fn allowances_track_params() {
+        let d = Params::default_params();
+        let small_q = Params::with_q_bits(4096, 23, 30);
+        assert!(noise_allowance_bits(&small_q) < noise_allowance_bits(&d));
+        assert_eq!(small_q.p, d.p);
+        let small_p = Params::new(4096, 18);
+        assert!(small_p.p < d.p);
+        assert!(step_noise_bits(&small_p) < step_noise_bits(&d));
+        // The key-switch rule exists (for the table) but no CHEETAH step
+        // ever pays it.
+        assert!(key_switch_growth_bits(&d) > 0.0);
+    }
+
+    /// The rendered table carries every step and marks the worst one.
+    #[test]
+    fn render_is_complete() {
+        let r = default_report(NetworkArch::NetB);
+        let text = r.render();
+        for s in &r.steps {
+            assert!(text.contains(&s.name), "missing {} in:\n{text}", s.name);
+        }
+        assert!(text.contains("◀ worst"));
+        assert!(r.min_headroom_bits().is_finite());
+        assert_eq!(
+            r.worst_step().headroom_bits(),
+            r.steps.iter().map(|s| s.headroom_bits()).fold(f64::INFINITY, f64::min)
+        );
+    }
+}

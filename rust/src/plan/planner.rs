@@ -1,0 +1,454 @@
+//! Automatic RLWE parameter selection: a ladder of vetted parameter rungs,
+//! climbed until the static budget of [`super::noise::analyze`] clears a
+//! configurable safety margin.
+//!
+//! ## The ladder
+//!
+//! | rung       | n    | p bits | q bits (2 primes) | security floor |
+//! |------------|------|--------|-------------------|----------------|
+//! | `default`  | 4096 | 23     | ~90               | 128            |
+//! | `wide-p`   | 4096 | 26     | ~90               | 128            |
+//! | `big`      | 8192 | 23     | ~90               | 192            |
+//! | `big-wide` | 8192 | 26     | ~90               | 192            |
+//!
+//! Rungs are ordered by cost (ring degree dominates; a wider plaintext
+//! modulus is free at fixed `n`), so the first clearing rung is the
+//! cheapest. Security floors are conservative reads of the homomorphic
+//! encryption standard tables: ternary-secret `(n=4096, log q ≤ 109)` and
+//! `(n=8192, log q ≤ 218)` both meet 128-bit security, and our ~90-bit `q`
+//! sits far inside those ceilings.
+//!
+//! ## Margin policy
+//!
+//! A rung is accepted when the *worst step's* headroom — the smaller of
+//! its noise and slot-magnitude headrooms — is at least
+//! [`DEFAULT_MARGIN_BITS`]. The static model is already worst-case, so the
+//! margin only absorbs model drift (weight retraining, a changed ε), not
+//! randomness. When no rung clears, planning fails with
+//! [`PlanError::Infeasible`] **before** any ciphertext is built — a
+//! mis-parameterized deployment is refused instead of silently decrypting
+//! garbage.
+
+use super::noise::{analyze, NoiseBudgetReport};
+use crate::fixed::ScalePlan;
+use crate::nn::Network;
+use crate::phe::Params;
+use crate::protocol::cheetah::SpecError;
+
+/// Default safety margin in bits on the worst step's headroom.
+pub const DEFAULT_MARGIN_BITS: f64 = 2.0;
+
+/// Obscuring-noise bound assumed during planning. Deployments run with
+/// ε ≤ 0.05 in every shipped configuration; planning with the ceiling
+/// keeps the chosen rung valid for all of them.
+pub const PLANNING_EPSILON: f64 = 0.05;
+
+/// One vetted parameter rung of the ladder.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rung {
+    /// Short rung name (`default`, `wide-p`, `big`, `big-wide`).
+    pub name: &'static str,
+    /// Ring degree.
+    pub n: usize,
+    /// Plaintext modulus width passed to [`Params::with_q_bits`].
+    pub plain_bits: u32,
+    /// Per-prime ciphertext modulus width (two RNS primes).
+    pub q_bits: u32,
+    /// Conservative security floor in bits (HE-standard tables, ternary
+    /// secret) — see the module docs.
+    pub security_bits: u32,
+}
+
+impl Rung {
+    /// Instantiate the rung's concrete parameter set.
+    pub fn params(&self) -> Params {
+        Params::with_q_bits(self.n, self.plain_bits, self.q_bits)
+    }
+}
+
+/// The candidate ladder, cheapest rung first (see module docs).
+pub fn ladder() -> [Rung; 4] {
+    [
+        Rung { name: "default", n: 4096, plain_bits: 23, q_bits: 45, security_bits: 128 },
+        Rung { name: "wide-p", n: 4096, plain_bits: 26, q_bits: 45, security_bits: 128 },
+        Rung { name: "big", n: 8192, plain_bits: 23, q_bits: 45, security_bits: 192 },
+        Rung { name: "big-wide", n: 8192, plain_bits: 26, q_bits: 45, security_bits: 192 },
+    ]
+}
+
+/// Why planning failed.
+#[derive(Clone, Debug, PartialEq)]
+pub enum PlanError {
+    /// The network cannot be compiled into a protocol spec at all.
+    Spec(SpecError),
+    /// No candidate cleared the margin; `step` is the binding step of the
+    /// last (largest) rung tried and `deficit_bits` how far below the
+    /// margin its headroom fell.
+    Infeasible {
+        /// Label of the binding step (`step3:conv`, …).
+        step: String,
+        /// Bits of headroom missing (relative to the requested margin).
+        deficit_bits: f64,
+    },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Spec(e) => write!(f, "planning failed: {e}"),
+            PlanError::Infeasible { step, deficit_bits } => write!(
+                f,
+                "no parameter rung clears the budget: {step} is short {deficit_bits:.2} bits \
+                 of headroom on the largest rung"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+impl From<SpecError> for PlanError {
+    fn from(e: SpecError) -> Self {
+        PlanError::Spec(e)
+    }
+}
+
+/// How an engine or server picks its RLWE parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ParamsChoice {
+    /// The bit-compatible default set ([`Params::default_params`]).
+    Default,
+    /// A caller-supplied explicit set (used as-is, no feasibility gate).
+    Explicit(Params),
+    /// Run the planner and take the cheapest clearing rung.
+    Auto,
+}
+
+impl Default for ParamsChoice {
+    fn default() -> Self {
+        ParamsChoice::Default
+    }
+}
+
+impl ParamsChoice {
+    /// Parse a CLI value: `auto`, `default`, or `big`
+    /// ([`Params::big_ring`]).
+    pub fn parse(s: &str) -> Option<ParamsChoice> {
+        match s {
+            "auto" => Some(ParamsChoice::Auto),
+            "default" => Some(ParamsChoice::Default),
+            "big" => Some(ParamsChoice::Explicit(Params::big_ring())),
+            _ => None,
+        }
+    }
+
+    /// Resolve to a concrete parameter set for `net`. `Auto` runs the
+    /// planner and also returns the winning [`Plan`] (rung + report) for
+    /// display; the other choices pass through untouched.
+    pub fn resolve(&self, net: &Network) -> Result<(Params, Option<Plan>), PlanError> {
+        match self {
+            ParamsChoice::Default => Ok((Params::default_params(), None)),
+            ParamsChoice::Explicit(p) => Ok((*p, None)),
+            ParamsChoice::Auto => {
+                let plan = Plan::for_network(net)?;
+                Ok((plan.params, Some(plan)))
+            }
+        }
+    }
+}
+
+/// A successful parameter selection: the winning rung, its concrete
+/// parameters, and the budget report that cleared the margin.
+#[derive(Clone, Debug)]
+pub struct Plan {
+    /// The accepted ladder rung.
+    pub rung: Rung,
+    /// Concrete parameters of that rung.
+    pub params: Params,
+    /// The static budget under those parameters.
+    pub report: NoiseBudgetReport,
+    /// The margin the report was required to clear.
+    pub margin_bits: f64,
+}
+
+impl Plan {
+    /// Select the cheapest ladder rung for `net` under the default scale
+    /// plan, planning ε, and margin.
+    pub fn for_network(net: &Network) -> Result<Plan, PlanError> {
+        Self::for_network_with(net, &ScalePlan::default_plan(), PLANNING_EPSILON, DEFAULT_MARGIN_BITS)
+    }
+
+    /// Like [`Plan::for_network`] with explicit scale plan, obscuring ε,
+    /// and margin.
+    pub fn for_network_with(
+        net: &Network,
+        plan: &ScalePlan,
+        epsilon: f64,
+        margin_bits: f64,
+    ) -> Result<Plan, PlanError> {
+        let mut last_err = None;
+        for rung in ladder() {
+            let params = rung.params();
+            match Self::check_with(net, &params, plan, epsilon, margin_bits) {
+                Ok(report) => return Ok(Plan { rung, params, report, margin_bits }),
+                Err(e @ PlanError::Infeasible { .. }) => last_err = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err.expect("ladder is non-empty"))
+    }
+
+    /// Gate an *explicit* parameter set: Ok with the budget report when
+    /// every step clears the default margin, a typed
+    /// [`PlanError::Infeasible`] otherwise — callers refuse to build any
+    /// ciphertext machinery on Err, so an undersized set fails loudly
+    /// before it can decrypt garbage.
+    pub fn check(net: &Network, params: &Params) -> Result<NoiseBudgetReport, PlanError> {
+        Self::check_with(net, params, &ScalePlan::default_plan(), PLANNING_EPSILON, DEFAULT_MARGIN_BITS)
+    }
+
+    /// [`Plan::check`] with explicit scale plan, ε, and margin.
+    pub fn check_with(
+        net: &Network,
+        params: &Params,
+        plan: &ScalePlan,
+        epsilon: f64,
+        margin_bits: f64,
+    ) -> Result<NoiseBudgetReport, PlanError> {
+        let report = analyze(net, params, plan, epsilon)?;
+        let headroom = report.min_headroom_bits();
+        if headroom < margin_bits {
+            return Err(PlanError::Infeasible {
+                step: report.worst_step().name.clone(),
+                deficit_bits: margin_bits - headroom,
+            });
+        }
+        Ok(report)
+    }
+
+    /// Render the chosen rung plus the per-step headroom table.
+    pub fn render(&self) -> String {
+        format!(
+            "rung '{}' (n={}, p={} bits, q={} bits, ≥{}-bit security), margin {:.1} bits, \
+             worst headroom {:.2} bits\n{}",
+            self.rung.name,
+            self.params.n,
+            self.params.p_bits(),
+            self.params.q_bits(),
+            self.rung.security_bits,
+            self.margin_bits,
+            self.report.min_headroom_bits(),
+            self.report.render()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NetworkArch;
+
+    /// Build the zoo at test scale: big ImageNet-era nets at the 0.125
+    /// factor the benchmarks use, everything else full size.
+    fn zoo_net(arch: NetworkArch, seed: u64) -> Network {
+        match arch {
+            NetworkArch::AlexNet | NetworkArch::Vgg16 => Network::build_scaled(arch, seed, 0.125),
+            _ => Network::build(arch, seed),
+        }
+    }
+
+    #[test]
+    fn ladder_is_cost_ordered_and_secure() {
+        let rungs = ladder();
+        assert_eq!(rungs[0].params(), Params::default_params(), "rung 0 is bit-compatible");
+        for w in rungs.windows(2) {
+            let cheaper = (w[0].n, w[0].plain_bits);
+            let dearer = (w[1].n, w[1].plain_bits);
+            assert!(cheaper < dearer, "ladder must be cost-ordered: {cheaper:?} vs {dearer:?}");
+        }
+        for r in rungs {
+            assert!(r.security_bits >= 128, "{}: below the security floor", r.name);
+            let p = r.params();
+            assert_eq!(p.n, r.n);
+            assert_eq!(p.p_bits(), r.plain_bits);
+            // ~90-bit q from two 45-bit primes on every rung.
+            assert!(p.q_bits() >= 88, "{}: q only {} bits", r.name, p.q_bits());
+        }
+    }
+
+    /// Every pre-existing zoo network runs on the default rung; the
+    /// residual NetRes — whose skip chain accumulates activation magnitude
+    /// past the default slot budget — is the entry that forces a bigger
+    /// rung (the wide-p plaintext modulus).
+    #[test]
+    fn auto_keeps_zoo_on_default_but_netres_climbs() {
+        let default_p = Params::default_params();
+        for arch in NetworkArch::all() {
+            let net = zoo_net(arch, 5);
+            let plan = Plan::for_network(&net).expect("every zoo net must be plannable");
+            if arch == NetworkArch::NetRes {
+                assert_ne!(plan.rung.name, "default", "NetRes must outgrow the default rung");
+                assert!(
+                    plan.params.p_bits() > default_p.p_bits(),
+                    "NetRes needs a wider plaintext modulus, got {} bits",
+                    plan.params.p_bits()
+                );
+            } else {
+                assert_eq!(
+                    plan.rung.name, "default",
+                    "{}: expected the default rung, got '{}'",
+                    net.name, plan.rung.name
+                );
+                assert_eq!(plan.params, default_p);
+            }
+            assert!(plan.report.min_headroom_bits() >= plan.margin_bits);
+            let text = plan.render();
+            assert!(text.contains(plan.rung.name));
+        }
+    }
+
+    /// Pinning NetRes to the default parameters is a typed refusal with the
+    /// binding step named — checked statically, before any key or
+    /// ciphertext exists.
+    #[test]
+    fn netres_on_default_params_is_infeasible() {
+        let net = Network::build(NetworkArch::NetRes, 5);
+        match Plan::check(&net, &Params::default_params()) {
+            Err(PlanError::Infeasible { step, deficit_bits }) => {
+                assert!(deficit_bits > 0.0);
+                assert!(step.starts_with("step"), "binding step label: {step}");
+            }
+            other => panic!("expected Infeasible, got {other:?}"),
+        }
+    }
+
+    /// An undersized ciphertext modulus fails the *noise* budget: the
+    /// planner refuses the set statically instead of letting decryption
+    /// produce garbage.
+    #[test]
+    fn undersized_q_is_noise_infeasible() {
+        let small_q = Params::with_q_bits(4096, 23, 30);
+        let net = Network::build(NetworkArch::NetA, 5);
+        assert!(matches!(
+            Plan::check(&net, &small_q),
+            Err(PlanError::Infeasible { .. })
+        ));
+        // The binding constraint is noise, not magnitude.
+        let report =
+            super::analyze(&net, &small_q, &ScalePlan::default_plan(), PLANNING_EPSILON).unwrap();
+        let worst = report.worst_step();
+        assert!(worst.noise_headroom_bits() < worst.magnitude_headroom_bits());
+        assert!(worst.noise_headroom_bits() < DEFAULT_MARGIN_BITS);
+    }
+
+    /// An undersized plaintext modulus fails the *slot-magnitude* budget.
+    #[test]
+    fn small_p_is_magnitude_infeasible() {
+        let small_p = Params::new(4096, 16);
+        let net = Network::build(NetworkArch::NetA, 5);
+        assert!(matches!(
+            Plan::check(&net, &small_p),
+            Err(PlanError::Infeasible { .. })
+        ));
+        let report =
+            super::analyze(&net, &small_p, &ScalePlan::default_plan(), PLANNING_EPSILON).unwrap();
+        let worst = report.worst_step();
+        assert!(worst.magnitude_headroom_bits() < worst.noise_headroom_bits());
+        assert!(worst.magnitude_headroom_bits() < DEFAULT_MARGIN_BITS);
+    }
+
+    #[test]
+    fn params_choice_parses_and_resolves() {
+        assert_eq!(ParamsChoice::parse("auto"), Some(ParamsChoice::Auto));
+        assert_eq!(ParamsChoice::parse("default"), Some(ParamsChoice::Default));
+        assert_eq!(
+            ParamsChoice::parse("big"),
+            Some(ParamsChoice::Explicit(Params::big_ring()))
+        );
+        assert_eq!(ParamsChoice::parse("huge"), None);
+        assert_eq!(ParamsChoice::default(), ParamsChoice::Default);
+
+        let net = Network::build(NetworkArch::NetA, 5);
+        let (p, plan) = ParamsChoice::Default.resolve(&net).unwrap();
+        assert_eq!(p, Params::default_params());
+        assert!(plan.is_none());
+        let (p, _) = ParamsChoice::Explicit(Params::big_ring()).resolve(&net).unwrap();
+        assert_eq!(p.n, 8192);
+        let (p, plan) = ParamsChoice::Auto.resolve(&net).unwrap();
+        assert_eq!(p, Params::default_params());
+        assert_eq!(plan.unwrap().rung.name, "default");
+    }
+
+    /// Empirical validation of the static model: run every zoo network at
+    /// its planner-chosen rung and assert the *measured* ciphertext noise
+    /// ([`crate::phe::Encryptor::noise_bits`]) of every ciphertext the
+    /// protocol produces stays at or below the per-step prediction. The
+    /// model is worst-case, so a violation means the model (and therefore
+    /// the planner) is unsound.
+    #[test]
+    fn measured_noise_stays_within_the_static_model() {
+        use crate::nn::Tensor;
+        use crate::phe::Context;
+        use crate::protocol::cheetah::CheetahRunner;
+        use std::sync::Arc;
+
+        for arch in NetworkArch::all() {
+            let net = zoo_net(arch, 11);
+            let chosen = Plan::for_network(&net).expect("plannable");
+            let ctx = Arc::new(Context::new(chosen.params));
+            let mut runner =
+                CheetahRunner::new(ctx, net.clone(), ScalePlan::default_plan(), 0.01, 7)
+                    .expect("valid network");
+            runner.run_offline();
+
+            let (c, h, w) = net.input_shape;
+            let len = c * h * w;
+            let input = Tensor::from_vec(
+                (0..len).map(|i| ((i * 2654435761) % 1024) as f64 / 256.0 - 2.0).collect(),
+                c,
+                h,
+                w,
+            );
+            runner.client.begin_query(&input);
+            runner.server.begin_query();
+            for si in 0..runner.spec().steps.len() {
+                let predicted = chosen.report.steps[si].noise_bits;
+                let in_cts = runner.client.step_send(si);
+                for (k, ct) in in_cts.iter().enumerate() {
+                    let got = runner.client.enc.noise_bits(ct) as f64;
+                    assert!(
+                        got <= super::super::noise::FRESH_NOISE_BITS,
+                        "{}: step {si} fresh ct {k}: measured {got}b > model {}b",
+                        net.name,
+                        super::super::noise::FRESH_NOISE_BITS
+                    );
+                }
+                let out_cts = runner.server.step_linear(si, &in_cts);
+                for (k, ct) in out_cts.iter().enumerate() {
+                    let got = runner.client.enc.noise_bits(ct) as f64;
+                    assert!(
+                        got <= predicted,
+                        "{}: step {si} product ct {k}: measured {got}b > predicted {predicted}b",
+                        net.name
+                    );
+                }
+                if let Some(rec) = runner.client.step_receive(si, &out_cts) {
+                    for (k, ct) in rec.iter().enumerate() {
+                        let got = runner.server.enc.noise_bits(ct) as f64;
+                        assert!(
+                            got <= predicted,
+                            "{}: step {si} recovery ct {k}: measured {got}b > predicted \
+                             {predicted}b",
+                            net.name
+                        );
+                    }
+                    runner.server.finish_nonlinear(si, &rec);
+                } else if runner.spec().steps[si].is_local() {
+                    runner.server.finish_local(si);
+                }
+            }
+            // The run completed below budget: logits are well-defined.
+            assert!(runner.client.logits().iter().all(|l| l.is_finite()));
+        }
+    }
+}

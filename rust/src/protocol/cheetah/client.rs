@@ -31,7 +31,7 @@
 
 use super::blinding::client_y_pair;
 use super::packing::block_sums;
-use super::spec::ProtocolSpec;
+use super::spec::{LinearSpec, ProtocolSpec};
 use crate::fixed::ScalePlan;
 use crate::nn::Tensor;
 use crate::par;
@@ -227,6 +227,17 @@ impl CheetahClient {
     ) -> Option<Vec<Ciphertext>> {
         let t0 = Instant::now();
         let step = &self.spec.steps[si];
+        if let LinearSpec::AvgPool { shape, size } = &step.linear {
+            // Local step: no ciphertexts moved — the client sum-pools its
+            // own share mod p (the server does the same; linearity makes
+            // the reconstruction the pooled activation, and the mean
+            // divisor is folded into the next linear step's weights).
+            assert!(out_cts.is_empty(), "local steps receive no ciphertexts");
+            q.share =
+                super::server::pool_shares(&q.share, *shape, *size, self.ctx.params.p);
+            q.online += t0.elapsed();
+            return None;
+        }
         let n = self.ctx.params.n;
         let len = step.linear.stream_len();
         let n_cts = step.linear.num_in_cts(n);
@@ -309,6 +320,17 @@ impl CheetahClient {
             rec
         });
 
+        // Residual steps: the client's saved share of the step *input*
+        // joins its fresh share (the server mirrors this with its own
+        // saved share), so the reconstruction gains `ReLU(linear(x)) + x`
+        // with zero extra ciphertexts. Residuals are shape-preserving and
+        // never combined with a fused pool (compile() guarantees both).
+        if step.residual_add {
+            assert_eq!(s1.len(), q.share.len(), "residual shapes must match");
+            for (dst, &old) in s1.iter_mut().zip(q.share.iter()) {
+                *dst = (*dst + old) % p;
+            }
+        }
         // The client's next-layer share is s₁ (sum-pooled if the network
         // pools here, mirroring the server).
         if let Some(size) = step.pool_after {

@@ -166,6 +166,7 @@ impl CheetahRunner {
                     match &self.spec().steps[si].linear {
                         super::spec::LinearSpec::Conv(_) => "conv",
                         super::spec::LinearSpec::Fc(_) => "fc",
+                        super::spec::LinearSpec::AvgPool { .. } => "avgpool",
                     }
                 ),
                 ..Default::default()
@@ -185,13 +186,17 @@ impl CheetahRunner {
                 step_rep.s2c_bytes += eval;
             }
 
-            // C: block sums (+ recovery for intermediate steps).
+            // C: block sums (+ recovery for intermediate steps). Local
+            // steps (standalone AvgPool) return no recovery material —
+            // each party transforms its own share instead.
             if let Some(rec) = self.client.step_receive(si, &out_cts) {
                 for _ in &rec {
                     self.channel.send(Dir::ClientToServer, eval);
                     step_rep.c2s_bytes += eval;
                 }
                 self.server.finish_nonlinear(si, &rec);
+            } else if self.spec().steps[si].is_local() {
+                self.server.finish_local(si);
             }
 
             let t = self.server.reset_timers();
@@ -268,7 +273,9 @@ impl CheetahRunner {
                         c2s += eval;
                         wire += link.transfer_time(eval);
                     }
-                    s_share = server.finish_nonlinear_with(si, &rec);
+                    s_share = server.advance_share(si, &rec, &s_share);
+                } else if server.spec.steps[si].is_local() {
+                    s_share = server.local_share(si, &s_share);
                 }
             }
             InferenceReport {

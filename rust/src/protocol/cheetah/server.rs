@@ -135,6 +135,29 @@ struct PreparedStep {
     noise_res: Option<Vec<Vec<u64>>>,
 }
 
+impl PreparedStep {
+    /// The empty prepared state of a local (zero-ciphertext) step — an
+    /// [`super::spec::LinearSpec::AvgPool`] step exchanges nothing and
+    /// needs no blinding, indicators, or operands. Skipping the blinding
+    /// draws entirely (rather than sampling and discarding) also keeps the
+    /// RNG sequence of the *other* steps identical to what a pool-free
+    /// network with the same seed would draw.
+    fn empty() -> Self {
+        Self {
+            kq: Vec::new(),
+            blinds: Vec::new(),
+            v_int: Vec::new(),
+            targets: Vec::new(),
+            noise_key: [0u8; 32],
+            id1: Vec::new(),
+            id2: Vec::new(),
+            kv_ops: None,
+            b_ops: None,
+            noise_res: None,
+        }
+    }
+}
+
 /// The server side of the CHEETAH protocol. Owns a shared `Arc<Context>`,
 /// so prepared engines move freely between serving threads (blinding pool,
 /// session workers) with no lifetime plumbing.
@@ -275,6 +298,13 @@ impl CheetahServer {
         let prod_scale = self.plan.product();
         let mut steps = Vec::with_capacity(self.spec.steps.len());
         for (si, step) in self.spec.steps.iter().enumerate() {
+            if step.is_local() {
+                // Local steps (standalone AvgPool) move no ciphertexts:
+                // both parties sum-pool their own shares, so there is
+                // nothing to prepare.
+                steps.push(PreparedStep::empty());
+                continue;
+            }
             let n_out = step.linear.num_outputs();
             let last = si == self.spec.last_idx();
             let kq = self.quantize_weights(step);
@@ -473,6 +503,9 @@ impl CheetahServer {
                     (0..p.n_i).map(|j| plan.quant_k(layer.fc_w(p.n_i, o, j) / div)).collect()
                 })
             }
+            // Local steps carry no weights (their mean divisor is folded
+            // into the *next* linear step at compile time).
+            LinearSpec::AvgPool { .. } => Vec::new(),
         }
     }
 
@@ -551,6 +584,13 @@ impl CheetahServer {
     ) -> Vec<Ciphertext> {
         let _span = crate::obs::span("cheetah.online.step_linear");
         let step = &self.spec.steps[si];
+        if step.is_local() {
+            // Local steps exchange no ciphertexts; the share transform is
+            // [`CheetahServer::local_share`]. Returning an empty product
+            // list keeps lockstep drivers uniform.
+            assert!(in_cts.is_empty(), "local steps take no input ciphertexts");
+            return Vec::new();
+        }
         let prep = &self.steps[si];
         let params = &self.ctx.params;
         let n = params.n;
@@ -675,10 +715,58 @@ impl CheetahServer {
         out
     }
 
-    /// Single-query wrapper over [`CheetahServer::finish_nonlinear_with`]:
-    /// stores the next share in the internal single-query state.
+    /// Single-query wrapper over [`CheetahServer::advance_share`]: stores
+    /// the next share in the internal single-query state (and applies the
+    /// residual skip-add when the step carries one).
     pub fn finish_nonlinear(&mut self, si: usize, rec_cts: &[Ciphertext]) {
-        self.share = self.finish_nonlinear_with(si, rec_cts);
+        let next = self.advance_share(si, rec_cts, &self.share);
+        self.share = next;
+    }
+
+    /// Single-query wrapper over [`CheetahServer::local_share`] for a local
+    /// (AvgPool) step: transforms the internal share in place.
+    pub fn finish_local(&mut self, si: usize) {
+        let next = self.local_share(si, &self.share);
+        self.share = next;
+    }
+
+    /// [`CheetahServer::finish_nonlinear_with`] plus the residual skip-add:
+    /// when step `si` carries `residual_add`, the server adds its own saved
+    /// share of the step's *input* activation (`prev`, mod p) to the
+    /// decrypted output share — the client does the same with its shares,
+    /// so the reconstruction gains exactly `ReLU(linear(x)) + x`
+    /// (share-level adds commute with reconstruction; no extra ciphertexts
+    /// or rounds). `prev` must be the share that fed this step's
+    /// [`CheetahServer::step_linear_with`].
+    pub fn advance_share(&self, si: usize, rec_cts: &[Ciphertext], prev: &[u64]) -> Vec<u64> {
+        let mut share = self.finish_nonlinear_with(si, rec_cts);
+        let step = &self.spec.steps[si];
+        if step.residual_add {
+            let p = self.ctx.params.p;
+            assert_eq!(share.len(), prev.len(), "residual shapes must match");
+            for (dst, &old) in share.iter_mut().zip(prev) {
+                *dst = (*dst + old) % p;
+            }
+        }
+        share
+    }
+
+    /// The share transform of a local (zero-ciphertext) step: both parties
+    /// sum-pool their own additive shares mod p — linearity of the sum-pool
+    /// makes the reconstruction the pooled activation, and the mean divisor
+    /// was folded into the next linear step's weights at compile time.
+    pub fn local_share(&self, si: usize, share: &[u64]) -> Vec<u64> {
+        let _span = crate::obs::span("cheetah.online.local_share");
+        let step = &self.spec.steps[si];
+        let t0 = Instant::now();
+        let out = match &step.linear {
+            LinearSpec::AvgPool { shape, size } => {
+                pool_shares(share, *shape, *size, self.ctx.params.p)
+            }
+            _ => panic!("local_share called on a non-local step"),
+        };
+        self.timers.add_online(t0.elapsed());
+        out
     }
 
     /// Finish the nonlinear step: decrypt the recovery ciphertexts into the
@@ -770,6 +858,7 @@ fn kv_int(
     let kq = match linear {
         LinearSpec::Conv(_) => prep.kq[ch][tap],
         LinearSpec::Fc(_) => prep.kq[blk][tap],
+        LinearSpec::AvgPool { .. } => unreachable!("local steps build no operands"),
     };
     kq * prep.v_int[ch * blocks + blk]
 }

@@ -14,6 +14,17 @@ pub enum LinearSpec {
     Conv(ConvPacking),
     /// A fully-connected step (input tiled per output neuron).
     Fc(FcPacking),
+    /// A zero-ciphertext local pooling step: each party sum-pools its own
+    /// additive share over `size × size` windows (sum-pooling commutes with
+    /// additive sharing mod `p`); the mean divisor is folded into the next
+    /// linear layer's weights exactly like a fused `pool_after`. No
+    /// ciphertexts flow in either direction for this step.
+    AvgPool {
+        /// Input shape `(c, h, w)` of the activation being pooled.
+        shape: (usize, usize, usize),
+        /// Pool window side length (stride equals the window).
+        size: usize,
+    },
 }
 
 impl LinearSpec {
@@ -22,6 +33,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.len,
             LinearSpec::Fc(p) => p.len,
+            LinearSpec::AvgPool { .. } => 0,
         }
     }
 
@@ -35,6 +47,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.out_shape.0,
             LinearSpec::Fc(_) => 1,
+            LinearSpec::AvgPool { shape, .. } => shape.0,
         }
     }
 
@@ -43,6 +56,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.n_pos,
             LinearSpec::Fc(p) => p.n_o,
+            LinearSpec::AvgPool { shape, size } => (shape.1 / size) * (shape.2 / size),
         }
     }
 
@@ -51,6 +65,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.block,
             LinearSpec::Fc(p) => p.n_i,
+            LinearSpec::AvgPool { .. } => 0,
         }
     }
 
@@ -65,9 +80,12 @@ impl LinearSpec {
     }
 
     /// Ciphertexts holding the recovery output / ID vectors
-    /// (output-indexed packing).
+    /// (output-indexed packing). Zero for local steps.
     pub fn num_recovery_cts(&self, n: usize) -> usize {
-        self.num_outputs().div_ceil(n)
+        match self {
+            LinearSpec::AvgPool { .. } => 0,
+            _ => self.num_outputs().div_ceil(n),
+        }
     }
 
     /// Expand a flat share/input into the slot stream (the `T` transform).
@@ -75,6 +93,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.expand(input),
             LinearSpec::Fc(p) => p.expand(input),
+            LinearSpec::AvgPool { .. } => Vec::new(),
         }
     }
 
@@ -83,6 +102,7 @@ impl LinearSpec {
         match self {
             LinearSpec::Conv(p) => p.expand(input),
             LinearSpec::Fc(p) => p.expand(input),
+            LinearSpec::AvgPool { .. } => Vec::new(),
         }
     }
 }
@@ -99,12 +119,26 @@ pub struct StepSpec {
     /// Mean-pool (as share-domain *sum*-pool; the divisor is absorbed into
     /// the next layer's weights) applied to the activation after ReLU.
     pub pool_after: Option<usize>,
+    /// Identity skip connection: after the ReLU recovery, both parties add
+    /// their *saved input shares* of this step back onto the new activation
+    /// shares (`x ← ReLU(linear(x)) + x`, element-wise mod `p`). Requires a
+    /// fused ReLU and a shape-preserving linear layer; never combined with
+    /// `pool_after`.
+    pub residual_add: bool,
     /// Input shape of this step.
     pub in_shape: (usize, usize, usize),
     /// Activation shape after the linear+ReLU (before pooling).
     pub out_shape: (usize, usize, usize),
     /// Divisor inherited from preceding pools (weights are pre-divided).
     pub weight_div: f64,
+}
+
+impl StepSpec {
+    /// True for steps that exchange no ciphertexts — both parties transform
+    /// their own shares locally (currently only [`LinearSpec::AvgPool`]).
+    pub fn is_local(&self) -> bool {
+        matches!(self.linear, LinearSpec::AvgPool { .. })
+    }
 }
 
 /// Why a network cannot be compiled into a protocol spec. Surfaced as a
@@ -149,8 +183,12 @@ pub struct ProtocolSpec {
 
 impl ProtocolSpec {
     /// Compile a network into protocol steps. Supported patterns:
-    /// `Linear [→ ReLU] [→ MeanPool]` (all four benchmark networks fit).
-    /// Anything else is a typed [`SpecError`], not a panic.
+    /// `Linear [→ ReLU [→ ResidualAdd]] [→ MeanPool]` (the fused step), plus
+    /// a *standalone* `MeanPool` which becomes a zero-ciphertext
+    /// [`LinearSpec::AvgPool`] step (both parties pool their shares
+    /// locally; it cannot be the last step). A `ResidualAdd` needs a fused
+    /// ReLU and a shape-preserving linear layer, and is never combined with
+    /// a fused pool. Anything else is a typed [`SpecError`], not a panic.
     pub fn compile(net: &Network) -> Result<Self, SpecError> {
         let mut steps = Vec::new();
         let (mut c, mut h, mut w) = net.input_shape;
@@ -170,24 +208,42 @@ impl ProtocolSpec {
                     let out_shape = layer.out_shape(c, h, w);
                     let mut relu = false;
                     let mut pool_after = None;
+                    let mut residual_add = false;
                     let mut j = i + 1;
                     if j < net.layers.len() && net.layers[j].kind == LayerKind::Relu {
                         relu = true;
                         j += 1;
                     }
-                    let mut post_shape = out_shape;
-                    if let Some(LayerKind::MeanPool { size }) =
-                        net.layers.get(j).map(|l| l.kind.clone())
-                    {
-                        pool_after = Some(size);
-                        post_shape = (out_shape.0, out_shape.1 / size, out_shape.2 / size);
+                    if j < net.layers.len() && net.layers[j].kind == LayerKind::ResidualAdd {
+                        // Post-activation identity skip: both parties add
+                        // their saved input shares, which only reconstructs
+                        // correctly when the shapes match and a ReLU
+                        // recovery produced fresh activation shares.
+                        if !relu || out_shape != in_shape {
+                            return Err(SpecError::UnsupportedLayerOrder {
+                                index: j,
+                                kind: format!("{:?}", net.layers[j].kind),
+                            });
+                        }
+                        residual_add = true;
                         j += 1;
+                    }
+                    let mut post_shape = out_shape;
+                    if !residual_add {
+                        if let Some(LayerKind::MeanPool { size }) =
+                            net.layers.get(j).map(|l| l.kind.clone())
+                        {
+                            pool_after = Some(size);
+                            post_shape = (out_shape.0, out_shape.1 / size, out_shape.2 / size);
+                            j += 1;
+                        }
                     }
                     steps.push(StepSpec {
                         layer_idx: i,
                         linear,
                         relu,
                         pool_after,
+                        residual_add,
                         in_shape,
                         out_shape,
                         weight_div: pending_div,
@@ -196,7 +252,27 @@ impl ProtocolSpec {
                     (c, h, w) = post_shape;
                     i = j;
                 }
-                LayerKind::Relu | LayerKind::MeanPool { .. } => {
+                LayerKind::MeanPool { size } => {
+                    // Standalone pool (no preceding fused linear): a local
+                    // share-domain sum-pool step; the divisor composes into
+                    // the next linear layer's weight pre-division.
+                    let in_shape = (c, h, w);
+                    let out_shape = (c, h / size, w / size);
+                    steps.push(StepSpec {
+                        layer_idx: i,
+                        linear: LinearSpec::AvgPool { shape: in_shape, size },
+                        relu: false,
+                        pool_after: None,
+                        residual_add: false,
+                        in_shape,
+                        out_shape,
+                        weight_div: 1.0,
+                    });
+                    pending_div *= (size * size) as f64;
+                    (c, h, w) = out_shape;
+                    i += 1;
+                }
+                LayerKind::Relu | LayerKind::ResidualAdd => {
                     return Err(SpecError::UnsupportedLayerOrder {
                         index: i,
                         kind: format!("{:?}", layer.kind),
@@ -207,12 +283,27 @@ impl ProtocolSpec {
         if steps.is_empty() {
             return Err(SpecError::NoLinearLayers);
         }
+        if steps.last().is_some_and(|s| s.is_local()) {
+            // A trailing local pool has no linear step left to absorb its
+            // divisor (and no obscured result to reveal).
+            let last = steps.last().unwrap();
+            return Err(SpecError::UnsupportedLayerOrder {
+                index: last.layer_idx,
+                kind: "MeanPool (trailing)".into(),
+            });
+        }
         Ok(Self { steps, input_shape: net.input_shape })
     }
 
     /// Index of the last step (its result is revealed obscured — `f^OMI`).
     pub fn last_idx(&self) -> usize {
         self.steps.len() - 1
+    }
+
+    /// Whether step `si` has a ReLU recovery round: every hidden step
+    /// except the zero-ciphertext local ones.
+    pub fn has_recovery(&self, si: usize) -> bool {
+        si != self.last_idx() && !self.steps[si].is_local()
     }
 
     /// Total online communication estimate in bytes (fresh c2s cts, 2-poly
@@ -225,7 +316,7 @@ impl ProtocolSpec {
         for (idx, s) in self.steps.iter().enumerate() {
             total += (s.linear.num_in_cts(n) as u64) * ciphertext_bytes(params, true) as u64;
             total += (s.linear.num_out_cts(n) as u64) * ciphertext_bytes(params, false) as u64;
-            if idx != self.last_idx() {
+            if self.has_recovery(idx) {
                 total +=
                     (s.linear.num_recovery_cts(n) as u64) * ciphertext_bytes(params, false) as u64;
             }
@@ -286,6 +377,96 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn compile_netres_residual_steps() {
+        let net = Network::build(NetworkArch::NetRes, 1);
+        let spec = ProtocolSpec::compile(&net).expect("valid network");
+        assert_eq!(spec.steps.len(), 12); // stem + 10 residual blocks + fc
+        assert!(!spec.steps[0].residual_add);
+        for si in 1..=10 {
+            let s = &spec.steps[si];
+            assert!(s.residual_add, "step {si} should carry the skip add");
+            assert!(s.relu && s.pool_after.is_none());
+            assert_eq!(s.in_shape, s.out_shape, "residual steps are shape-preserving");
+        }
+        assert!(!spec.steps[11].residual_add);
+        // Residual adds are share-local: ciphertext counts are unchanged
+        // relative to a plain conv step.
+        assert!(spec.steps.iter().all(|s| !s.is_local()));
+    }
+
+    #[test]
+    fn compile_netpool_standalone_pool() {
+        let net = Network::build(NetworkArch::NetPool, 1);
+        let spec = ProtocolSpec::compile(&net).expect("valid network");
+        assert_eq!(spec.steps.len(), 3); // avgpool, conv+relu, fc
+        let s0 = &spec.steps[0];
+        assert!(s0.is_local());
+        assert_eq!(s0.in_shape, (1, 28, 28));
+        assert_eq!(s0.out_shape, (1, 14, 14));
+        let n = 4096;
+        assert_eq!(s0.linear.num_in_cts(n), 0);
+        assert_eq!(s0.linear.num_out_cts(n), 0);
+        assert_eq!(s0.linear.num_recovery_cts(n), 0);
+        assert_eq!(s0.linear.num_outputs(), 14 * 14);
+        // The pool's divisor lands on the conv's weights.
+        assert_eq!(spec.steps[1].weight_div, 4.0);
+        // Local steps never have a recovery round; hidden non-local do.
+        assert!(!spec.has_recovery(0));
+        assert!(spec.has_recovery(1));
+        assert!(!spec.has_recovery(2));
+    }
+
+    #[test]
+    fn malformed_residual_and_trailing_pool_are_errors() {
+        use crate::nn::Layer;
+        // Residual without a fused ReLU.
+        let no_relu = Network {
+            name: "no-relu".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::conv(1, 3, 1, 1), Layer::residual_add(), Layer::fc(2)],
+        };
+        assert!(matches!(
+            ProtocolSpec::compile(&no_relu),
+            Err(SpecError::UnsupportedLayerOrder { index: 1, .. })
+        ));
+        // Residual across a shape change.
+        let shape_change = Network {
+            name: "shape-change".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![
+                Layer::conv(2, 3, 1, 1),
+                Layer::relu(),
+                Layer::residual_add(),
+                Layer::fc(2),
+            ],
+        };
+        assert!(matches!(
+            ProtocolSpec::compile(&shape_change),
+            Err(SpecError::UnsupportedLayerOrder { index: 2, .. })
+        ));
+        // A trailing standalone pool has no consumer for its divisor.
+        let trailing = Network {
+            name: "trailing-pool".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::conv(1, 3, 1, 1), Layer::relu(), Layer::mean_pool(2), Layer::mean_pool(2)],
+        };
+        assert!(matches!(
+            ProtocolSpec::compile(&trailing),
+            Err(SpecError::UnsupportedLayerOrder { .. })
+        ));
+        // A bare ResidualAdd opening the net is an order error.
+        let bare = Network {
+            name: "bare-res".into(),
+            input_shape: (1, 4, 4),
+            layers: vec![Layer::residual_add(), Layer::fc(2)],
+        };
+        assert!(matches!(
+            ProtocolSpec::compile(&bare),
+            Err(SpecError::UnsupportedLayerOrder { index: 0, .. })
+        ));
     }
 
     #[test]

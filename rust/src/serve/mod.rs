@@ -126,6 +126,14 @@ pub struct SecureConfig {
     /// process are unaffected, and nothing they build can resize this
     /// server's parallelism.
     pub threads: usize,
+    /// RLWE parameter policy ([`crate::plan::ParamsChoice`]). `Default`
+    /// keeps the context handed to [`SecureServer::serve`] untouched;
+    /// `Explicit`/`Auto` rebuild the serving context when the chosen
+    /// parameters differ (Auto runs the [`crate::plan`] planner against
+    /// the hosted network — an infeasible network is a bind-time
+    /// `InvalidInput` error, raised before any session exists). Clients
+    /// must connect with a matching context (handshake fingerprint).
+    pub params: crate::plan::ParamsChoice,
 }
 
 impl Default for SecureConfig {
@@ -143,6 +151,7 @@ impl Default for SecureConfig {
             idle_timeout: Duration::from_secs(300),
             max_write_queue: 64 << 20,
             threads: 0,
+            params: crate::plan::ParamsChoice::Default,
         }
     }
 }
@@ -244,6 +253,19 @@ impl SecureServer {
         addr: &str,
         cfg: SecureConfig,
     ) -> std::io::Result<SecureServer> {
+        // Resolve the parameter policy before anything keyed on the context
+        // exists (pool engines, fingerprints): `Auto` runs the static
+        // planner against the hosted network, so an infeasible network is
+        // refused here — never a garbage decrypt mid-session.
+        let ctx = match cfg.params {
+            crate::plan::ParamsChoice::Default => ctx,
+            choice => {
+                let (params, _) = choice
+                    .resolve(&net)
+                    .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e.to_string()))?;
+                if ctx.params == params { ctx } else { Arc::new(Context::new(params)) }
+            }
+        };
         plan.check_fits(ctx.params.p);
         let metrics = Arc::new(Metrics::new());
         let registry = Arc::new(SessionRegistry::new());
@@ -955,6 +977,39 @@ mod tests {
         .expect("malformed network must not serve");
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
         assert!(err.to_string().contains("layer order"), "{err}");
+    }
+
+    /// `SecureConfig::params` rebuilds the serving context: a client on the
+    /// chosen set completes the handshake and a full query, while one still
+    /// on the default set is refused by the parameter fingerprint.
+    #[test]
+    fn secure_config_params_rebuilds_serving_context() {
+        let default_ctx = Arc::new(Context::new(Params::default_params()));
+        let wide = Params::new(4096, 26);
+        let plan = ScalePlan::default_plan();
+        let server = SecureServer::serve(
+            default_ctx.clone(),
+            tiny_net(9),
+            plan,
+            "127.0.0.1:0",
+            SecureConfig {
+                seed: Some(41),
+                pool: PoolConfig::disabled(),
+                params: crate::plan::ParamsChoice::Explicit(wide),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let err = CheetahNetClient::connect(default_ctx, plan, &server.addr, 70)
+            .err()
+            .expect("default-parameter client must be refused");
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        let wide_ctx = Arc::new(Context::new(wide));
+        let mut client = CheetahNetClient::connect(wide_ctx, plan, &server.addr, 71).unwrap();
+        let rep = client.infer(&test_input(0.0)).unwrap();
+        assert_eq!(rep.logits.len(), 3);
+        client.bye().unwrap();
+        server.shutdown();
     }
 
     #[test]

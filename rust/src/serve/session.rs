@@ -128,6 +128,15 @@ impl Session {
             }
             self.queries_done += 1;
             self.phase = Phase::AwaitShares(0);
+        } else if self.engine.spec.steps[step].is_local() {
+            // Local step (standalone AvgPool): no recovery round exists —
+            // the server transforms its own share here and the client does
+            // the same on its side, so the session moves straight to the
+            // next SHARES round. The PRODUCTS payload is legitimately
+            // empty (zero ciphertexts).
+            let pooled = self.engine.local_share(step, &self.share);
+            self.share = pooled;
+            self.phase = Phase::AwaitShares(step + 1);
         } else {
             self.phase = Phase::AwaitRecovery(step);
         }
@@ -160,7 +169,8 @@ impl Session {
                 rec_cts.len()
             )));
         }
-        self.share = self.engine.finish_nonlinear_with(step, rec_cts);
+        let next = self.engine.advance_share(step, rec_cts, &self.share);
+        self.share = next;
         self.phase = Phase::AwaitShares(step + 1);
         Ok(wire::round_header(self.id, step as u32))
     }

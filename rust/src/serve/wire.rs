@@ -214,6 +214,7 @@ pub fn encode_arch(out: &mut Vec<u8>, net: &Network) {
                 out.push(3);
                 out.extend_from_slice(&(out_features as u32).to_le_bytes());
             }
+            LayerKind::ResidualAdd => out.push(4),
         }
     }
 }
@@ -251,6 +252,7 @@ pub fn decode_arch(r: &mut ByteReader) -> Result<Network, WireError> {
             1 => Layer::relu(),
             2 => Layer::mean_pool(arch_dim(r)?),
             3 => Layer::fc(arch_dim(r)?),
+            4 => Layer::residual_add(),
             _ => return Err(WireError::Malformed("layer kind")),
         });
     }

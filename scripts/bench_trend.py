@@ -11,7 +11,9 @@ list and `rows` of {header: string-cell} objects.
 
 Three schemas are gated:
 
-* e2e (positional args): rows keyed by (network, framework, threads, batch)
+* e2e (positional args): rows keyed by (network, framework, params, threads,
+  batch); `params` defaults to "n4096p23" for artifacts that predate the
+  parameter planner
   — `batch` is absent in pre-batch-PR artifacts and defaults to "1" — and
   the gated metric is `online_ms` (whole-batch wall ms for the
   cheetah-loop/cheetah-batch rows, per-query online compute otherwise).
@@ -57,9 +59,12 @@ def load_rows(path):
 
 
 def e2e_key(row):
+    # `params` arrived with the parameter planner; older artifacts predate
+    # the column, so absent/empty values default to the historical set.
     return (
         row.get("network", ""),
         row.get("framework", ""),
+        row.get("params", "n4096p23") or "n4096p23",
         row.get("threads", ""),
         row.get("batch", "1") or "1",
     )
