@@ -1,6 +1,6 @@
 //! Convolution benchmark — paper **Table 3** (three input/kernel configs ×
-//! {GAZELLE In_rot, GAZELLE Out_rot, CHEETAH}) and **Fig. 5** (speedup and
-//! communication vs kernel size r).
+//! {GAZELLE In_rot, GAZELLE Out_rot, GALA, CHEETAH}) and **Fig. 5**
+//! (speedup and communication vs kernel size r).
 //!
 //! Timing convention follows the paper: the measured span is the server's
 //! linear computation, from receipt of the encrypted input to the obscured
@@ -15,6 +15,7 @@ use cheetah::nn::{Layer, Network};
 use cheetah::phe::serial::ciphertext_bytes;
 use cheetah::phe::{Context, Encryptor, Evaluator, Params};
 use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gala;
 use cheetah::protocol::gazelle::{conv, conv_galois_keys, ConvVariant};
 use cheetah::util::fmt_bytes;
 use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
@@ -27,8 +28,13 @@ struct Cfg {
     r: usize,
 }
 
-/// One measurement row: (gazelle_ir_ms, gazelle_or_ms, cheetah_ms, bytes).
-fn run_config(ctx: &std::sync::Arc<Context>, cfg: &Cfg, samples: usize) -> (f64, f64, f64, u64, u64) {
+/// One measurement row:
+/// (gazelle_ir_ms, gazelle_or_ms, gala_ms, cheetah_ms, gz_bytes, ga_bytes, ch_bytes).
+fn run_config(
+    ctx: &std::sync::Arc<Context>,
+    cfg: &Cfg,
+    samples: usize,
+) -> (f64, f64, f64, f64, u64, u64, u64) {
     let plan = ScalePlan::default_plan();
     let mut rng = ChaCha20Rng::from_u64_seed(3);
     let mut srng = SplitMix64::new(4);
@@ -76,6 +82,26 @@ fn run_config(ctx: &std::sync::Arc<Context>, cfg: &Cfg, samples: usize) -> (f64,
     // GAZELLE s→c bytes: c_o evaluated ciphertexts.
     let gz_bytes = (cfg.c_o * ciphertext_bytes(&ctx.params, false)) as u64;
 
+    // ---- GALA (greedy packing on the same substrate) ----
+    let geom = gala::GalaConvGeometry::new(ctx.params.row_size(), shape, cfg.c_o, cfg.r);
+    let ga_gk = gala::gala_conv_galois_keys(ctx, &enc.sk, cfg.r, cfg.hw, &mut rng);
+    let residues: Vec<u64> = input_q
+        .iter()
+        .map(|&v| if v < 0 { ctx.params.p - (-v) as u64 } else { v as u64 })
+        .collect();
+    let mut ga_cts: Vec<_> = gala::pack_conv_input(&geom, &residues)
+        .iter()
+        .map(|slots| enc.encrypt(&ctx.encoder.encode_unsigned(slots), &mut rng))
+        .collect();
+    for ct in ga_cts.iter_mut() {
+        ev.to_ntt(ct);
+    }
+    let t_ga = time_fn(1, samples, || {
+        let _ = std::hint::black_box(gala::conv(&ev, &geom, &ga_cts, &layer, &plan, 1.0, &ga_gk));
+    });
+    // GALA s→c bytes: one ciphertext per output group.
+    let ga_bytes = (geom.out_groups * ciphertext_bytes(&ctx.params, false)) as u64;
+
     // ---- CHEETAH (single conv layer as a 1-step network) ----
     let mut net = Network {
         name: "bench".into(),
@@ -99,7 +125,7 @@ fn run_config(ctx: &std::sync::Arc<Context>, cfg: &Cfg, samples: usize) -> (f64,
         ch_ms = ch_ms.min(rep.steps[0].server_online.as_secs_f64() * 1e3);
         ch_bytes = rep.steps[0].s2c_bytes;
     }
-    (t_ir.millis(), t_or.millis(), ch_ms, gz_bytes, ch_bytes)
+    (t_ir.millis(), t_or.millis(), t_ga.millis(), ch_ms, gz_bytes, ga_bytes, ch_bytes)
 }
 
 fn main() {
@@ -129,22 +155,26 @@ fn main() {
         "config (in, kernel)",
         "In_rot (ms)",
         "Out_rot (ms)",
+        "GALA (ms)",
         "CHEETAH (ms)",
         "speedup IR/CH",
-        "speedup OR/CH",
+        "speedup GA/CH",
         "GZ s2c",
+        "GA s2c",
         "CH s2c",
     ]);
     for cfg in &configs {
-        let (ir, or, ch, gb, cb) = run_config(&ctx, cfg, samples);
+        let (ir, or, ga, ch, gb, ab, cb) = run_config(&ctx, cfg, samples);
         t.row(&[
             cfg.name.into(),
             format!("{ir:.2}"),
             format!("{or:.2}"),
+            format!("{ga:.2}"),
             format!("{ch:.3}"),
             format!("{:.0}x", ir / ch),
-            format!("{:.0}x", or / ch),
+            format!("{:.0}x", ga / ch),
             fmt_bytes(gb),
+            fmt_bytes(ab),
             fmt_bytes(cb),
         ]);
     }
@@ -152,18 +182,20 @@ fn main() {
 
     if args.has("--sweep") {
         // Fig. 5: kernel-size sweep on the paper's three input configs.
-        let mut t = Table::new(&["config", "r", "IR (ms)", "OR (ms)", "CH (ms)", "best-GZ/CH"]);
+        let mut t =
+            Table::new(&["config", "r", "IR (ms)", "OR (ms)", "GA (ms)", "CH (ms)", "best-GZ/CH"]);
         for (name, c_i, hw, c_o) in
             [("28x28@1 rxr@5", 1usize, 28usize, 5usize), ("16x16@16 rxr@2", 16, 16, 2), ("32x32@2 rxr@1", 2, 32, 1)]
         {
             for r in [1usize, 3, 5, 7] {
                 let cfg = Cfg { name, c_i, hw, c_o, r };
-                let (ir, or, ch, _, _) = run_config(&ctx, &cfg, 2);
+                let (ir, or, ga, ch, _, _, _) = run_config(&ctx, &cfg, 2);
                 t.row(&[
                     name.into(),
                     r.to_string(),
                     format!("{ir:.2}"),
                     format!("{or:.2}"),
+                    format!("{ga:.2}"),
                     format!("{ch:.3}"),
                     format!("{:.0}x", ir.min(or) / ch),
                 ]);

@@ -1,6 +1,7 @@
 //! End-to-end network benchmark — paper **Table 7** (online/offline time +
 //! communication for Network A, Network B, AlexNet, VGG-16, CHEETAH vs
-//! GAZELLE) and **Fig. 8** (accumulated per-layer breakdown, `--breakdown`)
+//! GAZELLE vs GALA) and **Fig. 8** (accumulated per-layer breakdown,
+//! `--breakdown`)
 //! — both frameworks driven through the unified engine API
 //! (`cheetah::engine::EngineBuilder`), so each row is literally the same
 //! build→prepare→infer calls with a different [`Backend`].
@@ -187,6 +188,24 @@ fn main() {
         let gz_online = gz_rep.online_total();
         let gz_timing = gz_rep.timing.expect("gazelle timing");
 
+        // ---- GALA: same baseline substrate, greedy packing. Same
+        // weights + input as the GAZELLE row, so the logits must match
+        // bit for bit (masks cancel; HE and GC are exact mod p). ----
+        let ga_net = Network::build_scaled(arch, 21, gz_scale);
+        let mut ga = EngineBuilder::new(Backend::Gala)
+            .network(ga_net)
+            .context(ctx.clone())
+            .seed(24)
+            .build()
+            .expect("gala engine");
+        let ga_prep = ga.prepare().expect("gala offline");
+        let ga_rep = ga.infer(&gz_input).expect("gala inference");
+        let ga_online = ga_rep.online_total();
+        assert_eq!(
+            gz_rep.logits, ga_rep.logits,
+            "{name}: GALA logits diverged bitwise from hybrid GAZELLE"
+        );
+
         let scale_note = if (ch_scale - gz_scale).abs() > 1e-9 {
             format!(" [GZ @ {gz_name}]")
         } else {
@@ -205,6 +224,19 @@ fn main() {
             fmt_bytes(gz_prep.offline_bytes),
             String::new(),
             gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+        ]);
+        t.row(&[
+            format!("{name}{scale_note}"),
+            "GALA".into(),
+            format!("{:.0} ms", ga_online.as_secs_f64() * 1e3),
+            format!("{:.0} ms", ga_prep.offline_time.as_secs_f64() * 1e3),
+            fmt_bytes(ga_rep.online_bytes()),
+            fmt_bytes(ga_prep.offline_bytes),
+            format!(
+                "{:.1}x",
+                gz_online.as_secs_f64() / ga_online.as_secs_f64().max(1e-9)
+            ),
+            ga_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
         ]);
         t.row(&[
             format!("{name} [T=1]"),
@@ -247,6 +279,20 @@ fn main() {
             gz_rep.online_bytes().to_string(),
             gz_prep.offline_bytes.to_string(),
             gz_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
+            String::new(),
+            "1".into(),
+            String::new(),
+        ]);
+        jt.row(&[
+            name.clone(),
+            "gala".into(),
+            ga_rep.params_key(),
+            threads.to_string(),
+            format!("{:.3}", ga_rep.online_compute().as_secs_f64() * 1e3),
+            format!("{:.3}", ga_prep.offline_time.as_secs_f64() * 1e3),
+            ga_rep.online_bytes().to_string(),
+            ga_prep.offline_bytes.to_string(),
+            ga_rep.ops.map(|o| o.perm).unwrap_or(0).to_string(),
             String::new(),
             "1".into(),
             String::new(),

@@ -9,6 +9,7 @@ use cheetah::nn::{Layer, Network};
 use cheetah::phe::serial::ciphertext_bytes;
 use cheetah::phe::{Context, Encryptor, Evaluator, Params};
 use cheetah::protocol::cheetah::CheetahRunner;
+use cheetah::protocol::gala::fc as gala_fc;
 use cheetah::protocol::gazelle::{fc, fc_galois_keys, pack_fc_input, FcMethod};
 use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
 
@@ -54,6 +55,15 @@ fn main() {
                 std::hint::black_box(fc(&ev, FcMethod::Hybrid, &ct, &layer, n_i, &plan, 1.0, &gk));
         });
 
+        // GALA: same packed ciphertext, rotation-free (the rotate-and-sum
+        // tree lives in share generation).
+        ev.reset_counts();
+        let _ = gala_fc(&ev, &ct, &layer, n_i, &plan, 1.0);
+        let ga_counts = ev.counts();
+        let t_ga = time_fn(1, samples, || {
+            let _ = std::hint::black_box(gala_fc(&ev, &ct, &layer, n_i, &plan, 1.0));
+        });
+
         // CHEETAH single FC step.
         let mut net = Network {
             name: "fc".into(),
@@ -85,6 +95,15 @@ fn main() {
             gz_counts.add.to_string(),
             format!("{:.3}", t_gz.millis()),
             String::new(),
+        ]);
+        t4.row(&[
+            label.clone(),
+            "GALA".into(),
+            ga_counts.perm.to_string(),
+            ga_counts.mult.to_string(),
+            ga_counts.add.to_string(),
+            format!("{:.3}", t_ga.millis()),
+            format!("{:.0}x", t_gz.millis() / t_ga.millis()),
         ]);
         t4.row(&[
             label.clone(),

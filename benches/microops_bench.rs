@@ -1,11 +1,18 @@
 //! Micro-op benchmark: the paper's §2.3/§3.1 claim that one `Perm` costs
-//! ~56 `Add`s and ~34 `Mult`s — the observation motivating CHEETAH.
+//! ~56 `Add`s and ~34 `Mult`s — the observation motivating CHEETAH, plus
+//! a counted per-(op, variant) rotation ledger persisted to
+//! `BENCH_micro.json` and gated exactly by `scripts/bench_trend.py
+//! --micro` (a Perm-count regression fails even when wall-time noise
+//! hides it).
 //!
 //! Run: `cargo bench --bench microops_bench [-- --big-ring]`
 
 use cheetah::bench_util::{time_adaptive, BenchArgs, Table};
+use cheetah::fixed::ScalePlan;
+use cheetah::nn::Layer;
 use cheetah::phe::{Context, Encryptor, Evaluator, GaloisKeys, Params};
-use cheetah::util::rng::ChaCha20Rng;
+use cheetah::protocol::{gala, gazelle};
+use cheetah::util::rng::{ChaCha20Rng, SplitMix64};
 use std::time::Duration;
 
 fn main() {
@@ -77,4 +84,116 @@ fn main() {
         t_perm.median.as_secs_f64() / t_add.median.as_secs_f64(),
         t_perm.median.as_secs_f64() / t_mult.median.as_secs_f64()
     );
+
+    // ---- counted (op, variant) ledger → BENCH_micro.json ----
+    // Real counted kernel runs on fixed shapes (not analytic formulas):
+    // FC 16×128 on the shared hybrid packing, conv 2→3 channels 8×8 r=3.
+    let plan = ScalePlan::default_plan();
+    let mut srng = SplitMix64::new(11);
+    let mut micro = Table::new(&["op", "variant", "perm", "mult", "add"]);
+
+    let (n_o, n_i) = (16usize, 128usize);
+    let mut fc_layer = Layer::fc(n_o);
+    fc_layer.init_weights(1, 1, n_i, &mut srng);
+    let fc_gk = gazelle::fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
+    let x_q: Vec<i64> = (0..n_i).map(|_| srng.gen_i64_range(-128, 128)).collect();
+    let mut fc_ct = enc.encrypt_slots(
+        &gazelle::pack_fc_input(&ctx, &x_q, gazelle::FcMethod::Hybrid),
+        &mut rng,
+    );
+    ev.to_ntt(&mut fc_ct);
+    ev.reset_counts();
+    let _ = gazelle::fc(
+        &ev,
+        gazelle::FcMethod::Hybrid,
+        &fc_ct,
+        &fc_layer,
+        n_i,
+        &plan,
+        1.0,
+        &fc_gk,
+    );
+    let c = ev.counts();
+    micro.row(&[
+        "fc".into(),
+        "hybrid".into(),
+        c.perm.to_string(),
+        c.mult.to_string(),
+        c.add.to_string(),
+    ]);
+    ev.reset_counts();
+    let _ = gala::fc(&ev, &fc_ct, &fc_layer, n_i, &plan, 1.0);
+    let c = ev.counts();
+    micro.row(&[
+        "fc".into(),
+        "gala".into(),
+        c.perm.to_string(),
+        c.mult.to_string(),
+        c.add.to_string(),
+    ]);
+
+    let (c_i, c_o, h, w, r) = (2usize, 3usize, 8usize, 8usize, 3usize);
+    let mut conv_layer = Layer::conv(c_o, r, 1, 1);
+    conv_layer.init_weights(c_i, h, w, &mut srng);
+    let input_q: Vec<i64> = (0..c_i * h * w).map(|_| srng.gen_i64_range(-128, 128)).collect();
+    let conv_gk = gazelle::conv_galois_keys(&ctx, &enc.sk, r, w, &mut rng);
+    let mut ch_cts: Vec<_> = (0..c_i)
+        .map(|i| enc.encrypt_slots(&input_q[i * h * w..(i + 1) * h * w], &mut rng))
+        .collect();
+    for ct in ch_cts.iter_mut() {
+        ev.to_ntt(ct);
+    }
+    for (variant, key) in [
+        (gazelle::ConvVariant::InputRotation, "ir"),
+        (gazelle::ConvVariant::OutputRotation, "or"),
+    ] {
+        ev.reset_counts();
+        let _ = gazelle::conv(
+            &ev,
+            variant,
+            &ch_cts,
+            &conv_layer,
+            (c_i, h, w),
+            &plan,
+            1.0,
+            &conv_gk,
+        );
+        let c = ev.counts();
+        micro.row(&[
+            "conv".into(),
+            key.into(),
+            c.perm.to_string(),
+            c.mult.to_string(),
+            c.add.to_string(),
+        ]);
+    }
+    let geom = gala::GalaConvGeometry::new(ctx.params.row_size(), (c_i, h, w), c_o, r);
+    let gala_gk = gala::gala_conv_galois_keys(&ctx, &enc.sk, r, w, &mut rng);
+    let residues: Vec<u64> = input_q
+        .iter()
+        .map(|&v| if v < 0 { ctx.params.p - (-v) as u64 } else { v as u64 })
+        .collect();
+    let mut gala_cts: Vec<_> = gala::pack_conv_input(&geom, &residues)
+        .iter()
+        .map(|slots| enc.encrypt(&ctx.encoder.encode_unsigned(slots), &mut rng))
+        .collect();
+    for ct in gala_cts.iter_mut() {
+        ev.to_ntt(ct);
+    }
+    ev.reset_counts();
+    let _ = gala::conv(&ev, &geom, &gala_cts, &conv_layer, &plan, 1.0, &gala_gk);
+    let c = ev.counts();
+    micro.row(&[
+        "conv".into(),
+        "gala".into(),
+        c.perm.to_string(),
+        c.mult.to_string(),
+        c.add.to_string(),
+    ]);
+
+    micro.print("Counted op ledger by (op, variant) — gated by bench_trend.py --micro");
+    micro
+        .write_json("BENCH_micro.json", "micro op counts by (op, variant)")
+        .expect("write BENCH_micro.json");
+    println!("\nwrote BENCH_micro.json");
 }

@@ -9,7 +9,7 @@
 //! | [`PlaintextFloatEngine`] | `Network::forward` | timing |
 //! | [`PlaintextQuantizedEngine`] | `Network::forward_quantized` | timing |
 //! | [`CheetahEngine`] | `CheetahRunner` (in-process) | timing, traffic, ops, steps |
-//! | [`GazelleEngine`] | `GazelleRunner` (in-process) | timing, traffic, ops, steps |
+//! | [`GazelleEngine`] | `GazelleRunner` (in-process, hybrid or GALA mode) | timing, traffic, ops, steps |
 //! | [`CheetahNetEngine`] | `CheetahNetClient` over TCP | timing, traffic |
 //!
 //! `prepare()` is the offline phase everywhere: CHEETAH blinding + indicator
@@ -23,7 +23,7 @@ use crate::nn::{Network, Tensor};
 use crate::par;
 use crate::phe::Context;
 use crate::protocol::cheetah::CheetahRunner;
-use crate::protocol::gazelle::GazelleRunner;
+use crate::protocol::gazelle::{GazelleMode, GazelleRunner};
 use crate::protocol::transport::LinkModel;
 use crate::serve::{CheetahNetClient, NetReport, SecureConfig, SecureServer};
 use std::net::SocketAddr;
@@ -304,27 +304,44 @@ impl InferenceEngine for CheetahEngine {
 // GAZELLE (in-process baseline)
 // ---------------------------------------------------------------------------
 
-/// In-process GAZELLE baseline deployment.
+/// In-process GAZELLE baseline deployment — classic hybrid mode
+/// ([`Backend::Gazelle`]) or GALA greedy-packing mode ([`Backend::Gala`]),
+/// selected by the [`GazelleMode`] it is built with.
 pub struct GazelleEngine {
     ctx: Arc<Context>,
     net: Network,
     plan: ScalePlan,
     seed: u64,
+    mode: GazelleMode,
     runner: Option<GazelleRunner>,
     offline_bytes: u64,
     last: Option<EngineReport>,
 }
 
 impl GazelleEngine {
-    /// Build from a shared context, network, scale plan, and seed.
-    pub fn new(ctx: Arc<Context>, net: Network, plan: ScalePlan, seed: u64) -> Self {
-        Self { ctx, net, plan, seed, runner: None, offline_bytes: 0, last: None }
+    /// Build from a shared context, network, scale plan, seed, and linear
+    /// -algebra mode.
+    pub fn new(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        seed: u64,
+        mode: GazelleMode,
+    ) -> Self {
+        Self { ctx, net, plan, seed, mode, runner: None, offline_bytes: 0, last: None }
+    }
+
+    fn backend_key(&self) -> Backend {
+        match self.mode {
+            GazelleMode::Hybrid => Backend::Gazelle,
+            GazelleMode::Gala => Backend::Gala,
+        }
     }
 }
 
 impl InferenceEngine for GazelleEngine {
     fn backend(&self) -> Backend {
-        Backend::Gazelle
+        self.backend_key()
     }
 
     /// The offline phase: client key generation + rotation (Galois) keys
@@ -332,8 +349,13 @@ impl InferenceEngine for GazelleEngine {
     /// per-ReLU garbled tables.
     fn prepare(&mut self) -> EngineResult<Prepared> {
         let t0 = Instant::now();
-        let runner =
-            GazelleRunner::new(self.ctx.clone(), self.net.clone(), self.plan, self.seed)?;
+        let runner = GazelleRunner::with_mode(
+            self.ctx.clone(),
+            self.net.clone(),
+            self.plan,
+            self.seed,
+            self.mode,
+        )?;
         self.offline_bytes = runner.offline_bytes();
         self.runner = Some(runner);
         Ok(Prepared { offline_time: t0.elapsed(), offline_bytes: self.offline_bytes })
@@ -346,7 +368,8 @@ impl InferenceEngine for GazelleEngine {
         let offline_bytes = self.offline_bytes;
         let runner = self.runner.as_mut().expect("prepared above");
         let r = runner.infer(input);
-        let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+        let backend = self.backend_key();
+        let mut rep = EngineReport::bare(backend, r.argmax, r.logits.clone());
         rep.params = Some(self.ctx.params);
         rep.timing = Some(Timing {
             online_compute: r.online_compute(),
@@ -386,12 +409,13 @@ impl InferenceEngine for GazelleEngine {
         }
         let offline_bytes = self.offline_bytes;
         let params = self.ctx.params;
+        let backend = self.backend_key();
         let runner = self.runner.as_mut().expect("prepared above");
         let out: Vec<EngineReport> = runner
             .infer_batch(inputs)
             .into_iter()
             .map(|r| {
-                let mut rep = EngineReport::bare(Backend::Gazelle, r.argmax, r.logits.clone());
+                let mut rep = EngineReport::bare(backend, r.argmax, r.logits.clone());
                 rep.params = Some(params);
                 rep.timing = Some(Timing {
                     online_compute: r.online_compute(),

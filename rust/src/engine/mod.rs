@@ -46,6 +46,7 @@ use crate::nn::{Network, NetworkArch, Tensor};
 use crate::phe::{Context, Params};
 use crate::plan::{ParamsChoice, Plan, PlanError};
 use crate::protocol::cheetah::{ProtocolSpec, SpecError};
+use crate::protocol::gazelle::GazelleMode;
 use crate::protocol::transport::LinkModel;
 use crate::serve::{PoolConfig, SecureConfig};
 use std::net::SocketAddr;
@@ -63,6 +64,9 @@ pub enum Backend {
     Cheetah,
     /// The GAZELLE baseline (rotations + GC ReLU), in-process.
     Gazelle,
+    /// The GAZELLE runner in GALA greedy-packing mode (fewer rotations,
+    /// bit-identical logits) — see `protocol::gala`.
+    Gala,
     /// The CHEETAH protocol over real TCP via the serve subsystem.
     CheetahNet,
 }
@@ -75,6 +79,7 @@ impl Backend {
             Backend::PlaintextQuantized => "plaintext-quantized",
             Backend::Cheetah => "cheetah",
             Backend::Gazelle => "gazelle",
+            Backend::Gala => "gala",
             Backend::CheetahNet => "cheetah-net",
         }
     }
@@ -87,18 +92,20 @@ impl Backend {
             "plaintext-quantized" | "quantized" => Some(Backend::PlaintextQuantized),
             "cheetah" => Some(Backend::Cheetah),
             "gazelle" => Some(Backend::Gazelle),
+            "gala" | "gazelle-gala" => Some(Backend::Gala),
             "cheetah-net" | "net" | "tcp" => Some(Backend::CheetahNet),
             _ => None,
         }
     }
 
     /// Every backend, in the canonical comparison order.
-    pub fn all() -> [Backend; 5] {
+    pub fn all() -> [Backend; 6] {
         [
             Backend::PlaintextFloat,
             Backend::PlaintextQuantized,
             Backend::Cheetah,
             Backend::Gazelle,
+            Backend::Gala,
             Backend::CheetahNet,
         ]
     }
@@ -478,11 +485,15 @@ impl EngineBuilder {
                     self.link,
                 ))
             }
-            Backend::Gazelle => {
+            Backend::Gazelle | Backend::Gala => {
                 let net = self.resolve_network()?;
                 ProtocolSpec::compile(&net)?;
                 let ctx = self.resolve_context(Some(&net))?;
-                Box::new(GazelleEngine::new(ctx, net, self.plan, self.seed))
+                let mode = match self.backend {
+                    Backend::Gala => GazelleMode::Gala,
+                    _ => GazelleMode::Hybrid,
+                };
+                Box::new(GazelleEngine::new(ctx, net, self.plan, self.seed, mode))
             }
             Backend::CheetahNet => {
                 let (ctx, target) = match self.remote {
@@ -586,7 +597,7 @@ mod tests {
             input_shape: (1, 4, 4),
             layers: vec![Layer::relu(), Layer::fc(2)],
         };
-        for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+        for backend in [Backend::Cheetah, Backend::Gazelle, Backend::Gala, Backend::CheetahNet] {
             let err = EngineBuilder::new(backend)
                 .network(bad.clone())
                 .build()

@@ -12,7 +12,7 @@
 //!                       [--stats-addr A]  (live telemetry endpoint; e.g. 127.0.0.1:9911)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
 //!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
-//!                       [--params auto|default|big]                    cheetah, gazelle, cheetah-net, all}
+//!                       [--params auto|default|big]                    cheetah, gazelle, gala, cheetah-net, all}
 //! cheetah plan          [--network netA|netB|alexnet|vgg16|netRes|netPool|all]
 //!                                                                     static noise/magnitude budget + chosen parameter rung
 //! cheetah tables                                                      print the paper's analytic tables

@@ -1,0 +1,479 @@
+//! GALA kernel-grouped packed convolution: first-rotate-then-multiply with
+//! gap packing, replacing the baseline's `c·(r²−1)` independent
+//! per-(channel, offset) rotations with a baby-step/giant-step split of
+//! the kernel offset grid.
+//!
+//! **Packing.** A half-row holds `blocks_per_ct = row/(hw + gap)` blocks of
+//! `block = hw + gap` slots. The `gap = max(⌊r/2⌋, r−1−⌊r/2⌋)·(w+1)` zero
+//! slots between images absorb every kernel displacement, reproducing the
+//! baseline's flat zero-tail border semantics exactly (out-of-image taps
+//! read zeros from the gap — including block 0's negative taps, which wrap
+//! into the *last* block's gap at the end of the half-row). `γ =
+//! min(c_i, blocks_per_ct)` distinct input channels share a ciphertext and
+//! the whole group is replicated `ρ = min(c_o, blocks_per_ct/γ)` times, so
+//! one ciphertext feeds `ρ` output channels at once.
+//!
+//! **Rotation schedule.** A kernel offset `d = dy·w + dx` splits into a
+//! column part `dx` and a row part `dy·w`:
+//!
+//! 1. *baby*: each input-group ciphertext is rotated once per `dx` —
+//!    `⌈c_i/γ⌉·(r−1)` Perms, shared by every output channel;
+//! 2. *multiply*: per output group and `dy`, the masked partials
+//!    `Σ_{ig,dx} mask ∘ rot(u_ig, dx)` accumulate with plain `Mult`/`Add`
+//!    only — the mask places the weight `k[o][i][dy,dx]` over block `β`'s
+//!    window shifted by `dy·w`;
+//! 3. *giant*: the `dy` partial is rotated once by `dy·w` —
+//!    `⌈c_o/ρ⌉·(r−1)` Perms total.
+//!
+//! `#Perm = (⌈c_i/γ⌉ + ⌈c_o/ρ⌉)(r−1)` and `#Mult = ⌈c_i/γ⌉·⌈c_o/ρ⌉·r²`,
+//! versus the baseline's `min(c_i,c_o)(r²−1)` / `c_i·c_o·r²`. Only the
+//! `2(r−1)` Galois elements `±dx` and `±dy·w` need offline keys.
+//!
+//! An output `(o, s)` is the plaintext sum of `γ` slots (`stride = block`,
+//! one per packed input channel) of output-group ciphertext `o/ρ` — a
+//! [`SlotRead`]; the runner masks each of those slots individually.
+
+use super::SlotRead;
+use crate::fixed::ScalePlan;
+use crate::nn::layers::Layer;
+use crate::phe::keys::galois_elt_for_step;
+use crate::phe::{Ciphertext, Context, Evaluator, GaloisKeys, SecretKey};
+use crate::util::rng::ChaCha20Rng;
+
+/// The packing geometry of one GALA convolution step (all derived from the
+/// half-row size, the input shape, the output channel count, and the
+/// kernel size — both parties compute it deterministically).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GalaConvGeometry {
+    /// Half-row size the geometry was computed for.
+    pub row: usize,
+    /// Input channels.
+    pub c_i: usize,
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Output channels.
+    pub c_o: usize,
+    /// Kernel side length.
+    pub r: usize,
+    /// Negative kernel reach `⌊r/2⌋` (taps before the centre).
+    pub c_lo: usize,
+    /// Positive kernel reach `r − 1 − c_lo`.
+    pub c_hi: usize,
+    /// Zero slots between packed images (`max(c_lo, c_hi)·(w+1)`, 0 for
+    /// 1×1 kernels).
+    pub gap: usize,
+    /// Block pitch: `h·w + gap` slots per packed image.
+    pub block: usize,
+    /// Blocks per half-row (`row / block`).
+    pub blocks_per_ct: usize,
+    /// Distinct input channels packed per ciphertext.
+    pub gamma: usize,
+    /// Replicas of the channel group per ciphertext (each replica feeds a
+    /// different output channel).
+    pub rho: usize,
+    /// Input-group ciphertexts: `⌈c_i/γ⌉`.
+    pub in_groups: usize,
+    /// Output-group ciphertexts: `⌈c_o/ρ⌉`.
+    pub out_groups: usize,
+}
+
+impl GalaConvGeometry {
+    /// Derive the geometry for an input of `in_shape = (c_i, h, w)`, `c_o`
+    /// output channels and an `r×r` kernel on half-rows of `row` slots.
+    pub fn new(row: usize, in_shape: (usize, usize, usize), c_o: usize, r: usize) -> Self {
+        let (c_i, h, w) = in_shape;
+        let hw = h * w;
+        let c_lo = r / 2;
+        let c_hi = r - 1 - c_lo;
+        let gap = if r == 1 { 0 } else { c_lo.max(c_hi) * (w + 1) };
+        let block = hw + gap;
+        let blocks_per_ct = row / block;
+        let gamma = c_i.min(blocks_per_ct).max(1);
+        let rho = c_o.min((blocks_per_ct / gamma).max(1)).max(1);
+        GalaConvGeometry {
+            row,
+            c_i,
+            h,
+            w,
+            c_o,
+            r,
+            c_lo,
+            c_hi,
+            gap,
+            block,
+            blocks_per_ct,
+            gamma,
+            rho,
+            in_groups: c_i.div_ceil(gamma),
+            out_groups: c_o.div_ceil(rho),
+        }
+    }
+
+    /// Whether one packed image (plus gap) fits the half-row at all.
+    pub fn fits(&self) -> bool {
+        self.blocks_per_ct >= 1
+    }
+
+    /// Analytic `(perm, mult)` op counts of [`conv`] on this geometry.
+    pub fn counts(&self) -> (u64, u64) {
+        assert!(self.fits(), "image+gap exceeds the half-row");
+        let perm = ((self.in_groups + self.out_groups) * (self.r - 1)) as u64;
+        let mult = (self.in_groups * self.out_groups * self.r * self.r) as u64;
+        (perm, mult)
+    }
+
+    /// The [`SlotRead`] whose plaintext sum is output channel `o`, spatial
+    /// position `s`: the `γ` blocks of replica `o % ρ` in output-group
+    /// ciphertext `o / ρ`.
+    pub fn read(&self, o: usize, s: usize) -> SlotRead {
+        SlotRead {
+            ct: o / self.rho,
+            start: (o % self.rho) * self.gamma * self.block + s,
+            stride: self.block,
+            count: self.gamma,
+        }
+    }
+}
+
+/// Analytic GALA conv op counts `(perm, mult)` (see
+/// [`GalaConvGeometry::counts`]).
+pub fn gala_conv_counts(
+    row: usize,
+    in_shape: (usize, usize, usize),
+    c_o: usize,
+    r: usize,
+) -> (u64, u64) {
+    GalaConvGeometry::new(row, in_shape, c_o, r).counts()
+}
+
+/// Galois elements of the baby (`±dx`) and giant (`±dy·w`) rotations for
+/// an `r×r` kernel over a `w`-wide image (duplicates are deduplicated at
+/// key generation).
+pub fn needed_galois_elts(ctx: &Context, r: usize, w: usize) -> Vec<u64> {
+    let c_lo = (r / 2) as i64;
+    let c_hi = r as i64 - 1 - c_lo;
+    let mut elts = Vec::new();
+    for d in -c_lo..=c_hi {
+        if d != 0 {
+            elts.push(galois_elt_for_step(&ctx.params, d));
+            elts.push(galois_elt_for_step(&ctx.params, d * w as i64));
+        }
+    }
+    elts
+}
+
+/// Generate the GALA rotation keys for a conv shape (offline).
+pub fn gala_conv_galois_keys(
+    ctx: &Context,
+    sk: &SecretKey,
+    r: usize,
+    w: usize,
+    rng: &mut ChaCha20Rng,
+) -> GaloisKeys {
+    GaloisKeys::generate_for(ctx, sk, rng, &needed_galois_elts(ctx, r, w))
+}
+
+/// Pack a flat channel-major activation (residues mod `p`) into the GALA
+/// slot layout: `in_groups` half-row vectors, each holding `γ` channels at
+/// block pitch [`GalaConvGeometry::block`], replicated `ρ` times.
+pub fn pack_conv_input(geom: &GalaConvGeometry, input: &[u64]) -> Vec<Vec<u64>> {
+    let hw = geom.h * geom.w;
+    assert_eq!(input.len(), geom.c_i * hw, "channel-major input expected");
+    assert!(geom.fits(), "image+gap exceeds the half-row");
+    (0..geom.in_groups)
+        .map(|ig| {
+            let mut slots = vec![0u64; geom.row];
+            for q in 0..geom.rho {
+                for b in 0..geom.gamma {
+                    let i = ig * geom.gamma + b;
+                    if i >= geom.c_i {
+                        continue;
+                    }
+                    let beta = q * geom.gamma + b;
+                    slots[beta * geom.block..beta * geom.block + hw]
+                        .copy_from_slice(&input[i * hw..(i + 1) * hw]);
+                }
+            }
+            slots
+        })
+        .collect()
+}
+
+/// GALA convolution: `in_cts` are the [`pack_conv_input`] ciphertexts (NTT
+/// form), stride 1. Returns one ciphertext per output group; outputs are
+/// recovered with [`GalaConvGeometry::read`]. Weights are quantized at
+/// `plan.k` divided by `weight_div`, identically to the baseline path.
+///
+/// The baby rotations and the per-output-group accumulations fan out over
+/// the [`crate::par`] pool; accumulation order within an output group is
+/// fixed, so results are bit-identical at every thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn conv(
+    ev: &Evaluator,
+    geom: &GalaConvGeometry,
+    in_cts: &[Ciphertext],
+    layer: &Layer,
+    plan: &ScalePlan,
+    weight_div: f64,
+    gk: &GaloisKeys,
+) -> Vec<Ciphertext> {
+    let ctx = &*ev.ctx;
+    assert_eq!(in_cts.len(), geom.in_groups, "one ciphertext per input group");
+    assert!(geom.fits(), "image+gap exceeds the half-row");
+    assert_eq!(geom.row, ctx.params.row_size(), "geometry/context mismatch");
+    let crate::nn::layers::LayerKind::Conv2d { out_channels, kernel, stride, .. } = layer.kind
+    else {
+        panic!("conv requires Conv2d layer")
+    };
+    assert_eq!(stride, 1, "GALA packed conv path supports stride 1");
+    assert_eq!(out_channels, geom.c_o, "layer/geometry mismatch");
+    assert_eq!(kernel, geom.r, "layer/geometry mismatch");
+
+    let (hw, w, row) = (geom.h * geom.w, geom.w as i64, geom.row as i64);
+    let (c_lo, c_hi) = (geom.c_lo as i64, geom.c_hi as i64);
+    let n_dx = geom.r; // dx ∈ [−c_lo, c_hi], zero included
+    let quant = |v: f64| plan.quant_k(v / weight_div);
+
+    // Baby step: rotate every input group once per column offset — all
+    // (ig, dx) rotations are independent.
+    let rotated_flat: Vec<Ciphertext> = crate::par::map_indexed(geom.in_groups * n_dx, |k| {
+        let (ig, xi) = (k / n_dx, k % n_dx);
+        let dx = xi as i64 - c_lo;
+        if dx == 0 {
+            in_cts[ig].clone()
+        } else {
+            ev.rotate_rows(&in_cts[ig], dx, gk)
+        }
+    });
+    let rotated: Vec<&[Ciphertext]> = rotated_flat.chunks(n_dx).collect();
+
+    // The weight mask for (og, ig, dy, dx): block β = q·γ + b carries
+    // k[og·ρ+q][ig·γ+b][dy,dx] over its window shifted by dy·w. Windows of
+    // distinct blocks never collide (the gap separates them, and block 0's
+    // negative-dy wrap lands in the final gap at the end of the half-row).
+    let mask = |og: usize, ig: usize, dy: i64, dx: i64| -> Vec<i64> {
+        let (ky, kx) = ((dy + c_lo) as usize, (dx + c_lo) as usize);
+        let mut m = vec![0i64; geom.row];
+        for q in 0..geom.rho {
+            let o = og * geom.rho + q;
+            if o >= geom.c_o {
+                continue;
+            }
+            for b in 0..geom.gamma {
+                let i = ig * geom.gamma + b;
+                if i >= geom.c_i {
+                    continue;
+                }
+                let kv = quant(layer.conv_w(geom.c_i, geom.r, o, i, ky, kx));
+                if kv == 0 {
+                    continue;
+                }
+                let beta = (q * geom.gamma + b) as i64;
+                let base = beta * geom.block as i64 + dy * w;
+                for s in 0..hw as i64 {
+                    m[(base + s).rem_euclid(row) as usize] = kv;
+                }
+            }
+        }
+        m
+    };
+
+    // Mid + giant step per output group: accumulate the masked partials of
+    // every (ig, dx) for one dy, rotate the partial once by dy·w, sum.
+    crate::par::map_indexed(geom.out_groups, |og| {
+        let mut acc: Option<Ciphertext> = None;
+        for dy in -c_lo..=c_hi {
+            let mut partial: Option<Ciphertext> = None;
+            for (ig, rot_ig) in rotated.iter().enumerate() {
+                for xi in 0..n_dx {
+                    let dx = xi as i64 - c_lo;
+                    let op = ctx.mult_operand(&mask(og, ig, dy, dx));
+                    let prod = ev.mult_plain(&rot_ig[xi], &op);
+                    match &mut partial {
+                        None => partial = Some(prod),
+                        Some(p) => ev.add_assign(p, &prod),
+                    }
+                }
+            }
+            let mut part = partial.unwrap();
+            if dy != 0 {
+                part = ev.rotate_rows(&part, dy * w, gk);
+            }
+            match &mut acc {
+                None => acc = Some(part),
+                Some(a) => ev.add_assign(a, &part),
+            }
+        }
+        acc.unwrap()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::{Encryptor, Params};
+    use crate::protocol::gazelle::conv::{
+        conv as gazelle_conv, conv_flat_reference, conv_galois_keys, ConvVariant,
+    };
+    use crate::util::rng::SplitMix64;
+    use std::sync::Arc;
+
+    fn run_gala(
+        ctx: &Arc<Context>,
+        geom: &GalaConvGeometry,
+        layer: &Layer,
+        input_q: &[i64],
+        rng: &mut ChaCha20Rng,
+    ) -> (Vec<Vec<i64>>, crate::phe::OpCounts) {
+        let plan = crate::fixed::ScalePlan::default_plan();
+        let enc = Encryptor::new(ctx.clone(), rng);
+        let ev = Evaluator::new(ctx.clone());
+        let gk = gala_conv_galois_keys(ctx, &enc.sk, geom.r, geom.w, rng);
+        let p = ctx.params.p;
+        let residues: Vec<u64> = input_q
+            .iter()
+            .map(|&v| if v < 0 { p - (-v) as u64 } else { v as u64 })
+            .collect();
+        let mut in_cts: Vec<Ciphertext> = pack_conv_input(geom, &residues)
+            .iter()
+            .map(|slots| {
+                let pt = ctx.encoder.encode_unsigned(slots);
+                enc.encrypt(&pt, rng)
+            })
+            .collect();
+        for ct in in_cts.iter_mut() {
+            ev.to_ntt(ct);
+        }
+        ev.reset_counts();
+        let outs = conv(&ev, geom, &in_cts, layer, &plan, 1.0, &gk);
+        assert_eq!(outs.len(), geom.out_groups);
+        let counts = ev.counts();
+        (outs.iter().map(|c| enc.decrypt_slots(c)).collect(), counts)
+    }
+
+    /// Satellite: pinned geometry, counted Perm/Mult matching the analytic
+    /// formula, exact agreement with the flat-border reference, and strict
+    /// dominance over both baseline variants.
+    #[test]
+    fn gala_conv_matches_reference_and_counts() {
+        let ctx = Arc::new(Context::new(Params::new(1024, 20)));
+        let plan = crate::fixed::ScalePlan::default_plan();
+        let mut rng = ChaCha20Rng::from_u64_seed(33);
+        let mut srng = SplitMix64::new(34);
+
+        let (c_i, c_o, h, w, r) = (2usize, 3usize, 8usize, 8usize, 3usize);
+        let mut layer = Layer::conv(c_o, r, 1, 1);
+        layer.init_weights(c_i, h, w, &mut srng);
+        let input_q: Vec<i64> =
+            (0..c_i * h * w).map(|_| srng.gen_i64_range(-128, 128)).collect();
+        let reference = conv_flat_reference(&input_q, &layer, (c_i, h, w), &plan, 1.0);
+
+        let geom = GalaConvGeometry::new(ctx.params.row_size(), (c_i, h, w), c_o, r);
+        // row 512: gap = 9, block = 73, 7 blocks → γ=2, ρ=3, 1 in / 1 out group.
+        assert_eq!((geom.gamma, geom.rho, geom.in_groups, geom.out_groups), (2, 3, 1, 1));
+        let (expect_perm, expect_mult) = geom.counts();
+        assert_eq!((expect_perm, expect_mult), (4, 9));
+        let (gz_perm, _) = super::super::gazelle_conv_counts(c_i, c_o, r);
+        assert!(expect_perm < gz_perm, "gala {expect_perm} vs gazelle {gz_perm}");
+
+        let (decs, counts) = run_gala(&ctx, &geom, &layer, &input_q, &mut rng);
+        assert_eq!(counts.perm, expect_perm, "perm count");
+        assert_eq!(counts.mult, expect_mult, "mult count");
+        for o in 0..c_o {
+            for s in 0..h * w {
+                let read = geom.read(o, s);
+                let got: i64 = read.slots().map(|j| decs[read.ct][j]).sum();
+                assert_eq!(got, reference[o * h * w + s], "o={o} s={s}");
+            }
+        }
+    }
+
+    /// Satellite: seeded random conv shapes — the summed GALA reads agree
+    /// exactly with the plaintext flat-border reference and the baseline
+    /// input-rotation variant, and the counted Perms match the formula.
+    #[test]
+    fn randomized_gala_gazelle_reference_equivalence() {
+        let shapes: [(usize, usize, usize, usize); 12] = [
+            // (c_i, c_o, h=w, r)
+            (1, 1, 4, 3),
+            (1, 3, 6, 3),
+            (2, 2, 5, 3),
+            (3, 2, 6, 3),
+            (2, 4, 8, 3),
+            (4, 2, 7, 3),
+            (1, 2, 9, 5),
+            (2, 3, 10, 5),
+            (5, 4, 4, 3),
+            (3, 3, 8, 1),
+            (6, 2, 6, 3),
+            (2, 6, 12, 3),
+        ];
+        let ctx = Arc::new(Context::new(Params::new(1024, 20)));
+        let plan = crate::fixed::ScalePlan::default_plan();
+        let row = ctx.params.row_size();
+        for (case, &(c_i, c_o, hw_side, r)) in shapes.iter().enumerate() {
+            let (h, w) = (hw_side, hw_side);
+            let mut rng = ChaCha20Rng::from_u64_seed(800 + case as u64);
+            let mut srng = SplitMix64::new(810 + case as u64);
+            let mut layer = Layer::conv(c_o, r, 1, r / 2);
+            layer.init_weights(c_i, h, w, &mut srng);
+            let input_q: Vec<i64> =
+                (0..c_i * h * w).map(|_| srng.gen_i64_range(-64, 64)).collect();
+            let reference = conv_flat_reference(&input_q, &layer, (c_i, h, w), &plan, 1.0);
+
+            let geom = GalaConvGeometry::new(row, (c_i, h, w), c_o, r);
+            let (decs, counts) = run_gala(&ctx, &geom, &layer, &input_q, &mut rng);
+            let (expect_perm, expect_mult) = geom.counts();
+            assert_eq!(counts.perm, expect_perm, "case {case} perm");
+            assert_eq!(counts.mult, expect_mult, "case {case} mult");
+
+            // Baseline IR on the same inputs.
+            let enc = Encryptor::new(ctx.clone(), &mut rng);
+            let ev = Evaluator::new(ctx.clone());
+            let gk = conv_galois_keys(&ctx, &enc.sk, r, w, &mut rng);
+            let mut in_cts: Vec<Ciphertext> = (0..c_i)
+                .map(|i| enc.encrypt_slots(&input_q[i * h * w..(i + 1) * h * w], &mut rng))
+                .collect();
+            for ct in in_cts.iter_mut() {
+                ev.to_ntt(ct);
+            }
+            let gz = gazelle_conv(
+                &ev,
+                ConvVariant::InputRotation,
+                &in_cts,
+                &layer,
+                (c_i, h, w),
+                &plan,
+                1.0,
+                &gk,
+            );
+            let gz_decs: Vec<Vec<i64>> = gz.iter().map(|c| enc.decrypt_slots(c)).collect();
+
+            for o in 0..c_o {
+                for s in 0..h * w {
+                    let read = geom.read(o, s);
+                    let got: i64 = read.slots().map(|j| decs[read.ct][j]).sum();
+                    assert_eq!(got, reference[o * h * w + s], "case {case} o={o} s={s}");
+                    assert_eq!(got, gz_decs[o][s], "case {case} vs baseline o={o} s={s}");
+                }
+            }
+        }
+    }
+
+    /// The NetA first-conv geometry at default parameters (row 2048):
+    /// two blocks per ciphertext, one input group, three output groups.
+    #[test]
+    fn neta_conv1_geometry_is_pinned() {
+        let geom = GalaConvGeometry::new(2048, (1, 28, 28), 5, 5);
+        assert_eq!(geom.gap, 58);
+        assert_eq!(geom.block, 842);
+        assert_eq!(geom.blocks_per_ct, 2);
+        assert_eq!((geom.gamma, geom.rho), (1, 2));
+        assert_eq!((geom.in_groups, geom.out_groups), (1, 3));
+        assert_eq!(geom.counts(), (16, 75));
+        let (gz_perm, _) = super::super::gazelle_conv_counts(1, 5, 5);
+        assert_eq!(gz_perm, 24);
+    }
+}

@@ -1,0 +1,195 @@
+//! GALA block-combined matrix-vector product: the hybrid GAZELLE packing
+//! with the rotate-and-sum tree moved into secret-share generation.
+//!
+//! The hybrid layout tiles the (power-of-two padded) input `row/n_i` times
+//! across the half-row; one `MultPlain` against the chunk's weight mask
+//! leaves output `o = chunk·g_o + t` as the `n_i` partial products in slots
+//! `[t·n_i, (t+1)·n_i)`. GAZELLE then spends `log2(n_i)` `Perm`s per chunk
+//! collapsing each run to one slot. GALA observes that the server's next
+//! move is additive re-sharing anyway: the client can sum the run in
+//! plaintext after decryption (and the server masks every slot of the run,
+//! so nothing extra is revealed — see [`super::SlotRead`]). The entire
+//! rotation tree disappears: `#Perm = 0`, `#Mult = ⌈n_o/g_o⌉`, and no FC
+//! Galois keys are shipped offline at all.
+
+use super::SlotRead;
+use crate::fixed::ScalePlan;
+use crate::nn::layers::Layer;
+use crate::phe::{Ciphertext, Evaluator};
+use crate::protocol::gazelle::fc::pad_pow2;
+
+/// GALA FC op counts `(perm, mult)` for an `n_o × n_i_real` layer on
+/// half-rows of `row` slots: zero permutations, one `MultPlain` per chunk
+/// of `g_o = max(1, row/n_i)` outputs.
+pub fn gala_fc_counts(row: usize, n_i_real: usize, n_o: usize) -> (u64, u64) {
+    let n_i = pad_pow2(n_i_real);
+    let g_o = (row / n_i).max(1);
+    (0, n_o.div_ceil(g_o) as u64)
+}
+
+/// GALA matrix-vector product over a hybrid-packed input ciphertext (see
+/// [`crate::protocol::gazelle::fc::pack_fc_input`] with
+/// [`crate::protocol::gazelle::FcMethod::Hybrid`] — the packing is shared
+/// with the baseline). Returns one ciphertext per output chunk and, per
+/// output, the [`SlotRead`] whose plaintext sum is that output. Weights
+/// are quantized at `plan.k` divided by `weight_div` (absorbing preceding
+/// mean-pools), identically to the baseline path.
+pub fn fc(
+    ev: &Evaluator,
+    in_ct: &Ciphertext,
+    layer: &Layer,
+    n_i_real: usize,
+    plan: &ScalePlan,
+    weight_div: f64,
+) -> (Vec<Ciphertext>, Vec<SlotRead>) {
+    let ctx = &*ev.ctx;
+    let crate::nn::layers::LayerKind::Fc { out_features: n_o } = layer.kind else {
+        panic!("fc requires Fc layer")
+    };
+    let n_i = pad_pow2(n_i_real);
+    let row = ctx.params.row_size();
+    let quant = |v: f64| plan.quant_k(v / weight_div);
+    let w_at = |o: usize, j: usize| -> i64 {
+        if j < n_i_real {
+            quant(layer.fc_w(n_i_real, o, j))
+        } else {
+            0
+        }
+    };
+
+    let g_o = (row / n_i).max(1);
+    let n_chunks = n_o.div_ceil(g_o);
+    let mut outs = Vec::with_capacity(n_chunks);
+    let mut map = Vec::with_capacity(n_o);
+    for chunk in 0..n_chunks {
+        let mut m = vec![0i64; row];
+        for t in 0..g_o {
+            let o = chunk * g_o + t;
+            if o >= n_o {
+                break;
+            }
+            for j in 0..n_i {
+                m[t * n_i + j] = w_at(o, j);
+            }
+        }
+        let op = ctx.mult_operand(&m);
+        // One MultPlain; no rotate-and-sum tree — the client sums the run.
+        outs.push(ev.mult_plain(in_ct, &op));
+        for t in 0..g_o {
+            let o = chunk * g_o + t;
+            if o < n_o {
+                map.push(SlotRead { ct: chunk, start: t * n_i, stride: 1, count: n_i });
+            }
+        }
+    }
+    (outs, map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::phe::{Context, Encryptor, Params};
+    use crate::protocol::gazelle::fc::{
+        fc as gazelle_fc, fc_galois_keys, fc_reference, pack_fc_input, FcMethod,
+    };
+    use crate::util::rng::{ChaCha20Rng, SplitMix64};
+    use std::sync::Arc;
+
+    fn setup(n_i: usize, n_o: usize, seed: u64) -> (Arc<Context>, Layer, Vec<i64>, Vec<i64>) {
+        let ctx = Arc::new(Context::new(Params::new(1024, 20)));
+        let plan = crate::fixed::ScalePlan::default_plan();
+        let mut srng = SplitMix64::new(seed);
+        let mut layer = Layer::fc(n_o);
+        layer.init_weights(1, 1, n_i, &mut srng);
+        let x_q: Vec<i64> = (0..n_i).map(|_| srng.gen_i64_range(-128, 128)).collect();
+        let reference = fc_reference(&x_q, &layer, &plan, 1.0);
+        (ctx, layer, x_q, reference)
+    }
+
+    /// Satellite: GALA's counted Perm/Mult match [`gala_fc_counts`] on the
+    /// paper-table shapes and sit strictly below the hybrid baseline.
+    #[test]
+    fn gala_perm_count_matches_formula_and_beats_hybrid() {
+        for (n_o, n_i) in [(4usize, 512usize), (16, 128), (10, 100)] {
+            let (ctx, layer, x_q, _) = setup(n_i, n_o, 70 + n_o as u64);
+            let plan = crate::fixed::ScalePlan::default_plan();
+            let mut rng = ChaCha20Rng::from_u64_seed(7);
+            let enc = Encryptor::new(ctx.clone(), &mut rng);
+            let ev = crate::phe::Evaluator::new(ctx.clone());
+            let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
+            let packed = pack_fc_input(&ctx, &x_q, FcMethod::Hybrid);
+            let mut ct = enc.encrypt_slots(&packed, &mut rng);
+            ev.to_ntt(&mut ct);
+
+            ev.reset_counts();
+            let _ = fc(&ev, &ct, &layer, n_i, &plan, 1.0);
+            let gala = ev.counts();
+            ev.reset_counts();
+            let _ = gazelle_fc(&ev, FcMethod::Hybrid, &ct, &layer, n_i, &plan, 1.0, &gk);
+            let hybrid = ev.counts();
+
+            let row = ctx.params.row_size();
+            let (ga_perm, ga_mult) = gala_fc_counts(row, n_i, n_o);
+            let (hy_perm, hy_mult) = super::super::hybrid_fc_counts(row, n_i, n_o);
+            assert_eq!(gala.perm, ga_perm, "{n_o}x{n_i} gala perm");
+            assert_eq!(gala.mult, ga_mult, "{n_o}x{n_i} gala mult");
+            assert_eq!(hybrid.perm, hy_perm, "{n_o}x{n_i} hybrid perm formula");
+            assert_eq!(hybrid.mult, hy_mult, "{n_o}x{n_i} hybrid mult formula");
+            assert_eq!(gala.perm, 0);
+            assert!(
+                gala.perm < hybrid.perm,
+                "{n_o}x{n_i}: gala {} not strictly below hybrid {}",
+                gala.perm,
+                hybrid.perm
+            );
+        }
+    }
+
+    /// Satellite: seeded random layers — the summed GALA read, the hybrid
+    /// tree slot, and the plaintext-quantized reference agree exactly.
+    #[test]
+    fn randomized_gala_hybrid_reference_equivalence() {
+        let shapes: [(usize, usize); 12] = [
+            (3, 5),
+            (7, 3),
+            (12, 9),
+            (16, 10),
+            (30, 4),
+            (33, 7),
+            (48, 6),
+            (64, 4),
+            (65, 3),
+            (96, 5),
+            (100, 10),
+            (128, 3),
+        ];
+        for (case, &(n_i, n_o)) in shapes.iter().enumerate() {
+            let (ctx, layer, x_q, reference) = setup(n_i, n_o, 900 + case as u64);
+            let plan = crate::fixed::ScalePlan::default_plan();
+            let mut rng = ChaCha20Rng::from_u64_seed(901 + case as u64);
+            let enc = Encryptor::new(ctx.clone(), &mut rng);
+            let ev = crate::phe::Evaluator::new(ctx.clone());
+            let gk = fc_galois_keys(&ctx, &enc.sk, n_i, &mut rng);
+            let packed = pack_fc_input(&ctx, &x_q, FcMethod::Hybrid);
+            let mut ct = enc.encrypt_slots(&packed, &mut rng);
+            ev.to_ntt(&mut ct);
+
+            let (ga_outs, ga_map) = fc(&ev, &ct, &layer, n_i, &plan, 1.0);
+            let (hy_outs, hy_map) =
+                gazelle_fc(&ev, FcMethod::Hybrid, &ct, &layer, n_i, &plan, 1.0, &gk);
+            let ga_dec: Vec<Vec<i64>> =
+                ga_outs.iter().map(|c| enc.decrypt_slots(c)).collect();
+            let hy_dec: Vec<Vec<i64>> =
+                hy_outs.iter().map(|c| enc.decrypt_slots(c)).collect();
+            for (o, read) in ga_map.iter().enumerate() {
+                let summed: i64 = read.slots().map(|s| ga_dec[read.ct][s]).sum();
+                assert_eq!(summed, reference[o], "case {case} ({n_i}x{n_o}) gala output {o}");
+                let (hci, hslot) = hy_map[o];
+                assert_eq!(
+                    summed, hy_dec[hci][hslot],
+                    "case {case} ({n_i}x{n_o}) gala vs hybrid output {o}"
+                );
+            }
+        }
+    }
+}

@@ -28,7 +28,11 @@ use crate::util::rng::ChaCha20Rng;
 /// Which rotation strategy to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ConvVariant {
+    /// Rotate each input channel per offset, reuse across output channels
+    /// (`#Perm = c_i(r²−1)`).
     InputRotation,
+    /// Multiply first, rotate per-offset partial sums
+    /// (`#Perm = c_o(r²−1)`).
     OutputRotation,
 }
 

@@ -45,6 +45,7 @@ pub fn needed_galois_elts(ctx: &Context, n_i: usize) -> Vec<u64> {
     elts
 }
 
+/// Generate the FC rotation keys for input width `n_i` (offline).
 pub fn fc_galois_keys(
     ctx: &Context,
     sk: &SecretKey,

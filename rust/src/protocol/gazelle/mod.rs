@@ -13,6 +13,10 @@
 //! every linear layer pays `Perm` operations (each ≈ tens of `Mult`s) and
 //! every nonlinear layer pays per-element garbled tables, both of which
 //! CHEETAH eliminates.
+//!
+//! The runner also drives the greedy-packing successor of this baseline
+//! ([`crate::protocol::gala`]) via [`GazelleMode::Gala`] — same substrate,
+//! same shares, same GC ReLU, strictly fewer rotations.
 
 pub mod conv;
 pub mod fc;
@@ -20,4 +24,4 @@ pub mod runner;
 
 pub use conv::{conv, conv_flat_reference, conv_galois_keys, ConvVariant};
 pub use fc::{fc, fc_galois_keys, fc_reference, pack_fc_input, FcMethod};
-pub use runner::{GazelleReport, GazelleRunner};
+pub use runner::{GazelleMode, GazelleReport, GazelleRunner};

@@ -11,9 +11,21 @@
 //! 4. mean-pool = share-domain sum-pool (divisor absorbed into the next
 //!    layer's weights), exactly as in the CHEETAH runner for fairness.
 //!
+//! Standalone average-pools are zero-ciphertext local steps (both parties
+//! sum-pool their own shares), and post-activation residual adds are
+//! share-level (both parties add their saved input shares) — mirroring the
+//! CHEETAH runner step for step.
+//!
 //! Strided convolutions run at stride 1 and are share-downsampled (GAZELLE
 //! packs strided kernels natively; this costs the baseline nothing extra
 //! here because the stride-1 image already fits the ciphertext).
+//!
+//! The runner drives one of two linear-algebra families, selected by
+//! [`GazelleMode`]: the classic hybrid/rotation path, or the GALA
+//! greedy-packing path ([`crate::protocol::gala`]) in which an output is
+//! the plaintext sum of a [`SlotRead`] run — the server masks every slot
+//! of the run individually, so the obscuring guarantee (and the
+//! reconstructed logits) are unchanged.
 
 use super::conv::{conv, conv_galois_keys, ConvVariant};
 use super::fc::{fc, fc_galois_keys, pack_fc_input, FcMethod};
@@ -26,30 +38,68 @@ use crate::phe::serial::ciphertext_bytes;
 use crate::phe::{Ciphertext, Context, Encryptor, Evaluator, GaloisKeys, OpCounts};
 use crate::protocol::cheetah::server::pool_shares;
 use crate::protocol::cheetah::{LinearSpec, ProtocolSpec, SpecError};
+use crate::protocol::gala::{self, GalaConvGeometry, SlotRead};
 use crate::util::rng::ChaCha20Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+/// Which linear-algebra family a [`GazelleRunner`] deployment evaluates.
+///
+/// Both modes share the PHE substrate, the share chain, the GC ReLU, and
+/// the per-query RNG convention, so their logits are bit-identical — the
+/// mode only moves where rotations are spent (a property the tests pin).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum GazelleMode {
+    /// The classic GAZELLE path: hybrid FC (rotate-and-sum tree per output
+    /// chunk) and IR/OR diagonal conv — rotation-heavy.
+    #[default]
+    Hybrid,
+    /// The GALA greedy-packing path ([`crate::protocol::gala`]): the FC
+    /// tree moves into share generation (zero Perms) and conv rotations
+    /// are amortized baby-step/giant-step across channel groups.
+    Gala,
+}
+
+impl GazelleMode {
+    /// Stable lowercase key (bench/report rows).
+    pub fn name(self) -> &'static str {
+        match self {
+            GazelleMode::Hybrid => "hybrid",
+            GazelleMode::Gala => "gala",
+        }
+    }
+}
+
 /// Per-query report for the GAZELLE baseline.
 #[derive(Clone, Debug, Default)]
 pub struct GazelleReport {
+    /// Predicted class (argmax of `logits`).
     pub argmax: usize,
+    /// Dequantized logits, reconstructed by the client.
     pub logits: Vec<f64>,
+    /// Server-side linear compute (HE kernels + masking).
     pub server_linear: Duration,
+    /// Client-side compute (packing, encryption, decryption).
     pub client_time: Duration,
+    /// Garbled-circuit ReLU report (garble/eval time, gates, traffic).
     pub gc: GcReluReport,
+    /// Total online traffic, both directions.
     pub online_bytes: u64,
     /// Direction split of `online_bytes`; GC traffic (tables, labels, OT)
     /// is attributed server→client, its dominant direction.
     pub c2s_bytes: u64,
+    /// Server→client bytes (see `c2s_bytes`).
     pub s2c_bytes: u64,
+    /// Offline traffic: rotation keys + garbled tables.
     pub offline_bytes: u64,
+    /// HE op counters for the query (single-query mode only).
     pub ops: OpCounts,
     /// Per-step (linear-layer) online compute, for Fig. 8 breakdowns.
     pub per_step: Vec<Duration>,
 }
 
 impl GazelleReport {
+    /// Total online compute: server linear + client + GC evaluation.
     pub fn online_compute(&self) -> Duration {
         self.server_linear + self.client_time + self.gc.eval_time
     }
@@ -71,7 +121,9 @@ const QUERY_STREAM_BASE: u64 = 1;
 /// bit-identical to the sequential loop. (GAZELLE logits do not depend on
 /// the RNG at all — masks cancel on reconstruction and GC evaluation is
 /// exact — so the isolation is about keeping draw *order*
-/// schedule-independent.)
+/// schedule-independent. The same argument makes [`GazelleMode::Gala`]
+/// logits bit-identical to [`GazelleMode::Hybrid`]: per-slot masks cancel
+/// against the client's slot sums mod p.)
 pub struct GazelleRunner {
     /// Shared PHE context.
     pub ctx: Arc<Context>,
@@ -82,19 +134,33 @@ pub struct GazelleRunner {
     pub spec: ProtocolSpec,
     net: Network,
     relu: GcRelu,
+    mode: GazelleMode,
     conv_keys: Vec<Option<GaloisKeys>>,
     fc_keys: Vec<Option<GaloisKeys>>,
+    conv_geoms: Vec<Option<GalaConvGeometry>>,
     seed_key: [u8; 32],
     next_query: u64,
 }
 
 impl GazelleRunner {
-    /// A network the protocol cannot express is a typed [`SpecError`].
+    /// A [`GazelleMode::Hybrid`] deployment (the classic baseline). A
+    /// network the protocol cannot express is a typed [`SpecError`].
     pub fn new(
         ctx: Arc<Context>,
         net: Network,
         plan: ScalePlan,
         seed: u64,
+    ) -> Result<Self, SpecError> {
+        Self::with_mode(ctx, net, plan, seed, GazelleMode::Hybrid)
+    }
+
+    /// A deployment evaluating linear layers in the given [`GazelleMode`].
+    pub fn with_mode(
+        ctx: Arc<Context>,
+        net: Network,
+        plan: ScalePlan,
+        seed: u64,
+        mode: GazelleMode,
     ) -> Result<Self, SpecError> {
         let seed_key = ChaCha20Rng::key_from_u64(seed);
         let mut rng = ChaCha20Rng::new(&seed_key, 0);
@@ -103,25 +169,77 @@ impl GazelleRunner {
         let relu = GcRelu::new(ctx.params.p, plan.k.frac_bits as usize);
         // Offline: rotation keys per step geometry (generated under the
         // client's key — GAZELLE's server evaluates on client ciphertexts).
+        // GALA ships strictly fewer: ±dx/±dy·w conv elements only, no FC
+        // keys at all (the rotate-and-sum tree is gone).
         let mut conv_keys = Vec::new();
         let mut fc_keys = Vec::new();
+        let mut conv_geoms = Vec::new();
         for step in &spec.steps {
-            match &step.linear {
-                LinearSpec::Conv(p) => {
-                    conv_keys.push(Some(conv_galois_keys(
-                        &ctx,
-                        &client_enc.sk,
-                        p.kernel,
-                        p.in_shape.2,
-                        &mut rng,
-                    )));
-                    fc_keys.push(None);
-                }
-                LinearSpec::Fc(p) => {
-                    fc_keys.push(Some(fc_galois_keys(&ctx, &client_enc.sk, p.n_i, &mut rng)));
-                    conv_keys.push(None);
-                }
-            }
+            let (ck, fk, geom) = match &step.linear {
+                LinearSpec::Conv(p) => match mode {
+                    GazelleMode::Hybrid => (
+                        Some(conv_galois_keys(
+                            &ctx,
+                            &client_enc.sk,
+                            p.kernel,
+                            p.in_shape.2,
+                            &mut rng,
+                        )),
+                        None,
+                        None,
+                    ),
+                    GazelleMode::Gala => {
+                        let geom = GalaConvGeometry::new(
+                            ctx.params.row_size(),
+                            p.in_shape,
+                            p.out_shape.0,
+                            p.kernel,
+                        );
+                        if geom.fits() {
+                            (
+                                Some(gala::gala_conv_galois_keys(
+                                    &ctx,
+                                    &client_enc.sk,
+                                    p.kernel,
+                                    p.in_shape.2,
+                                    &mut rng,
+                                )),
+                                None,
+                                Some(geom),
+                            )
+                        } else {
+                            // Image + rotation gap exceeds the half-row:
+                            // this layer cannot block-pack, so it falls
+                            // back to the hybrid rotation path (geom stays
+                            // `None`; every dispatch below keys off that).
+                            (
+                                Some(conv_galois_keys(
+                                    &ctx,
+                                    &client_enc.sk,
+                                    p.kernel,
+                                    p.in_shape.2,
+                                    &mut rng,
+                                )),
+                                None,
+                                None,
+                            )
+                        }
+                    }
+                },
+                LinearSpec::Fc(p) => match mode {
+                    GazelleMode::Hybrid => (
+                        None,
+                        Some(fc_galois_keys(&ctx, &client_enc.sk, p.n_i, &mut rng)),
+                        None,
+                    ),
+                    GazelleMode::Gala => (None, None, None),
+                },
+                // Local steps move no ciphertexts and need no keys.
+                LinearSpec::AvgPool { .. } => (None, None, None),
+            };
+            conv_keys.push(ck);
+            fc_keys.push(fk);
+            conv_geoms.push(geom);
         }
         Ok(Self {
             ev: Evaluator::new(ctx.clone()),
@@ -130,16 +248,23 @@ impl GazelleRunner {
             spec,
             net,
             relu,
+            mode,
             conv_keys,
             fc_keys,
+            conv_geoms,
             seed_key,
             next_query: 0,
             ctx,
         })
     }
 
+    /// The linear-algebra mode this deployment evaluates.
+    pub fn mode(&self) -> GazelleMode {
+        self.mode
+    }
+
     /// Offline communication: rotation keys + garbled tables for every
-    /// intermediate activation.
+    /// intermediate activation (local steps run no ReLU).
     pub fn offline_bytes(&self) -> u64 {
         let key_bytes: usize = self
             .conv_keys
@@ -153,6 +278,7 @@ impl GazelleRunner {
             .steps
             .iter()
             .take(self.spec.steps.len() - 1)
+            .filter(|s| !s.is_local())
             .map(|s| s.linear.num_outputs())
             .sum();
         (key_bytes + relu_count * self.relu.offline_bytes_per_relu()) as u64
@@ -215,129 +341,221 @@ impl GazelleRunner {
             let step = self.spec.steps[si].clone();
             let last = si == n_steps - 1;
             let step_t0 = Instant::now();
+
+            // Local steps (standalone AvgPool) exchange nothing: both
+            // parties sum-pool their own shares (the mean divisor was
+            // folded into the next linear layer's weights at compile
+            // time), exactly as in the CHEETAH runner.
+            if let LinearSpec::AvgPool { shape, size } = &step.linear {
+                client_share = pool_shares(&client_share, *shape, *size, p);
+                server_share = pool_shares(&server_share, *shape, *size, p);
+                report.client_time += step_t0.elapsed();
+                report.per_step.push(step_t0.elapsed());
+                continue;
+            }
+
+            // Residual steps re-add the step's *input* shares after the
+            // ReLU — save them before the share chain moves on.
+            let residual_in = if step.residual_add {
+                Some((client_share.clone(), server_share.clone()))
+            } else {
+                None
+            };
+
             // ---- client: pack + encrypt its share ----
             let t0 = Instant::now();
-            let (in_cts, fc_pack_len): (Vec<Ciphertext>, usize) = match &step.linear {
-                LinearSpec::Conv(cp) => {
-                    let (c_i, h, w) = cp.in_shape;
-                    let hw = h * w;
-                    let cts = (0..c_i)
-                        .map(|i| {
-                            let slots: Vec<i64> =
-                                client_share[i * hw..(i + 1) * hw].iter().map(|&v| v as i64).collect();
-                            let pt = self.ctx.encoder.encode_unsigned(
-                                &slots.iter().map(|&v| v as u64).collect::<Vec<_>>(),
-                            );
+            let in_cts: Vec<Ciphertext> = match &step.linear {
+                LinearSpec::Conv(cp) => match self.conv_geoms[si].as_ref() {
+                    None => {
+                        let (c_i, h, w) = cp.in_shape;
+                        let hw = h * w;
+                        (0..c_i)
+                            .map(|i| {
+                                let pt = self
+                                    .ctx
+                                    .encoder
+                                    .encode_unsigned(&client_share[i * hw..(i + 1) * hw]);
+                                self.client_enc.encrypt(&pt, &mut rng)
+                            })
+                            .collect()
+                    }
+                    Some(geom) => gala::pack_conv_input(geom, &client_share)
+                        .iter()
+                        .map(|slots| {
+                            let pt = self.ctx.encoder.encode_unsigned(slots);
                             self.client_enc.encrypt(&pt, &mut rng)
                         })
-                        .collect();
-                    (cts, 0)
-                }
+                        .collect(),
+                },
                 LinearSpec::Fc(_) => {
                     let x: Vec<i64> = client_share.iter().map(|&v| v as i64).collect();
                     // pack_fc_input expects signed values; shares are
                     // residues — pack residues directly (mod-p linearity).
+                    // Both modes share the hybrid tiled layout.
                     let packed_res: Vec<u64> = pack_fc_input(&self.ctx, &x, FcMethod::Hybrid)
                         .iter()
                         .map(|&v| v as u64 % p)
                         .collect();
                     let pt = self.ctx.encoder.encode_unsigned(&packed_res);
-                    (vec![self.client_enc.encrypt(&pt, &mut rng)], packed_res.len())
+                    vec![self.client_enc.encrypt(&pt, &mut rng)]
                 }
+                LinearSpec::AvgPool { .. } => unreachable!("local steps handled above"),
             };
             report.client_time += t0.elapsed();
             report.online_bytes += in_cts.len() as u64 * fresh;
             report.c2s_bytes += in_cts.len() as u64 * fresh;
 
-            // ---- server: add own share, rotation-based linear, mask ----
+            // ---- server: add own share, packed linear kernel, mask ----
             let t1 = Instant::now();
             let mut in_ntt = in_cts;
             self.ev.to_ntt_batch(&mut in_ntt);
             // AddPlain the server's share, packed identically.
             match &step.linear {
-                LinearSpec::Conv(cp) => {
-                    let (_, h, w) = cp.in_shape;
-                    let hw = h * w;
-                    for (i, ct) in in_ntt.iter_mut().enumerate() {
-                        let op = self
-                            .ctx
-                            .add_operand_unsigned(&server_share[i * hw..(i + 1) * hw]);
-                        self.ev.add_plain(ct, &op);
+                LinearSpec::Conv(cp) => match self.conv_geoms[si].as_ref() {
+                    None => {
+                        let (_, h, w) = cp.in_shape;
+                        let hw = h * w;
+                        for (i, ct) in in_ntt.iter_mut().enumerate() {
+                            let op = self
+                                .ctx
+                                .add_operand_unsigned(&server_share[i * hw..(i + 1) * hw]);
+                            self.ev.add_plain(ct, &op);
+                        }
                     }
-                }
+                    Some(geom) => {
+                        for (slots, ct) in
+                            gala::pack_conv_input(geom, &server_share).iter().zip(&mut in_ntt)
+                        {
+                            let op = self.ctx.add_operand_unsigned(slots);
+                            self.ev.add_plain(ct, &op);
+                        }
+                    }
+                },
                 LinearSpec::Fc(_) => {
                     let x: Vec<i64> = server_share.iter().map(|&v| v as i64).collect();
                     let packed: Vec<u64> = pack_fc_input(&self.ctx, &x, FcMethod::Hybrid)
                         .iter()
                         .map(|&v| v as u64 % p)
                         .collect();
-                    let _ = fc_pack_len;
                     let op = self.ctx.add_operand_unsigned(&packed);
                     self.ev.add_plain(&mut in_ntt[0], &op);
                 }
+                LinearSpec::AvgPool { .. } => unreachable!("local steps handled above"),
             }
 
-            // Linear kernel.
+            // Linear kernel. Every output is a [`SlotRead`] (a single slot
+            // in hybrid mode; a strided run in GALA mode).
             let layer = self.net.layers[step.layer_idx].clone();
-            let (out_cts, out_map, out_shape): (Vec<Ciphertext>, Vec<(usize, usize)>, (usize, usize, usize)) =
-                match &step.linear {
-                    LinearSpec::Conv(cp) => {
-                        let (c_i, h, w) = cp.in_shape;
-                        let c_o = cp.out_shape.0;
-                        // GAZELLE picks whichever rotation variant is cheaper.
-                        let variant = if c_i <= c_o {
-                            ConvVariant::InputRotation
-                        } else {
-                            ConvVariant::OutputRotation
-                        };
-                        // Strided conv: run at stride 1, downsample shares.
-                        let mut l1 = layer.clone();
-                        if let LayerKind::Conv2d { ref mut stride, ref mut pad, .. } = l1.kind {
-                            *stride = 1;
-                            *pad = cp.kernel / 2;
-                        }
-                        let outs = conv(
-                            &self.ev,
-                            variant,
-                            &in_ntt,
-                            &l1,
-                            (c_i, h, w),
-                            &plan,
-                            step.weight_div,
-                            self.conv_keys[si].as_ref().unwrap(),
-                        );
-                        let hw = h * w;
-                        let map = (0..c_o * hw).map(|o| (o / hw, o % hw)).collect();
-                        (outs, map, (c_o, h, w))
+            let (out_cts, out_map, out_shape): (
+                Vec<Ciphertext>,
+                Vec<SlotRead>,
+                (usize, usize, usize),
+            ) = match &step.linear {
+                LinearSpec::Conv(cp) => {
+                    let (c_i, h, w) = cp.in_shape;
+                    let c_o = cp.out_shape.0;
+                    // Strided conv: run at stride 1, downsample shares.
+                    let mut l1 = layer.clone();
+                    if let LayerKind::Conv2d { ref mut stride, ref mut pad, .. } = l1.kind {
+                        *stride = 1;
+                        *pad = cp.kernel / 2;
                     }
-                    LinearSpec::Fc(fp) => {
-                        let (outs, map) = fc(
+                    let hw = h * w;
+                    let (outs, map) = match self.conv_geoms[si].as_ref() {
+                        None => {
+                            // GAZELLE picks whichever rotation variant is
+                            // cheaper.
+                            let variant = if c_i <= c_o {
+                                ConvVariant::InputRotation
+                            } else {
+                                ConvVariant::OutputRotation
+                            };
+                            let outs = conv(
+                                &self.ev,
+                                variant,
+                                &in_ntt,
+                                &l1,
+                                (c_i, h, w),
+                                &plan,
+                                step.weight_div,
+                                self.conv_keys[si].as_ref().unwrap(),
+                            );
+                            let map = (0..c_o * hw)
+                                .map(|o| SlotRead::single(o / hw, o % hw))
+                                .collect();
+                            (outs, map)
+                        }
+                        Some(geom) => {
+                            let outs = gala::conv(
+                                &self.ev,
+                                geom,
+                                &in_ntt,
+                                &l1,
+                                &plan,
+                                step.weight_div,
+                                self.conv_keys[si].as_ref().unwrap(),
+                            );
+                            let map =
+                                (0..c_o * hw).map(|o| geom.read(o / hw, o % hw)).collect();
+                            (outs, map)
+                        }
+                    };
+                    (outs, map, (c_o, h, w))
+                }
+                LinearSpec::Fc(fp) => {
+                    let (outs, map) = match self.mode {
+                        GazelleMode::Hybrid => {
+                            let (outs, map) = fc(
+                                &self.ev,
+                                FcMethod::Hybrid,
+                                &in_ntt[0],
+                                &layer,
+                                fp.n_i,
+                                &plan,
+                                step.weight_div,
+                                self.fc_keys[si].as_ref().unwrap(),
+                            );
+                            let map = map
+                                .into_iter()
+                                .map(|(ci, slot)| SlotRead::single(ci, slot))
+                                .collect();
+                            (outs, map)
+                        }
+                        GazelleMode::Gala => gala::fc(
                             &self.ev,
-                            FcMethod::Hybrid,
                             &in_ntt[0],
                             &layer,
                             fp.n_i,
                             &plan,
                             step.weight_div,
-                            self.fc_keys[si].as_ref().unwrap(),
-                        );
-                        (outs, map, (1, 1, fp.n_o))
-                    }
-                };
+                        ),
+                    };
+                    (outs, map, (1, 1, fp.n_o))
+                }
+                LinearSpec::AvgPool { .. } => unreachable!("local steps handled above"),
+            };
 
             // Mask with fresh server shares r (skip on the last layer: the
-            // prediction is the protocol output).
+            // prediction is the protocol output). Every *slot* of every
+            // read gets its own mask; the server's GC share of output `o`
+            // is the sum of its read's masks mod p, so reconstruction is
+            // exact in both modes (and draw order matches the historical
+            // hybrid behavior, where every read is a single slot).
             let mut masked = out_cts;
             let n_lin = out_map.len();
             let mut r_share: Vec<u64> = Vec::new();
             if !last {
-                r_share = (0..n_lin).map(|_| rng.gen_range(p)).collect();
-                // Scatter (p - r) into the mapped slots of each output ct.
+                r_share = Vec::with_capacity(n_lin);
                 let row_slots = self.ctx.params.n;
-                let mut scatter: Vec<Vec<u64>> =
-                    vec![vec![0u64; row_slots]; masked.len()];
-                for (o, &(ci, slot)) in out_map.iter().enumerate() {
-                    scatter[ci][slot] = (p - r_share[o]) % p;
+                let mut scatter: Vec<Vec<u64>> = vec![vec![0u64; row_slots]; masked.len()];
+                for read in &out_map {
+                    let mut srv = 0u64;
+                    for s in read.slots() {
+                        let r = rng.gen_range(p);
+                        scatter[read.ct][s] = (p - r) % p;
+                        srv = (srv + r) % p;
+                    }
+                    r_share.push(srv);
                 }
                 for (ci, ct) in masked.iter_mut().enumerate() {
                     let op = self.ctx.add_operand_unsigned(&scatter[ci]);
@@ -348,7 +566,8 @@ impl GazelleRunner {
             report.online_bytes += masked.len() as u64 * eval_sz;
             report.s2c_bytes += masked.len() as u64 * eval_sz;
 
-            // ---- client: decrypt its linear share ----
+            // ---- client: decrypt its linear share (summing each read's
+            // run mod p — a single slot in hybrid mode) ----
             let t2 = Instant::now();
             let mut client_lin: Vec<u64> = Vec::with_capacity(n_lin);
             // Per-ciphertext decryption is independent — parallel batch.
@@ -356,8 +575,12 @@ impl GazelleRunner {
             let decs: Vec<Vec<u64>> = crate::par::map_collect(&masked, |_, ct| {
                 ctx.encoder.decode_unsigned(&client_enc.decrypt(ct))
             });
-            for &(ci, slot) in &out_map {
-                client_lin.push(decs[ci][slot]);
+            for read in &out_map {
+                let mut v = 0u64;
+                for s in read.slots() {
+                    v = (v + decs[read.ct][s]) % p;
+                }
+                client_lin.push(v);
             }
             report.client_time += t2.elapsed();
 
@@ -412,6 +635,20 @@ impl GazelleRunner {
                 }
             }
 
+            // Residual skip-add: both parties re-add their saved input
+            // shares mod p, so the reconstruction gains exactly
+            // `ReLU(linear(x)) + x` (shape-preserving; never fused with a
+            // pool — compile() guarantees both).
+            if let Some((res_c, res_s)) = residual_in {
+                assert_eq!(c_new.len(), res_c.len(), "residual shapes must match");
+                for (dst, &old) in c_new.iter_mut().zip(&res_c) {
+                    *dst = (*dst + old) % p;
+                }
+                for (dst, &old) in s_new.iter_mut().zip(&res_s) {
+                    *dst = (*dst + old) % p;
+                }
+            }
+
             // Pooling on shares.
             if let Some(size) = step.pool_after {
                 c_new = pool_shares(&c_new, step.out_shape, size, p);
@@ -434,6 +671,17 @@ mod tests {
     use crate::phe::Params;
     use crate::util::rng::SplitMix64;
 
+    fn random_input(shape: (usize, usize, usize), seed: u64) -> Tensor {
+        let (c, h, w) = shape;
+        let mut srng = SplitMix64::new(seed);
+        Tensor::from_vec(
+            (0..c * h * w).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
+            c,
+            h,
+            w,
+        )
+    }
+
     /// Stride-1 conv + ReLU + FC: GAZELLE e2e must agree with the
     /// flat-semantics plaintext composition.
     #[test]
@@ -449,20 +697,15 @@ mod tests {
         let netc = net.clone();
         let mut runner = GazelleRunner::new(ctx, net, plan, 72).expect("valid network");
 
-        let mut srng = SplitMix64::new(73);
-        let input = Tensor::from_vec(
-            (0..36).map(|_| srng.gen_f64_range(-1.0, 1.0)).collect(),
-            1,
-            6,
-            6,
-        );
+        let input = random_input((1, 6, 6), 73);
         let report = runner.infer(&input);
         assert!(report.ops.perm > 0, "GAZELLE must pay permutations");
         assert!(report.gc.and_gates_total > 0, "GAZELLE must garble");
 
         // Reference with identical flat-border semantics.
         let xq: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
-        let lin = super::super::conv::conv_flat_reference(&xq, &netc.layers[0], (1, 6, 6), &plan, 1.0);
+        let lin =
+            super::super::conv::conv_flat_reference(&xq, &netc.layers[0], (1, 6, 6), &plan, 1.0);
         let act: Vec<i64> = lin.iter().map(|&v| (v.max(0)) >> plan.k.frac_bits).collect();
         let logits = super::super::fc::fc_reference(&act, &netc.layers[2], &plan, 1.0);
         let scale = plan.x.mul(plan.k);
@@ -472,6 +715,158 @@ mod tests {
                 (got - want_f).abs() < 1e-9,
                 "logit {i}: got {got} want {want_f}"
             );
+        }
+    }
+
+    /// The acceptance property of the GALA mode: logits bit-identical to
+    /// the hybrid baseline under pinned seeds, with strictly fewer Perms
+    /// and strictly less offline key material.
+    #[test]
+    fn gala_mode_logits_bit_identical_to_hybrid() {
+        let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "gala-vs-hybrid".into(),
+            input_shape: (1, 6, 6),
+            layers: vec![Layer::conv(3, 3, 1, 1), Layer::relu(), Layer::fc(4)],
+        };
+        net.init_weights(81);
+
+        let mut hybrid =
+            GazelleRunner::new(ctx.clone(), net.clone(), plan, 82).expect("valid network");
+        let mut gala = GazelleRunner::with_mode(ctx, net, plan, 82, GazelleMode::Gala)
+            .expect("valid network");
+        assert_eq!(gala.mode(), GazelleMode::Gala);
+
+        let input = random_input((1, 6, 6), 83);
+        let hy = hybrid.infer(&input);
+        let ga = gala.infer(&input);
+
+        assert_eq!(hy.logits.len(), ga.logits.len());
+        for (i, (a, b)) in hy.logits.iter().zip(&ga.logits).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: hybrid {a} vs gala {b}");
+        }
+        assert_eq!(hy.argmax, ga.argmax);
+        assert!(
+            ga.ops.perm < hy.ops.perm,
+            "gala perms {} must be strictly below hybrid {}",
+            ga.ops.perm,
+            hy.ops.perm
+        );
+        assert!(
+            ga.offline_bytes < hy.offline_bytes,
+            "gala offline {} must be below hybrid {} (fewer rotation keys)",
+            ga.offline_bytes,
+            hy.offline_bytes
+        );
+    }
+
+    /// Residual skip-adds are share-level in both modes and match the
+    /// plaintext mirror `ReLU(conv(x)) + x`.
+    #[test]
+    fn residual_net_matches_plaintext_mirror_in_both_modes() {
+        let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "gz-res".into(),
+            input_shape: (2, 5, 5),
+            layers: vec![
+                Layer::conv(2, 3, 1, 1),
+                Layer::relu(),
+                Layer::residual_add(),
+                Layer::fc(4),
+            ],
+        };
+        net.init_weights(91);
+        let netc = net.clone();
+        let input = random_input((2, 5, 5), 93);
+
+        // Plaintext mirror with identical flat-border semantics:
+        // act = (ReLU(conv(xq)) >> frac) + xq, then FC.
+        let xq: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
+        let lin =
+            super::super::conv::conv_flat_reference(&xq, &netc.layers[0], (2, 5, 5), &plan, 1.0);
+        let act: Vec<i64> = lin
+            .iter()
+            .zip(&xq)
+            .map(|(&v, &x)| ((v.max(0)) >> plan.k.frac_bits) + x)
+            .collect();
+        let logits = super::super::fc::fc_reference(&act, &netc.layers[3], &plan, 1.0);
+        let scale = plan.x.mul(plan.k);
+
+        for mode in [GazelleMode::Hybrid, GazelleMode::Gala] {
+            let mut runner = GazelleRunner::with_mode(ctx.clone(), net.clone(), plan, 92, mode)
+                .expect("residual network must compile");
+            let report = runner.infer(&input);
+            for (i, (&got, &want)) in report.logits.iter().zip(&logits).enumerate() {
+                let want_f = scale.dequantize(want);
+                assert!(
+                    (got - want_f).abs() < 1e-9,
+                    "{mode:?} logit {i}: got {got} want {want_f}"
+                );
+            }
+        }
+    }
+
+    /// A standalone leading average-pool is a zero-ciphertext local step
+    /// (both parties sum-pool shares; the divisor folds into the next
+    /// conv's weights) in both modes.
+    #[test]
+    fn standalone_avgpool_net_matches_reference_in_both_modes() {
+        let ctx = std::sync::Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let mut net = Network {
+            name: "gz-pool".into(),
+            input_shape: (1, 8, 8),
+            layers: vec![
+                Layer::mean_pool(2),
+                Layer::conv(2, 3, 1, 1),
+                Layer::relu(),
+                Layer::fc(4),
+            ],
+        };
+        net.init_weights(95);
+        let netc = net.clone();
+        let input = random_input((1, 8, 8), 97);
+
+        // Plaintext mirror: sum-pool xq, conv with weight_div = 4 (the
+        // folded mean divisor), ReLU >> frac, FC.
+        let xq: Vec<i64> = input.data.iter().map(|&v| plan.quant_x(v)).collect();
+        let mut pooled = Vec::with_capacity(16);
+        for y in 0..4 {
+            for x in 0..4 {
+                let mut acc = 0i64;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        acc += xq[(2 * y + dy) * 8 + 2 * x + dx];
+                    }
+                }
+                pooled.push(acc);
+            }
+        }
+        let lin = super::super::conv::conv_flat_reference(
+            &pooled,
+            &netc.layers[1],
+            (1, 4, 4),
+            &plan,
+            4.0,
+        );
+        let act: Vec<i64> = lin.iter().map(|&v| (v.max(0)) >> plan.k.frac_bits).collect();
+        let logits = super::super::fc::fc_reference(&act, &netc.layers[3], &plan, 1.0);
+        let scale = plan.x.mul(plan.k);
+
+        for mode in [GazelleMode::Hybrid, GazelleMode::Gala] {
+            let mut runner = GazelleRunner::with_mode(ctx.clone(), net.clone(), plan, 96, mode)
+                .expect("avgpool network must compile");
+            let report = runner.infer(&input);
+            assert_eq!(report.per_step.len(), 3, "pool step must report too");
+            for (i, (&got, &want)) in report.logits.iter().zip(&logits).enumerate() {
+                let want_f = scale.dequantize(want);
+                assert!(
+                    (got - want_f).abs() < 1e-9,
+                    "{mode:?} logit {i}: got {got} want {want_f}"
+                );
+            }
         }
     }
 }

@@ -4,9 +4,12 @@
 //!   computation + PHE-based secret-share nonlinear recovery.
 //! * [`gazelle`] — the state-of-the-art baseline the paper compares to:
 //!   rotation-based packed linear algebra + garbled-circuit ReLU.
+//! * [`gala`] — the baseline's greedy-packing successor (GALA, NDSS'21):
+//!   block-combined FC and kernel-grouped conv that cut the dominant
+//!   rotation count, driven through the same GAZELLE runner.
 //! * [`transport`] — message framing, byte metering and a link cost model.
 
 pub mod cheetah;
-#[allow(missing_docs)] // legacy module: rustdoc coverage tracked in README
+pub mod gala;
 pub mod gazelle;
 pub mod transport;

@@ -227,8 +227,8 @@ fn secure_serving_two_concurrent_sessions_bit_exact() {
 }
 
 /// The engine API's reason to exist: the same seeded input through the
-/// `PlaintextQuantized`, `Cheetah`, `Gazelle`, and `CheetahNet` engines
-/// must produce the identical argmax — and the two CHEETAH deployments
+/// `PlaintextQuantized`, `Cheetah`, `Gazelle`, `Gala`, and `CheetahNet`
+/// engines must produce the identical argmax — and the two CHEETAH deployments
 /// (in-process and over TCP) must be **bit-exact** on logits, since with a
 /// pinned blinding seed the transport may not perturb a single bit (see
 /// CHANGES.md: exact-tie rounding follows the blind's sign, so
@@ -256,11 +256,13 @@ fn engines_cross_backend_agreement() {
     let mut quant = build(Backend::PlaintextQuantized);
     let mut cheetah = build(Backend::Cheetah);
     let mut gazelle = build(Backend::Gazelle);
+    let mut gala = build(Backend::Gala);
     let mut net_engine = build(Backend::CheetahNet); // self-hosted loopback server
 
     let q = quant.infer(&input).unwrap();
     let ch = cheetah.infer(&input).unwrap();
     let gz = gazelle.infer(&input).unwrap();
+    let ga = gala.infer(&input).unwrap();
     let nt = net_engine.infer(&input).unwrap();
 
     assert_eq!(ch.argmax, q.argmax, "cheetah vs quantized mirror");
@@ -272,11 +274,27 @@ fn engines_cross_backend_agreement() {
     // for bit.
     assert_eq!(ch.logits, nt.logits, "TCP transport perturbed the logits");
 
+    // GALA is the same GAZELLE runner with a cheaper linear algebra: the
+    // logits must be bit-identical to the hybrid baseline under the shared
+    // seed, with strictly fewer permutations (but still more than
+    // CHEETAH's zero).
+    assert_eq!(gz.logits, ga.logits, "GALA logits diverge from hybrid GAZELLE");
+    assert_eq!(gz.argmax, ga.argmax);
+
     // Section sanity: both protocol engines meter traffic; CHEETAH pays
-    // zero permutations while GAZELLE pays many.
+    // zero permutations while GAZELLE pays many and GALA strictly fewer.
     assert!(ch.online_bytes() > 0 && nt.online_bytes() > 0);
     assert_eq!(ch.ops.unwrap().perm, 0);
     assert!(gz.ops.unwrap().perm > 0);
+    let (gz_perm, ga_perm) = (gz.ops.unwrap().perm, ga.ops.unwrap().perm);
+    assert!(
+        ga_perm > 0 && ga_perm < gz_perm,
+        "gala perms {ga_perm} must be strictly below hybrid {gz_perm}"
+    );
+    assert!(
+        ga.traffic.unwrap().offline < gz.traffic.unwrap().offline,
+        "gala must ship less offline key material"
+    );
     assert!(nt.traffic.unwrap().offline > 0, "offline indicators metered over the wire");
 }
 
@@ -322,7 +340,7 @@ fn thread_sweep_is_bit_exact_across_backends() {
         engine.infer(&input).expect("inference").logits
     };
 
-    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::Gala, Backend::CheetahNet] {
         let reference = run(backend, 1);
         for threads in [2usize, 8] {
             let got = run(backend, threads);
@@ -381,7 +399,7 @@ fn batch_inference_matches_looped_at_every_thread_count() {
             .expect("engine build")
     };
 
-    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::CheetahNet] {
+    for backend in [Backend::Cheetah, Backend::Gazelle, Backend::Gala, Backend::CheetahNet] {
         // Reference: looped single-query inference, sequential.
         let mut looped = fresh_engine(backend, 1);
         let want: Vec<Vec<f64>> = inputs

@@ -5,11 +5,12 @@ Usage:
     bench_trend.py PREVIOUS.json CURRENT.json [--max-regression 0.15]
                    [--phe PREV_PHE.json CURR_PHE.json]
                    [--serve PREV_SERVE.json CURR_SERVE.json]
+                   [--micro PREV_MICRO.json CURR_MICRO.json]
 
 The JSON layout is what `bench_util::Table::write_json` emits: a `headers`
 list and `rows` of {header: string-cell} objects.
 
-Three schemas are gated:
+Four schemas are gated:
 
 * e2e (positional args): rows keyed by (network, framework, params, threads,
   batch); `params` defaults to "n4096p23" for artifacts that predate the
@@ -26,6 +27,10 @@ Three schemas are gated:
   stay comparable across the schema change — gated on `query_p50_ms` (the
   server-side online latency; the sessions=1000 reactor row is the C10K
   measuring stick).
+* micro (`--micro` pair): rows keyed by (op, variant), gated on the
+  counted `perm` column with **zero tolerance** — op counts are exact
+  integers, not timings, so any increase is a real algorithmic regression
+  and fails regardless of `--max-regression` (no noise exemption either).
 
 Exit codes: 0 pass / skipped (no previous artifact for that pair — first
 run on a branch, or an older artifact predating the phe bench); 1
@@ -84,6 +89,10 @@ def serve_key(row):
     )
 
 
+def micro_key(row):
+    return (row.get("op", ""), row.get("variant", ""))
+
+
 def metric_of(row, field):
     cell = row.get(field, "")
     try:
@@ -127,6 +136,39 @@ def compare(label, prev_path, curr_path, key_fn, metric_field, max_regression):
     return compared, regressions
 
 
+def compare_exact(label, prev_path, curr_path, key_fn, metric_field):
+    """Zero-tolerance integer gate: any increase in the counted metric is a
+    regression (no ratio threshold, no noise floor). Returns
+    (compared_row_count, regression_list) or None when the previous
+    artifact is missing."""
+    if not os.path.exists(prev_path):
+        print(f"[{label}] no previous artifact at {prev_path} — skipping trend gate")
+        return None
+    if not os.path.exists(curr_path):
+        print(f"error: current artifact {curr_path} missing", file=sys.stderr)
+        sys.exit(2)
+
+    prev = {key_fn(r): metric_of(r, metric_field) for r in load_rows(prev_path)}
+    curr = {key_fn(r): metric_of(r, metric_field) for r in load_rows(curr_path)}
+
+    regressions = []
+    compared = 0
+    for key, now in sorted(curr.items()):
+        before = prev.get(key)
+        if before is None or now is None:
+            continue
+        compared += 1
+        marker = ""
+        if now > before:
+            marker = "  << REGRESSION"
+            ratio = now / before if before > 0 else float("inf")
+            regressions.append((key, before, now, ratio))
+        print(
+            f"[{label}] {'/'.join(key):40s} {before:10.0f}    -> {now:10.0f}   {marker}"
+        )
+    return compared, regressions
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("previous")
@@ -149,6 +191,13 @@ def main():
         metavar=("PREV_SERVE", "CURR_SERVE"),
         help="additionally gate a BENCH_serve.json pair keyed by "
         "(sessions, mode, pool_depth, batch, net_sessions)",
+    )
+    ap.add_argument(
+        "--micro",
+        nargs=2,
+        metavar=("PREV_MICRO", "CURR_MICRO"),
+        help="additionally gate a BENCH_micro.json pair keyed by "
+        "(op, variant): exact integer `perm` counts, zero tolerance",
     )
     args = ap.parse_args()
 
@@ -214,6 +263,23 @@ def main():
                 return 1
             failures.extend(("serve", *r) for r in regressions)
 
+    if args.micro:
+        micro = compare_exact("micro", args.micro[0], args.micro[1], micro_key, "perm")
+        if micro is not None:
+            compared, regressions = micro
+            if compared == 0:
+                # Same policy as the other gates: both files existing but
+                # sharing zero (op, variant) keys is a rename, and the
+                # count gate must not go silently dead.
+                print(
+                    "error: micro artifacts share zero comparable rows — "
+                    "schema or key rename? The trend gate would otherwise "
+                    "be silently disabled.",
+                    file=sys.stderr,
+                )
+                return 1
+            failures.extend(("micro", *r) for r in regressions)
+
     if failures:
         print(
             f"\nFAIL: {len(failures)} row(s) regressed more than "
@@ -221,8 +287,10 @@ def main():
             file=sys.stderr,
         )
         for label, key, before, now, ratio in failures:
+            unit = "" if label == "micro" else " ms"
             print(
-                f"  [{label}] {'/'.join(key)}: {before:.3f} ms -> {now:.3f} ms ({ratio:.2f}x)",
+                f"  [{label}] {'/'.join(key)}: {before:.3f}{unit} -> "
+                f"{now:.3f}{unit} ({ratio:.2f}x)",
                 file=sys.stderr,
             )
         return 1
