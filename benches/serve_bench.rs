@@ -15,7 +15,16 @@
 //! Run: `cargo bench --bench serve_bench [-- --sessions 4] [-- --queries 2]
 //!       [-- --depth 4] [-- --net netA] [-- --threads 4] [-- --batch 8]
 //!       [-- --mode threads|reactor|both] [-- --net-sessions 4]
-//!       [-- --client-batch 8] [-- --stats]`
+//!       [-- --client-batch 8] [-- --stats] [-- --fault 11]
+//!       [-- --deadline-ms 30000]`
+//!
+//! `--fault <seed>` runs the primary sweep under deterministic fault
+//! injection on both sides of every socket (a fixed moderate
+//! [`cheetah::serve::FaultSpec`] derived from the seed): queries may then
+//! end in typed errors, and the `retries` / `evictions` / `error_rate`
+//! columns of `BENCH_serve.json` record how the robustness layer coped
+//! (they read 0/empty in fault-free runs, and the trend keys are
+//! unchanged). `--deadline-ms` sets the client per-round deadline.
 //!
 //! `--mode` selects the serving front (the `mode` column): the default
 //! thread-per-connection front, the readiness `reactor`
@@ -53,7 +62,7 @@ use cheetah::engine::{Backend, EngineBuilder, InferenceEngine};
 use cheetah::fixed::ScalePlan;
 use cheetah::nn::{Layer, Network, NetworkArch, SyntheticDigits, Tensor};
 use cheetah::phe::{Context, Params};
-use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
+use cheetah::serve::{FaultSpec, PoolConfig, SecureConfig, SecureServer};
 use cheetah::util::rng::SplitMix64;
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
@@ -93,6 +102,16 @@ fn p50(durations: &mut [Duration]) -> Duration {
 
 fn mode_name(reactor: bool) -> &'static str {
     if reactor { "reactor" } else { "threads" }
+}
+
+/// Current value of an obs counter (0 when absent or compiled out).
+fn counter(name: &str) -> i64 {
+    cheetah::obs::snapshot().get(name).map(|m| m.value).unwrap_or(0)
+}
+
+/// Idle + slow reactor evictions, summed.
+fn evictions_now() -> i64 {
+    counter("serve.reactor.idle_evictions") + counter("serve.reactor.slow_evictions")
 }
 
 /// Values scraped from the live stats endpoint while a cell's server is
@@ -139,6 +158,12 @@ struct Cell {
     online_bytes: u64,
     pool: (u64, u64, u64),
     scraped: Scraped,
+    /// Client reconnect-and-replay retries during this cell (obs delta).
+    retries: i64,
+    /// Reactor idle + slow evictions during this cell (obs delta).
+    evictions: i64,
+    /// Queries that ended in a typed error (nonzero only under `--fault`).
+    errored: usize,
 }
 
 fn main() {
@@ -160,6 +185,16 @@ fn main() {
     let net_sessions = args.get_usize("--net-sessions", 1);
     let client_batch = args.get_usize("--client-batch", 8).max(1);
     let stats = args.has("--stats");
+    let deadline_ms = args.get_usize("--deadline-ms", 30_000) as u64;
+    // A moderate fixed schedule: enough injected trouble that retries and
+    // evictions actually show up, low enough that most queries complete.
+    let fault: Option<FaultSpec> = args.get("--fault").map(|s| {
+        let seed: u64 = s.parse().expect("--fault takes a numeric seed");
+        FaultSpec::parse(&format!(
+            "seed={seed},disconnect=0.01,corrupt=0.005,short=0.2,delay=0.02:1"
+        ))
+        .expect("valid fault spec")
+    });
     // The endpoint serves the process-global obs snapshot; the secure
     // server under test runs in this process, so scraping it over HTTP
     // exercises the exact surface an operator curls in production.
@@ -214,6 +249,9 @@ fn main() {
         "reactor_sessions",
         "reactor_wakeups",
         "reactor_wq",
+        "retries",
+        "evictions",
+        "error_rate",
     ]);
     let record = |t: &mut Table, jt: &mut Table, c: Cell| {
         let m = mode_name(c.reactor);
@@ -249,6 +287,9 @@ fn main() {
             c.scraped.reactor_sessions.clone(),
             c.scraped.reactor_wakeups.clone(),
             c.scraped.reactor_wq.clone(),
+            c.retries.to_string(),
+            c.evictions.to_string(),
+            format!("{:.4}", c.errored as f64 / c.total_queries.max(1) as f64),
         ]);
     };
 
@@ -278,6 +319,7 @@ fn main() {
                     pool,
                     threads,
                     reactor,
+                    fault,
                     ..Default::default()
                 };
                 let server =
@@ -290,6 +332,8 @@ fn main() {
                 }
                 let addr = server.addr;
                 let input = input_for(&net, 23);
+                let retries0 = counter("serve.retries");
+                let evict0 = evictions_now();
 
                 let t0 = Instant::now();
                 let mut handles = Vec::new();
@@ -300,51 +344,86 @@ fn main() {
                         // Each session is a `CheetahNet` engine pointed at
                         // the shared server; `prepare()` is the measured
                         // setup (handshake + offline indicator transfer).
-                        let mut engine = EngineBuilder::new(Backend::CheetahNet)
+                        let mut b = EngineBuilder::new(Backend::CheetahNet)
                             .context(ctx)
                             .plan(plan)
                             .seed(9000 + s as u64)
                             .connect_to(addr)
-                            .build()
-                            .expect("secure engine");
+                            .net_deadline_ms(deadline_ms);
+                        if let Some(spec) = fault {
+                            b = b.net_fault(spec);
+                        }
+                        let mut engine = b.build().expect("secure engine");
+                        let per_session = if batch > 0 { batch } else { queries };
                         let t_setup = Instant::now();
-                        engine.prepare().expect("secure session setup");
+                        let prepared = engine.prepare();
                         let setup = t_setup.elapsed();
                         let mut bytes = 0u64;
-                        if batch > 0 {
-                            // One infer_batch call per session: the batch
-                            // path over a real socket (queries pipeline in
-                            // order on the session; per-query compute still
-                            // fans out).
-                            let inputs = vec![input.clone(); batch];
-                            for rep in engine.infer_batch(&inputs).expect("secure batch") {
-                                let traffic =
-                                    rep.traffic.expect("networked engine meters traffic");
-                                bytes += traffic.c2s + traffic.s2c;
+                        let mut errored = 0usize;
+                        match prepared {
+                            Err(e) => {
+                                // Under injection a session may fail to come
+                                // up at all — typed, counted, not fatal.
+                                assert!(fault.is_some(), "secure session setup: {e}");
+                                errored = per_session;
                             }
-                        } else {
-                            for _ in 0..queries {
-                                let rep = engine.infer(&input).expect("secure inference");
-                                let traffic =
-                                    rep.traffic.expect("networked engine meters traffic");
-                                bytes += traffic.c2s + traffic.s2c;
+                            Ok(_) if batch > 0 => {
+                                // One infer_batch call per session: the batch
+                                // path over a real socket (queries pipeline in
+                                // order on the session; per-query compute still
+                                // fans out).
+                                let inputs = vec![input.clone(); batch];
+                                match engine.infer_batch(&inputs) {
+                                    Ok(reps) => {
+                                        for rep in reps {
+                                            let traffic = rep
+                                                .traffic
+                                                .expect("networked engine meters traffic");
+                                            bytes += traffic.c2s + traffic.s2c;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        assert!(fault.is_some(), "secure batch: {e}");
+                                        errored = batch;
+                                    }
+                                }
+                            }
+                            Ok(_) => {
+                                for _ in 0..queries {
+                                    match engine.infer(&input) {
+                                        Ok(rep) => {
+                                            let traffic = rep
+                                                .traffic
+                                                .expect("networked engine meters traffic");
+                                            bytes += traffic.c2s + traffic.s2c;
+                                        }
+                                        Err(e) => {
+                                            assert!(fault.is_some(), "secure inference: {e}");
+                                            errored += 1;
+                                        }
+                                    }
+                                }
                             }
                         }
-                        (setup, bytes)
+                        (setup, bytes, errored)
                     }));
                 }
-                let (mut setups, online_bytes): (Vec<Duration>, u64) = handles
+                let (mut setups, online_bytes, errored): (Vec<Duration>, u64, usize) = handles
                     .into_iter()
                     .map(|h| h.join().expect("client thread"))
-                    .fold((Vec::new(), 0), |(mut v, b), (s, bytes)| {
+                    .fold((Vec::new(), 0, 0), |(mut v, b, n), (s, bytes, e)| {
                         v.push(s);
-                        (v, b + bytes)
+                        (v, b + bytes, n + e)
                     });
                 let wall = t0.elapsed();
 
                 let total = sessions * if batch > 0 { batch } else { queries };
                 let m = server.metrics.summary();
-                assert_eq!(m.requests as usize, total, "metered queries mismatch");
+                if fault.is_none() {
+                    // Retries and error paths change the request count, so
+                    // the exact meter only holds fault-free.
+                    assert_eq!(m.requests as usize, total, "metered queries mismatch");
+                }
                 let ps = server.pool_stats();
                 // Scrape while the server and its pool are still up.
                 let scraped = scrape(&stats_srv);
@@ -361,6 +440,9 @@ fn main() {
                     online_bytes,
                     pool: (ps.produced, ps.pool_hits, ps.inline_builds),
                     scraped,
+                    retries: counter("serve.retries") - retries0,
+                    evictions: evictions_now() - evict0,
+                    errored,
                 };
                 record(&mut t, &mut jt, cell);
                 server.shutdown();
@@ -460,6 +542,9 @@ fn main() {
                     online_bytes,
                     pool: (0, 0, 0),
                     scraped,
+                    retries: 0,
+                    evictions: 0,
+                    errored: 0,
                 };
                 record(&mut t, &mut jt, cell);
                 server.shutdown();
@@ -524,6 +609,9 @@ fn main() {
                     online_bytes,
                     pool: (0, 0, 0),
                     scraped,
+                    retries: 0,
+                    evictions: 0,
+                    errored: 0,
                 };
                 record(&mut t, &mut jt, cell);
                 drop(engine);

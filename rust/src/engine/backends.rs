@@ -25,7 +25,7 @@ use crate::phe::Context;
 use crate::protocol::cheetah::CheetahRunner;
 use crate::protocol::gazelle::{GazelleMode, GazelleRunner};
 use crate::protocol::transport::LinkModel;
-use crate::serve::{CheetahNetClient, NetReport, SecureConfig, SecureServer};
+use crate::serve::{CheetahNetClient, NetClientOpts, NetReport, SecureConfig, SecureServer};
 use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -492,6 +492,7 @@ pub struct CheetahNetEngine {
     target: NetTarget,
     server: Option<SecureServer>,
     clients: Vec<CheetahNetClient>,
+    opts: NetClientOpts,
     offline_bytes: u64,
     last: Option<EngineReport>,
 }
@@ -514,9 +515,17 @@ impl CheetahNetEngine {
             target,
             server: None,
             clients: Vec::new(),
+            opts: NetClientOpts::default(),
             offline_bytes: 0,
             last: None,
         }
+    }
+
+    /// Override the client robustness options (per-round deadline, retry
+    /// budget, fault injection) every pooled session connects with.
+    pub fn net_opts(mut self, opts: NetClientOpts) -> Self {
+        self.opts = opts;
+        self
     }
 
     /// The bound address of the self-hosted server (after `prepare`).
@@ -579,8 +588,13 @@ impl InferenceEngine for CheetahNetEngine {
         self.offline_bytes = 0;
         for k in 0..self.sessions {
             let client_seed = client_session_seed(self.seed, k);
-            let client =
-                CheetahNetClient::connect(self.ctx.clone(), self.plan, &addr, client_seed)?;
+            let client = CheetahNetClient::connect_with(
+                self.ctx.clone(),
+                self.plan,
+                &addr,
+                client_seed,
+                self.opts,
+            )?;
             self.offline_bytes += client.offline_bytes();
             self.clients.push(client);
         }
@@ -642,6 +656,7 @@ impl InferenceEngine for CheetahNetEngine {
                             .map(|x| {
                                 client
                                     .infer(x)
+                                    .map_err(std::io::Error::from)
                                     .map(|r| Self::report_for(&r, offline_bytes, params))
                             })
                             .collect()
@@ -676,5 +691,14 @@ impl Drop for CheetahNetEngine {
 impl From<std::io::Error> for EngineError {
     fn from(e: std::io::Error) -> Self {
         EngineError::Io(e)
+    }
+}
+
+// EngineError <- typed network-client error: the engine API keeps one I/O
+// error channel, so the typed error rides in as its io::Error rendering
+// (retries already happened inside the client).
+impl From<crate::serve::NetError> for EngineError {
+    fn from(e: crate::serve::NetError) -> Self {
+        EngineError::Io(std::io::Error::from(e))
     }
 }

@@ -48,7 +48,7 @@ use crate::plan::{ParamsChoice, Plan, PlanError};
 use crate::protocol::cheetah::{ProtocolSpec, SpecError};
 use crate::protocol::gazelle::GazelleMode;
 use crate::protocol::transport::LinkModel;
-use crate::serve::{PoolConfig, SecureConfig};
+use crate::serve::{FaultSpec, NetClientOpts, PoolConfig, SecureConfig};
 use std::net::SocketAddr;
 use std::sync::Arc;
 use std::time::Duration;
@@ -269,6 +269,8 @@ pub struct EngineBuilder {
     secure: Option<SecureConfig>,
     threads: Option<usize>,
     net_sessions: usize,
+    net_deadline_ms: Option<u64>,
+    net_fault: Option<FaultSpec>,
 }
 
 impl EngineBuilder {
@@ -290,6 +292,8 @@ impl EngineBuilder {
             secure: None,
             threads: None,
             net_sessions: 1,
+            net_deadline_ms: None,
+            net_fault: None,
         }
     }
 
@@ -395,6 +399,23 @@ impl EngineBuilder {
     /// pool size.
     pub fn net_sessions(mut self, n: usize) -> Self {
         self.net_sessions = n.max(1);
+        self
+    }
+
+    /// `CheetahNet`: per-round client deadline in milliseconds (default
+    /// 30 000). Reads that exceed it fail the attempt with a typed
+    /// deadline error, which the client's bounded reconnect-and-replay
+    /// loop then absorbs — see [`crate::serve::NetClientOpts`].
+    pub fn net_deadline_ms(mut self, ms: u64) -> Self {
+        self.net_deadline_ms = Some(ms);
+        self
+    }
+
+    /// `CheetahNet`: inject deterministic client-side socket faults
+    /// (chaos/robustness testing; see [`crate::serve::FaultSpec`]).
+    /// Defaults to the `CHEETAH_FAULT` environment spec, or no faults.
+    pub fn net_fault(mut self, spec: FaultSpec) -> Self {
+        self.net_fault = Some(spec);
         self
     }
 
@@ -518,13 +539,17 @@ impl EngineBuilder {
                         (ctx, target)
                     }
                 };
-                Box::new(CheetahNetEngine::new(
-                    ctx,
-                    self.plan,
-                    self.seed,
-                    target,
-                    self.net_sessions,
-                ))
+                let mut opts = NetClientOpts::default();
+                if let Some(ms) = self.net_deadline_ms {
+                    opts.deadline = Duration::from_millis(ms);
+                }
+                if let Some(spec) = self.net_fault {
+                    opts.fault = Some(spec);
+                }
+                Box::new(
+                    CheetahNetEngine::new(ctx, self.plan, self.seed, target, self.net_sessions)
+                        .net_opts(opts),
+                )
             }
         };
         Ok(match threads {

@@ -13,24 +13,47 @@ pub type Wire = usize;
 /// `And` requires a garbled table.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Gate {
-    Xor { a: Wire, b: Wire, out: Wire },
-    And { a: Wire, b: Wire, out: Wire },
+    /// `out = a ⊕ b` — free under free-XOR garbling.
+    Xor {
+        /// Left input wire.
+        a: Wire,
+        /// Right input wire.
+        b: Wire,
+        /// Output wire.
+        out: Wire,
+    },
+    /// `out = a ∧ b` — one 4-row garbled table.
+    And {
+        /// Left input wire.
+        a: Wire,
+        /// Right input wire.
+        b: Wire,
+        /// Output wire.
+        out: Wire,
+    },
 }
 
 /// A two-party circuit: garbler inputs, evaluator inputs, one constant-one
 /// wire, gates, outputs.
 #[derive(Clone, Debug)]
 pub struct Circuit {
+    /// Total wire count (inputs, constant, and every gate output).
     pub n_wires: usize,
+    /// Wires carrying the garbler's input bits (LSB first per block).
     pub garbler_inputs: Vec<Wire>,
+    /// Wires carrying the evaluator's input bits (LSB first per block).
     pub evaluator_inputs: Vec<Wire>,
     /// The constant-true wire (fed by the garbler).
     pub one: Wire,
+    /// Gates in topological order.
     pub gates: Vec<Gate>,
+    /// Output wires, in output-bit order.
     pub outputs: Vec<Wire>,
 }
 
 impl Circuit {
+    /// Number of AND gates — the unit garbled-table size and GC traffic
+    /// scale with (XORs are free).
     pub fn num_and_gates(&self) -> usize {
         self.gates.iter().filter(|g| matches!(g, Gate::And { .. })).count()
     }
@@ -65,6 +88,7 @@ pub struct Builder {
 }
 
 impl Builder {
+    /// Empty circuit with just the constant-one wire (wire 0).
     pub fn new() -> Self {
         // Wire 0 is the constant-one wire.
         Self { n_wires: 1, garbler_inputs: vec![], evaluator_inputs: vec![], one: 0, gates: vec![] }
@@ -76,12 +100,14 @@ impl Builder {
         w
     }
 
+    /// Allocate one garbler input wire.
     pub fn garbler_input(&mut self) -> Wire {
         let w = self.fresh();
         self.garbler_inputs.push(w);
         w
     }
 
+    /// Allocate one evaluator input wire.
     pub fn evaluator_input(&mut self) -> Wire {
         let w = self.fresh();
         self.evaluator_inputs.push(w);
@@ -93,26 +119,31 @@ impl Builder {
         (0..n).map(|_| self.garbler_input()).collect()
     }
 
+    /// `n`-bit evaluator input vector (LSB first).
     pub fn evaluator_inputs(&mut self, n: usize) -> Vec<Wire> {
         (0..n).map(|_| self.evaluator_input()).collect()
     }
 
+    /// The constant-true wire.
     pub fn one(&self) -> Wire {
         self.one
     }
 
+    /// `a ⊕ b` — free.
     pub fn xor(&mut self, a: Wire, b: Wire) -> Wire {
         let out = self.fresh();
         self.gates.push(Gate::Xor { a, b, out });
         out
     }
 
+    /// `a ∧ b` — 1 AND (one garbled table).
     pub fn and(&mut self, a: Wire, b: Wire) -> Wire {
         let out = self.fresh();
         self.gates.push(Gate::And { a, b, out });
         out
     }
 
+    /// `¬a` — free (XOR with the constant-one wire).
     pub fn not(&mut self, a: Wire) -> Wire {
         self.xor(a, self.one)
     }
@@ -187,6 +218,7 @@ impl Builder {
         v.iter().map(|&b| self.and(g, b)).collect()
     }
 
+    /// Finish the netlist, naming the output wires.
     pub fn build(self, outputs: Vec<Wire>) -> Circuit {
         Circuit {
             n_wires: self.n_wires,
@@ -205,11 +237,12 @@ impl Default for Builder {
     }
 }
 
-/// Little-endian bit decomposition helpers.
+/// Little-endian bit decomposition: the low `n` bits of `x`.
 pub fn to_bits(x: u64, n: usize) -> Vec<bool> {
     (0..n).map(|i| (x >> i) & 1 == 1).collect()
 }
 
+/// Inverse of [`to_bits`]: reassemble a little-endian bit vector.
 pub fn from_bits(bits: &[bool]) -> u64 {
     bits.iter().rev().fold(0u64, |acc, &b| (acc << 1) | b as u64)
 }

@@ -14,8 +14,8 @@
 //! bytes are accounted analytically in [`ot_bytes_per_bit`].
 
 use super::circuit::{Circuit, Gate};
+use super::sha256::Sha256;
 use crate::util::rng::ChaCha20Rng;
-use sha2::{Digest, Sha256};
 
 /// A 128-bit wire label.
 pub type Label = [u8; 16];
@@ -71,6 +71,7 @@ impl GarbledCircuit {
 
 /// Garbler state: all wire zero-labels plus Δ.
 pub struct Garbler {
+    /// The global free-XOR offset Δ (LSB forced to 1 for point-and-permute).
     pub delta: Label,
     /// Zero-label of every wire.
     pub w0: Vec<Label>,

@@ -14,6 +14,7 @@
 pub mod circuit;
 pub mod garble;
 pub mod relu;
+pub mod sha256;
 
 pub use circuit::{build_relu_mod_p, Builder, Circuit, Gate};
 pub use garble::{evaluate, Garbler, GarbledCircuit};

@@ -19,16 +19,20 @@ use std::time::{Duration, Instant};
 /// Cost/result report for one batched GC ReLU execution.
 #[derive(Clone, Debug, Default)]
 pub struct GcReluReport {
+    /// Time spent garbling (offline phase).
     pub garble_time: Duration,
+    /// Time spent evaluating (online phase).
     pub eval_time: Duration,
     /// Garbled tables + decode info (offline transfer).
     pub offline_bytes: u64,
     /// Input labels + OT traffic + masked outputs (online transfer).
     pub online_bytes: u64,
+    /// Total AND gates garbled across the batch.
     pub and_gates_total: u64,
 }
 
 impl GcReluReport {
+    /// Accumulate another execution's costs into this report.
     pub fn merge(&mut self, o: &GcReluReport) {
         self.garble_time += o.garble_time;
         self.eval_time += o.eval_time;
@@ -41,19 +45,25 @@ impl GcReluReport {
 /// Batched GC ReLU over shares mod `p`, with built-in `>> shift`
 /// requantization and mod-p output re-sharing.
 pub struct GcRelu {
+    /// The share modulus (the HE plaintext prime).
     pub p: u64,
+    /// Bits per share: `⌈log₂ p⌉`.
     pub ell: usize,
+    /// Built-in right-shift requantization applied to positive outputs.
     pub shift: usize,
     circuit: Circuit,
 }
 
 impl GcRelu {
+    /// Build the protocol instance (compiles the ReLU circuit once; it is
+    /// re-garbled per element with fresh labels).
     pub fn new(p: u64, shift: usize) -> Self {
         let circuit = build_relu_mod_p(p, shift);
         let ell = 64 - p.leading_zeros() as usize;
         Self { p, ell, shift, circuit }
     }
 
+    /// AND gates per element (the unit GC cost scales with).
     pub fn and_gates_per_relu(&self) -> usize {
         self.circuit.num_and_gates()
     }

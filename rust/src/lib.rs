@@ -69,7 +69,6 @@ pub mod coordinator;
 pub mod engine;
 #[allow(missing_docs)]
 pub mod fixed;
-#[allow(missing_docs)]
 pub mod gc;
 pub mod nn;
 pub mod obs;

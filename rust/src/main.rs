@@ -10,6 +10,9 @@
 //!                       [--reactor]  (readiness event loop instead of thread-per-connection; unix)
 //!                       [--max-sessions N]  (reactor connection cap; default 4096)
 //!                       [--stats-addr A]  (live telemetry endpoint; e.g. 127.0.0.1:9911)
+//!                       [--drain-timeout-ms N]  (graceful-drain bound at shutdown; default 5000)
+//!                       [--fault SPEC]  (deterministic fault injection, e.g. seed=7,disconnect=0.01;
+//!                                        also readable from the CHEETAH_FAULT env var)
 //! cheetah infer         [--backend B[,B...]] [--model netA] [--eps E]  inference through the unified engine API;
 //!                       [--label D] [--seed S] [--threads T]           B ∈ {plaintext-float, plaintext-quantized,
 //!                       [--params auto|default|big]                    cheetah, gazelle, gala, cheetah-net, all}
@@ -37,7 +40,7 @@ use cheetah::nn::{Network, NetworkArch, SyntheticDigits};
 use cheetah::phe::Context;
 use cheetah::plan::{ParamsChoice, Plan};
 use cheetah::runtime::load_trained_network;
-use cheetah::serve::{PoolConfig, SecureConfig, SecureServer};
+use cheetah::serve::{FaultSpec, PoolConfig, SecureConfig, SecureServer};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -140,6 +143,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             // sockets instead of one reader thread per connection.
             let reactor = has("--reactor");
             let max_sessions: usize = arg("--max-sessions", "4096").parse()?;
+            let drain_timeout_ms: u64 = arg("--drain-timeout-ms", "5000").parse()?;
+            // Fault injection: explicit flag wins; otherwise the
+            // CHEETAH_FAULT env var (SecureConfig's default) applies.
+            let fault_arg = arg("--fault", "");
+            let fault = if fault_arg.is_empty() {
+                FaultSpec::from_env()
+            } else {
+                Some(
+                    FaultSpec::parse(&fault_arg)
+                        .ok_or_else(|| format!("malformed --fault spec `{fault_arg}`"))?,
+                )
+            };
+            if let Some(spec) = &fault {
+                println!("fault injection ON: {spec:?}");
+            }
             let net = model_or_fallback(&model);
             let name = net.name.clone();
             let ctx = Arc::new(Context::new(resolve_params(&net)?));
@@ -151,6 +169,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 threads,
                 reactor,
                 max_sessions,
+                drain_timeout: Duration::from_millis(drain_timeout_ms),
+                fault,
                 ..SecureConfig::default()
             };
             let server =

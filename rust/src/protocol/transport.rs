@@ -196,7 +196,7 @@ pub fn read_frame_limited<R: Read>(
     let mut hdr = [0u8; 5];
     r.read_exact(&mut hdr)?;
     let tag = hdr[0];
-    let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+    let len = u32::from_le_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
     if len > max_len {
         return Err(FrameError::TooLarge { len, max: max_len });
     }

@@ -1,0 +1,455 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Production serving has to survive an unreliable world — mid-frame
+//! disconnects, partial writes, flipped bytes, stalls, kernels refusing
+//! accepts — but reproducing those conditions by hand is hopeless. This
+//! module makes them a *seeded, replayable input*: a [`FaultSpec`] describes
+//! per-operation fault probabilities, a [`FaultPlan`] derives an independent
+//! deterministic schedule per connection, and [`FaultyStream`] wraps any
+//! `Read + Write` transport (both server fronts and
+//! [`crate::serve::CheetahNetClient`] use it) injecting the scheduled faults
+//! at the byte-stream boundary, where real networks misbehave.
+//!
+//! The whole subsystem is off by default: a [`FaultyStream`] built with
+//! [`FaultyStream::passthrough`] carries `None` for its plan and every I/O
+//! call is a direct delegation to the inner stream — no RNG draw, no branch
+//! on probabilities — so the online-path benchmarks are unaffected unless
+//! `CHEETAH_FAULT` (or `SecureConfig.fault` / `--fault`) arms it.
+//!
+//! Spec grammar (comma-separated `key=value`):
+//!
+//! ```text
+//! CHEETAH_FAULT="seed=42,disconnect=0.02,corrupt=0.01,short=0.25,delay=0.05:2,reset=0.01,panic=0.02"
+//! ```
+//!
+//! | key | meaning |
+//! |-----|---------|
+//! | `seed=N`        | base seed for every derived schedule (required for reproducibility; defaults to 1) |
+//! | `disconnect=P`  | per-I/O-call probability of a hard connection drop |
+//! | `corrupt=P`     | per-I/O-call probability of flipping one bit in the transferred bytes |
+//! | `short=P`       | per-I/O-call probability of truncating the transfer (partial read/write) |
+//! | `delay=P[:MS]`  | per-I/O-call probability of sleeping `MS` (default 1) milliseconds |
+//! | `reset=P`       | per-accept probability of resetting the connection before serving it |
+//! | `panic=P`       | per-job probability of a worker panic (exercises `catch_unwind` isolation) |
+//!
+//! Every injected fault ticks an `serve.faults.*` telemetry counter, so a
+//! chaos run's schedule is observable from the stats endpoint.
+
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::rng::SplitMix64;
+
+/// A seeded description of which faults to inject, and how often.
+///
+/// Probabilities are per I/O call (reads/writes), per accepted connection
+/// (`reset`), or per worker job (`panic`). All-zero probabilities are legal
+/// and equivalent to no injection, but the wrapper still draws from the
+/// schedule RNG — use `None` instead of a zero spec on hot paths.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// Base seed; every per-connection [`FaultPlan`] is derived from it.
+    pub seed: u64,
+    /// Probability of a hard disconnect per I/O call.
+    pub p_disconnect: f64,
+    /// Probability of flipping one bit in a transfer.
+    pub p_corrupt: f64,
+    /// Probability of a short (partial) read or write.
+    pub p_short: f64,
+    /// Probability of an injected delay per I/O call.
+    pub p_delay: f64,
+    /// Length of an injected delay, in milliseconds.
+    pub delay_ms: u64,
+    /// Probability of resetting a connection at accept time.
+    pub p_reset: f64,
+    /// Probability of panicking a worker at job start.
+    pub p_panic: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 1,
+            p_disconnect: 0.0,
+            p_corrupt: 0.0,
+            p_short: 0.0,
+            p_delay: 0.0,
+            delay_ms: 1,
+            p_reset: 0.0,
+            p_panic: 0.0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Parse the `key=value,...` grammar (see the module docs). Returns
+    /// `None` on any unknown key or unparseable value — a misspelled chaos
+    /// config should fail loudly at startup, not silently run fault-free.
+    pub fn parse(s: &str) -> Option<FaultSpec> {
+        let mut spec = FaultSpec::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once('=')?;
+            let prob = |v: &str| -> Option<f64> {
+                let p: f64 = v.parse().ok()?;
+                (0.0..=1.0).contains(&p).then_some(p)
+            };
+            match key.trim() {
+                "seed" => spec.seed = value.trim().parse().ok()?,
+                "disconnect" => spec.p_disconnect = prob(value)?,
+                "corrupt" => spec.p_corrupt = prob(value)?,
+                "short" => spec.p_short = prob(value)?,
+                "reset" => spec.p_reset = prob(value)?,
+                "panic" => spec.p_panic = prob(value)?,
+                "delay" => match value.split_once(':') {
+                    Some((p, ms)) => {
+                        spec.p_delay = prob(p)?;
+                        spec.delay_ms = ms.trim().parse().ok()?;
+                    }
+                    None => spec.p_delay = prob(value)?,
+                },
+                _ => return None,
+            }
+        }
+        Some(spec)
+    }
+
+    /// The process-wide spec from `CHEETAH_FAULT`, if set and well-formed.
+    pub fn from_env() -> Option<FaultSpec> {
+        std::env::var("CHEETAH_FAULT").ok().and_then(|s| FaultSpec::parse(&s))
+    }
+}
+
+/// Shared per-server (or per-client) fault source: hands out one derived
+/// [`FaultPlan`] per connection and owns the accept-reset / worker-panic
+/// schedules, which are not tied to a single stream.
+#[derive(Debug)]
+pub struct FaultState {
+    spec: FaultSpec,
+    next_plan: AtomicU64,
+    /// Schedule for stream-independent faults (accept resets, worker
+    /// panics). Lock-poisoning is impossible here (no panics while held),
+    /// but recover anyway rather than unwrap.
+    control: Mutex<SplitMix64>,
+}
+
+impl FaultState {
+    /// A fault source for `spec`.
+    pub fn new(spec: FaultSpec) -> Self {
+        FaultState {
+            spec,
+            next_plan: AtomicU64::new(0),
+            control: Mutex::new(SplitMix64::new(spec.seed ^ 0xC0_17_20_11)),
+        }
+    }
+
+    /// The spec this state was built from.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Derive the next per-connection fault schedule. Each call yields an
+    /// independent, reproducible stream: schedule `i` of seed `s` is the
+    /// same in every run.
+    pub fn next_plan(&self) -> FaultPlan {
+        let index = self.next_plan.fetch_add(1, Ordering::Relaxed);
+        FaultPlan::derive(self.spec, index)
+    }
+
+    /// Roll the accept-time reset fault (drop the connection unserved).
+    pub fn roll_accept_reset(&self) -> bool {
+        self.roll_control(self.spec.p_reset, "serve.faults.reset")
+    }
+
+    /// Roll the worker-panic fault (the worker loop panics at job start;
+    /// `catch_unwind` isolation turns it into a typed `ERROR` frame).
+    pub fn roll_worker_panic(&self) -> bool {
+        self.roll_control(self.spec.p_panic, "serve.faults.panic")
+    }
+
+    fn roll_control(&self, p: f64, counter: &'static str) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let mut rng = match self.control.lock() {
+            Ok(g) => g,
+            Err(e) => e.into_inner(),
+        };
+        let hit = rng.next_f64() < p;
+        if hit {
+            crate::obs::inc(counter);
+        }
+        hit
+    }
+}
+
+/// A deterministic per-connection fault schedule (see [`FaultState`]).
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: SplitMix64,
+    dead: bool,
+}
+
+impl FaultPlan {
+    /// Schedule `index` of `spec` — the same `(seed, index)` pair always
+    /// yields the same fault sequence.
+    pub fn derive(spec: FaultSpec, index: u64) -> FaultPlan {
+        // Domain-separate the per-plan seed with a SplitMix64-style step so
+        // consecutive indices give uncorrelated streams.
+        let salt = index.wrapping_mul(0x9e37_79b9_7f4a_7c15).wrapping_add(0xFA_17_57_4A);
+        FaultPlan { spec, rng: SplitMix64::new(spec.seed ^ salt), dead: false }
+    }
+
+    fn roll(&mut self, p: f64) -> bool {
+        p > 0.0 && self.rng.next_f64() < p
+    }
+
+    fn injected_disconnect(kind: io::ErrorKind) -> io::Error {
+        io::Error::new(kind, "injected fault: connection dropped")
+    }
+}
+
+/// A transport wrapper that injects the faults scheduled by a [`FaultPlan`].
+///
+/// With no plan ([`FaultyStream::passthrough`]) every call delegates
+/// directly to the inner stream — the wrapper is a no-op and costs one
+/// `Option` check per I/O call.
+#[derive(Debug)]
+pub struct FaultyStream<S> {
+    inner: S,
+    plan: Option<FaultPlan>,
+}
+
+impl<S> FaultyStream<S> {
+    /// Wrap `inner` with no fault injection (pure delegation).
+    pub fn passthrough(inner: S) -> Self {
+        FaultyStream { inner, plan: None }
+    }
+
+    /// Wrap `inner`, injecting faults when `plan` is `Some`.
+    pub fn new(inner: S, plan: Option<FaultPlan>) -> Self {
+        FaultyStream { inner, plan }
+    }
+
+    /// The wrapped stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    /// The wrapped stream, mutably.
+    pub fn get_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    /// Unwrap, discarding the fault schedule.
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Delay / disconnect / short-transfer rolls shared by reads and
+    /// writes. Returns `Err` on an injected disconnect, otherwise the
+    /// transfer-length cap (`None` = full length).
+    fn pre_op(&mut self, len: usize, kind: io::ErrorKind) -> io::Result<Option<usize>> {
+        let Some(plan) = &mut self.plan else { return Ok(None) };
+        if plan.dead {
+            return Err(FaultPlan::injected_disconnect(kind));
+        }
+        if plan.roll(plan.spec.p_delay) {
+            crate::obs::inc("serve.faults.delay");
+            std::thread::sleep(Duration::from_millis(plan.spec.delay_ms));
+        }
+        if plan.roll(plan.spec.p_disconnect) {
+            crate::obs::inc("serve.faults.disconnect");
+            plan.dead = true;
+            return Err(FaultPlan::injected_disconnect(kind));
+        }
+        if len > 1 && plan.roll(plan.spec.p_short) {
+            crate::obs::inc("serve.faults.short");
+            let cap = 1 + plan.rng.gen_range(len as u64 - 1) as usize;
+            return Ok(Some(cap));
+        }
+        Ok(None)
+    }
+
+    fn roll_corrupt(&mut self, n: usize) -> Option<(usize, u8)> {
+        let plan = self.plan.as_mut()?;
+        if n == 0 || !plan.roll(plan.spec.p_corrupt) {
+            return None;
+        }
+        crate::obs::inc("serve.faults.corrupt");
+        let idx = plan.rng.gen_range(n as u64) as usize;
+        let mask = 1u8 << plan.rng.gen_range(8);
+        Some((idx, mask))
+    }
+}
+
+impl<S: Read> Read for FaultyStream<S> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.plan.is_none() {
+            return self.inner.read(buf);
+        }
+        let cap = self.pre_op(buf.len(), io::ErrorKind::ConnectionReset)?;
+        let window = cap.unwrap_or(buf.len()).min(buf.len());
+        let n = self.inner.read(&mut buf[..window])?;
+        if let Some((idx, mask)) = self.roll_corrupt(n) {
+            buf[idx] ^= mask;
+        }
+        Ok(n)
+    }
+}
+
+impl<S: Write> Write for FaultyStream<S> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        if self.plan.is_none() {
+            return self.inner.write(buf);
+        }
+        let cap = self.pre_op(buf.len(), io::ErrorKind::BrokenPipe)?;
+        let window = cap.unwrap_or(buf.len()).min(buf.len());
+        match self.roll_corrupt(window) {
+            Some((idx, mask)) => {
+                // Corrupt a copy so the caller's buffer (which it may
+                // retry from) is untouched — only the wire sees the flip.
+                let mut chunk = buf[..window].to_vec();
+                chunk[idx] ^= mask;
+                self.inner.write(&chunk)
+            }
+            None => self.inner.write(&buf[..window]),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(unix)]
+impl<S: std::os::unix::io::AsRawFd> std::os::unix::io::AsRawFd for FaultyStream<S> {
+    fn as_raw_fd(&self) -> std::os::unix::io::RawFd {
+        self.inner.as_raw_fd()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_full_spec_and_rejects_garbage() {
+        let spec = FaultSpec::parse(
+            "seed=42,disconnect=0.02,corrupt=0.01,short=0.25,delay=0.05:2,reset=0.01,panic=0.02",
+        )
+        .unwrap();
+        assert_eq!(spec.seed, 42);
+        assert_eq!(spec.p_disconnect, 0.02);
+        assert_eq!(spec.p_corrupt, 0.01);
+        assert_eq!(spec.p_short, 0.25);
+        assert_eq!(spec.p_delay, 0.05);
+        assert_eq!(spec.delay_ms, 2);
+        assert_eq!(spec.p_reset, 0.01);
+        assert_eq!(spec.p_panic, 0.02);
+
+        // Bare delay probability keeps the default 1 ms.
+        let spec = FaultSpec::parse("seed=7,delay=0.5").unwrap();
+        assert_eq!((spec.p_delay, spec.delay_ms), (0.5, 1));
+
+        assert!(FaultSpec::parse("seed=1,bogus=0.5").is_none());
+        assert!(FaultSpec::parse("disconnect=1.5").is_none());
+        assert!(FaultSpec::parse("disconnect").is_none());
+        assert!(FaultSpec::parse("seed=notanumber").is_none());
+    }
+
+    #[test]
+    fn passthrough_wrapper_is_bit_exact() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let mut s = FaultyStream::passthrough(Cursor::new(data.clone()));
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).unwrap();
+        assert_eq!(out, data);
+
+        let mut w = FaultyStream::passthrough(Vec::new());
+        w.write_all(&data).unwrap();
+        assert_eq!(w.into_inner(), data);
+    }
+
+    /// The same `(seed, index)` pair must produce the identical fault
+    /// schedule; different indices must diverge.
+    #[test]
+    fn plans_are_deterministic_per_index() {
+        let spec =
+            FaultSpec::parse("seed=9,disconnect=0.1,corrupt=0.2,short=0.4,delay=0.1:0").unwrap();
+        let run = |index: u64| {
+            let mut s = FaultyStream::new(
+                Cursor::new(vec![0u8; 64 * 1024]),
+                Some(FaultPlan::derive(spec, index)),
+            );
+            let mut trace = Vec::new();
+            let mut buf = [0u8; 512];
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) => break,
+                    Ok(n) => trace.push((n as i64, buf[..n].iter().map(|&b| b as u64).sum::<u64>())),
+                    Err(_) => {
+                        trace.push((-1, 0));
+                        break;
+                    }
+                }
+            }
+            trace
+        };
+        assert_eq!(run(3), run(3), "same index must replay the same schedule");
+        assert_ne!(run(3), run(4), "distinct indices must give distinct schedules");
+    }
+
+    #[test]
+    fn disconnect_is_sticky() {
+        let spec = FaultSpec::parse("seed=5,disconnect=1").unwrap();
+        let mut s =
+            FaultyStream::new(Cursor::new(vec![1u8; 16]), Some(FaultPlan::derive(spec, 0)));
+        let mut buf = [0u8; 4];
+        assert!(s.read(&mut buf).is_err());
+        assert!(s.read(&mut buf).is_err(), "a dropped connection stays dropped");
+        let err = s.write(&[1, 2, 3]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn short_writes_truncate_but_never_fabricate() {
+        let spec = FaultSpec::parse("seed=11,short=1").unwrap();
+        let mut s = FaultyStream::new(Vec::new(), Some(FaultPlan::derive(spec, 0)));
+        let n = s.write(&[9u8; 100]).unwrap();
+        assert!(n >= 1 && n < 100, "short write must land in [1, len): got {n}");
+        assert_eq!(s.get_ref().len(), n);
+        // A 1-byte write cannot be shortened.
+        assert_eq!(s.write(&[7u8]).unwrap(), 1);
+    }
+
+    #[test]
+    fn corrupt_write_flips_exactly_one_bit_in_a_copy() {
+        let spec = FaultSpec::parse("seed=13,corrupt=1").unwrap();
+        let src = vec![0u8; 256];
+        let mut s = FaultyStream::new(Vec::new(), Some(FaultPlan::derive(spec, 0)));
+        let n = s.write(&src).unwrap();
+        assert_eq!(n, 256);
+        let wire = s.into_inner();
+        let flipped: u32 = wire.iter().map(|b| b.count_ones()).sum();
+        assert_eq!(flipped, 1, "exactly one bit flips on the wire");
+        assert!(src.iter().all(|&b| b == 0), "the caller's buffer is untouched");
+    }
+
+    #[test]
+    fn control_rolls_are_counted_and_bounded() {
+        let state = FaultState::new(FaultSpec::parse("seed=3,reset=1,panic=0").unwrap());
+        assert!(state.roll_accept_reset());
+        assert!(!state.roll_worker_panic());
+        let state = FaultState::new(FaultSpec::default());
+        assert!(!state.roll_accept_reset());
+    }
+}

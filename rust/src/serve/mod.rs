@@ -52,13 +52,35 @@
 //! and server→client writes carry a timeout so a client that stops
 //! reading cannot park a worker forever. The client, by contrast, trusts
 //! the server it chose to connect to.
+//!
+//! Failure model (DESIGN.md §13): every layer assumes the network and the
+//! peer *will* misbehave. Worker jobs run under `catch_unwind`, so a
+//! panicking round costs one session (typed `ERROR`, `serve.worker_panics`
+//! tick), never a worker. v2 bulk frames carry payload checksums
+//! ([`wire::seal`]); corruption is caught at the frame boundary
+//! (`ERR_CORRUPT`) instead of poisoning a decrypt. The client
+//! ([`CheetahNetClient`]) turns every failure into a typed [`NetError`] —
+//! per-round deadlines instead of hangs, bounded exponential-backoff
+//! reconnect with full-query replay (bit-identical by construction:
+//! per-query randomness is seed-derived — asserted via a replay digest).
+//! [`SecureServer::shutdown`] drains: stop intake, finish in-flight rounds
+//! under [`SecureConfig::drain_timeout`], then close. The [`fault`] module
+//! injects seeded, reproducible network faults to prove all of it under
+//! test (`CHEETAH_FAULT`, [`SecureConfig::fault`]).
 
+// Satellite guarantee (ISSUE 10): no unwrap/expect on serving paths — an
+// attacker-reachable decode or a poisoned lock must never panic a server
+// thread. Tests opt out locally.
+#![deny(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod fault;
 pub mod precompute;
 #[cfg(unix)]
 pub mod reactor;
 pub mod session;
 pub mod wire;
 
+pub use fault::{FaultPlan, FaultSpec, FaultState, FaultyStream};
 pub use precompute::{BlindingPool, PoolConfig, PoolStats};
 pub use session::{Phase, Session, SessionRegistry};
 
@@ -67,15 +89,25 @@ use crate::coordinator::server::{stop_accept_thread, LiveConns, StoppableListene
 use crate::fixed::ScalePlan;
 use crate::nn::{Network, Tensor};
 use crate::phe::Context;
-use crate::protocol::cheetah::{CheetahClient, ProtocolSpec};
+use crate::protocol::cheetah::{CheetahClient, ClientQuery, ProtocolSpec};
 use crate::protocol::transport::{read_frame_limited, write_frame, DEFAULT_MAX_FRAME_LEN};
 use crate::util::rng::ChaCha20Rng;
 use std::net::{SocketAddr, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking. Worker panics are isolated with `catch_unwind`, so a lock a
+/// panicking job held is poisoned but its data is still structurally sound
+/// (session state is retired via the error path anyway) — propagating the
+/// poison would turn one injected panic into a server-wide cascade.
+pub(crate) fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Secure-server tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -134,6 +166,15 @@ pub struct SecureConfig {
     /// `InvalidInput` error, raised before any session exists). Clients
     /// must connect with a matching context (handshake fingerprint).
     pub params: crate::plan::ParamsChoice,
+    /// Graceful-shutdown budget: [`SecureServer::shutdown`] stops intake,
+    /// then waits up to this long for in-flight rounds to finish before
+    /// closing connections (`serve.drain_ms` records the observed wait).
+    pub drain_timeout: Duration,
+    /// Deterministic fault injection ([`fault::FaultSpec`]) applied to
+    /// every accepted connection and worker job. Defaults to
+    /// `CHEETAH_FAULT` from the environment; `None` (the normal case)
+    /// compiles down to pass-through I/O with zero per-call RNG work.
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for SecureConfig {
@@ -152,6 +193,8 @@ impl Default for SecureConfig {
             max_write_queue: 64 << 20,
             threads: 0,
             params: crate::plan::ParamsChoice::Default,
+            drain_timeout: Duration::from_secs(5),
+            fault: FaultSpec::from_env(),
         }
     }
 }
@@ -165,6 +208,21 @@ struct ServeShared {
     registry: Arc<SessionRegistry>,
     metrics: Arc<Metrics>,
     pool: Arc<BlindingPool>,
+    /// Jobs dispatched but not yet finished — the drain condition.
+    inflight: Arc<AtomicU64>,
+    /// Armed fault injection, if any (`SecureConfig::fault`).
+    fault: Option<Arc<FaultState>>,
+}
+
+impl ServeShared {
+    /// Roll the injected worker-panic fault (no-op when faults are off).
+    fn roll_worker_panic(&self) {
+        if let Some(f) = &self.fault {
+            if f.roll_worker_panic() {
+                panic!("injected fault: worker panic");
+            }
+        }
+    }
 }
 
 /// Per-connection state shared between the reader thread and the jobs it
@@ -175,13 +233,17 @@ struct ConnState {
     sessions: Mutex<Vec<u64>>,
 }
 
-/// One unit of protocol work, routed to a session-sticky worker.
+/// The threads front's shared write half (fault-wrapped socket).
+type SharedWriter = Arc<Mutex<FaultyStream<TcpStream>>>;
+
+/// One unit of protocol work, routed to a session-sticky worker. `v2`
+/// carries the connection's negotiated wire version (checksummed frames).
 enum Job {
     /// Session setup: pop a prepared engine, register, ship the offline
     /// material (indicator ciphertexts) to the client.
-    Hello { writer: Arc<Mutex<TcpStream>>, conn: Arc<ConnState> },
+    Hello { writer: SharedWriter, conn: Arc<ConnState>, v2: bool },
     /// An online round (`SHARES`, `RECOVERY`, or `BYE`).
-    Round { session_id: u64, tag: u8, payload: Vec<u8>, writer: Arc<Mutex<TcpStream>> },
+    Round { session_id: u64, tag: u8, payload: Vec<u8>, writer: SharedWriter, v2: bool },
 }
 
 /// Where a handler's reply frames go: the threads front's write-locked
@@ -197,15 +259,12 @@ trait ReplySink {
 
 /// [`ReplySink`] over the threads front's shared, write-locked socket.
 struct StreamSink<'a> {
-    writer: &'a Arc<Mutex<TcpStream>>,
+    writer: &'a SharedWriter,
 }
 
 impl ReplySink for StreamSink<'_> {
     fn send(&mut self, tag: u8, payload: &[u8]) -> bool {
-        match self.writer.lock() {
-            Ok(mut w) => write_or_hangup(&mut w, tag, payload),
-            Err(_) => false,
-        }
+        write_or_hangup(&mut lock_ok(self.writer), tag, payload)
     }
 }
 
@@ -223,6 +282,9 @@ pub struct SecureServer {
     registry: Arc<SessionRegistry>,
     pool: Arc<BlindingPool>,
     worker_threads: Mutex<Vec<JoinHandle<()>>>,
+    inflight: Arc<AtomicU64>,
+    drain_timeout: Duration,
+    stopped: AtomicBool,
     front: Front,
 }
 
@@ -285,6 +347,8 @@ impl SecureServer {
             cfg.threads,
         )
         .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
+        let inflight = Arc::new(AtomicU64::new(0));
+        let fault = cfg.fault.map(|spec| Arc::new(FaultState::new(spec)));
         let shared = Arc::new(ServeShared {
             ctx,
             net,
@@ -293,10 +357,12 @@ impl SecureServer {
             registry: registry.clone(),
             metrics: metrics.clone(),
             pool: pool.clone(),
+            inflight: inflight.clone(),
+            fault: fault.clone(),
         });
 
         if cfg.reactor {
-            return serve_reactor(shared, metrics, registry, pool, addr, cfg);
+            return serve_reactor(shared, metrics, registry, pool, inflight, addr, cfg);
         }
 
         let listener = StoppableListener::bind(addr)?;
@@ -326,16 +392,26 @@ impl SecureServer {
             let stop = stop.clone();
             let conns = conns.clone();
             let registry = registry.clone();
+            let shared = shared.clone();
             let rr = Arc::new(AtomicU64::new(0));
             let max_frame = cfg.max_frame;
             let write_timeout = cfg.write_timeout;
             std::thread::spawn(move || {
                 while let Some(stream) = listener.accept() {
+                    // Accept-time reset fault: drop the connection unserved
+                    // (the client sees a peer reset mid-handshake).
+                    if let Some(f) = &shared.fault {
+                        if f.roll_accept_reset() {
+                            drop(stream);
+                            continue;
+                        }
+                    }
                     stream.set_nodelay(true).ok();
                     let writer = match stream.try_clone() {
                         Ok(w) => {
                             w.set_write_timeout(Some(write_timeout)).ok();
-                            Arc::new(Mutex::new(w))
+                            let plan = shared.fault.as_ref().map(|f| f.next_plan());
+                            Arc::new(Mutex::new(FaultyStream::new(w, plan)))
                         }
                         Err(_) => continue,
                     };
@@ -343,12 +419,15 @@ impl SecureServer {
                         Ok(c) => c,
                         Err(_) => continue,
                     };
+                    let reader_plan = shared.fault.as_ref().map(|f| f.next_plan());
+                    let reader = FaultyStream::new(stream, reader_plan);
                     let txs = txs.clone();
                     let stop = stop.clone();
                     let rr = rr.clone();
                     let registry = registry.clone();
+                    let shared = shared.clone();
                     let jh = std::thread::spawn(move || {
-                        read_loop(stream, writer, txs, rr, stop, max_frame, registry)
+                        read_loop(reader, writer, txs, rr, stop, max_frame, registry, shared)
                     });
                     conns.track(clone, jh);
                 }
@@ -361,6 +440,9 @@ impl SecureServer {
             registry,
             pool,
             worker_threads: Mutex::new(worker_threads),
+            inflight,
+            drain_timeout: cfg.drain_timeout,
+            stopped: AtomicBool::new(false),
             front: Front::Threads {
                 stop,
                 accept_thread: Mutex::new(Some(accept_thread)),
@@ -386,29 +468,54 @@ impl SecureServer {
         self.registry.len()
     }
 
-    /// Stop accepting, close every live connection, and join the accept
-    /// (or reactor), reader, worker, and pool threads. Idempotent.
-    pub fn shutdown(&self) {
+    /// Protocol rounds currently executing or queued on workers.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Gracefully stop: stop accepting new connections, wait up to
+    /// `timeout` for in-flight rounds to finish (`serve.drain_ms` records
+    /// the observed wait), then close every live connection and join the
+    /// accept (or reactor), reader, worker, and pool threads. Idempotent —
+    /// the first caller drains, later calls (including `Drop`) return
+    /// immediately.
+    pub fn drain(&self, timeout: Duration) {
+        if self.stopped.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        let t0 = Instant::now();
+        if let Front::Threads { stop, accept_thread, .. } = &self.front {
+            // Stops the listener and flips the readers' stop flag: no new
+            // rounds are dispatched, queued ones keep draining.
+            stop_accept_thread(stop, self.addr, accept_thread);
+        }
+        while self.inflight.load(Ordering::SeqCst) > 0 && t0.elapsed() < timeout {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        crate::obs::record("serve.drain_ms", t0.elapsed().as_secs_f64() * 1e3);
         match &self.front {
-            Front::Threads { stop, accept_thread, conns, worker_txs } => {
-                stop_accept_thread(stop, self.addr, accept_thread);
+            Front::Threads { conns, worker_txs, .. } => {
                 // Closing the sockets unblocks readers parked in read_frame.
                 conns.close_and_join();
                 // Dropping the senders disconnects the worker queues.
-                worker_txs.lock().unwrap().take();
+                lock_ok(worker_txs).take();
             }
             // Joining the reactor thread drops its connections and worker
             // senders, which in turn disconnects the worker queues below.
             #[cfg(unix)]
             Front::Reactor { handle } => handle.shutdown(),
         }
-        let workers: Vec<JoinHandle<()>> =
-            self.worker_threads.lock().unwrap().drain(..).collect();
+        let workers: Vec<JoinHandle<()>> = lock_ok(&self.worker_threads).drain(..).collect();
         for h in workers {
             let _ = h.join();
         }
         self.registry.clear();
         self.pool.shutdown();
+    }
+
+    /// [`SecureServer::drain`] under [`SecureConfig::drain_timeout`].
+    pub fn shutdown(&self) {
+        self.drain(self.drain_timeout);
     }
 }
 
@@ -420,6 +527,7 @@ fn serve_reactor(
     metrics: Arc<Metrics>,
     registry: Arc<SessionRegistry>,
     pool: Arc<BlindingPool>,
+    inflight: Arc<AtomicU64>,
     addr: &str,
     cfg: SecureConfig,
 ) -> std::io::Result<SecureServer> {
@@ -432,6 +540,9 @@ fn serve_reactor(
         registry,
         pool,
         worker_threads: Mutex::new(worker_threads),
+        inflight,
+        drain_timeout: cfg.drain_timeout,
+        stopped: AtomicBool::new(false),
         front: Front::Reactor { handle },
     })
 }
@@ -443,6 +554,7 @@ fn serve_reactor(
     _metrics: Arc<Metrics>,
     _registry: Arc<SessionRegistry>,
     _pool: Arc<BlindingPool>,
+    _inflight: Arc<AtomicU64>,
     _addr: &str,
     _cfg: SecureConfig,
 ) -> std::io::Result<SecureServer> {
@@ -462,37 +574,56 @@ impl Drop for SecureServer {
 /// bounded worker queues is the backpressure point — a flooded server stops
 /// reading and TCP pushes back on the sender. On exit (hangup, protocol
 /// garbage, shutdown) every session created on this connection is retired.
+#[allow(clippy::too_many_arguments)]
 fn read_loop(
-    stream: TcpStream,
-    writer: Arc<Mutex<TcpStream>>,
+    stream: FaultyStream<TcpStream>,
+    writer: SharedWriter,
     txs: Arc<Vec<SyncSender<Job>>>,
     rr: Arc<AtomicU64>,
     stop: Arc<AtomicBool>,
     max_frame: usize,
     registry: Arc<SessionRegistry>,
+    shared: Arc<ServeShared>,
 ) {
     let conn = Arc::new(ConnState {
         closed: AtomicBool::new(false),
         sessions: Mutex::new(Vec::new()),
     });
-    read_frames(stream, &writer, &txs, &rr, &stop, max_frame, &conn);
+    read_frames(stream, &writer, &txs, &rr, &stop, max_frame, &conn, &shared);
     // The connection is gone: retire its sessions. A Hello still in flight
     // sees `closed` and retires its own session (see handle_hello).
     conn.closed.store(true, Ordering::SeqCst);
-    for sid in conn.sessions.lock().unwrap().drain(..) {
+    for sid in lock_ok(&conn.sessions).drain(..) {
         registry.remove(sid);
     }
 }
 
+/// Dispatch one job to its session-sticky worker, keeping the in-flight
+/// count exact: the increment happens before the send so the drain path
+/// can never observe a dispatched-but-uncounted round.
+fn dispatch(shared: &ServeShared, txs: &[SyncSender<Job>], w: usize, job: Job) -> bool {
+    shared.inflight.fetch_add(1, Ordering::SeqCst);
+    if txs[w].send(job).is_err() {
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        return false;
+    }
+    true
+}
+
+#[allow(clippy::too_many_arguments)]
 fn read_frames(
-    mut stream: TcpStream,
-    writer: &Arc<Mutex<TcpStream>>,
+    mut stream: FaultyStream<TcpStream>,
+    writer: &SharedWriter,
     txs: &Arc<Vec<SyncSender<Job>>>,
     rr: &Arc<AtomicU64>,
     stop: &Arc<AtomicBool>,
     max_frame: usize,
     conn: &Arc<ConnState>,
+    shared: &Arc<ServeShared>,
 ) {
+    // Negotiated wire version for this connection (v2 ⇒ checksummed bulk
+    // frames); set by the HELLO, false for rounds that precede one.
+    let mut v2 = false;
     loop {
         if stop.load(Ordering::SeqCst) {
             return;
@@ -504,14 +635,17 @@ fn read_frames(
         crate::obs::add("serve.rx_bytes", payload.len() as u64 + 5);
         match tag {
             wire::TAG_HELLO => {
-                if let Err(e) = wire::decode_hello(&payload) {
-                    let mut sink = StreamSink { writer };
-                    send_error(&mut sink, 0, wire::ERR_UNSUPPORTED, &e.to_string());
-                    return;
+                match wire::decode_hello(&payload) {
+                    Ok(version) => v2 = version >= 2,
+                    Err(e) => {
+                        let mut sink = StreamSink { writer };
+                        send_error(&mut sink, 0, wire::ERR_UNSUPPORTED, &e.to_string());
+                        return;
+                    }
                 }
                 let w = (rr.fetch_add(1, Ordering::Relaxed) as usize) % txs.len();
-                let job = Job::Hello { writer: writer.clone(), conn: conn.clone() };
-                if txs[w].send(job).is_err() {
+                let job = Job::Hello { writer: writer.clone(), conn: conn.clone(), v2 };
+                if !dispatch(shared, txs, w, job) {
                     return;
                 }
             }
@@ -520,10 +654,8 @@ fn read_frames(
                 // snapshot capture is lock-free, so this cannot stall rounds
                 // queued behind it on a worker).
                 let body = crate::obs::snapshot().to_json();
-                if let Ok(mut w) = writer.lock() {
-                    if !write_or_hangup(&mut w, wire::TAG_STATS_OK, body.as_bytes()) {
-                        return;
-                    }
+                if !write_or_hangup(&mut lock_ok(writer), wire::TAG_STATS_OK, body.as_bytes()) {
+                    return;
                 }
             }
             wire::TAG_SHARES | wire::TAG_RECOVERY | wire::TAG_BYE => {
@@ -536,8 +668,9 @@ fn read_frames(
                     }
                 };
                 let w = (sid % txs.len() as u64) as usize;
-                let job = Job::Round { session_id: sid, tag, payload, writer: writer.clone() };
-                if txs[w].send(job).is_err() {
+                let job =
+                    Job::Round { session_id: sid, tag, payload, writer: writer.clone(), v2 };
+                if !dispatch(shared, txs, w, job) {
                     return;
                 }
             }
@@ -557,50 +690,74 @@ fn read_frames(
 
 fn worker_loop(rx: Receiver<Job>, shared: Arc<ServeShared>) {
     for job in rx {
+        // Worker-panic isolation: a panicking round (engine bug, injected
+        // fault) costs the offending session a typed ERROR and ticks
+        // `serve.worker_panics` — the worker itself survives to take the
+        // next job, and the in-flight count still comes down.
         match job {
-            Job::Hello { writer, conn } => {
-                let mut sink = StreamSink { writer: &writer };
-                handle_hello(&shared, &mut sink, &conn);
+            Job::Hello { writer, conn, v2 } => {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    shared.roll_worker_panic();
+                    let mut sink = StreamSink { writer: &writer };
+                    handle_hello(&shared, &mut sink, &conn, v2);
+                }));
+                if outcome.is_err() {
+                    crate::obs::inc("serve.worker_panics");
+                    let mut sink = StreamSink { writer: &writer };
+                    send_error(&mut sink, 0, wire::ERR_INTERNAL, "internal error: session setup panicked");
+                }
             }
-            Job::Round { session_id, tag, payload, writer } => {
-                let mut sink = StreamSink { writer: &writer };
-                handle_round(&shared, session_id, tag, &payload, &mut sink);
+            Job::Round { session_id, tag, mut payload, writer, v2 } => {
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    shared.roll_worker_panic();
+                    let mut sink = StreamSink { writer: &writer };
+                    handle_round(&shared, session_id, tag, &mut payload, v2, &mut sink);
+                }));
+                if outcome.is_err() {
+                    crate::obs::inc("serve.worker_panics");
+                    let mut sink = StreamSink { writer: &writer };
+                    send_error(&mut sink, session_id, wire::ERR_INTERNAL, "internal error: round panicked");
+                    shared.registry.remove(session_id);
+                }
             }
         }
+        shared.inflight.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
 /// A failed (or timed-out) reply write means the peer stopped reading or
 /// the framing is now corrupt mid-stream: drop the whole connection so its
 /// reader exits and the connection's sessions are retired.
-fn write_or_hangup(w: &mut TcpStream, tag: u8, payload: &[u8]) -> bool {
+fn write_or_hangup(w: &mut FaultyStream<TcpStream>, tag: u8, payload: &[u8]) -> bool {
     if write_frame(w, tag, payload).is_err() {
-        let _ = w.shutdown(std::net::Shutdown::Both);
+        let _ = w.get_ref().shutdown(std::net::Shutdown::Both);
         return false;
     }
     crate::obs::add("serve.tx_bytes", payload.len() as u64 + 5);
     true
 }
 
-fn handle_hello(shared: &ServeShared, sink: &mut dyn ReplySink, conn: &Arc<ConnState>) {
+fn handle_hello(shared: &ServeShared, sink: &mut dyn ReplySink, conn: &Arc<ConnState>, v2: bool) {
     let engine = Arc::new(shared.pool.take());
     let (sid, session) = shared.registry.create(engine);
     // Tie the session to its connection; if the connection closed while we
     // were setting up, retire it immediately (the reader's sweep may have
     // already run).
-    conn.sessions.lock().unwrap().push(sid);
+    lock_ok(&conn.sessions).push(sid);
     if conn.closed.load(Ordering::SeqCst) {
         shared.registry.remove(sid);
         return;
     }
-    let session = session.lock().unwrap();
+    let session = lock_ok(&session);
     let n_steps = session.engine.spec.steps.len();
+    let negotiated = if v2 { wire::VERSION } else { 1 };
     let hello_ok = wire::encode_hello_ok(
         sid,
         wire::plan_fingerprint(&shared.ctx.params, &shared.plan),
         shared.epsilon,
         n_steps as u32,
         &shared.net,
+        negotiated,
     );
     if !sink.send(wire::TAG_HELLO_OK, &hello_ok) {
         shared.registry.remove(sid);
@@ -614,24 +771,42 @@ fn handle_hello(shared: &ServeShared, sink: &mut dyn ReplySink, conn: &Arc<ConnS
         let mut payload = wire::round_header(sid, si as u32);
         wire::encode_cts(&mut payload, id1);
         wire::encode_cts(&mut payload, id2);
+        if v2 {
+            wire::seal(wire::TAG_OFFLINE_IDS, &mut payload);
+        }
         if !sink.send(wire::TAG_OFFLINE_IDS, &payload) {
             shared.registry.remove(sid);
             return;
         }
     }
-    let _ = sink.send(wire::TAG_OFFLINE_DONE, &sid.to_le_bytes());
+    let mut done = sid.to_le_bytes().to_vec();
+    if v2 {
+        wire::seal(wire::TAG_OFFLINE_DONE, &mut done);
+    }
+    let _ = sink.send(wire::TAG_OFFLINE_DONE, &done);
 }
 
 fn handle_round(
     shared: &ServeShared,
     session_id: u64,
     tag: u8,
-    payload: &[u8],
+    payload: &mut Vec<u8>,
+    v2: bool,
     sink: &mut dyn ReplySink,
 ) {
     if tag == wire::TAG_BYE {
         shared.registry.remove(session_id);
         return;
+    }
+    // v2 bulk frames carry a payload checksum: a mismatch means the bytes
+    // cannot be trusted (network corruption) — retire the session with the
+    // dedicated code so the client knows to retry rather than give up.
+    if v2 {
+        if let Err(e) = wire::verify_and_strip(tag, payload) {
+            send_error(sink, session_id, wire::ERR_CORRUPT, &e.to_string());
+            shared.registry.remove(session_id);
+            return;
+        }
     }
     let Some(session) = shared.registry.get(session_id) else {
         send_error(sink, session_id, wire::ERR_PROTOCOL, "unknown session");
@@ -649,7 +824,7 @@ fn handle_round(
         }
     };
     let result = {
-        let mut s = session.lock().unwrap();
+        let mut s = lock_ok(&session);
         match tag {
             wire::TAG_SHARES => s
                 .on_shares(step as usize, &cts, &shared.metrics)
@@ -658,7 +833,10 @@ fn handle_round(
         }
     };
     match result {
-        Ok((reply_tag, reply)) => {
+        Ok((reply_tag, mut reply)) => {
+            if v2 {
+                wire::seal(reply_tag, &mut reply);
+            }
             let _ = sink.send(reply_tag, &reply);
         }
         Err(violation) => {
@@ -689,37 +867,267 @@ pub struct NetReport {
     pub wall: Duration,
 }
 
+/// Typed terminal failure of a networked client operation. Every failure
+/// mode of [`CheetahNetClient`] lands here — a query either returns
+/// bit-exact logits or one of these, never a hang (reads carry the
+/// [`NetClientOpts::deadline`]) and never a panic.
+#[derive(Debug)]
+pub enum NetError {
+    /// Transport failure: dial, send/recv, or an undecodable frame.
+    Io(std::io::Error),
+    /// The server replied with a typed `ERROR` frame.
+    Server {
+        /// Wire error code (`wire::ERR_*`).
+        code: u16,
+        /// Human-readable server message.
+        msg: String,
+    },
+    /// The handshake was refused (fingerprint, architecture, or version) —
+    /// retrying cannot help; the two parties are misconfigured.
+    Handshake(String),
+    /// A per-round deadline expired with no reply.
+    Deadline,
+    /// A replayed query's first round was not bit-identical to the original
+    /// attempt — the seed-derived determinism contract is broken, so the
+    /// replay was aborted before the server saw inconsistent shares.
+    ReplayDiverged,
+    /// Every retry attempt failed; `last` is the final attempt's error.
+    RetriesExhausted {
+        /// Attempts made (first try included).
+        attempts: u32,
+        /// The error that ended the final attempt.
+        last: Box<NetError>,
+    },
+}
+
+impl NetError {
+    /// Whether a fresh attempt over a new connection could succeed:
+    /// transport faults, deadlines, and transient server failures
+    /// (`ERR_INTERNAL` worker panic, `ERR_CORRUPT` checksum) are
+    /// retryable; handshake refusals, protocol violations, and replay
+    /// divergence are terminal.
+    pub fn is_retryable(&self) -> bool {
+        match self {
+            NetError::Io(_) | NetError::Deadline => true,
+            NetError::Server { code, .. } => {
+                *code == wire::ERR_INTERNAL || *code == wire::ERR_CORRUPT
+            }
+            NetError::Handshake(_)
+            | NetError::ReplayDiverged
+            | NetError::RetriesExhausted { .. } => false,
+        }
+    }
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::Io(e) => write!(f, "transport error: {e}"),
+            NetError::Server { code, msg } => write!(f, "server error {code}: {msg}"),
+            NetError::Handshake(msg) => write!(f, "handshake refused: {msg}"),
+            NetError::Deadline => write!(f, "round deadline expired"),
+            NetError::ReplayDiverged => {
+                write!(f, "replayed query diverged from the original attempt")
+            }
+            NetError::RetriesExhausted { attempts, last } => {
+                write!(f, "all {attempts} attempts failed; last: {last}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for NetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            NetError::Io(e) => Some(e),
+            NetError::RetriesExhausted { last, .. } => Some(last),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for NetError {
+    fn from(e: std::io::Error) -> Self {
+        // A read timeout surfaces as TimedOut (or WouldBlock on some
+        // platforms): that is the per-round deadline, typed as such.
+        match e.kind() {
+            std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock => NetError::Deadline,
+            _ => NetError::Io(e),
+        }
+    }
+}
+
+impl From<wire::WireError> for NetError {
+    fn from(e: wire::WireError) -> Self {
+        NetError::Io(e.into())
+    }
+}
+
+impl From<crate::protocol::transport::FrameError> for NetError {
+    fn from(e: crate::protocol::transport::FrameError) -> Self {
+        NetError::from(std::io::Error::from(e))
+    }
+}
+
+impl From<NetError> for std::io::Error {
+    fn from(e: NetError) -> Self {
+        match e {
+            NetError::Io(e) => e,
+            NetError::Deadline => {
+                std::io::Error::new(std::io::ErrorKind::TimedOut, "round deadline expired")
+            }
+            other => std::io::Error::other(other.to_string()),
+        }
+    }
+}
+
+/// Robustness knobs for [`CheetahNetClient`] (see
+/// [`CheetahNetClient::connect_with`]).
+#[derive(Clone, Copy, Debug)]
+pub struct NetClientOpts {
+    /// Per-round read deadline: a server that goes silent mid-round fails
+    /// the attempt as [`NetError::Deadline`] instead of hanging forever.
+    pub deadline: Duration,
+    /// Retry budget per query *beyond* the first attempt. Each retry
+    /// reconnects (new session, replayed query) after exponential backoff.
+    pub max_retries: u32,
+    /// Client-side fault injection, applied to this client's own socket
+    /// (chaos tests exercise both directions). Defaults to `CHEETAH_FAULT`.
+    pub fault: Option<FaultSpec>,
+}
+
+impl Default for NetClientOpts {
+    fn default() -> Self {
+        NetClientOpts {
+            deadline: Duration::from_secs(30),
+            max_retries: 3,
+            fault: FaultSpec::from_env(),
+        }
+    }
+}
+
 /// Drives a full CHEETAH inference over a real socket against a
 /// [`SecureServer`]. The constructor performs the handshake (parameter
 /// fingerprint check, architecture download, offline indicator transfer);
-/// [`CheetahNetClient::infer`] then runs queries on the cached session.
+/// [`CheetahNetClient::infer`] then runs queries on the cached session,
+/// transparently reconnecting and replaying on transient failure (the
+/// replay is bit-identical because per-query randomness is derived from
+/// `(seed, query index)` — asserted via a first-round digest).
 pub struct CheetahNetClient {
     ctx: Arc<Context>,
-    stream: TcpStream,
-    /// The server-assigned session id.
+    plan: ScalePlan,
+    addr: SocketAddr,
+    seed: u64,
+    opts: NetClientOpts,
+    stream: FaultyStream<TcpStream>,
+    /// The server-assigned session id (changes after a reconnect).
     pub session_id: u64,
+    /// Negotiated v2 framing (payload checksums on bulk frames).
+    v2: bool,
     client: CheetahClient,
     last_step: usize,
     max_frame: usize,
     /// Bytes received during the offline phase (handshake + indicators),
     /// frame headers included — the networked "offline communication".
+    /// Reconnects repeat the offline phase and add to this.
     offline_bytes: u64,
     said_bye: bool,
+    /// Dials performed (fault-schedule index for the client's own socket).
+    dials: u64,
 }
 
 fn invalid(msg: &str) -> std::io::Error {
     std::io::Error::new(std::io::ErrorKind::InvalidData, msg.to_string())
 }
 
-fn error_frame_to_io(payload: &[u8]) -> std::io::Error {
+fn error_frame_to_net(payload: &[u8]) -> NetError {
     match wire::decode_error(payload) {
-        Ok((_, code, msg)) => std::io::Error::other(format!("server error {code}: {msg}")),
-        Err(e) => e.into(),
+        Ok((_, code, msg)) => NetError::Server { code, msg },
+        Err(e) => NetError::from(e),
     }
 }
 
+/// Dial the server and validate the session grant. Returns the connected
+/// stream and the decoded [`wire::HelloOk`]; the offline phase is not yet
+/// consumed.
+fn dial_hello(
+    ctx: &Arc<Context>,
+    plan: &ScalePlan,
+    addr: &SocketAddr,
+    opts: &NetClientOpts,
+    seed: u64,
+    dial_index: u64,
+    max_frame: usize,
+) -> Result<(FaultyStream<TcpStream>, wire::HelloOk, u64), NetError> {
+    let tcp = TcpStream::connect(addr).map_err(NetError::from)?;
+    tcp.set_nodelay(true).ok();
+    tcp.set_read_timeout(Some(opts.deadline)).ok();
+    let fault_plan = opts
+        .fault
+        .map(|spec| FaultPlan::derive(spec, seed.rotate_left(17) ^ dial_index));
+    let mut stream = FaultyStream::new(tcp, fault_plan);
+    write_frame(&mut stream, wire::TAG_HELLO, &wire::encode_hello())?;
+    let (tag, payload) = read_frame_limited(&mut stream, max_frame)?;
+    let offline_bytes = payload.len() as u64 + 5;
+    if tag == wire::TAG_ERROR {
+        return Err(error_frame_to_net(&payload));
+    }
+    if tag != wire::TAG_HELLO_OK {
+        return Err(NetError::Handshake("expected HELLO_OK".into()));
+    }
+    let hello = wire::decode_hello_ok(&payload)?;
+    if hello.fingerprint != wire::plan_fingerprint(&ctx.params, plan) {
+        return Err(NetError::Handshake(
+            "server/client parameter or scale-plan mismatch (fingerprint)".into(),
+        ));
+    }
+    Ok((stream, hello, offline_bytes))
+}
+
+/// Consume the offline phase (indicator ciphertexts per step) into
+/// `client`, verifying v2 checksums. Returns the bytes received.
+fn install_offline(
+    ctx: &Arc<Context>,
+    stream: &mut FaultyStream<TcpStream>,
+    client: &mut CheetahClient,
+    n_steps: usize,
+    v2: bool,
+    max_frame: usize,
+) -> Result<u64, NetError> {
+    let mut offline_bytes = 0u64;
+    loop {
+        let (tag, mut payload) = read_frame_limited(stream, max_frame)?;
+        offline_bytes += payload.len() as u64 + 5;
+        match tag {
+            wire::TAG_OFFLINE_IDS => {
+                if v2 {
+                    wire::verify_and_strip(wire::TAG_OFFLINE_IDS, &mut payload)?;
+                }
+                let mut r = wire::ByteReader::new(&payload);
+                let (_, step) = wire::read_round_header(&mut r)?;
+                if step as usize >= n_steps {
+                    return Err(NetError::Io(invalid("offline indicators for unknown step")));
+                }
+                let id1 = wire::decode_cts(ctx, &mut r)?;
+                let id2 = wire::decode_cts(ctx, &mut r)?;
+                client.install_indicators(step as usize, id1, id2);
+            }
+            wire::TAG_OFFLINE_DONE => {
+                if v2 {
+                    wire::verify_and_strip(wire::TAG_OFFLINE_DONE, &mut payload)?;
+                }
+                break;
+            }
+            wire::TAG_ERROR => return Err(error_frame_to_net(&payload)),
+            _ => return Err(NetError::Io(invalid("unexpected frame during offline phase"))),
+        }
+    }
+    Ok(offline_bytes)
+}
+
 impl CheetahNetClient {
-    /// Connect and complete the offline phase. `ctx`/`plan` must match the
+    /// Connect and complete the offline phase with default robustness
+    /// options ([`NetClientOpts::default`]). `ctx`/`plan` must match the
     /// server's (verified via the handshake fingerprint); `seed` drives the
     /// client's key generation and share randomness.
     pub fn connect(
@@ -728,64 +1136,89 @@ impl CheetahNetClient {
         addr: &SocketAddr,
         seed: u64,
     ) -> std::io::Result<Self> {
+        Self::connect_with(ctx, plan, addr, seed, NetClientOpts::default())
+            .map_err(std::io::Error::from)
+    }
+
+    /// [`CheetahNetClient::connect`] with explicit deadline / retry / fault
+    /// options.
+    pub fn connect_with(
+        ctx: Arc<Context>,
+        plan: ScalePlan,
+        addr: &SocketAddr,
+        seed: u64,
+        opts: NetClientOpts,
+    ) -> Result<Self, NetError> {
         let max_frame = DEFAULT_MAX_FRAME_LEN;
-        let mut stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        write_frame(&mut stream, wire::TAG_HELLO, &wire::encode_hello())?;
-        let (tag, payload) = read_frame_limited(&mut stream, max_frame)?;
-        let mut offline_bytes = payload.len() as u64 + 5;
-        if tag == wire::TAG_ERROR {
-            return Err(error_frame_to_io(&payload));
-        }
-        if tag != wire::TAG_HELLO_OK {
-            return Err(invalid("expected HELLO_OK"));
-        }
-        let hello = wire::decode_hello_ok(&payload)?;
-        if hello.fingerprint != wire::plan_fingerprint(&ctx.params, &plan) {
-            return Err(invalid(
-                "server/client parameter or scale-plan mismatch (fingerprint)",
-            ));
-        }
+        let (mut stream, hello, mut offline_bytes) =
+            dial_hello(&ctx, &plan, addr, &opts, seed, 0, max_frame)?;
         // A server advertising an architecture the protocol cannot express
         // is a typed connect error, not a client panic.
         let spec = ProtocolSpec::compile(&hello.arch)
-            .map_err(|e| invalid(&format!("server architecture rejected: {e}")))?;
+            .map_err(|e| NetError::Handshake(format!("server architecture rejected: {e}")))?;
         let n_steps = spec.steps.len();
         if n_steps != hello.n_steps as usize {
-            return Err(invalid("handshake step count disagrees with architecture"));
+            return Err(NetError::Handshake(
+                "handshake step count disagrees with architecture".into(),
+            ));
         }
+        let v2 = hello.version >= 2;
         let mut client = CheetahClient::new(ctx.clone(), spec, plan, seed);
-
-        // Offline phase: install the indicator ciphertexts per step.
-        loop {
-            let (tag, payload) = read_frame_limited(&mut stream, max_frame)?;
-            offline_bytes += payload.len() as u64 + 5;
-            match tag {
-                wire::TAG_OFFLINE_IDS => {
-                    let mut r = wire::ByteReader::new(&payload);
-                    let (_, step) = wire::read_round_header(&mut r)?;
-                    if step as usize >= n_steps {
-                        return Err(invalid("offline indicators for unknown step"));
-                    }
-                    let id1 = wire::decode_cts(&ctx, &mut r)?;
-                    let id2 = wire::decode_cts(&ctx, &mut r)?;
-                    client.install_indicators(step as usize, id1, id2);
-                }
-                wire::TAG_OFFLINE_DONE => break,
-                wire::TAG_ERROR => return Err(error_frame_to_io(&payload)),
-                _ => return Err(invalid("unexpected frame during offline phase")),
-            }
-        }
+        offline_bytes += install_offline(&ctx, &mut stream, &mut client, n_steps, v2, max_frame)?;
         Ok(Self {
             ctx,
+            plan,
+            addr: *addr,
+            seed,
+            opts,
             stream,
             session_id: hello.session_id,
+            v2,
             client,
             last_step: n_steps - 1,
             max_frame,
             offline_bytes,
             said_bye: false,
+            dials: 1,
         })
+    }
+
+    /// Re-dial and re-handshake after a transient failure, keeping the
+    /// existing [`CheetahClient`] (and thus the query-index counter and
+    /// seed-derived randomness — the basis of bit-exact replay). The old
+    /// socket is dropped, which retires the old session server-side.
+    fn reconnect(&mut self) -> Result<(), NetError> {
+        let dial_index = self.dials;
+        self.dials += 1;
+        let (mut stream, hello, mut offline_bytes) = dial_hello(
+            &self.ctx,
+            &self.plan,
+            &self.addr,
+            &self.opts,
+            self.seed,
+            dial_index,
+            self.max_frame,
+        )?;
+        if hello.n_steps as usize != self.last_step + 1 {
+            return Err(NetError::Handshake(
+                "server changed step count across reconnect".into(),
+            ));
+        }
+        let v2 = hello.version >= 2;
+        offline_bytes += install_offline(
+            &self.ctx,
+            &mut stream,
+            &mut self.client,
+            self.last_step + 1,
+            v2,
+            self.max_frame,
+        )?;
+        self.stream = stream;
+        self.session_id = hello.session_id;
+        self.v2 = v2;
+        self.offline_bytes += offline_bytes;
+        self.said_bye = false;
+        Ok(())
     }
 
     /// Bytes shipped to this client during the offline phase (handshake +
@@ -800,36 +1233,104 @@ impl CheetahNetClient {
     /// an in-flight [`CheetahNetClient::infer`] round.
     pub fn stats_json(&mut self) -> std::io::Result<String> {
         write_frame(&mut self.stream, wire::TAG_STATS, &[])?;
-        let payload = self.read_expect(wire::TAG_STATS_OK)?;
-        String::from_utf8(payload)
-            .map_err(|_| invalid("stats snapshot is not valid UTF-8"))
+        let payload = self.read_expect(wire::TAG_STATS_OK).map_err(std::io::Error::from)?;
+        String::from_utf8(payload).map_err(|_| invalid("stats snapshot is not valid UTF-8"))
     }
 
-    fn read_expect(&mut self, want: u8) -> std::io::Result<Vec<u8>> {
-        let (tag, payload) = read_frame_limited(&mut self.stream, self.max_frame)?;
+    /// Read a frame, demanding tag `want`: `ERROR` frames become
+    /// [`NetError::Server`], v2 bulk replies are checksum-verified, and a
+    /// silent server trips the deadline.
+    fn read_expect(&mut self, want: u8) -> Result<Vec<u8>, NetError> {
+        let (tag, mut payload) = read_frame_limited(&mut self.stream, self.max_frame)?;
         if tag == wire::TAG_ERROR {
-            return Err(error_frame_to_io(&payload));
+            return Err(error_frame_to_net(&payload));
         }
         if tag != want {
-            return Err(invalid("unexpected frame tag"));
+            return Err(NetError::Io(invalid("unexpected frame tag")));
+        }
+        let sealed = matches!(want, wire::TAG_PRODUCTS | wire::TAG_RECOVERY_OK);
+        if self.v2 && sealed {
+            wire::verify_and_strip(want, &mut payload)?;
         }
         Ok(payload)
     }
 
     /// Run one private inference end to end over the socket.
-    pub fn infer(&mut self, input: &Tensor) -> std::io::Result<NetReport> {
+    ///
+    /// On a retryable failure (transport fault, deadline, transient server
+    /// error) the client reconnects with exponential backoff — up to
+    /// [`NetClientOpts::max_retries`] times, `serve.retries` counts them —
+    /// and *replays the same query*: the per-query randomness stream is
+    /// derived from `(seed, query index)`, so the replayed first round is
+    /// bit-identical to the original (verified with a digest; divergence is
+    /// the typed [`NetError::ReplayDiverged`]). The result is therefore
+    /// exactly what the fault-free run would have produced, or a typed
+    /// error — never a hang, never a silently different answer.
+    pub fn infer(&mut self, input: &Tensor) -> Result<NetReport, NetError> {
+        let query_index = self.client.reserve_queries(1);
+        let mut replay_digest: Option<u64> = None;
+        let mut last: Option<NetError> = None;
+        for attempt in 0..=self.opts.max_retries {
+            if attempt > 0 {
+                crate::obs::inc("serve.retries");
+                // Bounded exponential backoff: 10, 20, 40, … ms.
+                std::thread::sleep(Duration::from_millis(10u64 << (attempt - 1).min(6)));
+                if let Err(e) = self.reconnect() {
+                    if e.is_retryable() {
+                        last = Some(e);
+                        continue;
+                    }
+                    return Err(e);
+                }
+            }
+            match self.try_query(input, query_index, &mut replay_digest) {
+                Ok(report) => return Ok(report),
+                Err(e) if e.is_retryable() => last = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(NetError::RetriesExhausted {
+            attempts: self.opts.max_retries + 1,
+            last: Box::new(last.unwrap_or(NetError::Deadline)),
+        })
+    }
+
+    /// One attempt at query `query_index` on the current connection.
+    fn try_query(
+        &mut self,
+        input: &Tensor,
+        query_index: u64,
+        replay_digest: &mut Option<u64>,
+    ) -> Result<NetReport, NetError> {
         let t0 = Instant::now();
-        self.client.begin_query(input);
+        let mut q = self.client.start_query(input, query_index);
         let n = self.ctx.params.n;
         let (mut c2s, mut s2c, mut rounds) = (0u64, 0u64, 0u64);
         for si in 0..=self.last_step {
             // C → S: encrypted transformed share.
-            let cts = self.client.step_send(si);
+            let cts = self.client.step_send_with(si, &mut q);
             let mut payload = wire::round_header(self.session_id, si as u32);
             wire::encode_cts(&mut payload, &cts);
+            if si == 0 {
+                // Replay assertion: the first-round ciphertexts (everything
+                // past the 12-byte session/step header, which legitimately
+                // changes across reconnects) must be bit-identical on every
+                // attempt — per-query randomness is seed-derived, so any
+                // divergence means broken determinism, not a network fault.
+                let digest = wire::checksum(wire::TAG_SHARES, &payload[12..]);
+                match replay_digest {
+                    None => *replay_digest = Some(digest),
+                    Some(prev) if *prev != digest => return Err(NetError::ReplayDiverged),
+                    Some(_) => {}
+                }
+            }
+            if self.v2 {
+                wire::seal(wire::TAG_SHARES, &mut payload);
+            }
             c2s += payload.len() as u64 + 5;
             rounds += 1;
-            write_frame(&mut self.stream, wire::TAG_SHARES, &payload)?;
+            write_frame(&mut self.stream, wire::TAG_SHARES, &payload)
+                .map_err(NetError::from)?;
 
             // S → C: obscured products.
             let resp = self.read_expect(wire::TAG_PRODUCTS)?;
@@ -837,32 +1338,36 @@ impl CheetahNetClient {
             let mut r = wire::ByteReader::new(&resp);
             let (sid, step) = wire::read_round_header(&mut r)?;
             if sid != self.session_id || step as usize != si {
-                return Err(invalid("products round header mismatch"));
+                return Err(NetError::Io(invalid("products round header mismatch")));
             }
             let out_cts = wire::decode_cts(&self.ctx, &mut r)?;
             if out_cts.len() != self.client.spec.steps[si].linear.num_out_cts(n) {
-                return Err(invalid("wrong obscured-product ciphertext count"));
+                return Err(NetError::Io(invalid("wrong obscured-product ciphertext count")));
             }
 
             // C → S: nonlinear recovery (intermediate steps only).
-            if let Some(rec) = self.client.step_receive(si, &out_cts) {
+            if let Some(rec) = self.client.step_receive_with(si, &out_cts, &mut q) {
                 let mut payload = wire::round_header(self.session_id, si as u32);
                 wire::encode_cts(&mut payload, &rec);
+                if self.v2 {
+                    wire::seal(wire::TAG_RECOVERY, &mut payload);
+                }
                 c2s += payload.len() as u64 + 5;
                 rounds += 1;
-                write_frame(&mut self.stream, wire::TAG_RECOVERY, &payload)?;
+                write_frame(&mut self.stream, wire::TAG_RECOVERY, &payload)
+                    .map_err(NetError::from)?;
                 let ok = self.read_expect(wire::TAG_RECOVERY_OK)?;
                 s2c += ok.len() as u64 + 5;
                 let mut r = wire::ByteReader::new(&ok);
                 let (sid, step) = wire::read_round_header(&mut r)?;
                 if sid != self.session_id || step as usize != si {
-                    return Err(invalid("recovery-ack round header mismatch"));
+                    return Err(NetError::Io(invalid("recovery-ack round header mismatch")));
                 }
             }
         }
         Ok(NetReport {
-            argmax: self.client.argmax(),
-            logits: self.client.logits(),
+            argmax: self.client.argmax_of(&q),
+            logits: self.client.logits_of(&q),
             c2s_bytes: c2s,
             s2c_bytes: s2c,
             rounds,
@@ -887,12 +1392,15 @@ impl CheetahNetClient {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::nn::Layer;
     use crate::phe::Params;
     use crate::protocol::cheetah::CheetahRunner;
     use crate::protocol::transport::read_frame;
+    use std::collections::HashMap;
+    use std::io::Read;
 
     fn tiny_net(seed: u64) -> Network {
         let mut net = Network {
@@ -1252,9 +1760,12 @@ mod tests {
             }
             assert_eq!(tag, wire::TAG_OFFLINE_IDS);
         }
-        // …then violate the state machine: RECOVERY before any SHARES.
+        // …then violate the state machine: RECOVERY before any SHARES
+        // (sealed — this handshake negotiated v2, so the checksum must be
+        // valid for the violation to reach the state machine at all).
         let mut payload = wire::round_header(hello.session_id, 0);
         wire::encode_cts(&mut payload, &[]);
+        wire::seal(wire::TAG_RECOVERY, &mut payload);
         write_frame(&mut stream, wire::TAG_RECOVERY, &payload).unwrap();
         let (tag, payload) = read_frame(&mut stream).unwrap();
         assert_eq!(tag, wire::TAG_ERROR);
@@ -1271,5 +1782,477 @@ mod tests {
             std::thread::sleep(Duration::from_millis(2));
         }
         server.shutdown();
+    }
+
+    /// Version negotiation: a v1 client (no checksum trailers) still
+    /// completes the handshake — HELLO_OK mirrors version 1 and offline
+    /// frames arrive unsealed (OFFLINE_DONE is exactly the 8-byte id).
+    #[test]
+    fn v1_hello_negotiates_unsealed_frames() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(3),
+            ScalePlan::default_plan(),
+            "127.0.0.1:0",
+            SecureConfig { pool: PoolConfig::disabled(), fault: None, ..Default::default() },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        write_frame(&mut stream, wire::TAG_HELLO, &wire::encode_hello_version(1)).unwrap();
+        let (tag, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(tag, wire::TAG_HELLO_OK);
+        let hello = wire::decode_hello_ok(&payload).unwrap();
+        assert_eq!(hello.version, 1, "server must mirror a v1 client's version");
+        loop {
+            let (tag, payload) = read_frame(&mut stream).unwrap();
+            if tag == wire::TAG_OFFLINE_DONE {
+                assert_eq!(payload.len(), 8, "v1 OFFLINE_DONE must carry no checksum trailer");
+                break;
+            }
+            assert_eq!(tag, wire::TAG_OFFLINE_IDS);
+        }
+        write_frame(&mut stream, wire::TAG_BYE, &hello.session_id.to_le_bytes()).unwrap();
+        server.shutdown();
+    }
+
+    /// v2 payload checksums catch in-flight corruption at the frame
+    /// boundary: a flipped byte in a sealed round yields `ERR_CORRUPT`
+    /// and retires only the offending session.
+    #[test]
+    fn corrupt_round_payload_gets_err_corrupt() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(5),
+            ScalePlan::default_plan(),
+            "127.0.0.1:0",
+            SecureConfig { pool: PoolConfig::disabled(), fault: None, ..Default::default() },
+        )
+        .unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        write_frame(&mut stream, wire::TAG_HELLO, &wire::encode_hello()).unwrap();
+        let (tag, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(tag, wire::TAG_HELLO_OK);
+        let hello = wire::decode_hello_ok(&payload).unwrap();
+        assert_eq!(hello.version, wire::VERSION, "v2 handshake expected");
+        loop {
+            let (tag, _) = read_frame(&mut stream).unwrap();
+            if tag == wire::TAG_OFFLINE_DONE {
+                break;
+            }
+        }
+        let mut payload = wire::round_header(hello.session_id, 0);
+        wire::encode_cts(&mut payload, &[]);
+        wire::seal(wire::TAG_SHARES, &mut payload);
+        payload[13] ^= 0x40; // flip one bit inside the sealed body
+        write_frame(&mut stream, wire::TAG_SHARES, &payload).unwrap();
+        let (tag, payload) = read_frame(&mut stream).unwrap();
+        assert_eq!(tag, wire::TAG_ERROR);
+        let (sid, code, _) = wire::decode_error(&payload).unwrap();
+        assert_eq!(sid, hello.session_id);
+        assert_eq!(code, wire::ERR_CORRUPT);
+        let t0 = Instant::now();
+        while server.session_count() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "corrupt session never removed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        server.shutdown();
+    }
+
+    /// A server that accepts and then goes silent must not hang the
+    /// client: the per-round deadline fails the attempt with the typed
+    /// [`NetError::Deadline`].
+    #[test]
+    fn silent_server_trips_the_deadline_not_a_hang() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let silent = std::thread::spawn(move || {
+            // Accept one connection, swallow the HELLO, reply nothing.
+            if let Ok((mut s, _)) = listener.accept() {
+                let _ = read_frame(&mut s);
+                std::thread::sleep(Duration::from_millis(1500));
+            }
+        });
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let opts = NetClientOpts {
+            deadline: Duration::from_millis(200),
+            max_retries: 0,
+            fault: None,
+        };
+        let t0 = Instant::now();
+        let err =
+            CheetahNetClient::connect_with(ctx, ScalePlan::default_plan(), &addr, 5, opts)
+                .err()
+                .expect("silent server must not yield a session");
+        assert!(matches!(err, NetError::Deadline), "want Deadline, got {err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "deadline did not bound the wait");
+        silent.join().unwrap();
+    }
+
+    /// Worker panics are isolated: with panic injection at probability 1
+    /// and a single worker, every HELLO job panics — each client gets a
+    /// typed `ERR_INTERNAL` (not a hang, not a silent socket), the panic
+    /// counter ticks, and the *same* worker keeps answering subsequent
+    /// connections (no dead-worker wedge).
+    #[test]
+    fn worker_panics_are_isolated_and_typed() {
+        let spec = FaultSpec::parse("seed=3,panic=1.0").expect("valid spec");
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        #[cfg(not(feature = "obs-off"))]
+        let panics_before =
+            crate::obs::snapshot().get("serve.worker_panics").map(|m| m.value).unwrap_or(0);
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(2),
+            plan,
+            "127.0.0.1:0",
+            SecureConfig {
+                workers: 1,
+                seed: Some(5),
+                pool: PoolConfig::disabled(),
+                fault: Some(spec),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let opts =
+            NetClientOpts { deadline: Duration::from_secs(5), max_retries: 0, fault: None };
+        for k in 0..3u64 {
+            let err = CheetahNetClient::connect_with(ctx.clone(), plan, &server.addr, 100 + k, opts)
+                .err()
+                .expect("handshake must fail on an injected worker panic");
+            match err {
+                NetError::Server { code, .. } => assert_eq!(code, wire::ERR_INTERNAL),
+                other => panic!("want typed server error, got {other}"),
+            }
+        }
+        #[cfg(not(feature = "obs-off"))]
+        {
+            let panics_after =
+                crate::obs::snapshot().get("serve.worker_panics").map(|m| m.value).unwrap_or(0);
+            assert!(panics_after >= panics_before + 3, "panic counter did not tick 3×");
+        }
+        assert_eq!(server.session_count(), 0, "panicked setups must leave no session");
+        server.shutdown();
+    }
+
+    /// Reactor idle reaping: a connection that never sends a byte is
+    /// reaped after `idle_timeout` — the client sees EOF and the eviction
+    /// counter ticks.
+    #[cfg(unix)]
+    #[test]
+    fn reactor_reaps_idle_connections() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(6),
+            ScalePlan::default_plan(),
+            "127.0.0.1:0",
+            SecureConfig {
+                pool: PoolConfig::disabled(),
+                reactor: true,
+                idle_timeout: Duration::from_millis(200),
+                fault: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        #[cfg(not(feature = "obs-off"))]
+        let idle_before = crate::obs::snapshot()
+            .get("serve.reactor.idle_evictions")
+            .map(|m| m.value)
+            .unwrap_or(0);
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut buf = [0u8; 1];
+        match stream.read(&mut buf) {
+            Ok(0) => {} // FIN from the reaper
+            Ok(n) => panic!("unexpected {n} bytes from an idle connection"),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                ) =>
+            {
+                panic!("idle connection was never reaped")
+            }
+            Err(_) => {} // RST is an equally valid eviction signal
+        }
+        #[cfg(not(feature = "obs-off"))]
+        {
+            let idle_after = crate::obs::snapshot()
+                .get("serve.reactor.idle_evictions")
+                .map(|m| m.value)
+                .unwrap_or(0);
+            assert!(idle_after > idle_before, "idle eviction not counted");
+        }
+        server.shutdown();
+    }
+
+    /// Reactor slow-client eviction: a client that floods `STATS`
+    /// requests without reading replies overruns `max_write_queue` and is
+    /// evicted instead of buffered unboundedly.
+    #[cfg(all(unix, not(feature = "obs-off")))]
+    #[test]
+    fn reactor_evicts_slow_clients_on_queue_overflow() {
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let server = SecureServer::serve(
+            ctx.clone(),
+            tiny_net(7),
+            ScalePlan::default_plan(),
+            "127.0.0.1:0",
+            SecureConfig {
+                pool: PoolConfig::disabled(),
+                reactor: true,
+                max_write_queue: 4096,
+                fault: None,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let slow_before = crate::obs::snapshot()
+            .get("serve.reactor.slow_evictions")
+            .map(|m| m.value)
+            .unwrap_or(0);
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        stream.set_write_timeout(Some(Duration::from_millis(100))).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        // Flood STATS (5-byte requests, KB-scale JSON replies) and never
+        // read — the server's reply queue, not ours, must hit the bound.
+        for _ in 0..20_000 {
+            if write_frame(&mut stream, wire::TAG_STATS, &[]).is_err() {
+                break; // evicted mid-flood
+            }
+        }
+        // The eviction closes the socket under us: EOF or RST, never a
+        // 10-second silence.
+        let mut buf = [0u8; 4096];
+        let t0 = Instant::now();
+        loop {
+            assert!(t0.elapsed() < Duration::from_secs(10), "no eviction observed");
+            match stream.read(&mut buf) {
+                Ok(0) => break, // FIN after the queue overran
+                Ok(_) => {}     // drain whatever was already queued
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                    ) =>
+                {
+                    panic!("slow client was never evicted")
+                }
+                Err(_) => break, // RST: queued replies discarded at close
+            }
+        }
+        let slow_after = crate::obs::snapshot()
+            .get("serve.reactor.slow_evictions")
+            .map(|m| m.value)
+            .unwrap_or(0);
+        assert!(slow_after > slow_before, "slow eviction not counted");
+        server.shutdown();
+    }
+
+    /// Sum of every `serve.faults.*` counter (0 when obs is compiled out).
+    fn faults_fired() -> i64 {
+        #[cfg(not(feature = "obs-off"))]
+        {
+            let snap = crate::obs::snapshot();
+            return [
+                "serve.faults.disconnect",
+                "serve.faults.corrupt",
+                "serve.faults.short",
+                "serve.faults.delay",
+                "serve.faults.reset",
+                "serve.faults.panic",
+            ]
+            .iter()
+            .filter_map(|n| snap.get(n).map(|m| m.value))
+            .sum::<i64>();
+        }
+        #[cfg(feature = "obs-off")]
+        0i64
+    }
+
+    /// The ISSUE-10 headline: N sessions × M queries with seeded faults on
+    /// both sides of every socket and in the workers. Every query must end
+    /// in logits bit-exact with a fault-free run (under the engine seed of
+    /// whichever session served it — reconnects re-home queries onto fresh
+    /// sessions) or a typed error; never a hang (per-round deadlines bound
+    /// every wait, and the test harness timeout is the hang detector). The
+    /// server must end clean: all sessions retired, drain completes.
+    ///
+    /// Knobs (CI chaos matrix): `CHEETAH_CHAOS_SESSIONS`,
+    /// `CHEETAH_CHAOS_QUERIES`, `CHEETAH_CHAOS_SEED`.
+    fn chaos_soak(reactor: bool) {
+        let env_u64 = |name: &str, default: u64| {
+            std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+        };
+        let sessions = env_u64("CHEETAH_CHAOS_SESSIONS", 3) as usize;
+        let queries = env_u64("CHEETAH_CHAOS_QUERIES", 3) as usize;
+        let fault_seed = env_u64("CHEETAH_CHAOS_SEED", 7);
+        let spec = FaultSpec::parse(&format!(
+            "seed={fault_seed},disconnect=0.002,corrupt=0.002,short=0.1,delay=0.01:1,panic=0.02"
+        ))
+        .expect("valid fault spec");
+
+        let ctx = Arc::new(Context::new(Params::default_params()));
+        let plan = ScalePlan::default_plan();
+        let net = tiny_net(17);
+        let base_seed = 4242u64;
+        let server = SecureServer::serve(
+            ctx.clone(),
+            net.clone(),
+            plan,
+            "127.0.0.1:0",
+            SecureConfig {
+                workers: 2,
+                seed: Some(base_seed),
+                pool: PoolConfig::disabled(),
+                reactor,
+                fault: Some(spec),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let fired_before = faults_fired();
+
+        let opts = NetClientOpts {
+            deadline: Duration::from_secs(2),
+            max_retries: 4,
+            fault: Some(spec),
+        };
+        type Outcome = (Tensor, Result<Vec<f64>, String>);
+        let outcomes: Vec<Vec<Outcome>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..sessions)
+                .map(|k| {
+                    let ctx = ctx.clone();
+                    let addr = server.addr;
+                    s.spawn(move || {
+                        let mut out: Vec<Outcome> = Vec::new();
+                        // The handshake runs under fault injection too; a
+                        // different client seed per attempt re-derives the
+                        // client-side fault schedule (same-seed redials
+                        // would replay the identical injected failure).
+                        let mut client = None;
+                        let mut connect_err = String::from("no attempt");
+                        for attempt in 0..8u64 {
+                            let seed = 9100 + k as u64 + attempt * 1000;
+                            match CheetahNetClient::connect_with(
+                                ctx.clone(),
+                                plan,
+                                &addr,
+                                seed,
+                                opts,
+                            ) {
+                                Ok(c) => {
+                                    client = Some(c);
+                                    break;
+                                }
+                                Err(e) => connect_err = e.to_string(), // typed
+                            }
+                        }
+                        match client {
+                            None => {
+                                for q in 0..queries {
+                                    let input =
+                                        test_input(k as f64 * 0.01 + q as f64 * 0.001);
+                                    out.push((
+                                        input,
+                                        Err(format!("connect failed: {connect_err}")),
+                                    ));
+                                }
+                            }
+                            Some(mut c) => {
+                                for q in 0..queries {
+                                    let input =
+                                        test_input(k as f64 * 0.01 + q as f64 * 0.001);
+                                    let res = match c.infer(&input) {
+                                        Ok(rep) => Ok(rep.logits),
+                                        Err(e) => Err(e.to_string()), // typed
+                                    };
+                                    out.push((input, res));
+                                }
+                                let _ = c.close();
+                            }
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("chaos client thread")).collect()
+        });
+
+        // Bit-exactness: a successful query must match the fault-free
+        // reference under SOME engine seed the server can have assigned
+        // (`base, base+1, …`; reconnects allocate fresh sessions, hence
+        // fresh seeds). Logits depend only on (input, engine seed) — see
+        // the bit-exactness caveat in `protocol::cheetah`.
+        let max_engines =
+            (sessions * (1 + queries * (opts.max_retries as usize + 1)) + 8) as u64;
+        let mut runners: HashMap<u64, CheetahRunner> = HashMap::new();
+        let (mut ok_n, mut err_n) = (0usize, 0usize);
+        for row in &outcomes {
+            for (input, res) in row {
+                match res {
+                    Err(msg) => {
+                        err_n += 1;
+                        assert!(!msg.is_empty(), "errors must be typed, not silent");
+                    }
+                    Ok(logits) => {
+                        ok_n += 1;
+                        let matched = (0..max_engines).any(|off| {
+                            let seed = base_seed + off;
+                            let runner = runners.entry(seed).or_insert_with(|| {
+                                let mut r = CheetahRunner::new(
+                                    ctx.clone(),
+                                    net.clone(),
+                                    plan,
+                                    0.0,
+                                    seed,
+                                )
+                                .expect("valid network");
+                                r.run_offline();
+                                r
+                            });
+                            runner.infer(input).logits == *logits
+                        });
+                        assert!(
+                            matched,
+                            "chaos logits match no fault-free engine seed in [{}, {})",
+                            base_seed,
+                            base_seed + max_engines
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(ok_n + err_n, sessions * queries, "every query must be accounted for");
+
+        // Post-soak: the server ends clean — every session retired once
+        // the clients are gone (BYE, EOF cleanup, or error-path removal).
+        let t0 = Instant::now();
+        while server.session_count() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "sessions leaked after soak");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        server.shutdown();
+        assert_eq!(server.session_count(), 0);
+        #[cfg(not(feature = "obs-off"))]
+        assert!(faults_fired() > fired_before, "no injected faults fired during the soak");
+        #[cfg(feature = "obs-off")]
+        let _ = fired_before;
+    }
+
+    #[test]
+    fn chaos_soak_threads_front() {
+        chaos_soak(false);
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn chaos_soak_reactor_front() {
+        chaos_soak(true);
     }
 }

@@ -125,8 +125,8 @@ impl BlindingPool {
         });
         if cfg.enabled() {
             let (tx, rx) = sync_channel(cfg.depth);
-            *pool.bank.lock().unwrap() = Some(rx);
-            let mut handles = pool.workers.lock().unwrap();
+            *super::lock_ok(&pool.bank) = Some(rx);
+            let mut handles = super::lock_ok(&pool.workers);
             for _ in 0..cfg.workers {
                 let pool = pool.clone();
                 let tx: SyncSender<CheetahServer> = tx.clone();
@@ -155,20 +155,20 @@ impl BlindingPool {
 
     fn worker_loop(&self, tx: SyncSender<CheetahServer>) {
         while !self.stop.load(Ordering::SeqCst) {
-            let mut engine = Some(self.build());
+            let mut engine = self.build();
             self.produced.fetch_add(1, Ordering::Relaxed);
             // Park (with stop checks) until the bank has room.
             loop {
                 if self.stop.load(Ordering::SeqCst) {
                     return;
                 }
-                match tx.try_send(engine.take().expect("engine consumed twice")) {
+                match tx.try_send(engine) {
                     Ok(()) => {
                         crate::obs::gauge_add("serve.pool.occupancy", 1);
                         break;
                     }
                     Err(TrySendError::Full(e)) => {
-                        engine = Some(e);
+                        engine = e;
                         std::thread::sleep(Duration::from_millis(5));
                     }
                     Err(TrySendError::Disconnected(_)) => return,
@@ -181,7 +181,7 @@ impl BlindingPool {
     /// Never blocks on the background workers.
     pub fn take(&self) -> CheetahServer {
         let banked = {
-            let guard = self.bank.lock().unwrap();
+            let guard = super::lock_ok(&self.bank);
             guard.as_ref().and_then(|rx| rx.try_recv().ok())
         };
         match banked {
@@ -225,8 +225,8 @@ impl BlindingPool {
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::SeqCst);
         // Dropping the receiver makes any in-flight try_send disconnect.
-        self.bank.lock().unwrap().take();
-        let handles: Vec<JoinHandle<()>> = self.workers.lock().unwrap().drain(..).collect();
+        super::lock_ok(&self.bank).take();
+        let handles: Vec<JoinHandle<()>> = super::lock_ok(&self.workers).drain(..).collect();
         for h in handles {
             let _ = h.join();
         }
@@ -240,6 +240,7 @@ impl Drop for BlindingPool {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::nn::Layer;

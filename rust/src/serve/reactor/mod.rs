@@ -48,13 +48,18 @@
 
 pub(crate) mod sys;
 
+use super::fault::FaultyStream;
 use super::wire;
-use super::{handle_hello, handle_round, ConnState, ReplySink, SecureConfig, ServeShared};
+use super::{
+    handle_hello, handle_round, lock_ok, send_error, ConnState, ReplySink, SecureConfig,
+    ServeShared,
+};
 use std::collections::{HashMap, VecDeque};
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::os::unix::net::UnixStream;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -104,7 +109,7 @@ impl OutBuf {
         f.extend_from_slice(payload);
         let len = f.len();
         {
-            let mut q = self.frames.lock().unwrap();
+            let mut q = lock_ok(&self.frames);
             if self.closed.load(Ordering::SeqCst) {
                 return false;
             }
@@ -116,7 +121,7 @@ impl OutBuf {
     }
 
     fn pop(&self) -> Option<Vec<u8>> {
-        let mut q = self.frames.lock().unwrap();
+        let mut q = lock_ok(&self.frames);
         let f = q.pop_front();
         if let Some(f) = &f {
             self.bytes.fetch_sub(f.len(), Ordering::SeqCst);
@@ -132,7 +137,7 @@ impl OutBuf {
     /// (gauge-balanced; late pushes from an in-flight worker are refused).
     fn close(&self) {
         let drained = {
-            let mut q = self.frames.lock().unwrap();
+            let mut q = lock_ok(&self.frames);
             self.closed.store(true, Ordering::SeqCst);
             let d = q.iter().map(|f| f.len()).sum::<usize>();
             q.clear();
@@ -157,25 +162,60 @@ impl ReplySink for OutSink {
     }
 }
 
-/// One completed inbound frame, dispatched to a protocol worker.
+/// One completed inbound frame, dispatched to a protocol worker. `v2`
+/// carries the connection's negotiated wire version (payload checksums).
 enum WorkerMsg {
     /// Session setup (round-robin across workers).
-    Hello { token: u64, out: Arc<OutBuf>, conn: Arc<ConnState> },
+    Hello { token: u64, out: Arc<OutBuf>, conn: Arc<ConnState>, v2: bool },
     /// An online round (session-sticky: `session_id % workers`).
-    Round { token: u64, out: Arc<OutBuf>, session_id: u64, tag: u8, payload: Vec<u8> },
+    Round { token: u64, out: Arc<OutBuf>, session_id: u64, tag: u8, payload: Vec<u8>, v2: bool },
 }
 
+/// Worker thread: each job runs under `catch_unwind` so a panicking round
+/// (library bug or injected fault) costs the client a typed `ERROR`
+/// frame — never a dead worker with its sessions parked forever. The
+/// completion *always* reaches the reactor, so the connection's in-flight
+/// slot is released on the panic path too.
 fn worker_loop(rx: Receiver<WorkerMsg>, shared: Arc<ServeShared>, r: Arc<ReactorShared>) {
     for msg in rx {
         match msg {
-            WorkerMsg::Hello { token, out, conn } => {
-                let mut sink = OutSink { out };
-                handle_hello(&shared, &mut sink, &conn);
+            WorkerMsg::Hello { token, out, conn, v2 } => {
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    shared.roll_worker_panic();
+                    let mut sink = OutSink { out: out.clone() };
+                    handle_hello(&shared, &mut sink, &conn, v2);
+                }));
+                if ok.is_err() {
+                    crate::obs::inc("serve.worker_panics");
+                    let mut sink = OutSink { out };
+                    send_error(
+                        &mut sink,
+                        0,
+                        wire::ERR_INTERNAL,
+                        "internal error: session setup panicked",
+                    );
+                }
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
                 r.complete(token);
             }
-            WorkerMsg::Round { token, out, session_id, tag, payload } => {
-                let mut sink = OutSink { out };
-                handle_round(&shared, session_id, tag, &payload, &mut sink);
+            WorkerMsg::Round { token, out, session_id, tag, mut payload, v2 } => {
+                let ok = catch_unwind(AssertUnwindSafe(|| {
+                    shared.roll_worker_panic();
+                    let mut sink = OutSink { out: out.clone() };
+                    handle_round(&shared, session_id, tag, &mut payload, v2, &mut sink);
+                }));
+                if ok.is_err() {
+                    crate::obs::inc("serve.worker_panics");
+                    let mut sink = OutSink { out };
+                    send_error(
+                        &mut sink,
+                        session_id,
+                        wire::ERR_INTERNAL,
+                        "internal error: round panicked",
+                    );
+                    shared.registry.remove(session_id);
+                }
+                shared.inflight.fetch_sub(1, Ordering::SeqCst);
                 r.complete(token);
             }
         }
@@ -198,15 +238,13 @@ impl ReactorShared {
     /// never fill the socketpair buffer and block a worker.
     fn wake(&self) {
         if !self.wake_flag.swap(true, Ordering::SeqCst) {
-            if let Ok(mut tx) = self.wake_tx.lock() {
-                let _ = tx.write(&[1u8]);
-            }
+            let _ = lock_ok(&self.wake_tx).write(&[1u8]);
         }
     }
 
     /// Report a finished worker job for `token` and wake the reactor.
     fn complete(&self, token: u64) {
-        self.completions.lock().unwrap().push(token);
+        lock_ok(&self.completions).push(token);
         self.wake();
     }
 }
@@ -222,7 +260,7 @@ impl ReactorHandle {
     pub(super) fn shutdown(&self) {
         self.shared.stop.store(true, Ordering::SeqCst);
         self.shared.wake();
-        if let Some(h) = self.thread.lock().unwrap().take() {
+        if let Some(h) = lock_ok(&self.thread).take() {
             let _ = h.join();
         }
     }
@@ -231,10 +269,13 @@ impl ReactorHandle {
 /// Per-connection reactor state: socket, frame assembler, write queue,
 /// dispatch bookkeeping, and the timestamps the sweeps act on.
 struct Conn {
-    stream: TcpStream,
+    stream: FaultyStream<TcpStream>,
     out: Arc<OutBuf>,
     state: Arc<ConnState>,
     asm: wire::FrameAssembler,
+    /// Negotiated wire version ≥ 2 (set by the `HELLO` decode): bulk
+    /// frames carry payload checksums both ways.
+    v2: bool,
     /// Frame currently being written (popped off `out`), plus cursor.
     pending: Vec<u8>,
     pending_pos: usize,
@@ -336,7 +377,7 @@ impl Reactor {
     }
 
     fn drain_completions(&mut self) {
-        let done: Vec<u64> = std::mem::take(&mut *self.rshared.completions.lock().unwrap());
+        let done: Vec<u64> = std::mem::take(&mut *lock_ok(&self.rshared.completions));
         for tok in done {
             let next = {
                 let Some(c) = self.conns.get_mut(&tok) else { continue };
@@ -436,7 +477,12 @@ impl Reactor {
                 self.flush_conn(tok);
             }
             wire::TAG_HELLO => match wire::decode_hello(&payload) {
-                Ok(()) => self.enqueue(tok, tag, payload),
+                Ok(version) => {
+                    if let Some(c) = self.conns.get_mut(&tok) {
+                        c.v2 = version >= 2;
+                    }
+                    self.enqueue(tok, tag, payload);
+                }
                 Err(e) => self.fail_conn(tok, 0, wire::ERR_UNSUPPORTED, &e.to_string()),
             },
             wire::TAG_SHARES | wire::TAG_RECOVERY | wire::TAG_BYE => {
@@ -481,14 +527,24 @@ impl Reactor {
             let Some(c) = self.conns.get_mut(&tok) else { return };
             c.in_flight = true;
             match tag {
-                wire::TAG_HELLO => {
-                    WorkerMsg::Hello { token: tok, out: c.out.clone(), conn: c.state.clone() }
-                }
+                wire::TAG_HELLO => WorkerMsg::Hello {
+                    token: tok,
+                    out: c.out.clone(),
+                    conn: c.state.clone(),
+                    v2: c.v2,
+                },
                 _ => {
                     // Validated at parse time; a race would only misroute
                     // to a worker that then reports "unknown session".
                     let session_id = wire::peek_session_id(&payload).unwrap_or(0);
-                    WorkerMsg::Round { token: tok, out: c.out.clone(), session_id, tag, payload }
+                    WorkerMsg::Round {
+                        token: tok,
+                        out: c.out.clone(),
+                        session_id,
+                        tag,
+                        payload,
+                        v2: c.v2,
+                    }
                 }
             }
         };
@@ -501,8 +557,13 @@ impl Reactor {
         };
         // Unbounded send — never blocks the reactor. Memory stays bounded
         // by the per-connection in-flight cap (one message per connection
-        // at a worker; the rest park, then reads pause).
-        let _ = self.txs[wi].send(msg);
+        // at a worker; the rest park, then reads pause). The in-flight
+        // count is taken *before* the send so a drain can never observe
+        // zero while a job sits unclaimed in a worker channel.
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        if self.txs[wi].send(msg).is_err() {
+            self.shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        }
     }
 
     fn maybe_resume_reads(&mut self, tok: u64) {
@@ -614,7 +675,7 @@ impl Reactor {
             crate::obs::gauge_add("serve.reactor.write_queue_depth", -(rem as i64));
         }
         c.state.closed.store(true, Ordering::SeqCst);
-        for sid in c.state.sessions.lock().unwrap().drain(..) {
+        for sid in lock_ok(&c.state.sessions).drain(..) {
             self.shared.registry.remove(sid);
         }
         crate::obs::gauge_set("serve.reactor.sessions", self.conns.len() as i64);
@@ -630,7 +691,15 @@ impl Reactor {
                 return;
             }
             match self.listener.accept() {
-                Ok((stream, _)) => self.add_conn(stream),
+                Ok((stream, _)) => {
+                    // Injected accept-time reset: drop the socket before it
+                    // ever becomes a connection (client sees RST/EOF).
+                    if self.shared.fault.as_ref().is_some_and(|f| f.roll_accept_reset()) {
+                        drop(stream);
+                        continue;
+                    }
+                    self.add_conn(stream);
+                }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
                 Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
                 Err(e) if matches!(e.raw_os_error(), Some(23) | Some(24)) => {
@@ -664,17 +733,19 @@ impl Reactor {
         if self.poller.register(stream.as_raw_fd(), tok, true, false).is_err() {
             return;
         }
+        let plan = self.shared.fault.as_ref().map(|f| f.next_plan());
         let now = Instant::now();
         self.conns.insert(
             tok,
             Conn {
-                stream,
+                stream: FaultyStream::new(stream, plan),
                 out: Arc::new(OutBuf::new()),
                 state: Arc::new(ConnState {
                     closed: AtomicBool::new(false),
                     sessions: Mutex::new(Vec::new()),
                 }),
                 asm: wire::FrameAssembler::new(self.cfg.max_frame),
+                v2: false,
                 pending: Vec::new(),
                 pending_pos: 0,
                 in_flight: false,
@@ -800,6 +871,7 @@ pub(super) fn spawn(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
 

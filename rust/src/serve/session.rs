@@ -207,9 +207,9 @@ impl SessionRegistry {
     /// Mint an unguessable session id and register a session around the
     /// (shared) engine.
     pub fn create(&self, engine: Arc<CheetahServer>) -> (u64, Arc<Mutex<Session>>) {
-        let mut sessions = self.sessions.lock().unwrap();
+        let mut sessions = super::lock_ok(&self.sessions);
         let id = {
-            let mut rng = self.id_rng.lock().unwrap();
+            let mut rng = super::lock_ok(&self.id_rng);
             loop {
                 let id = rng.next_u64();
                 if id != 0 && !sessions.contains_key(&id) {
@@ -225,12 +225,12 @@ impl SessionRegistry {
 
     /// Look a session up by id.
     pub fn get(&self, id: u64) -> Option<Arc<Mutex<Session>>> {
-        self.sessions.lock().unwrap().get(&id).cloned()
+        super::lock_ok(&self.sessions).get(&id).cloned()
     }
 
     /// Retire a session; returns whether it existed.
     pub fn remove(&self, id: u64) -> bool {
-        let mut sessions = self.sessions.lock().unwrap();
+        let mut sessions = super::lock_ok(&self.sessions);
         let existed = sessions.remove(&id).is_some();
         crate::obs::gauge_set("serve.sessions", sessions.len() as i64);
         existed
@@ -238,7 +238,7 @@ impl SessionRegistry {
 
     /// Number of live sessions.
     pub fn len(&self) -> usize {
-        self.sessions.lock().unwrap().len()
+        super::lock_ok(&self.sessions).len()
     }
 
     /// Whether no session is live.
@@ -248,12 +248,13 @@ impl SessionRegistry {
 
     /// Retire every session (server shutdown).
     pub fn clear(&self) {
-        self.sessions.lock().unwrap().clear();
+        super::lock_ok(&self.sessions).clear();
         crate::obs::gauge_set("serve.sessions", 0);
     }
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::fixed::ScalePlan;

@@ -14,7 +14,7 @@
 //! | `RECOVERY`     0x24 | c→s | sid `u64` + step `u32` + cts (`[ID₁∘y+ID₂∘ReLU(y)−s₁]_S`) |
 //! | `STATS`        0x30 | c→s | (empty) — admin introspection request |
 //! | `BYE`          0x2f | c→s | sid `u64` |
-//! | `HELLO_OK`     0xa0 | s→c | sid `u64` + plan/params fingerprint `u64` + ε `f64` + n_steps `u32` + arch |
+//! | `HELLO_OK`     0xa0 | s→c | sid `u64` + plan/params fingerprint `u64` + ε `f64` + n_steps `u32` + arch + version `u16` |
 //! | `OFFLINE_IDS`  0xa1 | s→c | sid `u64` + step `u32` + id1 cts + id2 cts |
 //! | `OFFLINE_DONE` 0xa2 | s→c | sid `u64` |
 //! | `PRODUCTS`     0xa3 | s→c | sid `u64` + step `u32` + cts (obscured products) |
@@ -28,6 +28,20 @@
 //! `len u32 + bytes` per ciphertext. Decoding is defensive: all counts and
 //! lengths are validated against the remaining buffer before allocation,
 //! and malformed input returns a typed [`WireError`], never a panic.
+//!
+//! ## Version negotiation and payload checksums
+//!
+//! `HELLO` carries the client's protocol version; the server accepts any
+//! version in `[MIN_VERSION, VERSION]` and echoes the negotiated version as
+//! a trailing `u16` on `HELLO_OK` (absent ⇒ v1 — v1 decoders never read
+//! past the architecture, so the trailer is invisible to them). Under v2,
+//! every bulk round frame — `SHARES`, `RECOVERY`, `OFFLINE_IDS`,
+//! `OFFLINE_DONE`, `PRODUCTS`, `RECOVERY_OK` — carries a trailing FNV-1a
+//! 64-bit checksum over `tag + payload` ([`seal`] / [`verify_and_strip`]),
+//! so a flipped byte inside a multi-megabyte ciphertext shipment is caught
+//! at the frame boundary (`ERR_CORRUPT`) instead of surfacing as garbage
+//! plaintexts after decryption. Control frames (`HELLO*`, `STATS*`, `BYE`,
+//! `ERROR`) stay plain in every version.
 
 use crate::fixed::ScalePlan;
 use crate::nn::{Layer, LayerKind, Network};
@@ -36,8 +50,10 @@ use crate::phe::{Ciphertext, Context, Params};
 
 /// Protocol magic: `"CHTA"`.
 pub const MAGIC: u32 = 0x4348_5441;
-/// Wire protocol version.
-pub const VERSION: u16 = 1;
+/// Current wire protocol version (v2 adds bulk-frame payload checksums).
+pub const VERSION: u16 = 2;
+/// Oldest version the server still speaks (v1: no checksums).
+pub const MIN_VERSION: u16 = 1;
 
 /// c→s greeting (magic + version).
 pub const TAG_HELLO: u8 = 0x20;
@@ -70,6 +86,8 @@ pub const ERR_PROTOCOL: u16 = 1;
 pub const ERR_UNSUPPORTED: u16 = 2;
 /// `ERROR` code: internal server failure.
 pub const ERR_INTERNAL: u16 = 3;
+/// `ERROR` code: frame payload checksum mismatch (v2+).
+pub const ERR_CORRUPT: u16 = 4;
 
 /// Upper bound on ciphertexts per message (a paper-scale VGG step needs a
 /// few hundred; this only guards against absurd counts from corrupt input).
@@ -139,17 +157,20 @@ impl<'a> ByteReader<'a> {
 
     /// Read a little-endian `u16`.
     pub fn u16(&mut self) -> Result<u16, WireError> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
     }
 
     /// Read a little-endian `u32`.
     pub fn u32(&mut self) -> Result<u32, WireError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
     /// Read a little-endian `u64`.
     pub fn u64(&mut self) -> Result<u64, WireError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
     }
 
     /// Read an `f64` from its little-endian bit pattern.
@@ -286,24 +307,33 @@ pub fn plan_fingerprint(params: &Params, plan: &ScalePlan) -> u64 {
     h
 }
 
-/// Client → server greeting.
+/// Client → server greeting at the current [`VERSION`].
 pub fn encode_hello() -> Vec<u8> {
+    encode_hello_version(VERSION)
+}
+
+/// Client → server greeting claiming an explicit protocol version (tests
+/// use this to exercise the v1 compatibility path).
+pub fn encode_hello_version(version: u16) -> Vec<u8> {
     let mut out = Vec::with_capacity(6);
     out.extend_from_slice(&MAGIC.to_le_bytes());
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out
 }
 
-/// Validate a client greeting (magic + version).
-pub fn decode_hello(payload: &[u8]) -> Result<(), WireError> {
+/// Validate a client greeting (magic + version) and return the negotiated
+/// protocol version: any client version in `[MIN_VERSION, VERSION]` is
+/// served at exactly the version it asked for.
+pub fn decode_hello(payload: &[u8]) -> Result<u16, WireError> {
     let mut r = ByteReader::new(payload);
     if r.u32()? != MAGIC {
         return Err(WireError::Malformed("bad magic"));
     }
-    if r.u16()? != VERSION {
+    let version = r.u16()?;
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(WireError::Malformed("unsupported version"));
     }
-    Ok(())
+    Ok(version)
 }
 
 /// Server → client session grant.
@@ -318,15 +348,19 @@ pub struct HelloOk {
     pub n_steps: u32,
     /// The served architecture (geometry only — never weights).
     pub arch: Network,
+    /// Negotiated protocol version (trailing `u16`; absent on v1 grants).
+    pub version: u16,
 }
 
-/// Encode a session grant ([`HelloOk`] layout).
+/// Encode a session grant ([`HelloOk`] layout). The negotiated `version`
+/// rides as a trailing `u16` that v1 decoders never look at.
 pub fn encode_hello_ok(
     session_id: u64,
     fingerprint: u64,
     epsilon: f64,
     n_steps: u32,
     net: &Network,
+    version: u16,
 ) -> Vec<u8> {
     let mut out = Vec::with_capacity(64);
     out.extend_from_slice(&session_id.to_le_bytes());
@@ -334,10 +368,11 @@ pub fn encode_hello_ok(
     out.extend_from_slice(&epsilon.to_bits().to_le_bytes());
     out.extend_from_slice(&n_steps.to_le_bytes());
     encode_arch(&mut out, net);
+    out.extend_from_slice(&version.to_le_bytes());
     out
 }
 
-/// Decode a session grant.
+/// Decode a session grant. A missing version trailer means a v1 server.
 pub fn decode_hello_ok(payload: &[u8]) -> Result<HelloOk, WireError> {
     let mut r = ByteReader::new(payload);
     let session_id = r.u64()?;
@@ -345,7 +380,46 @@ pub fn decode_hello_ok(payload: &[u8]) -> Result<HelloOk, WireError> {
     let epsilon = r.f64()?;
     let n_steps = r.u32()?;
     let arch = decode_arch(&mut r)?;
-    Ok(HelloOk { session_id, fingerprint, epsilon, n_steps, arch })
+    let version = if r.remaining() >= 2 { r.u16()? } else { 1 };
+    Ok(HelloOk { session_id, fingerprint, epsilon, n_steps, arch, version })
+}
+
+// ---- payload checksums (v2+) ----
+
+/// FNV-1a 64-bit over `tag` then `payload` — the v2 bulk-frame checksum.
+pub fn checksum(tag: u8, payload: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET ^ tag as u64;
+    h = h.wrapping_mul(PRIME);
+    for &b in payload {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Append the v2 checksum trailer to a bulk-frame payload in place.
+pub fn seal(tag: u8, payload: &mut Vec<u8>) {
+    let sum = checksum(tag, payload);
+    payload.extend_from_slice(&sum.to_le_bytes());
+}
+
+/// Verify and remove the v2 checksum trailer of a bulk-frame payload.
+/// A short payload or a mismatched sum is a [`WireError::Malformed`] —
+/// the frame cannot be trusted and the round must not be processed.
+pub fn verify_and_strip(tag: u8, payload: &mut Vec<u8>) -> Result<(), WireError> {
+    if payload.len() < 8 {
+        return Err(WireError::Malformed("missing frame checksum"));
+    }
+    let body = payload.len() - 8;
+    let mut got = [0u8; 8];
+    got.copy_from_slice(&payload[body..]);
+    if u64::from_le_bytes(got) != checksum(tag, &payload[..body]) {
+        return Err(WireError::Malformed("frame checksum mismatch"));
+    }
+    payload.truncate(body);
+    Ok(())
 }
 
 // ---- round headers ----
@@ -366,10 +440,7 @@ pub fn read_round_header(r: &mut ByteReader) -> Result<(u64, u32), WireError> {
 /// Peek the session id from a round payload without consuming it (the
 /// connection reader uses this to pick the session-sticky worker).
 pub fn peek_session_id(payload: &[u8]) -> Result<u64, WireError> {
-    if payload.len() < 8 {
-        return Err(WireError::Truncated);
-    }
-    Ok(u64::from_le_bytes(payload[..8].try_into().unwrap()))
+    ByteReader::new(payload).u64()
 }
 
 // ---- incremental (non-blocking) frame reassembly ----
@@ -431,7 +502,7 @@ impl FrameAssembler {
         }
         let hdr = &self.buf[self.start..self.start + 5];
         let tag = hdr[0];
-        let len = u32::from_le_bytes(hdr[1..5].try_into().unwrap()) as usize;
+        let len = u32::from_le_bytes([hdr[1], hdr[2], hdr[3], hdr[4]]) as usize;
         if len > self.max_frame {
             return Err(WireError::Malformed("frame payload exceeds maximum"));
         }
@@ -469,6 +540,7 @@ pub fn decode_error(payload: &[u8]) -> Result<(u64, u16, String), WireError> {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used, clippy::expect_used)]
 mod tests {
     use super::*;
     use crate::nn::NetworkArch;
@@ -476,11 +548,56 @@ mod tests {
 
     #[test]
     fn hello_roundtrip_and_rejects() {
-        decode_hello(&encode_hello()).unwrap();
+        assert_eq!(decode_hello(&encode_hello()).unwrap(), VERSION);
+        // A v1 greeting still negotiates (at v1).
+        assert_eq!(decode_hello(&encode_hello_version(1)).unwrap(), 1);
         assert_eq!(decode_hello(&[1, 2, 3]), Err(WireError::Truncated));
         let mut bad = encode_hello();
         bad[0] ^= 0xff;
         assert_eq!(decode_hello(&bad), Err(WireError::Malformed("bad magic")));
+        // A from-the-future version is rejected, not silently downgraded.
+        assert_eq!(
+            decode_hello(&encode_hello_version(VERSION + 1)),
+            Err(WireError::Malformed("unsupported version"))
+        );
+        assert_eq!(
+            decode_hello(&encode_hello_version(0)),
+            Err(WireError::Malformed("unsupported version"))
+        );
+    }
+
+    #[test]
+    fn checksum_seal_verify_roundtrip_and_detects_flips() {
+        let mut payload: Vec<u8> = (0u8..200).collect();
+        let original = payload.clone();
+        seal(TAG_SHARES, &mut payload);
+        assert_eq!(payload.len(), original.len() + 8);
+        verify_and_strip(TAG_SHARES, &mut payload).unwrap();
+        assert_eq!(payload, original);
+
+        // Any single flipped bit — in body or trailer — is caught.
+        for byte in [0usize, 57, 199, 203] {
+            let mut tampered = original.clone();
+            seal(TAG_SHARES, &mut tampered);
+            tampered[byte] ^= 0x10;
+            assert_eq!(
+                verify_and_strip(TAG_SHARES, &mut tampered),
+                Err(WireError::Malformed("frame checksum mismatch")),
+                "flip at byte {byte} went undetected"
+            );
+        }
+
+        // The tag is part of the sum: a relabeled frame fails.
+        let mut relabeled = original.clone();
+        seal(TAG_SHARES, &mut relabeled);
+        assert!(verify_and_strip(TAG_RECOVERY, &mut relabeled).is_err());
+
+        // Too short to even hold a trailer.
+        let mut tiny = vec![1u8, 2, 3];
+        assert_eq!(
+            verify_and_strip(TAG_SHARES, &mut tiny),
+            Err(WireError::Malformed("missing frame checksum"))
+        );
     }
 
     #[test]
@@ -550,13 +667,18 @@ mod tests {
         let params = Params::new(1024, 20);
         let plan = ScalePlan::default_plan();
         let fp = plan_fingerprint(&params, &plan);
-        let buf = encode_hello_ok(42, fp, 0.125, 3, &net);
+        let buf = encode_hello_ok(42, fp, 0.125, 3, &net, VERSION);
         let ok = decode_hello_ok(&buf).unwrap();
         assert_eq!(ok.session_id, 42);
         assert_eq!(ok.fingerprint, fp);
         assert_eq!(ok.epsilon, 0.125);
         assert_eq!(ok.n_steps, 3);
         assert_eq!(ok.arch.input_shape, net.input_shape);
+        assert_eq!(ok.version, VERSION);
+
+        // A trailer-less grant (a v1 server) decodes as version 1.
+        let v1 = &buf[..buf.len() - 2];
+        assert_eq!(decode_hello_ok(v1).unwrap().version, 1);
     }
 
     #[test]
